@@ -1,0 +1,14 @@
+//! `cargo bench` target regenerating Fig 1 (FIO thrash) on the simulated fabric.
+//! harness = false (criterion is unavailable offline); prints the paper-
+//! style table plus wall-clock regeneration time.
+
+use rdmabox::experiments::{run_by_id, ExpCtx};
+
+fn main() {
+    let ctx = ExpCtx::quick();
+    let t0 = std::time::Instant::now();
+    let out = run_by_id("1", &ctx).expect("registered experiment");
+    let dt = t0.elapsed();
+    print!("{out}");
+    println!("bench(fig01_fio_thrash): regenerated in {:.2}s", dt.as_secs_f64());
+}

@@ -1,0 +1,14 @@
+//! `cargo bench` target regenerating Fig 14 (remote file system) on the simulated fabric.
+//! harness = false (criterion is unavailable offline); prints the paper-
+//! style table plus wall-clock regeneration time.
+
+use rdmabox::experiments::{run_by_id, ExpCtx};
+
+fn main() {
+    let ctx = ExpCtx::quick();
+    let t0 = std::time::Instant::now();
+    let out = run_by_id("14", &ctx).expect("registered experiment");
+    let dt = t0.elapsed();
+    print!("{out}");
+    println!("bench(fig14_rfs): regenerated in {:.2}s", dt.as_secs_f64());
+}

@@ -1,0 +1,157 @@
+//! Microbenchmarks of the coordinator hot paths (harness = false; criterion
+//! is unavailable offline). These are the numbers the §Perf pass tracks:
+//! merge-queue ops, batch planning, Zipfian sampling, histogram recording,
+//! the CLOCK page cache, and raw DES event throughput.
+
+use std::time::Instant;
+
+use rdmabox::config::FabricConfig;
+use rdmabox::coordinator::batching::{plan, BatchLimits, BatchMode};
+use rdmabox::coordinator::merge_queue::{MergeCheck, MergeQueue};
+use rdmabox::coordinator::StackConfig;
+use rdmabox::fabric::sim::engine::StackEngine;
+use rdmabox::fabric::sim::{Driver, Sim};
+use rdmabox::fabric::{AppIo, Dir};
+use rdmabox::paging::cache::ClockCache;
+use rdmabox::util::hist::Hist;
+use rdmabox::util::rng::Pcg32;
+use rdmabox::util::zipf::ScrambledZipfian;
+
+fn bench<F: FnMut() -> u64>(name: &str, iters: u64, mut f: F) {
+    // warmup
+    let mut sink = 0u64;
+    for _ in 0..iters / 10 + 1 {
+        sink = sink.wrapping_add(f());
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        sink = sink.wrapping_add(f());
+    }
+    let dt = t0.elapsed();
+    let per = dt.as_nanos() as f64 / iters as f64;
+    println!(
+        "{name:38} {iters:>10} iters  {per:>9.1} ns/iter  ({:>12.0} ops/s)  [sink {sink}]",
+        1e9 / per
+    );
+}
+
+fn io(id: u64, addr: u64) -> AppIo {
+    AppIo {
+        id,
+        dir: Dir::Write,
+        node: 0,
+        addr,
+        len: 4096,
+        thread: 0,
+        t_submit: 0,
+    }
+}
+
+fn main() {
+    println!("== micro_core: coordinator hot paths ==");
+
+    // merge queue push + drain in batches of 16
+    {
+        let mut q = MergeQueue::new();
+        let mut next = 0u64;
+        bench("merge_queue push+drain(16)", 200_000, || {
+            for _ in 0..16 {
+                q.push(io(next, next * 4096));
+                next += 1;
+            }
+            match q.merge_check(u64::MAX) {
+                MergeCheck::Drained(v) => v.len() as u64,
+                _ => 0,
+            }
+        });
+    }
+
+    // batch planning: 16 adjacent + 16 scattered
+    {
+        let lim = BatchLimits::default();
+        let mut wr_id = 0u64;
+        bench("plan(hybrid, 32 ios)", 100_000, || {
+            let mut ios: Vec<AppIo> = (0..16u64).map(|i| io(i, i * 4096)).collect();
+            ios.extend((0..16u64).map(|i| io(16 + i, (1000 + i * 7) << 20)));
+            let (chains, st) = plan(BatchMode::Hybrid, &lim, ios, &mut wr_id);
+            chains.len() as u64 + st.wqes
+        });
+    }
+
+    // zipfian sampling
+    {
+        let z = ScrambledZipfian::new(10_000_000, 0.99);
+        let mut rng = Pcg32::new(1);
+        bench("scrambled_zipf sample (10M keys)", 2_000_000, || {
+            z.sample(&mut rng)
+        });
+    }
+
+    // histogram record
+    {
+        let mut h = Hist::new();
+        let mut rng = Pcg32::new(2);
+        bench("hist record", 2_000_000, || {
+            let v = rng.gen_range(100, 10_000_000);
+            h.record(v);
+            h.count()
+        });
+    }
+
+    // CLOCK cache access (hit-heavy)
+    {
+        let mut c = ClockCache::new(65_536);
+        let mut rng = Pcg32::new(3);
+        for p in 0..65_536u64 {
+            c.access(p, false);
+        }
+        bench("clock_cache access (90% hit)", 1_000_000, || {
+            let p = rng.gen_below(72_000);
+            match c.access(p, false) {
+                rdmabox::paging::cache::Access::Hit => 1,
+                _ => 0,
+            }
+        });
+    }
+
+    // end-to-end DES throughput: simulated IOs per wall second
+    {
+        struct Loop {
+            left: u64,
+            addr: u64,
+        }
+        impl Driver for Loop {
+            fn on_start(&mut self, sim: &mut Sim) {
+                for t in 0..8 {
+                    sim.submit_at(Dir::Write, 0, (t as u64) << 24, 4096, t, 0);
+                }
+            }
+            fn on_io_done(&mut self, sim: &mut Sim, io: &AppIo, _l: u64, at: u64) {
+                if self.left == 0 {
+                    sim.request_stop();
+                    return;
+                }
+                self.left -= 1;
+                self.addr += 4096;
+                sim.submit_at(Dir::Write, 0, self.addr, 4096, io.thread, at);
+            }
+            fn on_timer(&mut self, _s: &mut Sim, _t: usize, _g: u64) {}
+        }
+        let cfg = FabricConfig::default();
+        let stack = StackConfig::rdmabox(&cfg);
+        let n = 300_000u64;
+        let t0 = Instant::now();
+        let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
+        sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
+        sim.attach_driver(Box::new(Loop { left: n, addr: 0 }));
+        let r = sim.run(u64::MAX / 2);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "DES end-to-end: {} IOs in {:.2}s = {:.0} sim-IOs/s wall ({} WQEs)",
+            r.completed_writes,
+            dt,
+            r.completed_writes as f64 / dt,
+            r.trace.wqes_total()
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! Remote file system demo: IOzone-style sequential write/read over a file
+//! striped across 10 server nodes — RDMAbox user-space library vs Octopus,
+//! GlusterFS and Accelio design points. A compact version of Fig 14.
+//!
+//! ```bash
+//! cargo run --release --example remote_fs [-- --record 1m --file 64m]
+//! ```
+
+use rdmabox::baselines;
+use rdmabox::cli::{Args, Table};
+use rdmabox::config::FabricConfig;
+use rdmabox::coordinator::StackConfig;
+use rdmabox::rfs::run_iozone;
+use rdmabox::util::fmt;
+
+fn main() {
+    let args = Args::parse_env().unwrap_or_default();
+    let record = args.get_u64("record", 1 << 20).unwrap_or(1 << 20);
+    let file = args.get_u64("file", 64 << 20).unwrap_or(64 << 20);
+    let cfg = FabricConfig::connectx3_fdr();
+    let nodes = 10;
+
+    let mut t = Table::new(&format!(
+        "Remote FS: IOzone {}-record sweep over a {} file, 1 client / {} servers",
+        fmt::bytes(record),
+        fmt::bytes(file),
+        nodes
+    ))
+    .headers(&["system", "write", "read"]);
+
+    for (name, stack) in [
+        ("RDMAbox", StackConfig::rdmabox_user(&cfg)),
+        ("Octopus", baselines::octopus(&cfg)),
+        ("GlusterFS", baselines::glusterfs(&cfg)),
+        ("Accelio", baselines::accelio_fs(&cfg)),
+    ] {
+        let (w, r) = run_iozone(&cfg, &stack, nodes, record, file);
+        t.row(&[
+            name.to_string(),
+            format!("{w:.2} GB/s"),
+            format!("{r:.2} GB/s"),
+        ]);
+    }
+    t.note("run `rdmabox fig 14` for the full record-size sweep with paper comparisons");
+    t.print();
+}

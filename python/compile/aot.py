@@ -1,0 +1,59 @@
+"""AOT lowering: L2 models (with their L1 Pallas kernels) → HLO *text*.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla_extension 0.5.1
+bundled with the `xla` 0.1.6 crate rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Run once by `make artifacts`; Python never appears on the request path.
+Emits, per model: `<name>.hlo.txt` plus a `manifest.txt` describing the
+argument/result shapes the Rust runtime should feed it.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_str(s) -> str:
+    dims = "x".join(str(d) for d in s.shape) if s.shape else "scalar"
+    return f"{s.dtype}[{dims}]"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = []
+    for name, fn, example_args in model.aot_specs():
+        text = to_hlo_text(fn, example_args)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        arg_desc = ",".join(spec_str(a) for a in example_args)
+        manifest_lines.append(f"{name} args={arg_desc}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: tiled nearest-centroid assignment for k-means.
+
+TPU mapping: the distance matrix is computed per point-tile against the
+full centroid set (K·D is small and stays VMEM-resident across grid
+steps); squared distances use the ‖p‖²+‖c‖²−2p·c expansion so the inner
+product runs on the MXU, and the argmin/min reduction happens in-kernel on
+the VPU so the [N, K] distance matrix never hits HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 256
+
+
+def _kernel(p_ref, c_ref, assign_ref, dmin_ref):
+    p = p_ref[...]  # [TILE_N, D]
+    c = c_ref[...]  # [K, D]
+    p2 = jnp.sum(p * p, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)
+    cross = jnp.dot(p, c.T, preferred_element_type=jnp.float32)
+    d2 = p2 + c2[None, :] - 2.0 * cross
+    assign_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dmin_ref[...] = jnp.min(d2, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def kmeans_assign(points, centroids):
+    """points: [N, D] f32, centroids: [K, D] f32 ->
+    (assignments [N] i32, min squared distances [N] f32)."""
+    n, d = points.shape
+    k, _ = centroids.shape
+    pad = (-n) % TILE_N
+    if pad:
+        points = jnp.pad(points, ((0, pad), (0, 0)))
+    np_ = points.shape[0]
+    assign, dmin = pl.pallas_call(
+        _kernel,
+        grid=(np_ // TILE_N,),
+        in_specs=[
+            pl.BlockSpec((TILE_N, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_N,), lambda i: (i,)),
+            pl.BlockSpec((TILE_N,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, centroids)
+    return assign[:n], dmin[:n]
+
+
+def vmem_bytes(d: int, k: int) -> int:
+    """Static VMEM footprint estimate per grid step."""
+    p_tile = TILE_N * d * 4
+    c = k * d * 4
+    d2 = TILE_N * k * 4
+    outs = TILE_N * 8
+    return p_tile + c + d2 + outs

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: fused matmul + sigmoid for logistic regression.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the minibatch matmul is the
+MXU-bound hot spot; we tile the batch dimension so each grid step keeps an
+[TB, F] X-tile plus the full weight vector resident in VMEM
+(TB=128, F≤2048 → ≈1 MB — comfortably under the ~16 MB VMEM budget), and
+fuse the sigmoid into the same kernel so activations never round-trip to
+HBM. interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: one MXU-friendly stripe of rows per grid step.
+TILE_B = 128
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...]  # [TILE_B, F]
+    w = w_ref[...]  # [F]
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    o_ref[...] = 1.0 / (1.0 + jnp.exp(-z))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def logreg_forward(x, w):
+    """Probabilities sigmoid(x @ w). x: [B, F] f32 (B % TILE_B == 0 after
+    padding), w: [F] f32 -> [B] f32."""
+    b, f = x.shape
+    pad = (-b) % TILE_B
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    bp = x.shape[0]
+    out = pl.pallas_call(
+        _kernel,
+        grid=(bp // TILE_B,),
+        in_specs=[
+            pl.BlockSpec((TILE_B, f), lambda i: (i, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bp,), jnp.float32),
+        interpret=True,
+    )(x, w)
+    return out[:b]
+
+
+def vmem_bytes(f: int) -> int:
+    """Static VMEM footprint estimate per grid step (DESIGN.md §8)."""
+    x_tile = TILE_B * f * 4
+    w = f * 4
+    out = TILE_B * 4
+    return x_tile + w + out

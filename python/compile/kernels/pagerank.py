@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: damped power-iteration step for TextRank/PageRank.
+
+TPU mapping: the rank vector stays VMEM-resident while the transition
+matrix streams through HBM→VMEM in [TILE_R, N] row stripes (the matrix is
+the big operand — this is the bandwidth-bound kernel of the three, with
+arithmetic intensity ≈ 0.25 FLOP/byte; DESIGN.md §8). The damping update
+is fused so the intermediate m@r never materializes in HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 128
+
+
+def _kernel(m_ref, r_ref, damping_ref, o_ref):
+    m = m_ref[...]  # [TILE_R, N]
+    r = r_ref[...]  # [N]
+    d = damping_ref[0]
+    n = r.shape[0]
+    mv = jnp.dot(m, r, preferred_element_type=jnp.float32)
+    o_ref[...] = d * mv + (1.0 - d) / n
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pagerank_step(m, r, damping):
+    """m: [N, N] f32 column-stochastic, r: [N] f32, damping: scalar f32
+    -> [N] f32. N must be a multiple of TILE_R (model pads)."""
+    n = r.shape[0]
+    assert n % TILE_R == 0, f"N={n} must be a multiple of {TILE_R}"
+    dvec = jnp.reshape(damping.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // TILE_R,),
+        in_specs=[
+            pl.BlockSpec((TILE_R, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_R,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(m, r, dvec)
+
+
+def vmem_bytes(n: int) -> int:
+    """Static VMEM footprint estimate per grid step."""
+    m_tile = TILE_R * n * 4
+    r = n * 4
+    out = TILE_R * 4
+    return m_tile + r + out

@@ -1,0 +1,34 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here; pytest sweeps shapes/dtypes with hypothesis and asserts
+allclose. The references are also what the L2 model would compute without
+the custom kernels, so they double as the performance baseline.
+"""
+
+import jax.numpy as jnp
+
+
+def logreg_forward(x, w):
+    """Fused matmul + sigmoid: probabilities for a logistic-regression
+    minibatch. x: [B, F] float32, w: [F] float32 -> [B] float32."""
+    return 1.0 / (1.0 + jnp.exp(-(x @ w)))
+
+
+def kmeans_assign(points, centroids):
+    """Nearest-centroid assignment. points: [N, D], centroids: [K, D]
+    -> (assignments [N] int32, min squared distances [N] float32)."""
+    p2 = jnp.sum(points * points, axis=1, keepdims=True)  # [N,1]
+    c2 = jnp.sum(centroids * centroids, axis=1)  # [K]
+    cross = points @ centroids.T  # [N,K]
+    d2 = p2 + c2[None, :] - 2.0 * cross
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dmin = jnp.min(d2, axis=1)
+    return assign, dmin
+
+
+def pagerank_step(m, r, damping):
+    """One damped power-iteration step. m: [N, N] column-stochastic,
+    r: [N] -> [N]."""
+    n = r.shape[0]
+    return damping * (m @ r) + (1.0 - damping) / n

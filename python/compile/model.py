@@ -1,0 +1,96 @@
+"""L2 JAX models: the ML-workload training steps (paper §7.1.2), each
+calling its L1 Pallas kernel. These are the computations the Rust
+coordinator executes through PJRT after `aot.py` lowers them to HLO text.
+
+All steps are pure functions (state, batch) -> (new_state, metric), so the
+Rust side can iterate them with no Python anywhere on the path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kmeans as kmeans_kernel
+from .kernels import logreg as logreg_kernel
+from .kernels import pagerank as pagerank_kernel
+
+# Fixed AOT shapes (the Rust runtime loads one executable per variant).
+LOGREG_BATCH = 256
+LOGREG_FEATURES = 512
+KMEANS_POINTS = 1024
+KMEANS_DIM = 32
+KMEANS_K = 16
+PAGERANK_N = 512
+PAGERANK_DAMPING = 0.85
+
+
+def logreg_step(w, x, y, lr):
+    """One SGD step of L2-regularized logistic regression.
+
+    w: [F], x: [B, F], y: [B] in {0,1}, lr scalar ->
+    (w', mean binary cross-entropy loss).
+    """
+    p = logreg_kernel.logreg_forward(x, w)  # Pallas: fused matmul+sigmoid
+    eps = 1e-7
+    p = jnp.clip(p, eps, 1.0 - eps)
+    loss = -jnp.mean(y * jnp.log(p) + (1.0 - y) * jnp.log(1.0 - p))
+    grad = x.T @ (p - y) / x.shape[0] + 1e-4 * w
+    return w - lr * grad, loss
+
+
+def kmeans_step(centroids, points):
+    """One Lloyd iteration: assign (Pallas) then recenter.
+
+    centroids: [K, D], points: [N, D] -> (centroids', inertia).
+    Empty clusters keep their previous centroid.
+    """
+    assign, dmin = kmeans_kernel.kmeans_assign(points, centroids)
+    k = centroids.shape[0]
+    one_hot = jax.nn.one_hot(assign, k, dtype=points.dtype)  # [N, K]
+    counts = one_hot.sum(axis=0)  # [K]
+    sums = one_hot.T @ points  # [K, D]
+    new = jnp.where(
+        counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), centroids
+    )
+    return new, jnp.sum(dmin)
+
+
+def pagerank_step(r, m):
+    """One damped power-iteration step (Pallas SpMV) + L1 delta.
+
+    r: [N], m: [N, N] column-stochastic -> (r', ||r'-r||_1).
+    """
+    r2 = pagerank_kernel.pagerank_step(m, r, jnp.float32(PAGERANK_DAMPING))
+    return r2, jnp.sum(jnp.abs(r2 - r))
+
+
+def aot_specs():
+    """(name, fn, example_args) for every executable `aot.py` emits."""
+    f32 = jnp.float32
+    return [
+        (
+            "logreg_step",
+            logreg_step,
+            (
+                jax.ShapeDtypeStruct((LOGREG_FEATURES,), f32),
+                jax.ShapeDtypeStruct((LOGREG_BATCH, LOGREG_FEATURES), f32),
+                jax.ShapeDtypeStruct((LOGREG_BATCH,), f32),
+                jax.ShapeDtypeStruct((), f32),
+            ),
+        ),
+        (
+            "kmeans_step",
+            kmeans_step,
+            (
+                jax.ShapeDtypeStruct((KMEANS_K, KMEANS_DIM), f32),
+                jax.ShapeDtypeStruct((KMEANS_POINTS, KMEANS_DIM), f32),
+            ),
+        ),
+        (
+            "pagerank_step",
+            pagerank_step,
+            (
+                jax.ShapeDtypeStruct((PAGERANK_N,), f32),
+                jax.ShapeDtypeStruct((PAGERANK_N, PAGERANK_N), f32),
+            ),
+        ),
+    ]

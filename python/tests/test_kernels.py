@@ -1,0 +1,135 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-multiples of the tile sizes, which
+exercise the padding paths) and value ranges; assert_allclose is the core
+signal that the interpret-mode kernels compute exactly what the reference
+does.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import kmeans, logreg, pagerank, ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- logreg
+
+
+class TestLogreg:
+    def test_matches_ref_basic(self):
+        x, w = rand(256, 64), rand(64)
+        got = logreg.logreg_forward(jnp.asarray(x), jnp.asarray(w))
+        want = ref.logreg_forward(jnp.asarray(x), jnp.asarray(w))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 300),
+        f=st.integers(1, 96),
+        scale=st.sampled_from([0.1, 1.0, 4.0]),
+    )
+    def test_matches_ref_swept(self, b, f, scale):
+        x, w = rand(b, f, scale=scale), rand(f, scale=scale)
+        got = logreg.logreg_forward(jnp.asarray(x), jnp.asarray(w))
+        want = ref.logreg_forward(jnp.asarray(x), jnp.asarray(w))
+        assert got.shape == (b,)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_outputs_are_probabilities(self):
+        x, w = rand(128, 32, scale=5.0), rand(32, scale=5.0)
+        p = np.asarray(logreg.logreg_forward(jnp.asarray(x), jnp.asarray(w)))
+        assert (p >= 0).all() and (p <= 1).all()
+
+    def test_vmem_estimate_reasonable(self):
+        # tile footprint must fit a 16 MB VMEM budget for the AOT shapes
+        assert logreg.vmem_bytes(512) < 16 * 2**20
+
+
+# ---------------------------------------------------------------- kmeans
+
+
+class TestKmeans:
+    def test_matches_ref_basic(self):
+        p, c = rand(512, 16), rand(8, 16)
+        ga, gd = kmeans.kmeans_assign(jnp.asarray(p), jnp.asarray(c))
+        wa, wd = ref.kmeans_assign(jnp.asarray(p), jnp.asarray(c))
+        np.testing.assert_array_equal(ga, wa)
+        np.testing.assert_allclose(gd, wd, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(1, 600),
+        d=st.integers(1, 48),
+        k=st.integers(1, 12),
+    )
+    def test_matches_ref_swept(self, n, d, k):
+        p, c = rand(n, d), rand(k, d)
+        ga, gd = kmeans.kmeans_assign(jnp.asarray(p), jnp.asarray(c))
+        wa, wd = ref.kmeans_assign(jnp.asarray(p), jnp.asarray(c))
+        assert ga.shape == (n,) and gd.shape == (n,)
+        # ties can break differently only if two centroids are equidistant
+        # (measure-zero with gaussian data); require exact agreement
+        np.testing.assert_array_equal(ga, wa)
+        np.testing.assert_allclose(gd, wd, rtol=1e-3, atol=1e-3)
+
+    def test_assignment_is_argmin(self):
+        p, c = rand(64, 8), rand(4, 8)
+        ga, _ = kmeans.kmeans_assign(jnp.asarray(p), jnp.asarray(c))
+        d2 = ((p[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+        np.testing.assert_array_equal(np.asarray(ga), d2.argmin(1))
+
+    def test_vmem_estimate_reasonable(self):
+        assert kmeans.vmem_bytes(32, 16) < 16 * 2**20
+
+
+# -------------------------------------------------------------- pagerank
+
+
+class TestPagerank:
+    def _stochastic(self, n):
+        m = np.abs(RNG.standard_normal((n, n))).astype(np.float32) + 0.01
+        return m / m.sum(axis=0, keepdims=True)
+
+    def test_matches_ref_basic(self):
+        n = 256
+        m = self._stochastic(n)
+        r = np.full(n, 1.0 / n, dtype=np.float32)
+        got = pagerank.pagerank_step(jnp.asarray(m), jnp.asarray(r), jnp.float32(0.85))
+        want = ref.pagerank_step(jnp.asarray(m), jnp.asarray(r), 0.85)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(tiles=st.integers(1, 4), damping=st.sampled_from([0.5, 0.85, 0.99]))
+    def test_matches_ref_swept(self, tiles, damping):
+        n = tiles * pagerank.TILE_R
+        m = self._stochastic(n)
+        r = np.abs(rand(n)) + 0.01
+        r = r / r.sum()
+        got = pagerank.pagerank_step(
+            jnp.asarray(m), jnp.asarray(r), jnp.float32(damping)
+        )
+        want = ref.pagerank_step(jnp.asarray(m), jnp.asarray(r), damping)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+    def test_preserves_probability_mass(self):
+        n = 128
+        m = self._stochastic(n)
+        r = np.full(n, 1.0 / n, dtype=np.float32)
+        r2 = pagerank.pagerank_step(jnp.asarray(m), jnp.asarray(r), jnp.float32(0.85))
+        assert abs(float(np.asarray(r2).sum()) - 1.0) < 1e-4
+
+    def test_rejects_unaligned_n(self):
+        n = pagerank.TILE_R + 1
+        m = self._stochastic(n)
+        r = np.full(n, 1.0 / n, dtype=np.float32)
+        with pytest.raises(AssertionError):
+            pagerank.pagerank_step(jnp.asarray(m), jnp.asarray(r), jnp.float32(0.85))

@@ -1,0 +1,91 @@
+"""L2 model sanity: the training steps learn / converge, and the AOT specs
+cover every model with the advertised shapes."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile import model
+
+RNG = np.random.default_rng(1)
+
+
+class TestLogregStep:
+    def _data(self, b, f):
+        w_true = RNG.standard_normal(f).astype(np.float32)
+        x = RNG.standard_normal((b, f)).astype(np.float32)
+        y = (x @ w_true > 0).astype(np.float32)
+        return x, y
+
+    def test_loss_decreases(self):
+        f = model.LOGREG_FEATURES
+        b = model.LOGREG_BATCH
+        x, y = self._data(b, f)
+        w = jnp.zeros(f, dtype=jnp.float32)
+        losses = []
+        for _ in range(30):
+            w, loss = model.logreg_step(w, jnp.asarray(x), jnp.asarray(y), jnp.float32(0.5))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.7, losses[:3] + losses[-3:]
+
+    def test_shapes_stable(self):
+        f, b = 64, 128
+        x, y = self._data(b, f)
+        w = jnp.zeros(f, dtype=jnp.float32)
+        w2, loss = model.logreg_step(w, jnp.asarray(x), jnp.asarray(y), jnp.float32(0.1))
+        assert w2.shape == (f,)
+        assert loss.shape == ()
+
+
+class TestKmeansStep:
+    def test_inertia_decreases(self):
+        pts = np.concatenate(
+            [
+                RNG.standard_normal((256, 8)).astype(np.float32) + 5.0,
+                RNG.standard_normal((256, 8)).astype(np.float32) - 5.0,
+            ]
+        )
+        c = RNG.standard_normal((4, 8)).astype(np.float32)
+        inertias = []
+        c = jnp.asarray(c)
+        for _ in range(10):
+            c, inertia = model.kmeans_step(c, jnp.asarray(pts))
+            inertias.append(float(inertia))
+        assert inertias[-1] <= inertias[0]
+        # Lloyd's algorithm is monotone non-increasing
+        for a, b in zip(inertias, inertias[1:]):
+            assert b <= a + 1e-3, inertias
+
+    def test_empty_cluster_keeps_centroid(self):
+        pts = np.zeros((16, 4), dtype=np.float32)
+        c = np.stack(
+            [np.zeros(4, dtype=np.float32), np.full(4, 100.0, dtype=np.float32)]
+        )
+        c2, _ = model.kmeans_step(jnp.asarray(c), jnp.asarray(pts))
+        np.testing.assert_allclose(np.asarray(c2)[1], c[1])
+
+
+class TestPagerankStep:
+    def test_converges_to_fixed_point(self):
+        n = model.PAGERANK_N
+        m = np.abs(RNG.standard_normal((n, n))).astype(np.float32) + 0.01
+        m = m / m.sum(axis=0, keepdims=True)
+        r = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+        deltas = []
+        for _ in range(25):
+            r, delta = model.pagerank_step(r, jnp.asarray(m))
+            deltas.append(float(delta))
+        assert deltas[-1] < deltas[0] * 0.01, (deltas[0], deltas[-1])
+
+
+class TestAotSpecs:
+    def test_specs_cover_all_models(self):
+        names = [name for name, _, _ in model.aot_specs()]
+        assert names == ["logreg_step", "kmeans_step", "pagerank_step"]
+
+    def test_specs_are_traceable(self):
+        import jax
+
+        for name, fn, args in model.aot_specs():
+            lowered = jax.jit(fn).lower(*args)
+            assert lowered is not None, name

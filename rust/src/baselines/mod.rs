@@ -1,0 +1,161 @@
+//! Baseline systems, expressed as design points of the same stack
+//! (`StackConfig`) — exactly how the paper characterizes them in §7.2:
+//!
+//! | System    | posting  | MR     | polling     | verb      | extra |
+//! |-----------|----------|--------|-------------|-----------|-------|
+//! | nbdX      | doorbell | dynMR  | event-batch | two-sided | server copy, fixed 128K/512K block I/O |
+//! | Accelio   | doorbell | dynMR  | event-batch | two-sided | server copy |
+//! | Octopus   | single   | preMR  | busy        | one-sided | multi-QP |
+//! | GlusterFS | single   | dynMR  | event-batch | two-sided | extra storage copy |
+//!
+//! None of the baselines has Load-aware Batching, an admission window, or
+//! Adaptive Polling — those are the paper's contributions.
+
+use crate::config::FabricConfig;
+use crate::coordinator::batching::{BatchLimits, BatchMode};
+use crate::coordinator::mr_strategy::{AddrSpace, MrMode};
+use crate::coordinator::polling::PollingMode;
+use crate::coordinator::StackConfig;
+
+fn base_limits(cfg: &FabricConfig) -> BatchLimits {
+    BatchLimits {
+        max_sge: cfg.max_sge,
+        max_chain: cfg.max_doorbell_chain,
+        max_wr_bytes: 1 << 20,
+    }
+}
+
+/// nbdX (Mellanox network block device over Accelio): the paper's main
+/// remote-paging comparator. Fixed block I/O size (128 KB originally,
+/// 512 KB in the latest version), doorbell batching, dynMR, event-batch
+/// completion handling, two-sided messaging with a server-side copy.
+pub fn nbdx(cfg: &FabricConfig, block_bytes: u64) -> StackConfig {
+    StackConfig {
+        name: format!("nbdX-{}K", block_bytes / 1024),
+        batch: BatchMode::Doorbell,
+        limits: base_limits(cfg),
+        mr: MrMode::DynMr,
+        space: AddrSpace::Kernel,
+        polling: PollingMode::EventBatch { budget: 16 },
+        qps_per_node: 1,
+        window_bytes: None, // no admission control
+        two_sided: true,
+        server_copy: true,
+        fixed_block: Some(block_bytes),
+    }
+}
+
+/// Accelio-based FUSE file system (user space): same stack as nbdX but at
+/// request granularity (the FS passes through record-sized I/Os).
+pub fn accelio_fs(cfg: &FabricConfig) -> StackConfig {
+    StackConfig {
+        name: "Accelio".into(),
+        batch: BatchMode::Doorbell,
+        limits: base_limits(cfg),
+        mr: MrMode::DynMr,
+        space: AddrSpace::User,
+        polling: PollingMode::EventBatch { budget: 16 },
+        qps_per_node: 2,
+        window_bytes: None,
+        two_sided: true,
+        server_copy: true,
+        fixed_block: None,
+    }
+}
+
+/// Octopus (RDMA persistent-memory FS, run RAM-backed as in the paper):
+/// single I/O with preMR, busy polling, one-sided verbs, multi-QP.
+pub fn octopus(cfg: &FabricConfig) -> StackConfig {
+    StackConfig {
+        name: "Octopus".into(),
+        batch: BatchMode::Single,
+        limits: base_limits(cfg),
+        mr: MrMode::PreMr,
+        space: AddrSpace::User,
+        polling: PollingMode::Busy,
+        qps_per_node: 2,
+        window_bytes: None,
+        two_sided: false,
+        server_copy: false,
+        fixed_block: None,
+    }
+}
+
+/// GlusterFS on an RDMA volume (ramdisk-backed): single I/O with dynMR,
+/// event-batch polling, two-sided with an extra storage copy on the
+/// server (the receive path the paper calls out).
+pub fn glusterfs(cfg: &FabricConfig) -> StackConfig {
+    StackConfig {
+        name: "GlusterFS".into(),
+        batch: BatchMode::Single,
+        limits: base_limits(cfg),
+        mr: MrMode::DynMr,
+        space: AddrSpace::User,
+        polling: PollingMode::EventBatch { budget: 16 },
+        qps_per_node: 1,
+        window_bytes: None,
+        two_sided: true,
+        server_copy: true,
+        fixed_block: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nbdx_matches_paper_characterization() {
+        let cfg = FabricConfig::default();
+        let n = nbdx(&cfg, 128 * 1024);
+        assert_eq!(n.batch, BatchMode::Doorbell);
+        assert_eq!(n.mr, MrMode::DynMr);
+        assert!(n.two_sided && n.server_copy);
+        assert_eq!(n.fixed_block, Some(128 * 1024));
+        assert_eq!(n.window_bytes, None);
+        assert_eq!(n.name, "nbdX-128K");
+        assert_eq!(nbdx(&cfg, 512 * 1024).name, "nbdX-512K");
+    }
+
+    #[test]
+    fn octopus_is_premr_busy_one_sided() {
+        let cfg = FabricConfig::default();
+        let o = octopus(&cfg);
+        assert_eq!(o.batch, BatchMode::Single);
+        assert_eq!(o.mr, MrMode::PreMr);
+        assert_eq!(o.polling, PollingMode::Busy);
+        assert!(!o.two_sided);
+    }
+
+    #[test]
+    fn glusterfs_pays_server_copy() {
+        let cfg = FabricConfig::default();
+        let g = glusterfs(&cfg);
+        assert!(g.two_sided && g.server_copy);
+        assert_eq!(g.batch, BatchMode::Single);
+        assert_eq!(g.mr, MrMode::DynMr);
+    }
+
+    #[test]
+    fn no_baseline_has_rdmabox_contributions() {
+        let cfg = FabricConfig::default();
+        for s in [
+            nbdx(&cfg, 128 << 10),
+            accelio_fs(&cfg),
+            octopus(&cfg),
+            glusterfs(&cfg),
+        ] {
+            assert!(s.window_bytes.is_none(), "{}: no admission control", s.name);
+            assert!(
+                !matches!(s.polling, PollingMode::Adaptive { .. }),
+                "{}: no adaptive polling",
+                s.name
+            );
+            assert!(
+                !matches!(s.batch, BatchMode::Hybrid | BatchMode::BatchOnMr),
+                "{}: no batching-on-MR",
+                s.name
+            );
+        }
+    }
+}

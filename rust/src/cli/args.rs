@@ -1,0 +1,164 @@
+//! Hand-rolled argument parser (clap is not in the offline registry).
+//!
+//! Grammar: `rdmabox <subcommand> [positional...] [--flag] [--key value]
+//! [--key=value]`. Unknown flags are an error so typos do not silently fall
+//! back to defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // value is next token unless it looks like another flag
+                    match it.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse_env() -> Result<Self, String> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => parse_u64(v).map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Reject any flag not in `allowed` (catch typos).
+    pub fn check_allowed(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k}; allowed: {}",
+                    allowed.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse u64 with size suffixes: 4k/4K=4096, 2m/2M, 1g/1G (binary units),
+/// plain digits, and `_` separators.
+pub fn parse_u64(s: &str) -> Result<u64, String> {
+    let s = s.replace('_', "");
+    let (num, mult) = match s.chars().last() {
+        Some('k') | Some('K') => (&s[..s.len() - 1], 1024u64),
+        Some('m') | Some('M') => (&s[..s.len() - 1], 1024 * 1024),
+        Some('g') | Some('G') => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s.as_str(), 1),
+    };
+    num.parse::<u64>()
+        .map(|v| v * mult)
+        .map_err(|e| format!("bad number `{s}`: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_positionals() {
+        let a = parse(&["fig", "6"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig"));
+        assert_eq!(a.positional, vec!["6"]);
+    }
+
+    #[test]
+    fn parses_eq_and_space_flags() {
+        let a = parse(&["run", "--threads=8", "--seed", "42", "--verbose"]);
+        assert_eq!(a.get("threads"), Some("8"));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse(&["x", "--fast", "--threads", "4"]);
+        assert!(a.get_bool("fast"));
+        assert_eq!(a.get_u64("threads", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn size_suffixes() {
+        assert_eq!(parse_u64("4k").unwrap(), 4096);
+        assert_eq!(parse_u64("128K").unwrap(), 128 * 1024);
+        assert_eq!(parse_u64("7m").unwrap(), 7 * 1024 * 1024);
+        assert_eq!(parse_u64("2G").unwrap(), 2 * 1024 * 1024 * 1024);
+        assert_eq!(parse_u64("1_000").unwrap(), 1000);
+        assert!(parse_u64("abc").is_err());
+    }
+
+    #[test]
+    fn check_allowed_catches_typos() {
+        let a = parse(&["x", "--thread", "4"]);
+        assert!(a.check_allowed(&["threads"]).is_err());
+        assert!(a.check_allowed(&["thread"]).is_ok());
+    }
+
+    #[test]
+    fn get_defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_u64("n", 7).unwrap(), 7);
+        assert_eq!(a.get_str("mode", "hybrid"), "hybrid");
+        assert_eq!(a.get_f64("theta", 0.99).unwrap(), 0.99);
+    }
+}

@@ -1,0 +1,8 @@
+//! CLI plumbing: argument parsing and table rendering for the experiment
+//! harness binary (`rdmabox`).
+
+pub mod args;
+pub mod table;
+
+pub use args::Args;
+pub use table::Table;

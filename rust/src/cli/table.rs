@@ -1,0 +1,147 @@
+//! ASCII table printer for experiment harness output. Every `fig N` /
+//! `table N` subcommand prints its rows through this so the output looks
+//! like the paper's tables and is easy to diff across runs.
+
+#[derive(Default)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn headers<S: AsRef<str>>(mut self, hs: &[S]) -> Self {
+        self.headers = hs.iter().map(|h| h.as_ref().to_string()).collect();
+        self
+    }
+
+    pub fn row<S: AsRef<str>>(&mut self, cells: &[S]) -> &mut Self {
+        self.rows
+            .push(cells.iter().map(|c| c.as_ref().to_string()).collect());
+        self
+    }
+
+    pub fn note(&mut self, n: &str) -> &mut Self {
+        self.notes.push(n.to_string());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .headers
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.headers.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let c = cells.get(i).map(|x| x.as_str()).unwrap_or("");
+                s.push_str(&format!(" {:<width$} |", c, width = widths[i]));
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        if !self.headers.is_empty() {
+            out.push_str(&fmt_row(&self.headers));
+            out.push('\n');
+            out.push_str(&sep);
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Render a quick one-line series "name: x1=v1 x2=v2 ..." for figure curves.
+pub fn series_line(name: &str, xs: &[String], ys: &[String]) -> String {
+    let pts: Vec<String> = xs
+        .iter()
+        .zip(ys.iter())
+        .map(|(x, y)| format!("{x}={y}"))
+        .collect();
+    format!("{name}: {}", pts.join(" "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new("T").headers(&["a", "longer"]);
+        t.row(&["1", "2"]);
+        t.row(&["100", "x"]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("| a   | longer |"));
+        assert!(s.contains("| 100 | x      |"));
+        // all separator lines equal length
+        let lens: Vec<usize> = s
+            .lines()
+            .filter(|l| l.starts_with('+'))
+            .map(|l| l.len())
+            .collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn handles_ragged_rows_and_notes() {
+        let mut t = Table::new("").headers(&["a", "b", "c"]);
+        t.row(&["1"]);
+        t.note("hello");
+        let s = t.render();
+        assert!(s.contains("note: hello"));
+        assert!(s.contains("| 1 |"));
+    }
+
+    #[test]
+    fn series_line_format() {
+        let s = series_line(
+            "busy",
+            &["1".into(), "2".into()],
+            &["10".into(), "20".into()],
+        );
+        assert_eq!(s, "busy: 1=10 2=20");
+    }
+}

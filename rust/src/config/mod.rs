@@ -1,0 +1,41 @@
+//! Configuration system: fabric cost model, TOML-subset parser, presets.
+//!
+//! Precedence: built-in preset (`FabricConfig::connectx3_fdr`) → optional
+//! `--config <file.toml>` `[fabric]` overrides → individual CLI flags.
+
+pub mod fabric;
+pub mod toml;
+
+pub use fabric::FabricConfig;
+
+use crate::cli::Args;
+
+/// Resolve the fabric config from CLI args (`--config path` override file).
+pub fn fabric_from_args(args: &Args) -> Result<FabricConfig, String> {
+    let mut cfg = FabricConfig::connectx3_fdr();
+    if let Some(path) = args.get("config") {
+        let doc = toml::load(path)?;
+        cfg.apply_overrides(&doc)?;
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_resolution_without_file() {
+        let args = Args::default();
+        let cfg = fabric_from_args(&args).unwrap();
+        assert_eq!(cfg.nic_pus, 4);
+    }
+
+    #[test]
+    fn missing_config_file_errors() {
+        let mut args = Args::default();
+        args.flags
+            .insert("config".into(), "/nonexistent/x.toml".into());
+        assert!(fabric_from_args(&args).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! TOML-subset parser (serde/toml are not in the offline registry).
+//!
+//! Supports exactly what our config files need: `[section]` headers,
+//! `key = value` with integer (incl. size suffix k/m/g and `_`), float,
+//! bool, and quoted-string values, plus `#` comments and blank lines.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+pub type Section = BTreeMap<String, Value>;
+pub type Doc = BTreeMap<String, Section>;
+
+/// Parse a TOML-subset document. Keys before any `[section]` land in the
+/// section named `""`.
+pub fn parse(text: &str) -> Result<Doc, String> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut cur = String::new();
+    doc.entry(cur.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+            cur = name.trim().to_string();
+            doc.entry(cur.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+        let key = k.trim().to_string();
+        let val = parse_value(v.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&cur).unwrap().insert(key, val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // no '#' inside strings in our configs; keep it simple
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let inner = q
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    let cleaned = s.replace('_', "");
+    // size suffix?
+    if let Some(last) = cleaned.chars().last() {
+        if matches!(last, 'k' | 'K' | 'm' | 'M' | 'g' | 'G') {
+            let mult: i64 = match last {
+                'k' | 'K' => 1 << 10,
+                'm' | 'M' => 1 << 20,
+                _ => 1 << 30,
+            };
+            if let Ok(n) = cleaned[..cleaned.len() - 1].parse::<i64>() {
+                return Ok(Value::Int(n * mult));
+            }
+        }
+    }
+    if let Ok(n) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(n));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+/// Load and parse a file.
+pub fn load(path: &str) -> Result<Doc, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# top comment
+top = 1
+
+[fabric]
+link_gbps = 6.8      # inline comment
+wqe_cache = 256
+window = 7m
+name = "connectx3"
+enabled = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], Value::Int(1));
+        let f = &doc["fabric"];
+        assert_eq!(f["link_gbps"].as_f64(), Some(6.8));
+        assert_eq!(f["wqe_cache"].as_u64(), Some(256));
+        assert_eq!(f["window"].as_u64(), Some(7 * 1024 * 1024));
+        assert_eq!(f["name"].as_str(), Some("connectx3"));
+        assert_eq!(f["enabled"].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[oops").is_err());
+        assert!(parse("keyonly").is_err());
+        assert!(parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let doc = parse("n = 1_000_000").unwrap();
+        assert_eq!(doc[""]["n"].as_u64(), Some(1_000_000));
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc[""]["x"].as_f64(), Some(3.0));
+    }
+}

@@ -1,0 +1,455 @@
+//! Batch planner: turns a drained set of requests into posted chains
+//! according to the configured batching approach (paper §5.1, Fig 3).
+//!
+//! * `Single` — every request is its own WR, its own post (one MMIO each).
+//! * `BatchOnMr` — *adjacent* requests (contiguous remote addresses, same
+//!   node, same direction) merge into one WR with multiple SGEs: fewer
+//!   WQEs reach the NIC **and** fewer MMIOs cross PCIe.
+//! * `Doorbell` — no merging; all requests to the same QP are chained into
+//!   one doorbell post: one MMIO + (n−1) descriptor DMA reads, but the NIC
+//!   still processes n WQEs.
+//! * `Hybrid` — Batching-on-MR first, then doorbell-chain the surviving
+//!   WRs. The paper's default: the two optimizations compose because they
+//!   trigger on different conditions (adjacency vs mere co-residence in
+//!   the queue).
+
+use crate::fabric::{AppIo, WorkRequest};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    Single,
+    BatchOnMr,
+    Doorbell,
+    Hybrid,
+}
+
+impl BatchMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "single" => Ok(Self::Single),
+            "batch" | "batch-on-mr" => Ok(Self::BatchOnMr),
+            "doorbell" => Ok(Self::Doorbell),
+            "hybrid" => Ok(Self::Hybrid),
+            other => Err(format!("unknown batch mode `{other}`")),
+        }
+    }
+
+    pub fn merges(self) -> bool {
+        matches!(self, Self::BatchOnMr | Self::Hybrid)
+    }
+
+    pub fn chains(self) -> bool {
+        matches!(self, Self::Doorbell | Self::Hybrid)
+    }
+}
+
+/// Limits imposed by the NIC / verbs layer.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchLimits {
+    /// Max scatter/gather entries per WR (merge width).
+    pub max_sge: usize,
+    /// Max WRs per doorbell chain.
+    pub max_chain: usize,
+    /// Max bytes per merged WR.
+    pub max_wr_bytes: u64,
+}
+
+impl Default for BatchLimits {
+    fn default() -> Self {
+        Self {
+            max_sge: 16,
+            max_chain: 16,
+            max_wr_bytes: 1 << 20,
+        }
+    }
+}
+
+/// One planned post: a chain of WRs to a single destination node. A chain
+/// of length 1 is a plain single post. QP selection happens later (channel
+/// layer) — planning is per *node*.
+#[derive(Debug, Clone)]
+pub struct PlannedChain {
+    pub node: usize,
+    pub wrs: Vec<WorkRequest>,
+}
+
+/// Plan statistics, fed into the experiment counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Requests that were merged into a WR with >1 fragment.
+    pub merged_ios: u64,
+    /// WRs produced.
+    pub wqes: u64,
+    /// Posts (MMIOs) produced.
+    pub posts: u64,
+    /// WRs that ride a doorbell chain as non-head entries (descriptor DMA
+    /// instead of MMIO).
+    pub chained_wrs: u64,
+}
+
+/// Plan a drained batch. Input order is the FIFO drain order; output chains
+/// preserve per-node arrival order of the head request so latency-sensitive
+/// requests are not reordered behind later arrivals.
+pub fn plan(
+    mode: BatchMode,
+    lim: &BatchLimits,
+    ios: Vec<AppIo>,
+    next_wr_id: &mut u64,
+) -> (Vec<PlannedChain>, PlanStats) {
+    let mut stats = PlanStats::default();
+    if ios.is_empty() {
+        return (Vec::new(), stats);
+    }
+    // fast path: a lone request (the common light-load case — §5.1 "if a
+    // request arrives alone, its thread posts a single RDMA I/O
+    // immediately") skips grouping, sorting and chaining entirely.
+    if ios.len() == 1 {
+        let node = ios[0].node;
+        let wr = mk_wr(next_wr_id, &ios);
+        stats.wqes = 1;
+        stats.posts = 1;
+        return (
+            vec![PlannedChain {
+                node,
+                wrs: vec![wr],
+            }],
+            stats,
+        );
+    }
+
+    // 1) group by destination node, preserving arrival order.
+    let mut by_node: Vec<(usize, Vec<AppIo>)> = Vec::new();
+    for io in ios {
+        match by_node.iter_mut().find(|(n, _)| *n == io.node) {
+            Some((_, v)) => v.push(io),
+            None => by_node.push((io.node, vec![io])),
+        }
+    }
+
+    let mut chains = Vec::new();
+    for (node, group) in by_node {
+        // 2) merge adjacent requests (Batching-on-MR) if the mode allows.
+        let wrs = if mode.merges() {
+            merge_adjacent(group, lim, next_wr_id, &mut stats)
+        } else {
+            group
+                .into_iter()
+                .map(|io| {
+                    let wr = mk_wr(next_wr_id, &[io]);
+                    stats.wqes += 1;
+                    wr
+                })
+                .collect()
+        };
+
+        // 3) chain into doorbell posts if the mode allows.
+        if mode.chains() {
+            for chunk in wrs.chunks(lim.max_chain) {
+                stats.posts += 1;
+                stats.chained_wrs += (chunk.len() - 1) as u64;
+                chains.push(PlannedChain {
+                    node,
+                    wrs: chunk.to_vec(),
+                });
+            }
+        } else {
+            for wr in wrs {
+                stats.posts += 1;
+                chains.push(PlannedChain {
+                    node,
+                    wrs: vec![wr],
+                });
+            }
+        }
+    }
+    (chains, stats)
+}
+
+/// Merge adjacent (contiguous remote address, same direction) requests into
+/// multi-SGE WRs. Requests are sorted by remote address *within the drained
+/// set* — this is the "opportunistically looks for multiple adjacent
+/// requests" step; anything non-adjacent stays a separate WR.
+fn merge_adjacent(
+    mut group: Vec<AppIo>,
+    lim: &BatchLimits,
+    next_wr_id: &mut u64,
+    stats: &mut PlanStats,
+) -> Vec<WorkRequest> {
+    group.sort_by_key(|io| (io.dir.op() as u8, io.addr));
+    let mut out = Vec::new();
+    let mut run: Vec<AppIo> = Vec::new();
+    let mut i = 0;
+    while i < group.len() {
+        run.clear();
+        run.push(group[i]);
+        let mut end = group[i].addr + group[i].len;
+        let mut bytes = group[i].len;
+        let mut j = i + 1;
+        while j < group.len()
+            && run.len() < lim.max_sge
+            && group[j].dir == group[i].dir
+            && group[j].addr == end
+            && bytes + group[j].len <= lim.max_wr_bytes
+        {
+            end += group[j].len;
+            bytes += group[j].len;
+            run.push(group[j]);
+            j += 1;
+        }
+        if run.len() > 1 {
+            stats.merged_ios += run.len() as u64;
+        }
+        out.push(mk_wr(next_wr_id, &run));
+        stats.wqes += 1;
+        i = j;
+    }
+    out
+}
+
+fn mk_wr(next_wr_id: &mut u64, ios: &[AppIo]) -> WorkRequest {
+    let id = *next_wr_id;
+    *next_wr_id += 1;
+    WorkRequest {
+        wr_id: id,
+        op: ios[0].dir.op(),
+        node: ios[0].node,
+        remote_addr: ios.iter().map(|io| io.addr).min().unwrap(),
+        len: ios.iter().map(|io| io.len).sum(),
+        num_sge: ios.len(),
+        app_ios: ios.iter().map(|io| io.id).collect(),
+        signaled: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::Dir;
+    use crate::util::prop::{self, cfg};
+
+    fn io(id: u64, node: usize, addr: u64, len: u64, dir: Dir) -> AppIo {
+        AppIo {
+            id,
+            dir,
+            node,
+            addr,
+            len,
+            thread: 0,
+            t_submit: 0,
+        }
+    }
+
+    fn wio(id: u64, addr: u64) -> AppIo {
+        io(id, 0, addr, 4096, Dir::Write)
+    }
+
+    #[test]
+    fn single_mode_one_wr_one_post_each() {
+        let mut id = 0;
+        let (chains, st) = plan(
+            BatchMode::Single,
+            &BatchLimits::default(),
+            vec![wio(1, 0), wio(2, 4096), wio(3, 8192)],
+            &mut id,
+        );
+        assert_eq!(chains.len(), 3);
+        assert_eq!(st.wqes, 3);
+        assert_eq!(st.posts, 3);
+        assert_eq!(st.merged_ios, 0);
+        assert!(chains.iter().all(|c| c.wrs.len() == 1));
+    }
+
+    #[test]
+    fn batch_on_mr_merges_adjacent() {
+        let mut id = 0;
+        let (chains, st) = plan(
+            BatchMode::BatchOnMr,
+            &BatchLimits::default(),
+            vec![wio(1, 0), wio(2, 4096), wio(3, 8192), wio(4, 1 << 20)],
+            &mut id,
+        );
+        // three adjacent merge into one WR; the distant one stays alone
+        assert_eq!(st.wqes, 2);
+        assert_eq!(st.posts, 2);
+        assert_eq!(st.merged_ios, 3);
+        let merged = chains.iter().find(|c| c.wrs[0].num_sge == 3).unwrap();
+        assert_eq!(merged.wrs[0].len, 3 * 4096);
+        assert_eq!(merged.wrs[0].app_ios, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn doorbell_chains_without_reducing_wqes() {
+        let mut id = 0;
+        let ios: Vec<AppIo> = (0..5).map(|i| wio(i, i * 4096)).collect();
+        let (chains, st) = plan(BatchMode::Doorbell, &BatchLimits::default(), ios, &mut id);
+        assert_eq!(chains.len(), 1);
+        assert_eq!(st.wqes, 5); // same number of RDMA I/Os as single
+        assert_eq!(st.posts, 1); // but one MMIO
+        assert_eq!(st.chained_wrs, 4);
+    }
+
+    #[test]
+    fn hybrid_merges_then_chains() {
+        let mut id = 0;
+        // two adjacent + one distant -> 2 WRs -> 1 chain
+        let (chains, st) = plan(
+            BatchMode::Hybrid,
+            &BatchLimits::default(),
+            vec![wio(1, 0), wio(2, 4096), wio(3, 1 << 20)],
+            &mut id,
+        );
+        assert_eq!(st.wqes, 2);
+        assert_eq!(st.posts, 1);
+        assert_eq!(chains[0].wrs.len(), 2);
+    }
+
+    #[test]
+    fn different_nodes_never_merge_or_chain_together() {
+        let mut id = 0;
+        let (chains, st) = plan(
+            BatchMode::Hybrid,
+            &BatchLimits::default(),
+            vec![
+                io(1, 0, 0, 4096, Dir::Write),
+                io(2, 1, 4096, 4096, Dir::Write),
+            ],
+            &mut id,
+        );
+        assert_eq!(chains.len(), 2);
+        assert_eq!(st.wqes, 2);
+        assert!(chains.iter().all(|c| c.wrs.len() == 1));
+    }
+
+    #[test]
+    fn reads_and_writes_do_not_merge() {
+        let mut id = 0;
+        let (_, st) = plan(
+            BatchMode::BatchOnMr,
+            &BatchLimits::default(),
+            vec![
+                io(1, 0, 0, 4096, Dir::Write),
+                io(2, 0, 4096, 4096, Dir::Read),
+            ],
+            &mut id,
+        );
+        assert_eq!(st.wqes, 2);
+        assert_eq!(st.merged_ios, 0);
+    }
+
+    #[test]
+    fn max_sge_limits_merge_width() {
+        let mut id = 0;
+        let lim = BatchLimits {
+            max_sge: 4,
+            ..Default::default()
+        };
+        let ios: Vec<AppIo> = (0..10).map(|i| wio(i, i * 4096)).collect();
+        let (_, st) = plan(BatchMode::BatchOnMr, &lim, ios, &mut id);
+        assert_eq!(st.wqes, 3); // 4 + 4 + 2
+    }
+
+    #[test]
+    fn max_chain_splits_doorbell() {
+        let mut id = 0;
+        let lim = BatchLimits {
+            max_chain: 2,
+            ..Default::default()
+        };
+        let ios: Vec<AppIo> = (0..5).map(|i| wio(i, i * 8192)).collect(); // non-adjacent
+        let (chains, st) = plan(BatchMode::Hybrid, &lim, ios, &mut id);
+        assert_eq!(chains.len(), 3); // 2+2+1
+        assert_eq!(st.posts, 3);
+    }
+
+    #[test]
+    fn max_wr_bytes_limits_merge() {
+        let mut id = 0;
+        let lim = BatchLimits {
+            max_wr_bytes: 8192,
+            ..Default::default()
+        };
+        let ios: Vec<AppIo> = (0..4).map(|i| wio(i, i * 4096)).collect();
+        let (_, st) = plan(BatchMode::BatchOnMr, &lim, ios, &mut id);
+        assert_eq!(st.wqes, 2); // 2 pages per WR
+    }
+
+    #[test]
+    fn empty_plan() {
+        let mut id = 0;
+        let (chains, st) = plan(
+            BatchMode::Hybrid,
+            &BatchLimits::default(),
+            vec![],
+            &mut id,
+        );
+        assert!(chains.is_empty());
+        assert_eq!(st, PlanStats::default());
+    }
+
+    /// Property: planning conserves app I/Os (each exactly once), never
+    /// exceeds SGE/chain/byte limits, and `wqes`/`posts` counters match the
+    /// produced structure, for every mode.
+    #[test]
+    fn prop_plan_conservation_and_limits() {
+        for mode in [
+            BatchMode::Single,
+            BatchMode::BatchOnMr,
+            BatchMode::Doorbell,
+            BatchMode::Hybrid,
+        ] {
+            prop::forall(cfg(0xBA7C4 + mode as u64), |rng, size| {
+                let lim = BatchLimits {
+                    max_sge: 1 + rng.gen_below(8) as usize,
+                    max_chain: 1 + rng.gen_below(8) as usize,
+                    max_wr_bytes: (1 + rng.gen_below(64)) * 4096,
+                };
+                let n = size;
+                let ios: Vec<AppIo> = (0..n)
+                    .map(|i| {
+                        let dir = if rng.gen_bool(0.5) { Dir::Read } else { Dir::Write };
+                        // cluster addresses so adjacency actually occurs
+                        let addr = rng.gen_below(n as u64 * 2) * 4096;
+                        io(i as u64, rng.gen_below(3) as usize, addr, 4096, dir)
+                    })
+                    .collect();
+                let mut id = 0;
+                let (chains, st) = plan(mode, &lim, ios.clone(), &mut id);
+                let mut seen: Vec<u64> = chains
+                    .iter()
+                    .flat_map(|c| c.wrs.iter())
+                    .flat_map(|w| w.app_ios.iter().copied())
+                    .collect();
+                seen.sort_unstable();
+                let mut want: Vec<u64> = ios.iter().map(|x| x.id).collect();
+                want.sort_unstable();
+                if seen != want {
+                    return Err(format!("io loss/dup: {seen:?} vs {want:?}"));
+                }
+                let wqes: u64 = chains.iter().map(|c| c.wrs.len() as u64).sum();
+                if wqes != st.wqes {
+                    return Err(format!("wqe count mismatch {wqes} vs {}", st.wqes));
+                }
+                if chains.len() as u64 != st.posts {
+                    return Err("post count mismatch".into());
+                }
+                for c in &chains {
+                    if c.wrs.len() > lim.max_chain {
+                        return Err("chain limit exceeded".into());
+                    }
+                    for w in &c.wrs {
+                        if w.num_sge > lim.max_sge {
+                            return Err("sge limit exceeded".into());
+                        }
+                        if w.num_sge > 1 && w.len > lim.max_wr_bytes {
+                            return Err("wr byte limit exceeded".into());
+                        }
+                        if w.node != c.node {
+                            return Err("wr node != chain node".into());
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! The I/O merge queue — the central data structure of Load-aware Batching
+//! (paper §5.1).
+//!
+//! One queue per direction (read / write). Every data-request thread
+//! *enqueues first, then immediately merge-checks*: the earliest-arriving
+//! thread drains whatever has stacked up and builds a batch plan; threads
+//! whose requests were taken by someone else's merge-check simply return.
+//! Under light load a thread finds only its own request and posts a single
+//! I/O immediately — batching never adds latency when there is nothing to
+//! batch. Under heavy load (or while the admission-control window is
+//! closed) requests accumulate, and the *wait itself* creates merge
+//! opportunities.
+
+use crate::fabric::{AppIo, Dir};
+
+/// Outcome of one enqueue + merge-check round for a thread.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MergeCheck {
+    /// This thread drained the queue; it must now plan and post the batch.
+    Drained(Vec<AppIo>),
+    /// Another thread already took this thread's request (it will be posted
+    /// as part of that thread's batch) — nothing to do.
+    TakenByPeer,
+    /// The admission window is closed; requests stay queued.
+    Blocked,
+}
+
+/// A single-direction merge queue. Deliberately a plain FIFO + counters:
+/// the paper's point is that a *single* queue with opportunistic draining
+/// beats per-CPU queues with enforced cross-CPU merging.
+#[derive(Debug, Default)]
+pub struct MergeQueue {
+    q: Vec<AppIo>,
+    /// Total bytes currently queued.
+    queued_bytes: u64,
+    /// Statistics.
+    pub enqueued: u64,
+    pub drains: u64,
+    pub empty_checks: u64,
+    pub max_depth: usize,
+}
+
+impl MergeQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn queued_bytes(&self) -> u64 {
+        self.queued_bytes
+    }
+
+    /// Enqueue a request (step 1 of the protocol).
+    pub fn push(&mut self, io: AppIo) {
+        self.queued_bytes += io.len;
+        self.q.push(io);
+        self.enqueued += 1;
+        self.max_depth = self.max_depth.max(self.q.len());
+    }
+
+    /// Merge-check (step 2): drain up to `window_bytes` worth of requests.
+    /// `u64::MAX` means no admission limit. Returns what this thread should
+    /// post. Drains in FIFO order so a closed window cannot starve old
+    /// requests (fairness of the single-queue design, paper §5.1).
+    pub fn merge_check(&mut self, window_bytes: u64) -> MergeCheck {
+        if self.q.is_empty() {
+            self.empty_checks += 1;
+            return MergeCheck::TakenByPeer;
+        }
+        if window_bytes == 0 || self.q[0].len > window_bytes {
+            return MergeCheck::Blocked;
+        }
+        let mut budget = window_bytes;
+        let mut n = 0;
+        for io in &self.q {
+            if io.len > budget {
+                break;
+            }
+            budget -= io.len;
+            n += 1;
+        }
+        let drained: Vec<AppIo> = self.q.drain(..n).collect();
+        self.queued_bytes -= drained.iter().map(|io| io.len).sum::<u64>();
+        self.drains += 1;
+        MergeCheck::Drained(drained)
+    }
+
+    /// Peek the queued requests (tests, introspection).
+    pub fn peek(&self) -> &[AppIo] {
+        &self.q
+    }
+}
+
+/// The pair of queues the node abstraction owns (paper: "a single merge
+/// queue for each write and read").
+#[derive(Debug, Default)]
+pub struct MergeQueues {
+    pub read: MergeQueue,
+    pub write: MergeQueue,
+}
+
+impl MergeQueues {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn of(&mut self, dir: Dir) -> &mut MergeQueue {
+        match dir {
+            Dir::Read => &mut self.read,
+            Dir::Write => &mut self.write,
+        }
+    }
+
+    pub fn total_queued_bytes(&self) -> u64 {
+        self.read.queued_bytes() + self.write.queued_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, cfg};
+    use crate::util::rng::Pcg32;
+
+    fn io(id: u64, addr: u64, len: u64) -> AppIo {
+        AppIo {
+            id,
+            dir: Dir::Write,
+            node: 0,
+            addr,
+            len,
+            thread: 0,
+            t_submit: 0,
+        }
+    }
+
+    #[test]
+    fn single_request_drains_immediately() {
+        let mut q = MergeQueue::new();
+        q.push(io(1, 0, 4096));
+        match q.merge_check(u64::MAX) {
+            MergeCheck::Drained(v) => assert_eq!(v.len(), 1),
+            other => panic!("{other:?}"),
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peer_sees_empty_after_drain() {
+        let mut q = MergeQueue::new();
+        q.push(io(1, 0, 4096));
+        q.push(io(2, 4096, 4096));
+        // thread A drains both…
+        assert!(matches!(q.merge_check(u64::MAX), MergeCheck::Drained(v) if v.len() == 2));
+        // …thread B (which pushed id=2) finds nothing: taken by peer.
+        assert_eq!(q.merge_check(u64::MAX), MergeCheck::TakenByPeer);
+    }
+
+    #[test]
+    fn window_blocks_and_partially_admits() {
+        let mut q = MergeQueue::new();
+        q.push(io(1, 0, 4096));
+        q.push(io(2, 4096, 4096));
+        q.push(io(3, 8192, 4096));
+        // window admits only two pages
+        match q.merge_check(8192) {
+            MergeCheck::Drained(v) => {
+                assert_eq!(v.len(), 2);
+                assert_eq!(v[0].id, 1);
+                assert_eq!(v[1].id, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(q.len(), 1);
+        // zero window blocks
+        assert_eq!(q.merge_check(0), MergeCheck::Blocked);
+        // window smaller than head blocks (no starvation bypass)
+        assert_eq!(q.merge_check(100), MergeCheck::Blocked);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut q = MergeQueue::new();
+        for i in 0..10 {
+            q.push(io(i, i * 4096, 4096));
+        }
+        match q.merge_check(u64::MAX) {
+            MergeCheck::Drained(v) => {
+                let ids: Vec<u64> = v.iter().map(|x| x.id).collect();
+                assert_eq!(ids, (0..10).collect::<Vec<_>>());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn byte_accounting_is_exact() {
+        let mut q = MergeQueue::new();
+        q.push(io(1, 0, 100));
+        q.push(io(2, 100, 200));
+        assert_eq!(q.queued_bytes(), 300);
+        let _ = q.merge_check(150);
+        assert_eq!(q.queued_bytes(), 200);
+    }
+
+    #[test]
+    fn queues_pair_routes_by_dir() {
+        let mut qs = MergeQueues::new();
+        qs.of(Dir::Read).push(AppIo {
+            dir: Dir::Read,
+            ..io(1, 0, 4096)
+        });
+        qs.of(Dir::Write).push(io(2, 0, 4096));
+        assert_eq!(qs.read.len(), 1);
+        assert_eq!(qs.write.len(), 1);
+        assert_eq!(qs.total_queued_bytes(), 8192);
+    }
+
+    /// Property: for any sequence of pushes and window-limited drains, no
+    /// request is lost or duplicated, FIFO order holds, and byte accounting
+    /// stays consistent.
+    #[test]
+    fn prop_conservation_and_fifo() {
+        prop::forall(cfg(0x4D45_5247), |rng, size| prop_body(rng, size));
+        fn prop_body(rng: &mut Pcg32, size: usize) -> Result<(), String> {
+            let mut q = MergeQueue::new();
+            let mut pushed: Vec<u64> = Vec::new();
+            let mut drained: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..size * 4 {
+                if rng.gen_bool(0.6) {
+                    let len = (1 + rng.gen_below(64)) * 512;
+                    q.push(io(next_id, next_id * 4096, len));
+                    pushed.push(next_id);
+                    next_id += 1;
+                } else {
+                    let window = rng.gen_below(1 << 18);
+                    if let MergeCheck::Drained(v) = q.merge_check(window) {
+                        drained.extend(v.iter().map(|x| x.id));
+                    }
+                }
+                let total: u64 = q.peek().iter().map(|x| x.len).sum();
+                if total != q.queued_bytes() {
+                    return Err(format!(
+                        "byte accounting drift: {} vs {}",
+                        total,
+                        q.queued_bytes()
+                    ));
+                }
+            }
+            if let MergeCheck::Drained(v) = q.merge_check(u64::MAX) {
+                drained.extend(v.iter().map(|x| x.id));
+            }
+            if drained != pushed {
+                return Err(format!("lost/reordered: {drained:?} vs {pushed:?}"));
+            }
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Memory-region strategy: pre-registered MR pool (`preMR`) vs dynamic
+//! registration (`dynMR`) vs the user-space threshold mix (paper §5.1,
+//! Fig 4).
+//!
+//! * `PreMr` — a pool of fixed-size registered slots; posting a write costs
+//!   a staging memcpy into the slot, a read costs a memcpy out at
+//!   completion. No registration on the hot path, but copies consume CPU
+//!   and the copy sits on the critical path.
+//! * `DynMr` — register the data buffer itself (SGE) before posting,
+//!   deregister at completion. In kernel space registration uses physical
+//!   addresses (no PTE walk / NIC translation-cache pressure) and is cheap
+//!   at every size; in user space per-page translation makes small
+//!   registrations expensive.
+//! * `Threshold` — the paper's user-space recommendation: preMR below the
+//!   memcpy/registration crossover (~928 KB measured), dynMR above.
+
+use crate::config::FabricConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AddrSpace {
+    Kernel,
+    User,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MrMode {
+    PreMr,
+    DynMr,
+    /// Switch to DynMr at-or-above this many bytes.
+    Threshold(u64),
+}
+
+impl MrMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "premr" | "pre" => Ok(Self::PreMr),
+            "dynmr" | "dyn" => Ok(Self::DynMr),
+            "threshold" | "mixed" => Ok(Self::Threshold(928 * 1024)),
+            other => Err(format!("unknown MR mode `{other}`")),
+        }
+    }
+
+    /// The paper's recommended default per address space (§5.1): dynMR in
+    /// kernel space, threshold mix in user space.
+    pub fn recommended(space: AddrSpace, cfg: &FabricConfig) -> Self {
+        match space {
+            AddrSpace::Kernel => Self::DynMr,
+            AddrSpace::User => Self::Threshold(cfg.user_crossover_bytes()),
+        }
+    }
+
+    /// Effective mode for a given transfer size.
+    pub fn resolve(self, len: u64) -> ResolvedMr {
+        match self {
+            MrMode::PreMr => ResolvedMr::PreMr,
+            MrMode::DynMr => ResolvedMr::DynMr,
+            MrMode::Threshold(t) => {
+                if len >= t {
+                    ResolvedMr::DynMr
+                } else {
+                    ResolvedMr::PreMr
+                }
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResolvedMr {
+    PreMr,
+    DynMr,
+}
+
+/// CPU cost charged *before posting* a WR of `len` bytes.
+/// preMR writes stage a copy in; reads pay nothing up front.
+pub fn post_cost_ns(
+    cfg: &FabricConfig,
+    mode: MrMode,
+    space: AddrSpace,
+    len: u64,
+    is_write: bool,
+) -> u64 {
+    match mode.resolve(len) {
+        ResolvedMr::PreMr => {
+            if is_write {
+                cfg.memcpy_ns(len)
+            } else {
+                0
+            }
+        }
+        ResolvedMr::DynMr => cfg.reg_ns(len, space == AddrSpace::Kernel),
+    }
+}
+
+/// CPU cost charged *in the completion handler*.
+/// preMR reads copy out of the slot; dynMR deregisters.
+pub fn completion_cost_ns(
+    cfg: &FabricConfig,
+    mode: MrMode,
+    space: AddrSpace,
+    len: u64,
+    is_write: bool,
+) -> u64 {
+    match mode.resolve(len) {
+        ResolvedMr::PreMr => {
+            if is_write {
+                0
+            } else {
+                cfg.memcpy_ns(len)
+            }
+        }
+        ResolvedMr::DynMr => cfg.dereg_ns(len, space == AddrSpace::Kernel),
+    }
+}
+
+/// A pool of pre-registered fixed-size MR slots. Exhaustion stalls the
+/// posting thread (counted) — one more reason large fixed-block designs
+/// (nbdX) lose under memory pressure.
+#[derive(Debug)]
+pub struct PreMrPool {
+    slot_bytes: u64,
+    free: Vec<u32>,
+    total: u32,
+    pub exhausted_events: u64,
+}
+
+impl PreMrPool {
+    pub fn new(slot_bytes: u64, slots: u32) -> Self {
+        Self {
+            slot_bytes,
+            free: (0..slots).rev().collect(),
+            total: slots,
+            exhausted_events: 0,
+        }
+    }
+
+    pub fn slot_bytes(&self) -> u64 {
+        self.slot_bytes
+    }
+
+    pub fn in_use(&self) -> u32 {
+        self.total - self.free.len() as u32
+    }
+
+    /// Acquire enough slots to stage `len` bytes; None if exhausted.
+    pub fn acquire(&mut self, len: u64) -> Option<Vec<u32>> {
+        let need = len.div_ceil(self.slot_bytes) as usize;
+        if self.free.len() < need {
+            self.exhausted_events += 1;
+            return None;
+        }
+        Some((0..need).map(|_| self.free.pop().unwrap()).collect())
+    }
+
+    pub fn release(&mut self, slots: Vec<u32>) {
+        for s in slots {
+            debug_assert!(!self.free.contains(&s), "double free of MR slot {s}");
+            self.free.push(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FabricConfig {
+        FabricConfig::default()
+    }
+
+    #[test]
+    fn kernel_recommended_is_dynmr() {
+        assert_eq!(MrMode::recommended(AddrSpace::Kernel, &cfg()), MrMode::DynMr);
+    }
+
+    #[test]
+    fn user_recommended_is_threshold_near_928k() {
+        let m = MrMode::recommended(AddrSpace::User, &cfg());
+        match m {
+            MrMode::Threshold(t) => {
+                let paper = 928 * 1024;
+                assert!(
+                    (t as f64 - paper as f64).abs() / paper as f64 <= 0.15,
+                    "threshold {t}"
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn threshold_resolves_by_size() {
+        let m = MrMode::Threshold(928 * 1024);
+        assert_eq!(m.resolve(4096), ResolvedMr::PreMr);
+        assert_eq!(m.resolve(1 << 20), ResolvedMr::DynMr);
+    }
+
+    #[test]
+    fn premr_write_costs_copy_upfront_and_nothing_at_completion() {
+        let c = cfg();
+        let up = post_cost_ns(&c, MrMode::PreMr, AddrSpace::User, 128 << 10, true);
+        let down = completion_cost_ns(&c, MrMode::PreMr, AddrSpace::User, 128 << 10, true);
+        assert_eq!(up, c.memcpy_ns(128 << 10));
+        assert_eq!(down, 0);
+    }
+
+    #[test]
+    fn premr_read_costs_copy_at_completion() {
+        let c = cfg();
+        let up = post_cost_ns(&c, MrMode::PreMr, AddrSpace::User, 128 << 10, false);
+        let down = completion_cost_ns(&c, MrMode::PreMr, AddrSpace::User, 128 << 10, false);
+        assert_eq!(up, 0);
+        assert_eq!(down, c.memcpy_ns(128 << 10));
+    }
+
+    #[test]
+    fn dynmr_kernel_cheaper_than_user() {
+        let c = cfg();
+        let k = post_cost_ns(&c, MrMode::DynMr, AddrSpace::Kernel, 64 << 10, true);
+        let u = post_cost_ns(&c, MrMode::DynMr, AddrSpace::User, 64 << 10, true);
+        assert!(k < u, "kernel {k} user {u}");
+    }
+
+    #[test]
+    fn user_post_cost_crossover_matches_fig4() {
+        // Fig 4b measures the *critical-path* cost of staging a message:
+        // memcpy-into-preMR vs registering the buffer (deregistration is
+        // off the critical path — deferred/batched by real MR caches).
+        // preMR cheaper below the ~928 KB crossover, dynMR above.
+        let c = cfg();
+        let post = |mode: MrMode, len: u64| post_cost_ns(&c, mode, AddrSpace::User, len, true);
+        assert!(post(MrMode::PreMr, 64 << 10) < post(MrMode::DynMr, 64 << 10));
+        assert!(post(MrMode::PreMr, 4 << 20) > post(MrMode::DynMr, 4 << 20));
+    }
+
+    #[test]
+    fn kernel_dynmr_beats_premr_at_all_sizes() {
+        let c = cfg();
+        for len in [4096u64, 64 << 10, 256 << 10, 1 << 20, 8 << 20] {
+            let pre = post_cost_ns(&c, MrMode::PreMr, AddrSpace::Kernel, len, true)
+                + completion_cost_ns(&c, MrMode::PreMr, AddrSpace::Kernel, len, true);
+            let dyn_ = post_cost_ns(&c, MrMode::DynMr, AddrSpace::Kernel, len, true)
+                + completion_cost_ns(&c, MrMode::DynMr, AddrSpace::Kernel, len, true);
+            assert!(dyn_ < pre, "len={len}: dyn {dyn_} pre {pre}");
+        }
+    }
+
+    #[test]
+    fn pool_acquire_release_roundtrip() {
+        let mut p = PreMrPool::new(4096, 4);
+        let a = p.acquire(4096).unwrap();
+        assert_eq!(a.len(), 1);
+        let b = p.acquire(8192).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(p.in_use(), 3);
+        assert!(p.acquire(8192).is_none()); // only 1 left
+        assert_eq!(p.exhausted_events, 1);
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.in_use(), 0);
+        assert!(p.acquire(4 * 4096).is_some());
+    }
+
+    #[test]
+    fn parse_modes() {
+        assert_eq!(MrMode::parse("premr").unwrap(), MrMode::PreMr);
+        assert_eq!(MrMode::parse("dyn").unwrap(), MrMode::DynMr);
+        assert!(matches!(
+            MrMode::parse("threshold").unwrap(),
+            MrMode::Threshold(_)
+        ));
+        assert!(MrMode::parse("wat").is_err());
+    }
+}

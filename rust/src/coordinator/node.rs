@@ -1,0 +1,178 @@
+//! Node-level abstraction (paper §6): the remote-node map that gives
+//! applications user-transparent remote memory through a virtual block
+//! device — data distribution, replication placement, and failover order.
+//!
+//! The paging system replicates each block on 2 remote nodes plus local
+//! disk; disk is touched only when every replica has failed (paper §7.1).
+
+use crate::fabric::NodeId;
+
+/// Where a block lives: ordered replica list (primary first) + disk flag.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub replicas: Vec<NodeId>,
+    /// Remote address of the block on each replica (same offset on all).
+    pub remote_addr: u64,
+}
+
+/// Striped placement of client block space over N remote memory donors.
+#[derive(Debug, Clone)]
+pub struct NodeMap {
+    nodes: usize,
+    replicas: usize,
+    stripe_bytes: u64,
+    alive: Vec<bool>,
+}
+
+impl NodeMap {
+    pub fn new(nodes: usize, replicas: usize, stripe_bytes: u64) -> Self {
+        assert!(nodes >= 1, "need at least one remote node");
+        assert!(replicas >= 1 && replicas <= nodes);
+        assert!(stripe_bytes > 0);
+        Self {
+            nodes,
+            replicas,
+            stripe_bytes,
+            alive: vec![true; nodes],
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Mark a node failed/recovered (failure-injection tests).
+    pub fn set_alive(&mut self, node: NodeId, alive: bool) {
+        self.alive[node] = alive;
+    }
+
+    pub fn is_alive(&self, node: NodeId) -> bool {
+        self.alive[node]
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    /// Placement of the block containing `addr`. Replicas are consecutive
+    /// nodes starting at the stripe's primary; the remote address is the
+    /// client address (donors mirror the client block space — capacity
+    /// management stays in the paging layer).
+    pub fn place(&self, addr: u64) -> Placement {
+        let stripe = addr / self.stripe_bytes;
+        let primary = (stripe % self.nodes as u64) as usize;
+        let replicas = (0..self.replicas)
+            .map(|i| (primary + i) % self.nodes)
+            .collect();
+        Placement {
+            replicas,
+            remote_addr: addr,
+        }
+    }
+
+    /// Read path: first *alive* replica, else None (→ disk fallback).
+    pub fn read_target(&self, addr: u64) -> Option<NodeId> {
+        self.place(addr).replicas.into_iter().find(|&n| self.alive[n])
+    }
+
+    /// Write path: all alive replicas (dead ones are skipped; the paging
+    /// layer counts the block as disk-backed if none are alive).
+    pub fn write_targets(&self, addr: u64) -> Vec<NodeId> {
+        self.place(addr)
+            .replicas
+            .into_iter()
+            .filter(|&n| self.alive[n])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, cfg};
+
+    #[test]
+    fn stripes_rotate_primaries() {
+        let m = NodeMap::new(3, 2, 1 << 20);
+        assert_eq!(m.place(0).replicas, vec![0, 1]);
+        assert_eq!(m.place(1 << 20).replicas, vec![1, 2]);
+        assert_eq!(m.place(2 << 20).replicas, vec![2, 0]);
+        assert_eq!(m.place(3 << 20).replicas, vec![0, 1]);
+    }
+
+    #[test]
+    fn same_stripe_same_placement() {
+        let m = NodeMap::new(4, 2, 1 << 20);
+        assert_eq!(m.place(100).replicas, m.place((1 << 20) - 1).replicas);
+    }
+
+    #[test]
+    fn read_prefers_primary_then_fails_over() {
+        let mut m = NodeMap::new(3, 2, 4096);
+        assert_eq!(m.read_target(0), Some(0));
+        m.set_alive(0, false);
+        assert_eq!(m.read_target(0), Some(1));
+        m.set_alive(1, false);
+        assert_eq!(m.read_target(0), None); // -> disk
+        m.set_alive(0, true);
+        assert_eq!(m.read_target(0), Some(0));
+    }
+
+    #[test]
+    fn write_targets_skip_dead() {
+        let mut m = NodeMap::new(3, 2, 4096);
+        assert_eq!(m.write_targets(0), vec![0, 1]);
+        m.set_alive(1, false);
+        assert_eq!(m.write_targets(0), vec![0]);
+        m.set_alive(0, false);
+        assert!(m.write_targets(0).is_empty());
+        assert_eq!(m.alive_count(), 1);
+    }
+
+    #[test]
+    fn single_node_single_replica() {
+        let m = NodeMap::new(1, 1, 4096);
+        assert_eq!(m.place(123456).replicas, vec![0]);
+    }
+
+    /// Property: replicas are always distinct, alive-filtered, and the
+    /// read target is the first alive replica.
+    #[test]
+    fn prop_placement_invariants() {
+        prop::forall(cfg(0x0D0_3), |rng, size| {
+            let nodes = 1 + rng.gen_below(10) as usize;
+            let replicas = 1 + rng.gen_below(nodes as u64) as usize;
+            let mut m = NodeMap::new(nodes, replicas, 4096);
+            for _ in 0..size {
+                let n = rng.gen_below(nodes as u64) as usize;
+                m.set_alive(n, rng.gen_bool(0.7));
+            }
+            for _ in 0..size {
+                let addr = rng.gen_below(1 << 30);
+                let p = m.place(addr);
+                let set: std::collections::BTreeSet<_> = p.replicas.iter().collect();
+                if set.len() != p.replicas.len() {
+                    return Err("duplicate replicas".into());
+                }
+                if p.replicas.len() != replicas {
+                    return Err("wrong replica count".into());
+                }
+                let rt = m.read_target(addr);
+                let expect = p.replicas.iter().copied().find(|&n| m.is_alive(n));
+                if rt != expect {
+                    return Err(format!("read target {rt:?} != {expect:?}"));
+                }
+                for w in m.write_targets(addr) {
+                    if !m.is_alive(w) {
+                        return Err("write target dead".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

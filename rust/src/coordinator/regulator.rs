@@ -1,0 +1,290 @@
+//! RDMA-I/O-level admission control (paper §5.1, Fig 8).
+//!
+//! A window-based in-flight-bytes limiter implemented *on* the merge queue
+//! — no extra queue layer. While the window is closed, requests wait in the
+//! merge queue, which turns the forced wait into extra merge opportunities.
+//! The policy is pluggable (the paper's software hook for congestion
+//! control); the prototype uses a static window sized to the NIC's
+//! capability (the paper measures ~7 MB in-flight at the knee).
+
+use crate::util::stats::Ewma;
+
+/// Pluggable admission policy: returns the current window in bytes.
+pub trait AdmissionPolicy: std::fmt::Debug + Send {
+    fn window_bytes(&mut self, now_ns: u64, feedback: &Feedback) -> u64;
+    fn name(&self) -> &'static str;
+}
+
+/// Feedback the regulator exposes to policies (completion latency EWMA and
+/// in-flight level) — enough to implement Timely/HPCC-style controllers via
+/// the hook, as the paper suggests.
+#[derive(Debug, Default, Clone)]
+pub struct Feedback {
+    pub in_flight_bytes: u64,
+    pub last_completion_ns: u64,
+    pub rtt_ewma_ns: f64,
+}
+
+/// The paper's prototype policy: a static window set at init time.
+#[derive(Debug, Clone)]
+pub struct StaticWindow(pub u64);
+
+impl AdmissionPolicy for StaticWindow {
+    fn window_bytes(&mut self, _now: u64, _fb: &Feedback) -> u64 {
+        self.0
+    }
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// No admission control (the Fig 1 / "without AC" configurations).
+#[derive(Debug, Clone)]
+pub struct Unlimited;
+
+impl AdmissionPolicy for Unlimited {
+    fn window_bytes(&mut self, _now: u64, _fb: &Feedback) -> u64 {
+        u64::MAX
+    }
+    fn name(&self) -> &'static str {
+        "unlimited"
+    }
+}
+
+/// Extension (the paper's "hook to implement custom admission control"):
+/// an AIMD controller on completion RTT — grow the window additively while
+/// RTT stays below a target, halve it when RTT exceeds the target. Uses
+/// integer-friendly math (the paper notes kernel space cannot afford
+/// gradient floating-point à la Timely; EWMA + compare is cheap).
+#[derive(Debug)]
+pub struct AimdWindow {
+    window: u64,
+    min: u64,
+    max: u64,
+    add_step: u64,
+    target_rtt_ns: u64,
+    rtt: Ewma,
+    last_decrease_ns: u64,
+    cooldown_ns: u64,
+}
+
+impl AimdWindow {
+    pub fn new(initial: u64, min: u64, max: u64, target_rtt_ns: u64) -> Self {
+        Self {
+            window: initial,
+            min,
+            max,
+            add_step: 64 * 1024,
+            target_rtt_ns,
+            rtt: Ewma::new(0.2),
+            last_decrease_ns: 0,
+            cooldown_ns: 200_000,
+        }
+    }
+}
+
+impl AdmissionPolicy for AimdWindow {
+    fn window_bytes(&mut self, now: u64, fb: &Feedback) -> u64 {
+        if fb.last_completion_ns > 0 {
+            let rtt = self.rtt.update(fb.last_completion_ns as f64);
+            if rtt > self.target_rtt_ns as f64 {
+                if now.saturating_sub(self.last_decrease_ns) > self.cooldown_ns {
+                    self.window = (self.window / 2).max(self.min);
+                    self.last_decrease_ns = now;
+                }
+            } else {
+                self.window = (self.window + self.add_step).min(self.max);
+            }
+        }
+        self.window
+    }
+    fn name(&self) -> &'static str {
+        "aimd"
+    }
+}
+
+/// The regulator: tracks in-flight bytes against the policy window.
+#[derive(Debug)]
+pub struct Regulator {
+    policy: Box<dyn AdmissionPolicy>,
+    in_flight: u64,
+    feedback: Feedback,
+    pub admitted: u64,
+    pub blocked_checks: u64,
+    pub peak_in_flight: u64,
+}
+
+impl Regulator {
+    pub fn new(policy: Box<dyn AdmissionPolicy>) -> Self {
+        Self {
+            policy,
+            in_flight: 0,
+            feedback: Feedback::default(),
+            admitted: 0,
+            blocked_checks: 0,
+            peak_in_flight: 0,
+        }
+    }
+
+    pub fn unlimited() -> Self {
+        Self::new(Box::new(Unlimited))
+    }
+
+    pub fn static_window(bytes: u64) -> Self {
+        Self::new(Box::new(StaticWindow(bytes)))
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Bytes that may still be admitted right now (merge-queue drains pass
+    /// this as the window argument so a closed window leaves requests
+    /// queued — where they can still merge).
+    pub fn available(&mut self, now_ns: u64) -> u64 {
+        let w = self.policy.window_bytes(now_ns, &self.feedback);
+        let avail = w.saturating_sub(self.in_flight);
+        if avail == 0 {
+            self.blocked_checks += 1;
+        }
+        avail
+    }
+
+    /// Record that `bytes` were posted to the NIC.
+    pub fn on_post(&mut self, bytes: u64) {
+        self.in_flight += bytes;
+        self.feedback.in_flight_bytes = self.in_flight;
+        self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
+        self.admitted += 1;
+    }
+
+    /// Record a completion: releases window and feeds RTT to the policy.
+    pub fn on_complete(&mut self, bytes: u64, rtt_ns: u64) {
+        debug_assert!(self.in_flight >= bytes, "window release underflow");
+        self.in_flight = self.in_flight.saturating_sub(bytes);
+        self.feedback.in_flight_bytes = self.in_flight;
+        self.feedback.last_completion_ns = rtt_ns;
+        self.feedback.rtt_ewma_ns = rtt_ns as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, cfg};
+
+    #[test]
+    fn unlimited_never_blocks() {
+        let mut r = Regulator::unlimited();
+        r.on_post(u32::MAX as u64);
+        assert_eq!(r.available(0), u64::MAX - u32::MAX as u64);
+    }
+
+    #[test]
+    fn static_window_enforced() {
+        let mut r = Regulator::static_window(7 << 20);
+        assert_eq!(r.available(0), 7 << 20);
+        r.on_post(6 << 20);
+        assert_eq!(r.available(0), 1 << 20);
+        r.on_post(1 << 20);
+        assert_eq!(r.available(0), 0);
+        assert_eq!(r.blocked_checks, 1);
+        r.on_complete(3 << 20, 10_000);
+        assert_eq!(r.available(0), 3 << 20);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut r = Regulator::static_window(10 << 20);
+        r.on_post(4 << 20);
+        r.on_post(2 << 20);
+        r.on_complete(4 << 20, 5_000);
+        r.on_post(1 << 20);
+        assert_eq!(r.peak_in_flight, 6 << 20);
+        assert_eq!(r.in_flight(), 3 << 20);
+    }
+
+    #[test]
+    fn aimd_grows_under_target_and_halves_over() {
+        let mut p = AimdWindow::new(1 << 20, 256 << 10, 16 << 20, 50_000);
+        let fb_fast = Feedback {
+            last_completion_ns: 10_000,
+            ..Default::default()
+        };
+        let w0 = p.window_bytes(0, &fb_fast);
+        let mut w = w0;
+        for t in 1..50u64 {
+            w = p.window_bytes(t * 1000, &fb_fast);
+        }
+        assert!(w > w0, "should grow: {w0} -> {w}");
+        // now saturate RTT far above target -> multiplicative decrease
+        let fb_slow = Feedback {
+            last_completion_ns: 5_000_000,
+            ..Default::default()
+        };
+        let mut w2 = w;
+        for t in 50..80u64 {
+            w2 = p.window_bytes(t * 1_000_000, &fb_slow);
+        }
+        assert!(w2 < w / 2 + 1, "should shrink: {w} -> {w2}");
+        assert!(w2 >= 256 << 10, "respects floor");
+    }
+
+    #[test]
+    fn aimd_respects_max() {
+        let mut p = AimdWindow::new(15 << 20, 1 << 20, 16 << 20, 1_000_000);
+        let fb = Feedback {
+            last_completion_ns: 1,
+            ..Default::default()
+        };
+        let mut w = 0;
+        for t in 0..100u64 {
+            w = p.window_bytes(t, &fb);
+        }
+        assert_eq!(w, 16 << 20);
+    }
+
+    /// Property: in-flight accounting never goes negative and equals
+    /// posted-minus-completed at every step.
+    #[test]
+    fn prop_inflight_accounting() {
+        prop::forall(cfg(0xAD0_11), |rng, size| {
+            let mut r = Regulator::static_window((1 + rng.gen_below(64)) << 20);
+            let mut outstanding: Vec<u64> = Vec::new();
+            let mut posted: u64 = 0;
+            let mut completed: u64 = 0;
+            for _ in 0..size * 4 {
+                if rng.gen_bool(0.6) || outstanding.is_empty() {
+                    let avail = r.available(0);
+                    if avail == 0 {
+                        continue;
+                    }
+                    let bytes = (1 + rng.gen_below(32)) * 4096;
+                    if bytes > avail {
+                        continue;
+                    }
+                    r.on_post(bytes);
+                    posted += bytes;
+                    outstanding.push(bytes);
+                } else {
+                    let i = rng.gen_below(outstanding.len() as u64) as usize;
+                    let bytes = outstanding.swap_remove(i);
+                    r.on_complete(bytes, 1000);
+                    completed += bytes;
+                }
+                if r.in_flight() != posted - completed {
+                    return Err(format!(
+                        "in_flight {} != posted-completed {}",
+                        r.in_flight(),
+                        posted - completed
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

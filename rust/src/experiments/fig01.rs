@@ -1,0 +1,102 @@
+//! Fig 1 — I/O thrashing on the NIC: FIO IOPS rises then *drops* as
+//! threads increase (1 QP, no admission control), while in-flight ops and
+//! RDMA completion time keep growing — the NIC, not the network, is the
+//! bottleneck.
+
+use crate::cli::Table;
+use crate::coordinator::polling::PollingMode;
+use crate::coordinator::StackConfig;
+use crate::fabric::sim::engine::StackEngine;
+use crate::fabric::sim::{Sim, SimReport};
+use crate::util::fmt;
+use crate::workloads::fio::FioDriver;
+use crate::workloads::DriverStats;
+
+use super::ExpCtx;
+
+pub const THREADS: [usize; 6] = [1, 2, 4, 7, 8, 16];
+
+pub fn run_one(ctx: &ExpCtx, threads: usize, qps: usize, window: Option<u64>) -> SimReport {
+    let stack = StackConfig::rdmabox(&ctx.fabric)
+        .with_qps(qps)
+        .with_window(window)
+        .with_polling(PollingMode::Adaptive {
+            batch: 16,
+            max_retry: 120,
+        });
+    let mut sim = Sim::new(ctx.fabric.clone(), stack.clone(), 1);
+    sim.attach_engine(Box::new(StackEngine::new(&ctx.fabric, &stack)));
+    let stats = DriverStats::shared();
+    sim.attach_driver(Box::new(FioDriver::new(
+        threads,
+        2, // FIO with modest per-thread depth: threads are the pressure axis
+        4096,
+        50,
+        1 << 30,
+        1,
+        ctx.ops(64_000),
+        42,
+        stats,
+    )));
+    sim.run(u64::MAX / 2)
+}
+
+pub fn run(ctx: &ExpCtx) -> String {
+    let mut t = Table::new("Fig 1 — FIO on remote block device, 1 QP, no admission control")
+        .headers(&[
+            "FIO threads",
+            "IOPS",
+            "mean in-flight ops",
+            "mean RDMA completion",
+            "WQE cache misses",
+        ]);
+    let mut iops = Vec::new();
+    for &threads in THREADS.iter() {
+        let r = run_one(ctx, threads, 1, None);
+        iops.push(r.iops());
+        let mean_lat = (r.read_lat.mean() + r.write_lat.mean()) / 2.0;
+        t.row(&[
+            threads.to_string(),
+            format!("{:.0}", r.iops()),
+            format!("{:.1}", r.mean_inflight_ops),
+            fmt::dur_ns_f(mean_lat),
+            fmt::count(r.trace.wqe_cache_misses),
+        ]);
+    }
+    let peak = iops.iter().cloned().fold(0.0f64, f64::max);
+    let peak_at = THREADS[iops.iter().position(|&x| x == peak).unwrap()];
+    let last = *iops.last().unwrap();
+    t.note(&format!(
+        "paper: IOPS peaks around 4 threads then declines; measured peak at {} threads, {}-thread IOPS is {:.0}% of peak",
+        peak_at,
+        THREADS.last().unwrap(),
+        last / peak * 100.0
+    ));
+    t.note("in-flight ops and completion time keep rising past the peak -> NIC bottleneck (paper Fig 1b/1c)");
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_shape_holds() {
+        let ctx = ExpCtx::quick();
+        let out = run(&ctx);
+        assert!(out.contains("FIO threads"));
+        // shape: the 16-thread point is below peak
+        let r4 = run_one(&ctx, 4, 1, None);
+        let r16 = run_one(&ctx, 16, 1, None);
+        assert!(
+            r16.iops() < r4.iops(),
+            "decline: 16t {} vs 4t {}",
+            r16.iops(),
+            r4.iops()
+        );
+        // and in-flight keeps growing (Fig 1b)
+        assert!(r16.mean_inflight_ops > r4.mean_inflight_ops);
+        // and completion time keeps growing (Fig 1c)
+        assert!(r16.write_lat.mean() > r4.write_lat.mean());
+    }
+}

@@ -1,0 +1,180 @@
+//! Fig 6 / Fig 7 — comparison of batching approaches on VoltDB with YCSB
+//! ETC and SYS (Zipfian): Single/Batch × preMR/dynMR, Doorbell, Hybrid.
+//! Hybrid (Batching-on-MR + doorbell, dynMR) wins throughput (Fig 6) and
+//! has the shortest 99th-percentile tail (Fig 7).
+
+use crate::cli::Table;
+use crate::coordinator::batching::BatchMode;
+use crate::coordinator::mr_strategy::MrMode;
+use crate::coordinator::StackConfig;
+use crate::fabric::sim::SimReport;
+use crate::util::fmt;
+use crate::workloads::kv::{run_kv, voltdb, KvConfig, Mix};
+use crate::workloads::DriverStats;
+
+use super::ExpCtx;
+
+/// The six design points of Fig 6, in paper order.
+pub fn variants(ctx: &ExpCtx) -> Vec<StackConfig> {
+    let base = StackConfig::rdmabox(&ctx.fabric);
+    vec![
+        base.clone()
+            .with_batch(BatchMode::Single)
+            .with_mr(MrMode::PreMr)
+            .with_name("Single preMR"),
+        base.clone()
+            .with_batch(BatchMode::Single)
+            .with_mr(MrMode::DynMr)
+            .with_name("Single dynMR"),
+        base.clone()
+            .with_batch(BatchMode::BatchOnMr)
+            .with_mr(MrMode::PreMr)
+            .with_name("Batch preMR"),
+        base.clone()
+            .with_batch(BatchMode::BatchOnMr)
+            .with_mr(MrMode::DynMr)
+            .with_name("Batch dynMR"),
+        base.clone()
+            .with_batch(BatchMode::Doorbell)
+            .with_mr(MrMode::DynMr)
+            .with_name("Door dynMR"),
+        base.with_batch(BatchMode::Hybrid)
+            .with_mr(MrMode::DynMr)
+            .with_name("Hybrid dynMR"),
+    ]
+}
+
+pub fn kv_cfg(ctx: &ExpCtx, mix: Mix) -> KvConfig {
+    KvConfig {
+        ops: ctx.ops(80_000),
+        ..KvConfig::small(voltdb(), mix)
+    }
+}
+
+pub fn run_all(ctx: &ExpCtx, mix: Mix) -> Vec<(String, SimReport, DriverStats)> {
+    variants(ctx)
+        .into_iter()
+        .map(|stack| {
+            let (r, s) = run_kv(&ctx.fabric, &stack, kv_cfg(ctx, mix));
+            (stack.name, r, s)
+        })
+        .collect()
+}
+
+pub fn run(ctx: &ExpCtx) -> String {
+    let mut out = String::new();
+    for mix in [Mix::Etc, Mix::Sys] {
+        let rows = run_all(ctx, mix);
+        let base_tp = rows[0].2.throughput();
+        let mut t = Table::new(&format!(
+            "Fig 6{} — batching approaches, VoltDB {} (Zipfian)",
+            if mix == Mix::Etc { "a" } else { "b" },
+            mix.label()
+        ))
+        .headers(&["approach", "throughput", "vs Single preMR", "RDMA I/Os (WQEs)", "MMIOs"]);
+        for (name, r, s) in &rows {
+            t.row(&[
+                name.clone(),
+                fmt::ops(s.throughput()),
+                format!("{:+.1}%", (s.throughput() / base_tp - 1.0) * 100.0),
+                fmt::count(r.trace.wqes_total()),
+                fmt::count(r.trace.mmios),
+            ]);
+        }
+        let hybrid = rows.last().unwrap().2.throughput();
+        t.note(&format!(
+            "paper: Hybrid +22.2–47.7% over Single preMR -> measured {:+.1}%",
+            (hybrid / base_tp - 1.0) * 100.0
+        ));
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Fig 7 — 99th-percentile application tail latency for the same runs.
+pub fn run_fig7(ctx: &ExpCtx) -> String {
+    let mut out = String::new();
+    for mix in [Mix::Etc, Mix::Sys] {
+        let rows = run_all(ctx, mix);
+        let mut t = Table::new(&format!(
+            "Fig 7 — 99th percentile app latency, VoltDB {}",
+            mix.label()
+        ))
+        .headers(&["approach", "p50", "p99", "mean"]);
+        for (name, _, s) in &rows {
+            t.row(&[
+                name.clone(),
+                fmt::dur_ns(s.op_lat.p50()),
+                fmt::dur_ns(s.op_lat.p99()),
+                fmt::dur_ns_f(s.op_lat.mean()),
+            ]);
+        }
+        let single_pre = rows[0].2.op_lat.p99();
+        let hybrid = rows.last().unwrap().2.op_lat.p99();
+        t.note(&format!(
+            "paper: batching does not hurt tail latency; hybrid shortest -> measured hybrid p99 = {:.0}% of Single preMR",
+            hybrid as f64 / single_pre as f64 * 100.0
+        ));
+        out.push_str(&t.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(ctx: &mut ExpCtx) {
+        ctx.quick = true;
+    }
+
+    #[test]
+    fn hybrid_wins_throughput_and_reduces_wqes() {
+        let mut ctx = ExpCtx::quick();
+        tiny(&mut ctx);
+        let rows = run_all(&ctx, Mix::Sys);
+        let single_pre = &rows[0];
+        let doorbell = &rows[4];
+        let hybrid = rows.last().unwrap();
+        // paper: hybrid +22-48% over single, +7.5-22% over doorbell
+        assert!(
+            hybrid.2.throughput() > single_pre.2.throughput() * 1.02,
+            "hybrid {} vs single {}",
+            hybrid.2.throughput(),
+            single_pre.2.throughput()
+        );
+        assert!(
+            hybrid.2.throughput() > doorbell.2.throughput(),
+            "hybrid {} vs doorbell {}",
+            hybrid.2.throughput(),
+            doorbell.2.throughput()
+        );
+        assert!(hybrid.1.trace.wqes_total() < single_pre.1.trace.wqes_total());
+        // doorbell does NOT reduce WQEs vs single (paper's core point)
+        let single_dyn = &rows[1];
+        let doorbell = &rows[4];
+        let ratio =
+            doorbell.1.trace.wqes_total() as f64 / single_dyn.1.trace.wqes_total() as f64;
+        assert!(
+            (0.9..=1.1).contains(&ratio),
+            "doorbell wqes ≈ single wqes, ratio {ratio}"
+        );
+        // but doorbell DOES reduce MMIOs
+        assert!(doorbell.1.trace.mmios < single_dyn.1.trace.mmios);
+    }
+
+    #[test]
+    fn fig7_hybrid_tail_not_worse() {
+        let mut ctx = ExpCtx::quick();
+        tiny(&mut ctx);
+        let rows = run_all(&ctx, Mix::Etc);
+        let single_pre_p99 = rows[0].2.op_lat.p99();
+        let hybrid_p99 = rows.last().unwrap().2.op_lat.p99();
+        assert!(
+            hybrid_p99 <= single_pre_p99 * 12 / 10,
+            "hybrid p99 {} should not blow up vs single {}",
+            hybrid_p99,
+            single_pre_p99
+        );
+    }
+}

@@ -1,0 +1,175 @@
+//! Fig 8 — RDMA-level admission control. Methodology follows the paper:
+//! run the Fig 1 FIO sweep with multi-QP (4), find the peak, measure the
+//! in-flight bytes there, then use that as the regulator window — IOPS
+//! keeps rising past the old knee (+~30%) and in-flight bytes stabilize.
+
+use crate::cli::Table;
+use crate::util::fmt;
+
+use super::fig01::run_one;
+use super::ExpCtx;
+
+pub const THREADS: [usize; 6] = [1, 2, 4, 7, 8, 16];
+
+pub fn run(ctx: &ExpCtx) -> String {
+    // pass 1: no admission control, 4 QPs
+    let mut no_ac = Vec::new();
+    for &th in THREADS.iter() {
+        let r = run_one(ctx, th, 4, None);
+        no_ac.push((th, r));
+    }
+    let peak_idx = no_ac
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1 .1.iops().partial_cmp(&b.1 .1.iops()).unwrap())
+        .unwrap()
+        .0;
+    // window := mean in-flight bytes at the knee (paper: ~7 MB)
+    let window = (no_ac[peak_idx].1.mean_inflight_bytes as u64).max(64 * 1024);
+
+    // pass 2: with the measured window
+    let mut with_ac = Vec::new();
+    for &th in THREADS.iter() {
+        let r = run_one(ctx, th, 4, Some(window));
+        with_ac.push((th, r));
+    }
+
+    let mut t = Table::new("Fig 8 — FIO with and without admission control (4 QPs)").headers(&[
+        "threads",
+        "IOPS (no AC)",
+        "in-flight (no AC)",
+        "IOPS (AC)",
+        "in-flight (AC)",
+    ]);
+    for i in 0..THREADS.len() {
+        t.row(&[
+            THREADS[i].to_string(),
+            format!("{:.0}", no_ac[i].1.iops()),
+            fmt::bytes_f(no_ac[i].1.mean_inflight_bytes),
+            format!("{:.0}", with_ac[i].1.iops()),
+            fmt::bytes_f(with_ac[i].1.mean_inflight_bytes),
+        ]);
+    }
+    let heavy_no = no_ac.last().unwrap().1.iops();
+    let heavy_ac = with_ac.last().unwrap().1.iops();
+    t.note(&format!(
+        "window set to measured in-flight at the knee: {}",
+        fmt::bytes(window)
+    ));
+    t.note(&format!(
+        "paper: +29.9% IOPS under heavy load with the regulator -> measured {:+.1}% at {} threads",
+        (heavy_ac / heavy_no - 1.0) * 100.0,
+        THREADS.last().unwrap()
+    ));
+    t.note("with AC, in-flight bytes stabilize at the window instead of growing with threads");
+    t.render()
+}
+
+/// Ablation for the paper's §5.1 extension hook ("RDMAbox also provides a
+/// hook to implement custom admission control policy"): no regulator vs
+/// the prototype's static window vs an AIMD controller on completion RTT
+/// implemented through the same `AdmissionPolicy` trait.
+pub fn run_ablation(ctx: &ExpCtx) -> String {
+    use crate::coordinator::regulator::{AimdWindow, Regulator};
+    use crate::coordinator::StackConfig;
+    use crate::fabric::sim::engine::StackEngine;
+    use crate::fabric::sim::Sim;
+    use crate::workloads::fio::FioDriver;
+    use crate::workloads::DriverStats;
+
+    let threads = 16;
+    let run = |reg: Option<Regulator>| {
+        let stack = StackConfig::rdmabox(&ctx.fabric)
+            .with_qps(4)
+            .with_window(None);
+        let mut sim = Sim::new(ctx.fabric.clone(), stack.clone(), 1);
+        let mut eng = StackEngine::new(&ctx.fabric, &stack);
+        if let Some(r) = reg {
+            eng.set_regulator(r);
+        }
+        sim.attach_engine(Box::new(eng));
+        let stats = DriverStats::shared();
+        sim.attach_driver(Box::new(FioDriver::new(
+            threads,
+            2,
+            4096,
+            50,
+            1 << 30,
+            1,
+            ctx.ops(64_000),
+            42,
+            stats,
+        )));
+        sim.run(u64::MAX / 2)
+    };
+
+    let none = run(None);
+    let knee = run_one(ctx, 8, 4, None);
+    let window = (knee.mean_inflight_bytes as u64).max(16 * 4096);
+    let stat = run(Some(Regulator::static_window(window)));
+    // target RTT = healthy completion time at the knee (no-thrash regime)
+    let target_rtt = (knee.read_lat.mean() as u64).max(10_000);
+    let aimd = run(Some(Regulator::new(Box::new(AimdWindow::new(
+        window,
+        16 * 4096,
+        4 << 20,
+        target_rtt,
+    )))));
+
+    let mut t = Table::new("Ablation — admission-control policy hook (FIO, 16 threads, 4 QPs)")
+        .headers(&["policy", "IOPS", "mean in-flight", "WQE cache misses"]);
+    for (name, r) in [("none", &none), ("static (paper)", &stat), ("AIMD (hook)", &aimd)] {
+        t.row(&[
+            name.to_string(),
+            format!("{:.0}", r.iops()),
+            fmt::bytes_f(r.mean_inflight_bytes),
+            fmt::count(r.trace.wqe_cache_misses),
+        ]);
+    }
+    t.note("the AIMD controller is implemented purely through the AdmissionPolicy trait — the paper's proposed congestion-control hook");
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_control_improves_heavy_load() {
+        let ctx = ExpCtx::quick();
+        let no_ac = run_one(&ctx, 16, 4, None);
+        // window from the 7-thread knee, as the harness does
+        let knee = run_one(&ctx, 7, 4, None);
+        let window = (knee.mean_inflight_bytes as u64).max(64 * 1024);
+        let ac = run_one(&ctx, 16, 4, Some(window));
+        assert!(
+            ac.iops() > no_ac.iops(),
+            "AC should help at 16 threads: {} vs {}",
+            ac.iops(),
+            no_ac.iops()
+        );
+        assert!(ac.peak_inflight_bytes <= window);
+    }
+
+    #[test]
+    fn ablation_policies_all_complete_and_regulate() {
+        let ctx = ExpCtx::quick();
+        let out = run_ablation(&ctx);
+        assert!(out.contains("AIMD"));
+        assert!(out.contains("static"));
+    }
+
+    #[test]
+    fn multiqp_beats_single_qp_at_peak() {
+        // §6.1: multi-QP improves peak IOPS by engaging more NIC PUs
+        let ctx = ExpCtx::quick();
+        let q1 = run_one(&ctx, 4, 1, None);
+        let q4 = run_one(&ctx, 8, 4, None);
+        assert!(
+            q4.iops() > q1.iops(),
+            "4QP {} should beat 1QP {}",
+            q4.iops(),
+            q1.iops()
+        );
+    }
+}

@@ -1,0 +1,141 @@
+//! Fig 9 — scalability of WC-handling approaches with peer count (VoltDB
+//! SYS, single I/O + preMR, 1 QP per peer): Busy wins at few peers then
+//! collapses under its own CPU burn; Event stays flat; SCQ(1) sits between
+//! them; Adaptive matches the best at both ends.
+
+use crate::cli::Table;
+use crate::coordinator::batching::BatchMode;
+use crate::coordinator::mr_strategy::MrMode;
+use crate::coordinator::polling::PollingMode;
+use crate::coordinator::StackConfig;
+use crate::fabric::sim::SimReport;
+use crate::workloads::kv::{run_kv, AppProfile, KvConfig, Mix};
+use crate::workloads::DriverStats;
+
+use super::ExpCtx;
+
+pub const PEERS: [usize; 5] = [1, 2, 4, 8, 16];
+
+pub fn approaches() -> Vec<(&'static str, PollingMode)> {
+    vec![
+        ("Event", PollingMode::Event),
+        ("EventBatch", PollingMode::EventBatch { budget: 16 }),
+        ("Busy", PollingMode::Busy),
+        ("SCQ(1)", PollingMode::Scq { m: 1, pollers: 1 }),
+        ("SCQ(2)", PollingMode::Scq { m: 2, pollers: 1 }),
+        (
+            "AdaptivePoll",
+            PollingMode::Adaptive {
+                batch: 16,
+                max_retry: 120,
+            },
+        ),
+    ]
+}
+
+pub fn run_one(ctx: &ExpCtx, polling: PollingMode, peers: usize) -> (SimReport, DriverStats) {
+    // paper setting: single I/O with preMR, 1 channel per remote node
+    let stack = StackConfig::rdmabox(&ctx.fabric)
+        .with_batch(BatchMode::Single)
+        .with_mr(MrMode::PreMr)
+        .with_qps(1)
+        // single-I/O at page granularity: the regulator is set to the NIC's
+        // WQE capability so the polling comparison is not confounded by
+        // WQE-cache thrash (§6.2 isolates completion handling)
+        .with_window(Some(16 * 4096))
+        .with_polling(polling);
+    // §6.2 uses "the CPU-intensive VoltDB": SQL transaction work dominates
+    // each op, with paging as the tail — so poller CPU burn (Fig 9b) and
+    // completion-handling latency both show up in app throughput (Fig 9a).
+    let profile = AppProfile {
+        name: "VoltDB",
+        record_bytes: 1024,
+        cpu_per_op_ns: 40_000,
+        second_page_prob: 0.15,
+        uniform_touch_prob: 0.25,
+    };
+    let kv = KvConfig {
+        nodes: peers,
+        replicas: 2.min(peers),
+        ops: ctx.ops(48_000),
+        // core-hungry: with 28 runnable app threads, every core a poller
+        // burns is a core the application loses
+        threads: 28,
+        resident_frac: 0.5,
+        ..KvConfig::small(profile, Mix::Sys)
+    };
+    run_kv(&ctx.fabric, &stack, kv)
+}
+
+pub fn run(ctx: &ExpCtx) -> String {
+    let mut t = Table::new("Fig 9a — throughput (Kops/s) vs number of peer nodes (VoltDB SYS)")
+        .headers(&["approach", "1", "2", "4", "8", "16"]);
+    let mut tc = Table::new("Fig 9b — poller CPU (cores) vs number of peer nodes")
+        .headers(&["approach", "1", "2", "4", "8", "16"]);
+    let mut results: Vec<(&str, Vec<(SimReport, DriverStats)>)> = Vec::new();
+    for (name, polling) in approaches() {
+        let runs: Vec<_> = PEERS.iter().map(|&p| run_one(ctx, polling, p)).collect();
+        let tp_row: Vec<String> = std::iter::once(name.to_string())
+            .chain(runs.iter().map(|(_, s)| format!("{:.1}", s.throughput() / 1e3)))
+            .collect();
+        let cpu_row: Vec<String> = std::iter::once(name.to_string())
+            .chain(runs.iter().map(|(r, _)| format!("{:.2}", r.poller_cpu_cores())))
+            .collect();
+        t.row(&tp_row);
+        tc.row(&cpu_row);
+        results.push((name, runs));
+    }
+    let find = |n: &str| &results.iter().find(|(x, _)| *x == n).unwrap().1;
+    let busy = find("Busy");
+    let event = find("Event");
+    let adaptive = find("AdaptivePoll");
+    let scq1 = find("SCQ(1)");
+    t.note(&format!(
+        "paper: Busy best at ≤4 peers, collapses at many peers -> measured busy/adaptive at 16 peers: {:.2}",
+        busy[4].1.throughput() / adaptive[4].1.throughput()
+    ));
+    t.note(&format!(
+        "paper: Event beats SCQ(1) at ≥8 peers (parallel CQs) -> measured event/scq1 at 16 peers: {:.2}",
+        event[4].1.throughput() / scq1[4].1.throughput()
+    ));
+    tc.note("busy-poller CPU grows linearly with peers; event/adaptive stay near zero");
+    format!("{}{}", t.render(), tc.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_crossovers() {
+        let ctx = ExpCtx::quick();
+        // busy CPU grows with peers, adaptive stays low
+        let (busy_16, _) = run_one(&ctx, PollingMode::Busy, 16);
+        let (adapt_16, s_adapt) = run_one(
+            &ctx,
+            PollingMode::Adaptive {
+                batch: 16,
+                max_retry: 120,
+            },
+            16,
+        );
+        // under saturated load adaptive legitimately keeps spinning (that
+        // is its design); busy still burns meaningfully more because it
+        // spins on *idle* CQs too
+        assert!(
+            busy_16.poller_cpu_cores() > 1.4 * adapt_16.poller_cpu_cores(),
+            "busy {} vs adaptive {} cores",
+            busy_16.poller_cpu_cores(),
+            adapt_16.poller_cpu_cores()
+        );
+        // adaptive throughput at scale at least matches busy (whose CPU
+        // burn steals app cores)
+        let (_, s_busy) = run_one(&ctx, PollingMode::Busy, 16);
+        assert!(
+            s_adapt.throughput() >= s_busy.throughput() * 0.95,
+            "adaptive {} vs busy {}",
+            s_adapt.throughput(),
+            s_busy.throughput()
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! Fig 10 — number of busy-polling threads on M shared CQs vs throughput:
+//! a second polling thread helps slightly on SCQ(1); beyond that the CPU
+//! overhead dominates, regardless of M.
+
+use crate::cli::Table;
+use crate::coordinator::polling::PollingMode;
+
+use super::fig09::run_one;
+use super::ExpCtx;
+
+pub const POLLERS: [u32; 4] = [1, 2, 4, 8];
+pub const M: [u32; 3] = [1, 2, 4];
+
+pub fn run(ctx: &ExpCtx) -> String {
+    let peers = 8;
+    let mut t = Table::new(&format!(
+        "Fig 10 — throughput (Kops/s) vs #busy pollers on SCQ(M), {} peers",
+        peers
+    ))
+    .headers(&["config", "1 poller", "2 pollers", "4 pollers", "8 pollers"]);
+    let mut by_m = Vec::new();
+    for &m in M.iter() {
+        let mut row = vec![format!("SCQ({m})")];
+        let mut tps = Vec::new();
+        for &p in POLLERS.iter() {
+            let (_, s) = run_one(ctx, PollingMode::Scq { m, pollers: p }, peers);
+            tps.push(s.throughput());
+            row.push(format!("{:.1}", s.throughput() / 1e3));
+        }
+        t.row(&row);
+        by_m.push(tps);
+    }
+    let scq1 = &by_m[0];
+    t.note(&format!(
+        "paper: CPU overhead dominates past ~2-4 pollers -> measured SCQ(1) 8-poller/1-poller ratio: {:.2}",
+        scq1[3] / scq1[0]
+    ));
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn many_pollers_hurt() {
+        let ctx = ExpCtx::quick();
+        let (_, s1) = run_one(&ctx, PollingMode::Scq { m: 1, pollers: 1 }, 8);
+        let (_, s8) = run_one(&ctx, PollingMode::Scq { m: 1, pollers: 8 }, 8);
+        assert!(
+            s8.throughput() < s1.throughput() * 1.05,
+            "8 pollers {} should not beat 1 poller {} meaningfully",
+            s8.throughput(),
+            s1.throughput()
+        );
+    }
+}

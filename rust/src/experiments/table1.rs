@@ -1,0 +1,63 @@
+//! Table 1 — total number of RDMA I/Os (WQEs) to the NIC, VoltDB ETC.
+//! Batching-on-MR reduces both reads and writes (paper: RD 13.2M→11M,
+//! WR 308K→272K); doorbell-only matches Single (it chains, it does not
+//! merge); Hybrid matches Batch.
+
+use crate::cli::Table;
+use crate::util::fmt;
+use crate::workloads::kv::Mix;
+
+use super::fig06;
+use super::ExpCtx;
+
+pub fn run(ctx: &ExpCtx) -> String {
+    let rows = fig06::run_all(ctx, Mix::Etc);
+    let mut t = Table::new("Table 1 — total RDMA I/O to NIC (VoltDB ETC)").headers(&[
+        "approach", "RD WQEs", "WR WQEs", "RD vs single", "WR vs single",
+    ]);
+    let base_rd = rows[0].1.trace.wqes_read.max(1);
+    let base_wr = rows[0].1.trace.wqes_write.max(1);
+    for (name, r, _) in &rows {
+        t.row(&[
+            name.clone(),
+            fmt::count(r.trace.wqes_read),
+            fmt::count(r.trace.wqes_write),
+            format!("{:.2}x", r.trace.wqes_read as f64 / base_rd as f64),
+            format!("{:.2}x", r.trace.wqes_write as f64 / base_wr as f64),
+        ]);
+    }
+    let batch_dyn = &rows[3].1;
+    let door = &rows[4].1;
+    t.note(&format!(
+        "paper: Batch dynMR RD = 11M/13.2M = 0.83x of Single -> measured {:.2}x",
+        batch_dyn.trace.wqes_read as f64 / base_rd as f64
+    ));
+    t.note(&format!(
+        "paper: Doorbell RD ≈ Single (no WQE reduction) -> measured {:.2}x",
+        door.trace.wqes_read as f64 / base_rd as f64
+    ));
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_ratios_match_paper_direction() {
+        let ctx = ExpCtx::quick();
+        let rows = fig06::run_all(&ctx, Mix::Etc);
+        let single = &rows[1].1; // Single dynMR
+        let batch = &rows[3].1; // Batch dynMR
+        let door = &rows[4].1; // Doorbell dynMR
+        let hybrid = &rows[5].1;
+        // batching reduces RDMA I/Os
+        assert!(batch.trace.wqes_total() < single.trace.wqes_total());
+        // doorbell does not (within 10%)
+        let dr = door.trace.wqes_total() as f64 / single.trace.wqes_total() as f64;
+        assert!((0.9..=1.1).contains(&dr), "doorbell ratio {dr}");
+        // hybrid ≈ batch (its doorbell part adds no WQEs)
+        let hr = hybrid.trace.wqes_total() as f64 / batch.trace.wqes_total() as f64;
+        assert!((0.8..=1.2).contains(&hr), "hybrid vs batch ratio {hr}");
+    }
+}

@@ -1,0 +1,430 @@
+//! Live loopback fabric: the node-level abstraction running on real
+//! threads with real memory. Remote nodes are server threads owning their
+//! donated buffers; "RDMA" verbs are memcpys through registered regions,
+//! with completions flowing back over channels. The same coordinator
+//! policy objects (merge queue, batch planner, admission regulator) run on
+//! this backend — this is what the `examples/` use, including the
+//! end-to-end ML training driver where the moved bytes feed real PJRT
+//! compute.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::batching::{plan, BatchLimits, BatchMode};
+use crate::coordinator::merge_queue::{MergeCheck, MergeQueues};
+use crate::coordinator::regulator::Regulator;
+use crate::fabric::{AppIo, Dir, NodeId};
+
+enum Req {
+    Write {
+        addr: u64,
+        data: Vec<u8>,
+        done: Sender<u64>,
+        /// emulate the two-sided receive path: staging copy before commit
+        server_copy: bool,
+    },
+    Read {
+        addr: u64,
+        len: u64,
+        done: Sender<Vec<u8>>,
+        server_copy: bool,
+    },
+    Shutdown,
+}
+
+/// One remote memory donor: a thread owning `capacity` bytes.
+struct RemoteNode {
+    tx: Sender<Req>,
+    handle: Option<JoinHandle<()>>,
+}
+
+fn node_thread(capacity: usize, rx: Receiver<Req>) {
+    let mut mem = vec![0u8; capacity];
+    let mut staging = vec![0u8; 1 << 20];
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Write {
+                addr,
+                data,
+                done,
+                server_copy,
+            } => {
+                let a = addr as usize;
+                if server_copy {
+                    // two-sided designs land in a bounce buffer first
+                    let n = data.len().min(staging.len());
+                    staging[..n].copy_from_slice(&data[..n]);
+                }
+                mem[a..a + data.len()].copy_from_slice(&data);
+                let _ = done.send(data.len() as u64);
+            }
+            Req::Read {
+                addr,
+                len,
+                done,
+                server_copy,
+            } => {
+                let a = addr as usize;
+                let l = len as usize;
+                if server_copy {
+                    let n = l.min(staging.len());
+                    staging[..n].copy_from_slice(&mem[a..a + n]);
+                }
+                let _ = done.send(mem[a..a + l].to_vec());
+            }
+            Req::Shutdown => break,
+        }
+    }
+}
+
+/// Cluster of loopback memory donors.
+pub struct LoopbackFabric {
+    nodes: Vec<RemoteNode>,
+    pub capacity_per_node: usize,
+}
+
+impl LoopbackFabric {
+    pub fn start(nodes: usize, capacity_per_node: usize) -> Self {
+        let nodes = (0..nodes)
+            .map(|_| {
+                let (tx, rx) = channel();
+                let handle = std::thread::spawn(move || node_thread(capacity_per_node, rx));
+                RemoteNode {
+                    tx,
+                    handle: Some(handle),
+                }
+            })
+            .collect();
+        Self {
+            nodes,
+            capacity_per_node,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn write(&self, node: NodeId, addr: u64, data: Vec<u8>, server_copy: bool) -> Receiver<u64> {
+        let (done, rx) = channel();
+        self.nodes[node]
+            .tx
+            .send(Req::Write {
+                addr,
+                data,
+                done,
+                server_copy,
+            })
+            .expect("node alive");
+        rx
+    }
+
+    fn read(&self, node: NodeId, addr: u64, len: u64, server_copy: bool) -> Receiver<Vec<u8>> {
+        let (done, rx) = channel();
+        self.nodes[node]
+            .tx
+            .send(Req::Read {
+                addr,
+                len,
+                done,
+                server_copy,
+            })
+            .expect("node alive");
+        rx
+    }
+}
+
+impl Drop for LoopbackFabric {
+    fn drop(&mut self) {
+        for n in &self.nodes {
+            let _ = n.tx.send(Req::Shutdown);
+        }
+        for n in &mut self.nodes {
+            if let Some(h) = n.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Live statistics of the loopback coordinator.
+#[derive(Debug, Default, Clone)]
+pub struct LiveStats {
+    pub posts: u64,
+    pub wqes: u64,
+    pub merged_ios: u64,
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+    pub admission_waits: u64,
+}
+
+/// The live RDMAbox client: merge queue + batch planner + admission window
+/// over the loopback fabric. Thread-safe; multiple app threads share it
+/// (that is the point of the single merge queue).
+pub struct LiveBox {
+    fabric: LoopbackFabric,
+    queues: Mutex<MergeQueues>,
+    regulator: Mutex<Regulator>,
+    batch: BatchMode,
+    limits: BatchLimits,
+    two_sided: bool,
+    next_id: Mutex<u64>,
+    /// True while some thread is inside the merge+post section; concurrent
+    /// writers enqueue and let that thread carry their requests (the
+    /// "earliest arriving thread" protocol of §5.1).
+    posting: Mutex<bool>,
+    stats: Mutex<LiveStats>,
+    /// Pending write payloads keyed by app io id.
+    payloads: Mutex<HashMap<u64, Vec<u8>>>,
+}
+
+impl LiveBox {
+    pub fn new(
+        fabric: LoopbackFabric,
+        batch: BatchMode,
+        window_bytes: Option<u64>,
+    ) -> Arc<Self> {
+        let regulator = match window_bytes {
+            Some(w) => Regulator::static_window(w),
+            None => Regulator::unlimited(),
+        };
+        Arc::new(Self {
+            fabric,
+            queues: Mutex::new(MergeQueues::new()),
+            regulator: Mutex::new(regulator),
+            batch,
+            limits: BatchLimits::default(),
+            two_sided: false,
+            next_id: Mutex::new(1),
+            posting: Mutex::new(false),
+            stats: Mutex::new(LiveStats::default()),
+            payloads: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn stats(&self) -> LiveStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.fabric.nodes()
+    }
+
+    fn fresh_id(&self) -> u64 {
+        let mut g = self.next_id.lock().unwrap();
+        let id = *g;
+        *g += 1;
+        id
+    }
+
+    /// Synchronous remote write through the full coordinator path:
+    /// enqueue → merge-check → plan → post. The calling thread performs
+    /// the drain it wins (load-aware batching), then waits for its own
+    /// I/O to be covered by a completed WR.
+    pub fn write(&self, node: NodeId, addr: u64, data: &[u8]) {
+        let id = self.fresh_id();
+        let len = data.len() as u64;
+        self.payloads.lock().unwrap().insert(id, data.to_vec());
+        let io = AppIo {
+            id,
+            dir: Dir::Write,
+            node,
+            addr,
+            len,
+            thread: 0,
+            t_submit: 0,
+        };
+        // enqueue, then merge-check immediately (paper §5.1 protocol)
+        {
+            let mut q = self.queues.lock().unwrap();
+            q.of(Dir::Write).push(io);
+        }
+        loop {
+            // a peer inside the post section will carry our request — wait
+            // for it to be consumed instead of racing for the drain
+            {
+                let mut gate = self.posting.lock().unwrap();
+                if *gate {
+                    drop(gate);
+                    if !self.payloads.lock().unwrap().contains_key(&id) {
+                        return; // carried and posted by the peer
+                    }
+                    std::thread::yield_now();
+                    continue;
+                }
+                *gate = true;
+            }
+            // we are the posting thread now: drain whatever stacked up
+            let window = {
+                let mut r = self.regulator.lock().unwrap();
+                r.available(0)
+            };
+            let drained = {
+                let mut q = self.queues.lock().unwrap();
+                match q.of(Dir::Write).merge_check(window) {
+                    MergeCheck::Drained(v) => Some(v),
+                    MergeCheck::Blocked => None,
+                    MergeCheck::TakenByPeer => Some(Vec::new()),
+                }
+            };
+            let done = match drained {
+                Some(v) if v.is_empty() => !self.payloads.lock().unwrap().contains_key(&id),
+                Some(v) => {
+                    let mine = v.iter().any(|x| x.id == id);
+                    self.post_writes(v);
+                    mine || !self.payloads.lock().unwrap().contains_key(&id)
+                }
+                None => {
+                    self.stats.lock().unwrap().admission_waits += 1;
+                    false
+                }
+            };
+            *self.posting.lock().unwrap() = false;
+            if done {
+                return;
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    fn post_writes(&self, ios: Vec<AppIo>) {
+        if ios.is_empty() {
+            return;
+        }
+        let mut wr_id = 0u64;
+        let (chains, pstats) = plan(self.batch, &self.limits, ios, &mut wr_id);
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.merged_ios += pstats.merged_ios;
+            s.posts += pstats.posts;
+            s.wqes += pstats.wqes;
+        }
+        for chain in chains {
+            for wr in chain.wrs {
+                // merged WRs carry app_ios already in remote-address order
+                // (the planner sorts runs by address), so concatenation
+                // reconstructs the contiguous payload
+                let mut data = Vec::with_capacity(wr.len as usize);
+                {
+                    let mut pl = self.payloads.lock().unwrap();
+                    for id in &wr.app_ios {
+                        data.extend_from_slice(&pl.remove(id).expect("payload"));
+                    }
+                }
+                {
+                    let mut r = self.regulator.lock().unwrap();
+                    r.on_post(wr.len);
+                }
+                let rx = self
+                    .fabric
+                    .write(chain.node, wr.remote_addr, data, self.two_sided);
+                let n = rx.recv().expect("write completion");
+                {
+                    let mut r = self.regulator.lock().unwrap();
+                    r.on_complete(wr.len, 0);
+                    let mut s = self.stats.lock().unwrap();
+                    s.bytes_written += n;
+                }
+            }
+        }
+    }
+
+    /// Synchronous remote read (page-in path: reads are latency-critical
+    /// and post immediately; merging applies to them under load through
+    /// the same mechanism, but the live API keeps reads simple).
+    pub fn read(&self, node: NodeId, addr: u64, len: u64) -> Vec<u8> {
+        {
+            let mut r = self.regulator.lock().unwrap();
+            while r.available(0) < len {
+                drop(r);
+                self.stats.lock().unwrap().admission_waits += 1;
+                std::thread::yield_now();
+                r = self.regulator.lock().unwrap();
+            }
+            r.on_post(len);
+        }
+        let rx = self.fabric.read(node, addr, len, self.two_sided);
+        let data = rx.recv().expect("read completion");
+        {
+            let mut r = self.regulator.lock().unwrap();
+            r.on_complete(len, 0);
+            let mut s = self.stats.lock().unwrap();
+            s.bytes_read += data.len() as u64;
+            s.wqes += 1;
+            s.posts += 1;
+        }
+        data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let fab = LoopbackFabric::start(2, 1 << 20);
+        let lb = LiveBox::new(fab, BatchMode::Hybrid, Some(1 << 20));
+        let data: Vec<u8> = (0..4096u32).map(|x| (x % 251) as u8).collect();
+        lb.write(1, 8192, &data);
+        let back = lb.read(1, 8192, 4096);
+        assert_eq!(back, data);
+        let s = lb.stats();
+        assert_eq!(s.bytes_written, 4096);
+        assert_eq!(s.bytes_read, 4096);
+    }
+
+    #[test]
+    fn distinct_nodes_are_isolated() {
+        let fab = LoopbackFabric::start(2, 1 << 20);
+        let lb = LiveBox::new(fab, BatchMode::Hybrid, None);
+        lb.write(0, 0, &[1u8; 64]);
+        lb.write(1, 0, &[2u8; 64]);
+        assert_eq!(lb.read(0, 0, 64), vec![1u8; 64]);
+        assert_eq!(lb.read(1, 0, 64), vec![2u8; 64]);
+    }
+
+    #[test]
+    fn concurrent_writers_merge_adjacent_pages() {
+        let fab = LoopbackFabric::start(1, 1 << 22);
+        let lb = LiveBox::new(fab, BatchMode::Hybrid, None);
+        let lb2 = lb.clone();
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let lb = lb2.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..32u64 {
+                    let page = t * 32 + i;
+                    let byte = (page % 251) as u8;
+                    lb.write(0, page * 4096, &vec![byte; 4096]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = lb.stats(); // snapshot before verification reads add wqes
+        // all 256 pages landed correctly
+        for page in 0..256u64 {
+            let b = lb.read(0, page * 4096, 4096);
+            assert_eq!(b[0], (page % 251) as u8, "page {page}");
+            assert_eq!(b[4095], (page % 251) as u8);
+        }
+        assert_eq!(s.bytes_written, 256 * 4096);
+        // writes never need more WQEs than I/Os (merging can only shrink)
+        assert!(s.wqes <= 256, "wqes {} should not exceed ios", s.wqes);
+    }
+
+    #[test]
+    fn admission_window_counts_waits_under_pressure() {
+        let fab = LoopbackFabric::start(1, 1 << 22);
+        let lb = LiveBox::new(fab, BatchMode::Single, Some(4096));
+        for i in 0..16u64 {
+            lb.write(0, i * 4096, &[7u8; 4096]);
+        }
+        // single-window synchronous writes never exceed the window
+        assert_eq!(lb.stats().bytes_written, 16 * 4096);
+    }
+}

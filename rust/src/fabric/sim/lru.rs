@@ -1,0 +1,129 @@
+//! Tiny LRU set used to model the NIC's on-board caches: WQE cache, QP
+//! context cache, and MPT (memory protection table) cache. Only membership
+//! and recency matter — a miss costs a PCIe fetch in the NIC model.
+
+use crate::util::fxhash::FxHashMap;
+
+#[derive(Debug)]
+pub struct LruSet {
+    cap: usize,
+    /// key -> tick of last access
+    map: FxHashMap<u64, u64>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl LruSet {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            map: FxHashMap::with_capacity_and_hasher(cap + 1, Default::default()),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Touch `key`; returns true on hit, false on miss (key inserted,
+    /// evicting the least-recently-used entry if over capacity).
+    pub fn touch(&mut self, key: u64) -> bool {
+        self.tick += 1;
+        let hit = self.map.insert(key, self.tick).is_some();
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            if self.map.len() > self.cap {
+                // O(n) eviction; caches are small (tens–thousands) and
+                // misses are rare on the hot path, so this stays cheap.
+                let (&victim, _) = self.map.iter().min_by_key(|(_, &t)| t).unwrap();
+                self.map.remove(&victim);
+            }
+        }
+        hit
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.misses as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_after_insert() {
+        let mut l = LruSet::new(4);
+        assert!(!l.touch(1)); // miss
+        assert!(l.touch(1)); // hit
+        assert_eq!(l.hits, 1);
+        assert_eq!(l.misses, 1);
+    }
+
+    #[test]
+    fn evicts_least_recent() {
+        let mut l = LruSet::new(2);
+        l.touch(1);
+        l.touch(2);
+        l.touch(1); // 1 most recent
+        l.touch(3); // evicts 2
+        assert!(l.contains(1));
+        assert!(!l.contains(2));
+        assert!(l.contains(3));
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn working_set_within_capacity_always_hits() {
+        let mut l = LruSet::new(8);
+        for k in 0..8u64 {
+            l.touch(k);
+        }
+        for round in 0..10 {
+            for k in 0..8u64 {
+                assert!(l.touch(k), "round {round} key {k}");
+            }
+        }
+        assert_eq!(l.miss_rate(), 8.0 / 88.0);
+    }
+
+    #[test]
+    fn working_set_over_capacity_thrashes() {
+        let mut l = LruSet::new(4);
+        // cyclic access over 8 keys with LRU cap 4 -> every access misses
+        for _ in 0..5 {
+            for k in 0..8u64 {
+                l.touch(k);
+            }
+        }
+        assert_eq!(l.hits, 0);
+    }
+
+    #[test]
+    fn zero_capacity_clamped() {
+        let mut l = LruSet::new(0);
+        l.touch(1);
+        assert_eq!(l.len(), 1); // clamped to 1
+        l.touch(2);
+        assert_eq!(l.len(), 1);
+    }
+}

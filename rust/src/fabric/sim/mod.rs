@@ -1,0 +1,1213 @@
+//! Discrete-event simulator of the full RDMA path.
+//!
+//! One virtual-time world containing: the client host (app threads driven
+//! by a [`Driver`], the coordinator stack driven by an [`Engine`], polling
+//! threads), the client NIC (processing units, WQE/QP/MPT caches, PCIe),
+//! the wire, and the remote nodes (PCIe + CPU for two-sided designs).
+//!
+//! Every effect the paper measures is a queueing/caching effect, so the
+//! simulator models *resources* (PU service, PCIe and link bandwidth,
+//! remote CPU, poller threads) with explicit next-free times and LRU
+//! caches, and charges CPU costs (MMIO, memcpy, registration, interrupts,
+//! context switches, poll calls) from the calibrated
+//! [`FabricConfig`](crate::config::FabricConfig) cost model.
+//!
+//! Design: handlers are synchronous state-machine steps; pollers simulate
+//! idle spinning in O(1) events (an idle busy-poller parks with a resume
+//! deadline instead of generating one event per `poll_cq` call).
+
+pub mod engine;
+pub mod lru;
+pub mod trace;
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::util::fxhash::FxHashMap;
+
+use crate::config::FabricConfig;
+use crate::coordinator::channel::ChannelMap;
+use crate::coordinator::polling::{PollStep, PollerFsm, PollingMode};
+use crate::coordinator::StackConfig;
+use crate::fabric::{AppIo, CqId, Dir, NodeId, QpId, Wc, WcStatus, WorkRequest};
+use crate::util::hist::Hist;
+use lru::LruSet;
+use trace::Trace;
+
+/// The coordinator stack under test: turns app I/Os into posted chains and
+/// handles completions. RDMAbox and every baseline are instances of
+/// [`engine::StackEngine`] with different [`StackConfig`]s.
+pub trait Engine {
+    fn name(&self) -> &str;
+    /// App submitted `io` at `io.t_submit`; post (or queue) it. Returns the
+    /// CPU nanoseconds spent on the submit path (MR staging + MMIO).
+    fn submit(&mut self, sim: &mut Sim, io: AppIo) -> u64;
+    /// A WC is being handled in a poller context whose clock is `cursor`.
+    fn on_wc(&mut self, sim: &mut Sim, wc: &Wc, cursor: u64) -> WcOutcome;
+    /// A previously requested merge-queue drain fired (see
+    /// [`Sim::schedule_engine_kick`]). The earliest-arriving thread runs
+    /// the merge-check here — this is where cross-thread batching happens.
+    fn on_kick(&mut self, _sim: &mut Sim, _dir: Dir) {}
+}
+
+/// Result of handling one WC.
+pub struct WcOutcome {
+    /// Application I/Os that completed.
+    pub completed: Vec<u64>,
+    /// CPU charged to the poller for this completion (dereg / copy-out /
+    /// re-drains of the merge queue).
+    pub handler_cpu_ns: u64,
+}
+
+/// The application model: generates I/O and reacts to completions/timers.
+pub trait Driver {
+    fn on_start(&mut self, sim: &mut Sim);
+    fn on_io_done(&mut self, sim: &mut Sim, io: &AppIo, latency_ns: u64, done_at: u64);
+    fn on_timer(&mut self, sim: &mut Sim, thread: usize, tag: u64);
+}
+
+#[derive(Debug)]
+enum Ev {
+    /// The PU may be able to start its next WQE.
+    PuWake { pu: usize },
+    /// A CQE landed in `cq`.
+    CqeArrive { cq: CqId, wc: Wc },
+    /// CQ event interrupt fired.
+    Interrupt { cq: CqId },
+    /// An idle-spinning poller reached its re-arm deadline.
+    PollerDeadline { poller: usize, gen: u64 },
+    /// Driver timer.
+    Timer { thread: usize, tag: u64 },
+    /// Deferred merge-queue drain (the "earliest arriving thread" of
+    /// Load-aware Batching reaching the merge function).
+    EngineKick { dir: Dir },
+}
+
+struct HeapEv {
+    t: u64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for HeapEv {
+    fn eq(&self, o: &Self) -> bool {
+        self.t == o.t && self.seq == o.seq
+    }
+}
+impl Eq for HeapEv {}
+impl PartialOrd for HeapEv {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for HeapEv {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        (self.t, self.seq).cmp(&(o.t, o.seq))
+    }
+}
+
+/// A WQE queued at a NIC processing unit.
+#[derive(Debug)]
+struct NicWqe {
+    wr: WorkRequest,
+    qp: QpId,
+    /// When the descriptor is available to the PU (MMIO landed / DMA fetch).
+    avail: u64,
+    /// Non-head entry of a doorbell chain (costs a descriptor DMA read).
+    chained: bool,
+}
+
+struct Pu {
+    q: VecDeque<NicWqe>,
+    busy_until: u64,
+    /// Earliest PuWake already scheduled (avoid event floods).
+    wake_at: Option<u64>,
+}
+
+struct Cq {
+    q: VecDeque<Wc>,
+    armed: bool,
+    event_driven: bool,
+    /// Pollers attached to this CQ (≥1; >1 only for SCQ).
+    pollers: Vec<usize>,
+    /// Serialization point for concurrent pollers on a shared CQ.
+    lock_free: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PState {
+    /// Event-driven poller waiting for an interrupt.
+    Sleeping,
+    /// In the poll loop (or idle-spinning, if `idle_from` is set).
+    Active,
+}
+
+struct Poller {
+    cq: CqId,
+    fsm: PollerFsm,
+    state: PState,
+    /// Thread-local clock; may run ahead of sim time while a batch of
+    /// completions is charged synchronously.
+    cursor: u64,
+    busy_ns: u64,
+    /// Set while the poller spins on an empty CQ.
+    idle_from: Option<u64>,
+    /// Step to take when resumed from an idle spin.
+    pending: Option<PollStep>,
+    /// Invalidates stale deadline events.
+    gen: u64,
+}
+
+impl Poller {
+    fn is_spinning(&self) -> bool {
+        self.state == PState::Active
+    }
+}
+
+/// Simulation results snapshot.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub elapsed_ns: u64,
+    pub completed_reads: u64,
+    pub completed_writes: u64,
+    pub completed_bytes: u64,
+    pub read_lat: Hist,
+    pub write_lat: Hist,
+    pub trace: Trace,
+    /// Total poller busy time (ns) — divide by elapsed for "cores burned".
+    pub poller_busy_ns: u64,
+    pub pollers: usize,
+    /// Time-weighted mean of in-flight WRs / bytes (Fig 1b, Fig 8b).
+    pub mean_inflight_ops: f64,
+    pub mean_inflight_bytes: f64,
+    pub peak_inflight_ops: u64,
+    pub peak_inflight_bytes: u64,
+}
+
+impl SimReport {
+    pub fn iops(&self) -> f64 {
+        if self.elapsed_ns == 0 {
+            return 0.0;
+        }
+        (self.completed_reads + self.completed_writes) as f64 * 1e9 / self.elapsed_ns as f64
+    }
+
+    pub fn throughput_bytes_per_sec(&self) -> f64 {
+        if self.elapsed_ns == 0 {
+            return 0.0;
+        }
+        self.completed_bytes as f64 * 1e9 / self.elapsed_ns as f64
+    }
+
+    pub fn poller_cpu_cores(&self) -> f64 {
+        if self.elapsed_ns == 0 {
+            return 0.0;
+        }
+        self.poller_busy_ns as f64 / self.elapsed_ns as f64
+    }
+}
+
+pub struct Sim {
+    pub cfg: FabricConfig,
+    pub stack: StackConfig,
+    pub channels: ChannelMap,
+    pub trace: Trace,
+
+    now: u64,
+    seq: u64,
+    heap: BinaryHeap<Reverse<HeapEv>>,
+    stopped: bool,
+
+    // NIC + wire resources
+    pus: Vec<Pu>,
+    cqs: Vec<Cq>,
+    nic_queue_depth: usize,
+    qp_lru: LruSet,
+    mpt_lru: LruSet,
+    pcie_free: u64,
+    link_free: u64,
+    remote_pcie_free: Vec<u64>,
+    remote_cpu_free: Vec<u64>,
+
+    pollers: Vec<Poller>,
+
+    engine: Option<Box<dyn Engine>>,
+    driver: Option<Box<dyn Driver>>,
+
+    // I/O bookkeeping
+    next_io_id: u64,
+    inflight_ios: FxHashMap<u64, AppIo>,
+    read_lat: Hist,
+    write_lat: Hist,
+    completed_reads: u64,
+    completed_writes: u64,
+    completed_bytes: u64,
+
+    // time-weighted in-flight WR accounting
+    inflight_wrs: u64,
+    inflight_bytes: u64,
+    acc_ops_ns: f64,
+    acc_bytes_ns: f64,
+    last_inflight_change: u64,
+    peak_inflight_ops: u64,
+    peak_inflight_bytes: u64,
+}
+
+impl Sim {
+    pub fn new(cfg: FabricConfig, stack: StackConfig, nodes: usize) -> Self {
+        let mut channels = ChannelMap::new(nodes, stack.qps_per_node);
+        if let PollingMode::Scq { m, .. } = stack.polling {
+            channels = channels.with_shared_cqs(m as usize);
+        }
+        let n_cqs = channels.total_cqs();
+        let event_driven = stack.polling.event_driven();
+
+        let mut cqs: Vec<Cq> = (0..n_cqs)
+            .map(|_| Cq {
+                q: VecDeque::new(),
+                armed: event_driven,
+                event_driven,
+                pollers: Vec::new(),
+                lock_free: 0,
+            })
+            .collect();
+
+        // Poller topology: one per CQ, except SCQ which runs `pollers`
+        // busy threads per shared CQ.
+        let mut pollers = Vec::new();
+        let per_cq = match stack.polling {
+            PollingMode::Scq { pollers, .. } => pollers as usize,
+            _ => 1,
+        };
+        for (cq, cq_ref) in cqs.iter_mut().enumerate() {
+            for _ in 0..per_cq {
+                let idx = pollers.len();
+                cq_ref.pollers.push(idx);
+                pollers.push(Poller {
+                    cq,
+                    fsm: PollerFsm::new(stack.polling),
+                    state: if event_driven {
+                        PState::Sleeping
+                    } else {
+                        PState::Active
+                    },
+                    cursor: 0,
+                    busy_ns: 0,
+                    idle_from: if event_driven { None } else { Some(0) },
+                    pending: None,
+                    gen: 0,
+                });
+            }
+        }
+
+        let pus = (0..cfg.nic_pus)
+            .map(|_| Pu {
+                q: VecDeque::new(),
+                busy_until: 0,
+                wake_at: None,
+            })
+            .collect();
+
+        Self {
+            qp_lru: LruSet::new(cfg.qp_cache_entries),
+            mpt_lru: LruSet::new(cfg.mpt_cache_entries),
+            remote_pcie_free: vec![0; nodes],
+            remote_cpu_free: vec![0; nodes],
+            pus,
+            cqs,
+            pollers,
+            channels,
+            cfg,
+            stack,
+            trace: Trace::default(),
+            now: 0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            stopped: false,
+            nic_queue_depth: 0,
+            pcie_free: 0,
+            link_free: 0,
+            engine: None,
+            driver: None,
+            next_io_id: 0,
+            inflight_ios: FxHashMap::default(),
+            read_lat: Hist::new(),
+            write_lat: Hist::new(),
+            completed_reads: 0,
+            completed_writes: 0,
+            completed_bytes: 0,
+            inflight_wrs: 0,
+            inflight_bytes: 0,
+            acc_ops_ns: 0.0,
+            acc_bytes_ns: 0.0,
+            last_inflight_change: 0,
+            peak_inflight_ops: 0,
+            peak_inflight_bytes: 0,
+        }
+    }
+
+    pub fn attach_engine(&mut self, e: Box<dyn Engine>) {
+        self.engine = Some(e);
+    }
+
+    pub fn attach_driver(&mut self, d: Box<dyn Driver>) {
+        self.driver = Some(d);
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.channels.nodes()
+    }
+
+    /// Number of poller threads currently burning a core (app-interference
+    /// model: spinning pollers steal cores from application threads).
+    pub fn spinning_pollers(&self) -> usize {
+        self.pollers.iter().filter(|p| p.is_spinning()).count()
+    }
+
+    /// Inflate an app-CPU duration by core oversubscription: `app_threads`
+    /// runnable app threads compete with spinning pollers for the machine's
+    /// *physical* cores (`cores` counts hyperthreads; a spinning poller
+    /// burns a full physical core — HT siblings add little for spin loops).
+    pub fn inflate_cpu(&self, ns: u64, app_threads: usize) -> u64 {
+        let phys = (self.cfg.cores / 2).max(1);
+        let demand = (app_threads + self.spinning_pollers()) as f64;
+        let f = (demand / phys as f64).max(1.0);
+        (ns as f64 * f) as u64
+    }
+
+    // ---------------- driver API ----------------
+
+    /// Submit an application I/O at time `at` (≥ the current event time of
+    /// the calling context). Returns the io id.
+    pub fn submit_at(
+        &mut self,
+        dir: Dir,
+        node: NodeId,
+        addr: u64,
+        len: u64,
+        thread: usize,
+        at: u64,
+    ) -> u64 {
+        let id = self.next_io_id;
+        self.next_io_id += 1;
+        let io = AppIo {
+            id,
+            dir,
+            node,
+            addr,
+            len,
+            thread,
+            t_submit: at,
+        };
+        self.inflight_ios.insert(id, io);
+        let mut eng = self.engine.take().expect("engine attached");
+        let _cpu = eng.submit(self, io);
+        self.engine = Some(eng);
+        id
+    }
+
+    pub fn set_timer(&mut self, thread: usize, at: u64, tag: u64) {
+        self.schedule(at, Ev::Timer { thread, tag });
+    }
+
+    /// Engine requests a deferred drain of its merge queue at `at`. While
+    /// the kick is pending, later submissions stack up behind it — exactly
+    /// the window in which Load-aware Batching finds its merge candidates.
+    pub fn schedule_engine_kick(&mut self, dir: Dir, at: u64) {
+        self.schedule(at, Ev::EngineKick { dir });
+    }
+
+    pub fn request_stop(&mut self) {
+        self.stopped = true;
+    }
+
+    /// QP selection (round-robin over the node's channels).
+    pub fn select_qp(&mut self, node: NodeId) -> QpId {
+        self.channels.select(node)
+    }
+
+    // ---------------- engine API ----------------
+
+    /// Post a doorbell chain whose posting CPU completes at `cpu_done_at`.
+    /// Accounting: 1 MMIO for the head, descriptor DMA reads for the rest.
+    pub fn post_chain(&mut self, qp: QpId, wrs: Vec<WorkRequest>, cpu_done_at: u64) {
+        debug_assert!(!wrs.is_empty());
+        self.trace.mmios += 1;
+        if wrs.len() > 1 {
+            self.trace.desc_dma_reads += (wrs.len() - 1) as u64;
+            self.trace.chains_gt1 += 1;
+        }
+        // The MMIO occupies PCIe briefly.
+        let t0 = self.pcie_free.max(cpu_done_at);
+        self.pcie_free = t0 + self.cfg.pcie_ns(self.cfg.mmio_bus_bytes);
+        let head_avail = self.pcie_free;
+
+        let pu_count = self.pus.len();
+        for (i, wr) in wrs.into_iter().enumerate() {
+            match wr.op {
+                crate::fabric::OpKind::Read => self.trace.wqes_read += 1,
+                _ => self.trace.wqes_write += 1,
+            }
+            // chained descriptors are contiguous in the SQ and fetched in
+            // one DMA burst — a single extra latency for the whole chain
+            let avail = if i == 0 {
+                head_avail
+            } else {
+                head_avail + self.cfg.dma_read_lat_ns
+            };
+            let len = wr.len;
+            let pu = qp % pu_count;
+            self.pus[pu].q.push_back(NicWqe {
+                wr,
+                qp,
+                avail,
+                chained: i > 0,
+            });
+            self.nic_queue_depth += 1;
+            self.trace.peak_nic_queue =
+                self.trace.peak_nic_queue.max(self.nic_queue_depth as u64);
+            self.update_inflight(1, len as i64);
+            self.kick_pu(pu, avail);
+        }
+    }
+
+    // ---------------- internals ----------------
+
+    fn schedule(&mut self, t: u64, ev: Ev) {
+        let t = t.max(self.now);
+        self.seq += 1;
+        self.heap.push(Reverse(HeapEv {
+            t,
+            seq: self.seq,
+            ev,
+        }));
+    }
+
+    fn update_inflight(&mut self, dops: i64, dbytes: i64) {
+        let dt = (self.now - self.last_inflight_change) as f64;
+        self.acc_ops_ns += self.inflight_wrs as f64 * dt;
+        self.acc_bytes_ns += self.inflight_bytes as f64 * dt;
+        self.last_inflight_change = self.now;
+        self.inflight_wrs = (self.inflight_wrs as i64 + dops) as u64;
+        self.inflight_bytes = (self.inflight_bytes as i64 + dbytes) as u64;
+        self.peak_inflight_ops = self.peak_inflight_ops.max(self.inflight_wrs);
+        self.peak_inflight_bytes = self.peak_inflight_bytes.max(self.inflight_bytes);
+    }
+
+    fn kick_pu(&mut self, pu: usize, hint: u64) {
+        let now = self.now;
+        let p = &mut self.pus[pu];
+        if p.busy_until > now {
+            let t = p.busy_until.max(hint.min(p.busy_until));
+            if p.wake_at.map_or(true, |w| w > t) {
+                p.wake_at = Some(t);
+                self.schedule(t, Ev::PuWake { pu });
+            }
+            return;
+        }
+        let Some(head) = p.q.front() else { return };
+        if head.avail > now {
+            let t = head.avail;
+            if p.wake_at.map_or(true, |w| w > t) {
+                p.wake_at = Some(t);
+                self.schedule(t, Ev::PuWake { pu });
+            }
+            return;
+        }
+        let wqe = p.q.pop_front().unwrap();
+        self.serve_wqe(pu, wqe);
+    }
+
+    /// PU takes one WQE: charge NIC service (incl. cache behaviour), then
+    /// pipeline the payload over PCIe/link/remote resources and schedule
+    /// the completion CQE.
+    fn serve_wqe(&mut self, pu: usize, wqe: NicWqe) {
+        let mut svc = self.cfg.wqe_proc_ns + self.cfg.sge_proc_ns * wqe.wr.num_sge as u64;
+        if wqe.chained {
+            // descriptor came via the chain's burst DMA (amortized)
+            svc += self.cfg.dma_read_lat_ns / 4;
+        }
+        // WQE cache pressure: the NIC caches the WQEs of *outstanding*
+        // requests; when in-flight work exceeds the cache, descriptors get
+        // evicted and re-fetched over PCIe — the deeper the overflow, the
+        // more refetch rounds each WQE suffers (the Fig 1 IOPS collapse
+        // under many parallel single I/Os, relieved by the Fig 8 window).
+        if self.inflight_wrs as usize > self.cfg.wqe_cache_entries {
+            let factor =
+                (self.inflight_wrs as usize / self.cfg.wqe_cache_entries).min(16) as u64;
+            svc += self.cfg.wqe_miss_penalty_ns * factor;
+            self.trace.wqe_cache_misses += 1;
+        }
+        if !self.qp_lru.touch(wqe.qp as u64) {
+            svc += self.cfg.qp_miss_penalty_ns;
+            self.trace.qp_cache_misses += 1;
+        }
+        // MPT keyed by (node, 16MB remote region).
+        let mpt_key = ((wqe.wr.node as u64) << 40) | (wqe.wr.remote_addr >> 24);
+        if !self.mpt_lru.touch(mpt_key) {
+            svc += self.cfg.mpt_miss_penalty_ns;
+            self.trace.mpt_misses += 1;
+        }
+
+        let svc_end = self.now + svc;
+        self.nic_queue_depth -= 1;
+        // the PU's DMA engine streams this WQE's payload — a single QP
+        // cannot exceed the per-engine bandwidth (multi-QP engages more
+        // engines; this is the §6.1 multi-channel headroom)
+        let engine_busy =
+            svc_end + (wqe.wr.len as f64 / self.cfg.pu_stream_bytes_per_ns) as u64;
+        {
+            let p = &mut self.pus[pu];
+            p.busy_until = engine_busy;
+            p.wake_at = Some(engine_busy);
+        }
+        self.schedule(engine_busy, Ev::PuWake { pu });
+
+        let len = wqe.wr.len;
+        let node = wqe.wr.node;
+        let two_sided = self.stack.two_sided;
+        let server_copy = self.stack.server_copy;
+        let complete_t = match wqe.wr.op {
+            crate::fabric::OpKind::Write | crate::fabric::OpKind::Send => {
+                // payload DMA-read from host memory, then the wire
+                let t = self.pcie_free.max(svc_end)
+                    + self.cfg.dma_read_lat_ns
+                    + self.cfg.pcie_ns(len);
+                self.pcie_free = t;
+                let t = self.link_free.max(t) + self.cfg.wire_ns(len);
+                self.link_free = t;
+                self.trace.bytes_wire += len;
+                let arrive = t + self.cfg.link_prop_ns;
+                let t = self.remote_pcie_free[node].max(arrive) + self.cfg.pcie_ns(len);
+                self.remote_pcie_free[node] = t;
+                let remote_done = if two_sided {
+                    // receiver CPU: amortized interrupt + per-msg handling
+                    // (+ staging copy into its storage for Accelio/Gluster)
+                    let mut h = self.cfg.interrupt_ns / 4 + 600;
+                    if server_copy {
+                        h += self.cfg.memcpy_ns(len);
+                    }
+                    let t = self.remote_cpu_free[node].max(t) + h;
+                    self.remote_cpu_free[node] = t;
+                    t
+                } else {
+                    t
+                };
+                remote_done + self.cfg.link_prop_ns + self.cfg.cqe_dma_ns
+            }
+            crate::fabric::OpKind::Read => {
+                // request goes out (tiny), payload flows back
+                let req_arrive = svc_end + self.cfg.link_prop_ns;
+                let t = self.remote_pcie_free[node].max(req_arrive)
+                    + self.cfg.dma_read_lat_ns
+                    + self.cfg.pcie_ns(len);
+                self.remote_pcie_free[node] = t;
+                let remote_done = if two_sided {
+                    let mut h = self.cfg.interrupt_ns / 4 + 600;
+                    if server_copy {
+                        h += self.cfg.memcpy_ns(len);
+                    }
+                    let t2 = self.remote_cpu_free[node].max(t) + h;
+                    self.remote_cpu_free[node] = t2;
+                    t2
+                } else {
+                    t
+                };
+                let t = self.link_free.max(remote_done) + self.cfg.wire_ns(len);
+                self.link_free = t;
+                self.trace.bytes_wire += len;
+                let t = self.pcie_free.max(t + self.cfg.link_prop_ns) + self.cfg.pcie_ns(len);
+                self.pcie_free = t;
+                t + self.cfg.cqe_dma_ns
+            }
+        };
+
+        if wqe.wr.signaled {
+            let wc = Wc {
+                wr_id: wqe.wr.wr_id,
+                qp: wqe.qp,
+                op: wqe.wr.op,
+                len,
+                app_ios: wqe.wr.app_ios,
+                status: WcStatus::Success,
+            };
+            let cq = self.channels.cq_of(wqe.qp);
+            self.schedule(complete_t, Ev::CqeArrive { cq, wc });
+        }
+    }
+
+    fn on_cqe(&mut self, cq: CqId, wc: Wc) {
+        self.trace.cqes += 1;
+        self.update_inflight(-1, -(wc.len as i64));
+        self.cqs[cq].q.push_back(wc);
+        if self.cqs[cq].event_driven {
+            // a spinning (adaptive/hybrid retry-phase) poller catches it…
+            if let Some(pi) = self.idle_spinner_of(cq) {
+                self.resume_spinner(pi);
+                return;
+            }
+            // …otherwise raise an interrupt if armed.
+            if self.cqs[cq].armed {
+                self.cqs[cq].armed = false;
+                self.trace.interrupts += 1;
+                self.schedule(self.now + self.cfg.interrupt_ns, Ev::Interrupt { cq });
+            }
+        } else {
+            // busy/SCQ: wake the best idle spinner (they are all either
+            // idle-spinning or mid-loop; mid-loop ones will drain it).
+            if let Some(pi) = self.idle_spinner_of(cq) {
+                self.resume_spinner(pi);
+            }
+        }
+    }
+
+    fn idle_spinner_of(&self, cq: CqId) -> Option<usize> {
+        self.cqs[cq]
+            .pollers
+            .iter()
+            .copied()
+            .filter(|&pi| {
+                self.pollers[pi].state == PState::Active && self.pollers[pi].idle_from.is_some()
+            })
+            .min_by_key(|&pi| self.pollers[pi].cursor)
+    }
+
+    fn resume_spinner(&mut self, pi: usize) {
+        let now = self.now;
+        {
+            let p = &mut self.pollers[pi];
+            let from = p.idle_from.take().expect("spinner");
+            let wake = from.max(now);
+            p.busy_ns += wake - from;
+            p.cursor = p.cursor.max(wake);
+            p.gen += 1; // cancel any pending deadline
+        }
+        self.run_poller(pi);
+    }
+
+    fn on_interrupt(&mut self, cq: CqId) {
+        let Some(&pi) = self.cqs[cq].pollers.first() else {
+            return;
+        };
+        if self.pollers[pi].state != PState::Sleeping {
+            return; // raced with a resume
+        }
+        let now = self.now;
+        {
+            let p = &mut self.pollers[pi];
+            p.state = PState::Active;
+            p.cursor = p.cursor.max(now) + self.cfg.ctx_switch_ns;
+            p.busy_ns += self.cfg.ctx_switch_ns;
+            let cur = p.cursor;
+            let step = p.fsm.on_wake(cur);
+            p.pending = Some(step);
+        }
+        self.trace.ctx_switches += 1;
+        self.run_poller(pi);
+    }
+
+    /// Run the poller state machine until it parks (idle spin) or re-arms.
+    fn run_poller(&mut self, pi: usize) {
+        let cq_id = self.pollers[pi].cq;
+        let shared = self.cqs[cq_id].pollers.len() > 1;
+        let contention = if shared {
+            1.0 + 0.5 * (self.cqs[cq_id].pollers.len() - 1) as f64
+        } else {
+            1.0
+        };
+        let poll_ns = (self.cfg.poll_call_ns as f64 * contention) as u64;
+
+        let mut step = self.pollers[pi]
+            .pending
+            .take()
+            .unwrap_or(PollStep::Poll { max: 1 });
+
+        loop {
+            match step {
+                PollStep::Rearm => {
+                    self.rearm_poller(pi);
+                    return;
+                }
+                PollStep::Poll { max } => {
+                    // serialize poll calls on shared CQs
+                    let t_call = if shared {
+                        self.pollers[pi].cursor.max(self.cqs[cq_id].lock_free)
+                    } else {
+                        self.pollers[pi].cursor
+                    };
+                    let call_end = t_call + poll_ns;
+                    {
+                        let p = &mut self.pollers[pi];
+                        p.busy_ns += call_end - p.cursor;
+                        p.cursor = call_end;
+                    }
+                    if shared {
+                        self.cqs[cq_id].lock_free = call_end;
+                    }
+                    self.trace.poll_calls += 1;
+
+                    let mut got = 0u32;
+                    let mut wcs = Vec::new();
+                    while got < max {
+                        match self.cqs[cq_id].q.pop_front() {
+                            Some(wc) => {
+                                wcs.push(wc);
+                                got += 1;
+                            }
+                            None => break,
+                        }
+                    }
+                    if got == 0 {
+                        self.trace.empty_polls += 1;
+                    }
+                    for wc in wcs {
+                        let cursor = self.pollers[pi].cursor;
+                        let mut eng = self.engine.take().expect("engine");
+                        let outcome = eng.on_wc(self, &wc, cursor);
+                        self.engine = Some(eng);
+                        {
+                            let p = &mut self.pollers[pi];
+                            p.busy_ns += outcome.handler_cpu_ns;
+                            p.cursor += outcome.handler_cpu_ns;
+                        }
+                        let done_at = self.pollers[pi].cursor;
+                        for io_id in outcome.completed {
+                            self.complete_io(io_id, done_at);
+                        }
+                    }
+
+                    let cursor = self.pollers[pi].cursor;
+                    step = self.pollers[pi].fsm.after_poll(got, cursor);
+
+                    if got == 0 && self.cqs[cq_id].q.is_empty() {
+                        match step {
+                            PollStep::Rearm => {
+                                self.rearm_poller(pi);
+                                return;
+                            }
+                            PollStep::Poll { .. } => {
+                                // park as an idle spinner; O(1) events
+                                let mode = self.pollers[pi].fsm.mode();
+                                let p = &mut self.pollers[pi];
+                                p.idle_from = Some(p.cursor);
+                                p.pending = Some(step);
+                                match mode {
+                                    PollingMode::Adaptive { .. } => {
+                                        let deadline =
+                                            p.cursor + p.fsm.retries_left() as u64 * poll_ns;
+                                        let gen = p.gen;
+                                        self.schedule(
+                                            deadline,
+                                            Ev::PollerDeadline { poller: pi, gen },
+                                        );
+                                    }
+                                    PollingMode::HybridTimer { .. } => {
+                                        let deadline = p.fsm.spin_deadline_ns().max(p.cursor);
+                                        let gen = p.gen;
+                                        self.schedule(
+                                            deadline,
+                                            Ev::PollerDeadline { poller: pi, gen },
+                                        );
+                                    }
+                                    // busy / SCQ spin until a CQE wakes them
+                                    _ => {}
+                                }
+                                return;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn rearm_poller(&mut self, pi: usize) {
+        let cq_id = self.pollers[pi].cq;
+        {
+            let p = &mut self.pollers[pi];
+            p.cursor += self.cfg.cq_arm_ns;
+            p.busy_ns += self.cfg.cq_arm_ns;
+        }
+        // standard lost-wakeup guard: re-check queue after arming
+        if !self.cqs[cq_id].q.is_empty() {
+            let cursor = self.pollers[pi].cursor;
+            let step = self.pollers[pi].fsm.on_wake(cursor);
+            self.pollers[pi].pending = Some(step);
+            self.run_poller(pi);
+            return;
+        }
+        self.cqs[cq_id].armed = true;
+        self.pollers[pi].state = PState::Sleeping;
+        self.pollers[pi].idle_from = None;
+    }
+
+    fn on_poller_deadline(&mut self, pi: usize, gen: u64) {
+        {
+            let p = &mut self.pollers[pi];
+            if p.gen != gen || p.idle_from.is_none() {
+                return; // stale
+            }
+            let from = p.idle_from.take().unwrap();
+            let t = self.now.max(from);
+            p.busy_ns += t - from;
+            p.cursor = p.cursor.max(t);
+            p.pending = None;
+        }
+        self.rearm_poller(pi);
+    }
+
+    fn complete_io(&mut self, io_id: u64, done_at: u64) {
+        let Some(io) = self.inflight_ios.remove(&io_id) else {
+            return; // duplicate completion guard
+        };
+        let lat = done_at.saturating_sub(io.t_submit);
+        match io.dir {
+            Dir::Read => {
+                self.read_lat.record(lat);
+                self.completed_reads += 1;
+            }
+            Dir::Write => {
+                self.write_lat.record(lat);
+                self.completed_writes += 1;
+            }
+        }
+        self.completed_bytes += io.len;
+        let mut d = self.driver.take().expect("driver");
+        d.on_io_done(self, &io, lat, done_at);
+        self.driver = Some(d);
+    }
+
+    /// Run until the driver stops the sim, the event queue drains, or the
+    /// hard deadline passes. Returns the report.
+    pub fn run(&mut self, deadline_ns: u64) -> SimReport {
+        let mut d = self.driver.take().expect("driver attached");
+        d.on_start(self);
+        self.driver = Some(d);
+
+        while !self.stopped {
+            let Some(Reverse(hev)) = self.heap.pop() else {
+                break;
+            };
+            if hev.t > deadline_ns {
+                self.now = deadline_ns;
+                break;
+            }
+            self.now = hev.t;
+            match hev.ev {
+                Ev::PuWake { pu } => {
+                    self.pus[pu].wake_at = None;
+                    self.kick_pu(pu, self.now);
+                }
+                Ev::CqeArrive { cq, wc } => self.on_cqe(cq, wc),
+                Ev::Interrupt { cq } => self.on_interrupt(cq),
+                Ev::PollerDeadline { poller, gen } => self.on_poller_deadline(poller, gen),
+                Ev::Timer { thread, tag } => {
+                    let mut d = self.driver.take().expect("driver");
+                    d.on_timer(self, thread, tag);
+                    self.driver = Some(d);
+                }
+                Ev::EngineKick { dir } => {
+                    let mut e = self.engine.take().expect("engine");
+                    e.on_kick(self, dir);
+                    self.engine = Some(e);
+                }
+            }
+        }
+        self.finalize()
+    }
+
+    fn finalize(&mut self) -> SimReport {
+        // flush idle spinners' busy time
+        let now = self.now;
+        for p in &mut self.pollers {
+            if let Some(from) = p.idle_from {
+                if now > from {
+                    p.busy_ns += now - from;
+                    p.idle_from = Some(now);
+                }
+            }
+        }
+        self.update_inflight(0, 0);
+        let elapsed = self.now.max(1);
+        SimReport {
+            elapsed_ns: self.now,
+            completed_reads: self.completed_reads,
+            completed_writes: self.completed_writes,
+            completed_bytes: self.completed_bytes,
+            read_lat: self.read_lat.clone(),
+            write_lat: self.write_lat.clone(),
+            trace: self.trace.clone(),
+            poller_busy_ns: self.pollers.iter().map(|p| p.busy_ns).sum(),
+            pollers: self.pollers.len(),
+            mean_inflight_ops: self.acc_ops_ns / elapsed as f64,
+            mean_inflight_bytes: self.acc_bytes_ns / elapsed as f64,
+            peak_inflight_ops: self.peak_inflight_ops,
+            peak_inflight_bytes: self.peak_inflight_bytes,
+        }
+    }
+
+    /// Outstanding WRs (tests).
+    pub fn inflight_wrs_now(&self) -> u64 {
+        self.inflight_wrs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::engine::StackEngine;
+    use super::*;
+    use crate::coordinator::batching::BatchMode;
+    use crate::coordinator::StackConfig;
+
+    /// Closed-loop driver: each thread keeps `qd` I/Os in flight until
+    /// `target` complete. Addresses are scattered (no adjacency).
+    struct Cl {
+        threads: usize,
+        qd: usize,
+        target: u64,
+        done: u64,
+        len: u64,
+        next_addr: u64,
+        nodes: usize,
+        write_frac_pct: u64,
+        /// stop the sim at target (vs letting in-flight I/Os drain)
+        hard_stop: bool,
+    }
+
+    impl Cl {
+        fn one(&mut self, sim: &mut Sim, thread: usize, at: u64) {
+            let dir = if (self.next_addr / 4096) % 100 < self.write_frac_pct {
+                Dir::Write
+            } else {
+                Dir::Read
+            };
+            let node = (self.next_addr / 4096) as usize % self.nodes;
+            sim.submit_at(dir, node, self.next_addr, self.len, thread, at);
+            self.next_addr += self.len * 7 + 4096; // scattered
+        }
+    }
+
+    impl Driver for Cl {
+        fn on_start(&mut self, sim: &mut Sim) {
+            for t in 0..self.threads {
+                for _ in 0..self.qd {
+                    self.one(sim, t, 0);
+                }
+            }
+        }
+        fn on_io_done(&mut self, sim: &mut Sim, io: &AppIo, _lat: u64, done_at: u64) {
+            self.done += 1;
+            if self.done >= self.target {
+                if self.hard_stop {
+                    sim.request_stop();
+                }
+                return;
+            }
+            self.one(sim, io.thread, done_at);
+        }
+        fn on_timer(&mut self, _sim: &mut Sim, _t: usize, _tag: u64) {}
+    }
+
+    fn run_stack(stack: StackConfig, nodes: usize, target: u64) -> SimReport {
+        let cfg = FabricConfig::default();
+        let mut sim = Sim::new(cfg.clone(), stack.clone(), nodes);
+        let eng = StackEngine::new(&cfg, &stack);
+        sim.attach_engine(Box::new(eng));
+        sim.attach_driver(Box::new(Cl {
+            threads: 4,
+            qd: 4,
+            target,
+            done: 0,
+            len: 4096,
+            next_addr: 0,
+            nodes,
+            write_frac_pct: 50,
+            hard_stop: true,
+        }));
+        sim.run(u64::MAX / 2)
+    }
+
+    #[test]
+    fn completes_all_ios_adaptive() {
+        let cfg = FabricConfig::default();
+        let r = run_stack(StackConfig::rdmabox(&cfg), 2, 2000);
+        let done = r.completed_reads + r.completed_writes;
+        // merged WRs may complete a couple of extra I/Os past the target
+        assert!((2000..2100).contains(&done), "done={done}");
+        assert!(r.elapsed_ns > 0);
+        assert!(r.iops() > 0.0);
+        assert!(r.trace.wqes_total() > 0);
+        // CQEs trail WQEs only by what was still in flight at the stop
+        assert!(r.trace.cqes <= r.trace.wqes_total());
+    }
+
+    #[test]
+    fn completes_all_ios_each_polling_mode() {
+        let cfg = FabricConfig::default();
+        for polling in [
+            PollingMode::Busy,
+            PollingMode::Event,
+            PollingMode::EventBatch { budget: 16 },
+            PollingMode::Adaptive {
+                batch: 16,
+                max_retry: 120,
+            },
+            PollingMode::HybridTimer { spin_ns: 10_000 },
+            PollingMode::Scq { m: 1, pollers: 1 },
+            PollingMode::Scq { m: 2, pollers: 2 },
+        ] {
+            let stack = StackConfig::rdmabox(&cfg).with_polling(polling);
+            let r = run_stack(stack, 2, 500);
+            let done = r.completed_reads + r.completed_writes;
+            assert!((500..600).contains(&done), "mode {polling:?}: done={done}");
+        }
+    }
+
+    #[test]
+    fn busy_polling_burns_more_cpu_than_event() {
+        let cfg = FabricConfig::default();
+        let busy = run_stack(
+            StackConfig::rdmabox(&cfg).with_polling(PollingMode::Busy),
+            2,
+            2000,
+        );
+        let event = run_stack(
+            StackConfig::rdmabox(&cfg).with_polling(PollingMode::Event),
+            2,
+            2000,
+        );
+        assert!(
+            busy.poller_cpu_cores() > 2.0 * event.poller_cpu_cores(),
+            "busy {} vs event {}",
+            busy.poller_cpu_cores(),
+            event.poller_cpu_cores()
+        );
+    }
+
+    #[test]
+    fn event_mode_pays_interrupt_per_wc() {
+        let cfg = FabricConfig::default();
+        let r = run_stack(
+            StackConfig::rdmabox(&cfg).with_polling(PollingMode::Event),
+            1,
+            1000,
+        );
+        assert!(
+            r.trace.interrupts_per_cqe() > 0.5,
+            "rate {}",
+            r.trace.interrupts_per_cqe()
+        );
+        let adaptive = run_stack(StackConfig::rdmabox(&cfg), 1, 1000);
+        assert!(
+            adaptive.trace.interrupts_per_cqe() < r.trace.interrupts_per_cqe(),
+            "adaptive {} vs event {}",
+            adaptive.trace.interrupts_per_cqe(),
+            r.trace.interrupts_per_cqe()
+        );
+    }
+
+    #[test]
+    fn hybrid_batching_fewer_wqes_than_single() {
+        let cfg = FabricConfig::default();
+        // sequential addresses -> adjacency -> merging opportunity
+        struct Seq {
+            target: u64,
+            done: u64,
+            addr: u64,
+        }
+        impl Driver for Seq {
+            fn on_start(&mut self, sim: &mut Sim) {
+                for t in 0..8 {
+                    for _ in 0..4 {
+                        sim.submit_at(Dir::Write, 0, self.addr, 4096, t, 0);
+                        self.addr += 4096;
+                    }
+                }
+            }
+            fn on_io_done(&mut self, sim: &mut Sim, io: &AppIo, _l: u64, at: u64) {
+                self.done += 1;
+                if self.done >= self.target {
+                    sim.request_stop();
+                    return;
+                }
+                sim.submit_at(Dir::Write, 0, self.addr, 4096, io.thread, at);
+                self.addr += 4096;
+            }
+            fn on_timer(&mut self, _s: &mut Sim, _t: usize, _g: u64) {}
+        }
+        let run = |batch| {
+            let stack = StackConfig::rdmabox(&cfg).with_batch(batch);
+            let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
+            sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
+            sim.attach_driver(Box::new(Seq {
+                target: 3000,
+                done: 0,
+                addr: 0,
+            }));
+            sim.run(u64::MAX / 2)
+        };
+        let single = run(BatchMode::Single);
+        let hybrid = run(BatchMode::Hybrid);
+        assert!(
+            hybrid.trace.wqes_total() < single.trace.wqes_total(),
+            "hybrid {} vs single {}",
+            hybrid.trace.wqes_total(),
+            single.trace.wqes_total()
+        );
+        assert!(hybrid.trace.mmios < single.trace.mmios);
+        assert!(hybrid.trace.merged_ios > 0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = FabricConfig::default();
+        let a = run_stack(StackConfig::rdmabox(&cfg), 3, 1500);
+        let b = run_stack(StackConfig::rdmabox(&cfg), 3, 1500);
+        assert_eq!(a.elapsed_ns, b.elapsed_ns);
+        assert_eq!(a.trace.wqes_total(), b.trace.wqes_total());
+        assert_eq!(a.trace.mmios, b.trace.mmios);
+    }
+
+    #[test]
+    fn inflight_accounting_settles_to_zero() {
+        let cfg = FabricConfig::default();
+        let stack = StackConfig::rdmabox(&cfg);
+        let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
+        sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
+        sim.attach_driver(Box::new(Cl {
+            threads: 2,
+            qd: 2,
+            target: 200,
+            done: 0,
+            len: 4096,
+            next_addr: 0,
+            nodes: 1,
+            write_frac_pct: 100,
+            hard_stop: false, // let in-flight I/Os drain
+        }));
+        let r = sim.run(u64::MAX / 2);
+        assert_eq!(sim.inflight_wrs_now(), 0, "all WRs completed");
+        assert!(r.peak_inflight_ops > 0);
+        assert!(r.mean_inflight_ops > 0.0);
+    }
+
+    #[test]
+    fn two_sided_server_copy_slower_than_one_sided() {
+        let cfg = FabricConfig::default();
+        let mut two = StackConfig::rdmabox(&cfg);
+        two.two_sided = true;
+        two.server_copy = true;
+        let one = run_stack(StackConfig::rdmabox(&cfg), 1, 1000);
+        let two = run_stack(two, 1, 1000);
+        assert!(
+            two.elapsed_ns > one.elapsed_ns,
+            "two-sided {} vs one-sided {}",
+            two.elapsed_ns,
+            one.elapsed_ns
+        );
+    }
+}

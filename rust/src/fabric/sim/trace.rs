@@ -1,0 +1,91 @@
+//! Fabric-level counters — the raw material for Table 1 (total RDMA I/Os to
+//! the NIC), Fig 1b (in-flight ops), Fig 5 (interrupts / context switches)
+//! and the §6.1 PCIe/MMIO accounting.
+
+#[derive(Debug, Default, Clone)]
+pub struct Trace {
+    // ---- posting side ----
+    /// WQEs handed to the NIC, by op — "total number of RDMA I/O to NIC".
+    pub wqes_read: u64,
+    pub wqes_write: u64,
+    /// MMIO doorbell writes by the CPU.
+    pub mmios: u64,
+    /// Chained descriptors fetched by NIC DMA (doorbell batching).
+    pub desc_dma_reads: u64,
+    /// App I/Os that were merged into multi-fragment WRs.
+    pub merged_ios: u64,
+    /// Doorbell chains with more than one WR.
+    pub chains_gt1: u64,
+
+    // ---- NIC ----
+    pub wqe_cache_misses: u64,
+    pub qp_cache_misses: u64,
+    pub mpt_misses: u64,
+    /// Payload bytes that crossed the wire.
+    pub bytes_wire: u64,
+    /// Peak simultaneous WQEs queued in the NIC.
+    pub peak_nic_queue: u64,
+
+    // ---- completion side ----
+    pub cqes: u64,
+    pub interrupts: u64,
+    pub ctx_switches: u64,
+    pub poll_calls: u64,
+    pub empty_polls: u64,
+
+    // ---- coordinator ----
+    pub admission_blocks: u64,
+    pub premr_stalls: u64,
+}
+
+impl Trace {
+    pub fn wqes_total(&self) -> u64 {
+        self.wqes_read + self.wqes_write
+    }
+
+    /// Paper Fig 5c/5d proxy: fewer interrupts/ctx-switches per WC means
+    /// poll-dominated completion handling.
+    pub fn interrupts_per_cqe(&self) -> f64 {
+        if self.cqes == 0 {
+            0.0
+        } else {
+            self.interrupts as f64 / self.cqes as f64
+        }
+    }
+
+    pub fn empty_poll_rate(&self) -> f64 {
+        if self.poll_calls == 0 {
+            0.0
+        } else {
+            self.empty_polls as f64 / self.poll_calls as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_rates() {
+        let t = Trace {
+            wqes_read: 10,
+            wqes_write: 5,
+            cqes: 20,
+            interrupts: 5,
+            poll_calls: 40,
+            empty_polls: 10,
+            ..Default::default()
+        };
+        assert_eq!(t.wqes_total(), 15);
+        assert!((t.interrupts_per_cqe() - 0.25).abs() < 1e-12);
+        assert!((t.empty_poll_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let t = Trace::default();
+        assert_eq!(t.interrupts_per_cqe(), 0.0);
+        assert_eq!(t.empty_poll_rate(), 0.0);
+    }
+}

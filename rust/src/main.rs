@@ -1,0 +1,121 @@
+//! `rdmabox` — the experiment/driver CLI.
+//!
+//! ```text
+//! rdmabox fig <N> [--full] [--config fabric.toml]   regenerate figure N
+//! rdmabox table 1                                   regenerate Table 1
+//! rdmabox all [--full]                              every figure + table
+//! rdmabox ml-e2e [--steps N]                        live 3-layer training
+//! rdmabox list                                      what can run
+//! ```
+
+use rdmabox::cli::Args;
+use rdmabox::config;
+use rdmabox::experiments::{run_by_id, ExpCtx, ALL_IDS};
+
+fn main() {
+    let args = match Args::parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn ctx_from(args: &Args) -> Result<ExpCtx, String> {
+    let fabric = config::fabric_from_args(args)?;
+    Ok(ExpCtx {
+        fabric,
+        quick: !args.get_bool("full"),
+    })
+}
+
+fn dispatch(args: &Args) -> Result<(), String> {
+    match args.subcommand.as_deref() {
+        Some("fig") => {
+            args.check_allowed(&["full", "config"])?;
+            let id = args
+                .positional
+                .first()
+                .ok_or("usage: rdmabox fig <1|4|5|6|7|8|9|10|11|12|13|14>")?;
+            let ctx = ctx_from(args)?;
+            let out = run_by_id(id, &ctx).ok_or_else(|| format!("unknown figure `{id}`"))?;
+            print!("{out}");
+            Ok(())
+        }
+        Some("table") => {
+            args.check_allowed(&["full", "config"])?;
+            let id = args.positional.first().map(|s| s.as_str()).unwrap_or("1");
+            if id != "1" {
+                return Err("only table 1 exists in the paper".into());
+            }
+            let ctx = ctx_from(args)?;
+            print!("{}", run_by_id("table1", &ctx).unwrap());
+            Ok(())
+        }
+        Some("all") => {
+            args.check_allowed(&["full", "config"])?;
+            let ctx = ctx_from(args)?;
+            for id in ALL_IDS {
+                let label = if id == "table1" {
+                    "Table 1".to_string()
+                } else {
+                    format!("Figure {id}")
+                };
+                println!("###### {label} ######");
+                let t0 = std::time::Instant::now();
+                print!("{}", run_by_id(id, &ctx).unwrap());
+                println!(
+                    "  [{label} regenerated in {:.1}s]\n",
+                    t0.elapsed().as_secs_f64()
+                );
+            }
+            Ok(())
+        }
+        Some("ml-e2e") => {
+            args.check_allowed(&["steps", "rows", "resident"])?;
+            let steps = args.get_u64("steps", 300)? as usize;
+            let rows = args.get_u64("rows", 2048)? as usize;
+            let resident = args.get_f64("resident", 0.25)?;
+            run_ml_e2e(steps, rows, resident).map_err(|e| e.to_string())
+        }
+        Some("list") | None => {
+            println!("figures: {}", ALL_IDS.join(", "));
+            println!(
+                "usage: rdmabox fig <N> [--full] | rdmabox table 1 | rdmabox all | rdmabox ml-e2e"
+            );
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown subcommand `{other}` (try `rdmabox list`)")),
+    }
+}
+
+fn run_ml_e2e(steps: usize, rows: usize, resident: f64) -> anyhow::Result<()> {
+    use rdmabox::ml::train_paged_logreg;
+    use rdmabox::runtime::Runtime;
+    if !rdmabox::runtime::artifacts_available() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let mut rt = Runtime::from_artifacts()?;
+    println!(
+        "PJRT platform: {} | training logreg on paged remote memory ({} rows, {:.0}% resident)",
+        rt.platform(),
+        rows,
+        resident * 100.0
+    );
+    let r = train_paged_logreg(&mut rt, 3, rows, 256, 512, resident, steps, 0.5)?;
+    for (i, l) in r.losses.iter().enumerate() {
+        if i % 20 == 0 || i + 1 == r.losses.len() {
+            println!("step {i:4}  loss {l:.4}");
+        }
+    }
+    println!(
+        "done: {} steps in {} ms | page faults {} hits {} | {} bytes read from remote | merged ios {}",
+        r.steps, r.wall_ms, r.faults, r.hits, r.bytes_read, r.merged_ios
+    );
+    Ok(())
+}

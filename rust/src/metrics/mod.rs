@@ -1,0 +1,130 @@
+//! Report assembly shared by the experiment harnesses: a named series of
+//! (x, y) points plus ratio checks against the paper's reported numbers.
+
+use crate::util::stats::geomean;
+
+/// One measured curve of a figure.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub xs: Vec<String>,
+    pub ys: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn push<X: ToString>(&mut self, x: X, y: f64) {
+        self.xs.push(x.to_string());
+        self.ys.push(y);
+    }
+
+    pub fn max(&self) -> f64 {
+        self.ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn argmax(&self) -> Option<&str> {
+        let i = self
+            .ys
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())?
+            .0;
+        Some(&self.xs[i])
+    }
+}
+
+/// A shape check: "our ratio should be within [lo, hi]× of the paper's".
+#[derive(Debug, Clone)]
+pub struct ShapeCheck {
+    pub what: String,
+    pub paper: f64,
+    pub measured: f64,
+    pub pass: bool,
+}
+
+impl ShapeCheck {
+    /// Pass when the measured ratio is in the same *direction* as the
+    /// paper's (>1 stays >1) and within a loose band (the testbed is a
+    /// simulator — we claim shape, not absolute numbers).
+    pub fn direction(what: &str, paper: f64, measured: f64) -> Self {
+        let pass = (paper >= 1.0) == (measured >= 1.0);
+        Self {
+            what: what.into(),
+            paper,
+            measured,
+            pass,
+        }
+    }
+
+    pub fn within(what: &str, paper: f64, measured: f64, rel_band: f64) -> Self {
+        let pass = measured >= paper * (1.0 - rel_band) && measured <= paper * (1.0 + rel_band);
+        Self {
+            what: what.into(),
+            paper,
+            measured,
+            pass,
+        }
+    }
+
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.what.clone(),
+            format!("{:.2}", self.paper),
+            format!("{:.2}", self.measured),
+            if self.pass { "OK".into() } else { "MISS".into() },
+        ]
+    }
+}
+
+/// Summary speedup across checks (geometric mean of measured ratios).
+pub fn summary_speedup(checks: &[ShapeCheck]) -> f64 {
+    geomean(
+        &checks
+            .iter()
+            .map(|c| c.measured.max(1e-9))
+            .collect::<Vec<_>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_tracks_max() {
+        let mut s = Series::new("iops");
+        s.push(1, 10.0);
+        s.push(4, 42.0);
+        s.push(8, 17.0);
+        assert_eq!(s.max(), 42.0);
+        assert_eq!(s.argmax(), Some("4"));
+    }
+
+    #[test]
+    fn direction_check() {
+        assert!(ShapeCheck::direction("x", 6.48, 3.2).pass);
+        assert!(!ShapeCheck::direction("x", 6.48, 0.7).pass);
+        assert!(ShapeCheck::direction("y", 0.5, 0.9).pass);
+    }
+
+    #[test]
+    fn within_check() {
+        assert!(ShapeCheck::within("x", 100.0, 90.0, 0.15).pass);
+        assert!(!ShapeCheck::within("x", 100.0, 50.0, 0.15).pass);
+    }
+
+    #[test]
+    fn speedup_summary() {
+        let checks = vec![
+            ShapeCheck::direction("a", 2.0, 2.0),
+            ShapeCheck::direction("b", 8.0, 8.0),
+        ];
+        assert!((summary_speedup(&checks) - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,378 @@
+//! Remote paging system (paper §6, §7.1): a virtual swap device backed by
+//! remote memory through the RDMAbox node abstraction.
+//!
+//! [`Pager`] combines the host page cache ([`cache::ClockCache`], sized to
+//! the container memory limit), the swap-slot allocator ([`swap`]) and the
+//! replication placement ([`NodeMap`]): touching a non-resident page emits
+//! the block I/Os that must hit the fabric — a read from the first alive
+//! replica for the fault, replicated writes for the dirty victim, or a
+//! disk fallback when every replica is down.
+
+pub mod cache;
+pub mod swap;
+
+use crate::coordinator::node::NodeMap;
+use crate::fabric::Dir;
+use cache::{Access, ClockCache};
+use crate::util::fxhash::FxHashMap;
+use swap::SwapAllocator;
+
+/// Where a paging I/O must go.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    Node(usize),
+    /// All replicas failed — local disk fallback (paper: "disk access
+    /// occurs only when all replication is failed").
+    Disk,
+}
+
+/// One block I/O the paging layer needs executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IoReq {
+    pub dir: Dir,
+    pub target: Target,
+    pub addr: u64,
+    pub len: u64,
+}
+
+/// Result of touching a page.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TouchOutcome {
+    /// Read the app thread must block on (None = cold first touch or hit).
+    pub load: Option<IoReq>,
+    /// Asynchronous write-backs (dirty victim × replicas).
+    pub writebacks: Vec<IoReq>,
+    /// Additional swap-readahead loads (adjacent swapped pages).
+    pub readahead: Vec<IoReq>,
+    pub hit: bool,
+}
+
+#[derive(Debug)]
+pub struct Pager {
+    cache: ClockCache,
+    slots: SwapAllocator,
+    map: NodeMap,
+    page_size: u64,
+    /// page -> swap slot, for pages currently swapped out.
+    swapped: FxHashMap<u64, u64>,
+    /// Pages whose only copy is on disk (replicas failed at writeback).
+    on_disk: FxHashMap<u64, u64>,
+    /// kswapd-style batch reclaim size: victims evicted per reclaim round.
+    reclaim_batch: usize,
+    pub faults: u64,
+    pub cold_faults: u64,
+    pub disk_reads: u64,
+    pub disk_writes: u64,
+}
+
+impl Pager {
+    pub fn new(resident_pages: usize, map: NodeMap, page_size: u64) -> Self {
+        Self {
+            cache: ClockCache::new(resident_pages.max(1)),
+            slots: SwapAllocator::new(),
+            map,
+            page_size,
+            swapped: FxHashMap::default(),
+            on_disk: FxHashMap::default(),
+            reclaim_batch: 1,
+            faults: 0,
+            cold_faults: 0,
+            disk_reads: 0,
+            disk_writes: 0,
+        }
+    }
+
+    pub fn cache(&self) -> &ClockCache {
+        &self.cache
+    }
+
+    /// Reclaim victims in batches of `n` (Linux kswapd behaviour). Batch
+    /// reclaim is what creates the write-back *bursts* that stack up in
+    /// the merge queue — and, with CLOCK runs + sequential slots, their
+    /// device-address contiguity.
+    pub fn with_reclaim_batch(mut self, n: usize) -> Self {
+        self.reclaim_batch = n.max(1);
+        self
+    }
+
+    pub fn node_map_mut(&mut self) -> &mut NodeMap {
+        &mut self.map
+    }
+
+    pub fn page_size(&self) -> u64 {
+        self.page_size
+    }
+
+    /// Touch `page` with swap readahead: on a fault, also fault in up to
+    /// `ra` following pages that are currently swapped out (Linux
+    /// `page-cluster` behaviour). Readahead is what gives swap-in traffic
+    /// its adjacency — consecutive pages sit on consecutive swap slots, so
+    /// the resulting reads are contiguous on the remote node and
+    /// Batching-on-MR can merge them (paper Table 1).
+    pub fn touch_ra(&mut self, page: u64, write: bool, ra: usize) -> TouchOutcome {
+        let mut out = self.touch(page, write);
+        if out.hit || out.load.is_none() || ra == 0 {
+            return out;
+        }
+        let mut extra_loads = Vec::new();
+        for i in 1..=ra as u64 {
+            let p = page + i;
+            if !self.swapped.contains_key(&p) || self.cache.contains(p) {
+                break; // readahead stops at the first non-swapped page
+            }
+            let o = self.touch(p, false);
+            out.writebacks.extend(o.writebacks);
+            if let Some(l) = o.load {
+                extra_loads.push(l);
+            }
+        }
+        out.readahead = extra_loads;
+        out
+    }
+
+    /// Touch `page`; returns the I/Os this access requires.
+    pub fn touch(&mut self, page: u64, write: bool) -> TouchOutcome {
+        let first_evict = match self.cache.access(page, write) {
+            Access::Hit => {
+                return TouchOutcome {
+                    load: None,
+                    writebacks: Vec::new(),
+                    readahead: Vec::new(),
+                    hit: true,
+                }
+            }
+            Access::Miss { evicted } => evicted,
+        };
+        self.faults += 1;
+        let mut writebacks = Vec::new();
+        // the single eviction `access` may have performed
+        if let Some((v, d)) = first_evict {
+            self.writeback_victim(v, d, &mut writebacks);
+        }
+        // kswapd-style batch reclaim: once the cache runs out of free
+        // frames, evict a whole batch so the next faults find room — this
+        // is what makes write-backs bursty (and, via CLOCK runs +
+        // sequential slots, contiguous)
+        if self.cache.free_frames() == 0 && self.reclaim_batch > 1 {
+            let victims = self.cache.reclaim(self.reclaim_batch);
+            for (victim, dirty) in victims {
+                self.writeback_victim(victim, dirty, &mut writebacks);
+            }
+        }
+        let load = self.load_for(page);
+        TouchOutcome {
+            load,
+            writebacks,
+            readahead: Vec::new(),
+            hit: false,
+        }
+    }
+
+    /// Emit the write-backs for an evicted victim (replicated, or disk if
+    /// every replica is dead). Anonymous-memory semantics: a page with no
+    /// valid swap/disk copy must be written even if clean.
+    fn writeback_victim(&mut self, victim: u64, dirty: bool, out: &mut Vec<IoReq>) {
+        let has_copy =
+            self.swapped.contains_key(&victim) || self.on_disk.contains_key(&victim);
+        if !dirty && has_copy {
+            return; // remote copy still current
+        }
+        let slot = match self.swapped.get(&victim) {
+            Some(&s) => s, // rewrite in place
+            None => {
+                let s = self.slots.alloc();
+                self.swapped.insert(victim, s);
+                s
+            }
+        };
+        let addr = slot * self.page_size;
+        let targets = self.map.write_targets(addr);
+        if targets.is_empty() {
+            self.disk_writes += 1;
+            self.on_disk.insert(victim, slot);
+            self.swapped.remove(&victim);
+            out.push(IoReq {
+                dir: Dir::Write,
+                target: Target::Disk,
+                addr,
+                len: self.page_size,
+            });
+        } else {
+            for n in targets {
+                out.push(IoReq {
+                    dir: Dir::Write,
+                    target: Target::Node(n),
+                    addr,
+                    len: self.page_size,
+                });
+            }
+        }
+    }
+
+    /// The read required to fault `page` in (None = cold first touch).
+    fn load_for(&mut self, page: u64) -> Option<IoReq> {
+        if let Some(&slot) = self.swapped.get(&page) {
+            let addr = slot * self.page_size;
+            match self.map.read_target(addr) {
+                Some(n) => Some(IoReq {
+                    dir: Dir::Read,
+                    target: Target::Node(n),
+                    addr,
+                    len: self.page_size,
+                }),
+                None => {
+                    self.disk_reads += 1;
+                    Some(IoReq {
+                        dir: Dir::Read,
+                        target: Target::Disk,
+                        addr,
+                        len: self.page_size,
+                    })
+                }
+            }
+        } else if let Some(&slot) = self.on_disk.get(&page) {
+            self.disk_reads += 1;
+            Some(IoReq {
+                dir: Dir::Read,
+                target: Target::Disk,
+                addr: slot * self.page_size,
+                len: self.page_size,
+            })
+        } else {
+            self.cold_faults += 1;
+            None
+        }
+    }
+
+    /// Number of pages currently swapped out to remote memory.
+    pub fn swapped_out(&self) -> usize {
+        self.swapped.len()
+    }
+
+    /// Mark pages `0..n` as existing and swapped out (sequential slots) —
+    /// the state after a YCSB load phase populates the store under the
+    /// container limit: everything beyond the resident set lives remote.
+    /// First touches then fault *in* instead of being free cold faults.
+    pub fn prepopulate(&mut self, n: u64) {
+        for page in 0..n {
+            let slot = self.slots.alloc();
+            self.swapped.insert(page, slot);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pager(resident: usize, nodes: usize, replicas: usize) -> Pager {
+        Pager::new(
+            resident,
+            NodeMap::new(nodes, replicas, 1 << 20),
+            4096,
+        )
+    }
+
+    #[test]
+    fn hits_require_no_io() {
+        let mut p = pager(4, 3, 2);
+        p.touch(1, false);
+        let o = p.touch(1, false);
+        assert!(o.hit);
+        assert!(o.load.is_none());
+        assert!(o.writebacks.is_empty());
+    }
+
+    #[test]
+    fn cold_fault_needs_no_read() {
+        let mut p = pager(2, 3, 2);
+        let o = p.touch(1, true);
+        assert!(!o.hit);
+        assert!(o.load.is_none(), "first touch has nothing to load");
+        assert_eq!(p.cold_faults, 1);
+    }
+
+    #[test]
+    fn dirty_eviction_replicates_writeback() {
+        let mut p = pager(1, 3, 2);
+        p.touch(1, true); // resident, dirty
+        let o = p.touch(2, false); // evicts 1
+        assert_eq!(o.writebacks.len(), 2, "2 replicas");
+        assert!(o
+            .writebacks
+            .iter()
+            .all(|w| w.dir == Dir::Write && matches!(w.target, Target::Node(_))));
+        // both replicas carry the same device address
+        assert_eq!(o.writebacks[0].addr, o.writebacks[1].addr);
+        assert_eq!(p.swapped_out(), 1);
+    }
+
+    #[test]
+    fn refault_reads_from_primary_replica() {
+        let mut p = pager(1, 3, 2);
+        p.touch(1, true);
+        let o = p.touch(2, false); // 1 swapped out
+        let slot_addr = o.writebacks[0].addr;
+        let o2 = p.touch(1, false); // refault 1, evicts 2 (clean)
+        let load = o2.load.expect("needs read");
+        assert_eq!(load.dir, Dir::Read);
+        assert_eq!(load.addr, slot_addr);
+        assert!(matches!(load.target, Target::Node(_)));
+    }
+
+    #[test]
+    fn eviction_burst_gets_contiguous_slots() {
+        let mut p = pager(4, 3, 2);
+        for pg in 0..4 {
+            p.touch(pg, true);
+        }
+        // fault in 4 new pages -> 4 dirty evictions
+        let mut addrs = Vec::new();
+        for pg in 4..8 {
+            let o = p.touch(pg, true);
+            for w in &o.writebacks {
+                if matches!(w.target, Target::Node(_)) {
+                    addrs.push(w.addr);
+                }
+            }
+        }
+        addrs.sort_unstable();
+        addrs.dedup();
+        // sequential slot allocation -> contiguous device addresses
+        for w in addrs.windows(2) {
+            assert_eq!(w[1], w[0] + 4096, "contiguous swap slots: {addrs:?}");
+        }
+    }
+
+    #[test]
+    fn all_replicas_dead_falls_back_to_disk() {
+        let mut p = pager(1, 2, 2);
+        p.node_map_mut().set_alive(0, false);
+        p.node_map_mut().set_alive(1, false);
+        p.touch(1, true);
+        let o = p.touch(2, false); // dirty evict -> disk
+        assert_eq!(o.writebacks.len(), 1);
+        assert_eq!(o.writebacks[0].target, Target::Disk);
+        assert_eq!(p.disk_writes, 1);
+        // refault reads from disk
+        let o2 = p.touch(1, false);
+        assert_eq!(o2.load.unwrap().target, Target::Disk);
+        assert_eq!(p.disk_reads, 1);
+    }
+
+    #[test]
+    fn rewrite_in_place_reuses_slot() {
+        let mut p = pager(1, 3, 2);
+        p.touch(1, true);
+        let o = p.touch(2, true); // evict 1 -> slot A
+        let a = o.writebacks[0].addr;
+        let _ = p.touch(1, true); // refault 1 (dirty), evict 2 -> slot B
+        let o3 = p.touch(3, false); // evict 1 again -> must reuse slot A
+        let again: Vec<_> = o3
+            .writebacks
+            .iter()
+            .filter(|w| w.addr == a)
+            .collect();
+        assert!(!again.is_empty(), "slot reused in place");
+    }
+}

@@ -1,0 +1,508 @@
+//! Remote File System (paper §7.2): a userspace network file system over
+//! the RDMAbox node abstraction, FUSE-style — files striped across remote
+//! server nodes, POSIX-ish open/read/write/close, raw-I/O focused (the
+//! paper excludes metadata management from the comparison).
+//!
+//! * [`Vfs`] — inode table, directory map, open-handle table.
+//! * [`Layout`] — stripes file extents over server nodes.
+//! * [`FsClient`] — turns `pwrite`/`pread` into fabric block I/Os.
+//! * [`IozoneDriver`] — the IOzone-like record-size sweep used by Fig 14.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::fabric::sim::{Driver, Sim};
+use crate::fabric::{AppIo, Dir};
+use crate::workloads::DriverStats;
+
+/// Stripe placement: file space → (server node, remote address).
+#[derive(Debug, Clone)]
+pub struct Layout {
+    nodes: usize,
+    stripe_bytes: u64,
+    /// Bytes already allocated per node (per-node linear allocators).
+    alloc: Vec<u64>,
+}
+
+impl Layout {
+    pub fn new(nodes: usize, stripe_bytes: u64) -> Self {
+        assert!(nodes > 0 && stripe_bytes > 0);
+        Self {
+            nodes,
+            stripe_bytes,
+            alloc: vec![0; nodes],
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Reserve remote space for a file of `len` bytes; returns the base
+    /// remote offset used on every node (round-robin stripes).
+    fn reserve(&mut self, len: u64) -> u64 {
+        let stripes = len.div_ceil(self.stripe_bytes);
+        let per_node = stripes.div_ceil(self.nodes as u64) * self.stripe_bytes;
+        let base = *self.alloc.iter().max().unwrap();
+        for a in self.alloc.iter_mut() {
+            *a = base + per_node;
+        }
+        base
+    }
+
+    /// Map a file-relative extent to per-node block I/Os, splitting at
+    /// stripe boundaries.
+    pub fn map(&self, file_base: u64, offset: u64, len: u64) -> Vec<(usize, u64, u64)> {
+        let mut out = Vec::new();
+        let mut off = offset;
+        let end = offset + len;
+        while off < end {
+            let stripe = off / self.stripe_bytes;
+            let within = off % self.stripe_bytes;
+            let chunk = (self.stripe_bytes - within).min(end - off);
+            let node = (stripe % self.nodes as u64) as usize;
+            let node_stripe = stripe / self.nodes as u64;
+            let addr = file_base + node_stripe * self.stripe_bytes + within;
+            out.push((node, addr, chunk));
+            off += chunk;
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Inode {
+    pub ino: u64,
+    pub size: u64,
+    pub base: u64,
+    /// Reserved remote capacity.
+    pub capacity: u64,
+}
+
+/// Minimal VFS: path → inode, open handles.
+#[derive(Debug, Default)]
+pub struct Vfs {
+    by_path: HashMap<String, u64>,
+    inodes: HashMap<u64, Inode>,
+    handles: HashMap<u64, u64>, // fd -> ino
+    next_ino: u64,
+    next_fd: u64,
+}
+
+impl Vfs {
+    pub fn new() -> Self {
+        Self {
+            next_ino: 1,
+            next_fd: 3, // after stdio, for flavor
+            ..Default::default()
+        }
+    }
+
+    pub fn create(&mut self, path: &str, base: u64, capacity: u64) -> u64 {
+        let ino = self.next_ino;
+        self.next_ino += 1;
+        self.by_path.insert(path.to_string(), ino);
+        self.inodes.insert(
+            ino,
+            Inode {
+                ino,
+                size: 0,
+                base,
+                capacity,
+            },
+        );
+        ino
+    }
+
+    pub fn lookup(&self, path: &str) -> Option<&Inode> {
+        self.by_path.get(path).and_then(|i| self.inodes.get(i))
+    }
+
+    pub fn open(&mut self, path: &str) -> Option<u64> {
+        let ino = *self.by_path.get(path)?;
+        let fd = self.next_fd;
+        self.next_fd += 1;
+        self.handles.insert(fd, ino);
+        Some(fd)
+    }
+
+    pub fn close(&mut self, fd: u64) -> bool {
+        self.handles.remove(&fd).is_some()
+    }
+
+    pub fn inode_of_fd(&self, fd: u64) -> Option<&Inode> {
+        self.handles.get(&fd).and_then(|i| self.inodes.get(i))
+    }
+
+    pub fn grow(&mut self, fd: u64, new_size: u64) {
+        if let Some(&ino) = self.handles.get(&fd) {
+            if let Some(inode) = self.inodes.get_mut(&ino) {
+                inode.size = inode.size.max(new_size);
+            }
+        }
+    }
+
+    pub fn unlink(&mut self, path: &str) -> bool {
+        if let Some(ino) = self.by_path.remove(path) {
+            self.inodes.remove(&ino);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// The FS client: POSIX-ish calls → fabric block I/Os.
+#[derive(Debug)]
+pub struct FsClient {
+    pub vfs: Vfs,
+    pub layout: Layout,
+}
+
+impl FsClient {
+    pub fn new(nodes: usize, stripe_bytes: u64) -> Self {
+        Self {
+            vfs: Vfs::new(),
+            layout: Layout::new(nodes, stripe_bytes),
+        }
+    }
+
+    /// Create a file with reserved capacity; returns an open fd.
+    pub fn create(&mut self, path: &str, capacity: u64) -> u64 {
+        let base = self.layout.reserve(capacity);
+        self.vfs.create(path, base, capacity);
+        self.vfs.open(path).unwrap()
+    }
+
+    /// Translate a pwrite/pread into (node, remote_addr, len) I/Os.
+    pub fn io_plan(&mut self, fd: u64, offset: u64, len: u64, write: bool) -> Vec<(usize, u64, u64)> {
+        let inode = self.vfs.inode_of_fd(fd).expect("open fd");
+        assert!(
+            offset + len <= inode.capacity,
+            "I/O beyond reserved capacity"
+        );
+        let base = inode.base;
+        let plan = self.layout.map(base, offset, len);
+        if write {
+            self.vfs.grow(fd, offset + len);
+        }
+        plan
+    }
+}
+
+// ---------------------------------------------------------------------
+// IOzone-like driver (Fig 14)
+// ---------------------------------------------------------------------
+
+/// FUSE caps request payloads (the paper sets MAX_WRITE=128KB), and its
+/// writeback cache / readahead keep a window of requests in flight.
+pub const FUSE_MAX_REQ: u64 = 128 * 1024;
+/// Default request window for async engines (RDMAbox node abstraction,
+/// Accelio messaging): FUSE writeback/readahead depth.
+pub const FUSE_PIPELINE: u32 = 16;
+/// Synchronous-RPC file systems (Octopus, GlusterFS translate each FUSE
+/// request into a blocking RPC — one outstanding request per stream).
+pub const SYNC_RPC_PIPELINE: u32 = 1;
+
+/// Pipeline depth a stack's FS client design sustains.
+pub fn pipeline_of(stack: &crate::coordinator::StackConfig) -> u32 {
+    use crate::coordinator::batching::BatchMode;
+    if stack.batch == BatchMode::Single {
+        SYNC_RPC_PIPELINE
+    } else {
+        FUSE_PIPELINE
+    }
+}
+
+/// Sequential write phase then sequential read phase over one big file.
+/// IOzone issues record-sized calls; the FUSE layer splits them into
+/// ≤128 KB requests and keeps up to [`FUSE_PIPELINE`] in flight (writeback
+/// cache on the write path, readahead on the read path). Those concurrent,
+/// *adjacent* requests are exactly what Load-aware Batching merges.
+pub struct IozoneDriver {
+    fs: FsClient,
+    fd: u64,
+    pub record: u64,
+    pub file_bytes: u64,
+    /// FUSE message-loop overhead per request (user↔kernel crossing).
+    fuse_overhead_ns: u64,
+    /// Per-request MR staging done by the daemon thread (serialized):
+    /// memcpy into preMR or buffer registration for dynMR.
+    staging_write_ns: u64,
+    staging_read_ns: u64,
+    chunk: u64,
+    pipeline: u32,
+    /// The FUSE daemon dispatches requests serially; this is its timeline.
+    dispatch_free: u64,
+    phase_write: bool,
+    /// Next file offset to issue.
+    offset: u64,
+    inflight: u32,
+    /// Bytes completed in this phase.
+    done_bytes: u64,
+    stats: Rc<RefCell<DriverStats>>,
+    pub write_done_ns: u64,
+    pub read_done_ns: u64,
+    t_phase_start: u64,
+}
+
+impl IozoneDriver {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        nodes: usize,
+        stripe_bytes: u64,
+        record: u64,
+        file_bytes: u64,
+        fuse_overhead_ns: u64,
+        staging_write_ns: u64,
+        staging_read_ns: u64,
+        pipeline: u32,
+        stats: Rc<RefCell<DriverStats>>,
+    ) -> Self {
+        let mut fs = FsClient::new(nodes, stripe_bytes);
+        let fd = fs.create("/testfile", file_bytes);
+        Self {
+            fs,
+            fd,
+            record,
+            file_bytes,
+            fuse_overhead_ns,
+            staging_write_ns,
+            staging_read_ns,
+            chunk: record.min(FUSE_MAX_REQ),
+            pipeline: pipeline.max(1),
+            dispatch_free: 0,
+            phase_write: true,
+            offset: 0,
+            inflight: 0,
+            done_bytes: 0,
+            stats,
+            write_done_ns: 0,
+            read_done_ns: 0,
+            t_phase_start: 0,
+        }
+    }
+
+    /// Keep the FUSE request window full. Dispatch is serialized through
+    /// the daemon (one user↔kernel crossing per request).
+    fn pump(&mut self, sim: &mut Sim, at: u64) {
+        while self.inflight < self.pipeline && self.offset < self.file_bytes {
+            let len = self.chunk.min(self.file_bytes - self.offset);
+            let staging = if self.phase_write {
+                self.staging_write_ns
+            } else {
+                self.staging_read_ns
+            };
+            self.dispatch_free = self.dispatch_free.max(at) + self.fuse_overhead_ns + staging;
+            let at = self.dispatch_free;
+            let write = self.phase_write;
+            let plan = self.fs.io_plan(self.fd, self.offset, len, write);
+            self.offset += len;
+            for (node, addr, l) in plan {
+                let dir = if write { Dir::Write } else { Dir::Read };
+                sim.submit_at(dir, node, addr, l, 0, at);
+                self.inflight += 1;
+            }
+        }
+    }
+
+    fn phase_finished(&mut self, sim: &mut Sim, now: u64) {
+        if self.phase_write {
+            self.write_done_ns = now.saturating_sub(self.t_phase_start);
+            self.phase_write = false;
+            self.offset = 0;
+            self.done_bytes = 0;
+            self.t_phase_start = now;
+            self.pump(sim, now);
+        } else {
+            self.read_done_ns = now.saturating_sub(self.t_phase_start);
+            self.stats.borrow_mut().end_ns = now;
+            sim.request_stop();
+        }
+    }
+}
+
+impl Driver for IozoneDriver {
+    fn on_start(&mut self, sim: &mut Sim) {
+        self.t_phase_start = 0;
+        self.pump(sim, 0);
+    }
+
+    fn on_io_done(&mut self, sim: &mut Sim, io: &AppIo, _lat: u64, done_at: u64) {
+        self.inflight = self.inflight.saturating_sub(1);
+        self.done_bytes += io.len;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.ops_done += 1;
+            s.warm_ops += 1;
+        }
+        if self.done_bytes >= self.file_bytes && self.inflight == 0 {
+            self.phase_finished(sim, done_at);
+        } else {
+            self.pump(sim, done_at);
+        }
+    }
+
+    fn on_timer(&mut self, _sim: &mut Sim, _t: usize, _tag: u64) {}
+}
+
+/// Fig 14 runner: returns (write GB/s, read GB/s) for a stack at a record
+/// size.
+pub fn run_iozone(
+    fabric: &crate::config::FabricConfig,
+    stack: &crate::coordinator::StackConfig,
+    nodes: usize,
+    record: u64,
+    file_bytes: u64,
+) -> (f64, f64) {
+    use crate::fabric::sim::engine::StackEngine;
+    let mut sim = Sim::new(fabric.clone(), stack.clone(), nodes);
+    sim.attach_engine(Box::new(StackEngine::new(fabric, stack)));
+    let stats = DriverStats::shared();
+    // FUSE crossing ≈ 6 µs per request (same client for every system —
+    // the paper compares FUSE-based systems against each other only);
+    // pipeline depth reflects the system's client design (async engine vs
+    // synchronous per-request RPC).
+    let depth = pipeline_of(stack);
+    // the FUSE daemon stages each request (copy or registration) before
+    // posting — serialized in its dispatch thread
+    let chunk = record.min(FUSE_MAX_REQ);
+    let stage_w =
+        crate::coordinator::mr_strategy::post_cost_ns(fabric, stack.mr, stack.space, chunk, true);
+    let stage_r =
+        crate::coordinator::mr_strategy::post_cost_ns(fabric, stack.mr, stack.space, chunk, false);
+    let drv = IozoneDriver::new(
+        nodes, 1 << 20, record, file_bytes, 6_000, stage_w, stage_r, depth, stats,
+    );
+    let cell = Rc::new(RefCell::new((0u64, 0u64)));
+    // wrap to capture phase times
+    struct Wrap {
+        inner: IozoneDriver,
+        out: Rc<RefCell<(u64, u64)>>,
+    }
+    impl Driver for Wrap {
+        fn on_start(&mut self, sim: &mut Sim) {
+            self.inner.on_start(sim)
+        }
+        fn on_io_done(&mut self, sim: &mut Sim, io: &AppIo, l: u64, a: u64) {
+            self.inner.on_io_done(sim, io, l, a);
+            *self.out.borrow_mut() = (self.inner.write_done_ns, self.inner.read_done_ns);
+        }
+        fn on_timer(&mut self, sim: &mut Sim, t: usize, g: u64) {
+            self.inner.on_timer(sim, t, g)
+        }
+    }
+    sim.attach_driver(Box::new(Wrap {
+        inner: drv,
+        out: cell.clone(),
+    }));
+    let _ = sim.run(u64::MAX / 2);
+    let (w_ns, r_ns) = *cell.borrow();
+    let gbs = |ns: u64| {
+        if ns == 0 {
+            0.0
+        } else {
+            file_bytes as f64 / ns as f64 // bytes/ns == GB/s
+        }
+    };
+    (gbs(w_ns), gbs(r_ns))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::config::FabricConfig;
+    use crate::coordinator::StackConfig;
+
+    #[test]
+    fn layout_splits_at_stripe_boundaries() {
+        let l = Layout::new(3, 1024);
+        let plan = l.map(0, 512, 1536);
+        // 512..1024 on stripe0(node0), 1024..2048 on stripe1(node1)
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0], (0, 512, 512));
+        assert_eq!(plan[1], (1, 0 + 0 * 1024 + 0, 1024));
+    }
+
+    #[test]
+    fn layout_round_robins_nodes() {
+        let l = Layout::new(4, 1 << 20);
+        let plan = l.map(0, 0, 4 << 20);
+        let nodes: Vec<usize> = plan.iter().map(|p| p.0).collect();
+        assert_eq!(nodes, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn layout_conserves_bytes() {
+        let l = Layout::new(3, 4096);
+        for (off, len) in [(0u64, 10_000u64), (5000, 123), (4095, 2)] {
+            let total: u64 = l.map(0, off, len).iter().map(|p| p.2).sum();
+            assert_eq!(total, len);
+        }
+    }
+
+    #[test]
+    fn vfs_lifecycle() {
+        let mut v = Vfs::new();
+        v.create("/a", 0, 1 << 20);
+        let fd = v.open("/a").unwrap();
+        assert!(v.inode_of_fd(fd).is_some());
+        v.grow(fd, 4096);
+        assert_eq!(v.lookup("/a").unwrap().size, 4096);
+        assert!(v.close(fd));
+        assert!(!v.close(fd));
+        assert!(v.unlink("/a"));
+        assert!(v.lookup("/a").is_none());
+    }
+
+    #[test]
+    fn fs_client_plans_within_capacity() {
+        let mut fs = FsClient::new(2, 4096);
+        let fd = fs.create("/f", 1 << 20);
+        let plan = fs.io_plan(fd, 0, 8192, true);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(fs.vfs.inode_of_fd(fd).unwrap().size, 8192);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond reserved capacity")]
+    fn fs_client_rejects_overflow() {
+        let mut fs = FsClient::new(2, 4096);
+        let fd = fs.create("/f", 4096);
+        let _ = fs.io_plan(fd, 0, 8192, true);
+    }
+
+    #[test]
+    fn two_files_do_not_overlap() {
+        let mut fs = FsClient::new(2, 4096);
+        let f1 = fs.create("/a", 64 << 10);
+        let f2 = fs.create("/b", 64 << 10);
+        let p1 = fs.io_plan(f1, 0, 64 << 10, true);
+        let p2 = fs.io_plan(f2, 0, 64 << 10, true);
+        // same node extents must not intersect
+        for (n1, a1, l1) in &p1 {
+            for (n2, a2, l2) in &p2 {
+                if n1 == n2 {
+                    let no_overlap = a1 + l1 <= *a2 || a2 + l2 <= *a1;
+                    assert!(no_overlap, "overlap: {p1:?} vs {p2:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn iozone_runs_and_rdmabox_beats_glusterfs() {
+        let cfg = FabricConfig::default();
+        let rbox = StackConfig::rdmabox_user(&cfg);
+        let gluster = baselines::glusterfs(&cfg);
+        let (w_box, r_box) = run_iozone(&cfg, &rbox, 4, 128 << 10, 16 << 20);
+        let (w_glu, r_glu) = run_iozone(&cfg, &gluster, 4, 128 << 10, 16 << 20);
+        assert!(w_box > 0.0 && r_box > 0.0);
+        assert!(
+            w_box > w_glu && r_box > r_glu,
+            "RDMAbox w={w_box:.2}/r={r_box:.2} vs Gluster w={w_glu:.2}/r={r_glu:.2}"
+        );
+    }
+}

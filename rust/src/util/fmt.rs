@@ -1,0 +1,102 @@
+//! Human-readable formatting for bytes, rates, durations, counts.
+
+pub fn bytes(v: u64) -> String {
+    bytes_f(v as f64)
+}
+
+pub fn bytes_f(v: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut x = v;
+    let mut i = 0;
+    while x >= 1024.0 && i + 1 < UNITS.len() {
+        x /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{:.0}{}", x, UNITS[i])
+    } else {
+        format!("{:.2}{}", x, UNITS[i])
+    }
+}
+
+/// Bytes/second.
+pub fn rate(bytes_per_sec: f64) -> String {
+    format!("{}/s", bytes_f(bytes_per_sec))
+}
+
+/// Nanoseconds, auto-scaled.
+pub fn dur_ns(ns: u64) -> String {
+    dur_ns_f(ns as f64)
+}
+
+pub fn dur_ns_f(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}us", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2}s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Large counts: 13_200_000 -> "13.2M".
+pub fn count(v: u64) -> String {
+    let x = v as f64;
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.1}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.0}K", x / 1e3)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Ops/sec with auto-scaling.
+pub fn ops(v: f64) -> String {
+    if v >= 1e6 {
+        format!("{:.2}Mops/s", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}Kops/s", v / 1e3)
+    } else {
+        format!("{v:.1}ops/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_scales() {
+        assert_eq!(bytes(512), "512B");
+        assert_eq!(bytes(2048), "2.00KB");
+        assert_eq!(bytes(7 * 1024 * 1024), "7.00MB");
+        assert_eq!(bytes(3 * 1024 * 1024 * 1024), "3.00GB");
+    }
+
+    #[test]
+    fn durations_scale() {
+        assert_eq!(dur_ns(500), "500ns");
+        assert_eq!(dur_ns(1500), "1.50us");
+        assert_eq!(dur_ns(2_500_000), "2.50ms");
+        assert_eq!(dur_ns(3_000_000_000), "3.00s");
+    }
+
+    #[test]
+    fn counts_scale() {
+        assert_eq!(count(999), "999");
+        assert_eq!(count(13_200_000), "13.2M");
+        assert_eq!(count(308_000), "308K");
+        assert_eq!(count(2_500_000_000), "2.50G");
+    }
+
+    #[test]
+    fn ops_scale() {
+        assert_eq!(ops(1_500_000.0), "1.50Mops/s");
+        assert_eq!(ops(2_500.0), "2.5Kops/s");
+    }
+}

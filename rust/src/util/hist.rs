@@ -1,0 +1,252 @@
+//! Log-bucketed latency histogram (HDR-histogram style, no deps).
+//!
+//! Values are nanoseconds (u64). Buckets: 64 major buckets (one per leading
+//! bit) × `SUB` minor buckets each, giving ~1.6% relative error — plenty for
+//! p99/p99.9 tail-latency figures (Fig 7, Fig 12).
+
+const SUB_BITS: u32 = 6;
+const SUB: usize = 1 << SUB_BITS; // 64 sub-buckets per power of two
+
+#[derive(Clone)]
+pub struct Hist {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; 64 * SUB],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros(); // >= SUB_BITS
+        let major = (msb - SUB_BITS + 1) as usize;
+        let shift = msb - SUB_BITS;
+        let minor = ((v >> shift) & (SUB as u64 - 1)) as usize;
+        major * SUB + minor
+    }
+
+    /// Representative (upper-edge midpoint) value of bucket `i`.
+    fn value_of(i: usize) -> u64 {
+        let major = i / SUB;
+        let minor = (i % SUB) as u64;
+        if major == 0 {
+            return minor;
+        }
+        let shift = major as u32 - 1;
+        ((SUB as u64 + minor) << shift) + (1u64 << shift) / 2
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    #[inline]
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.counts[Self::index(v)] += n;
+        self.total += n;
+        self.sum += v as u128 * n as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in `[0, 1]`; returns a representative value.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::value_of(i).min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+        self.sum = 0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+}
+
+impl std::fmt::Debug for Hist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Hist{{n={} mean={:.0} p50={} p99={} max={}}}",
+            self.total,
+            self.mean(),
+            self.p50(),
+            self.p99(),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn empty_hist_is_zero() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let mut h = Hist::new();
+        for v in 0..SUB as u64 {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), SUB as u64 - 1);
+        assert_eq!(h.quantile(0.0), 0);
+    }
+
+    #[test]
+    fn quantile_relative_error_bounded() {
+        let mut h = Hist::new();
+        let mut rng = Pcg32::new(1);
+        let mut vals: Vec<u64> = (0..100_000).map(|_| rng.gen_range(100, 10_000_000)).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let exact = vals[((q * vals.len() as f64) as usize).min(vals.len() - 1)];
+            let approx = h.quantile(q);
+            let rel = (approx as f64 - exact as f64).abs() / exact as f64;
+            assert!(rel < 0.05, "q={q} exact={exact} approx={approx} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let mut h = Hist::new();
+        for v in [10u64, 20, 30, 40] {
+            h.record(v);
+        }
+        assert!((h.mean() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        a.record(100);
+        b.record(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 100);
+        assert!(a.max() >= 1_000_000);
+    }
+
+    #[test]
+    fn record_n_equivalent_to_loop() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        a.record_n(12345, 10);
+        for _ in 0..10 {
+            b.record(12345);
+        }
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.p50(), b.p50());
+        assert!((a.mean() - b.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let mut h = Hist::new();
+        let mut rng = Pcg32::new(9);
+        for _ in 0..10_000 {
+            h.record(rng.gen_range(1, 1_000_000));
+        }
+        let mut last = 0;
+        for i in 0..=100 {
+            let v = h.quantile(i as f64 / 100.0);
+            assert!(v >= last);
+            last = v;
+        }
+    }
+}

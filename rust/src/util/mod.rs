@@ -1,0 +1,10 @@
+//! Shared utilities: deterministic RNGs, Zipfian generators, histograms,
+//! statistics, property-test driver, and human-readable formatting.
+
+pub mod fmt;
+pub mod fxhash;
+pub mod hist;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod zipf;

@@ -1,0 +1,114 @@
+//! Minimal property-based testing driver (proptest is not in the offline
+//! registry). Runs a property over many seeded random cases and, on failure,
+//! retries with progressively "smaller" generator budgets to report a
+//! near-minimal case, then panics with the reproducing seed.
+
+use super::rng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct PropCfg {
+    pub cases: u32,
+    pub seed: u64,
+    /// Upper bound passed to the property as a size hint; shrink attempts
+    /// re-run failing seeds with smaller sizes.
+    pub max_size: usize,
+}
+
+impl Default for PropCfg {
+    fn default() -> Self {
+        Self {
+            cases: 256,
+            seed: 0x5D_B0C5, // tests usually pin their own seed via `cfg()`
+            max_size: 64,
+        }
+    }
+}
+
+/// `forall(cfg, |rng, size| -> Result<(), String>)`
+pub fn forall<F>(cfg: PropCfg, mut prop: F)
+where
+    F: FnMut(&mut Pcg32, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg32::new(case_seed);
+        let size = 1 + (rng.gen_below(cfg.max_size as u64) as usize);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: retry the same seed with smaller sizes to find the
+            // smallest size that still fails.
+            let mut min_fail = (size, msg.clone());
+            for s in 1..size {
+                let mut r2 = Pcg32::new(case_seed);
+                if let Err(m) = prop(&mut r2, s) {
+                    min_fail = (s, m);
+                    break;
+                }
+            }
+            panic!(
+                "property failed (seed={case_seed:#x}, case={case}, size={}): {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+/// Convenience: default config with an explicit seed (tests pin seeds so CI
+/// is deterministic).
+pub fn cfg(seed: u64) -> PropCfg {
+    PropCfg {
+        cases: 256,
+        seed,
+        max_size: 64,
+    }
+}
+
+/// Generate a random vector of u64 in [0, bound).
+pub fn vec_u64(rng: &mut Pcg32, len: usize, bound: u64) -> Vec<u64> {
+    (0..len).map(|_| rng.gen_below(bound)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(cfg(1), |rng, size| {
+            let v = vec_u64(rng, size, 100);
+            if v.len() == size {
+                Ok(())
+            } else {
+                Err("len mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(cfg(2), |_rng, size| {
+            if size < 1000 {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_reports_small_size() {
+        let r = std::panic::catch_unwind(|| {
+            forall(cfg(3), |_rng, size| {
+                if size >= 2 {
+                    Err("fails at >=2".into())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("size=2"), "msg: {msg}");
+    }
+}

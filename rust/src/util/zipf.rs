@@ -1,0 +1,207 @@
+//! Zipfian distribution generator, YCSB-style.
+//!
+//! The paper drives VoltDB/MongoDB/Redis with YCSB using a Zipfian request
+//! distribution over 10M records (Facebook ETC/SYS workloads). This is the
+//! same incremental-zeta generator YCSB uses (Gray et al., "Quickly
+//! generating billion-record synthetic databases"), so hot-set skew matches.
+
+use super::rng::Pcg32;
+
+/// Zipfian generator over `[0, n)` with skew `theta` (YCSB default 0.99).
+#[derive(Debug, Clone)]
+pub struct Zipfian {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipfian {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0, "zipfian over empty domain");
+        assert!((0.0..1.0).contains(&theta) || theta > 0.0);
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Self {
+            n,
+            theta,
+            alpha,
+            zetan,
+            eta,
+            zeta2,
+        }
+    }
+
+    /// YCSB default skew.
+    pub fn ycsb(n: u64) -> Self {
+        Self::new(n, 0.99)
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // Direct sum for small n; integral approximation for large n keeps
+        // construction O(1)-ish without materially changing the skew.
+        if n <= 1_000_000 {
+            (1..=n).map(|i| 1.0 / (i as f64).powf(theta)).sum()
+        } else {
+            let head: f64 = (1..=1_000_000u64)
+                .map(|i| 1.0 / (i as f64).powf(theta))
+                .sum();
+            // integral of x^-theta from 1e6 to n
+            let a = 1.0 - theta;
+            head + ((n as f64).powf(a) - 1_000_000f64.powf(a)) / a
+        }
+    }
+
+    /// Sample a rank in `[0, n)`; rank 0 is the hottest item.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg32) -> u64 {
+        let u = rng.gen_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let v = ((self.eta * u) - self.eta + 1.0).powf(self.alpha);
+        let item = (self.n as f64 * v) as u64;
+        item.min(self.n - 1)
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    /// Fraction of probability mass carried by the hottest `k` items
+    /// (analytic, used to size resident sets in the app models).
+    pub fn mass_of_top(&self, k: u64) -> f64 {
+        Self::zeta(k.min(self.n).max(1), self.theta) / self.zetan
+    }
+
+    #[allow(dead_code)]
+    fn zeta2(&self) -> f64 {
+        self.zeta2
+    }
+}
+
+/// Scrambled Zipfian: spreads the hot ranks over the key space with a
+/// multiplicative hash, as YCSB's `ScrambledZipfianGenerator` does, so hot
+/// keys are not physically adjacent (matters for merge-adjacency realism).
+#[derive(Debug, Clone)]
+pub struct ScrambledZipfian {
+    inner: Zipfian,
+}
+
+impl ScrambledZipfian {
+    pub fn new(n: u64, theta: f64) -> Self {
+        Self {
+            inner: Zipfian::new(n, theta),
+        }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg32) -> u64 {
+        let rank = self.inner.sample(rng);
+        fnv1a64(rank) % self.inner.n()
+    }
+
+    pub fn n(&self) -> u64 {
+        self.inner.n()
+    }
+
+    /// Recover the underlying rank→key mapping (tests / resident-set setup).
+    pub fn key_for_rank(&self, rank: u64) -> u64 {
+        fnv1a64(rank) % self.inner.n()
+    }
+}
+
+#[inline]
+pub fn fnv1a64(x: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for i in 0..8 {
+        h ^= (x >> (i * 8)) & 0xff;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_in_range() {
+        let z = Zipfian::ycsb(1000);
+        let mut rng = Pcg32::new(1);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 1000);
+        }
+    }
+
+    #[test]
+    fn rank_zero_is_hottest() {
+        let z = Zipfian::ycsb(10_000);
+        let mut rng = Pcg32::new(2);
+        let mut counts = vec![0u32; 10_000];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        let c0 = counts[0];
+        // hottest item should dominate e.g. the item at rank 100
+        assert!(c0 > counts[100] * 3, "c0={} c100={}", c0, counts[100]);
+        // and carry several percent of total mass at theta=0.99
+        assert!(c0 as f64 / 100_000.0 > 0.03);
+    }
+
+    #[test]
+    fn skew_matches_analytic_top_mass() {
+        let z = Zipfian::ycsb(100_000);
+        let mut rng = Pcg32::new(3);
+        let n = 200_000;
+        let k = 1000;
+        let hits = (0..n).filter(|_| z.sample(&mut rng) < k).count();
+        let frac = hits as f64 / n as f64;
+        let analytic = z.mass_of_top(k);
+        assert!(
+            (frac - analytic).abs() < 0.03,
+            "measured {frac} analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn scrambled_spreads_hot_keys() {
+        let z = ScrambledZipfian::new(1_000_000, 0.99);
+        let k0 = z.key_for_rank(0);
+        let k1 = z.key_for_rank(1);
+        assert_ne!(k0, k1);
+        // hot keys should not be adjacent after scrambling
+        assert!(k0.abs_diff(k1) > 1000);
+    }
+
+    #[test]
+    fn large_domain_constructs_fast_and_samples() {
+        let z = Zipfian::ycsb(1_000_000_000);
+        let mut rng = Pcg32::new(4);
+        for _ in 0..1000 {
+            assert!(z.sample(&mut rng) < 1_000_000_000);
+        }
+    }
+
+    #[test]
+    fn mass_of_top_monotone() {
+        let z = Zipfian::ycsb(10_000);
+        let m10 = z.mass_of_top(10);
+        let m100 = z.mass_of_top(100);
+        let m_all = z.mass_of_top(10_000);
+        assert!(m10 < m100 && m100 < m_all);
+        assert!((m_all - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,175 @@
+//! FIO-style raw block workload: N threads, each keeping `iodepth` random
+//! block I/Os in flight against the remote block device (Fig 1, Fig 8).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::fabric::sim::{Driver, Sim};
+use crate::fabric::{AppIo, Dir};
+use crate::util::rng::Pcg32;
+
+use super::DriverStats;
+
+pub struct FioDriver {
+    pub threads: usize,
+    pub iodepth: usize,
+    pub block: u64,
+    /// 0..=100.
+    pub read_pct: u64,
+    /// Device span in bytes (addresses are sampled uniformly in it).
+    pub span: u64,
+    pub nodes: usize,
+    pub target_ops: u64,
+    pub warmup_ops: u64,
+    rng: Pcg32,
+    stats: Rc<RefCell<DriverStats>>,
+    submitted: u64,
+    done: u64,
+}
+
+impl FioDriver {
+    pub fn new(
+        threads: usize,
+        iodepth: usize,
+        block: u64,
+        read_pct: u64,
+        span: u64,
+        nodes: usize,
+        target_ops: u64,
+        seed: u64,
+        stats: Rc<RefCell<DriverStats>>,
+    ) -> Self {
+        Self {
+            threads,
+            iodepth,
+            block,
+            read_pct,
+            span,
+            nodes,
+            target_ops,
+            warmup_ops: target_ops / 10,
+            rng: Pcg32::new(seed),
+            stats,
+            submitted: 0,
+            done: 0,
+        }
+    }
+
+    fn one(&mut self, sim: &mut Sim, thread: usize, at: u64) {
+        let blocks = (self.span / self.block).max(1);
+        let addr = self.rng.gen_below(blocks) * self.block;
+        let dir = if self.rng.gen_below(100) < self.read_pct {
+            Dir::Read
+        } else {
+            Dir::Write
+        };
+        let node = (addr / self.block) as usize % self.nodes;
+        sim.submit_at(dir, node, addr, self.block, thread, at);
+        self.submitted += 1;
+    }
+}
+
+impl Driver for FioDriver {
+    fn on_start(&mut self, sim: &mut Sim) {
+        for t in 0..self.threads {
+            for _ in 0..self.iodepth {
+                self.one(sim, t, 0);
+            }
+        }
+    }
+
+    fn on_io_done(&mut self, sim: &mut Sim, io: &AppIo, lat: u64, done_at: u64) {
+        self.done += 1;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.ops_done = self.done;
+            s.end_ns = done_at;
+            if self.done == self.warmup_ops {
+                s.warm_start_ns = done_at;
+            }
+            if self.done > self.warmup_ops {
+                s.warm_ops += 1;
+                s.op_lat.record(lat);
+            }
+        }
+        if self.done + (self.threads * self.iodepth) as u64 > self.target_ops
+            && self.submitted >= self.target_ops
+        {
+            if self.done >= self.target_ops {
+                sim.request_stop();
+            }
+            return; // drain without resubmitting
+        }
+        self.one(sim, io.thread, done_at);
+    }
+
+    fn on_timer(&mut self, _sim: &mut Sim, _t: usize, _tag: u64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FabricConfig;
+    use crate::coordinator::StackConfig;
+    use crate::fabric::sim::engine::StackEngine;
+
+    fn run_fio(threads: usize, qps: usize, window: Option<u64>) -> (crate::fabric::sim::SimReport, Rc<RefCell<DriverStats>>) {
+        let cfg = FabricConfig::default();
+        let stack = StackConfig::rdmabox(&cfg)
+            .with_qps(qps)
+            .with_window(window);
+        let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
+        sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
+        let stats = DriverStats::shared();
+        sim.attach_driver(Box::new(FioDriver::new(
+            threads,
+            2,
+            4096,
+            50,
+            1 << 30,
+            1,
+            4000,
+            7,
+            stats.clone(),
+        )));
+        (sim.run(u64::MAX / 2), stats)
+    }
+
+    #[test]
+    fn completes_target() {
+        let (r, stats) = run_fio(4, 1, None);
+        assert!(r.completed_reads + r.completed_writes >= 4000);
+        assert!(stats.borrow().throughput() > 0.0);
+    }
+
+    #[test]
+    fn iops_rises_then_falls_with_threads_single_qp() {
+        // the Fig 1a shape: saturation then decline under WQE-cache thrash
+        let mut iops = Vec::new();
+        for threads in [1usize, 2, 4, 8, 16] {
+            let (r, _) = run_fio(threads, 1, None);
+            iops.push(r.iops());
+        }
+        let peak = iops.iter().cloned().fold(0.0f64, f64::max);
+        let peak_idx = iops.iter().position(|&x| x == peak).unwrap();
+        assert!(peak_idx >= 1, "peak not at 1 thread: {iops:?}");
+        assert!(
+            *iops.last().unwrap() < peak * 0.98,
+            "no decline after peak: {iops:?}"
+        );
+    }
+
+    #[test]
+    fn admission_control_tames_heavy_load() {
+        // Fig 8: with a window, high-thread-count IOPS should not collapse
+        let (without, _) = run_fio(16, 4, None);
+        let (with, _) = run_fio(16, 4, Some(7 << 20));
+        assert!(
+            with.iops() >= without.iops() * 0.95,
+            "with {} vs without {}",
+            with.iops(),
+            without.iops()
+        );
+        assert!(with.peak_inflight_bytes <= 7 << 20);
+    }
+}

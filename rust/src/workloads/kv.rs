@@ -1,0 +1,488 @@
+//! Memory-intensive application model: an in-memory store (VoltDB /
+//! MongoDB / Redis profile) driven by YCSB Zipfian workloads (Facebook
+//! ETC = 95/5 read/write, SYS = 75/25) under a container memory limit —
+//! the paper's §6/§7.1 methodology. Misses page against the remote paging
+//! system; dirty evictions replicate to 2 remote nodes.
+
+use std::cell::RefCell;
+use crate::util::fxhash::FxHashMap;
+use std::rc::Rc;
+
+use crate::coordinator::node::NodeMap;
+use crate::fabric::sim::{Driver, Sim};
+use crate::fabric::{AppIo, Dir};
+use crate::paging::{Pager, Target};
+use crate::util::rng::Pcg32;
+use crate::util::zipf::ScrambledZipfian;
+
+use super::DriverStats;
+
+/// Application profile: how much CPU and how many page touches one
+/// app-level operation costs.
+#[derive(Debug, Clone, Copy)]
+pub struct AppProfile {
+    pub name: &'static str,
+    pub record_bytes: u64,
+    /// App compute per op (query parsing, index walk, txn bookkeeping).
+    pub cpu_per_op_ns: u64,
+    /// Probability an op touches a second data page (large documents /
+    /// overflow chains).
+    pub second_page_prob: f64,
+    /// Probability an op touches a uniformly-random page of the heap —
+    /// index interior nodes, allocator metadata, undo/txn buffers. This is
+    /// what makes the apps *memory-intensive*: the uniform component defeats
+    /// the page cache once the container limit bites (paper §6: "indexing
+    /// strategies ... require more memory for indices as well as dataset").
+    pub uniform_touch_prob: f64,
+}
+
+/// VoltDB: ACID in-memory SQL — CPU-heavy per op, 1 KB tuples, big index
+/// and txn-undo footprint.
+pub fn voltdb() -> AppProfile {
+    AppProfile {
+        name: "VoltDB",
+        record_bytes: 1024,
+        cpu_per_op_ns: 6_000,
+        second_page_prob: 0.15,
+        uniform_touch_prob: 0.6,
+    }
+}
+
+/// MongoDB: document store, ~2 KB documents, BSON parsing overhead,
+/// B-tree indexes over the whole collection.
+pub fn mongodb() -> AppProfile {
+    AppProfile {
+        name: "MongoDB",
+        record_bytes: 2048,
+        cpu_per_op_ns: 9_000,
+        second_page_prob: 0.35,
+        uniform_touch_prob: 0.7,
+    }
+}
+
+/// Redis: thin KV interface, small values, cheapest CPU path, dict +
+/// allocator metadata spread over the heap.
+pub fn redis() -> AppProfile {
+    AppProfile {
+        name: "Redis",
+        record_bytes: 512,
+        cpu_per_op_ns: 2_500,
+        second_page_prob: 0.05,
+        uniform_touch_prob: 0.45,
+    }
+}
+
+/// YCSB workload mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mix {
+    /// Facebook ETC: 95% read / 5% write.
+    Etc,
+    /// Facebook SYS: 75% read / 25% write.
+    Sys,
+}
+
+impl Mix {
+    pub fn read_pct(self) -> u64 {
+        match self {
+            Mix::Etc => 95,
+            Mix::Sys => 75,
+        }
+    }
+    pub fn label(self) -> &'static str {
+        match self {
+            Mix::Etc => "ETC",
+            Mix::Sys => "SYS",
+        }
+    }
+}
+
+/// Build configuration for the KV model.
+#[derive(Debug, Clone)]
+pub struct KvConfig {
+    pub profile: AppProfile,
+    pub mix: Mix,
+    pub records: u64,
+    pub zipf_theta: f64,
+    /// Fraction of the working set that fits in memory (container limit).
+    pub resident_frac: f64,
+    pub threads: usize,
+    pub ops: u64,
+    pub warmup_frac: f64,
+    pub nodes: usize,
+    pub replicas: usize,
+    pub page_size: u64,
+    pub seed: u64,
+}
+
+impl KvConfig {
+    pub fn small(profile: AppProfile, mix: Mix) -> Self {
+        Self {
+            profile,
+            mix,
+            records: 200_000,
+            zipf_theta: 0.99,
+            resident_frac: 0.25,
+            threads: 8,
+            ops: 60_000,
+            warmup_frac: 0.25,
+            nodes: 3,
+            replicas: 2,
+            page_size: 4096,
+            seed: 0x5EED,
+        }
+    }
+
+    pub fn total_pages(&self) -> u64 {
+        (self.records * self.profile.record_bytes).div_ceil(self.page_size)
+    }
+}
+
+const TAG_NEXT_OP: u64 = 1;
+
+struct ThreadState {
+    /// Reads this op is still blocked on.
+    waiting: u32,
+    op_start: u64,
+    /// CPU to charge once reads complete.
+    cpu_ns: u64,
+}
+
+pub struct KvDriver {
+    cfg: KvConfig,
+    zipf: ScrambledZipfian,
+    rng: Pcg32,
+    pager: Pager,
+    threads: Vec<ThreadState>,
+    /// io id -> thread blocked on it (reads only).
+    waiting_reads: FxHashMap<u64, usize>,
+    stats: Rc<RefCell<DriverStats>>,
+    ops_issued: u64,
+    ops_done: u64,
+    warmup_ops: u64,
+    stopping: bool,
+    disk_ns: u64,
+}
+
+impl KvDriver {
+    pub fn new(cfg: KvConfig, disk_ns: u64, stats: Rc<RefCell<DriverStats>>) -> Self {
+        let resident_pages = ((cfg.total_pages() as f64) * cfg.resident_frac).max(16.0) as usize;
+        let map = NodeMap::new(cfg.nodes, cfg.replicas, 1 << 20);
+        let mut pager =
+            Pager::new(resident_pages, map, cfg.page_size).with_reclaim_batch(32);
+        // YCSB load phase: the store is fully populated before measurement;
+        // everything beyond the container limit already lives remote
+        pager.prepopulate(cfg.total_pages());
+        let zipf = ScrambledZipfian::new(cfg.records, cfg.zipf_theta);
+        let warmup_ops = (cfg.ops as f64 * cfg.warmup_frac) as u64;
+        let threads = (0..cfg.threads)
+            .map(|_| ThreadState {
+                waiting: 0,
+                op_start: 0,
+                cpu_ns: 0,
+            })
+            .collect();
+        Self {
+            rng: Pcg32::new(cfg.seed),
+            zipf,
+            pager,
+            threads,
+            waiting_reads: FxHashMap::default(),
+            stats,
+            ops_issued: 0,
+            ops_done: 0,
+            warmup_ops,
+            stopping: false,
+            disk_ns,
+            cfg,
+        }
+    }
+
+    pub fn pager(&self) -> &Pager {
+        &self.pager
+    }
+
+    fn submit_req(
+        &mut self,
+        sim: &mut Sim,
+        req: crate::paging::IoReq,
+        thread: usize,
+        at: u64,
+        block_on_it: bool,
+    ) {
+        match req.target {
+            Target::Node(n) => {
+                let id = sim.submit_at(req.dir, n, req.addr, req.len, thread, at);
+                if block_on_it {
+                    self.waiting_reads.insert(id, thread);
+                    self.threads[thread].waiting += 1;
+                }
+            }
+            Target::Disk => {
+                self.stats.borrow_mut().disk_ios += 1;
+                if block_on_it {
+                    // disk read: thread resumes after the disk latency
+                    self.threads[thread].waiting += 1;
+                    // tag encodes "disk read done" via the NEXT_OP path:
+                    // we reuse a timer with a special resume handled in
+                    // on_timer (tag = 2 | thread handled there)
+                    sim.set_timer(thread, at + self.disk_ns, 2);
+                }
+                // disk writes are fire-and-forget
+            }
+        }
+    }
+
+    fn start_op(&mut self, sim: &mut Sim, thread: usize, at: u64) {
+        if self.stopping || self.ops_issued >= self.cfg.ops {
+            self.maybe_stop(sim);
+            return;
+        }
+        self.ops_issued += 1;
+        let key = self.zipf.sample(&mut self.rng);
+        let is_read = self.rng.gen_below(100) < self.cfg.mix.read_pct();
+        let first_page = key * self.cfg.profile.record_bytes / self.cfg.page_size;
+        let mut pages = vec![first_page];
+        if self.rng.gen_bool(self.cfg.profile.second_page_prob) {
+            pages.push(first_page + 1);
+        }
+        if self.rng.gen_bool(self.cfg.profile.uniform_touch_prob) {
+            // index/metadata touch: uniform over the whole heap — the
+            // memory-pressure component the page cache cannot absorb
+            pages.push(self.rng.gen_below(self.cfg.total_pages().max(1)));
+        }
+
+        let cpu = sim.inflate_cpu(self.cfg.profile.cpu_per_op_ns, self.cfg.threads);
+        self.threads[thread].op_start = at;
+        self.threads[thread].cpu_ns = cpu;
+        self.threads[thread].waiting = 0;
+
+        let mut reqs = Vec::new();
+        for page in pages {
+            // swap readahead (page-cluster) gives swap-ins their adjacency
+            let out = self.pager.touch_ra(page, !is_read, 4);
+            for wb in out.writebacks {
+                reqs.push((wb, false));
+            }
+            if let Some(load) = out.load {
+                reqs.push((load, true));
+            }
+            for ra in out.readahead {
+                reqs.push((ra, false)); // readahead does not block the op
+            }
+        }
+        for (req, block) in reqs {
+            self.submit_req(sim, req, thread, at, block);
+        }
+
+        if self.threads[thread].waiting == 0 {
+            // pure in-memory op: finishes after its CPU time
+            sim.set_timer(thread, at + cpu, TAG_NEXT_OP);
+        }
+        // else: resumes when the blocked read(s) complete
+    }
+
+    fn finish_op(&mut self, sim: &mut Sim, thread: usize, at: u64) {
+        self.ops_done += 1;
+        let lat = at.saturating_sub(self.threads[thread].op_start);
+        {
+            let mut s = self.stats.borrow_mut();
+            s.ops_done = self.ops_done;
+            s.end_ns = at;
+            if self.ops_done == self.warmup_ops {
+                s.warm_start_ns = at;
+            }
+            if self.ops_done > self.warmup_ops {
+                s.warm_ops += 1;
+                s.op_lat.record(lat);
+            }
+        }
+        if self.ops_done >= self.cfg.ops {
+            self.stopping = true;
+            self.maybe_stop(sim);
+            return;
+        }
+        self.start_op(sim, thread, at);
+    }
+
+    fn maybe_stop(&mut self, sim: &mut Sim) {
+        if self.stopping && self.ops_done >= self.cfg.ops {
+            sim.request_stop();
+        }
+    }
+
+    fn read_done(&mut self, sim: &mut Sim, thread: usize, at: u64) {
+        let ts = &mut self.threads[thread];
+        ts.waiting = ts.waiting.saturating_sub(1);
+        if ts.waiting == 0 {
+            let cpu = ts.cpu_ns;
+            let t_done = at + cpu;
+            // op completes after the remaining compute
+            self.finish_op(sim, thread, t_done);
+        }
+    }
+}
+
+impl Driver for KvDriver {
+    fn on_start(&mut self, sim: &mut Sim) {
+        for t in 0..self.cfg.threads {
+            self.start_op(sim, t, 0);
+        }
+    }
+
+    fn on_io_done(&mut self, sim: &mut Sim, io: &AppIo, _lat: u64, done_at: u64) {
+        if io.dir == Dir::Read {
+            if let Some(thread) = self.waiting_reads.remove(&io.id) {
+                self.read_done(sim, thread, done_at);
+            }
+        }
+        // writeback completions need no app action
+    }
+
+    fn on_timer(&mut self, sim: &mut Sim, thread: usize, tag: u64) {
+        let now = sim.now();
+        match tag {
+            TAG_NEXT_OP => self.finish_op(sim, thread, now),
+            2 => self.read_done(sim, thread, now), // disk read complete
+            _ => {}
+        }
+    }
+}
+
+/// Convenience: run a KV scenario against a stack; returns (SimReport,
+/// DriverStats).
+pub fn run_kv(
+    fabric: &crate::config::FabricConfig,
+    stack: &crate::coordinator::StackConfig,
+    kv: KvConfig,
+) -> (crate::fabric::sim::SimReport, DriverStats) {
+    use crate::fabric::sim::engine::StackEngine;
+    let mut sim = Sim::new(fabric.clone(), stack.clone(), kv.nodes);
+    sim.attach_engine(Box::new(StackEngine::new(fabric, stack)));
+    let stats = DriverStats::shared();
+    let disk_ns = fabric.disk_ns(kv.page_size);
+    sim.attach_driver(Box::new(KvDriver::new(kv, disk_ns, stats.clone())));
+    let report = sim.run(u64::MAX / 2);
+    let s = std::rc::Rc::try_unwrap(stats)
+        .map(|c| c.into_inner())
+        .unwrap_or_else(|rc| {
+            let b = rc.borrow();
+            DriverStats {
+                ops_done: b.ops_done,
+                warm_ops: b.warm_ops,
+                warm_start_ns: b.warm_start_ns,
+                end_ns: b.end_ns,
+                op_lat: b.op_lat.clone(),
+                disk_ios: b.disk_ios,
+            }
+        });
+    (report, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FabricConfig;
+    use crate::coordinator::batching::BatchMode;
+    use crate::coordinator::StackConfig;
+
+    fn quick_cfg(mix: Mix) -> KvConfig {
+        KvConfig {
+            records: 50_000,
+            ops: 12_000,
+            threads: 8,
+            ..KvConfig::small(voltdb(), mix)
+        }
+    }
+
+    #[test]
+    fn completes_and_measures() {
+        let cfg = FabricConfig::default();
+        let stack = StackConfig::rdmabox(&cfg);
+        let (report, stats) = run_kv(&cfg, &stack, quick_cfg(Mix::Etc));
+        assert_eq!(stats.ops_done, 12_000);
+        assert!(stats.throughput() > 0.0);
+        assert!(stats.op_lat.count() > 0);
+        // paging happened: reads and writes hit the fabric
+        assert!(report.completed_reads > 0, "swap-ins occurred");
+        assert!(report.completed_writes > 0, "swap-outs occurred");
+    }
+
+    #[test]
+    fn sys_mix_writes_more_than_etc() {
+        let cfg = FabricConfig::default();
+        let stack = StackConfig::rdmabox(&cfg);
+        let (r_etc, _) = run_kv(&cfg, &stack, quick_cfg(Mix::Etc));
+        let (r_sys, _) = run_kv(&cfg, &stack, quick_cfg(Mix::Sys));
+        // more dirty pages -> more write-backs per op
+        assert!(
+            r_sys.completed_writes > r_etc.completed_writes,
+            "SYS {} vs ETC {}",
+            r_sys.completed_writes,
+            r_etc.completed_writes
+        );
+    }
+
+    #[test]
+    fn smaller_resident_set_pages_more() {
+        let cfg = FabricConfig::default();
+        let stack = StackConfig::rdmabox(&cfg);
+        let mut kv25 = quick_cfg(Mix::Etc);
+        kv25.resident_frac = 0.25;
+        let mut kv50 = quick_cfg(Mix::Etc);
+        kv50.resident_frac = 0.50;
+        let (r25, s25) = run_kv(&cfg, &stack, kv25);
+        let (r50, s50) = run_kv(&cfg, &stack, kv50);
+        assert!(
+            r25.completed_reads > r50.completed_reads,
+            "25% resident faults more: {} vs {}",
+            r25.completed_reads,
+            r50.completed_reads
+        );
+        assert!(
+            s50.throughput() > s25.throughput(),
+            "more memory -> more throughput: {} vs {}",
+            s50.throughput(),
+            s25.throughput()
+        );
+    }
+
+    #[test]
+    fn hybrid_batching_beats_single_on_this_workload() {
+        // the core Fig 6 comparison, small scale
+        let cfg = FabricConfig::default();
+        let hybrid = StackConfig::rdmabox(&cfg);
+        let single = StackConfig::rdmabox(&cfg).with_batch(BatchMode::Single);
+        let (rh, sh) = run_kv(&cfg, &hybrid, quick_cfg(Mix::Sys));
+        let (rs, ss) = run_kv(&cfg, &single, quick_cfg(Mix::Sys));
+        assert!(
+            rh.trace.wqes_total() < rs.trace.wqes_total(),
+            "hybrid reduces RDMA I/O: {} vs {}",
+            rh.trace.wqes_total(),
+            rs.trace.wqes_total()
+        );
+        assert!(
+            sh.throughput() >= ss.throughput() * 0.95,
+            "hybrid at least on par: {} vs {}",
+            sh.throughput(),
+            ss.throughput()
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = FabricConfig::default();
+        let stack = StackConfig::rdmabox(&cfg);
+        let (a, sa) = run_kv(&cfg, &stack, quick_cfg(Mix::Etc));
+        let (b, sb) = run_kv(&cfg, &stack, quick_cfg(Mix::Etc));
+        assert_eq!(a.elapsed_ns, b.elapsed_ns);
+        assert_eq!(sa.warm_ops, sb.warm_ops);
+    }
+
+    #[test]
+    fn profiles_differ() {
+        assert!(mongodb().cpu_per_op_ns > voltdb().cpu_per_op_ns);
+        assert!(redis().cpu_per_op_ns < voltdb().cpu_per_op_ns);
+        assert_eq!(Mix::Etc.read_pct(), 95);
+        assert_eq!(Mix::Sys.read_pct(), 75);
+    }
+}

@@ -1,0 +1,135 @@
+//! Fig 5 microbenchmark: one-to-one connection, synchronous 4 KB writes —
+//! the next I/O is posted when the previous WC arrives. Measures bandwidth,
+//! poller CPU, interrupts and context switches as MAX_RETRY varies.
+
+use crate::fabric::sim::{Driver, Sim};
+use crate::fabric::{AppIo, Dir};
+
+pub struct SyncWriteDriver {
+    pub ops: u64,
+    pub len: u64,
+    /// Pause between bursts (paper §5.2: real WC load is "intermittent and
+    /// burst"; bursts of back-to-back writes separated by app think time).
+    pub gap_every: u64,
+    pub gap_ns: u64,
+    done: u64,
+    addr: u64,
+}
+
+impl SyncWriteDriver {
+    pub fn new(ops: u64, len: u64) -> Self {
+        Self {
+            ops,
+            len,
+            gap_every: 16,
+            gap_ns: 30_000,
+            done: 0,
+            addr: 0,
+        }
+    }
+
+    fn next(&mut self, sim: &mut Sim, at: u64) {
+        self.addr += self.len;
+        if self.gap_every > 0 && self.done % self.gap_every == 0 {
+            sim.set_timer(0, at + self.gap_ns, 1);
+        } else {
+            sim.submit_at(Dir::Write, 0, self.addr, self.len, 0, at);
+        }
+    }
+}
+
+impl Driver for SyncWriteDriver {
+    fn on_start(&mut self, sim: &mut Sim) {
+        sim.submit_at(Dir::Write, 0, self.addr, self.len, 0, 0);
+    }
+
+    fn on_io_done(&mut self, sim: &mut Sim, _io: &AppIo, _lat: u64, done_at: u64) {
+        self.done += 1;
+        if self.done >= self.ops {
+            sim.request_stop();
+            return;
+        }
+        self.next(sim, done_at);
+    }
+
+    fn on_timer(&mut self, sim: &mut Sim, _t: usize, tag: u64) {
+        if tag == 1 {
+            let now = sim.now();
+            sim.submit_at(Dir::Write, 0, self.addr, self.len, 0, now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FabricConfig;
+    use crate::coordinator::polling::PollingMode;
+    use crate::coordinator::StackConfig;
+    use crate::fabric::sim::engine::StackEngine;
+    use crate::fabric::sim::SimReport;
+
+    fn run_sync(polling: PollingMode, ops: u64) -> SimReport {
+        let cfg = FabricConfig::default();
+        let stack = StackConfig::rdmabox(&cfg)
+            .with_polling(polling)
+            .with_qps(1)
+            .with_window(None);
+        let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
+        sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
+        sim.attach_driver(Box::new(SyncWriteDriver::new(ops, 4096)));
+        sim.run(u64::MAX / 2)
+    }
+
+    #[test]
+    fn sync_ops_serialize() {
+        let r = run_sync(PollingMode::Busy, 1000);
+        assert_eq!(r.completed_writes, 1000);
+        // strictly one WR at a time
+        assert_eq!(r.peak_inflight_ops, 1);
+    }
+
+    #[test]
+    fn fig5_shape_bandwidth_rises_with_max_retry() {
+        // small MAX_RETRY behaves like event mode (slow, interrupts);
+        // large MAX_RETRY approaches busy polling bandwidth at lower CPU.
+        let busy = run_sync(PollingMode::Busy, 2000);
+        let r0 = run_sync(
+            PollingMode::Adaptive {
+                batch: 16,
+                max_retry: 0,
+            },
+            2000,
+        );
+        let r120 = run_sync(
+            PollingMode::Adaptive {
+                batch: 16,
+                max_retry: 120,
+            },
+            2000,
+        );
+        let bw = |r: &SimReport| r.throughput_bytes_per_sec();
+        assert!(
+            bw(&r120) > bw(&r0),
+            "bandwidth should rise with MAX_RETRY: {} vs {}",
+            bw(&r120),
+            bw(&r0)
+        );
+        assert!(
+            bw(&r120) > 0.9 * bw(&busy),
+            "MAX_RETRY=120 should approach busy: {} vs {}",
+            bw(&r120),
+            bw(&busy)
+        );
+        assert!(
+            r120.poller_cpu_cores() < busy.poller_cpu_cores(),
+            "adaptive CPU {} should stay below busy {}",
+            r120.poller_cpu_cores(),
+            busy.poller_cpu_cores()
+        );
+        assert!(
+            r120.trace.interrupts < r0.trace.interrupts,
+            "interrupts fall as MAX_RETRY grows"
+        );
+    }
+}

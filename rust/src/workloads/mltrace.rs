@@ -1,0 +1,344 @@
+//! ML training memory traces (Fig 13): epoch-structured access over a
+//! dataset larger than the container limit, plus model/state updates.
+//!
+//! Each workload is (dataset pages, sequential-batch sweep pattern,
+//! compute per batch, update-write fraction). The paper's observation:
+//! memory-hungry/low-compute jobs (TextRank) gain most from a faster
+//! paging stack; compute-bound ones (K-means, GBoost) least.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::coordinator::node::NodeMap;
+use crate::fabric::sim::{Driver, Sim};
+use crate::fabric::{AppIo, Dir};
+use crate::paging::{Pager, Target};
+use crate::util::rng::Pcg32;
+
+use super::DriverStats;
+
+/// One ML workload's memory/compute profile.
+#[derive(Debug, Clone, Copy)]
+pub struct MlProfile {
+    pub name: &'static str,
+    /// Dataset pages swept per epoch.
+    pub dataset_pages: u64,
+    /// Pages per minibatch (sequential run).
+    pub batch_pages: u64,
+    /// Compute per minibatch, ns (inflated under CPU pressure).
+    pub compute_per_batch_ns: u64,
+    /// Fraction of batches that also write model/state pages.
+    pub update_frac: f64,
+    /// Model/state pages (hot, revisited every batch).
+    pub state_pages: u64,
+    pub epochs: u64,
+}
+
+/// Logistic regression: streaming sweeps, moderate compute, small model.
+pub fn logreg() -> MlProfile {
+    MlProfile {
+        name: "LogisticRegression",
+        dataset_pages: 24_000,
+        batch_pages: 16,
+        compute_per_batch_ns: 60_000,
+        update_frac: 1.0,
+        state_pages: 64,
+        epochs: 3,
+    }
+}
+
+/// Gradient-boost classification: compute-heavy histogram building.
+pub fn gboost() -> MlProfile {
+    MlProfile {
+        name: "GradientBoost",
+        dataset_pages: 20_000,
+        batch_pages: 16,
+        compute_per_batch_ns: 400_000,
+        update_frac: 0.5,
+        state_pages: 256,
+        epochs: 3,
+    }
+}
+
+/// K-means: compute-heavy distance evaluation, small state.
+pub fn kmeans() -> MlProfile {
+    MlProfile {
+        name: "KMeans",
+        dataset_pages: 24_000,
+        batch_pages: 16,
+        compute_per_batch_ns: 250_000,
+        update_frac: 0.2,
+        state_pages: 32,
+        epochs: 3,
+    }
+}
+
+/// TextRank: giant graph, very little compute per touched page —
+/// the memory-hungriest of the four (paper: biggest RDMAbox win).
+pub fn textrank() -> MlProfile {
+    MlProfile {
+        name: "TextRank",
+        dataset_pages: 48_000,
+        batch_pages: 8,
+        compute_per_batch_ns: 15_000,
+        update_frac: 0.9,
+        state_pages: 2_000,
+        epochs: 2,
+    }
+}
+
+pub struct MlDriver {
+    profile: MlProfile,
+    resident_pages: usize,
+    pager: Pager,
+    rng: Pcg32,
+    stats: Rc<RefCell<DriverStats>>,
+    // progress
+    epoch: u64,
+    cursor: u64,
+    /// Pages this batch still has to touch — touched *serially*, as a real
+    /// single-threaded trainer faults (each fault blocks the thread; no
+    /// artificial cross-fault coalescing).
+    pending: std::collections::VecDeque<(u64, bool)>,
+    waiting_io: Option<u64>,
+    batch_start: u64,
+    compute_ns: u64,
+    disk_ns: u64,
+    batches_done: u64,
+}
+
+const TAG_BATCH_DONE: u64 = 1;
+const TAG_DISK_READ: u64 = 2;
+
+impl MlDriver {
+    pub fn new(
+        profile: MlProfile,
+        resident_frac: f64,
+        nodes: usize,
+        replicas: usize,
+        disk_ns: u64,
+        seed: u64,
+        stats: Rc<RefCell<DriverStats>>,
+    ) -> Self {
+        let total = profile.dataset_pages + profile.state_pages;
+        let resident = ((total as f64) * resident_frac).max(32.0) as usize;
+        let mut pager = Pager::new(resident, NodeMap::new(nodes, replicas, 1 << 20), 4096)
+            .with_reclaim_batch(32);
+        // the dataset exists before training starts (loaded / mmapped)
+        pager.prepopulate(total);
+        Self {
+            profile,
+            resident_pages: resident,
+            pager,
+            rng: Pcg32::new(seed),
+            stats,
+            epoch: 0,
+            cursor: 0,
+            pending: std::collections::VecDeque::new(),
+            waiting_io: None,
+            batch_start: 0,
+            compute_ns: 0,
+            disk_ns,
+            batches_done: 0,
+        }
+    }
+
+    pub fn resident_pages(&self) -> usize {
+        self.resident_pages
+    }
+
+    fn start_batch(&mut self, sim: &mut Sim, at: u64) {
+        if self.epoch >= self.profile.epochs {
+            sim.request_stop();
+            let mut s = self.stats.borrow_mut();
+            s.end_ns = at;
+            return;
+        }
+        self.batch_start = at;
+        let writes_model = self.rng.gen_bool(self.profile.update_frac);
+
+        // dataset pages for this minibatch (sequential run within epoch)
+        self.pending.clear();
+        for i in 0..self.profile.batch_pages {
+            self.pending
+                .push_back(((self.cursor + i) % self.profile.dataset_pages, false));
+        }
+        // hot state pages (model params / cluster centers), a few per batch
+        let state_base = self.profile.dataset_pages;
+        for _ in 0..4u64.min(self.profile.state_pages) {
+            let sp = state_base + self.rng.gen_below(self.profile.state_pages.max(1));
+            self.pending.push_back((sp, writes_model));
+        }
+
+        self.cursor = (self.cursor + self.profile.batch_pages) % self.profile.dataset_pages;
+        if self.cursor < self.profile.batch_pages {
+            self.epoch += 1;
+        }
+
+        self.compute_ns = sim.inflate_cpu(self.profile.compute_per_batch_ns, 1);
+        self.walk(sim, at);
+    }
+
+    /// Touch the batch's pages one at a time; a fault suspends the walk
+    /// until its read completes (real page-fault semantics).
+    fn walk(&mut self, sim: &mut Sim, at: u64) {
+        while let Some((page, write)) = self.pending.pop_front() {
+            let out = self.pager.touch_ra(page, write, 4);
+            // write-backs and readahead never block the trainer
+            for req in out.writebacks.iter().chain(out.readahead.iter()) {
+                match req.target {
+                    Target::Node(n) => {
+                        sim.submit_at(req.dir, n, req.addr, req.len, 0, at);
+                    }
+                    Target::Disk => {
+                        self.stats.borrow_mut().disk_ios += 1;
+                    }
+                }
+            }
+            if let Some(load) = out.load {
+                match load.target {
+                    Target::Node(n) => {
+                        let id = sim.submit_at(load.dir, n, load.addr, load.len, 0, at);
+                        self.waiting_io = Some(id);
+                    }
+                    Target::Disk => {
+                        self.stats.borrow_mut().disk_ios += 1;
+                        self.waiting_io = Some(u64::MAX); // disk marker
+                        sim.set_timer(0, at + self.disk_ns, TAG_DISK_READ);
+                    }
+                }
+                return; // suspended on the fault
+            }
+        }
+        // all pages resident: run the compute
+        sim.set_timer(0, at + self.compute_ns, TAG_BATCH_DONE);
+    }
+
+    fn finish_batch(&mut self, sim: &mut Sim, at: u64) {
+        self.batches_done += 1;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.ops_done = self.batches_done;
+            s.warm_ops = self.batches_done;
+            s.end_ns = at;
+            s.op_lat.record(at.saturating_sub(self.batch_start));
+        }
+        self.start_batch(sim, at);
+    }
+
+    fn io_arrived(&mut self, sim: &mut Sim, id: u64, at: u64) {
+        if self.waiting_io == Some(id) {
+            self.waiting_io = None;
+            self.walk(sim, at);
+        }
+    }
+}
+
+impl Driver for MlDriver {
+    fn on_start(&mut self, sim: &mut Sim) {
+        self.start_batch(sim, 0);
+    }
+
+    fn on_io_done(&mut self, sim: &mut Sim, io: &AppIo, _lat: u64, done_at: u64) {
+        if io.dir == Dir::Read {
+            self.io_arrived(sim, io.id, done_at);
+        }
+    }
+
+    fn on_timer(&mut self, sim: &mut Sim, _thread: usize, tag: u64) {
+        let now = sim.now();
+        match tag {
+            TAG_BATCH_DONE => self.finish_batch(sim, now),
+            TAG_DISK_READ => self.io_arrived(sim, u64::MAX, now),
+            _ => {}
+        }
+    }
+}
+
+/// Run one ML workload to completion; returns wall-clock (virtual) time.
+pub fn run_ml(
+    fabric: &crate::config::FabricConfig,
+    stack: &crate::coordinator::StackConfig,
+    profile: MlProfile,
+    resident_frac: f64,
+    nodes: usize,
+) -> (u64, crate::fabric::sim::SimReport) {
+    use crate::fabric::sim::engine::StackEngine;
+    let mut sim = Sim::new(fabric.clone(), stack.clone(), nodes);
+    sim.attach_engine(Box::new(StackEngine::new(fabric, stack)));
+    let stats = DriverStats::shared();
+    let disk_ns = fabric.disk_ns(4096);
+    sim.attach_driver(Box::new(MlDriver::new(
+        profile,
+        resident_frac,
+        nodes,
+        2,
+        disk_ns,
+        11,
+        stats.clone(),
+    )));
+    let report = sim.run(u64::MAX / 2);
+    let end = stats.borrow().end_ns;
+    (end.max(report.elapsed_ns), report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::config::FabricConfig;
+    use crate::coordinator::StackConfig;
+
+    fn small(p: MlProfile) -> MlProfile {
+        MlProfile {
+            dataset_pages: 2_000,
+            state_pages: p.state_pages.min(128),
+            epochs: 2,
+            ..p
+        }
+    }
+
+    #[test]
+    fn trains_to_completion() {
+        let cfg = FabricConfig::default();
+        let stack = StackConfig::rdmabox(&cfg);
+        let (t, report) = run_ml(&cfg, &stack, small(logreg()), 0.25, 3);
+        assert!(t > 0);
+        assert!(report.completed_reads > 0, "paged in data");
+    }
+
+    #[test]
+    fn rdmabox_faster_than_nbdx_on_memory_hungry_job() {
+        let cfg = FabricConfig::default();
+        let rbox = StackConfig::rdmabox(&cfg);
+        let nbdx = baselines::nbdx(&cfg, 512 * 1024);
+        let (t_box, _) = run_ml(&cfg, &rbox, small(textrank()), 0.25, 3);
+        let (t_nbdx, _) = run_ml(&cfg, &nbdx, small(textrank()), 0.25, 3);
+        assert!(
+            t_nbdx > t_box,
+            "nbdX {} should be slower than RDMAbox {}",
+            t_nbdx,
+            t_box
+        );
+    }
+
+    #[test]
+    fn compute_bound_job_less_sensitive_than_memory_bound() {
+        let cfg = FabricConfig::default();
+        let rbox = StackConfig::rdmabox(&cfg);
+        let nbdx = baselines::nbdx(&cfg, 512 * 1024);
+        let ratio = |p: MlProfile| {
+            let (a, _) = run_ml(&cfg, &rbox, small(p), 0.25, 3);
+            let (b, _) = run_ml(&cfg, &nbdx, small(p), 0.25, 3);
+            b as f64 / a as f64
+        };
+        let r_text = ratio(textrank());
+        let r_kmeans = ratio(kmeans());
+        assert!(
+            r_text > r_kmeans,
+            "TextRank gap {} should exceed K-means gap {}",
+            r_text,
+            r_kmeans
+        );
+    }
+}

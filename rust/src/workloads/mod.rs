@@ -1,0 +1,72 @@
+//! Workload generators and application models driving the fabric:
+//!
+//! * [`fio`] — FIO-style raw block I/O (threads × iodepth × block size),
+//!   used by Fig 1 and Fig 8.
+//! * [`micro`] — the synchronous 4 KB-write microbenchmark of Fig 5.
+//! * [`kv`] — the memory-intensive application model: YCSB Zipfian ETC/SYS
+//!   over VoltDB/MongoDB/Redis profiles with a container memory limit that
+//!   forces paging (Fig 6, 7, 9–12, Table 1).
+//! * [`mltrace`] — ML training memory traces (epoch sweeps + model
+//!   updates) for Fig 13.
+
+pub mod fio;
+pub mod kv;
+pub mod micro;
+pub mod mltrace;
+
+use crate::util::hist::Hist;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Application-level statistics, shared between a driver (which lives
+/// inside the sim) and the experiment harness (which reads it afterwards).
+#[derive(Debug, Default)]
+pub struct DriverStats {
+    pub ops_done: u64,
+    /// Ops completed after warmup (throughput window).
+    pub warm_ops: u64,
+    pub warm_start_ns: u64,
+    pub end_ns: u64,
+    /// Per-op application latency (post-warmup).
+    pub op_lat: Hist,
+    pub disk_ios: u64,
+}
+
+impl DriverStats {
+    pub fn shared() -> Rc<RefCell<DriverStats>> {
+        Rc::new(RefCell::new(DriverStats::default()))
+    }
+
+    /// Ops/sec over the post-warmup window.
+    pub fn throughput(&self) -> f64 {
+        let dt = self.end_ns.saturating_sub(self.warm_start_ns);
+        if dt == 0 {
+            0.0
+        } else {
+            self.warm_ops as f64 * 1e9 / dt as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_from_window() {
+        let s = DriverStats {
+            warm_ops: 1000,
+            warm_start_ns: 1_000_000,
+            end_ns: 2_000_000,
+            ..Default::default()
+        };
+        // 1000 ops over 1 ms = 1M ops/s
+        assert!((s.throughput() - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn zero_window_is_zero() {
+        let s = DriverStats::default();
+        assert_eq!(s.throughput(), 0.0);
+    }
+}

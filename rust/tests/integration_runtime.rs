@@ -1,0 +1,111 @@
+//! Integration over the PJRT runtime + live loopback path: the end-to-end
+//! three-layer composition (skips gracefully when `make artifacts` has not
+//! run — CI without Python still passes the rest).
+
+use rdmabox::coordinator::batching::BatchMode;
+use rdmabox::fabric::loopback::{LiveBox, LoopbackFabric};
+use rdmabox::ml::{train_paged_logreg, LogregData, PagedStore};
+use rdmabox::runtime::{artifacts_available, lit, Runtime, KMEANS_STEP, LOGREG_STEP};
+
+#[test]
+fn live_loopback_under_concurrency_preserves_data() {
+    let fabric = LoopbackFabric::start(4, 8 << 20);
+    let lb = LiveBox::new(fabric, BatchMode::Hybrid, Some(1 << 20));
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        let lb = lb.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..64u64 {
+                let page = i * 6 + t;
+                let node = (page % 4) as usize;
+                lb.write(node, page * 4096, &vec![(page % 199) as u8 + 1; 4096]);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    for page in 0..384u64 {
+        let node = (page % 4) as usize;
+        let data = lb.read(node, page * 4096, 4096);
+        assert_eq!(data[0], (page % 199) as u8 + 1, "page {page}");
+        assert_eq!(data[4095], (page % 199) as u8 + 1, "page {page}");
+    }
+}
+
+#[test]
+fn paged_store_thrashes_correctly_under_tiny_cache() {
+    let fabric = LoopbackFabric::start(2, 4 << 20);
+    let lb = LiveBox::new(fabric, BatchMode::Hybrid, None);
+    let mut st = PagedStore::new(lb, 64, 2); // 2-frame cache over 64 pages
+    for p in 0..64u64 {
+        st.populate(p, &vec![(p + 1) as u8; 4096]);
+    }
+    for round in 0..3 {
+        for p in 0..64u64 {
+            assert_eq!(st.get(p)[0], (p + 1) as u8, "round {round} page {p}");
+        }
+    }
+    assert!(st.faults >= 64 * 3 - 2, "almost every access must fault");
+}
+
+#[test]
+fn logreg_dataset_generator_is_balanced() {
+    let d = LogregData::new(512, 32, 128);
+    let mut pos = 0;
+    for i in 0..512 {
+        let (_, y) = d.row(i);
+        pos += y as usize;
+    }
+    // separator through the origin over gaussians: roughly balanced labels
+    assert!((128..=384).contains(&pos), "positives {pos}/512");
+}
+
+#[test]
+fn runtime_executes_all_three_models() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::from_artifacts().expect("client");
+    // logreg
+    let f = 512;
+    let b = 256;
+    let out = rt
+        .execute(
+            LOGREG_STEP,
+            &[
+                lit::f32_vec(&vec![0.0; f]),
+                lit::f32_mat(&vec![0.1; b * f], b, f).unwrap(),
+                lit::f32_vec(&vec![1.0; b]),
+                lit::f32_scalar(0.1).unwrap(),
+            ],
+        )
+        .expect("logreg_step");
+    assert_eq!(out.len(), 2, "(w', loss)");
+    assert_eq!(lit::to_f32(&out[0]).unwrap().len(), f);
+    // kmeans
+    let out = rt
+        .execute(
+            KMEANS_STEP,
+            &[
+                lit::f32_mat(&vec![0.5; 16 * 32], 16, 32).unwrap(),
+                lit::f32_mat(&vec![0.25; 1024 * 32], 1024, 32).unwrap(),
+            ],
+        )
+        .expect("kmeans_step");
+    assert_eq!(out.len(), 2, "(centroids', inertia)");
+    assert!(rt.loaded().len() >= 2);
+}
+
+#[test]
+fn e2e_three_layer_training_reduces_loss() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::from_artifacts().unwrap();
+    let r = train_paged_logreg(&mut rt, 3, 512, 256, 512, 0.25, 25, 0.5).unwrap();
+    assert!(r.losses[24] < r.losses[0]);
+    assert!(r.faults > 0, "data actually came from remote memory");
+}

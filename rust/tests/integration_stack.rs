@@ -1,0 +1,213 @@
+//! Integration tests across the full stack: coordinator policies driving
+//! the simulated fabric end to end, cross-system comparisons, and failure
+//! injection through the replication path.
+
+use rdmabox::baselines;
+use rdmabox::config::FabricConfig;
+use rdmabox::coordinator::node::NodeMap;
+use rdmabox::coordinator::polling::PollingMode;
+use rdmabox::coordinator::StackConfig;
+use rdmabox::fabric::sim::engine::StackEngine;
+use rdmabox::fabric::sim::{Driver, Sim};
+use rdmabox::fabric::{AppIo, Dir};
+use rdmabox::paging::{Pager, Target};
+use rdmabox::workloads::kv::{self, run_kv, KvConfig, Mix};
+use rdmabox::workloads::mltrace;
+
+fn fabric() -> FabricConfig {
+    FabricConfig::connectx3_fdr()
+}
+
+// ---------------------------------------------------------------- paging
+
+/// Paging through a failing replica set: reads fail over replica → disk,
+/// and recover when nodes return.
+#[test]
+fn failover_read_path_survives_node_loss() {
+    let mut pager = Pager::new(4, NodeMap::new(3, 2, 1 << 20), 4096);
+    // fill + dirty
+    for p in 0..4 {
+        pager.touch(p, true);
+    }
+    // evict everything to remote (2 replicas)
+    for p in 4..8 {
+        pager.touch(p, true);
+    }
+    assert!(pager.swapped_out() >= 4);
+
+    // kill the primary of page 0's slot: refault must hit the secondary
+    let out = {
+        pager.node_map_mut().set_alive(0, false);
+        pager.touch(0, false)
+    };
+    if let Some(load) = out.load {
+        assert!(
+            matches!(load.target, Target::Node(_)),
+            "failover to secondary, not disk: {load:?}"
+        );
+    }
+
+    // kill everything: disk fallback
+    for n in 0..3 {
+        pager.node_map_mut().set_alive(n, false);
+    }
+    let out = pager.touch(1, false);
+    if let Some(load) = out.load {
+        assert_eq!(load.target, Target::Disk, "all replicas dead -> disk");
+    }
+    // writebacks with all nodes dead also go to disk
+    assert!(out
+        .writebacks
+        .iter()
+        .all(|w| w.target == Target::Disk));
+}
+
+// ------------------------------------------------------ cross-system runs
+
+/// The paper's headline: RDMAbox sustains higher app throughput than every
+/// baseline configuration on the same workload.
+#[test]
+fn rdmabox_beats_every_baseline_on_paging_workload() {
+    let cfg = fabric();
+    let kv = || KvConfig {
+        ops: 20_000,
+        records: 50_000,
+        ..KvConfig::small(kv::voltdb(), Mix::Sys)
+    };
+    let (_, rbox) = run_kv(&cfg, &StackConfig::rdmabox(&cfg), kv());
+    for baseline in [
+        baselines::nbdx(&cfg, 128 << 10),
+        baselines::nbdx(&cfg, 512 << 10),
+    ] {
+        let name = baseline.name.clone();
+        let (_, b) = run_kv(&cfg, &baseline, kv());
+        assert!(
+            rbox.throughput() > b.throughput(),
+            "RDMAbox {} must beat {name} {}",
+            rbox.throughput(),
+            b.throughput()
+        );
+    }
+}
+
+/// Determinism across the whole stack: same seed, same world.
+#[test]
+fn full_stack_runs_are_deterministic() {
+    let cfg = fabric();
+    let kv = || KvConfig {
+        ops: 10_000,
+        records: 30_000,
+        ..KvConfig::small(kv::redis(), Mix::Etc)
+    };
+    let (r1, s1) = run_kv(&cfg, &StackConfig::rdmabox(&cfg), kv());
+    let (r2, s2) = run_kv(&cfg, &StackConfig::rdmabox(&cfg), kv());
+    assert_eq!(r1.elapsed_ns, r2.elapsed_ns);
+    assert_eq!(r1.trace.wqes_total(), r2.trace.wqes_total());
+    assert_eq!(r1.trace.bytes_wire, r2.trace.bytes_wire);
+    assert_eq!(s1.warm_ops, s2.warm_ops);
+    assert_eq!(s1.op_lat.p99(), s2.op_lat.p99());
+}
+
+/// ML trace: every workload finishes on every stack, and the RDMAbox
+/// completion time is never worse than nbdX's.
+#[test]
+fn ml_workloads_complete_on_all_stacks() {
+    let cfg = fabric();
+    let small = |p: mltrace::MlProfile| mltrace::MlProfile {
+        dataset_pages: 1_500,
+        state_pages: 64,
+        epochs: 1,
+        ..p
+    };
+    for profile in [
+        small(mltrace::logreg()),
+        small(mltrace::textrank()),
+    ] {
+        let (t_box, rep) = mltrace::run_ml(&cfg, &StackConfig::rdmabox(&cfg), profile, 0.25, 3);
+        assert!(t_box > 0 && rep.completed_reads > 0, "{}", profile.name);
+        let (t_nbdx, _) =
+            mltrace::run_ml(&cfg, &baselines::nbdx(&cfg, 512 << 10), profile, 0.25, 3);
+        assert!(
+            t_nbdx >= t_box,
+            "{}: nbdX {} must not beat RDMAbox {}",
+            profile.name,
+            t_nbdx,
+            t_box
+        );
+    }
+}
+
+// ------------------------------------------------- error/edge conditions
+
+/// A request bigger than the admission window must not deadlock (progress
+/// guarantee of the regulator integration).
+#[test]
+fn oversized_request_does_not_deadlock() {
+    struct One {
+        done: bool,
+    }
+    impl Driver for One {
+        fn on_start(&mut self, sim: &mut Sim) {
+            // 1 MB write with a 128 KB window
+            sim.submit_at(Dir::Write, 0, 0, 1 << 20, 0, 0);
+        }
+        fn on_io_done(&mut self, sim: &mut Sim, _io: &AppIo, _l: u64, _at: u64) {
+            self.done = true;
+            sim.request_stop();
+        }
+        fn on_timer(&mut self, _s: &mut Sim, _t: usize, _g: u64) {}
+    }
+    let cfg = fabric();
+    let stack = StackConfig::rdmabox(&cfg).with_window(Some(128 << 10));
+    let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
+    sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
+    sim.attach_driver(Box::new(One { done: false }));
+    let r = sim.run(10_000_000_000); // 10s virtual-time cap
+    assert_eq!(r.completed_writes, 1, "oversized write must complete");
+}
+
+/// Every polling mode drains a mixed read/write burst completely.
+#[test]
+fn mixed_burst_drains_under_every_polling_mode() {
+    struct Burst {
+        left: u64,
+    }
+    impl Driver for Burst {
+        fn on_start(&mut self, sim: &mut Sim) {
+            for i in 0..64u64 {
+                let dir = if i % 3 == 0 { Dir::Read } else { Dir::Write };
+                sim.submit_at(dir, (i % 2) as usize, i * 4096, 4096, 0, 0);
+            }
+        }
+        fn on_io_done(&mut self, sim: &mut Sim, _io: &AppIo, _l: u64, _at: u64) {
+            self.left -= 1;
+            if self.left == 0 {
+                sim.request_stop();
+            }
+        }
+        fn on_timer(&mut self, _s: &mut Sim, _t: usize, _g: u64) {}
+    }
+    let cfg = fabric();
+    for polling in [
+        PollingMode::Busy,
+        PollingMode::Event,
+        PollingMode::EventBatch { budget: 4 },
+        PollingMode::Adaptive {
+            batch: 8,
+            max_retry: 10,
+        },
+        PollingMode::HybridTimer { spin_ns: 5_000 },
+        PollingMode::Scq { m: 1, pollers: 2 },
+    ] {
+        let stack = StackConfig::rdmabox(&cfg).with_polling(polling);
+        let mut sim = Sim::new(cfg.clone(), stack.clone(), 2);
+        sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
+        sim.attach_driver(Box::new(Burst { left: 64 }));
+        let r = sim.run(10_000_000_000);
+        assert_eq!(
+            r.completed_reads + r.completed_writes,
+            64,
+            "mode {polling:?}"
+        );
+    }
+}
