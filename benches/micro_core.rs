@@ -9,8 +9,7 @@ use rdmabox::config::FabricConfig;
 use rdmabox::coordinator::batching::{plan, BatchLimits, BatchMode};
 use rdmabox::coordinator::merge_queue::{MergeCheck, MergeQueue};
 use rdmabox::coordinator::StackConfig;
-use rdmabox::fabric::sim::engine::StackEngine;
-use rdmabox::fabric::sim::{Driver, Sim};
+use rdmabox::fabric::sim::{run_pipeline, Driver, Sim};
 use rdmabox::fabric::{AppIo, Dir};
 use rdmabox::paging::cache::ClockCache;
 use rdmabox::util::hist::Hist;
@@ -141,10 +140,7 @@ fn main() {
         let stack = StackConfig::rdmabox(&cfg);
         let n = 300_000u64;
         let t0 = Instant::now();
-        let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
-        sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
-        sim.attach_driver(Box::new(Loop { left: n, addr: 0 }));
-        let r = sim.run(u64::MAX / 2);
+        let r = run_pipeline(&cfg, &stack, 1, Box::new(Loop { left: n, addr: 0 }));
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "DES end-to-end: {} IOs in {:.2}s = {:.0} sim-IOs/s wall ({} WQEs)",

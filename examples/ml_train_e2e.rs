@@ -1,8 +1,8 @@
 //! END-TO-END driver: all three layers composing on a real workload.
 //!
-//! * L3 — the live RDMAbox coordinator (merge queue, batch planner,
-//!   admission window) moves real bytes between loopback remote-memory
-//!   nodes (real threads) and a bounded local page cache.
+//! * L3 — the live RDMAbox coordinator (`IoEngine`: sharded merge queues,
+//!   batch planner, admission window) moves real bytes between loopback
+//!   remote-memory nodes (real threads) and a bounded local page cache.
 //! * L2/L1 — each training step executes the AOT-compiled JAX model with
 //!   its Pallas kernel (`artifacts/logreg_step.hlo.txt`) on the PJRT CPU
 //!   client. Python is nowhere in this process.
@@ -11,25 +11,29 @@
 //! remote nodes (only 25% resident locally), logs the loss curve, and
 //! reports paging + coordinator statistics. Recorded in EXPERIMENTS.md.
 //!
+//! Requires the `xla` cargo feature (PJRT bindings — see README):
+//!
 //! ```bash
-//! make artifacts && cargo run --release --example ml_train_e2e -- --steps 300
+//! make artifacts && cargo run --release --features xla --example ml_train_e2e -- --steps 300
 //! ```
 
-use rdmabox::cli::Args;
-use rdmabox::ml::train_paged_logreg;
-use rdmabox::runtime::Runtime;
-use rdmabox::util::fmt;
+#[cfg(feature = "xla")]
+fn main() {
+    use rdmabox::cli::Args;
+    use rdmabox::ml::train_paged_logreg;
+    use rdmabox::runtime::Runtime;
+    use rdmabox::util::fmt;
 
-fn main() -> anyhow::Result<()> {
     let args = Args::parse_env().unwrap_or_default();
     let steps = args.get_u64("steps", 300).unwrap_or(300) as usize;
     let rows = args.get_u64("rows", 2048).unwrap_or(2048) as usize;
     let resident = args.get_f64("resident", 0.25).unwrap_or(0.25);
 
     if !rdmabox::runtime::artifacts_available() {
-        anyhow::bail!("artifacts missing — run `make artifacts` first");
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
     }
-    let mut rt = Runtime::from_artifacts()?;
+    let mut rt = Runtime::from_artifacts().expect("PJRT client");
     println!(
         "PJRT platform: {} | logreg (256x512 minibatch) | {} rows on 3 remote nodes, {:.0}% resident",
         rt.platform(),
@@ -38,7 +42,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    let r = train_paged_logreg(&mut rt, 3, rows, 256, 512, resident, steps, 0.5)?;
+    let r = train_paged_logreg(&mut rt, 3, rows, 256, 512, resident, steps, 0.5)
+        .expect("training run");
     println!("loss curve:");
     for (i, l) in r.losses.iter().enumerate() {
         if i % 25 == 0 || i + 1 == r.losses.len() {
@@ -62,5 +67,12 @@ fn main() -> anyhow::Result<()> {
     );
     assert!(last < first, "training must reduce the loss");
     println!("ml_train_e2e OK — rust coordinator + PJRT-executed JAX/Pallas compose");
-    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn main() {
+    eprintln!(
+        "ml_train_e2e needs the PJRT runtime: rebuild with `cargo run --release --features xla \
+         --example ml_train_e2e` (see README §PJRT runtime)"
+    );
 }

@@ -1,6 +1,8 @@
 //! Quickstart: the RDMAbox node-level abstraction on the live loopback
 //! fabric — remote nodes are real threads owning real memory; writes and
-//! reads go through the merge queue, batch planner and admission window.
+//! reads go through the full `IoEngine` pipeline (sharded per-QP merge
+//! queues → batch planner → admission window → poll-retire), the same
+//! pipeline the discrete-event simulator drives for the figures.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -10,10 +12,13 @@ use rdmabox::coordinator::batching::BatchMode;
 use rdmabox::fabric::loopback::{LiveBox, LoopbackFabric};
 
 fn main() {
-    // 3 remote memory donors, 64 MB each
-    let fabric = LoopbackFabric::start(3, 64 << 20);
+    // 3 remote memory donors, 4 channels (QP shards) each, 64 MB donated
+    let fabric = LoopbackFabric::start_sharded(3, 64 << 20, 4);
     let rbox = LiveBox::new(fabric, BatchMode::Hybrid, Some(7 << 20));
-    println!("cluster up: {} remote nodes", rbox.nodes());
+    println!(
+        "cluster up: {} remote nodes x 4 QP shards per node",
+        rbox.nodes()
+    );
 
     // --- single-threaded write/read roundtrip ---
     let page = vec![0xAB_u8; 4096];

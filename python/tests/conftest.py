@@ -1,0 +1,8 @@
+"""Make the `compile` package importable no matter where pytest is
+invoked from (repo root, `python/`, or elsewhere): this conftest sits
+next to the test modules, so pytest always loads it."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

@@ -8,6 +8,13 @@
 
 use crate::fabric::{CqId, NodeId, QpId};
 
+/// Address bits defining the channel-affinity region (1 MiB): requests in
+/// the same region stay on one channel (preserving merge adjacency),
+/// different regions spread over the node's channels. Shared by
+/// [`ChannelMap::select_by_addr`] and the engine's shard routing so the
+/// two can never disagree.
+pub const SHARD_REGION_SHIFT: u32 = 20;
+
 /// The channel topology: how QPs/CQs map to remote nodes.
 #[derive(Debug, Clone)]
 pub struct ChannelMap {
@@ -93,10 +100,10 @@ impl ChannelMap {
         self.qp_of(node, k)
     }
 
-    /// Deterministic address-affine selection (alternative policy: keeps a
-    /// region on one channel; used by tests/ablation).
+    /// Deterministic address-affine selection: keeps a region on one
+    /// channel. This is the engine's shard-routing function.
     pub fn select_by_addr(&self, node: NodeId, addr: u64) -> QpId {
-        let k = (addr >> 20) as usize % self.qps_per_node;
+        let k = (addr >> SHARD_REGION_SHIFT) as usize % self.qps_per_node;
         self.qp_of(node, k)
     }
 }

@@ -1,0 +1,916 @@
+//! [`IoEngine`] — the unified submission pipeline of the I/O stack:
+//! **merge → batch → admit → poll-retire**, as one object.
+//!
+//! Before this module existed the policy pieces ([`merge_queue`],
+//! [`batching`], [`regulator`], [`channel`], [`node`]) were assembled by
+//! hand at every call site (sim engine, loopback client, each experiment
+//! harness). `IoEngine` owns the whole pipeline:
+//!
+//! * **Sharded merge queues** — one read/write queue pair per QP
+//!   (`qps_per_node` channels per remote node, paper §6.1). Submissions are
+//!   routed to a shard by an address-affine hash over 1 MiB regions, so
+//!   adjacent requests land in the same shard and Batching-on-MR still
+//!   finds its merge candidates, while independent regions engage
+//!   independent QPs (and therefore independent NIC processing units).
+//! * **Batch planning** — each shard drain runs through the
+//!   [`batching::plan`] planner (Single / BatchOnMr / Doorbell / Hybrid).
+//! * **Admission control** — drains are bounded by the [`Regulator`]
+//!   window; a closed window leaves requests queued where later arrivals
+//!   keep merging with them (paper §5.1).
+//! * **Replicated placement** — in placed mode the engine routes by
+//!   [`NodeMap`]: writes fan out to every alive replica, reads go to the
+//!   first alive replica and *fail over* to the next on completion error;
+//!   an application I/O retires exactly once, and only when its
+//!   replication policy is satisfied. All replicas dead surfaces the
+//!   paper's disk-fallback signal instead of an I/O.
+//!
+//! The same object is driven by the discrete-event fabric
+//! ([`crate::fabric::sim`], via `StackEngine`) and by the live loopback
+//! fabric ([`crate::fabric::loopback`], via `LiveBox`): the backends only
+//! move bytes and deliver completions; every policy decision is here.
+//!
+//! [`merge_queue`]: crate::coordinator::merge_queue
+//! [`batching`]: crate::coordinator::batching
+//! [`regulator`]: crate::coordinator::regulator
+//! [`channel`]: crate::coordinator::channel
+//! [`node`]: crate::coordinator::node
+
+use crate::config::FabricConfig;
+use crate::coordinator::batching::{plan, BatchLimits, BatchMode};
+use crate::coordinator::channel::ChannelMap;
+use crate::coordinator::merge_queue::{MergeCheck, MergeQueues};
+use crate::coordinator::node::{NodeMap, ReadRoute};
+use crate::coordinator::regulator::Regulator;
+use crate::coordinator::StackConfig;
+use crate::fabric::{AppIo, Dir, NodeId, QpId, Wc, WcStatus, WorkRequest};
+use crate::util::fxhash::FxHashMap;
+
+/// Shard affinity region size (re-exported from the channel layer, which
+/// owns the routing function). Because merging only happens within one
+/// shard's drain, a multi-SGE WR never spans a region boundary when
+/// `qps_per_node > 1`.
+pub use crate::coordinator::channel::SHARD_REGION_SHIFT;
+
+/// CPU costs the engine charges on the (serialized) drain path. The sim
+/// backend fills these from the calibrated fabric model; the live backend
+/// runs with [`EngineCosts::free`] (real time is measured, not modeled).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineCosts {
+    /// Per-WQE posting cost (verbs post_send + block layer).
+    pub post_wqe_cpu_ns: u64,
+    /// Per-chain MMIO doorbell cost.
+    pub mmio_cpu_ns: u64,
+    /// Fixed cost of one merge-check (lock + scan setup).
+    pub merge_check_base_ns: u64,
+    /// Per-request merge-scan cost.
+    pub merge_check_per_io_ns: u64,
+}
+
+impl EngineCosts {
+    pub fn from_fabric(cfg: &FabricConfig) -> Self {
+        Self {
+            post_wqe_cpu_ns: cfg.post_wqe_cpu_ns,
+            mmio_cpu_ns: cfg.mmio_cpu_ns,
+            merge_check_base_ns: 120,
+            merge_check_per_io_ns: 25,
+        }
+    }
+
+    /// Zero-cost model (live backends measure wall time instead).
+    pub fn free() -> Self {
+        Self::default()
+    }
+}
+
+/// How submissions are routed to remote nodes.
+#[derive(Debug)]
+enum Routing {
+    /// The caller names the destination node in `AppIo::node`.
+    Direct,
+    /// The engine places by address: replica fan-out, read failover, disk
+    /// fallback (paper §6/§7.1).
+    Placed(NodeMap),
+}
+
+/// Result of submitting one application I/O.
+#[derive(Debug, Clone)]
+pub struct Submitted {
+    /// The queued fabric-level sub-I/O ids (one per replica for placed
+    /// writes; `[io.id]` in direct mode). Work requests carry these ids.
+    pub sub_ids: Vec<u64>,
+    /// Every replica is dead: nothing was queued, the caller must take the
+    /// disk path.
+    pub disk_fallback: bool,
+}
+
+/// One planned post: a doorbell chain bound to a concrete QP.
+#[derive(Debug)]
+pub struct PostChain {
+    pub qp: QpId,
+    pub node: NodeId,
+    pub wrs: Vec<WorkRequest>,
+    /// Serialized CPU consumed on the drain path up to (and including)
+    /// this chain's post — backends posting with a cost model schedule the
+    /// chain at `drain_start + cpu_offset_ns`.
+    pub cpu_offset_ns: u64,
+}
+
+/// Result of draining the sharded queues.
+#[derive(Debug, Default)]
+pub struct DrainOut {
+    pub chains: Vec<PostChain>,
+    /// Total serialized CPU of this drain (merge scans + posting).
+    pub cpu_ns: u64,
+    pub merged_ios: u64,
+    /// Times the admission window blocked or truncated a shard drain.
+    pub admission_blocked: u64,
+}
+
+/// An application I/O whose replication policy is satisfied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetiredIo {
+    pub id: u64,
+    /// No replica could serve it (reads: every attempt failed; writes:
+    /// every replica write failed) — the caller owns the disk path.
+    pub disk_fallback: bool,
+    /// At least one read attempt failed over to a secondary replica.
+    pub failed_over: bool,
+}
+
+/// Result of handling one work completion.
+#[derive(Debug, Default)]
+pub struct WcOut {
+    pub retired: Vec<RetiredIo>,
+    /// `(sub_id, parent_id)` for every sub-I/O that completed successfully
+    /// in this WC — backends use it to hand read payloads back to the
+    /// right application I/O.
+    pub completed_subs: Vec<(u64, u64)>,
+    /// `(sub_id, parent_id)` for every sub-I/O that failed *terminally*
+    /// (no failover left) — backends use it to release per-sub resources.
+    pub failed_subs: Vec<(u64, u64)>,
+    /// Read sub-I/Os re-queued onto the next alive replica (failover).
+    /// The caller should drain again to post them.
+    pub requeued: u32,
+}
+
+/// Cumulative pipeline statistics.
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub submitted: u64,
+    pub retired: u64,
+    pub requeued: u64,
+    pub disk_fallbacks: u64,
+    pub admission_blocks: u64,
+    pub merged_ios: u64,
+    pub wqes: u64,
+    pub posts: u64,
+}
+
+/// A queued fabric-level sub-I/O (placed mode).
+#[derive(Debug, Clone, Copy)]
+struct SubIo {
+    parent: u64,
+    addr: u64,
+    len: u64,
+    dir: Dir,
+    thread: usize,
+    t_submit: u64,
+    /// Bitmask of replica nodes already attempted (failover skips them).
+    attempted: u64,
+}
+
+/// Retirement state of one placed application I/O.
+#[derive(Debug)]
+struct Pending {
+    remaining: u32,
+    any_ok: bool,
+    failed_over: bool,
+}
+
+/// The unified submit → merge → batch → admit → retire pipeline.
+#[derive(Debug)]
+pub struct IoEngine {
+    batch: BatchMode,
+    limits: BatchLimits,
+    channels: ChannelMap,
+    /// One read/write merge-queue pair per QP (global QP id indexing).
+    shards: Vec<MergeQueues>,
+    regulator: Regulator,
+    routing: Routing,
+    costs: EngineCosts,
+    next_wr_id: u64,
+    next_sub_id: u64,
+    /// Rotating start shard for drains: when the admission window closes
+    /// mid-drain, the next drain starts one shard later, so low-numbered
+    /// QPs cannot starve the rest under a tight window.
+    drain_cursor: usize,
+    subs: FxHashMap<u64, SubIo>,
+    pending: FxHashMap<u64, Pending>,
+    /// wr_id → post time (regulator RTT feedback).
+    post_times: FxHashMap<u64, u64>,
+    pub stats: EngineStats,
+}
+
+impl IoEngine {
+    pub fn new(
+        batch: BatchMode,
+        limits: BatchLimits,
+        nodes: usize,
+        qps_per_node: usize,
+        window_bytes: Option<u64>,
+        costs: EngineCosts,
+    ) -> Self {
+        let channels = ChannelMap::new(nodes, qps_per_node);
+        let shards = (0..channels.total_qps())
+            .map(|_| MergeQueues::new())
+            .collect();
+        let regulator = match window_bytes {
+            Some(w) => Regulator::static_window(w),
+            None => Regulator::unlimited(),
+        };
+        Self {
+            batch,
+            limits,
+            channels,
+            shards,
+            regulator,
+            routing: Routing::Direct,
+            costs,
+            next_wr_id: 1,
+            next_sub_id: 1,
+            drain_cursor: 0,
+            subs: FxHashMap::default(),
+            pending: FxHashMap::default(),
+            post_times: FxHashMap::default(),
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Build from a full stack design point (how the sim backend does it).
+    pub fn from_stack(stack: &StackConfig, nodes: usize, costs: EngineCosts) -> Self {
+        Self::new(
+            stack.batch,
+            stack.limits,
+            nodes,
+            stack.qps_per_node,
+            stack.window_bytes,
+            costs,
+        )
+    }
+
+    /// Enable placed routing: replica fan-out, read failover, disk signal.
+    pub fn with_placement(mut self, map: NodeMap) -> Self {
+        assert_eq!(
+            map.nodes(),
+            self.channels.nodes(),
+            "NodeMap and channel topology disagree on cluster size"
+        );
+        assert!(map.nodes() <= 64, "failover bitmask supports up to 64 nodes");
+        self.routing = Routing::Placed(map);
+        self
+    }
+
+    pub fn regulator(&self) -> &Regulator {
+        &self.regulator
+    }
+
+    /// Swap in a custom admission policy (the paper's §5.1 hook).
+    pub fn set_regulator(&mut self, r: Regulator) {
+        self.regulator = r;
+    }
+
+    pub fn channels(&self) -> &ChannelMap {
+        &self.channels
+    }
+
+    pub fn node_map(&self) -> Option<&NodeMap> {
+        match &self.routing {
+            Routing::Placed(m) => Some(m),
+            Routing::Direct => None,
+        }
+    }
+
+    pub fn node_map_mut(&mut self) -> Option<&mut NodeMap> {
+        match &mut self.routing {
+            Routing::Placed(m) => Some(m),
+            Routing::Direct => None,
+        }
+    }
+
+    /// Address-affine shard (= QP) selection for a request to `node`.
+    pub fn shard_of(&self, node: NodeId, addr: u64) -> QpId {
+        self.channels.select_by_addr(node, addr)
+    }
+
+    /// Requests currently queued across every shard.
+    pub fn queued_ios(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read.len() + s.write.len())
+            .sum()
+    }
+
+    /// Requests currently queued in one direction.
+    pub fn queued_ios_dir(&self, dir: Dir) -> usize {
+        self.shards
+            .iter()
+            .map(|s| match dir {
+                Dir::Read => s.read.len(),
+                Dir::Write => s.write.len(),
+            })
+            .sum()
+    }
+
+    fn fresh_sub_id(&mut self) -> u64 {
+        let id = self.next_sub_id;
+        self.next_sub_id += 1;
+        id
+    }
+
+    fn enqueue(&mut self, id: u64, node: NodeId, sub: &SubIo) {
+        let qp = self.shard_of(node, sub.addr);
+        self.shards[qp].of(sub.dir).push(AppIo {
+            id,
+            dir: sub.dir,
+            node,
+            addr: sub.addr,
+            len: sub.len,
+            thread: sub.thread,
+            t_submit: sub.t_submit,
+        });
+    }
+
+    /// Submit one application I/O into the pipeline (step 1 of the §5.1
+    /// protocol: enqueue; the caller then triggers a drain, which is the
+    /// merge-check step).
+    pub fn submit(&mut self, io: AppIo) -> Submitted {
+        self.stats.submitted += 1;
+        enum Route {
+            Direct,
+            Disk,
+            Targets(Vec<NodeId>),
+        }
+        let route = match (&self.routing, io.dir) {
+            (Routing::Direct, _) => Route::Direct,
+            (Routing::Placed(map), Dir::Write) => {
+                let w = map.route_write(io.addr);
+                if w.disk_fallback {
+                    Route::Disk
+                } else {
+                    Route::Targets(w.targets)
+                }
+            }
+            (Routing::Placed(map), Dir::Read) => match map.route_read(io.addr) {
+                ReadRoute::Node(n) => Route::Targets(vec![n]),
+                ReadRoute::DiskFallback => Route::Disk,
+            },
+        };
+        match route {
+            Route::Direct => {
+                let qp = self.shard_of(io.node, io.addr);
+                self.shards[qp].of(io.dir).push(io);
+                Submitted {
+                    sub_ids: vec![io.id],
+                    disk_fallback: false,
+                }
+            }
+            Route::Disk => {
+                self.stats.disk_fallbacks += 1;
+                Submitted {
+                    sub_ids: Vec::new(),
+                    disk_fallback: true,
+                }
+            }
+            Route::Targets(targets) => {
+                self.pending.insert(
+                    io.id,
+                    Pending {
+                        remaining: targets.len() as u32,
+                        any_ok: false,
+                        failed_over: false,
+                    },
+                );
+                let mut sub_ids = Vec::with_capacity(targets.len());
+                for node in targets {
+                    let sid = self.fresh_sub_id();
+                    let sub = SubIo {
+                        parent: io.id,
+                        addr: io.addr,
+                        len: io.len,
+                        dir: io.dir,
+                        thread: io.thread,
+                        t_submit: io.t_submit,
+                        attempted: 1u64 << node,
+                    };
+                    self.subs.insert(sid, sub);
+                    self.enqueue(sid, node, &sub);
+                    sub_ids.push(sid);
+                }
+                Submitted {
+                    sub_ids,
+                    disk_fallback: false,
+                }
+            }
+        }
+    }
+
+    /// Drain one direction through every shard, bounded by the admission
+    /// window. Registers each posted WR with the regulator; the returned
+    /// chains are ready for the backend to move.
+    pub fn drain_dir(&mut self, dir: Dir, now: u64) -> DrainOut {
+        let mut out = DrainOut::default();
+        let n_shards = self.shards.len();
+        let start = self.drain_cursor % n_shards;
+        self.drain_cursor = self.drain_cursor.wrapping_add(1);
+        for i in 0..n_shards {
+            let qp = (start + i) % n_shards;
+            if self.shards[qp].of(dir).is_empty() {
+                continue;
+            }
+            let avail = self.regulator.available(now);
+            if avail == 0 {
+                out.admission_blocked += 1;
+                break;
+            }
+            let drained = match self.shards[qp].of(dir).merge_check(avail) {
+                MergeCheck::Drained(v) => v,
+                MergeCheck::Blocked => {
+                    // progress guarantee: a request larger than the window
+                    // must not deadlock — once the pipe is fully drained,
+                    // admit exactly the head request (a budget of its own
+                    // length drains it and nothing behind it)
+                    if self.regulator.in_flight() == 0 {
+                        let head_len = self.shards[qp].of(dir).peek()[0].len;
+                        match self.shards[qp].of(dir).merge_check(head_len) {
+                            MergeCheck::Drained(v) => v,
+                            _ => continue,
+                        }
+                    } else {
+                        out.admission_blocked += 1;
+                        continue;
+                    }
+                }
+                MergeCheck::TakenByPeer => continue,
+            };
+            if !self.shards[qp].of(dir).is_empty() {
+                // window closed mid-drain: the tail stays queued (and keeps
+                // merging with later arrivals — the regulator's side benefit)
+                out.admission_blocked += 1;
+            }
+            out.cpu_ns += self.costs.merge_check_base_ns
+                + self.costs.merge_check_per_io_ns * drained.len() as u64;
+            let node = self.channels.node_of(qp);
+            let (chains, pstats) = plan(self.batch, &self.limits, drained, &mut self.next_wr_id);
+            out.merged_ios += pstats.merged_ios;
+            self.stats.wqes += pstats.wqes;
+            self.stats.posts += pstats.posts;
+            for chain in chains {
+                debug_assert_eq!(chain.node, node, "shard {qp} planned a foreign node");
+                for wr in &chain.wrs {
+                    self.regulator.on_post(wr.len);
+                    self.post_times.insert(wr.wr_id, now + out.cpu_ns);
+                    out.cpu_ns += self.costs.post_wqe_cpu_ns;
+                }
+                out.cpu_ns += self.costs.mmio_cpu_ns;
+                out.chains.push(PostChain {
+                    qp,
+                    node,
+                    wrs: chain.wrs,
+                    cpu_offset_ns: out.cpu_ns,
+                });
+            }
+        }
+        self.stats.merged_ios += out.merged_ios;
+        self.stats.admission_blocks += out.admission_blocked;
+        out
+    }
+
+    /// Drain both directions (reads first: page-ins are synchronous).
+    pub fn drain_all(&mut self, now: u64) -> DrainOut {
+        let mut out = self.drain_dir(Dir::Read, now);
+        let w = self.drain_dir(Dir::Write, now + out.cpu_ns);
+        for mut c in w.chains {
+            c.cpu_offset_ns += out.cpu_ns;
+            out.chains.push(c);
+        }
+        out.cpu_ns += w.cpu_ns;
+        out.merged_ios += w.merged_ios;
+        out.admission_blocked += w.admission_blocked;
+        out
+    }
+
+    /// Handle one work completion: release the admission window, map the
+    /// WR's sub-I/Os back to application I/Os, apply the replication
+    /// policy, and fail reads over to the next alive replica on error.
+    pub fn on_wc(&mut self, wc: &Wc, now: u64) -> WcOut {
+        let rtt = now.saturating_sub(self.post_times.remove(&wc.wr_id).unwrap_or(now));
+        self.regulator.on_complete(wc.len, rtt);
+        let ok = wc.status == WcStatus::Success;
+
+        let mut out = WcOut::default();
+        if matches!(self.routing, Routing::Direct) {
+            // direct mode: sub-I/Os *are* the application I/Os — retire
+            // each exactly once, no replication policy to satisfy. An
+            // error completion (direct mode has no failover) surfaces as
+            // the disk-fallback signal so callers can tell it apart.
+            for &id in &wc.app_ios {
+                out.retired.push(RetiredIo {
+                    id,
+                    disk_fallback: !ok,
+                    failed_over: false,
+                });
+                if ok {
+                    out.completed_subs.push((id, id));
+                } else {
+                    self.stats.disk_fallbacks += 1;
+                    out.failed_subs.push((id, id));
+                }
+            }
+            self.stats.retired += wc.app_ios.len() as u64;
+            return out;
+        }
+
+        for &sid in &wc.app_ios {
+            let Some(sub) = self.subs.remove(&sid) else {
+                continue; // duplicate-completion guard
+            };
+            if ok {
+                out.completed_subs.push((sid, sub.parent));
+            } else if sub.dir == Dir::Read {
+                // failover: re-queue onto the next alive, untried replica
+                let next = match &self.routing {
+                    Routing::Placed(map) => map
+                        .place(sub.addr)
+                        .replicas
+                        .into_iter()
+                        .find(|&n| map.is_alive(n) && sub.attempted & (1u64 << n) == 0),
+                    Routing::Direct => unreachable!(),
+                };
+                if let Some(node) = next {
+                    let mut retry = sub;
+                    retry.attempted |= 1u64 << node;
+                    self.subs.insert(sid, retry);
+                    if let Some(p) = self.pending.get_mut(&sub.parent) {
+                        p.failed_over = true;
+                    }
+                    self.enqueue(sid, node, &retry);
+                    out.requeued += 1;
+                    self.stats.requeued += 1;
+                    continue;
+                }
+            }
+            let Some(p) = self.pending.get_mut(&sub.parent) else {
+                continue;
+            };
+            if ok {
+                p.any_ok = true;
+            } else {
+                out.failed_subs.push((sid, sub.parent));
+            }
+            p.remaining -= 1;
+            if p.remaining == 0 {
+                let done = self.pending.remove(&sub.parent).expect("pending parent");
+                let disk_fallback = !done.any_ok;
+                if disk_fallback {
+                    self.stats.disk_fallbacks += 1;
+                }
+                self.stats.retired += 1;
+                out.retired.push(RetiredIo {
+                    id: sub.parent,
+                    disk_fallback,
+                    failed_over: done.failed_over,
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::node::NodeMap;
+    use crate::fabric::OpKind;
+
+    fn engine(nodes: usize, qps: usize, window: Option<u64>) -> IoEngine {
+        IoEngine::new(
+            BatchMode::Hybrid,
+            BatchLimits::default(),
+            nodes,
+            qps,
+            window,
+            EngineCosts::free(),
+        )
+    }
+
+    fn io(id: u64, dir: Dir, node: usize, addr: u64) -> AppIo {
+        AppIo {
+            id,
+            dir,
+            node,
+            addr,
+            len: 4096,
+            thread: 0,
+            t_submit: 0,
+        }
+    }
+
+    fn wc_for(wr: &WorkRequest, status: WcStatus) -> Wc {
+        Wc {
+            wr_id: wr.wr_id,
+            qp: 0,
+            op: wr.op,
+            len: wr.len,
+            app_ios: wr.app_ios.clone(),
+            status,
+        }
+    }
+
+    /// Drain, then deliver every posted WR as a successful completion.
+    fn complete_all(e: &mut IoEngine) -> Vec<RetiredIo> {
+        let mut retired = Vec::new();
+        loop {
+            let out = e.drain_all(0);
+            if out.chains.is_empty() {
+                break;
+            }
+            for chain in out.chains {
+                for wr in chain.wrs {
+                    let r = e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
+                    retired.extend(r.retired);
+                }
+            }
+        }
+        retired
+    }
+
+    #[test]
+    fn direct_submit_retires_through_pipeline() {
+        let mut e = engine(2, 4, None);
+        for i in 0..8 {
+            let s = e.submit(io(i, Dir::Write, (i % 2) as usize, i * 4096));
+            assert_eq!(s.sub_ids, vec![i]);
+        }
+        let retired = complete_all(&mut e);
+        let mut ids: Vec<u64> = retired.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        assert_eq!(e.queued_ios(), 0);
+        assert_eq!(e.regulator().in_flight(), 0);
+    }
+
+    #[test]
+    fn adjacent_submissions_share_a_shard_and_merge() {
+        let mut e = engine(1, 4, None);
+        for i in 0..8u64 {
+            e.submit(io(i, Dir::Write, 0, i * 4096)); // same 1 MiB region
+        }
+        let out = e.drain_all(0);
+        assert_eq!(out.chains.len(), 1, "one shard, one chain");
+        assert_eq!(out.merged_ios, 8, "all adjacent pages merged");
+        assert!(out.chains[0].wrs[0].num_sge > 1);
+    }
+
+    #[test]
+    fn distant_regions_spread_over_shards() {
+        let mut e = engine(1, 4, None);
+        for i in 0..8u64 {
+            e.submit(io(i, Dir::Write, 0, i << SHARD_REGION_SHIFT));
+        }
+        let out = e.drain_all(0);
+        let qps: std::collections::BTreeSet<_> = out.chains.iter().map(|c| c.qp).collect();
+        assert_eq!(qps.len(), 4, "8 regions cover all 4 shards");
+    }
+
+    #[test]
+    fn same_region_maps_to_stable_shard() {
+        let e = engine(3, 4, None);
+        let a = e.shard_of(1, 5 << SHARD_REGION_SHIFT);
+        assert_eq!(a, e.shard_of(1, (5 << SHARD_REGION_SHIFT) + 4096));
+        assert_eq!(e.channels().node_of(a), 1);
+    }
+
+    #[test]
+    fn admission_window_bounds_posted_bytes() {
+        let mut e = engine(1, 2, Some(8192));
+        for i in 0..8u64 {
+            e.submit(io(i, Dir::Write, 0, i * 4096));
+        }
+        let out = e.drain_all(0);
+        let posted: u64 = out
+            .chains
+            .iter()
+            .flat_map(|c| c.wrs.iter())
+            .map(|w| w.len)
+            .sum();
+        assert!(posted <= 8192, "posted {posted} > window");
+        assert_eq!(e.regulator().in_flight(), posted);
+        assert!(out.admission_blocked > 0);
+        // completing releases the window and the rest drains
+        let mut done = 0;
+        for chain in out.chains {
+            for wr in chain.wrs {
+                done += e.on_wc(&wc_for(&wr, WcStatus::Success), 0).retired.len();
+            }
+        }
+        done += complete_all(&mut e).len();
+        assert_eq!(done, 8);
+    }
+
+    #[test]
+    fn oversized_request_has_progress_guarantee() {
+        let mut e = engine(1, 1, Some(4096));
+        let mut big = io(1, Dir::Write, 0, 0);
+        big.len = 1 << 20;
+        e.submit(big);
+        // backlog behind the oversized head must NOT ride along with it
+        e.submit(io(2, Dir::Write, 0, 1 << 21));
+        let first = e.drain_all(0);
+        let posted: u64 = first
+            .chains
+            .iter()
+            .flat_map(|c| c.wrs.iter())
+            .map(|w| w.len)
+            .sum();
+        assert_eq!(posted, 1 << 20, "exactly the oversized head admitted");
+        assert_eq!(e.queued_ios(), 1, "the small request stays queued");
+        let mut done = 0;
+        for chain in first.chains {
+            for wr in chain.wrs {
+                done += e.on_wc(&wc_for(&wr, WcStatus::Success), 0).retired.len();
+            }
+        }
+        done += complete_all(&mut e).len();
+        assert_eq!(done, 2, "both writes complete");
+    }
+
+    #[test]
+    fn placed_write_fans_out_and_retires_once() {
+        let map = NodeMap::new(3, 2, 1 << 20);
+        let mut e = engine(3, 2, None).with_placement(map);
+        let s = e.submit(io(42, Dir::Write, 0, 0));
+        assert_eq!(s.sub_ids.len(), 2, "two replicas queued");
+        let out = e.drain_all(0);
+        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        assert_eq!(wrs.len(), 2);
+        // first replica completing does NOT retire the io
+        let r1 = e.on_wc(&wc_for(&wrs[0], WcStatus::Success), 0);
+        assert!(r1.retired.is_empty(), "replication not yet satisfied");
+        let r2 = e.on_wc(&wc_for(&wrs[1], WcStatus::Success), 0);
+        assert_eq!(r2.retired.len(), 1);
+        assert_eq!(r2.retired[0].id, 42);
+        assert!(!r2.retired[0].disk_fallback);
+    }
+
+    #[test]
+    fn placed_read_fails_over_to_next_replica() {
+        let map = NodeMap::new(3, 2, 1 << 20);
+        let mut e = engine(3, 2, None).with_placement(map);
+        e.submit(io(7, Dir::Read, 0, 0)); // primary = node 0
+        let out = e.drain_all(0);
+        let wr = out.chains.into_iter().flat_map(|c| c.wrs).next().unwrap();
+        assert_eq!(wr.node, 0);
+        // primary dies mid-flight: error completion triggers failover
+        e.node_map_mut().unwrap().set_alive(0, false);
+        let r = e.on_wc(&wc_for(&wr, WcStatus::Error), 0);
+        assert!(r.retired.is_empty());
+        assert_eq!(r.requeued, 1);
+        // the retry is queued for the secondary replica (node 1)
+        let out2 = e.drain_all(0);
+        let wr2 = out2.chains.into_iter().flat_map(|c| c.wrs).next().unwrap();
+        assert_eq!(wr2.node, 1);
+        let r2 = e.on_wc(&wc_for(&wr2, WcStatus::Success), 0);
+        assert_eq!(r2.retired.len(), 1);
+        assert!(r2.retired[0].failed_over);
+        assert!(!r2.retired[0].disk_fallback);
+    }
+
+    #[test]
+    fn placed_read_all_replicas_failed_signals_disk() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None).with_placement(map);
+        e.submit(io(9, Dir::Read, 0, 0));
+        let out = e.drain_all(0);
+        let wr = out.chains.into_iter().flat_map(|c| c.wrs).next().unwrap();
+        e.node_map_mut().unwrap().set_alive(0, false);
+        let r = e.on_wc(&wc_for(&wr, WcStatus::Error), 0);
+        assert_eq!(r.requeued, 1, "fails over to node 1 first");
+        let out2 = e.drain_all(0);
+        let wr2 = out2.chains.into_iter().flat_map(|c| c.wrs).next().unwrap();
+        e.node_map_mut().unwrap().set_alive(1, false);
+        let r2 = e.on_wc(&wc_for(&wr2, WcStatus::Error), 0);
+        assert_eq!(r2.retired.len(), 1);
+        assert!(r2.retired[0].disk_fallback, "all replicas dead -> disk");
+    }
+
+    #[test]
+    fn placed_submit_with_dead_cluster_signals_disk_immediately() {
+        let mut map = NodeMap::new(2, 2, 1 << 20);
+        map.set_alive(0, false);
+        map.set_alive(1, false);
+        let mut e = engine(2, 1, None).with_placement(map);
+        let s = e.submit(io(1, Dir::Write, 0, 0));
+        assert!(s.disk_fallback && s.sub_ids.is_empty());
+        let s = e.submit(io(2, Dir::Read, 0, 0));
+        assert!(s.disk_fallback);
+        assert_eq!(e.stats.disk_fallbacks, 2);
+        assert_eq!(e.queued_ios(), 0);
+    }
+
+    #[test]
+    fn placed_write_partial_replica_failure_still_retires_remote() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None).with_placement(map);
+        e.submit(io(5, Dir::Write, 0, 0));
+        let out = e.drain_all(0);
+        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        assert_eq!(wrs.len(), 2);
+        let r1 = e.on_wc(&wc_for(&wrs[0], WcStatus::Error), 0);
+        assert!(r1.retired.is_empty());
+        let r2 = e.on_wc(&wc_for(&wrs[1], WcStatus::Success), 0);
+        assert_eq!(r2.retired.len(), 1);
+        assert!(!r2.retired[0].disk_fallback, "one replica survived");
+    }
+
+    /// Property-style check: random mixed traffic through the full
+    /// pipeline conserves every application I/O exactly once and never
+    /// exceeds the admission window in flight.
+    #[test]
+    fn prop_pipeline_conserves_ios_under_window() {
+        use crate::util::rng::Pcg32;
+        let window = 16 * 4096;
+        let map = NodeMap::new(4, 2, 1 << 20);
+        let mut e = engine(4, 4, Some(window)).with_placement(map);
+        let mut rng = Pcg32::new(0xE761E);
+        let mut in_flight: Vec<WorkRequest> = Vec::new();
+        let mut retired = std::collections::BTreeSet::new();
+        let total = 400u64;
+        let mut submitted = 0u64;
+        while (retired.len() as u64) < total {
+            if submitted < total && rng.gen_bool(0.5) {
+                let dir = if rng.gen_bool(0.3) { Dir::Read } else { Dir::Write };
+                let addr = rng.gen_below(1 << 26) / 4096 * 4096;
+                e.submit(io(submitted, dir, 0, addr));
+                submitted += 1;
+            }
+            let out = e.drain_all(0);
+            for c in out.chains {
+                in_flight.extend(c.wrs);
+            }
+            assert!(
+                e.regulator().in_flight() <= window,
+                "window exceeded: {}",
+                e.regulator().in_flight()
+            );
+            if !in_flight.is_empty() {
+                let i = rng.gen_below(in_flight.len() as u64) as usize;
+                let wr = in_flight.swap_remove(i);
+                let r = e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
+                for ret in r.retired {
+                    assert!(retired.insert(ret.id), "double retire of {}", ret.id);
+                }
+            }
+        }
+        assert_eq!(retired.len() as u64, total);
+        assert_eq!(e.queued_ios(), 0);
+        assert_eq!(e.regulator().in_flight(), 0);
+    }
+
+    #[test]
+    fn drain_charges_serialized_cpu_with_cost_model() {
+        let mut e = IoEngine::new(
+            BatchMode::Single,
+            BatchLimits::default(),
+            1,
+            1,
+            None,
+            EngineCosts {
+                post_wqe_cpu_ns: 100,
+                mmio_cpu_ns: 10,
+                merge_check_base_ns: 5,
+                merge_check_per_io_ns: 1,
+            },
+        );
+        for i in 0..3u64 {
+            e.submit(io(i, Dir::Write, 0, i << SHARD_REGION_SHIFT));
+        }
+        let out = e.drain_all(0);
+        // scan: 5 + 3*1; per WR: 100 + 10 MMIO each (Single mode)
+        assert_eq!(out.cpu_ns, 8 + 3 * 110);
+        assert!(out.chains.windows(2).all(|w| w[0].cpu_offset_ns < w[1].cpu_offset_ns));
+        assert_eq!(out.chains.last().unwrap().cpu_offset_ns, out.cpu_ns);
+    }
+
+    #[test]
+    fn reads_and_writes_drain_independently() {
+        let mut e = engine(1, 1, None);
+        e.submit(io(1, Dir::Read, 0, 0));
+        e.submit(io(2, Dir::Write, 0, 4096));
+        let r = e.drain_dir(Dir::Read, 0);
+        assert_eq!(r.chains.len(), 1);
+        assert_eq!(r.chains[0].wrs[0].op, OpKind::Read);
+        let w = e.drain_dir(Dir::Write, 0);
+        assert_eq!(w.chains.len(), 1);
+        assert_eq!(w.chains[0].wrs[0].op, OpKind::Write);
+    }
+}

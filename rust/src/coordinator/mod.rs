@@ -13,6 +13,10 @@
 //! * [`channel`] — multi-QP channels per remote node (§6.1).
 //! * [`node`] — the node-level abstraction: placement, replication,
 //!   failover order (§6).
+//! * [`engine`] — the [`engine::IoEngine`] pipeline composing all of the
+//!   above: sharded merge queues (one per QP) → batch planner → admission
+//!   window → replication-aware retirement. The single submission path
+//!   both fabric backends drive.
 //!
 //! Everything here is pure, synchronous policy code — the same objects are
 //! driven by the discrete-event fabric (figures) and by the live loopback
@@ -20,6 +24,7 @@
 
 pub mod batching;
 pub mod channel;
+pub mod engine;
 pub mod merge_queue;
 pub mod mr_strategy;
 pub mod node;

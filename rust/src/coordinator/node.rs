@@ -7,6 +7,24 @@
 
 use crate::fabric::NodeId;
 
+/// Routing decision for a read: the first alive replica, or the explicit
+/// disk-fallback signal the paging layer acts on when every replica of the
+/// block has failed (paper §7.1: "disk access occurs only when all
+/// replication is failed").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadRoute {
+    Node(NodeId),
+    DiskFallback,
+}
+
+/// Routing decision for a replicated write: the alive targets to fan out
+/// to, plus the explicit disk-fallback signal when none are alive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WriteRoute {
+    pub targets: Vec<NodeId>,
+    pub disk_fallback: bool,
+}
+
 /// Where a block lives: ordered replica list (primary first) + disk flag.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Placement {
@@ -45,12 +63,29 @@ impl NodeMap {
         self.replicas
     }
 
-    /// Mark a node failed/recovered (failure-injection tests).
+    /// Mark a node failed/recovered (failure injection, live failover).
+    ///
+    /// # Panics
+    /// Panics with a descriptive message if `node` is out of range — a
+    /// caller naming a node that does not exist is a configuration bug,
+    /// not a runtime condition to paper over.
     pub fn set_alive(&mut self, node: NodeId, alive: bool) {
+        assert!(
+            node < self.nodes,
+            "NodeMap::set_alive: node {node} out of range (cluster has {} nodes)",
+            self.nodes
+        );
         self.alive[node] = alive;
     }
 
+    /// # Panics
+    /// Panics with a descriptive message if `node` is out of range.
     pub fn is_alive(&self, node: NodeId) -> bool {
+        assert!(
+            node < self.nodes,
+            "NodeMap::is_alive: node {node} out of range (cluster has {} nodes)",
+            self.nodes
+        );
         self.alive[node]
     }
 
@@ -87,6 +122,24 @@ impl NodeMap {
             .into_iter()
             .filter(|&n| self.alive[n])
             .collect()
+    }
+
+    /// Read routing with the all-replicas-dead case surfaced explicitly.
+    pub fn route_read(&self, addr: u64) -> ReadRoute {
+        match self.read_target(addr) {
+            Some(n) => ReadRoute::Node(n),
+            None => ReadRoute::DiskFallback,
+        }
+    }
+
+    /// Write routing with the all-replicas-dead case surfaced explicitly.
+    pub fn route_write(&self, addr: u64) -> WriteRoute {
+        let targets = self.write_targets(addr);
+        let disk_fallback = targets.is_empty();
+        WriteRoute {
+            targets,
+            disk_fallback,
+        }
     }
 }
 
@@ -137,6 +190,32 @@ mod tests {
     fn single_node_single_replica() {
         let m = NodeMap::new(1, 1, 4096);
         assert_eq!(m.place(123456).replicas, vec![0]);
+    }
+
+    #[test]
+    fn route_api_surfaces_disk_fallback() {
+        let mut m = NodeMap::new(2, 2, 4096);
+        assert_eq!(m.route_read(0), ReadRoute::Node(0));
+        assert!(!m.route_write(0).disk_fallback);
+        m.set_alive(0, false);
+        m.set_alive(1, false);
+        assert_eq!(m.route_read(0), ReadRoute::DiskFallback);
+        let w = m.route_write(0);
+        assert!(w.disk_fallback && w.targets.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn set_alive_rejects_out_of_range_node() {
+        let mut m = NodeMap::new(2, 1, 4096);
+        m.set_alive(2, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn is_alive_rejects_out_of_range_node() {
+        let m = NodeMap::new(3, 1, 4096);
+        let _ = m.is_alive(7);
     }
 
     /// Property: replicas are always distinct, alive-filtered, and the

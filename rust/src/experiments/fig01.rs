@@ -6,8 +6,7 @@
 use crate::cli::Table;
 use crate::coordinator::polling::PollingMode;
 use crate::coordinator::StackConfig;
-use crate::fabric::sim::engine::StackEngine;
-use crate::fabric::sim::{Sim, SimReport};
+use crate::fabric::sim::{run_pipeline, SimReport};
 use crate::util::fmt;
 use crate::workloads::fio::FioDriver;
 use crate::workloads::DriverStats;
@@ -24,10 +23,8 @@ pub fn run_one(ctx: &ExpCtx, threads: usize, qps: usize, window: Option<u64>) ->
             batch: 16,
             max_retry: 120,
         });
-    let mut sim = Sim::new(ctx.fabric.clone(), stack.clone(), 1);
-    sim.attach_engine(Box::new(StackEngine::new(&ctx.fabric, &stack)));
     let stats = DriverStats::shared();
-    sim.attach_driver(Box::new(FioDriver::new(
+    let driver = Box::new(FioDriver::new(
         threads,
         2, // FIO with modest per-thread depth: threads are the pressure axis
         4096,
@@ -37,8 +34,8 @@ pub fn run_one(ctx: &ExpCtx, threads: usize, qps: usize, window: Option<u64>) ->
         ctx.ops(64_000),
         42,
         stats,
-    )));
-    sim.run(u64::MAX / 2)
+    ));
+    run_pipeline(&ctx.fabric, &stack, 1, driver)
 }
 
 pub fn run(ctx: &ExpCtx) -> String {

@@ -7,8 +7,7 @@
 use crate::cli::Table;
 use crate::coordinator::polling::PollingMode;
 use crate::coordinator::StackConfig;
-use crate::fabric::sim::engine::StackEngine;
-use crate::fabric::sim::{Sim, SimReport};
+use crate::fabric::sim::{run_pipeline, SimReport};
 use crate::util::fmt;
 use crate::workloads::micro::SyncWriteDriver;
 
@@ -21,10 +20,8 @@ pub fn run_one(ctx: &ExpCtx, polling: PollingMode) -> SimReport {
         .with_polling(polling)
         .with_qps(1)
         .with_window(None);
-    let mut sim = Sim::new(ctx.fabric.clone(), stack.clone(), 1);
-    sim.attach_engine(Box::new(StackEngine::new(&ctx.fabric, &stack)));
-    sim.attach_driver(Box::new(SyncWriteDriver::new(ctx.ops(1_000_000), 4096)));
-    sim.run(u64::MAX / 2)
+    let driver = Box::new(SyncWriteDriver::new(ctx.ops(1_000_000), 4096));
+    run_pipeline(&ctx.fabric, &stack, 1, driver)
 }
 
 pub fn run(ctx: &ExpCtx) -> String {

@@ -72,8 +72,7 @@ pub fn run(ctx: &ExpCtx) -> String {
 pub fn run_ablation(ctx: &ExpCtx) -> String {
     use crate::coordinator::regulator::{AimdWindow, Regulator};
     use crate::coordinator::StackConfig;
-    use crate::fabric::sim::engine::StackEngine;
-    use crate::fabric::sim::Sim;
+    use crate::fabric::sim::run_pipeline_custom;
     use crate::workloads::fio::FioDriver;
     use crate::workloads::DriverStats;
 
@@ -82,14 +81,8 @@ pub fn run_ablation(ctx: &ExpCtx) -> String {
         let stack = StackConfig::rdmabox(&ctx.fabric)
             .with_qps(4)
             .with_window(None);
-        let mut sim = Sim::new(ctx.fabric.clone(), stack.clone(), 1);
-        let mut eng = StackEngine::new(&ctx.fabric, &stack);
-        if let Some(r) = reg {
-            eng.set_regulator(r);
-        }
-        sim.attach_engine(Box::new(eng));
         let stats = DriverStats::shared();
-        sim.attach_driver(Box::new(FioDriver::new(
+        let driver = Box::new(FioDriver::new(
             threads,
             2,
             4096,
@@ -99,8 +92,8 @@ pub fn run_ablation(ctx: &ExpCtx) -> String {
             ctx.ops(64_000),
             42,
             stats,
-        )));
-        sim.run(u64::MAX / 2)
+        ));
+        run_pipeline_custom(&ctx.fabric, &stack, 1, driver, reg)
     };
 
     let none = run(None);

@@ -1,150 +1,224 @@
 //! Live loopback fabric: the node-level abstraction running on real
-//! threads with real memory. Remote nodes are server threads owning their
-//! donated buffers; "RDMA" verbs are memcpys through registered regions,
-//! with completions flowing back over channels. The same coordinator
-//! policy objects (merge queue, batch planner, admission regulator) run on
-//! this backend — this is what the `examples/` use, including the
-//! end-to-end ML training driver where the moved bytes feed real PJRT
-//! compute.
+//! threads with real memory — and, since the `IoEngine` refactor, a real
+//! instance of the **same pipeline** the simulator drives: submissions go
+//! through the sharded per-QP merge queues, the batch planner and the
+//! admission window of [`crate::coordinator::engine::IoEngine`];
+//! completions are retired through a [`PollerFsm`] completion loop.
+//!
+//! Topology mirrors the paper's multi-channel design (§6.1): every remote
+//! node exposes `qps_per_node` QPs, each QP is a worker thread owning the
+//! 1 MiB address regions the engine's address-affine sharding routes to it
+//! (so K channels per node really do move bytes in parallel, like K NIC
+//! processing units). "RDMA" verbs are memcpys through those regions;
+//! completions flow back over a shared completion queue.
+//!
+//! With a [`NodeMap`] attached ([`LiveBox::new_placed`]) the engine also
+//! runs the §6 node abstraction live: replicated writes fan out, reads
+//! fail over to the next alive replica on error, and all-replicas-dead
+//! surfaces the disk-fallback signal instead of hanging.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
-use crate::coordinator::batching::{plan, BatchLimits, BatchMode};
-use crate::coordinator::merge_queue::{MergeCheck, MergeQueues};
-use crate::coordinator::regulator::Regulator;
-use crate::fabric::{AppIo, Dir, NodeId};
+use crate::coordinator::batching::{BatchLimits, BatchMode};
+use crate::coordinator::engine::{EngineCosts, IoEngine, SHARD_REGION_SHIFT};
+use crate::coordinator::node::NodeMap;
+use crate::coordinator::polling::{PollStep, PollerFsm, PollingMode};
+use crate::fabric::{AppIo, Dir, NodeId, OpKind, QpId, Wc, WcStatus, WorkRequest};
+use crate::util::fxhash::FxHashMap;
 
-enum Req {
-    Write {
-        addr: u64,
-        data: Vec<u8>,
-        done: Sender<u64>,
-        /// emulate the two-sided receive path: staging copy before commit
-        server_copy: bool,
-    },
-    Read {
-        addr: u64,
-        len: u64,
-        done: Sender<Vec<u8>>,
-        server_copy: bool,
+const REGION_BYTES: usize = 1 << SHARD_REGION_SHIFT;
+
+enum QpReq {
+    Work {
+        wr: WorkRequest,
+        /// Write payload (concatenated in remote-address order for merged
+        /// WRs); `None` for reads.
+        payload: Option<Vec<u8>>,
     },
     Shutdown,
 }
 
-/// One remote memory donor: a thread owning `capacity` bytes.
-struct RemoteNode {
-    tx: Sender<Req>,
-    handle: Option<JoinHandle<()>>,
+/// A completion with the read payload riding along (the live stand-in for
+/// DMA into the registered destination buffer).
+struct LiveWc {
+    wc: Wc,
+    data: Option<Vec<u8>>,
 }
 
-fn node_thread(capacity: usize, rx: Receiver<Req>) {
-    let mut mem = vec![0u8; capacity];
-    let mut staging = vec![0u8; 1 << 20];
+/// One QP worker: owns the address regions sharded onto this channel.
+/// Memory is a sparse region map, zero-filled on first touch — every QP of
+/// a node sees a disjoint slice of that node's address space, which is
+/// what lets K channels memcpy in parallel without locks.
+fn qp_worker(
+    qp: QpId,
+    capacity: usize,
+    rx: Receiver<QpReq>,
+    alive: Arc<AtomicBool>,
+    cq: Sender<LiveWc>,
+) {
+    let mut regions: FxHashMap<u64, Vec<u8>> = FxHashMap::default();
     while let Ok(req) = rx.recv() {
-        match req {
-            Req::Write {
-                addr,
-                data,
-                done,
-                server_copy,
-            } => {
-                let a = addr as usize;
-                if server_copy {
-                    // two-sided designs land in a bounce buffer first
-                    let n = data.len().min(staging.len());
-                    staging[..n].copy_from_slice(&data[..n]);
-                }
-                mem[a..a + data.len()].copy_from_slice(&data);
-                let _ = done.send(data.len() as u64);
-            }
-            Req::Read {
-                addr,
-                len,
-                done,
-                server_copy,
-            } => {
-                let a = addr as usize;
-                let l = len as usize;
-                if server_copy {
-                    let n = l.min(staging.len());
-                    staging[..n].copy_from_slice(&mem[a..a + n]);
-                }
-                let _ = done.send(mem[a..a + l].to_vec());
-            }
-            Req::Shutdown => break,
+        let QpReq::Work { wr, payload } = req else {
+            break;
+        };
+        // donated-capacity invariant: addressing past what the node donated
+        // is a caller bug — fail fast like the fixed-size buffer used to
+        assert!(
+            wr.remote_addr + wr.len <= capacity as u64,
+            "loopback access beyond donated capacity: addr {} + len {} > {}",
+            wr.remote_addr,
+            wr.len,
+            capacity
+        );
+        if !alive.load(Ordering::Relaxed) {
+            // dead node: every verb completes in error (failover path)
+            let _ = cq.send(LiveWc {
+                wc: Wc {
+                    wr_id: wr.wr_id,
+                    qp,
+                    op: wr.op,
+                    len: wr.len,
+                    app_ios: wr.app_ios,
+                    status: WcStatus::Error,
+                },
+                data: None,
+            });
+            continue;
         }
+        let data = match wr.op {
+            OpKind::Write | OpKind::Send => {
+                let payload = payload.expect("write payload");
+                debug_assert_eq!(payload.len() as u64, wr.len);
+                region_write(&mut regions, wr.remote_addr, &payload);
+                None
+            }
+            OpKind::Read => {
+                let mut buf = vec![0u8; wr.len as usize];
+                region_read(&mut regions, wr.remote_addr, &mut buf);
+                Some(buf)
+            }
+        };
+        let _ = cq.send(LiveWc {
+            wc: Wc {
+                wr_id: wr.wr_id,
+                qp,
+                op: wr.op,
+                len: wr.len,
+                app_ios: wr.app_ios,
+                status: WcStatus::Success,
+            },
+            data,
+        });
     }
 }
 
-/// Cluster of loopback memory donors.
+fn region_write(regions: &mut FxHashMap<u64, Vec<u8>>, addr: u64, data: &[u8]) {
+    let mut off = 0usize;
+    while off < data.len() {
+        let a = addr + off as u64;
+        let region = a >> SHARD_REGION_SHIFT;
+        let ro = (a as usize) & (REGION_BYTES - 1);
+        let n = (REGION_BYTES - ro).min(data.len() - off);
+        let buf = regions
+            .entry(region)
+            .or_insert_with(|| vec![0u8; REGION_BYTES]);
+        buf[ro..ro + n].copy_from_slice(&data[off..off + n]);
+        off += n;
+    }
+}
+
+fn region_read(regions: &mut FxHashMap<u64, Vec<u8>>, addr: u64, out: &mut [u8]) {
+    let mut off = 0usize;
+    while off < out.len() {
+        let a = addr + off as u64;
+        let region = a >> SHARD_REGION_SHIFT;
+        let ro = (a as usize) & (REGION_BYTES - 1);
+        let n = (REGION_BYTES - ro).min(out.len() - off);
+        match regions.get(&region) {
+            Some(buf) => out[off..off + n].copy_from_slice(&buf[ro..ro + n]),
+            None => out[off..off + n].fill(0),
+        }
+        off += n;
+    }
+}
+
+/// Cluster of loopback memory donors: `qps_per_node` worker threads per
+/// remote node, one shared completion queue.
 pub struct LoopbackFabric {
-    nodes: Vec<RemoteNode>,
+    qp_txs: Vec<Sender<QpReq>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Taken by [`LiveBox`] at construction (`Mutex` keeps the fabric —
+    /// and therefore the client embedding it — `Sync`).
+    cq_rx: Mutex<Option<Receiver<LiveWc>>>,
+    alive: Vec<Arc<AtomicBool>>,
+    nodes: usize,
+    qps_per_node: usize,
     pub capacity_per_node: usize,
 }
 
 impl LoopbackFabric {
+    /// One channel per node (back-compat default).
     pub fn start(nodes: usize, capacity_per_node: usize) -> Self {
-        let nodes = (0..nodes)
-            .map(|_| {
-                let (tx, rx) = channel();
-                let handle = std::thread::spawn(move || node_thread(capacity_per_node, rx));
-                RemoteNode {
-                    tx,
-                    handle: Some(handle),
-                }
-            })
-            .collect();
+        Self::start_sharded(nodes, capacity_per_node, 1)
+    }
+
+    /// `qps_per_node` channels per node — the §6.1 multi-channel topology.
+    pub fn start_sharded(nodes: usize, capacity_per_node: usize, qps_per_node: usize) -> Self {
+        assert!(nodes > 0 && qps_per_node > 0);
+        let (cq_tx, cq_rx) = channel();
+        let alive: Vec<Arc<AtomicBool>> =
+            (0..nodes).map(|_| Arc::new(AtomicBool::new(true))).collect();
+        let mut qp_txs = Vec::with_capacity(nodes * qps_per_node);
+        let mut handles = Vec::with_capacity(nodes * qps_per_node);
+        for qp in 0..nodes * qps_per_node {
+            let node = qp / qps_per_node;
+            let (tx, rx) = channel();
+            let a = alive[node].clone();
+            let cq = cq_tx.clone();
+            let cap = capacity_per_node;
+            handles.push(std::thread::spawn(move || qp_worker(qp, cap, rx, a, cq)));
+            qp_txs.push(tx);
+        }
         Self {
+            qp_txs,
+            handles,
+            cq_rx: Mutex::new(Some(cq_rx)),
+            alive,
             nodes,
+            qps_per_node,
             capacity_per_node,
         }
     }
 
     pub fn nodes(&self) -> usize {
-        self.nodes.len()
+        self.nodes
     }
 
-    fn write(&self, node: NodeId, addr: u64, data: Vec<u8>, server_copy: bool) -> Receiver<u64> {
-        let (done, rx) = channel();
-        self.nodes[node]
-            .tx
-            .send(Req::Write {
-                addr,
-                data,
-                done,
-                server_copy,
-            })
-            .expect("node alive");
-        rx
+    pub fn qps_per_node(&self) -> usize {
+        self.qps_per_node
     }
 
-    fn read(&self, node: NodeId, addr: u64, len: u64, server_copy: bool) -> Receiver<Vec<u8>> {
-        let (done, rx) = channel();
-        self.nodes[node]
-            .tx
-            .send(Req::Read {
-                addr,
-                len,
-                done,
-                server_copy,
-            })
-            .expect("node alive");
-        rx
+    fn send(&self, qp: QpId, req: QpReq) {
+        self.qp_txs[qp].send(req).expect("qp worker alive");
+    }
+
+    fn set_alive(&self, node: NodeId, alive: bool) {
+        self.alive[node].store(alive, Ordering::Relaxed);
     }
 }
 
 impl Drop for LoopbackFabric {
     fn drop(&mut self) {
-        for n in &self.nodes {
-            let _ = n.tx.send(Req::Shutdown);
+        for tx in &self.qp_txs {
+            let _ = tx.send(QpReq::Shutdown);
         }
-        for n in &mut self.nodes {
-            if let Some(h) = n.handle.take() {
-                let _ = h.join();
-            }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -158,204 +232,422 @@ pub struct LiveStats {
     pub bytes_written: u64,
     pub bytes_read: u64,
     pub admission_waits: u64,
+    pub retired: u64,
+    pub disk_fallbacks: u64,
+    pub failovers: u64,
 }
 
-/// The live RDMAbox client: merge queue + batch planner + admission window
-/// over the loopback fabric. Thread-safe; multiple app threads share it
-/// (that is the point of the single merge queue).
+/// Outcome of one retired live I/O.
+struct DoneIo {
+    data: Option<Vec<u8>>,
+    disk_fallback: bool,
+}
+
+struct Inner {
+    core: IoEngine,
+    /// write sub-io id -> payload awaiting posting.
+    payloads: HashMap<u64, Vec<u8>>,
+    /// read sub-io id -> (remote addr, len), for scattering merged reads.
+    read_addr: HashMap<u64, (u64, u64)>,
+    /// read sub-io id -> completed payload (pre-retirement).
+    read_data: HashMap<u64, Vec<u8>>,
+    /// app io id -> retired outcome, awaiting pickup by the submitter.
+    done: HashMap<u64, DoneIo>,
+    next_id: u64,
+    stats: LiveStats,
+}
+
+impl Inner {
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+}
+
+/// The live RDMAbox client: the full `IoEngine` pipeline (sharded merge
+/// queues → batch planner → admission window → replication-aware
+/// retirement) over the loopback fabric. Thread-safe; multiple app
+/// threads share it — that is the point of the shared merge queues: the
+/// earliest thread to reach a drain carries its peers' requests.
 pub struct LiveBox {
     fabric: LoopbackFabric,
-    queues: Mutex<MergeQueues>,
-    regulator: Mutex<Regulator>,
-    batch: BatchMode,
-    limits: BatchLimits,
-    two_sided: bool,
-    next_id: Mutex<u64>,
-    /// True while some thread is inside the merge+post section; concurrent
-    /// writers enqueue and let that thread carry their requests (the
-    /// "earliest arriving thread" protocol of §5.1).
-    posting: Mutex<bool>,
-    stats: Mutex<LiveStats>,
-    /// Pending write payloads keyed by app io id.
-    payloads: Mutex<HashMap<u64, Vec<u8>>>,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    /// The shared completion queue; whoever holds this lock is the poller.
+    cq: Mutex<Receiver<LiveWc>>,
+    polling: PollingMode,
 }
 
 impl LiveBox {
-    pub fn new(
+    /// Direct-routing client: callers name the destination node (the
+    /// quickstart / paged-store usage).
+    pub fn new(fabric: LoopbackFabric, batch: BatchMode, window_bytes: Option<u64>) -> Arc<Self> {
+        Self::build(fabric, batch, window_bytes, None)
+    }
+
+    /// Placement-routing client: the engine fans writes out to `replicas`
+    /// alive replicas, fails reads over on error, and surfaces the
+    /// disk-fallback signal when every replica of a block is dead.
+    pub fn new_placed(
         fabric: LoopbackFabric,
         batch: BatchMode,
         window_bytes: Option<u64>,
+        replicas: usize,
     ) -> Arc<Self> {
-        let regulator = match window_bytes {
-            Some(w) => Regulator::static_window(w),
-            None => Regulator::unlimited(),
-        };
+        let map = NodeMap::new(fabric.nodes(), replicas, REGION_BYTES as u64);
+        Self::build(fabric, batch, window_bytes, Some(map))
+    }
+
+    fn build(
+        fabric: LoopbackFabric,
+        batch: BatchMode,
+        window_bytes: Option<u64>,
+        map: Option<NodeMap>,
+    ) -> Arc<Self> {
+        let cq_rx = fabric.cq_rx.lock().unwrap().take().expect("fresh fabric");
+        let mut core = IoEngine::new(
+            batch,
+            BatchLimits::default(),
+            fabric.nodes(),
+            fabric.qps_per_node(),
+            window_bytes,
+            EngineCosts::free(),
+        );
+        if let Some(m) = map {
+            core = core.with_placement(m);
+        }
         Arc::new(Self {
             fabric,
-            queues: Mutex::new(MergeQueues::new()),
-            regulator: Mutex::new(regulator),
-            batch,
-            limits: BatchLimits::default(),
-            two_sided: false,
-            next_id: Mutex::new(1),
-            posting: Mutex::new(false),
-            stats: Mutex::new(LiveStats::default()),
-            payloads: Mutex::new(HashMap::new()),
+            inner: Mutex::new(Inner {
+                core,
+                payloads: HashMap::new(),
+                read_addr: HashMap::new(),
+                read_data: HashMap::new(),
+                done: HashMap::new(),
+                next_id: 1,
+                stats: LiveStats::default(),
+            }),
+            cv: Condvar::new(),
+            cq: Mutex::new(cq_rx),
+            polling: PollingMode::Adaptive {
+                batch: 16,
+                max_retry: 32,
+            },
         })
     }
 
     pub fn stats(&self) -> LiveStats {
-        self.stats.lock().unwrap().clone()
+        self.inner.lock().unwrap().stats.clone()
     }
 
     pub fn nodes(&self) -> usize {
         self.fabric.nodes()
     }
 
-    fn fresh_id(&self) -> u64 {
-        let mut g = self.next_id.lock().unwrap();
-        let id = *g;
-        *g += 1;
-        id
+    /// Kill a node: in-flight verbs complete in error (driving read
+    /// failover), and placement routing stops selecting it.
+    pub fn fail_node(&self, node: NodeId) {
+        self.fabric.set_alive(node, false);
+        let mut g = self.inner.lock().unwrap();
+        if let Some(m) = g.core.node_map_mut() {
+            m.set_alive(node, false);
+        }
     }
 
-    /// Synchronous remote write through the full coordinator path:
-    /// enqueue → merge-check → plan → post. The calling thread performs
-    /// the drain it wins (load-aware batching), then waits for its own
-    /// I/O to be covered by a completed WR.
-    pub fn write(&self, node: NodeId, addr: u64, data: &[u8]) {
-        let id = self.fresh_id();
-        let len = data.len() as u64;
-        self.payloads.lock().unwrap().insert(id, data.to_vec());
+    /// Bring a node back: it rejoins placement **without any
+    /// resynchronization** (failure-injection affordance, not a recovery
+    /// protocol). Blocks written while it was down exist only on the
+    /// surviving replicas, so a revived donor may serve stale data for
+    /// them — callers must treat a revived node as empty or re-populate
+    /// it before reading through it.
+    pub fn revive_node(&self, node: NodeId) {
+        self.fabric.set_alive(node, true);
+        let mut g = self.inner.lock().unwrap();
+        if let Some(m) = g.core.node_map_mut() {
+            m.set_alive(node, true);
+        }
+    }
+
+    // ---------------- direct (node-addressed) API ----------------
+
+    /// Synchronous remote write through the full pipeline: enqueue →
+    /// (merge-)drain → post → wait for retirement. Returns `true` when the
+    /// data was stored remotely; `false` if the node had been failed
+    /// (direct routing has no failover — the bytes were not written).
+    pub fn write(&self, node: NodeId, addr: u64, data: &[u8]) -> bool {
+        let id = self.submit_write(Some(node), addr, data);
+        !self.wait_done(id).disk_fallback
+    }
+
+    /// Synchronous remote read through the full pipeline.
+    ///
+    /// # Panics
+    /// Panics if `node` has been failed with [`LiveBox::fail_node`] —
+    /// direct routing has no failover; use the placed API for that.
+    pub fn read(&self, node: NodeId, addr: u64, len: u64) -> Vec<u8> {
+        let id = self.submit_read(Some(node), addr, len);
+        self.wait_done(id)
+            .data
+            .expect("direct read failed (node dead?) — placed routing has failover")
+    }
+
+    // ---------------- placed (replicated) API ----------------
+
+    /// Replicated write via the node map. Returns `false` when every
+    /// replica was dead and the disk-fallback signal fired instead.
+    /// Requires a client built with [`LiveBox::new_placed`].
+    pub fn write_placed(&self, addr: u64, data: &[u8]) -> bool {
+        self.assert_placed();
+        let id = self.submit_write(None, addr, data);
+        !self.wait_done(id).disk_fallback
+    }
+
+    /// Replicated read via the node map (fails over across replicas).
+    /// `None` means every replica is dead — the caller owns the disk path.
+    /// Requires a client built with [`LiveBox::new_placed`].
+    pub fn read_placed(&self, addr: u64, len: u64) -> Option<Vec<u8>> {
+        self.assert_placed();
+        let id = self.submit_read(None, addr, len);
+        let d = self.wait_done(id);
+        if d.disk_fallback {
+            None
+        } else {
+            Some(d.data.expect("read data"))
+        }
+    }
+
+    // ---------------- pipeline internals ----------------
+
+    /// The placed API on a direct-routing client would silently write to
+    /// node 0 unreplicated — refuse loudly instead.
+    fn assert_placed(&self) {
+        assert!(
+            self.inner.lock().unwrap().core.node_map().is_some(),
+            "placed API requires a client built with LiveBox::new_placed"
+        );
+    }
+
+    fn submit_write(&self, node: Option<NodeId>, addr: u64, data: &[u8]) -> u64 {
+        // the one unavoidable copy happens outside the pipeline lock
+        let mut payload = data.to_vec();
+        let mut g = self.inner.lock().unwrap();
+        let id = g.fresh_id();
         let io = AppIo {
             id,
             dir: Dir::Write,
-            node,
+            node: node.unwrap_or(0),
+            addr,
+            len: data.len() as u64,
+            thread: 0,
+            t_submit: 0,
+        };
+        let sub = g.core.submit(io);
+        if sub.disk_fallback {
+            g.stats.disk_fallbacks += 1;
+            g.done.insert(
+                id,
+                DoneIo {
+                    data: None,
+                    disk_fallback: true,
+                },
+            );
+            return id;
+        }
+        let n = sub.sub_ids.len();
+        for (i, sid) in sub.sub_ids.iter().enumerate() {
+            // clone per extra replica; the last sub takes the buffer
+            let p = if i + 1 == n {
+                std::mem::take(&mut payload)
+            } else {
+                payload.clone()
+            };
+            g.payloads.insert(*sid, p);
+        }
+        self.pump(&mut g);
+        id
+    }
+
+    fn submit_read(&self, node: Option<NodeId>, addr: u64, len: u64) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let id = g.fresh_id();
+        let io = AppIo {
+            id,
+            dir: Dir::Read,
+            node: node.unwrap_or(0),
             addr,
             len,
             thread: 0,
             t_submit: 0,
         };
-        // enqueue, then merge-check immediately (paper §5.1 protocol)
-        {
-            let mut q = self.queues.lock().unwrap();
-            q.of(Dir::Write).push(io);
+        let sub = g.core.submit(io);
+        if sub.disk_fallback {
+            g.stats.disk_fallbacks += 1;
+            g.done.insert(
+                id,
+                DoneIo {
+                    data: None,
+                    disk_fallback: true,
+                },
+            );
+            return id;
         }
-        loop {
-            // a peer inside the post section will carry our request — wait
-            // for it to be consumed instead of racing for the drain
-            {
-                let mut gate = self.posting.lock().unwrap();
-                if *gate {
-                    drop(gate);
-                    if !self.payloads.lock().unwrap().contains_key(&id) {
-                        return; // carried and posted by the peer
+        for sid in &sub.sub_ids {
+            g.read_addr.insert(*sid, (addr, len));
+        }
+        self.pump(&mut g);
+        id
+    }
+
+    /// Drain whatever is admitted and hand the chains to the QP workers.
+    fn pump(&self, g: &mut Inner) {
+        let out = g.core.drain_all(0);
+        if out.admission_blocked > 0 {
+            g.stats.admission_waits += out.admission_blocked;
+        }
+        g.stats.merged_ios += out.merged_ios;
+        for chain in out.chains {
+            g.stats.posts += 1;
+            for wr in chain.wrs {
+                g.stats.wqes += 1;
+                let payload = match wr.op {
+                    OpKind::Write | OpKind::Send => {
+                        // merged WRs carry app_ios in remote-address order
+                        // (the planner sorts runs), so concatenation
+                        // reconstructs the contiguous payload
+                        let mut buf = Vec::with_capacity(wr.len as usize);
+                        for sid in &wr.app_ios {
+                            buf.extend_from_slice(&g.payloads.remove(sid).expect("payload"));
+                        }
+                        Some(buf)
                     }
-                    std::thread::yield_now();
+                    OpKind::Read => None,
+                };
+                self.fabric.send(chain.qp, QpReq::Work { wr, payload });
+            }
+        }
+    }
+
+    /// Block until `id` retires, polling the completion queue when this
+    /// thread can take the poller role (PollerFsm-guided, like a poller
+    /// thread in the sim).
+    fn wait_done(&self, id: u64) -> DoneIo {
+        loop {
+            {
+                let mut g = self.inner.lock().unwrap();
+                if let Some(d) = g.done.remove(&id) {
+                    return d;
+                }
+            }
+            if let Ok(rx) = self.cq.try_lock() {
+                self.poll_burst(&rx);
+            } else {
+                // someone else is polling; sleep until they retire work
+                let g = self.inner.lock().unwrap();
+                if g.done.contains_key(&id) {
                     continue;
                 }
-                *gate = true;
+                let _ = self.cv.wait_timeout(g, Duration::from_micros(200)).unwrap();
             }
-            // we are the posting thread now: drain whatever stacked up
-            let window = {
-                let mut r = self.regulator.lock().unwrap();
-                r.available(0)
-            };
-            let drained = {
-                let mut q = self.queues.lock().unwrap();
-                match q.of(Dir::Write).merge_check(window) {
-                    MergeCheck::Drained(v) => Some(v),
-                    MergeCheck::Blocked => None,
-                    MergeCheck::TakenByPeer => Some(Vec::new()),
-                }
-            };
-            let done = match drained {
-                Some(v) if v.is_empty() => !self.payloads.lock().unwrap().contains_key(&id),
-                Some(v) => {
-                    let mine = v.iter().any(|x| x.id == id);
-                    self.post_writes(v);
-                    mine || !self.payloads.lock().unwrap().contains_key(&id)
-                }
-                None => {
-                    self.stats.lock().unwrap().admission_waits += 1;
-                    false
-                }
-            };
-            *self.posting.lock().unwrap() = false;
-            if done {
-                return;
-            }
-            std::thread::yield_now();
         }
     }
 
-    fn post_writes(&self, ios: Vec<AppIo>) {
-        if ios.is_empty() {
-            return;
-        }
-        let mut wr_id = 0u64;
-        let (chains, pstats) = plan(self.batch, &self.limits, ios, &mut wr_id);
-        {
-            let mut s = self.stats.lock().unwrap();
-            s.merged_ios += pstats.merged_ios;
-            s.posts += pstats.posts;
-            s.wqes += pstats.wqes;
-        }
-        for chain in chains {
-            for wr in chain.wrs {
-                // merged WRs carry app_ios already in remote-address order
-                // (the planner sorts runs by address), so concatenation
-                // reconstructs the contiguous payload
-                let mut data = Vec::with_capacity(wr.len as usize);
-                {
-                    let mut pl = self.payloads.lock().unwrap();
-                    for id in &wr.app_ios {
-                        data.extend_from_slice(&pl.remove(id).expect("payload"));
+    /// One poller activation: run the completion state machine until it
+    /// re-arms with an empty queue (then return so the caller can re-check
+    /// its own I/O).
+    fn poll_burst(&self, rx: &Receiver<LiveWc>) {
+        let mut fsm = PollerFsm::new(self.polling);
+        let mut step = fsm.on_wake(0);
+        loop {
+            match step {
+                PollStep::Poll { max } => {
+                    let mut batch = Vec::new();
+                    while (batch.len() as u32) < max {
+                        match rx.try_recv() {
+                            Ok(w) => batch.push(w),
+                            Err(_) => break,
+                        }
+                    }
+                    let got = batch.len() as u32;
+                    if got > 0 {
+                        self.handle_wcs(batch);
+                    }
+                    step = fsm.after_poll(got, 0);
+                }
+                PollStep::Rearm => {
+                    // "interrupt wait": one short blocking receive, then
+                    // hand the poller role back
+                    match rx.recv_timeout(Duration::from_micros(100)) {
+                        Ok(w) => {
+                            self.handle_wcs(vec![w]);
+                            step = fsm.on_wake(0);
+                        }
+                        Err(_) => return,
                     }
                 }
-                {
-                    let mut r = self.regulator.lock().unwrap();
-                    r.on_post(wr.len);
-                }
-                let rx = self
-                    .fabric
-                    .write(chain.node, wr.remote_addr, data, self.two_sided);
-                let n = rx.recv().expect("write completion");
-                {
-                    let mut r = self.regulator.lock().unwrap();
-                    r.on_complete(wr.len, 0);
-                    let mut s = self.stats.lock().unwrap();
-                    s.bytes_written += n;
-                }
             }
         }
     }
 
-    /// Synchronous remote read (page-in path: reads are latency-critical
-    /// and post immediately; merging applies to them under load through
-    /// the same mechanism, but the live API keeps reads simple).
-    pub fn read(&self, node: NodeId, addr: u64, len: u64) -> Vec<u8> {
-        {
-            let mut r = self.regulator.lock().unwrap();
-            while r.available(0) < len {
-                drop(r);
-                self.stats.lock().unwrap().admission_waits += 1;
-                std::thread::yield_now();
-                r = self.regulator.lock().unwrap();
+    fn handle_wcs(&self, wcs: Vec<LiveWc>) {
+        let mut g = self.inner.lock().unwrap();
+        for LiveWc { wc, data } in wcs {
+            if wc.status == WcStatus::Success {
+                match wc.op {
+                    OpKind::Read => g.stats.bytes_read += wc.len,
+                    _ => g.stats.bytes_written += wc.len,
+                }
+                if let Some(buf) = data {
+                    // scatter the merged read payload back to its sub-I/Os
+                    let base = wc
+                        .app_ios
+                        .iter()
+                        .filter_map(|s| g.read_addr.get(s).map(|&(a, _)| a))
+                        .min()
+                        .unwrap_or(0);
+                    for sid in &wc.app_ios {
+                        if let Some(&(addr, len)) = g.read_addr.get(sid) {
+                            let off = (addr - base) as usize;
+                            g.read_data
+                                .insert(*sid, buf[off..off + len as usize].to_vec());
+                        }
+                    }
+                }
             }
-            r.on_post(len);
+            let out = g.core.on_wc(&wc, 0);
+            g.stats.failovers += out.requeued as u64;
+            // release per-sub state of terminally failed sub-I/Os (e.g. a
+            // placed read whose every replica died -> disk fallback)
+            for (sid, _) in &out.failed_subs {
+                g.read_addr.remove(sid);
+                g.read_data.remove(sid);
+                g.payloads.remove(sid);
+            }
+            let sub_of: HashMap<u64, u64> =
+                out.completed_subs.iter().map(|&(s, p)| (p, s)).collect();
+            for r in out.retired {
+                let data = sub_of.get(&r.id).and_then(|sid| {
+                    g.read_addr.remove(sid);
+                    g.read_data.remove(sid)
+                });
+                if r.disk_fallback {
+                    g.stats.disk_fallbacks += 1;
+                }
+                g.stats.retired += 1;
+                g.done.insert(
+                    r.id,
+                    DoneIo {
+                        data,
+                        disk_fallback: r.disk_fallback,
+                    },
+                );
+            }
         }
-        let rx = self.fabric.read(node, addr, len, self.two_sided);
-        let data = rx.recv().expect("read completion");
-        {
-            let mut r = self.regulator.lock().unwrap();
-            r.on_complete(len, 0);
-            let mut s = self.stats.lock().unwrap();
-            s.bytes_read += data.len() as u64;
-            s.wqes += 1;
-            s.posts += 1;
-        }
-        data
+        // freed window / failover requeues: one drain for the whole batch
+        // keeps the pipeline moving without re-scanning shards per WC
+        self.pump(&mut g);
+        drop(g);
+        self.cv.notify_all();
     }
 }
 
@@ -418,6 +710,37 @@ mod tests {
     }
 
     #[test]
+    fn sharded_channels_preserve_contents() {
+        let fab = LoopbackFabric::start_sharded(2, 16 << 20, 4);
+        let lb = LiveBox::new(fab, BatchMode::Hybrid, Some(7 << 20));
+        let mut handles = Vec::new();
+        for t in 0..6u64 {
+            let lb = lb.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..48u64 {
+                    let page = i * 6 + t;
+                    let node = (page % 2) as usize;
+                    // spread pages over many 1 MiB regions so all 4 shards
+                    // per node carry traffic
+                    let addr = (page % 8) * (1 << SHARD_REGION_SHIFT) + (page / 8) * 4096;
+                    lb.write(node, addr, &vec![(page % 199) as u8 + 1; 4096]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for page in 0..288u64 {
+            let node = (page % 2) as usize;
+            let addr = (page % 8) * (1 << SHARD_REGION_SHIFT) + (page / 8) * 4096;
+            let b = lb.read(node, addr, 4096);
+            assert_eq!(b[0], (page % 199) as u8 + 1, "page {page}");
+            assert_eq!(b[4095], (page % 199) as u8 + 1, "page {page}");
+        }
+        assert_eq!(lb.stats().retired as usize, 288 + 288);
+    }
+
+    #[test]
     fn admission_window_counts_waits_under_pressure() {
         let fab = LoopbackFabric::start(1, 1 << 22);
         let lb = LiveBox::new(fab, BatchMode::Single, Some(4096));
@@ -426,5 +749,34 @@ mod tests {
         }
         // single-window synchronous writes never exceed the window
         assert_eq!(lb.stats().bytes_written, 16 * 4096);
+    }
+
+    #[test]
+    fn placed_write_replicates_and_read_fails_over() {
+        let fab = LoopbackFabric::start_sharded(3, 1 << 22, 2);
+        let lb = LiveBox::new_placed(fab, BatchMode::Hybrid, Some(7 << 20), 2);
+        for page in 0..32u64 {
+            assert!(lb.write_placed(page * 4096, &vec![(page + 1) as u8; 4096]));
+        }
+        // both replicas carry the data: killing any single node must not
+        // lose a block
+        lb.fail_node(0);
+        for page in 0..32u64 {
+            let b = lb.read_placed(page * 4096, 4096).expect("replica alive");
+            assert_eq!(b[0], (page + 1) as u8, "page {page}");
+        }
+        lb.revive_node(0);
+    }
+
+    #[test]
+    fn placed_all_dead_surfaces_disk_fallback() {
+        let fab = LoopbackFabric::start(2, 1 << 20);
+        let lb = LiveBox::new_placed(fab, BatchMode::Hybrid, None, 2);
+        assert!(lb.write_placed(0, &[9u8; 4096]));
+        lb.fail_node(0);
+        lb.fail_node(1);
+        assert!(!lb.write_placed(4096, &[9u8; 4096]), "disk fallback signal");
+        assert!(lb.read_placed(0, 4096).is_none());
+        assert!(lb.stats().disk_fallbacks >= 2);
     }
 }

@@ -5,16 +5,20 @@
 //! batching mode × MR strategy × polling × sidedness × fixed-block size ×
 //! admission window (see `StackConfig` and `baselines::*`).
 //!
-//! The submit path implements Load-aware Batching faithfully: enqueue into
-//! the merge queue, then merge-check immediately; the drain is bounded by
-//! the admission-control window, so a closed window leaves requests queued
-//! where later arrivals can still merge with them (paper §5.1).
+//! Since the `IoEngine` refactor this type is a thin adapter: the whole
+//! merge → batch → admit → retire pipeline lives in
+//! [`crate::coordinator::engine::IoEngine`] (sharded per-QP merge queues,
+//! planner, admission window, replication-aware retirement), and the same
+//! object drives the live loopback backend. What remains here is the
+//! sim-specific cost accounting: MR staging charged on the submitting
+//! thread, preMR pool slots, fixed-block coalescing (nbdX), and the
+//! deferred-kick scheduling that models the serialized merge+post critical
+//! section.
 
 use crate::util::fxhash::FxHashMap;
 
 use crate::config::FabricConfig;
-use crate::coordinator::batching::plan;
-use crate::coordinator::merge_queue::{MergeCheck, MergeQueues};
+use crate::coordinator::engine::{EngineCosts, IoEngine};
 use crate::coordinator::mr_strategy::{completion_cost_ns, post_cost_ns, PreMrPool, ResolvedMr};
 use crate::coordinator::regulator::Regulator;
 use crate::coordinator::StackConfig;
@@ -24,19 +28,11 @@ use super::{Engine, Sim, WcOutcome};
 
 /// Base CPU cost of running one completion handler (dispatch, bookkeeping).
 const WC_HANDLER_BASE_NS: u64 = 1_500;
-/// Fixed cost of one merge-check (lock + scan setup).
-const MERGE_CHECK_BASE_NS: u64 = 120;
-/// Per-request merge-scan cost.
-const MERGE_CHECK_PER_IO_NS: u64 = 25;
 
 pub struct StackEngine {
     stack: StackConfig,
-    queues: MergeQueues,
-    regulator: Regulator,
+    core: IoEngine,
     premr_pool: Option<PreMrPool>,
-    next_wr_id: u64,
-    /// wr_id -> post time (regulator RTT feedback).
-    post_times: FxHashMap<u64, u64>,
     /// wr_id -> preMR slots to release at completion.
     slots: FxHashMap<u64, Vec<u32>>,
     /// Fixed-block coalescing: (block_addr, dir) -> representative io id,
@@ -52,11 +48,8 @@ pub struct StackEngine {
 }
 
 impl StackEngine {
-    pub fn new(cfg: &FabricConfig, stack: &StackConfig) -> Self {
-        let regulator = match stack.window_bytes {
-            Some(w) => Regulator::static_window(w),
-            None => Regulator::unlimited(),
-        };
+    pub fn new(cfg: &FabricConfig, stack: &StackConfig, nodes: usize) -> Self {
+        let core = IoEngine::from_stack(stack, nodes, EngineCosts::from_fabric(cfg));
         // Pool sized generously; exhaustion is tracked, not fatal.
         let premr_pool = Some(PreMrPool::new(
             cfg.page_size.max(stack.fixed_block.unwrap_or(cfg.page_size)),
@@ -64,11 +57,8 @@ impl StackEngine {
         ));
         Self {
             stack: stack.clone(),
-            queues: MergeQueues::new(),
-            regulator,
+            core,
             premr_pool,
-            next_wr_id: 1,
-            post_times: FxHashMap::default(),
             slots: FxHashMap::default(),
             block_index: FxHashMap::default(),
             waiters: FxHashMap::default(),
@@ -79,13 +69,18 @@ impl StackEngine {
     }
 
     pub fn regulator(&self) -> &Regulator {
-        &self.regulator
+        self.core.regulator()
     }
 
     /// Swap in a custom admission policy (the paper's §5.1 hook; used by
     /// the `rdmabox ablation` harness to compare static vs AIMD windows).
     pub fn set_regulator(&mut self, r: Regulator) {
-        self.regulator = r;
+        self.core.set_regulator(r);
+    }
+
+    /// The shared pipeline this adapter drives.
+    pub fn core(&self) -> &IoEngine {
+        &self.core
     }
 
     fn dir_key(dir: Dir) -> u8 {
@@ -95,57 +90,24 @@ impl StackEngine {
         }
     }
 
-    /// Request a deferred drain of `dir`'s queue no earlier than `t` and no
-    /// earlier than the end of the current merge+post critical section.
+    /// Request a deferred drain of `dir`'s queues no earlier than `t` and
+    /// no earlier than the end of the current merge+post critical section.
     fn request_kick(&mut self, sim: &mut Sim, dir: Dir, t: u64) {
         let d = Self::dir_key(dir) as usize;
-        if self.kick_pending[d] || self.queues.of(dir).is_empty() {
+        if self.kick_pending[d] || self.core.queued_ios_dir(dir) == 0 {
             return;
         }
         self.kick_pending[d] = true;
         sim.schedule_engine_kick(dir, t.max(self.drain_end[d]));
     }
 
-    /// Drain one direction's merge queue within the admission window and
-    /// post the planned chains. Returns CPU spent.
+    /// Drain one direction through the shared pipeline and post the
+    /// planned chains into the simulated fabric. Returns CPU spent.
     fn drain(&mut self, sim: &mut Sim, dir: Dir, t: u64) -> u64 {
-        let window = self.regulator.available(t);
-        if window == 0 {
-            sim.trace.admission_blocks += 1;
-            return 0;
-        }
-        let drained = match self.queues.of(dir).merge_check(window) {
-            MergeCheck::Drained(v) => v,
-            MergeCheck::Blocked => {
-                // progress guarantee: a request larger than the window must
-                // not deadlock — admit it alone once the pipe is empty
-                if self.regulator.in_flight() == 0 {
-                    match self.queues.of(dir).merge_check(u64::MAX) {
-                        MergeCheck::Drained(v) => v,
-                        _ => return 0,
-                    }
-                } else {
-                    sim.trace.admission_blocks += 1;
-                    return 0;
-                }
-            }
-            MergeCheck::TakenByPeer => return 0,
-        };
-        if !self.queues.of(dir).is_empty() {
-            // window closed mid-drain: the tail stays queued (and keeps
-            // merging with later arrivals — the regulator's side benefit)
-            sim.trace.admission_blocks += 1;
-        }
-        let scan = MERGE_CHECK_BASE_NS + MERGE_CHECK_PER_IO_NS * drained.len() as u64;
-        scan + self.post_batch(sim, drained, t + scan)
-    }
-
-    fn post_batch(&mut self, sim: &mut Sim, ios: Vec<AppIo>, t: u64) -> u64 {
-        let (chains, stats) = plan(self.stack.batch, &self.stack.limits, ios, &mut self.next_wr_id);
-        sim.trace.merged_ios += stats.merged_ios;
-        let mut cpu = 0u64;
-        for chain in chains {
-            let qp = sim.select_qp(chain.node);
+        let out = self.core.drain_dir(dir, t);
+        sim.trace.merged_ios += out.merged_ios;
+        sim.trace.admission_blocks += out.admission_blocked;
+        for chain in out.chains {
             for wr in &chain.wrs {
                 // MR staging (memcpy / registration) was already charged on
                 // the submitting thread (parallel across app threads); the
@@ -165,16 +127,10 @@ impl StackEngine {
                         }
                     }
                 }
-                self.regulator.on_post(wr.len);
-                self.post_times.insert(wr.wr_id, t);
-                // serialized posting CPU per WQE (verbs + block layer) —
-                // the cost merging amortizes
-                cpu += self.cfg.post_wqe_cpu_ns;
             }
-            cpu += self.cfg.mmio_cpu_ns;
-            sim.post_chain(qp, chain.wrs, t + cpu);
+            sim.post_chain(chain.qp, chain.wrs, t + chain.cpu_offset_ns);
         }
-        cpu
+        out.cpu_ns
     }
 
     /// Submit-path CPU for one app I/O: the MR staging cost, paid by the
@@ -214,7 +170,7 @@ impl Engine for StackEngine {
             io
         };
 
-        self.queues.of(queued_io.dir).push(queued_io);
+        self.core.submit(queued_io);
         // staging (copy/registration) happens on the submitting thread; the
         // request only becomes postable once it is staged
         let staging = self.staging_cost_ns(queued_io.len, queued_io.dir == Dir::Write);
@@ -232,9 +188,8 @@ impl Engine for StackEngine {
     }
 
     fn on_wc(&mut self, sim: &mut Sim, wc: &Wc, cursor: u64) -> WcOutcome {
-        // window release + RTT feedback
-        let rtt = cursor.saturating_sub(self.post_times.remove(&wc.wr_id).unwrap_or(cursor));
-        self.regulator.on_complete(wc.len, rtt);
+        // window release + RTT feedback + retirement policy
+        let out = self.core.on_wc(wc, cursor);
 
         let is_write = !wc.op.is_read();
         let cpu = WC_HANDLER_BASE_NS
@@ -247,19 +202,19 @@ impl Engine for StackEngine {
         }
 
         // fan out to coalesced block waiters
-        let mut completed = Vec::with_capacity(wc.app_ios.len());
+        let mut completed = Vec::with_capacity(out.retired.len());
         if self.stack.fixed_block.is_some() {
-            for rep in &wc.app_ios {
-                if let Some(ws) = self.waiters.remove(rep) {
+            for r in &out.retired {
+                if let Some(ws) = self.waiters.remove(&r.id) {
                     // remove the block index entry for this rep
-                    self.block_index.retain(|_, v| v != rep);
+                    self.block_index.retain(|_, v| *v != r.id);
                     completed.extend(ws);
                 } else {
-                    completed.push(*rep);
+                    completed.push(r.id);
                 }
             }
         } else {
-            completed.extend_from_slice(&wc.app_ios);
+            completed.extend(out.retired.iter().map(|r| r.id));
         }
 
         // the freed window may unblock queued requests — kick both queues,
@@ -305,7 +260,7 @@ mod tests {
     fn mk(stack: &StackConfig) -> (Sim, FabricConfig) {
         let cfg = FabricConfig::default();
         let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
-        sim.attach_engine(Box::new(StackEngine::new(&cfg, stack)));
+        sim.attach_engine(Box::new(StackEngine::new(&cfg, stack, 1)));
         (sim, cfg)
     }
 
@@ -463,6 +418,46 @@ mod tests {
             dynr.elapsed_ns,
             pre.elapsed_ns
         );
+    }
+
+    #[test]
+    fn sharded_queues_spread_chains_over_channels() {
+        // end-to-end through the sim: everything completes with K=4 shards
+        let cfg = FabricConfig::default();
+        let stack = StackConfig::rdmabox(&cfg).with_qps(4);
+        let (mut sim, _) = mk(&stack);
+        sim.attach_driver(Box::new(Burst {
+            n: 64,
+            len: 4096,
+            stride: 1 << 20, // one request per 1 MiB region
+            done: 0,
+        }));
+        let r = sim.run(u64::MAX / 2);
+        assert_eq!(r.completed_writes, 64);
+        assert_eq!(r.trace.wqes_total(), 64);
+
+        // and the same submission pattern really spreads over all 4 QPs
+        // (checked at the shared core, where chain->QP binding is visible;
+        // window lifted so a single drain shows the full spread)
+        let mut core = crate::coordinator::engine::IoEngine::from_stack(
+            &stack.clone().with_window(None),
+            1,
+            crate::coordinator::engine::EngineCosts::from_fabric(&cfg),
+        );
+        for i in 0..64u64 {
+            core.submit(AppIo {
+                id: i,
+                dir: Dir::Write,
+                node: 0,
+                addr: i << 20,
+                len: 4096,
+                thread: 0,
+                t_submit: 0,
+            });
+        }
+        let out = core.drain_all(0);
+        let qps: std::collections::BTreeSet<_> = out.chains.iter().map(|c| c.qp).collect();
+        assert_eq!(qps.len(), 4, "64 regions must cover all 4 shards");
     }
 
     use crate::coordinator::batching::BatchMode;

@@ -956,6 +956,39 @@ impl Sim {
     }
 }
 
+/// Assemble and run the standard pipeline: a [`Sim`] world driving an
+/// [`engine::StackEngine`] adapter over the shared
+/// [`IoEngine`](crate::coordinator::engine::IoEngine), fed by `driver`.
+/// Every experiment harness, workload runner and example goes through
+/// here instead of hand-assembling the stages.
+pub fn run_pipeline(
+    cfg: &FabricConfig,
+    stack: &StackConfig,
+    nodes: usize,
+    driver: Box<dyn Driver>,
+) -> SimReport {
+    run_pipeline_custom(cfg, stack, nodes, driver, None)
+}
+
+/// [`run_pipeline`] with a custom admission-control policy swapped into
+/// the regulator (the paper's §5.1 congestion-control hook).
+pub fn run_pipeline_custom(
+    cfg: &FabricConfig,
+    stack: &StackConfig,
+    nodes: usize,
+    driver: Box<dyn Driver>,
+    regulator: Option<crate::coordinator::regulator::Regulator>,
+) -> SimReport {
+    let mut sim = Sim::new(cfg.clone(), stack.clone(), nodes);
+    let mut eng = engine::StackEngine::new(cfg, stack, nodes);
+    if let Some(r) = regulator {
+        eng.set_regulator(r);
+    }
+    sim.attach_engine(Box::new(eng));
+    sim.attach_driver(driver);
+    sim.run(u64::MAX / 2)
+}
+
 #[cfg(test)]
 mod tests {
     use super::engine::StackEngine;
@@ -1014,21 +1047,22 @@ mod tests {
 
     fn run_stack(stack: StackConfig, nodes: usize, target: u64) -> SimReport {
         let cfg = FabricConfig::default();
-        let mut sim = Sim::new(cfg.clone(), stack.clone(), nodes);
-        let eng = StackEngine::new(&cfg, &stack);
-        sim.attach_engine(Box::new(eng));
-        sim.attach_driver(Box::new(Cl {
-            threads: 4,
-            qd: 4,
-            target,
-            done: 0,
-            len: 4096,
-            next_addr: 0,
+        run_pipeline(
+            &cfg,
+            &stack,
             nodes,
-            write_frac_pct: 50,
-            hard_stop: true,
-        }));
-        sim.run(u64::MAX / 2)
+            Box::new(Cl {
+                threads: 4,
+                qd: 4,
+                target,
+                done: 0,
+                len: 4096,
+                next_addr: 0,
+                nodes,
+                write_frac_pct: 50,
+                hard_stop: true,
+            }),
+        )
     }
 
     #[test]
@@ -1141,14 +1175,16 @@ mod tests {
         }
         let run = |batch| {
             let stack = StackConfig::rdmabox(&cfg).with_batch(batch);
-            let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
-            sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
-            sim.attach_driver(Box::new(Seq {
-                target: 3000,
-                done: 0,
-                addr: 0,
-            }));
-            sim.run(u64::MAX / 2)
+            run_pipeline(
+                &cfg,
+                &stack,
+                1,
+                Box::new(Seq {
+                    target: 3000,
+                    done: 0,
+                    addr: 0,
+                }),
+            )
         };
         let single = run(BatchMode::Single);
         let hybrid = run(BatchMode::Hybrid);
@@ -1177,7 +1213,7 @@ mod tests {
         let cfg = FabricConfig::default();
         let stack = StackConfig::rdmabox(&cfg);
         let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
-        sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
+        sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack, 1)));
         sim.attach_driver(Box::new(Cl {
             threads: 2,
             qd: 2,

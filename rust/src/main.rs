@@ -81,7 +81,7 @@ fn dispatch(args: &Args) -> Result<(), String> {
             let steps = args.get_u64("steps", 300)? as usize;
             let rows = args.get_u64("rows", 2048)? as usize;
             let resident = args.get_f64("resident", 0.25)?;
-            run_ml_e2e(steps, rows, resident).map_err(|e| e.to_string())
+            run_ml_e2e(steps, rows, resident)
         }
         Some("list") | None => {
             println!("figures: {}", ALL_IDS.join(", "));
@@ -94,20 +94,22 @@ fn dispatch(args: &Args) -> Result<(), String> {
     }
 }
 
-fn run_ml_e2e(steps: usize, rows: usize, resident: f64) -> anyhow::Result<()> {
+#[cfg(feature = "xla")]
+fn run_ml_e2e(steps: usize, rows: usize, resident: f64) -> Result<(), String> {
     use rdmabox::ml::train_paged_logreg;
     use rdmabox::runtime::Runtime;
     if !rdmabox::runtime::artifacts_available() {
-        anyhow::bail!("artifacts missing — run `make artifacts` first");
+        return Err("artifacts missing — run `make artifacts` first".into());
     }
-    let mut rt = Runtime::from_artifacts()?;
+    let mut rt = Runtime::from_artifacts().map_err(|e| e.to_string())?;
     println!(
         "PJRT platform: {} | training logreg on paged remote memory ({} rows, {:.0}% resident)",
         rt.platform(),
         rows,
         resident * 100.0
     );
-    let r = train_paged_logreg(&mut rt, 3, rows, 256, 512, resident, steps, 0.5)?;
+    let r = train_paged_logreg(&mut rt, 3, rows, 256, 512, resident, steps, 0.5)
+        .map_err(|e| e.to_string())?;
     for (i, l) in r.losses.iter().enumerate() {
         if i % 20 == 0 || i + 1 == r.losses.len() {
             println!("step {i:4}  loss {l:.4}");
@@ -118,4 +120,10 @@ fn run_ml_e2e(steps: usize, rows: usize, resident: f64) -> anyhow::Result<()> {
         r.steps, r.wall_ms, r.faults, r.hits, r.bytes_read, r.merged_ios
     );
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn run_ml_e2e(_steps: usize, _rows: usize, _resident: f64) -> Result<(), String> {
+    Err("built without the `xla` feature — the PJRT runtime is gated; see README §PJRT runtime"
+        .into())
 }

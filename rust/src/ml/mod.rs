@@ -7,13 +7,11 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
-use crate::coordinator::batching::BatchMode;
-use crate::fabric::loopback::{LiveBox, LoopbackFabric};
+use crate::fabric::loopback::LiveBox;
 use crate::paging::cache::{Access, ClockCache};
-use crate::runtime::{lit, Runtime, LOGREG_STEP};
 use crate::util::rng::Pcg32;
+#[cfg(feature = "xla")]
+use crate::runtime::{lit, Result, Runtime, LOGREG_STEP};
 
 pub const PAGE: usize = 4096;
 
@@ -150,6 +148,8 @@ pub struct TrainReport {
 /// paged through the live coordinator. Every step gathers its batch rows
 /// via `PagedStore::get` (real remote memcpys through the merge queue +
 /// admission window) and executes the AOT logreg_step via PJRT.
+/// Requires the `xla` feature (PJRT bindings).
+#[cfg(feature = "xla")]
 pub fn train_paged_logreg(
     rt: &mut Runtime,
     nodes: usize,
@@ -160,6 +160,8 @@ pub fn train_paged_logreg(
     steps: usize,
     lr: f32,
 ) -> Result<TrainReport> {
+    use crate::coordinator::batching::BatchMode;
+    use crate::fabric::loopback::LoopbackFabric;
     let data = LogregData::new(rows, batch, features);
     let total_pages = data.total_pages();
     let per_node = (total_pages as usize / nodes + 2) * PAGE;
@@ -235,6 +237,8 @@ pub fn train_paged_logreg(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::batching::BatchMode;
+    use crate::fabric::loopback::LoopbackFabric;
 
     #[test]
     fn paged_store_roundtrips_through_remote_memory() {
@@ -283,6 +287,7 @@ mod tests {
         assert_ne!(x1, x3);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn e2e_training_reduces_loss_if_artifacts_present() {
         if !crate::runtime::artifacts_available() {

@@ -11,7 +11,7 @@
 pub mod cache;
 pub mod swap;
 
-use crate::coordinator::node::NodeMap;
+use crate::coordinator::node::{NodeMap, ReadRoute};
 use crate::fabric::Dir;
 use cache::{Access, ClockCache};
 use crate::util::fxhash::FxHashMap;
@@ -186,8 +186,9 @@ impl Pager {
             }
         };
         let addr = slot * self.page_size;
-        let targets = self.map.write_targets(addr);
-        if targets.is_empty() {
+        let route = self.map.route_write(addr);
+        if route.disk_fallback {
+            // the node abstraction's explicit all-replicas-dead signal
             self.disk_writes += 1;
             self.on_disk.insert(victim, slot);
             self.swapped.remove(&victim);
@@ -198,7 +199,7 @@ impl Pager {
                 len: self.page_size,
             });
         } else {
-            for n in targets {
+            for n in route.targets {
                 out.push(IoReq {
                     dir: Dir::Write,
                     target: Target::Node(n),
@@ -213,14 +214,14 @@ impl Pager {
     fn load_for(&mut self, page: u64) -> Option<IoReq> {
         if let Some(&slot) = self.swapped.get(&page) {
             let addr = slot * self.page_size;
-            match self.map.read_target(addr) {
-                Some(n) => Some(IoReq {
+            match self.map.route_read(addr) {
+                ReadRoute::Node(n) => Some(IoReq {
                     dir: Dir::Read,
                     target: Target::Node(n),
                     addr,
                     len: self.page_size,
                 }),
-                None => {
+                ReadRoute::DiskFallback => {
                     self.disk_reads += 1;
                     Some(IoReq {
                         dir: Dir::Read,

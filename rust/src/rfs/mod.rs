@@ -176,7 +176,13 @@ impl FsClient {
     }
 
     /// Translate a pwrite/pread into (node, remote_addr, len) I/Os.
-    pub fn io_plan(&mut self, fd: u64, offset: u64, len: u64, write: bool) -> Vec<(usize, u64, u64)> {
+    pub fn io_plan(
+        &mut self,
+        fd: u64,
+        offset: u64,
+        len: u64,
+        write: bool,
+    ) -> Vec<(usize, u64, u64)> {
         let inode = self.vfs.inode_of_fd(fd).expect("open fd");
         assert!(
             offset + len <= inode.capacity,
@@ -356,9 +362,6 @@ pub fn run_iozone(
     record: u64,
     file_bytes: u64,
 ) -> (f64, f64) {
-    use crate::fabric::sim::engine::StackEngine;
-    let mut sim = Sim::new(fabric.clone(), stack.clone(), nodes);
-    sim.attach_engine(Box::new(StackEngine::new(fabric, stack)));
     let stats = DriverStats::shared();
     // FUSE crossing ≈ 6 µs per request (same client for every system —
     // the paper compares FUSE-based systems against each other only);
@@ -393,11 +396,15 @@ pub fn run_iozone(
             self.inner.on_timer(sim, t, g)
         }
     }
-    sim.attach_driver(Box::new(Wrap {
-        inner: drv,
-        out: cell.clone(),
-    }));
-    let _ = sim.run(u64::MAX / 2);
+    let _ = crate::fabric::sim::run_pipeline(
+        fabric,
+        stack,
+        nodes,
+        Box::new(Wrap {
+            inner: drv,
+            out: cell.clone(),
+        }),
+    );
     let (w_ns, r_ns) = *cell.borrow();
     let gbs = |ns: u64| {
         if ns == 0 {

@@ -3,19 +3,40 @@
 //! is the only bridge between the Rust coordinator and the L2/L1 compute —
 //! Python never runs on the request path.
 //!
+//! The PJRT/XLA bindings need an external native toolchain, so everything
+//! touching them is gated behind the off-by-default `xla` cargo feature:
+//! the default build (and CI) has **zero** external dependencies. Enabling
+//! `--features xla` additionally requires uncommenting the `xla`
+//! dependency in `rust/Cargo.toml` (see README §PJRT runtime).
+//!
 //! Pattern follows /opt/xla-example/load_hlo: HLO *text* → HloModuleProto
 //! → XlaComputation → compile → execute (outputs are tuples because
 //! aot.py lowers with `return_tuple=True`).
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow, Result};
+use std::path::PathBuf;
 
 /// Known artifact names (kept in sync with python/compile/model.py).
 pub const LOGREG_STEP: &str = "logreg_step";
 pub const KMEANS_STEP: &str = "kmeans_step";
 pub const PAGERANK_STEP: &str = "pagerank_step";
+
+/// Runtime error (local, dependency-free replacement for `anyhow`).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+pub fn err(msg: impl Into<String>) -> Error {
+    Error(msg.into())
+}
 
 /// Locate the artifacts directory: $RDMABOX_ARTIFACTS, ./artifacts, or
 /// nearby relative paths.
@@ -37,226 +58,257 @@ pub fn artifacts_available() -> bool {
     artifacts_dir().join("manifest.txt").exists()
 }
 
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
-impl Runtime {
-    /// CPU PJRT client over the given artifacts directory.
-    pub fn cpu<P: AsRef<Path>>(dir: P) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self {
-            client,
-            dir: dir.as_ref().to_path_buf(),
-            execs: HashMap::new(),
-        })
+    use super::{err, Result, LOGREG_STEP};
+
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        execs: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// Default runtime over [`artifacts_dir`].
-    pub fn from_artifacts() -> Result<Self> {
-        Self::cpu(artifacts_dir())
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (once) and cache the executable for `name`.
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.execs.contains_key(name) {
-            return Ok(());
+    impl Runtime {
+        /// CPU PJRT client over the given artifacts directory.
+        pub fn cpu<P: AsRef<Path>>(dir: P) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| err(format!("PJRT cpu client: {e:?}")))?;
+            Ok(Self {
+                client,
+                dir: dir.as_ref().to_path_buf(),
+                execs: HashMap::new(),
+            })
         }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        self.execs.insert(name.to_string(), exe);
-        Ok(())
+
+        /// Default runtime over [`super::artifacts_dir`].
+        pub fn from_artifacts() -> Result<Self> {
+            Self::cpu(super::artifacts_dir())
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (once) and cache the executable for `name`.
+        pub fn load(&mut self, name: &str) -> Result<()> {
+            if self.execs.contains_key(name) {
+                return Ok(());
+            }
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| err(format!("parse {}: {e:?}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| err(format!("compile {name}: {e:?}")))?;
+            self.execs.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        pub fn loaded(&self) -> Vec<&str> {
+            self.execs.keys().map(|s| s.as_str()).collect()
+        }
+
+        /// Execute `name` with the given literals; returns the tuple
+        /// elements of the result.
+        pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            self.load(name)?;
+            let exe = self.execs.get(name).unwrap();
+            let result = exe
+                .execute::<xla::Literal>(args)
+                .map_err(|e| err(format!("execute {name}: {e:?}")))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| err(format!("fetch result {name}: {e:?}")))?;
+            lit.to_tuple().map_err(|e| err(format!("untuple {name}: {e:?}")))
+        }
     }
 
-    pub fn loaded(&self) -> Vec<&str> {
-        self.execs.keys().map(|s| s.as_str()).collect()
+    /// f32 literal helpers (the xla crate's Literal API is low-level).
+    pub mod lit {
+        use super::super::{err, Result};
+
+        pub fn f32_vec(v: &[f32]) -> xla::Literal {
+            xla::Literal::vec1(v)
+        }
+
+        pub fn f32_mat(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+            assert_eq!(v.len(), rows * cols);
+            xla::Literal::vec1(v)
+                .reshape(&[rows as i64, cols as i64])
+                .map_err(|e| err(format!("reshape: {e:?}")))
+        }
+
+        pub fn f32_scalar(x: f32) -> Result<xla::Literal> {
+            xla::Literal::vec1(&[x])
+                .reshape(&[])
+                .map_err(|e| err(format!("scalar reshape: {e:?}")))
+        }
+
+        pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+            l.to_vec::<f32>().map_err(|e| err(format!("to_vec: {e:?}")))
+        }
     }
 
-    /// Execute `name` with the given literals; returns the tuple elements
-    /// of the result.
-    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.load(name)?;
-        let exe = self.execs.get(name).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result {name}: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    /// Run `steps` of the logistic-regression training loop on the PJRT
+    /// CPU client; returns the loss curve. Used by the e2e example and the
+    /// fig13 live validation.
+    pub fn train_logreg(
+        rt: &mut Runtime,
+        x: &[f32],
+        y: &[f32],
+        batch: usize,
+        features: usize,
+        steps: usize,
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), batch * features);
+        assert_eq!(y.len(), batch);
+        let mut w = vec![0f32; features];
+        let xs = lit::f32_mat(x, batch, features)?;
+        let ys = lit::f32_vec(y);
+        let lrl = lit::f32_scalar(lr)?;
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let wl = lit::f32_vec(&w);
+            let out = rt.execute(LOGREG_STEP, &[wl, xs.clone(), ys.clone(), lrl.clone()])?;
+            w = lit::to_f32(&out[0])?;
+            let loss = lit::to_f32(&out[1])?[0];
+            losses.push(loss);
+        }
+        Ok(losses)
     }
 }
 
-/// f32 literal helpers (the xla crate's Literal API is low-level).
-pub mod lit {
-    use anyhow::{anyhow, Result};
-
-    pub fn f32_vec(v: &[f32]) -> xla::Literal {
-        xla::Literal::vec1(v)
-    }
-
-    pub fn f32_mat(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-        assert_eq!(v.len(), rows * cols);
-        xla::Literal::vec1(v)
-            .reshape(&[rows as i64, cols as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))
-    }
-
-    pub fn f32_scalar(x: f32) -> Result<xla::Literal> {
-        xla::Literal::vec1(&[x])
-            .reshape(&[])
-            .map_err(|e| anyhow!("scalar reshape: {e:?}"))
-    }
-
-    pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
-        l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
-    }
-}
-
-/// Run `steps` of the logistic-regression training loop on the PJRT CPU
-/// client; returns the loss curve. Used by the e2e example and the fig13
-/// live validation.
-pub fn train_logreg(
-    rt: &mut Runtime,
-    x: &[f32],
-    y: &[f32],
-    batch: usize,
-    features: usize,
-    steps: usize,
-    lr: f32,
-) -> Result<Vec<f32>> {
-    assert_eq!(x.len(), batch * features);
-    assert_eq!(y.len(), batch);
-    let mut w = vec![0f32; features];
-    let xs = lit::f32_mat(x, batch, features)?;
-    let ys = lit::f32_vec(y);
-    let lrl = lit::f32_scalar(lr)?;
-    let mut losses = Vec::with_capacity(steps);
-    for _ in 0..steps {
-        let wl = lit::f32_vec(&w);
-        let out = rt.execute(LOGREG_STEP, &[wl, xs.clone(), ys.clone(), lrl.clone()])?;
-        w = lit::to_f32(&out[0])?;
-        let loss = lit::to_f32(&out[1])?[0];
-        losses.push(loss);
-    }
-    Ok(losses)
-}
+#[cfg(feature = "xla")]
+pub use pjrt::{lit, train_logreg, Runtime};
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn need_artifacts() -> bool {
-        if !artifacts_available() {
-            eprintln!("skipping: run `make artifacts` first");
-            return false;
-        }
-        true
+    #[test]
+    fn error_displays_message() {
+        let e = err("boom");
+        assert_eq!(e.to_string(), "boom");
     }
 
     #[test]
-    fn client_comes_up() {
-        let rt = Runtime::cpu("artifacts").expect("client");
-        let p = rt.platform().to_lowercase();
-        assert!(p.contains("cpu") || p.contains("host"), "platform {p}");
+    fn artifacts_dir_has_a_default() {
+        // without the env var and without a manifest nearby, the default
+        // relative path comes back
+        let d = artifacts_dir();
+        assert!(!d.as_os_str().is_empty());
     }
 
-    #[test]
-    fn loads_and_runs_logreg_step() {
-        if !need_artifacts() {
-            return;
-        }
-        let mut rt = Runtime::from_artifacts().unwrap();
-        let b = 256usize;
-        let f = 512usize;
-        // linearly separable data
-        let mut x = vec![0f32; b * f];
-        let mut y = vec![0f32; b];
-        for i in 0..b {
-            let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
-            x[i * f] = sign;
-            y[i] = if sign > 0.0 { 1.0 } else { 0.0 };
-        }
-        let losses = train_logreg(&mut rt, &x, &y, b, f, 20, 1.0).unwrap();
-        assert_eq!(losses.len(), 20);
-        assert!(
-            losses[19] < losses[0] * 0.5,
-            "loss should drop: {:?} -> {:?}",
-            losses[0],
-            losses[19]
-        );
-    }
+    #[cfg(feature = "xla")]
+    mod xla_backed {
+        use super::super::*;
 
-    #[test]
-    fn kmeans_step_runs_and_reduces_inertia() {
-        if !need_artifacts() {
-            return;
-        }
-        let mut rt = Runtime::from_artifacts().unwrap();
-        let n = 1024usize;
-        let d = 32usize;
-        let k = 16usize;
-        // two blobs
-        let mut pts = vec![0f32; n * d];
-        for i in 0..n {
-            let off = if i < n / 2 { 4.0 } else { -4.0 };
-            for j in 0..d {
-                pts[i * d + j] = off + ((i * 31 + j * 17) % 13) as f32 * 0.01;
+        fn need_artifacts() -> bool {
+            if !artifacts_available() {
+                eprintln!("skipping: run `make artifacts` first");
+                return false;
             }
+            true
         }
-        let mut c = vec![0f32; k * d];
-        for (i, v) in c.iter_mut().enumerate() {
-            *v = ((i * 7) % 11) as f32 * 0.2 - 1.0;
-        }
-        let pl = lit::f32_mat(&pts, n, d).unwrap();
-        let mut cl = lit::f32_mat(&c, k, d).unwrap();
-        let mut inertias = Vec::new();
-        for _ in 0..5 {
-            let out = rt.execute(KMEANS_STEP, &[cl, pl.clone()]).unwrap();
-            let flat = lit::to_f32(&out[0]).unwrap();
-            inertias.push(lit::to_f32(&out[1]).unwrap()[0]);
-            cl = lit::f32_mat(&flat, k, d).unwrap();
-        }
-        assert!(inertias[4] <= inertias[0], "Lloyd monotone: {inertias:?}");
-    }
 
-    #[test]
-    fn pagerank_step_preserves_mass() {
-        if !need_artifacts() {
-            return;
+        #[test]
+        fn client_comes_up() {
+            let rt = Runtime::cpu("artifacts").expect("client");
+            let p = rt.platform().to_lowercase();
+            assert!(p.contains("cpu") || p.contains("host"), "platform {p}");
         }
-        let mut rt = Runtime::from_artifacts().unwrap();
-        let n = 512usize;
-        // column-stochastic ring + shortcut
-        let mut m = vec![0f32; n * n];
-        for j in 0..n {
-            m[((j + 1) % n) * n + j] = 0.7;
-            m[((j + 7) % n) * n + j] += 0.3;
-        }
-        let r = vec![1.0f32 / n as f32; n];
-        let ml = lit::f32_mat(&m, n, n).unwrap();
-        let rl = lit::f32_vec(&r);
-        let out = rt.execute(PAGERANK_STEP, &[rl, ml]).unwrap();
-        let r2 = lit::to_f32(&out[0]).unwrap();
-        let sum: f32 = r2.iter().sum();
-        assert!((sum - 1.0).abs() < 1e-3, "mass {sum}");
-    }
 
-    #[test]
-    fn missing_artifact_is_an_error() {
-        let mut rt = Runtime::cpu("artifacts").unwrap();
-        assert!(rt.execute("nonexistent_model", &[]).is_err());
+        #[test]
+        fn loads_and_runs_logreg_step() {
+            if !need_artifacts() {
+                return;
+            }
+            let mut rt = Runtime::from_artifacts().unwrap();
+            let b = 256usize;
+            let f = 512usize;
+            // linearly separable data
+            let mut x = vec![0f32; b * f];
+            let mut y = vec![0f32; b];
+            for i in 0..b {
+                let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
+                x[i * f] = sign;
+                y[i] = if sign > 0.0 { 1.0 } else { 0.0 };
+            }
+            let losses = train_logreg(&mut rt, &x, &y, b, f, 20, 1.0).unwrap();
+            assert_eq!(losses.len(), 20);
+            assert!(
+                losses[19] < losses[0] * 0.5,
+                "loss should drop: {:?} -> {:?}",
+                losses[0],
+                losses[19]
+            );
+        }
+
+        #[test]
+        fn kmeans_step_runs_and_reduces_inertia() {
+            if !need_artifacts() {
+                return;
+            }
+            let mut rt = Runtime::from_artifacts().unwrap();
+            let n = 1024usize;
+            let d = 32usize;
+            let k = 16usize;
+            // two blobs
+            let mut pts = vec![0f32; n * d];
+            for i in 0..n {
+                let off = if i < n / 2 { 4.0 } else { -4.0 };
+                for j in 0..d {
+                    pts[i * d + j] = off + ((i * 31 + j * 17) % 13) as f32 * 0.01;
+                }
+            }
+            let mut c = vec![0f32; k * d];
+            for (i, v) in c.iter_mut().enumerate() {
+                *v = ((i * 7) % 11) as f32 * 0.2 - 1.0;
+            }
+            let pl = lit::f32_mat(&pts, n, d).unwrap();
+            let mut cl = lit::f32_mat(&c, k, d).unwrap();
+            let mut inertias = Vec::new();
+            for _ in 0..5 {
+                let out = rt.execute(KMEANS_STEP, &[cl, pl.clone()]).unwrap();
+                let flat = lit::to_f32(&out[0]).unwrap();
+                inertias.push(lit::to_f32(&out[1]).unwrap()[0]);
+                cl = lit::f32_mat(&flat, k, d).unwrap();
+            }
+            assert!(inertias[4] <= inertias[0], "Lloyd monotone: {inertias:?}");
+        }
+
+        #[test]
+        fn pagerank_step_preserves_mass() {
+            if !need_artifacts() {
+                return;
+            }
+            let mut rt = Runtime::from_artifacts().unwrap();
+            let n = 512usize;
+            // column-stochastic ring + shortcut
+            let mut m = vec![0f32; n * n];
+            for j in 0..n {
+                m[((j + 1) % n) * n + j] = 0.7;
+                m[((j + 7) % n) * n + j] += 0.3;
+            }
+            let r = vec![1.0f32 / n as f32; n];
+            let ml = lit::f32_mat(&m, n, n).unwrap();
+            let rl = lit::f32_vec(&r);
+            let out = rt.execute(PAGERANK_STEP, &[rl, ml]).unwrap();
+            let r2 = lit::to_f32(&out[0]).unwrap();
+            let sum: f32 = r2.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "mass {sum}");
+        }
+
+        #[test]
+        fn missing_artifact_is_an_error() {
+            let mut rt = Runtime::cpu("artifacts").unwrap();
+            assert!(rt.execute("nonexistent_model", &[]).is_err());
+        }
     }
 }

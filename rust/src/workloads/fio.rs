@@ -28,6 +28,7 @@ pub struct FioDriver {
 }
 
 impl FioDriver {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         threads: usize,
         iodepth: usize,
@@ -111,17 +112,19 @@ mod tests {
     use super::*;
     use crate::config::FabricConfig;
     use crate::coordinator::StackConfig;
-    use crate::fabric::sim::engine::StackEngine;
+    use crate::fabric::sim::run_pipeline;
 
-    fn run_fio(threads: usize, qps: usize, window: Option<u64>) -> (crate::fabric::sim::SimReport, Rc<RefCell<DriverStats>>) {
+    fn run_fio(
+        threads: usize,
+        qps: usize,
+        window: Option<u64>,
+    ) -> (crate::fabric::sim::SimReport, Rc<RefCell<DriverStats>>) {
         let cfg = FabricConfig::default();
         let stack = StackConfig::rdmabox(&cfg)
             .with_qps(qps)
             .with_window(window);
-        let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
-        sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
         let stats = DriverStats::shared();
-        sim.attach_driver(Box::new(FioDriver::new(
+        let driver = Box::new(FioDriver::new(
             threads,
             2,
             4096,
@@ -131,8 +134,8 @@ mod tests {
             4000,
             7,
             stats.clone(),
-        )));
-        (sim.run(u64::MAX / 2), stats)
+        ));
+        (run_pipeline(&cfg, &stack, 1, driver), stats)
     }
 
     #[test]

@@ -355,13 +355,11 @@ pub fn run_kv(
     stack: &crate::coordinator::StackConfig,
     kv: KvConfig,
 ) -> (crate::fabric::sim::SimReport, DriverStats) {
-    use crate::fabric::sim::engine::StackEngine;
-    let mut sim = Sim::new(fabric.clone(), stack.clone(), kv.nodes);
-    sim.attach_engine(Box::new(StackEngine::new(fabric, stack)));
     let stats = DriverStats::shared();
     let disk_ns = fabric.disk_ns(kv.page_size);
-    sim.attach_driver(Box::new(KvDriver::new(kv, disk_ns, stats.clone())));
-    let report = sim.run(u64::MAX / 2);
+    let nodes = kv.nodes;
+    let driver = Box::new(KvDriver::new(kv, disk_ns, stats.clone()));
+    let report = crate::fabric::sim::run_pipeline(fabric, stack, nodes, driver);
     let s = std::rc::Rc::try_unwrap(stats)
         .map(|c| c.into_inner())
         .unwrap_or_else(|rc| {

@@ -66,8 +66,7 @@ mod tests {
     use crate::config::FabricConfig;
     use crate::coordinator::polling::PollingMode;
     use crate::coordinator::StackConfig;
-    use crate::fabric::sim::engine::StackEngine;
-    use crate::fabric::sim::SimReport;
+    use crate::fabric::sim::{run_pipeline, SimReport};
 
     fn run_sync(polling: PollingMode, ops: u64) -> SimReport {
         let cfg = FabricConfig::default();
@@ -75,10 +74,7 @@ mod tests {
             .with_polling(polling)
             .with_qps(1)
             .with_window(None);
-        let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
-        sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
-        sim.attach_driver(Box::new(SyncWriteDriver::new(ops, 4096)));
-        sim.run(u64::MAX / 2)
+        run_pipeline(&cfg, &stack, 1, Box::new(SyncWriteDriver::new(ops, 4096)))
     }
 
     #[test]

@@ -263,12 +263,9 @@ pub fn run_ml(
     resident_frac: f64,
     nodes: usize,
 ) -> (u64, crate::fabric::sim::SimReport) {
-    use crate::fabric::sim::engine::StackEngine;
-    let mut sim = Sim::new(fabric.clone(), stack.clone(), nodes);
-    sim.attach_engine(Box::new(StackEngine::new(fabric, stack)));
     let stats = DriverStats::shared();
     let disk_ns = fabric.disk_ns(4096);
-    sim.attach_driver(Box::new(MlDriver::new(
+    let driver = Box::new(MlDriver::new(
         profile,
         resident_frac,
         nodes,
@@ -276,8 +273,8 @@ pub fn run_ml(
         disk_ns,
         11,
         stats.clone(),
-    )));
-    let report = sim.run(u64::MAX / 2);
+    ));
+    let report = crate::fabric::sim::run_pipeline(fabric, stack, nodes, driver);
     let end = stats.borrow().end_ns;
     (end.max(report.elapsed_ns), report)
 }

@@ -160,7 +160,7 @@ fn oversized_request_does_not_deadlock() {
     let cfg = fabric();
     let stack = StackConfig::rdmabox(&cfg).with_window(Some(128 << 10));
     let mut sim = Sim::new(cfg.clone(), stack.clone(), 1);
-    sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
+    sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack, 1)));
     sim.attach_driver(Box::new(One { done: false }));
     let r = sim.run(10_000_000_000); // 10s virtual-time cap
     assert_eq!(r.completed_writes, 1, "oversized write must complete");
@@ -201,7 +201,7 @@ fn mixed_burst_drains_under_every_polling_mode() {
     ] {
         let stack = StackConfig::rdmabox(&cfg).with_polling(polling);
         let mut sim = Sim::new(cfg.clone(), stack.clone(), 2);
-        sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack)));
+        sim.attach_engine(Box::new(StackEngine::new(&cfg, &stack, 2)));
         sim.attach_driver(Box::new(Burst { left: 64 }));
         let r = sim.run(10_000_000_000);
         assert_eq!(
