@@ -386,6 +386,123 @@ mod tests {
         assert_eq!(st, PlanStats::default());
     }
 
+    /// Satellite: a contiguous run longer than `max_wr_bytes` splits at
+    /// the WR byte cap (the cross-MR boundary) into WRs that still cover
+    /// every byte exactly once, with no gap and no overlap.
+    #[test]
+    fn merge_run_splits_exactly_at_wr_byte_cap() {
+        let mut id = 0;
+        let lim = BatchLimits {
+            max_wr_bytes: 8192,
+            ..Default::default()
+        };
+        // 5 contiguous pages -> 2+2+1 pages across three WRs
+        let ios: Vec<AppIo> = (0..5).map(|i| wio(i, i * 4096)).collect();
+        let (chains, st) = plan(BatchMode::BatchOnMr, &lim, ios, &mut id);
+        assert_eq!(st.wqes, 3);
+        let mut wrs: Vec<&WorkRequest> = chains.iter().flat_map(|c| c.wrs.iter()).collect();
+        wrs.sort_by_key(|w| w.remote_addr);
+        let mut cursor = 0u64;
+        for w in wrs {
+            assert_eq!(w.remote_addr, cursor, "no gap, no overlap at the boundary");
+            assert!(w.len <= 8192);
+            cursor += w.len;
+        }
+        assert_eq!(cursor, 5 * 4096, "every byte covered exactly once");
+    }
+
+    /// Satellite property: across every mode, the WRs a plan produces
+    /// cover exactly the union of the input byte ranges — each input
+    /// byte appears in exactly one WR (no loss, no double-count), every
+    /// multi-SGE WR is a contiguous run, and runs split at the
+    /// `max_wr_bytes` boundary. Inputs are drained through a real
+    /// `MergeQueue`, so this is the merge-queue → planner adjacency
+    /// contract end to end.
+    #[test]
+    fn prop_plan_covers_exact_byte_union() {
+        use crate::coordinator::merge_queue::{MergeCheck, MergeQueue};
+        use std::collections::BTreeMap;
+        for mode in [
+            BatchMode::Single,
+            BatchMode::BatchOnMr,
+            BatchMode::Doorbell,
+            BatchMode::Hybrid,
+        ] {
+            prop::forall(cfg(0xC0FE + mode as u64), |rng, size| {
+                let lim = BatchLimits {
+                    max_sge: 1 + rng.gen_below(8) as usize,
+                    max_chain: 1 + rng.gen_below(6) as usize,
+                    // small cap so contiguous runs regularly cross it
+                    max_wr_bytes: (1 + rng.gen_below(4)) * 4096,
+                };
+                // distinct pages, dense enough that adjacency is common
+                let n = size.min(48);
+                let mut pages: Vec<u64> = (0..n as u64 * 2).collect();
+                rng.shuffle(&mut pages);
+                pages.truncate(n);
+                let mut q = MergeQueue::new();
+                let mut by_id: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+                let mut want: BTreeMap<u64, u64> = BTreeMap::new();
+                for (i, &p) in pages.iter().enumerate() {
+                    let req = io(i as u64, 0, p * 4096, 4096, Dir::Write);
+                    by_id.insert(req.id, (req.addr, req.len));
+                    want.insert(req.addr, req.len);
+                    q.push(req);
+                }
+                let drained = match q.merge_check(u64::MAX) {
+                    MergeCheck::Drained(v) => v,
+                    other => return Err(format!("drain failed: {other:?}")),
+                };
+                if drained.len() != n {
+                    return Err("merge queue lost requests".into());
+                }
+                let mut id = 0;
+                let (chains, _) = plan(mode, &lim, drained, &mut id);
+                let mut covered: BTreeMap<u64, u64> = BTreeMap::new();
+                for c in &chains {
+                    for w in c.wrs.iter() {
+                        let mut ranges: Vec<(u64, u64)> =
+                            w.app_ios.iter().map(|i| by_id[i]).collect();
+                        ranges.sort_unstable();
+                        let mut cursor = w.remote_addr;
+                        let mut total = 0u64;
+                        for &(a, l) in &ranges {
+                            if a != cursor {
+                                return Err(format!(
+                                    "WR {} not contiguous: io at {a}, cursor {cursor}",
+                                    w.wr_id
+                                ));
+                            }
+                            cursor = a + l;
+                            total += l;
+                            if covered.insert(a, l).is_some() {
+                                return Err(format!("byte range at {a} double-counted"));
+                            }
+                        }
+                        if total != w.len {
+                            return Err(format!("WR len {} != sum of its ios {total}", w.len));
+                        }
+                        if w.num_sge > 1 && w.len > lim.max_wr_bytes {
+                            return Err(format!(
+                                "merged WR of {} bytes crossed the {} MR cap",
+                                w.len,
+                                lim.max_wr_bytes
+                            ));
+                        }
+                    }
+                }
+                if covered != want {
+                    return Err(format!(
+                        "covered union differs from inputs: {} vs {} ranges",
+                        covered.len(),
+                        want.len()
+                    ));
+                }
+                Ok(())
+            });
+        }
+    }
+
     /// Property: planning conserves app I/Os (each exactly once), never
     /// exceeds SGE/chain/byte limits, and `wqes`/`posts` counters match the
     /// produced structure, for every mode.

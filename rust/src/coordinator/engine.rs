@@ -164,6 +164,9 @@ pub struct EngineStats {
     pub merged_ios: u64,
     pub wqes: u64,
     pub posts: u64,
+    /// Completions for a wr_id that was not outstanding (duplicates, or
+    /// late deliveries after the WR already retired) — ignored, counted.
+    pub duplicate_wcs: u64,
 }
 
 /// A queued fabric-level sub-I/O (placed mode).
@@ -187,6 +190,16 @@ struct Pending {
     failed_over: bool,
 }
 
+/// A WR posted to the fabric and not yet completed. The map keyed by this
+/// is the engine's idempotency ledger: the first completion for a wr_id
+/// removes the entry, any later delivery of the same wr_id is a duplicate
+/// and is dropped before it can touch the window or the retirement state.
+#[derive(Debug, Clone, Copy)]
+struct PostedWr {
+    bytes: u64,
+    t_post: u64,
+}
+
 /// The unified submit → merge → batch → admit → retire pipeline.
 #[derive(Debug)]
 pub struct IoEngine {
@@ -206,8 +219,8 @@ pub struct IoEngine {
     drain_cursor: usize,
     subs: FxHashMap<u64, SubIo>,
     pending: FxHashMap<u64, Pending>,
-    /// wr_id → post time (regulator RTT feedback).
-    post_times: FxHashMap<u64, u64>,
+    /// wr_id → posted bytes + post time (idempotency ledger + RTT).
+    outstanding: FxHashMap<u64, PostedWr>,
     pub stats: EngineStats,
 }
 
@@ -241,7 +254,7 @@ impl IoEngine {
             drain_cursor: 0,
             subs: FxHashMap::default(),
             pending: FxHashMap::default(),
-            post_times: FxHashMap::default(),
+            outstanding: FxHashMap::default(),
             stats: EngineStats::default(),
         }
     }
@@ -467,8 +480,14 @@ impl IoEngine {
             for chain in chains {
                 debug_assert_eq!(chain.node, node, "shard {qp} planned a foreign node");
                 for wr in &chain.wrs {
-                    self.regulator.on_post(wr.len);
-                    self.post_times.insert(wr.wr_id, now + out.cpu_ns);
+                    self.regulator.on_post(wr.wr_id, wr.len);
+                    self.outstanding.insert(
+                        wr.wr_id,
+                        PostedWr {
+                            bytes: wr.len,
+                            t_post: now + out.cpu_ns,
+                        },
+                    );
                     out.cpu_ns += self.costs.post_wqe_cpu_ns;
                 }
                 out.cpu_ns += self.costs.mmio_cpu_ns;
@@ -502,9 +521,21 @@ impl IoEngine {
     /// Handle one work completion: release the admission window, map the
     /// WR's sub-I/Os back to application I/Os, apply the replication
     /// policy, and fail reads over to the next alive replica on error.
+    ///
+    /// Idempotent and order-independent: retirement is keyed by wr_id, so
+    /// duplicate, late, and reordered completions (a chaotic CQ delivers
+    /// all three) are tolerated — a WR releases its window bytes and
+    /// resolves its sub-I/Os exactly once, whatever the CQ does.
     pub fn on_wc(&mut self, wc: &Wc, now: u64) -> WcOut {
-        let rtt = now.saturating_sub(self.post_times.remove(&wc.wr_id).unwrap_or(now));
-        self.regulator.on_complete(wc.len, rtt);
+        let Some(posted) = self.outstanding.remove(&wc.wr_id) else {
+            // duplicate or unknown wr_id: dropped before it can touch the
+            // window accounting or retire anything twice
+            self.stats.duplicate_wcs += 1;
+            return WcOut::default();
+        };
+        debug_assert_eq!(posted.bytes, wc.len, "WC length disagrees with its WR");
+        let rtt = now.saturating_sub(posted.t_post);
+        self.regulator.on_complete(wc.wr_id, wc.len, rtt);
         let ok = wc.status == WcStatus::Success;
 
         let mut out = WcOut::default();
@@ -539,11 +570,12 @@ impl IoEngine {
             } else if sub.dir == Dir::Read {
                 // failover: re-queue onto the next alive, untried replica
                 let next = match &self.routing {
-                    Routing::Placed(map) => map
-                        .place(sub.addr)
-                        .replicas
-                        .into_iter()
-                        .find(|&n| map.is_alive(n) && sub.attempted & (1u64 << n) == 0),
+                    Routing::Placed(map) => {
+                        match map.route_read_excluding(sub.addr, sub.attempted) {
+                            ReadRoute::Node(n) => Some(n),
+                            ReadRoute::DiskFallback => None,
+                        }
+                    }
                     Routing::Direct => unreachable!(),
                 };
                 if let Some(node) = next {
@@ -830,6 +862,67 @@ mod tests {
         let r2 = e.on_wc(&wc_for(&wrs[1], WcStatus::Success), 0);
         assert_eq!(r2.retired.len(), 1);
         assert!(!r2.retired[0].disk_fallback, "one replica survived");
+    }
+
+    #[test]
+    fn duplicate_wc_retires_once_direct_mode() {
+        let mut e = engine(1, 1, Some(16 * 4096));
+        e.submit(io(1, Dir::Write, 0, 0));
+        let out = e.drain_all(0);
+        let wr = out.chains.into_iter().flat_map(|c| c.wrs).next().unwrap();
+        let wc = wc_for(&wr, WcStatus::Success);
+        let r1 = e.on_wc(&wc, 0);
+        assert_eq!(r1.retired.len(), 1);
+        // the CQ delivers the same completion again: dropped, counted
+        let r2 = e.on_wc(&wc, 0);
+        assert!(r2.retired.is_empty(), "duplicate WC must not retire");
+        assert!(r2.completed_subs.is_empty());
+        assert_eq!(e.stats.duplicate_wcs, 1);
+        assert_eq!(e.stats.retired, 1);
+        assert_eq!(e.regulator().in_flight(), 0, "window released once");
+    }
+
+    #[test]
+    fn duplicate_and_reordered_wcs_placed_mode() {
+        let map = NodeMap::new(3, 2, 1 << 20);
+        let mut e = engine(3, 2, Some(64 * 4096)).with_placement(map);
+        for i in 0..4u64 {
+            e.submit(io(i, Dir::Write, 0, i * 4096));
+        }
+        let out = e.drain_all(0);
+        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        // deliver in reverse order, each twice
+        let mut retired = Vec::new();
+        for wr in wrs.iter().rev() {
+            let wc = wc_for(wr, WcStatus::Success);
+            retired.extend(e.on_wc(&wc, 0).retired);
+            let dup = e.on_wc(&wc, 0);
+            assert!(dup.retired.is_empty() && dup.completed_subs.is_empty());
+        }
+        let mut ids: Vec<u64> = retired.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3], "each io retired exactly once");
+        assert_eq!(e.stats.duplicate_wcs, wrs.len() as u64);
+        assert_eq!(e.regulator().in_flight(), 0);
+    }
+
+    #[test]
+    fn error_completions_keep_window_balanced() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, Some(8 * 4096)).with_placement(map);
+        for i in 0..4u64 {
+            e.submit(io(i, Dir::Write, 0, i * 4096));
+        }
+        let out = e.drain_all(0);
+        for chain in out.chains {
+            for wr in chain.wrs {
+                // every completion errors; window must still drain to zero
+                e.on_wc(&wc_for(&wr, WcStatus::Error), 0);
+            }
+        }
+        assert_eq!(e.regulator().in_flight(), 0, "error WCs release bytes");
+        assert_eq!(e.stats.retired, 4, "failed writes still retire");
+        assert_eq!(e.stats.disk_fallbacks, 4);
     }
 
     /// Property-style check: random mixed traffic through the full

@@ -126,7 +126,19 @@ impl NodeMap {
 
     /// Read routing with the all-replicas-dead case surfaced explicitly.
     pub fn route_read(&self, addr: u64) -> ReadRoute {
-        match self.read_target(addr) {
+        self.route_read_excluding(addr, 0)
+    }
+
+    /// Read routing for *failover*: the first alive replica whose bit is
+    /// not set in the `attempted` mask (bit n = node n, nodes ≥ 64 are
+    /// never considered attempted). When every replica is dead or already
+    /// tried, the caller owns the disk path — a revived node that was
+    /// already attempted is *not* retried, because blocks written during
+    /// its downtime exist only on the surviving replicas.
+    pub fn route_read_excluding(&self, addr: u64, attempted: u64) -> ReadRoute {
+        let tried = |n: NodeId| n < 64 && attempted & (1u64 << n) != 0;
+        let replicas = self.place(addr).replicas;
+        match replicas.into_iter().find(|&n| self.alive[n] && !tried(n)) {
             Some(n) => ReadRoute::Node(n),
             None => ReadRoute::DiskFallback,
         }
@@ -202,6 +214,30 @@ mod tests {
         assert_eq!(m.route_read(0), ReadRoute::DiskFallback);
         let w = m.route_write(0);
         assert!(w.disk_fallback && w.targets.is_empty());
+    }
+
+    #[test]
+    fn route_read_excluding_skips_attempted_replicas() {
+        let m = NodeMap::new(3, 3, 4096);
+        // all alive: primary first, then the untried survivors in order
+        // (mask bit n = node n already attempted)
+        assert_eq!(m.route_read_excluding(0, 0b000), ReadRoute::Node(0));
+        assert_eq!(m.route_read_excluding(0, 0b001), ReadRoute::Node(1));
+        assert_eq!(m.route_read_excluding(0, 0b011), ReadRoute::Node(2));
+        // every replica tried -> disk, even though all are alive
+        assert_eq!(m.route_read_excluding(0, 0b111), ReadRoute::DiskFallback);
+    }
+
+    #[test]
+    fn route_read_excluding_combines_death_and_attempts() {
+        let mut m = NodeMap::new(3, 2, 4096);
+        m.set_alive(1, false);
+        // stripe 0 replicas are [0, 1]: 0 tried, 1 dead -> disk
+        assert_eq!(m.route_read_excluding(0, 0b001), ReadRoute::DiskFallback);
+        // a revived node that was already attempted stays excluded
+        m.set_alive(1, true);
+        assert_eq!(m.route_read_excluding(0, 0b011), ReadRoute::DiskFallback);
+        assert_eq!(m.route_read_excluding(0, 0b001), ReadRoute::Node(1));
     }
 
     #[test]

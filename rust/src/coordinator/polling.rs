@@ -325,6 +325,101 @@ mod tests {
         assert_eq!(f.after_poll(0, 1100), PollStep::Rearm);
     }
 
+    /// Satellite property: for any interleaving of `on_wake`/`after_poll`
+    /// the HybridTimer FSM never decides to poll at or past its spin
+    /// deadline — an empty poll there always re-arms — and every wake
+    /// resets the deadline.
+    #[test]
+    fn prop_hybrid_never_polls_past_deadline() {
+        use crate::util::prop::{self, cfg};
+        prop::forall(cfg(0x4B1D), |rng, size| {
+            let spin = 1 + rng.gen_below(100_000);
+            let mut f = PollerFsm::new(PollingMode::HybridTimer { spin_ns: spin });
+            let mut now = rng.gen_below(1 << 30);
+            let mut step = f.on_wake(now);
+            if f.spin_deadline_ns() != now + spin {
+                return Err("wake must arm the spin deadline".into());
+            }
+            for _ in 0..size * 8 {
+                match step {
+                    PollStep::Poll { .. } => {
+                        let got = if rng.gen_bool(0.4) { 1 } else { 0 };
+                        now += rng.gen_below(spin + spin / 2) + 1;
+                        step = f.after_poll(got, now);
+                        if matches!(step, PollStep::Poll { .. }) && now >= f.spin_deadline_ns() {
+                            return Err(format!(
+                                "kept spinning at {now}, past deadline {}",
+                                f.spin_deadline_ns()
+                            ));
+                        }
+                        if matches!(step, PollStep::Rearm) && now < f.spin_deadline_ns() {
+                            return Err("re-armed before the spin deadline".into());
+                        }
+                    }
+                    PollStep::Rearm => {
+                        now += 1 + rng.gen_below(100_000);
+                        step = f.on_wake(now);
+                        if f.spin_deadline_ns() != now + spin {
+                            return Err("re-wake must reset the spin deadline".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite property: for any interleaving, Adaptive polls at most
+    /// `max_retry` extra times on an empty CQ before re-arming, always
+    /// re-arms on retry exhaustion, and a non-empty poll refills the
+    /// whole retry budget.
+    #[test]
+    fn prop_adaptive_bounds_empty_spins() {
+        use crate::util::prop::{self, cfg};
+        prop::forall(cfg(0xADA9), |rng, size| {
+            let batch = 1 + rng.gen_below(16) as u32;
+            let max_retry = rng.gen_below(24) as u32;
+            let mut f = PollerFsm::new(PollingMode::Adaptive { batch, max_retry });
+            let mut step = f.on_wake(0);
+            let mut empty_streak = 0u32;
+            let mut t = 0u64;
+            for _ in 0..size * 8 {
+                t += 1;
+                match step {
+                    PollStep::Poll { max } => {
+                        if max != batch {
+                            return Err(format!("poll budget {max} != batch {batch}"));
+                        }
+                        let got = if rng.gen_bool(0.5) {
+                            0
+                        } else {
+                            1 + rng.gen_below(u64::from(max)) as u32
+                        };
+                        empty_streak = if got == 0 { empty_streak + 1 } else { 0 };
+                        step = f.after_poll(got, t);
+                        if matches!(step, PollStep::Poll { .. }) && empty_streak > max_retry {
+                            return Err(format!(
+                                "still spinning after {empty_streak} empty polls \
+                                 (max_retry {max_retry})"
+                            ));
+                        }
+                        if matches!(step, PollStep::Rearm) && empty_streak <= max_retry {
+                            return Err(format!(
+                                "re-armed after only {empty_streak} empty polls \
+                                 with {max_retry} retries allowed"
+                            ));
+                        }
+                    }
+                    PollStep::Rearm => {
+                        empty_streak = 0;
+                        step = f.on_wake(t);
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn labels_for_legends() {
         assert_eq!(PollingMode::Busy.label(), "Busy");

@@ -104,6 +104,14 @@ impl AdmissionPolicy for AimdWindow {
 }
 
 /// The regulator: tracks in-flight bytes against the policy window.
+///
+/// Posting and completion are keyed by `wr_id`: in debug builds the
+/// regulator keeps a per-WR byte ledger and asserts that every completion
+/// releases exactly the bytes its post reserved. An error completion that
+/// released the wrong amount (or a duplicate completion that released
+/// twice) would strand window capacity forever — the leak is invisible in
+/// steady state and fatal under load, so it is a debug assertion, not a
+/// runtime branch.
 #[derive(Debug)]
 pub struct Regulator {
     policy: Box<dyn AdmissionPolicy>,
@@ -112,6 +120,9 @@ pub struct Regulator {
     pub admitted: u64,
     pub blocked_checks: u64,
     pub peak_in_flight: u64,
+    /// Debug-only per-WR ledger: wr_id -> bytes reserved at post time.
+    #[cfg(debug_assertions)]
+    ledger: crate::util::fxhash::FxHashMap<u64, u64>,
 }
 
 impl Regulator {
@@ -123,6 +134,8 @@ impl Regulator {
             admitted: 0,
             blocked_checks: 0,
             peak_in_flight: 0,
+            #[cfg(debug_assertions)]
+            ledger: crate::util::fxhash::FxHashMap::default(),
         }
     }
 
@@ -154,16 +167,40 @@ impl Regulator {
         avail
     }
 
-    /// Record that `bytes` were posted to the NIC.
-    pub fn on_post(&mut self, bytes: u64) {
+    /// Record that WR `wr_id` reserved `bytes` of the window.
+    pub fn on_post(&mut self, wr_id: u64, bytes: u64) {
+        #[cfg(debug_assertions)]
+        {
+            let prev = self.ledger.insert(wr_id, bytes);
+            debug_assert!(
+                prev.is_none(),
+                "wr_id {wr_id} posted twice without completing"
+            );
+        }
+        #[cfg(not(debug_assertions))]
+        let _ = wr_id;
         self.in_flight += bytes;
         self.feedback.in_flight_bytes = self.in_flight;
         self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
         self.admitted += 1;
     }
 
-    /// Record a completion: releases window and feeds RTT to the policy.
-    pub fn on_complete(&mut self, bytes: u64, rtt_ns: u64) {
+    /// Record a completion (success *or* error — either way the WR left
+    /// the NIC): releases window and feeds RTT to the policy. In debug
+    /// builds, asserts `bytes` matches what `wr_id`'s post reserved so a
+    /// mismatched release cannot silently strand window capacity.
+    pub fn on_complete(&mut self, wr_id: u64, bytes: u64, rtt_ns: u64) {
+        #[cfg(debug_assertions)]
+        match self.ledger.remove(&wr_id) {
+            Some(posted) => debug_assert_eq!(
+                posted,
+                bytes,
+                "wr_id {wr_id} completed {bytes} bytes but posted {posted}"
+            ),
+            None => panic!("wr_id {wr_id} completed without a matching post"),
+        }
+        #[cfg(not(debug_assertions))]
+        let _ = wr_id;
         debug_assert!(self.in_flight >= bytes, "window release underflow");
         self.in_flight = self.in_flight.saturating_sub(bytes);
         self.feedback.in_flight_bytes = self.in_flight;
@@ -180,7 +217,7 @@ mod tests {
     #[test]
     fn unlimited_never_blocks() {
         let mut r = Regulator::unlimited();
-        r.on_post(u32::MAX as u64);
+        r.on_post(1, u32::MAX as u64);
         assert_eq!(r.available(0), u64::MAX - u32::MAX as u64);
     }
 
@@ -188,24 +225,69 @@ mod tests {
     fn static_window_enforced() {
         let mut r = Regulator::static_window(7 << 20);
         assert_eq!(r.available(0), 7 << 20);
-        r.on_post(6 << 20);
+        r.on_post(1, 6 << 20);
         assert_eq!(r.available(0), 1 << 20);
-        r.on_post(1 << 20);
+        r.on_post(2, 1 << 20);
         assert_eq!(r.available(0), 0);
         assert_eq!(r.blocked_checks, 1);
-        r.on_complete(3 << 20, 10_000);
-        assert_eq!(r.available(0), 3 << 20);
+        r.on_complete(2, 1 << 20, 10_000);
+        assert_eq!(r.available(0), 1 << 20);
     }
 
     #[test]
     fn peak_tracking() {
         let mut r = Regulator::static_window(10 << 20);
-        r.on_post(4 << 20);
-        r.on_post(2 << 20);
-        r.on_complete(4 << 20, 5_000);
-        r.on_post(1 << 20);
+        r.on_post(1, 4 << 20);
+        r.on_post(2, 2 << 20);
+        r.on_complete(1, 4 << 20, 5_000);
+        r.on_post(3, 1 << 20);
         assert_eq!(r.peak_in_flight, 6 << 20);
         assert_eq!(r.in_flight(), 3 << 20);
+    }
+
+    /// Satellite: error completions release exactly what their post
+    /// reserved — the ledger keeps the window balanced even when every
+    /// completion is an error.
+    #[test]
+    fn error_completions_release_exactly_posted_bytes() {
+        let mut r = Regulator::static_window(1 << 20);
+        for wr in 0..32u64 {
+            r.on_post(wr, 4096);
+        }
+        assert_eq!(r.in_flight(), 32 * 4096);
+        for wr in 0..32u64 {
+            // status does not matter to the regulator: the WR left the NIC
+            r.on_complete(wr, 4096, 1_000);
+        }
+        assert_eq!(r.in_flight(), 0, "no stranded window capacity");
+        assert_eq!(r.available(0), 1 << 20);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "completed 8192 bytes but posted 4096")]
+    fn ledger_catches_mismatched_release() {
+        let mut r = Regulator::static_window(1 << 20);
+        r.on_post(7, 4096);
+        r.on_complete(7, 8192, 1_000);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "completed without a matching post")]
+    fn ledger_catches_unposted_completion() {
+        let mut r = Regulator::static_window(1 << 20);
+        r.on_post(7, 4096);
+        r.on_complete(8, 4096, 1_000);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "posted twice")]
+    fn ledger_catches_double_post() {
+        let mut r = Regulator::static_window(1 << 20);
+        r.on_post(7, 4096);
+        r.on_post(7, 4096);
     }
 
     #[test]
@@ -254,9 +336,10 @@ mod tests {
     fn prop_inflight_accounting() {
         prop::forall(cfg(0xAD0_11), |rng, size| {
             let mut r = Regulator::static_window((1 + rng.gen_below(64)) << 20);
-            let mut outstanding: Vec<u64> = Vec::new();
+            let mut outstanding: Vec<(u64, u64)> = Vec::new();
             let mut posted: u64 = 0;
             let mut completed: u64 = 0;
+            let mut next_wr = 0u64;
             for _ in 0..size * 4 {
                 if rng.gen_bool(0.6) || outstanding.is_empty() {
                     let avail = r.available(0);
@@ -267,13 +350,14 @@ mod tests {
                     if bytes > avail {
                         continue;
                     }
-                    r.on_post(bytes);
+                    r.on_post(next_wr, bytes);
                     posted += bytes;
-                    outstanding.push(bytes);
+                    outstanding.push((next_wr, bytes));
+                    next_wr += 1;
                 } else {
                     let i = rng.gen_below(outstanding.len() as u64) as usize;
-                    let bytes = outstanding.swap_remove(i);
-                    r.on_complete(bytes, 1000);
+                    let (wr, bytes) = outstanding.swap_remove(i);
+                    r.on_complete(wr, bytes, 1000);
                     completed += bytes;
                 }
                 if r.in_flight() != posted - completed {

@@ -1,0 +1,442 @@
+//! Chaos fabric: the third backend of the I/O stack — a deterministic,
+//! seeded, fault-injecting fabric for correctness testing.
+//!
+//! Where [`crate::fabric::sim`] models a *calibrated* RDMA path (to
+//! regenerate the paper's figures) and [`crate::fabric::loopback`] moves
+//! real bytes on real threads, the chaos fabric executes the same
+//! [`IoEngine`] pipeline under an *adversarial* schedule: virtual time
+//! (no wall clock anywhere), a seeded PRNG interleaving per-QP progress,
+//! and a [`FaultPlan`] injecting completion errors, WC reordering within
+//! a CQ, duplicate/late completions, per-QP stalls ("NIC cache thrash"),
+//! and node death/revival at chosen virtual times.
+//!
+//! Everything is a pure function of the `(seed, FaultPlan, workload)`
+//! triple: a failing schedule replays exactly from its seed, which is
+//! what makes the scenario harness in [`scenario`] (and the CI sweep on
+//! top of it) a regression suite rather than a flake generator. This is
+//! the template every future backend must pass: production policy code
+//! runs unmodified; only the completion schedule is hostile.
+
+pub mod plan;
+pub mod scenario;
+
+pub use plan::{FaultPlan, NodeEvent, QpStall};
+pub use scenario::{replay_command, run_scenario, Scenario, ScenarioReport};
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+use crate::coordinator::batching::{BatchLimits, BatchMode};
+use crate::coordinator::engine::{EngineCosts, IoEngine, RetiredIo, Submitted, SHARD_REGION_SHIFT};
+use crate::coordinator::node::NodeMap;
+use crate::fabric::{AppIo, Dir, NodeId, QpId, Wc, WcStatus, WorkRequest};
+use crate::util::rng::Pcg32;
+
+/// Replication stripe size (mirrors the loopback fabric: one 1 MiB shard
+/// region per stripe, so placement and QP sharding line up).
+pub const STRIPE_BYTES: u64 = 1 << SHARD_REGION_SHIFT;
+
+/// Base completion latency of a WR in virtual ns.
+const LAT_BASE_NS: u64 = 1_000;
+/// Uniform jitter on top of the base latency (this alone interleaves
+/// per-QP progress: two WRs posted together complete in PRNG order).
+const LAT_JITTER_NS: u64 = 8_000;
+
+/// A WR in flight through the chaos fabric, with its fault decisions
+/// (drawn at post time, so the schedule is fixed the moment it is posted).
+#[derive(Debug, Clone)]
+struct Flight {
+    qp: QpId,
+    node: NodeId,
+    wr: WorkRequest,
+    inject_error: bool,
+    /// This delivery is the duplicate copy (stats only; the engine's
+    /// wr_id ledger is what actually de-duplicates).
+    duplicate: bool,
+}
+
+#[derive(Debug)]
+enum EventKind {
+    Deliver(Flight),
+    Node { node: NodeId, up: bool },
+}
+
+/// A scheduled event in virtual time. Total order is `(at, seq)`; `seq`
+/// is unique per event, so heap pops are fully deterministic.
+#[derive(Debug)]
+struct Event {
+    at: u64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// What the chaos fabric did to the schedule (all injected counts).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ChaosStats {
+    pub delivered_wcs: u64,
+    pub injected_errors: u64,
+    /// Error completions caused by the target node being dead at delivery.
+    pub dead_node_errors: u64,
+    pub duplicates_delivered: u64,
+    pub reordered_wcs: u64,
+    pub stalled_wcs: u64,
+    pub node_transitions: u64,
+    pub retired: u64,
+    pub disk_fallbacks: u64,
+    pub failovers: u64,
+}
+
+/// The deterministic fault-injecting fabric: drives a placed [`IoEngine`]
+/// (replica fan-out, read failover, disk-fallback signal) through an
+/// event heap in virtual time.
+pub struct ChaosFabric {
+    engine: IoEngine,
+    plan: FaultPlan,
+    rng: Pcg32,
+    now_ns: u64,
+    events: BinaryHeap<Reverse<Event>>,
+    next_seq: u64,
+    pub stats: ChaosStats,
+}
+
+impl ChaosFabric {
+    /// Build a cluster of `nodes` × `qps_per_node` chaos QPs with
+    /// `replicas`-way placement. The plan's node events are pre-loaded
+    /// into the schedule; everything else is drawn from `seed` as WRs
+    /// are posted.
+    pub fn new(
+        seed: u64,
+        nodes: usize,
+        qps_per_node: usize,
+        replicas: usize,
+        window_bytes: Option<u64>,
+        plan: FaultPlan,
+    ) -> Self {
+        let map = NodeMap::new(nodes, replicas, STRIPE_BYTES);
+        let engine = IoEngine::new(
+            BatchMode::Hybrid,
+            BatchLimits::default(),
+            nodes,
+            qps_per_node,
+            window_bytes,
+            EngineCosts::free(),
+        )
+        .with_placement(map);
+        let node_events: Vec<NodeEvent> = plan.node_events.clone();
+        let mut fab = Self {
+            engine,
+            plan,
+            rng: Pcg32::with_stream(seed, 0xC4A05),
+            now_ns: 0,
+            events: BinaryHeap::new(),
+            next_seq: 0,
+            stats: ChaosStats::default(),
+        };
+        for ev in node_events {
+            fab.schedule_node_event(ev.node, ev.up, ev.at_ns);
+        }
+        fab
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now_ns
+    }
+
+    pub fn engine(&self) -> &IoEngine {
+        &self.engine
+    }
+
+    pub fn pending_events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Schedule a node death (`up = false`) or revival at a virtual time
+    /// (in addition to whatever the plan pre-loaded — tests use this to
+    /// place a death relative to the current virtual time).
+    pub fn schedule_node_event(&mut self, node: NodeId, up: bool, at_ns: u64) {
+        self.push(at_ns.max(self.now_ns), EventKind::Node { node, up });
+    }
+
+    fn push(&mut self, at: u64, kind: EventKind) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.events.push(Reverse(Event { at, seq, kind }));
+    }
+
+    /// Submit one application I/O at the current virtual time and drain
+    /// the pipeline. The returned routing outcome surfaces the
+    /// disk-fallback signal when every replica of `addr` is already dead.
+    pub fn submit(&mut self, id: u64, dir: Dir, addr: u64, len: u64) -> Submitted {
+        let io = AppIo {
+            id,
+            dir,
+            node: 0,
+            addr,
+            len,
+            thread: 0,
+            t_submit: self.now_ns,
+        };
+        let sub = self.engine.submit(io);
+        self.pump();
+        sub
+    }
+
+    /// Drain admitted requests and put the planned WRs in flight, drawing
+    /// each WR's latency and fault decisions from the seed stream.
+    fn pump(&mut self) {
+        let out = self.engine.drain_all(self.now_ns);
+        for chain in out.chains {
+            let (qp, node) = (chain.qp, chain.node);
+            for wr in chain.wrs {
+                self.schedule_wr(qp, node, wr);
+            }
+        }
+    }
+
+    fn schedule_wr(&mut self, qp: QpId, node: NodeId, wr: WorkRequest) {
+        let mut at = self.now_ns + LAT_BASE_NS + self.rng.gen_below(LAT_JITTER_NS);
+        if self.plan.reorder_rate > 0.0 && self.rng.gen_bool(self.plan.reorder_rate) {
+            // hold this WC back so later-posted WRs overtake it in the CQ
+            at += 1 + self.rng.gen_below(self.plan.reorder_jitter_ns.max(1));
+            self.stats.reordered_wcs += 1;
+        }
+        if let Some(release) = self.plan.stall_release(qp, at) {
+            // the QP's context fell out of the NIC cache: nothing comes
+            // back until the stall window ends
+            at = release;
+            self.stats.stalled_wcs += 1;
+        }
+        let inject_error = self.plan.error_rate > 0.0 && self.rng.gen_bool(self.plan.error_rate);
+        if self.plan.duplicate_rate > 0.0 && self.rng.gen_bool(self.plan.duplicate_rate) {
+            let lag = 1 + self.rng.gen_below(self.plan.duplicate_lag_ns.max(1));
+            self.push(
+                at + lag,
+                EventKind::Deliver(Flight {
+                    qp,
+                    node,
+                    wr: wr.clone(),
+                    inject_error,
+                    duplicate: true,
+                }),
+            );
+        }
+        self.push(
+            at,
+            EventKind::Deliver(Flight {
+                qp,
+                node,
+                wr,
+                inject_error,
+                duplicate: false,
+            }),
+        );
+    }
+
+    /// Advance virtual time to the next scheduled event and process it.
+    /// Returns the application I/Os that retired, or `None` when the
+    /// fabric is quiescent (no events left).
+    pub fn step(&mut self) -> Option<Vec<RetiredIo>> {
+        let Reverse(ev) = self.events.pop()?;
+        debug_assert!(ev.at >= self.now_ns, "virtual time ran backwards");
+        self.now_ns = ev.at;
+        let mut retired = Vec::new();
+        match ev.kind {
+            EventKind::Node { node, up } => {
+                self.stats.node_transitions += 1;
+                self.engine
+                    .node_map_mut()
+                    .expect("chaos engine is placed")
+                    .set_alive(node, up);
+            }
+            EventKind::Deliver(f) => {
+                let alive = self.engine.node_map().expect("placed").is_alive(f.node);
+                let status = if f.inject_error || !alive {
+                    WcStatus::Error
+                } else {
+                    WcStatus::Success
+                };
+                if f.duplicate {
+                    self.stats.duplicates_delivered += 1;
+                } else if f.inject_error {
+                    self.stats.injected_errors += 1;
+                } else if !alive {
+                    self.stats.dead_node_errors += 1;
+                }
+                self.stats.delivered_wcs += 1;
+                let wc = Wc {
+                    wr_id: f.wr.wr_id,
+                    qp: f.qp,
+                    op: f.wr.op,
+                    len: f.wr.len,
+                    app_ios: f.wr.app_ios,
+                    status,
+                };
+                let out = self.engine.on_wc(&wc, self.now_ns);
+                self.stats.failovers += u64::from(out.requeued);
+                for r in &out.retired {
+                    self.stats.retired += 1;
+                    if r.disk_fallback {
+                        self.stats.disk_fallbacks += 1;
+                    }
+                }
+                retired = out.retired;
+            }
+        }
+        // failover requeues and freed window capacity both need a drain
+        self.pump();
+        Some(retired)
+    }
+
+    /// Run until no events remain, bounded by `max_steps` (livelock
+    /// guard). Returns every I/O retired along the way.
+    pub fn run_to_idle(&mut self, max_steps: u64) -> crate::runtime::Result<Vec<RetiredIo>> {
+        let mut all = Vec::new();
+        for _ in 0..max_steps {
+            match self.step() {
+                Some(r) => all.extend(r),
+                None => return Ok(all),
+            }
+        }
+        Err(crate::runtime::err(format!(
+            "chaos fabric not quiescent after {max_steps} events \
+             ({} still pending)",
+            self.events.len()
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const STEPS: u64 = 1_000_000;
+
+    fn submit_pages(fab: &mut ChaosFabric, n: u64, read_every: u64) -> u64 {
+        for i in 0..n {
+            let dir = if read_every > 0 && i % read_every == 0 {
+                Dir::Read
+            } else {
+                Dir::Write
+            };
+            fab.submit(i, dir, (i % 64) * 4096, 4096);
+        }
+        n
+    }
+
+    #[test]
+    fn quiet_plan_retires_everything_exactly_once() {
+        let mut fab = ChaosFabric::new(7, 3, 2, 2, Some(16 * 4096), FaultPlan::none());
+        let n = submit_pages(&mut fab, 100, 3);
+        let retired = fab.run_to_idle(STEPS).expect("quiescent");
+        let mut ids: Vec<u64> = retired.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>());
+        assert_eq!(fab.stats.failovers, 0);
+        assert_eq!(fab.stats.disk_fallbacks, 0);
+        assert_eq!(fab.engine().stats.duplicate_wcs, 0);
+        assert_eq!(fab.engine().queued_ios(), 0);
+        assert_eq!(fab.engine().regulator().in_flight(), 0);
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let run = |seed: u64| {
+            let plan = FaultPlan::none()
+                .with_errors(0.2)
+                .with_reordering(0.3, 20_000)
+                .with_duplicates(0.2, 5_000)
+                .node_down(1, 40_000)
+                .node_up(1, 120_000);
+            let mut fab = ChaosFabric::new(seed, 3, 2, 2, Some(24 * 4096), plan);
+            submit_pages(&mut fab, 120, 2);
+            let mut retired = fab.run_to_idle(STEPS).expect("quiescent");
+            retired.sort_by_key(|r| r.id);
+            (retired, fab.stats.clone(), fab.now())
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a.0, b.0, "retired set + flags identical");
+        assert_eq!(a.1, b.1, "fault schedule identical");
+        assert_eq!(a.2, b.2, "virtual clock identical");
+        let c = run(43);
+        assert_ne!(
+            (a.1, a.2),
+            (c.1, c.2),
+            "a different seed must produce a different schedule"
+        );
+    }
+
+    #[test]
+    fn all_errors_exhaust_replicas_into_disk_fallback() {
+        let mut fab = ChaosFabric::new(11, 2, 1, 2, None, FaultPlan::none().with_errors(1.0));
+        let n = submit_pages(&mut fab, 40, 2);
+        let retired = fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(retired.len() as u64, n, "every io still retires");
+        assert!(retired.iter().all(|r| r.disk_fallback));
+        assert_eq!(fab.engine().regulator().in_flight(), 0);
+    }
+
+    #[test]
+    fn duplicates_are_absorbed_by_the_wr_ledger() {
+        let plan = FaultPlan::none().with_duplicates(1.0, 10_000);
+        let mut fab = ChaosFabric::new(13, 2, 2, 2, Some(32 * 4096), plan);
+        let n = submit_pages(&mut fab, 80, 4);
+        let retired = fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(retired.len() as u64, n, "exactly-once despite dups");
+        assert!(fab.stats.duplicates_delivered > 0);
+        assert_eq!(
+            fab.engine().stats.duplicate_wcs,
+            fab.stats.duplicates_delivered,
+            "every duplicate was dropped at the ledger"
+        );
+    }
+
+    #[test]
+    fn stalled_qp_delays_but_does_not_lose_completions() {
+        // one node, one QP: everything rides the stalled channel
+        let plan = FaultPlan::none().stall(0, 0, 200_000);
+        let mut fab = ChaosFabric::new(17, 1, 1, 1, Some(8 * 4096), plan);
+        let n = submit_pages(&mut fab, 30, 0);
+        let retired = fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(retired.len() as u64, n);
+        assert!(fab.stats.stalled_wcs > 0, "the stall actually bit");
+        assert!(fab.now() >= 200_000, "nothing completed in the stall");
+    }
+
+    #[test]
+    fn node_death_mid_run_drives_failover_not_loss() {
+        // all addresses in stripe 0 -> primary node 0, replica node 1
+        let plan = FaultPlan::none().node_down(0, 4_000);
+        let mut fab = ChaosFabric::new(19, 2, 1, 2, None, plan);
+        for i in 0..32u64 {
+            fab.submit(i, Dir::Read, (i % 8) * 4096, 4096);
+        }
+        let retired = fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(retired.len(), 32);
+        assert!(
+            retired.iter().all(|r| !r.disk_fallback),
+            "replica 1 survived: no disk fallback"
+        );
+        assert!(fab.stats.failovers > 0, "reads were in flight to node 0");
+    }
+}

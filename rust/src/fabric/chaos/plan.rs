@@ -1,0 +1,226 @@
+//! [`FaultPlan`] — the declarative fault schedule a [`super::ChaosFabric`]
+//! executes against the `IoEngine`.
+//!
+//! Every fault class maps to a misbehavior a real RDMA deployment exhibits
+//! (RDMAvisor's argument: shared NICs serve degraded, contended QPs — a
+//! pristine fabric is the exception, not the rule):
+//!
+//! * **completion errors** — flush errors / retry-exceeded WCs,
+//! * **reordering** — WCs of independent WRs overtaking each other in a CQ,
+//! * **duplicate / late completions** — a CQ replaying an entry after the
+//!   WR already retired,
+//! * **per-QP stalls** — a QP whose context fell out of the NIC cache
+//!   ("cache thrash") delivering nothing for a stretch of time,
+//! * **node death / revival** — a memory donor disappearing mid-run and
+//!   possibly coming back.
+//!
+//! Rates are probabilities evaluated against the fabric's seeded PRNG, so
+//! a `(seed, FaultPlan)` pair names one exact adversarial schedule.
+
+use crate::fabric::{NodeId, QpId};
+use crate::util::rng::Pcg32;
+
+/// A window of virtual time during which one QP delivers no completions;
+/// WCs that would land inside the window slip to its end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QpStall {
+    pub qp: QpId,
+    pub from_ns: u64,
+    pub until_ns: u64,
+}
+
+/// A node liveness transition at a chosen virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeEvent {
+    pub at_ns: u64,
+    pub node: NodeId,
+    pub up: bool,
+}
+
+/// The fault schedule. Build with [`FaultPlan::none`] plus the `with_*` /
+/// `stall` / `node_down` / `node_up` combinators, or draw a random mix
+/// from a seed stream with [`FaultPlan::randomized`].
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Probability a posted WR completes with `WcStatus::Error`.
+    pub error_rate: f64,
+    /// Probability a WC gets an extra delivery delay so later-posted WRs
+    /// overtake it in the CQ.
+    pub reorder_rate: f64,
+    /// Maximum extra delay of a reordered WC.
+    pub reorder_jitter_ns: u64,
+    /// Probability a WC is delivered a second time (duplicate).
+    pub duplicate_rate: f64,
+    /// How long after the original the duplicate arrives.
+    pub duplicate_lag_ns: u64,
+    /// Per-QP delivery stalls ("NIC cache thrash").
+    pub stalls: Vec<QpStall>,
+    /// Node death / revival schedule.
+    pub node_events: Vec<NodeEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: a perfectly behaved fabric (the control run every
+    /// scenario is implicitly compared against).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with_errors(mut self, rate: f64) -> Self {
+        assert!((0.0..=1.0).contains(&rate));
+        self.error_rate = rate;
+        self
+    }
+
+    pub fn with_reordering(mut self, rate: f64, jitter_ns: u64) -> Self {
+        assert!((0.0..=1.0).contains(&rate));
+        self.reorder_rate = rate;
+        self.reorder_jitter_ns = jitter_ns;
+        self
+    }
+
+    pub fn with_duplicates(mut self, rate: f64, lag_ns: u64) -> Self {
+        assert!((0.0..=1.0).contains(&rate));
+        self.duplicate_rate = rate;
+        self.duplicate_lag_ns = lag_ns;
+        self
+    }
+
+    pub fn stall(mut self, qp: QpId, from_ns: u64, until_ns: u64) -> Self {
+        assert!(from_ns < until_ns, "empty stall window");
+        self.stalls.push(QpStall {
+            qp,
+            from_ns,
+            until_ns,
+        });
+        self
+    }
+
+    pub fn node_down(mut self, node: NodeId, at_ns: u64) -> Self {
+        self.node_events.push(NodeEvent {
+            at_ns,
+            node,
+            up: false,
+        });
+        self
+    }
+
+    /// Revive a node at a virtual time. Like the loopback fabric's
+    /// `revive_node`, this is a failure-injection affordance, **not** a
+    /// recovery protocol: the revived node rejoins placement without
+    /// resynchronization, so in a real deployment it may serve stale
+    /// data for blocks written during its downtime. The chaos fabric
+    /// carries no payloads and cannot detect that — completion-level
+    /// invariants (exactly-once, window bound, no lost I/O) still hold
+    /// and are what the harness checks; a resync protocol plus a data
+    /// model to verify it is future work (see ROADMAP).
+    pub fn node_up(mut self, node: NodeId, at_ns: u64) -> Self {
+        self.node_events.push(NodeEvent {
+            at_ns,
+            node,
+            up: true,
+        });
+        self
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_quiet(&self) -> bool {
+        self.error_rate == 0.0
+            && self.reorder_rate == 0.0
+            && self.duplicate_rate == 0.0
+            && self.stalls.is_empty()
+            && self.node_events.is_empty()
+    }
+
+    /// The end of the stall window covering (`qp`, `at_ns`), if any.
+    pub fn stall_release(&self, qp: QpId, at_ns: u64) -> Option<u64> {
+        self.stalls
+            .iter()
+            .filter(|s| s.qp == qp && s.from_ns <= at_ns && at_ns < s.until_ns)
+            .map(|s| s.until_ns)
+            .max()
+    }
+
+    /// Draw a random fault mix for a cluster of `nodes` × `qps_per_node`
+    /// QPs from the given seed stream. Every knob is exercised with
+    /// moderate probability so a sweep over seeds covers single faults,
+    /// fault combinations, and the quiet plan.
+    pub fn randomized(rng: &mut Pcg32, nodes: usize, qps_per_node: usize) -> Self {
+        let mut plan = FaultPlan::none();
+        if rng.gen_bool(0.55) {
+            plan.error_rate = rng.gen_f64() * 0.35;
+        }
+        if rng.gen_bool(0.55) {
+            plan.reorder_rate = rng.gen_f64() * 0.5;
+            plan.reorder_jitter_ns = 1 + rng.gen_below(60_000);
+        }
+        if rng.gen_bool(0.5) {
+            plan.duplicate_rate = rng.gen_f64() * 0.3;
+            plan.duplicate_lag_ns = 1 + rng.gen_below(25_000);
+        }
+        if rng.gen_bool(0.45) {
+            let total_qps = (nodes * qps_per_node) as u64;
+            for _ in 0..=rng.gen_below(3) {
+                let qp = rng.gen_below(total_qps) as usize;
+                let from = rng.gen_below(400_000);
+                plan = plan.stall(qp, from, from + 1 + rng.gen_below(250_000));
+            }
+        }
+        if rng.gen_bool(0.45) {
+            for _ in 0..=rng.gen_below(2) {
+                let node = rng.gen_below(nodes as u64) as usize;
+                let at = rng.gen_below(300_000);
+                plan = plan.node_down(node, at);
+                if rng.gen_bool(0.6) {
+                    plan = plan.node_up(node, at + 1 + rng.gen_below(200_000));
+                }
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_compose() {
+        let p = FaultPlan::none()
+            .with_errors(0.1)
+            .with_reordering(0.2, 1000)
+            .with_duplicates(0.3, 500)
+            .stall(2, 10, 20)
+            .node_down(0, 5)
+            .node_up(0, 15);
+        assert_eq!(p.error_rate, 0.1);
+        assert_eq!(p.stalls.len(), 1);
+        assert_eq!(p.node_events.len(), 2);
+        assert!(!p.is_quiet());
+        assert!(FaultPlan::none().is_quiet());
+    }
+
+    #[test]
+    fn stall_release_picks_covering_window() {
+        let p = FaultPlan::none().stall(1, 100, 200).stall(1, 150, 300);
+        assert_eq!(p.stall_release(1, 160), Some(300), "longest window wins");
+        assert_eq!(p.stall_release(1, 99), None);
+        assert_eq!(p.stall_release(1, 200), None, "window end is exclusive");
+        assert_eq!(p.stall_release(0, 160), None, "other QPs unaffected");
+    }
+
+    #[test]
+    fn randomized_is_deterministic_per_seed() {
+        let a = FaultPlan::randomized(&mut Pcg32::new(9), 3, 2);
+        let b = FaultPlan::randomized(&mut Pcg32::new(9), 3, 2);
+        assert_eq!(a.error_rate, b.error_rate);
+        assert_eq!(a.stalls, b.stalls);
+        assert_eq!(a.node_events, b.node_events);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty stall window")]
+    fn stall_rejects_empty_window() {
+        let _ = FaultPlan::none().stall(0, 50, 50);
+    }
+}

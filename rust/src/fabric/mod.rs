@@ -1,4 +1,4 @@
-//! RDMA fabric abstraction: shared verb-level types plus two backends.
+//! RDMA fabric abstraction: shared verb-level types plus three backends.
 //!
 //! * [`sim`] — a calibrated discrete-event simulator of the full RDMA path
 //!   (host CPU → MMIO/PCIe → NIC processing units with WQE/QP/MPT caches →
@@ -8,7 +8,14 @@
 //!   examples: remote nodes are threads owning real buffers, "RDMA" is
 //!   memcpy through registered regions, and completions flow through real
 //!   queues. The same coordinator policy objects drive both backends.
+//! * [`chaos`] — a deterministic fault-injecting fabric for correctness
+//!   testing: virtual time, a seeded PRNG schedule, and a
+//!   [`chaos::FaultPlan`] injecting completion errors, WC reordering,
+//!   duplicates, per-QP stalls, and node death/revival. Every engine
+//!   invariant (exactly-once retirement, admission bound, failover) is
+//!   replayable from a single `u64` seed.
 
+pub mod chaos;
 pub mod loopback;
 pub mod sim;
 

@@ -32,6 +32,18 @@ impl std::fmt::Display for Error {
 
 impl std::error::Error for Error {}
 
+impl From<String> for Error {
+    fn from(msg: String) -> Self {
+        Error(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Self {
+        Error(msg.to_string())
+    }
+}
+
 pub type Result<T> = std::result::Result<T, Error>;
 
 pub fn err(msg: impl Into<String>) -> Error {
@@ -195,6 +207,14 @@ mod tests {
     fn error_displays_message() {
         let e = err("boom");
         assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn error_converts_from_strings() {
+        let e: Error = String::from("owned").into();
+        assert_eq!(e.to_string(), "owned");
+        let e: Error = "borrowed".into();
+        assert_eq!(e.to_string(), "borrowed");
     }
 
     #[test]

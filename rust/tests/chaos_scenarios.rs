@@ -1,0 +1,176 @@
+//! Chaos scenario suite: named regression seeds for each fault class plus
+//! a randomized multi-seed sweep, all on the deterministic chaos fabric.
+//!
+//! Every scenario asserts the engine invariants (exactly-once retirement,
+//! admission window never exceeded, no lost I/O, quiescence with a fully
+//! released window) inside `run_scenario`; the tests here additionally
+//! assert that the *intended* fault actually fired, so a refactor cannot
+//! quietly neuter the harness.
+//!
+//! On failure the panic message contains a one-command reproducer (the
+//! seed pinned), and the same command is written to
+//! `target/chaos-repro.txt` for CI to upload:
+//!
+//! ```text
+//! CHAOS_SEED=0x... cargo test --release --test chaos_scenarios replay_env_seed -- --nocapture
+//! ```
+
+use rdmabox::fabric::chaos::{replay_command, run_scenario, FaultPlan, Scenario, ScenarioReport};
+
+/// Default base of the randomized sweep when CI does not pin one.
+const DEFAULT_SWEEP_BASE: u64 = 0x52D3_A201;
+/// Default sweep width (the acceptance floor is 20 seeds).
+const DEFAULT_SWEEP_N: u64 = 24;
+
+fn env_u64(name: &str) -> Option<u64> {
+    let v = std::env::var(name).ok()?;
+    let v = v.trim().to_string();
+    let parsed = match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => v.parse(),
+    };
+    match parsed {
+        Ok(x) => Some(x),
+        Err(_) => panic!("{name} must be a u64 (decimal or 0x-hex), got `{v}`"),
+    }
+}
+
+fn write_repro(sc: &Scenario) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../target/chaos-repro.txt");
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let _ = std::fs::write(path, format!("{}\n", replay_command(sc)));
+}
+
+/// Run a scenario; on an invariant violation, persist the reproducer
+/// command for CI and panic with it.
+fn check(sc: &Scenario) -> ScenarioReport {
+    match run_scenario(sc) {
+        Ok(r) => r,
+        Err(e) => {
+            write_repro(sc);
+            panic!("{e}");
+        }
+    }
+}
+
+// ---------------- named regression seeds ----------------
+
+/// WCs overtake each other within a CQ; retirement order must not matter.
+#[test]
+fn wc_reordering() {
+    let plan = FaultPlan::none().with_reordering(0.6, 40_000);
+    let r = check(&Scenario::named("wc_reordering", 0x2E02DE2, plan));
+    assert!(r.reordered_wcs > 0, "reordering never fired: {r:?}");
+    assert_eq!(r.failovers, 0, "reordering alone must not fail over");
+    assert_eq!(r.disk_fallbacks, 0);
+}
+
+/// The CQ replays completions; the wr_id ledger must absorb every replay.
+#[test]
+fn duplicate_completions() {
+    let plan = FaultPlan::none().with_duplicates(0.8, 15_000);
+    let r = check(&Scenario::named("duplicate_completions", 0xD0B1E, plan));
+    assert!(r.duplicate_wcs > 0, "duplicates never fired: {r:?}");
+    assert_eq!(r.failovers, 0);
+    assert_eq!(r.disk_fallbacks, 0);
+}
+
+/// Completion errors on a replicated topology: reads must fail over to
+/// the next alive replica instead of surfacing the error.
+#[test]
+fn completion_errors_with_read_failover() {
+    let plan = FaultPlan::none().with_errors(0.3);
+    let sc = Scenario::named("completion_errors_with_read_failover", 0xE2202, plan);
+    let r = check(&sc);
+    assert!(r.injected_errors > 0, "errors never fired: {r:?}");
+    assert!(r.failovers > 0, "errors must drive failover: {r:?}");
+}
+
+/// A node dies mid-run while its QPs are stalled: everything posted to it
+/// before the death is still in flight when it lands, so those WCs come
+/// back as errors and reads *must* fail over; with two replicas and one
+/// death no I/O may degrade to the disk path.
+#[test]
+fn node_death_mid_run() {
+    // QPs 0 and 1 belong to node 0 on the named 3-node × 2-QP topology
+    let plan = FaultPlan::none()
+        .stall(0, 0, 60_000)
+        .stall(1, 0, 60_000)
+        .node_down(0, 30_000);
+    let r = check(&Scenario::named("node_death_mid_run", 0xDEAD0, plan));
+    assert_eq!(r.node_transitions, 1);
+    assert!(r.failovers > 0, "no failover from the death: {r:?}");
+    assert_eq!(r.disk_fallbacks, 0, "a replica survived: {r:?}");
+    assert_eq!(r.disk_at_submit, 0);
+}
+
+/// Two QPs stall ("NIC cache thrash"): completions are delayed, never
+/// lost, and the admission window stays bounded throughout the stall.
+#[test]
+fn per_qp_stall() {
+    let plan = FaultPlan::none()
+        .stall(0, 10_000, 150_000)
+        .stall(3, 20_000, 120_000);
+    let r = check(&Scenario::named("per_qp_stall", 0x57A11, plan));
+    assert!(r.stalled_wcs > 0, "the stall never fired: {r:?}");
+    assert_eq!(r.failovers, 0);
+    assert_eq!(r.disk_fallbacks, 0);
+}
+
+/// Everything at once: errors, reordering, duplicates, a stall, and a
+/// death+revival — the invariants hold under the full fault mix.
+#[test]
+fn combined_fault_mix() {
+    let plan = FaultPlan::none()
+        .with_errors(0.15)
+        .with_reordering(0.4, 30_000)
+        .with_duplicates(0.3, 10_000)
+        .stall(2, 5_000, 90_000)
+        .node_down(1, 40_000)
+        .node_up(1, 140_000);
+    let r = check(&Scenario::named("combined_fault_mix", 0xC0B0, plan));
+    assert!(r.injected_errors > 0 && r.duplicate_wcs > 0, "{r:?}");
+    assert_eq!(r.node_transitions, 2, "{r:?}");
+}
+
+// ---------------- randomized sweep + replay ----------------
+
+/// N seeds per CI run (base pinned per run via CHAOS_SWEEP_BASE); every
+/// failure names the seed and the one-command replay.
+#[test]
+fn randomized_sweep() {
+    let base = env_u64("CHAOS_SWEEP_BASE").unwrap_or(DEFAULT_SWEEP_BASE);
+    let n = env_u64("CHAOS_SWEEP_N").unwrap_or(DEFAULT_SWEEP_N);
+    assert!(n >= 20, "sweep needs at least 20 seeds, got {n}");
+    println!("chaos sweep: {n} seeds from base {base:#x}");
+    for i in 0..n {
+        let sc = Scenario::randomized(base.wrapping_add(i));
+        let r = check(&sc);
+        println!(
+            "  seed {:#x}: {} ios, {} wcs, {} failovers, {} dups, {} errors, peak {} B",
+            sc.seed,
+            r.retired,
+            r.delivered_wcs,
+            r.failovers,
+            r.duplicate_wcs,
+            r.injected_errors,
+            r.peak_in_flight
+        );
+    }
+}
+
+/// Replay a single sweep seed from the environment — the target of the
+/// reproducer command every failure prints.
+#[test]
+fn replay_env_seed() {
+    let Some(seed) = env_u64("CHAOS_SEED") else {
+        println!("replay_env_seed: set CHAOS_SEED=<seed> to replay; nothing to do");
+        return;
+    };
+    let sc = Scenario::randomized(seed);
+    println!("replaying seed {seed:#x} with plan {:?}", sc.plan);
+    let r = check(&sc);
+    println!("seed {seed:#x} passed: {r:?}");
+}

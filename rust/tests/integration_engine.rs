@@ -1,6 +1,7 @@
 //! Integration tests for the `IoEngine` pipeline: multi-threaded
 //! submitters over the sharded queues (exactly-once retirement), the
-//! admission window bound end-to-end, and replica failure mid-run.
+//! admission window bound end-to-end, and replica failure mid-run (on
+//! the deterministic chaos backend).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -8,8 +9,10 @@ use std::sync::Arc;
 use rdmabox::config::FabricConfig;
 use rdmabox::coordinator::batching::BatchMode;
 use rdmabox::coordinator::StackConfig;
+use rdmabox::fabric::chaos::{ChaosFabric, FaultPlan};
 use rdmabox::fabric::loopback::{LiveBox, LoopbackFabric};
 use rdmabox::fabric::sim::run_pipeline;
+use rdmabox::fabric::Dir;
 use rdmabox::workloads::fio::FioDriver;
 use rdmabox::workloads::DriverStats;
 
@@ -92,35 +95,45 @@ fn admission_window_never_exceeded_end_to_end() {
     assert!(r.trace.admission_blocks > 0, "the window actually bit");
 }
 
-/// Satellite: kill a replica mid-run; reads keep completing (correctly)
-/// from the surviving replica — the engine's failover path, not the
-/// application's.
+/// Satellite: kill a replica mid-run; reads keep completing from the
+/// surviving replica — the engine's failover path, not the application's.
+///
+/// Runs on the chaos backend: the death lands at a *virtual* time between
+/// the read postings and their completions, so the race the old
+/// loopback-thread version only sometimes hit (sleep-based killer) is now
+/// hit on every run, deterministically.
 #[test]
 fn replica_killed_mid_run_reads_survive() {
     let pages = 48u64;
-    let fab = LoopbackFabric::start_sharded(3, 1 << 22, 2);
-    let lb = LiveBox::new_placed(fab, BatchMode::Hybrid, Some(7 << 20), 2);
+    // every page lives in stripe 0 -> primary node 0, replica node 1
+    let mut fab = ChaosFabric::new(0x5EED, 3, 2, 2, Some(7 << 20), FaultPlan::none());
     for page in 0..pages {
-        assert!(lb.write_placed(page * 4096, &vec![(page % 251) as u8 + 1; 4096]));
+        fab.submit(page, Dir::Write, page * 4096, 4096);
     }
-    let reader = {
-        let lb = lb.clone();
-        std::thread::spawn(move || {
-            // three sweeps; the killer fires somewhere inside them
-            for round in 0..3 {
-                for page in 0..pages {
-                    let b = lb
-                        .read_placed(page * 4096, 4096)
-                        .expect("a replica is always alive");
-                    assert_eq!(b[0], (page % 251) as u8 + 1, "round {round} page {page}");
-                }
-            }
-        })
-    };
-    // kill one node while the reader is mid-sweep
-    std::thread::sleep(std::time::Duration::from_millis(2));
-    lb.fail_node(0);
-    reader.join().unwrap();
-    let s = lb.stats();
-    assert_eq!(s.disk_fallbacks, 0, "one replica always survived");
+    let written = fab.run_to_idle(1_000_000).expect("writes quiesce");
+    assert_eq!(written.len() as u64, pages);
+    assert!(written.iter().all(|r| !r.disk_fallback));
+
+    // three read sweeps; node 0 dies 2µs (virtual) into the first sweep,
+    // while its completions are still in flight
+    fab.schedule_node_event(0, false, fab.now() + 2_000);
+    let mut retired = Vec::new();
+    for round in 0..3u64 {
+        for page in 0..pages {
+            let id = 1_000 + round * pages + page;
+            fab.submit(id, Dir::Read, page * 4096, 4096);
+        }
+        retired.extend(fab.run_to_idle(1_000_000).expect("reads quiesce"));
+    }
+    assert_eq!(retired.len() as u64, 3 * pages, "each read retired once");
+    assert!(
+        retired.iter().all(|r| !r.disk_fallback),
+        "replica 1 always alive: no disk fallback"
+    );
+    assert!(
+        retired.iter().any(|r| r.failed_over),
+        "the kill must land on in-flight reads"
+    );
+    assert_eq!(fab.engine().stats.duplicate_wcs, 0);
+    assert_eq!(fab.engine().regulator().in_flight(), 0);
 }
