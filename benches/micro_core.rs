@@ -1,37 +1,89 @@
 //! Microbenchmarks of the coordinator hot paths (harness = false; criterion
 //! is unavailable offline). These are the numbers the §Perf pass tracks:
-//! merge-queue ops, batch planning, Zipfian sampling, histogram recording,
-//! the CLOCK page cache, and raw DES event throughput.
+//! merge-queue ops, batch planning, the full engine pipeline
+//! (merge → batch → admit → poll-retire), the poller FSM, Zipfian
+//! sampling, histogram recording, the CLOCK page cache, and raw DES event
+//! throughput.
+//!
+//! CI runs this in **smoke mode** on every push and uploads the JSON as
+//! the perf trajectory:
+//!
+//! * `BENCH_SMOKE=1` — ~20× fewer iterations (seconds, not minutes);
+//! * `BENCH_JSON=path` — write machine-readable results (name, mean
+//!   ns/iter, ops/s, p99 of per-block means) to `path`.
+//!
+//! `tools/check_bench.py` gates the JSON against `ci/bench_baseline.json`
+//! (>25% regression fails the job).
 
 use std::time::Instant;
 
 use rdmabox::config::FabricConfig;
 use rdmabox::coordinator::batching::{plan, BatchLimits, BatchMode};
+use rdmabox::coordinator::engine::{EngineCosts, IoEngine};
 use rdmabox::coordinator::merge_queue::{MergeCheck, MergeQueue};
+use rdmabox::coordinator::polling::{PollStep, PollerFsm, PollingMode};
 use rdmabox::coordinator::StackConfig;
 use rdmabox::fabric::sim::{run_pipeline, Driver, Sim};
-use rdmabox::fabric::{AppIo, Dir};
+use rdmabox::fabric::{AppIo, Dir, Wc, WcStatus};
 use rdmabox::paging::cache::ClockCache;
 use rdmabox::util::hist::Hist;
 use rdmabox::util::rng::Pcg32;
 use rdmabox::util::zipf::ScrambledZipfian;
 
-fn bench<F: FnMut() -> u64>(name: &str, iters: u64, mut f: F) {
+/// One measured hot path, as written to `BENCH_JSON`.
+struct BenchResult {
+    name: &'static str,
+    iters: u64,
+    mean_ns: f64,
+    /// p99 over per-block mean iteration times (64 blocks per bench) —
+    /// the tail the trajectory watches, robust to scheduler noise.
+    /// `None` for single-shot benches (DES end-to-end) that have no
+    /// block samples; the JSON omits the field and the gate skips it.
+    p99_block_ns: Option<f64>,
+    ops_per_sec: f64,
+}
+
+/// Blocks per bench for the p99-of-block-means tail estimate.
+const BLOCKS: u64 = 64;
+
+fn bench<F: FnMut() -> u64>(
+    results: &mut Vec<BenchResult>,
+    name: &'static str,
+    iters: u64,
+    mut f: F,
+) {
     // warmup
     let mut sink = 0u64;
     for _ in 0..iters / 10 + 1 {
         sink = sink.wrapping_add(f());
     }
+    let per_block = (iters / BLOCKS).max(1);
+    let mut samples = Vec::with_capacity(BLOCKS as usize);
     let t0 = Instant::now();
-    for _ in 0..iters {
-        sink = sink.wrapping_add(f());
+    for _ in 0..BLOCKS {
+        let b0 = Instant::now();
+        for _ in 0..per_block {
+            sink = sink.wrapping_add(f());
+        }
+        samples.push(b0.elapsed().as_nanos() as f64 / per_block as f64);
     }
-    let dt = t0.elapsed();
-    let per = dt.as_nanos() as f64 / iters as f64;
+    let done = BLOCKS * per_block;
+    let mean = t0.elapsed().as_nanos() as f64 / done as f64;
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("finite sample"));
+    let idx = ((samples.len() as f64 * 0.99).ceil() as usize).saturating_sub(1);
+    let p99 = samples[idx.min(samples.len() - 1)];
+    let ops = 1e9 / mean;
     println!(
-        "{name:38} {iters:>10} iters  {per:>9.1} ns/iter  ({:>12.0} ops/s)  [sink {sink}]",
-        1e9 / per
+        "{name:34} {done:>9} iters  {mean:>9.1} ns/iter  ({ops:>12.0} ops/s)  \
+         p99/blk {p99:>9.1} ns  [sink {sink}]"
     );
+    results.push(BenchResult {
+        name,
+        iters: done,
+        mean_ns: mean,
+        p99_block_ns: Some(p99),
+        ops_per_sec: ops,
+    });
 }
 
 fn io(id: u64, addr: u64) -> AppIo {
@@ -46,14 +98,51 @@ fn io(id: u64, addr: u64) -> AppIo {
     }
 }
 
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+fn write_json(path: &str, smoke: bool, results: &[BenchResult]) {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": 1,\n");
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str("  \"benches\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let p99 = match r.p99_block_ns {
+            Some(p) => format!("\"p99_block_ns\": {p:.1}, "),
+            None => String::new(),
+        };
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
+             {}\"ops_per_sec\": {:.0}}}{}\n",
+            r.name,
+            r.iters,
+            r.mean_ns,
+            p99,
+            r.ops_per_sec,
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("wrote {path}");
+}
+
 fn main() {
-    println!("== micro_core: coordinator hot paths ==");
+    let smoke = env_flag("BENCH_SMOKE");
+    let scale = if smoke { 20 } else { 1 };
+    let iters = |n: u64| (n / scale).max(BLOCKS);
+    println!(
+        "== micro_core: coordinator hot paths{} ==",
+        if smoke { " (smoke mode)" } else { "" }
+    );
+    let mut results: Vec<BenchResult> = Vec::new();
 
     // merge queue push + drain in batches of 16
     {
         let mut q = MergeQueue::new();
         let mut next = 0u64;
-        bench("merge_queue push+drain(16)", 200_000, || {
+        bench(&mut results, "merge_queue_push_drain16", iters(200_000), || {
             for _ in 0..16 {
                 q.push(io(next, next * 4096));
                 next += 1;
@@ -69,7 +158,7 @@ fn main() {
     {
         let lim = BatchLimits::default();
         let mut wr_id = 0u64;
-        bench("plan(hybrid, 32 ios)", 100_000, || {
+        bench(&mut results, "plan_hybrid_32ios", iters(100_000), || {
             let mut ios: Vec<AppIo> = (0..16u64).map(|i| io(i, i * 4096)).collect();
             ios.extend((0..16u64).map(|i| io(16 + i, (1000 + i * 7) << 20)));
             let (chains, st) = plan(BatchMode::Hybrid, &lim, ios, &mut wr_id);
@@ -77,11 +166,71 @@ fn main() {
         });
     }
 
+    // the full engine pipeline: submit → merge → batch → admit → retire.
+    // This is the merge/batch/poll hot path the CI perf trajectory gates.
+    {
+        let mut e = IoEngine::new(
+            BatchMode::Hybrid,
+            BatchLimits::default(),
+            1,
+            4,
+            Some(7 << 20),
+            EngineCosts::free(),
+        );
+        let mut id = 0u64;
+        bench(&mut results, "engine_pipeline_16ios", iters(50_000), || {
+            for _ in 0..16 {
+                e.submit(io(id, (id % 4096) * 4096));
+                id += 1;
+            }
+            let out = e.drain_all(0);
+            let mut retired = 0u64;
+            for chain in out.chains {
+                for wr in chain.wrs {
+                    let wc = Wc {
+                        wr_id: wr.wr_id,
+                        qp: chain.qp,
+                        op: wr.op,
+                        len: wr.len,
+                        app_ios: wr.app_ios,
+                        status: WcStatus::Success,
+                    };
+                    retired += e.on_wc(&wc, 0).retired.len() as u64;
+                }
+            }
+            retired
+        });
+    }
+
+    // poller FSM: one adaptive wake → burst-poll → retry → re-arm cycle
+    {
+        bench(&mut results, "poller_fsm_adaptive_cycle", iters(500_000), || {
+            let mut fsm = PollerFsm::new(PollingMode::Adaptive {
+                batch: 16,
+                max_retry: 4,
+            });
+            let mut got = 0u64;
+            let mut step = fsm.on_wake(0);
+            loop {
+                match step {
+                    PollStep::Poll { max } => {
+                        // first poll returns a burst, then the CQ is empty
+                        let n = if got == 0 { max.min(16) } else { 0 };
+                        got += n as u64;
+                        step = fsm.after_poll(n, 0);
+                    }
+                    PollStep::Rearm => break,
+                }
+            }
+            got
+        });
+    }
+
     // zipfian sampling
     {
         let z = ScrambledZipfian::new(10_000_000, 0.99);
         let mut rng = Pcg32::new(1);
-        bench("scrambled_zipf sample (10M keys)", 2_000_000, || {
+        bench(&mut results, "zipf_sample_10m", iters(2_000_000), || {
             z.sample(&mut rng)
         });
     }
@@ -90,7 +239,7 @@ fn main() {
     {
         let mut h = Hist::new();
         let mut rng = Pcg32::new(2);
-        bench("hist record", 2_000_000, || {
+        bench(&mut results, "hist_record", iters(2_000_000), || {
             let v = rng.gen_range(100, 10_000_000);
             h.record(v);
             h.count()
@@ -104,7 +253,7 @@ fn main() {
         for p in 0..65_536u64 {
             c.access(p, false);
         }
-        bench("clock_cache access (90% hit)", 1_000_000, || {
+        bench(&mut results, "clock_cache_access", iters(1_000_000), || {
             let p = rng.gen_below(72_000);
             match c.access(p, false) {
                 rdmabox::paging::cache::Access::Hit => 1,
@@ -138,16 +287,30 @@ fn main() {
         }
         let cfg = FabricConfig::default();
         let stack = StackConfig::rdmabox(&cfg);
-        let n = 300_000u64;
+        let n = if smoke { 30_000u64 } else { 300_000u64 };
         let t0 = Instant::now();
         let r = run_pipeline(&cfg, &stack, 1, Box::new(Loop { left: n, addr: 0 }));
         let dt = t0.elapsed().as_secs_f64();
+        let ios_per_sec = r.completed_writes as f64 / dt;
         println!(
             "DES end-to-end: {} IOs in {:.2}s = {:.0} sim-IOs/s wall ({} WQEs)",
             r.completed_writes,
             dt,
-            r.completed_writes as f64 / dt,
+            ios_per_sec,
             r.trace.wqes_total()
         );
+        results.push(BenchResult {
+            name: "des_end_to_end",
+            iters: r.completed_writes,
+            mean_ns: 1e9 / ios_per_sec,
+            p99_block_ns: None, // single shot: no tail estimate
+            ops_per_sec: ios_per_sec,
+        });
+    }
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        if !path.is_empty() {
+            write_json(&path, smoke, &results);
+        }
     }
 }

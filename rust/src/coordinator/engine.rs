@@ -39,7 +39,7 @@ use crate::config::FabricConfig;
 use crate::coordinator::batching::{plan, BatchLimits, BatchMode};
 use crate::coordinator::channel::ChannelMap;
 use crate::coordinator::merge_queue::{MergeCheck, MergeQueues};
-use crate::coordinator::node::{NodeMap, ReadRoute};
+use crate::coordinator::node::{NodeMap, NodeState, ReadRoute};
 use crate::coordinator::regulator::Regulator;
 use crate::coordinator::StackConfig;
 use crate::fabric::{AppIo, Dir, NodeId, QpId, Wc, WcStatus, WorkRequest};
@@ -137,6 +137,26 @@ pub struct RetiredIo {
     pub failed_over: bool,
 }
 
+/// Sentinel parent id of engine-internal resync sub-I/Os: they never
+/// retire an application I/O, and backends see it in `completed_subs` /
+/// `failed_subs` only for per-sub resource cleanup.
+pub const RESYNC_PARENT: u64 = u64::MAX;
+
+/// One resync copy advancing from its read stage to its write stage: the
+/// source read `read_sub` completed, and the engine enqueued repair write
+/// `write_sub` to the recovering node. The backend must attach whatever
+/// payload it returned for `read_sub` to `write_sub` before the next
+/// drain posts it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResyncCopy {
+    pub read_sub: u64,
+    pub write_sub: u64,
+    /// The recovering node the repair write targets.
+    pub target: NodeId,
+    pub addr: u64,
+    pub len: u64,
+}
+
 /// Result of handling one work completion.
 #[derive(Debug, Default)]
 pub struct WcOut {
@@ -148,6 +168,9 @@ pub struct WcOut {
     /// `(sub_id, parent_id)` for every sub-I/O that failed *terminally*
     /// (no failover left) — backends use it to release per-sub resources.
     pub failed_subs: Vec<(u64, u64)>,
+    /// Resync copies whose read stage completed in this WC (see
+    /// [`ResyncCopy`]). The caller should drain again to post the writes.
+    pub resync_copies: Vec<ResyncCopy>,
     /// Read sub-I/Os re-queued onto the next alive replica (failover).
     /// The caller should drain again to post them.
     pub requeued: u32,
@@ -167,6 +190,35 @@ pub struct EngineStats {
     /// Completions for a wr_id that was not outstanding (duplicates, or
     /// late deliveries after the WR already retired) — ignored, counted.
     pub duplicate_wcs: u64,
+    /// Missed-write ranges recorded against a non-alive (or diverged)
+    /// replica for later resync.
+    pub missed_ranges: u64,
+    /// Alive replicas demoted to `Resyncing` because a replicated write
+    /// to them failed terminally (they diverged from their peers).
+    pub resync_demotions: u64,
+    /// Resync rounds started (one round = one pass over a node's
+    /// missed-range backlog).
+    pub resync_rounds: u64,
+    /// Resync copies spawned (read-from-peer → write-to-target pairs).
+    pub resync_copies: u64,
+    /// Resync copy stages that failed (no alive source, source read
+    /// exhausted failover, or repair write error) — the range returns to
+    /// the missed backlog.
+    pub resync_copy_failures: u64,
+    /// Nodes promoted back to `Alive` after draining their backlog.
+    pub resyncs_completed: u64,
+}
+
+/// What a placed sub-I/O is doing in the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SubKind {
+    /// Ordinary replica leg of an application I/O.
+    App,
+    /// Resync stage 1: read a missed range from an alive peer, destined
+    /// for the recovering `target`.
+    ResyncRead { target: NodeId },
+    /// Resync stage 2: repair write of the fetched range to `target`.
+    ResyncWrite { target: NodeId },
 }
 
 /// A queued fabric-level sub-I/O (placed mode).
@@ -180,6 +232,129 @@ struct SubIo {
     t_submit: u64,
     /// Bitmask of replica nodes already attempted (failover skips them).
     attempted: u64,
+    /// Node this sub-I/O currently targets.
+    node: NodeId,
+    kind: SubKind,
+}
+
+/// Coalescing set of byte ranges (the per-node missed-write backlog).
+/// Stored as `start → end` (end exclusive); overlapping and adjacent
+/// inserts merge, so replaying the set touches each byte once.
+#[derive(Debug, Default, Clone)]
+struct RangeSet {
+    ranges: std::collections::BTreeMap<u64, u64>,
+}
+
+impl RangeSet {
+    fn insert(&mut self, addr: u64, len: u64) {
+        if len == 0 {
+            return;
+        }
+        let mut start = addr;
+        let mut end = addr + len;
+        if let Some((&s, &e)) = self.ranges.range(..=start).next_back() {
+            if e >= start {
+                start = s;
+                end = end.max(e);
+                self.ranges.remove(&s);
+            }
+        }
+        while let Some((&s, &e)) = self.ranges.range(start..=end).next() {
+            end = end.max(e);
+            self.ranges.remove(&s);
+        }
+        self.ranges.insert(start, end);
+    }
+
+    fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+
+    fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Does any recorded range intersect `[addr, addr + len)`?
+    fn overlaps(&self, addr: u64, len: u64) -> bool {
+        if len == 0 {
+            return false;
+        }
+        match self.ranges.range(..addr + len).next_back() {
+            Some((_, &end)) => end > addr,
+            None => false,
+        }
+    }
+
+    /// Erase `[addr, addr + len)`, splitting entries that straddle it.
+    fn remove(&mut self, addr: u64, len: u64) {
+        if len == 0 {
+            return;
+        }
+        let end = addr + len;
+        let overlapping: Vec<(u64, u64)> = self
+            .ranges
+            .range(..end)
+            .filter(|&(_, &e)| e > addr)
+            .map(|(&s, &e)| (s, e))
+            .collect();
+        for (s, e) in overlapping {
+            self.ranges.remove(&s);
+            if s < addr {
+                self.ranges.insert(s, addr);
+            }
+            if e > end {
+                self.ranges.insert(end, e);
+            }
+        }
+    }
+
+    /// Take every `(addr, len)` range, leaving the set empty.
+    fn drain(&mut self) -> Vec<(u64, u64)> {
+        let out = self.ranges.iter().map(|(&s, &e)| (s, e - s)).collect();
+        self.ranges.clear();
+        out
+    }
+}
+
+/// Per-node resync bookkeeping (the §6 node abstraction's recovery side).
+#[derive(Debug)]
+struct ResyncState {
+    enabled: bool,
+    /// Copies are chunked to this size so a resync transfer can never
+    /// exceed the admission window of a windowed pipeline.
+    max_copy_bytes: u64,
+    /// Writes each non-alive replica missed, per node.
+    missed: Vec<RangeSet>,
+    /// Ranges whose repair copy is currently in flight, per recovering
+    /// node. Spawning drains a range out of `missed`, so source
+    /// selection must consult this set too — a peer whose overlapping
+    /// repair has not landed yet still lacks the data.
+    repairing: Vec<RangeSet>,
+    /// Resync copies currently in flight, per recovering node.
+    outstanding: Vec<u32>,
+    /// A round found no spawnable work (no alive source for anything):
+    /// don't retry until new information arrives (a missed-range record
+    /// or a node coming up).
+    dormant: Vec<bool>,
+    /// A round deferred everything behind in-flight application writes:
+    /// don't re-scan until one of them completes (cleared whenever an
+    /// app write sub resolves), so steady write traffic doesn't pay an
+    /// O(live subs) scan per event.
+    deferred_wait: Vec<bool>,
+}
+
+impl ResyncState {
+    fn disabled(nodes: usize) -> Self {
+        Self {
+            enabled: false,
+            max_copy_bytes: 0,
+            missed: (0..nodes).map(|_| RangeSet::default()).collect(),
+            repairing: (0..nodes).map(|_| RangeSet::default()).collect(),
+            outstanding: vec![0; nodes],
+            dormant: vec![false; nodes],
+            deferred_wait: vec![false; nodes],
+        }
+    }
 }
 
 /// Retirement state of one placed application I/O.
@@ -188,6 +363,13 @@ struct Pending {
     remaining: u32,
     any_ok: bool,
     failed_over: bool,
+    /// Write replicas whose leg failed terminally. Recorded as missed
+    /// (and demoted) only at retirement, and only when the write
+    /// retired `any_ok`: an all-legs-failed write takes the disk path —
+    /// the paging layer's disk bit owns those reads, and recording a
+    /// backlog no alive peer can source would park every replica of
+    /// the stripe in `Resyncing` forever.
+    failed_nodes: Vec<NodeId>,
 }
 
 /// A WR posted to the fabric and not yet completed. The map keyed by this
@@ -221,6 +403,7 @@ pub struct IoEngine {
     pending: FxHashMap<u64, Pending>,
     /// wr_id → posted bytes + post time (idempotency ledger + RTT).
     outstanding: FxHashMap<u64, PostedWr>,
+    resync: ResyncState,
     pub stats: EngineStats,
 }
 
@@ -255,6 +438,7 @@ impl IoEngine {
             subs: FxHashMap::default(),
             pending: FxHashMap::default(),
             outstanding: FxHashMap::default(),
+            resync: ResyncState::disabled(nodes),
             stats: EngineStats::default(),
         }
     }
@@ -281,6 +465,86 @@ impl IoEngine {
         assert!(map.nodes() <= 64, "failover bitmask supports up to 64 nodes");
         self.routing = Routing::Placed(map);
         self
+    }
+
+    /// Enable the epoch-based resync protocol (requires placement and at
+    /// least 2 replicas to be meaningful): a node that comes back up
+    /// enters `Resyncing`, is excluded from routing, and only returns to
+    /// `Alive` once the writes it missed have been replayed from an alive
+    /// peer — through this same merge → batch → admit pipeline, so repair
+    /// traffic is admission-controlled like everything else. Copies are
+    /// chunked to `max_copy_bytes` so a repair transfer can never exceed
+    /// a windowed regulator's admission bound.
+    pub fn with_resync(mut self, max_copy_bytes: u64) -> Self {
+        self.enable_resync(max_copy_bytes);
+        self
+    }
+
+    /// Non-consuming form of [`IoEngine::with_resync`].
+    pub fn enable_resync(&mut self, max_copy_bytes: u64) {
+        assert!(
+            matches!(self.routing, Routing::Placed(_)),
+            "resync requires placed routing (call with_placement first)"
+        );
+        assert!(max_copy_bytes > 0, "resync copy chunk must be non-zero");
+        self.resync.enabled = true;
+        self.resync.max_copy_bytes = max_copy_bytes;
+    }
+
+    pub fn resync_enabled(&self) -> bool {
+        self.resync.enabled
+    }
+
+    /// Lifecycle state of a node (placed mode), `None` in direct mode.
+    pub fn node_state(&self, node: NodeId) -> Option<NodeState> {
+        self.node_map().map(|m| m.state(node))
+    }
+
+    /// Missed-write ranges currently recorded against `node`.
+    pub fn resync_backlog(&self, node: NodeId) -> usize {
+        self.resync.missed[node].len()
+    }
+
+    /// A node went down: exclude it from routing. In-flight verbs to it
+    /// are expected to complete in error (the fabric's job); writes it
+    /// misses from here on are recorded for resync.
+    pub fn on_node_down(&mut self, node: NodeId) {
+        if let Routing::Placed(m) = &mut self.routing {
+            m.set_state(node, NodeState::Dead);
+        }
+    }
+
+    /// A node came back up. Without resync (or with a clean backlog) it
+    /// rejoins as `Alive` immediately; with resync and a missed-write
+    /// backlog it enters `Resyncing` and repair copies are queued into
+    /// the pipeline. The caller should drain afterwards to post them.
+    pub fn on_node_up(&mut self, node: NodeId) {
+        let clean = !self.resync.enabled
+            || (self.resync.missed[node].is_empty() && self.resync.outstanding[node] == 0);
+        let state = if clean {
+            NodeState::Alive
+        } else {
+            NodeState::Resyncing
+        };
+        if let Routing::Placed(m) = &mut self.routing {
+            m.set_state(node, state);
+        } else {
+            return;
+        }
+        if self.resync.enabled {
+            // any node coming up is a potential new copy source
+            self.resync.dormant.fill(false);
+            self.resync.deferred_wait.fill(false);
+            self.kick_resync();
+        }
+    }
+
+    /// Remote span `(addr, len, dir)` of a live (not yet completed)
+    /// sub-I/O. Backends use this to slice per-sub payloads out of merged
+    /// WRs — including engine-internal resync sub-I/Os they never saw at
+    /// submit time.
+    pub fn sub_span(&self, sub_id: u64) -> Option<(u64, u64, Dir)> {
+        self.subs.get(&sub_id).map(|s| (s.addr, s.len, s.dir))
     }
 
     pub fn regulator(&self) -> &Regulator {
@@ -356,6 +620,14 @@ impl IoEngine {
     /// Submit one application I/O into the pipeline (step 1 of the §5.1
     /// protocol: enqueue; the caller then triggers a drain, which is the
     /// merge-check step).
+    ///
+    /// Placed-routing contract: a request is routed — and replicated —
+    /// by the stripe of its *first* byte. Callers own splitting requests
+    /// at stripe boundaries (the paging layer submits 4 KiB pages, the
+    /// chaos workload generator keeps I/Os stripe-local); a request that
+    /// crosses a stripe boundary would land its tail pages on the first
+    /// stripe's replicas while reads of those pages route by their own
+    /// stripe.
     pub fn submit(&mut self, io: AppIo) -> Submitted {
         self.stats.submitted += 1;
         enum Route {
@@ -363,10 +635,30 @@ impl IoEngine {
             Disk,
             Targets(Vec<NodeId>),
         }
+        let mut missed_replicas: Vec<NodeId> = Vec::new();
         let route = match (&self.routing, io.dir) {
             (Routing::Direct, _) => Route::Direct,
             (Routing::Placed(map), Dir::Write) => {
                 let w = map.route_write(io.addr);
+                // replicas skipped because they are dead or resyncing
+                // miss this write: record the range so resync replays it.
+                // Skipped when resync is off (don't tax the hot submit
+                // path), when no replica was actually skipped, and when
+                // the write takes the disk path — the authoritative copy
+                // is then on disk (the paging layer's per-block disk bit
+                // owns those reads), and a backlog no alive peer can
+                // source would only park every replica of the stripe in
+                // `Resyncing` forever.
+                if self.resync.enabled
+                    && !w.disk_fallback
+                    && w.targets.len() < map.replicas()
+                {
+                    for n in map.place(io.addr).replicas {
+                        if !w.targets.contains(&n) {
+                            missed_replicas.push(n);
+                        }
+                    }
+                }
                 if w.disk_fallback {
                     Route::Disk
                 } else {
@@ -378,7 +670,10 @@ impl IoEngine {
                 ReadRoute::DiskFallback => Route::Disk,
             },
         };
-        match route {
+        for n in missed_replicas {
+            self.record_missed(n, io.addr, io.len);
+        }
+        let submitted = match route {
             Route::Direct => {
                 let qp = self.shard_of(io.node, io.addr);
                 self.shards[qp].of(io.dir).push(io);
@@ -401,6 +696,7 @@ impl IoEngine {
                         remaining: targets.len() as u32,
                         any_ok: false,
                         failed_over: false,
+                        failed_nodes: Vec::new(),
                     },
                 );
                 let mut sub_ids = Vec::with_capacity(targets.len());
@@ -414,6 +710,8 @@ impl IoEngine {
                         thread: io.thread,
                         t_submit: io.t_submit,
                         attempted: 1u64 << node,
+                        node,
+                        kind: SubKind::App,
                     };
                     self.subs.insert(sid, sub);
                     self.enqueue(sid, node, &sub);
@@ -424,7 +722,13 @@ impl IoEngine {
                     disk_fallback: false,
                 }
             }
-        }
+        };
+        // kick only after this I/O's subs are registered: a resync round
+        // spawned here must see them as in-flight and defer overlapping
+        // ranges (copying around a write it cannot see would let a stale
+        // copy win the race and promote a diverged node)
+        self.kick_resync();
+        submitted
     }
 
     /// Drain one direction through every shard, bounded by the admission
@@ -565,56 +869,360 @@ impl IoEngine {
             let Some(sub) = self.subs.remove(&sid) else {
                 continue; // duplicate-completion guard
             };
-            if ok {
-                out.completed_subs.push((sid, sub.parent));
-            } else if sub.dir == Dir::Read {
-                // failover: re-queue onto the next alive, untried replica
-                let next = match &self.routing {
-                    Routing::Placed(map) => {
-                        match map.route_read_excluding(sub.addr, sub.attempted) {
-                            ReadRoute::Node(n) => Some(n),
-                            ReadRoute::DiskFallback => None,
-                        }
-                    }
-                    Routing::Direct => unreachable!(),
-                };
-                if let Some(node) = next {
-                    let mut retry = sub;
-                    retry.attempted |= 1u64 << node;
-                    self.subs.insert(sid, retry);
-                    if let Some(p) = self.pending.get_mut(&sub.parent) {
-                        p.failed_over = true;
-                    }
-                    self.enqueue(sid, node, &retry);
-                    out.requeued += 1;
-                    self.stats.requeued += 1;
-                    continue;
+            match sub.kind {
+                SubKind::App => self.on_app_sub(sid, sub, ok, &mut out),
+                SubKind::ResyncRead { target } => {
+                    self.on_resync_read_sub(sid, sub, target, ok, &mut out)
                 }
-            }
-            let Some(p) = self.pending.get_mut(&sub.parent) else {
-                continue;
-            };
-            if ok {
-                p.any_ok = true;
-            } else {
-                out.failed_subs.push((sid, sub.parent));
-            }
-            p.remaining -= 1;
-            if p.remaining == 0 {
-                let done = self.pending.remove(&sub.parent).expect("pending parent");
-                let disk_fallback = !done.any_ok;
-                if disk_fallback {
-                    self.stats.disk_fallbacks += 1;
+                SubKind::ResyncWrite { target } => {
+                    self.on_resync_write_sub(sid, sub, target, ok, &mut out)
                 }
-                self.stats.retired += 1;
-                out.retired.push(RetiredIo {
-                    id: sub.parent,
-                    disk_fallback,
-                    failed_over: done.failed_over,
-                });
             }
         }
+        self.kick_resync();
         out
+    }
+
+    /// Resolve one application replica leg (placed mode).
+    fn on_app_sub(&mut self, sid: u64, sub: SubIo, ok: bool, out: &mut WcOut) {
+        if self.resync.enabled && sub.dir == Dir::Write {
+            // an app write leaving the pipeline may unblock resync
+            // ranges deferred behind it; re-arm only nodes whose backlog
+            // actually overlaps, and let the end-of-on_wc kick re-scan
+            for n in 0..self.resync.deferred_wait.len() {
+                if self.resync.deferred_wait[n]
+                    && self.resync.missed[n].overlaps(sub.addr, sub.len)
+                {
+                    self.resync.deferred_wait[n] = false;
+                }
+            }
+        }
+        if ok {
+            out.completed_subs.push((sid, sub.parent));
+        } else if sub.dir == Dir::Read {
+            // failover: re-queue onto the next alive, untried replica
+            let next = match &self.routing {
+                Routing::Placed(map) => match map.route_read_excluding(sub.addr, sub.attempted) {
+                    ReadRoute::Node(n) => Some(n),
+                    ReadRoute::DiskFallback => None,
+                },
+                Routing::Direct => unreachable!(),
+            };
+            if let Some(node) = next {
+                let mut retry = sub;
+                retry.attempted |= 1u64 << node;
+                retry.node = node;
+                self.subs.insert(sid, retry);
+                if let Some(p) = self.pending.get_mut(&sub.parent) {
+                    p.failed_over = true;
+                }
+                self.enqueue(sid, node, &retry);
+                out.requeued += 1;
+                self.stats.requeued += 1;
+                return;
+            }
+        }
+        let Some(p) = self.pending.get_mut(&sub.parent) else {
+            return;
+        };
+        if ok {
+            p.any_ok = true;
+        } else {
+            if sub.dir == Dir::Write {
+                // this replica diverged; judged at retirement (below)
+                p.failed_nodes.push(sub.node);
+            }
+            out.failed_subs.push((sid, sub.parent));
+        }
+        p.remaining -= 1;
+        if p.remaining == 0 {
+            let done = self.pending.remove(&sub.parent).expect("pending parent");
+            let disk_fallback = !done.any_ok;
+            if disk_fallback {
+                self.stats.disk_fallbacks += 1;
+            } else {
+                // the write is durable on at least one replica: every
+                // replica whose leg failed must be repaired before it
+                // serves reads for this range again (recording demotes
+                // it). Within this same completion, so no later submit
+                // can route a read to the diverged node.
+                for &n in &done.failed_nodes {
+                    self.record_missed(n, sub.addr, sub.len);
+                }
+            }
+            self.stats.retired += 1;
+            out.retired.push(RetiredIo {
+                id: sub.parent,
+                disk_fallback,
+                failed_over: done.failed_over,
+            });
+        }
+    }
+
+    /// Resolve the read stage of a resync copy: on success, enqueue the
+    /// repair write to the recovering node; on error, fail over to the
+    /// next alive source, or return the range to the missed backlog.
+    fn on_resync_read_sub(
+        &mut self,
+        sid: u64,
+        sub: SubIo,
+        target: NodeId,
+        ok: bool,
+        out: &mut WcOut,
+    ) {
+        if ok {
+            let wsid = self.fresh_sub_id();
+            let mut wsub = sub;
+            wsub.dir = Dir::Write;
+            wsub.attempted = 1u64 << target;
+            wsub.node = target;
+            wsub.kind = SubKind::ResyncWrite { target };
+            self.subs.insert(wsid, wsub);
+            self.enqueue(wsid, target, &wsub);
+            out.completed_subs.push((sid, RESYNC_PARENT));
+            out.resync_copies.push(ResyncCopy {
+                read_sub: sid,
+                write_sub: wsid,
+                target,
+                addr: sub.addr,
+                len: sub.len,
+            });
+            return;
+        }
+        let next = self.resync_source(target, sub.addr, sub.len, sub.attempted);
+        if let Some(node) = next {
+            let mut retry = sub;
+            retry.attempted |= 1u64 << node;
+            retry.node = node;
+            self.subs.insert(sid, retry);
+            self.enqueue(sid, node, &retry);
+            out.requeued += 1;
+            self.stats.requeued += 1;
+        } else {
+            // every eligible source failed: the range stays missed until
+            // a new source appears (another node coming up / finishing
+            // its own resync clears the dormant latch)
+            self.stats.resync_copy_failures += 1;
+            self.resync.missed[target].insert(sub.addr, sub.len);
+            self.resync.repairing[target].remove(sub.addr, sub.len);
+            self.resync.outstanding[target] = self.resync.outstanding[target].saturating_sub(1);
+            out.failed_subs.push((sid, RESYNC_PARENT));
+        }
+    }
+
+    /// Resolve the write stage of a resync copy. A failed repair write
+    /// restarts the whole copy from the read stage (the payload is gone
+    /// from the backend), by returning the range to the missed backlog.
+    fn on_resync_write_sub(
+        &mut self,
+        sid: u64,
+        sub: SubIo,
+        target: NodeId,
+        ok: bool,
+        out: &mut WcOut,
+    ) {
+        self.resync.outstanding[target] = self.resync.outstanding[target].saturating_sub(1);
+        self.resync.repairing[target].remove(sub.addr, sub.len);
+        if ok {
+            out.completed_subs.push((sid, RESYNC_PARENT));
+        } else {
+            self.stats.resync_copy_failures += 1;
+            self.resync.missed[target].insert(sub.addr, sub.len);
+            self.resync.dormant[target] = false;
+            out.failed_subs.push((sid, RESYNC_PARENT));
+        }
+    }
+
+    /// Record a write range a replica missed (it was dead/resyncing at
+    /// submit time, or its replica write failed). An alive node acquiring
+    /// a missed range is demoted to `Resyncing` — it diverged, and must
+    /// not serve reads for data it does not hold.
+    fn record_missed(&mut self, node: NodeId, addr: u64, len: u64) {
+        if !self.resync.enabled {
+            return;
+        }
+        match &self.routing {
+            // with a single replica there is no peer to repair from:
+            // the machinery would only blackhole the node
+            Routing::Placed(m) if m.replicas() >= 2 => {}
+            _ => return,
+        }
+        self.resync.missed[node].insert(addr, len);
+        self.resync.dormant[node] = false;
+        self.stats.missed_ranges += 1;
+        if let Routing::Placed(m) = &mut self.routing {
+            if m.state(node) == NodeState::Alive {
+                m.set_state(node, NodeState::Resyncing);
+                self.stats.resync_demotions += 1;
+            }
+        }
+    }
+
+    /// Pick a copy source for resyncing `[addr, addr+len)` onto `target`:
+    /// the first replica of the range's stripe, excluding `target` and
+    /// anything in `attempted`, that is either `Alive` or — crucially —
+    /// `Resyncing` but *not missing any byte of this range itself*. A
+    /// resyncing node's data is valid outside its own missed set (that
+    /// is the protocol's core invariant), and allowing such sources is
+    /// what lets two replicas that demoted each other on disjoint ranges
+    /// repair each other instead of parking forever.
+    fn resync_source(&self, target: NodeId, addr: u64, len: u64, attempted: u64) -> Option<NodeId> {
+        let Routing::Placed(map) = &self.routing else {
+            return None;
+        };
+        let tried = |n: NodeId| n < 64 && attempted & (1u64 << n) != 0;
+        map.place(addr).replicas.into_iter().find(|&n| {
+            n != target
+                && !tried(n)
+                && match map.state(n) {
+                    NodeState::Alive => true,
+                    // valid outside its own backlog — which includes
+                    // ranges whose repair copy is still in flight
+                    NodeState::Resyncing => {
+                        !self.resync.missed[n].overlaps(addr, len)
+                            && !self.resync.repairing[n].overlaps(addr, len)
+                    }
+                    NodeState::Dead => false,
+                }
+        })
+    }
+
+    /// Does any *application write* still in the pipeline overlap this
+    /// range? Resync must not copy a range with writes in flight: the
+    /// source may not have applied them yet, and promoting on a stale
+    /// copy would reintroduce exactly the hole resync exists to close.
+    /// Deferred ranges are retried when those writes complete.
+    fn range_has_inflight_app_writes(&self, addr: u64, len: u64) -> bool {
+        self.subs.values().any(|s| {
+            s.kind == SubKind::App
+                && s.dir == Dir::Write
+                && s.addr < addr + len
+                && addr < s.addr + s.len
+        })
+    }
+
+    /// Advance the resync state machine for every recovering node: start
+    /// a new round when the previous one drained, or promote the node
+    /// back to `Alive` once its backlog is empty. Called after every
+    /// submit / completion, so progress is event-driven and deterministic.
+    fn kick_resync(&mut self) {
+        if !self.resync.enabled {
+            return;
+        }
+        // run to fixpoint: a promotion clears dormant latches, and nodes
+        // scanned *before* the promoted one must be revisited in the
+        // same kick — on a quiescent pipeline no later event would
+        // re-scan them, and they would park despite a source appearing
+        loop {
+            let mut promoted = false;
+            for node in 0..self.channels.nodes() {
+                let state = match &self.routing {
+                    Routing::Placed(m) => m.state(node),
+                    Routing::Direct => return,
+                };
+                if state != NodeState::Resyncing
+                    || self.resync.outstanding[node] > 0
+                    || self.resync.dormant[node]
+                    || self.resync.deferred_wait[node]
+                {
+                    continue;
+                }
+                if self.resync.missed[node].is_empty() {
+                    self.promote(node);
+                    promoted = true;
+                    continue;
+                }
+                let (spawned, deferred) = self.spawn_resync_round(node);
+                if spawned == 0 {
+                    if deferred > 0 {
+                        // everything waits on in-flight app writes:
+                        // re-scan when one completes, not on every event
+                        self.resync.deferred_wait[node] = true;
+                    } else {
+                        // no source for anything: wait for new information
+                        self.resync.dormant[node] = true;
+                    }
+                }
+            }
+            if !promoted {
+                return;
+            }
+        }
+    }
+
+    /// Promote a node whose backlog drained back to `Alive`; it is a new
+    /// copy source, so dormant peers get another chance.
+    fn promote(&mut self, node: NodeId) {
+        debug_assert!(
+            self.resync.repairing[node].is_empty(),
+            "promoting node {node} with repairs still in flight"
+        );
+        if let Routing::Placed(m) = &mut self.routing {
+            m.set_state(node, NodeState::Alive);
+        }
+        self.stats.resyncs_completed += 1;
+        self.resync.dormant.fill(false);
+    }
+
+    /// One pass over a node's missed backlog: queue a chunked
+    /// read-from-peer for every range that has no application writes in
+    /// flight. Returns `(spawned, deferred)` copy counts; ranges without
+    /// an alive source go back to the backlog.
+    fn spawn_resync_round(&mut self, node: NodeId) -> (u32, u32) {
+        let ranges = self.resync.missed[node].drain();
+        // coalesced ranges can cross stripe boundaries (adjacent writes
+        // in neighboring stripes): clamp every copy to its own stripe,
+        // so its source — the stripe's first alive replica — is a node
+        // that actually replicates the whole chunk
+        let stripe = match &self.routing {
+            Routing::Placed(m) => m.stripe_bytes(),
+            Routing::Direct => u64::MAX,
+        };
+        let mut spawned = 0u32;
+        let mut deferred = 0u32;
+        for (addr, len) in ranges {
+            if self.range_has_inflight_app_writes(addr, len) {
+                self.resync.missed[node].insert(addr, len);
+                deferred += 1;
+                continue;
+            }
+            let chunk = self.resync.max_copy_bytes;
+            let mut off = 0u64;
+            while off < len {
+                let caddr = addr + off;
+                let stripe_left = stripe - (caddr % stripe);
+                let clen = chunk.min(len - off).min(stripe_left);
+                let Some(src) = self.resync_source(node, caddr, clen, 0) else {
+                    // no peer can source the rest of this range
+                    self.stats.resync_copy_failures += 1;
+                    self.resync.missed[node].insert(caddr, len - off);
+                    break;
+                };
+                off += clen;
+                let sid = self.fresh_sub_id();
+                let sub = SubIo {
+                    parent: RESYNC_PARENT,
+                    addr: caddr,
+                    len: clen,
+                    dir: Dir::Read,
+                    thread: 0,
+                    t_submit: 0,
+                    attempted: 1u64 << src,
+                    node: src,
+                    kind: SubKind::ResyncRead { target: node },
+                };
+                self.subs.insert(sid, sub);
+                self.enqueue(sid, src, &sub);
+                self.resync.repairing[node].insert(caddr, clen);
+                self.resync.outstanding[node] += 1;
+                self.stats.resync_copies += 1;
+                spawned += 1;
+            }
+        }
+        if spawned > 0 {
+            self.stats.resync_rounds += 1;
+        }
+        (spawned, deferred)
     }
 }
 
@@ -992,6 +1600,362 @@ mod tests {
         assert_eq!(out.cpu_ns, 8 + 3 * 110);
         assert!(out.chains.windows(2).all(|w| w[0].cpu_offset_ns < w[1].cpu_offset_ns));
         assert_eq!(out.chains.last().unwrap().cpu_offset_ns, out.cpu_ns);
+    }
+
+    #[test]
+    fn range_set_coalesces_overlap_and_adjacency() {
+        let mut rs = RangeSet::default();
+        rs.insert(0, 4096);
+        rs.insert(8192, 4096);
+        assert_eq!(rs.len(), 2);
+        rs.insert(4096, 4096); // bridges both
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs.drain(), vec![(0, 12288)]);
+        assert!(rs.is_empty());
+        rs.insert(100, 50);
+        rs.insert(120, 10); // fully contained
+        assert_eq!(rs.drain(), vec![(100, 50)]);
+        rs.insert(0, 10);
+        rs.insert(20, 10);
+        rs.insert(40, 10);
+        rs.insert(5, 40); // swallows all three
+        assert_eq!(rs.drain(), vec![(0, 50)]);
+    }
+
+    /// Complete every WR currently drainable, returning the WRs in post
+    /// order (resync tests need the WR stream, not just retirements).
+    fn complete_all_wrs(e: &mut IoEngine) -> Vec<WorkRequest> {
+        let mut all = Vec::new();
+        loop {
+            let out = e.drain_all(0);
+            if out.chains.is_empty() {
+                break;
+            }
+            for chain in out.chains {
+                for wr in chain.wrs {
+                    e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
+                    all.push(wr);
+                }
+            }
+        }
+        all
+    }
+
+    #[test]
+    fn revive_without_resync_rejoins_immediately() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None).with_placement(map);
+        e.on_node_down(0);
+        assert_eq!(e.node_state(0), Some(NodeState::Dead));
+        e.submit(io(1, Dir::Write, 0, 0));
+        complete_all(&mut e);
+        e.on_node_up(0);
+        // legacy behavior: no resync protocol, straight back to Alive
+        assert_eq!(e.node_state(0), Some(NodeState::Alive));
+        assert_eq!(e.stats.missed_ranges, 0);
+    }
+
+    #[test]
+    fn revived_replica_resyncs_through_the_pipeline_before_serving() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None)
+            .with_placement(map)
+            .with_resync(4 * 4096);
+        e.submit(io(1, Dir::Write, 0, 0));
+        complete_all(&mut e);
+        e.on_node_down(0);
+        // this write lands only on node 1 and is recorded against node 0
+        e.submit(io(2, Dir::Write, 0, 0));
+        complete_all(&mut e);
+        assert_eq!(e.resync_backlog(0), 1);
+        e.on_node_up(0);
+        assert_eq!(
+            e.node_state(0),
+            Some(NodeState::Resyncing),
+            "missed writes: node must not rejoin immediately"
+        );
+        assert_eq!(e.stats.resync_rounds, 1);
+        // reads route around the resyncing replica
+        e.submit(io(3, Dir::Read, 0, 0));
+        let out = e.drain_all(0);
+        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        assert!(
+            wrs.iter().all(|w| w.node == 1),
+            "both the app read and the resync source read go to the peer"
+        );
+        // complete the source reads: the engine stages the repair write
+        let mut copies = Vec::new();
+        for wr in &wrs {
+            let r = e.on_wc(&wc_for(wr, WcStatus::Success), 0);
+            copies.extend(r.resync_copies);
+        }
+        assert_eq!(copies.len(), 1, "one missed range, one repair copy");
+        assert_eq!(copies[0].target, 0);
+        // the repair write drains to node 0 through the normal pipeline
+        let out = e.drain_all(0);
+        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        assert_eq!(wrs.len(), 1);
+        assert_eq!(wrs[0].node, 0);
+        e.on_wc(&wc_for(&wrs[0], WcStatus::Success), 0);
+        assert_eq!(e.node_state(0), Some(NodeState::Alive), "backlog drained");
+        assert_eq!(e.stats.resyncs_completed, 1);
+        assert_eq!(e.resync_backlog(0), 0);
+        // reads prefer the repaired primary again
+        e.submit(io(4, Dir::Read, 0, 0));
+        let wrs = complete_all_wrs(&mut e);
+        assert_eq!(wrs[0].node, 0);
+    }
+
+    #[test]
+    fn failed_replica_write_demotes_and_repairs_the_diverged_node() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None)
+            .with_placement(map)
+            .with_resync(4 * 4096);
+        e.submit(io(1, Dir::Write, 0, 0));
+        let out = e.drain_all(0);
+        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        assert_eq!(wrs.len(), 2, "two replica legs");
+        // node 0's leg fails terminally (e.g. a partial partition): the
+        // write still retires via node 1, but node 0 has diverged
+        let (fail, okay): (Vec<_>, Vec<_>) = wrs.iter().partition(|w| w.node == 0);
+        e.on_wc(&wc_for(fail[0], WcStatus::Error), 0);
+        // divergence is judged at retirement (the write could still end
+        // up all-failed and take the disk path), so not demoted yet
+        assert_eq!(e.node_state(0), Some(NodeState::Alive));
+        let r = e.on_wc(&wc_for(okay[0], WcStatus::Success), 0);
+        assert_eq!(r.retired.len(), 1);
+        assert!(!r.retired[0].disk_fallback, "peer replica satisfied it");
+        assert_eq!(e.node_state(0), Some(NodeState::Resyncing), "demoted");
+        assert_eq!(e.stats.resync_demotions, 1);
+        // repair flows: source read from node 1, repair write to node 0
+        let wrs = complete_all_wrs(&mut e);
+        assert!(!wrs.is_empty(), "repair traffic was queued");
+        assert_eq!(e.node_state(0), Some(NodeState::Alive), "repaired");
+        assert_eq!(e.regulator().in_flight(), 0);
+    }
+
+    #[test]
+    fn all_replica_legs_failing_takes_disk_path_without_parking_nodes() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None)
+            .with_placement(map)
+            .with_resync(4 * 4096);
+        e.submit(io(1, Dir::Write, 0, 0));
+        let out = e.drain_all(0);
+        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        assert_eq!(wrs.len(), 2);
+        // a fault burst kills both legs: the write is not durable on any
+        // replica — it takes the disk path, and neither node may be
+        // demoted or left with a backlog no alive peer can source
+        let mut retired = Vec::new();
+        for wr in &wrs {
+            retired.extend(e.on_wc(&wc_for(wr, WcStatus::Error), 0).retired);
+        }
+        assert_eq!(retired.len(), 1);
+        assert!(retired[0].disk_fallback, "disk owns the data now");
+        assert_eq!(e.node_state(0), Some(NodeState::Alive), "not parked");
+        assert_eq!(e.node_state(1), Some(NodeState::Alive), "not parked");
+        assert_eq!(e.resync_backlog(0) + e.resync_backlog(1), 0);
+        assert_eq!(e.stats.resync_demotions, 0);
+        // the cluster still serves: a later write lands normally
+        e.submit(io(2, Dir::Write, 0, 0));
+        let retired = complete_all(&mut e);
+        assert_eq!(retired.len(), 1);
+        assert!(!retired[0].disk_fallback);
+    }
+
+    #[test]
+    fn mutually_diverged_replicas_repair_each_other() {
+        // Wa's node-1 leg and Wb's node-0 leg fail on *disjoint* ranges:
+        // each node ends up Resyncing while holding exactly the data its
+        // peer misses — they must repair each other, not park forever
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None)
+            .with_placement(map)
+            .with_resync(4 * 4096);
+        e.submit(io(1, Dir::Write, 0, 0));
+        let wa: Vec<WorkRequest> = e.drain_all(0).chains.into_iter().flat_map(|c| c.wrs).collect();
+        e.submit(io(2, Dir::Write, 0, 4096));
+        let wb: Vec<WorkRequest> = e.drain_all(0).chains.into_iter().flat_map(|c| c.wrs).collect();
+        assert_eq!((wa.len(), wb.len()), (2, 2));
+        for wr in &wa {
+            let status = if wr.node == 1 {
+                WcStatus::Error
+            } else {
+                WcStatus::Success
+            };
+            e.on_wc(&wc_for(wr, status), 0);
+        }
+        for wr in &wb {
+            let status = if wr.node == 0 {
+                WcStatus::Error
+            } else {
+                WcStatus::Success
+            };
+            e.on_wc(&wc_for(wr, status), 0);
+        }
+        assert_eq!(e.stats.resync_demotions, 2, "both replicas diverged");
+        // each copy sources the resyncing peer (its miss is disjoint)
+        let _ = complete_all_wrs(&mut e);
+        assert_eq!(e.node_state(0), Some(NodeState::Alive));
+        assert_eq!(e.node_state(1), Some(NodeState::Alive));
+        assert_eq!(e.stats.resyncs_completed, 2);
+        assert_eq!(e.resync_backlog(0) + e.resync_backlog(1), 0);
+    }
+
+    #[test]
+    fn range_set_overlap_queries() {
+        let mut rs = RangeSet::default();
+        rs.insert(4096, 4096);
+        assert!(rs.overlaps(4096, 4096));
+        assert!(rs.overlaps(0, 4097), "one-byte intersection counts");
+        assert!(rs.overlaps(8191, 4096));
+        assert!(!rs.overlaps(0, 4096), "touching is not overlapping");
+        assert!(!rs.overlaps(8192, 4096));
+        assert!(!rs.overlaps(4096, 0));
+    }
+
+    #[test]
+    fn range_set_remove_splits_straddled_entries() {
+        let mut rs = RangeSet::default();
+        rs.insert(0, 100);
+        rs.remove(40, 20); // punch a hole
+        assert_eq!(rs.drain(), vec![(0, 40), (60, 40)]);
+        rs.insert(0, 100);
+        rs.remove(0, 100); // exact erase
+        assert!(rs.is_empty());
+        rs.insert(10, 10);
+        rs.insert(30, 10);
+        rs.remove(0, 50); // swallows both
+        assert!(rs.is_empty());
+        rs.insert(10, 10);
+        rs.remove(15, 100); // right truncation
+        assert_eq!(rs.drain(), vec![(10, 5)]);
+    }
+
+    /// A peer whose own repair copy for a range is still in flight does
+    /// not hold that range yet — it must not be chosen as the copy
+    /// source for another recovering replica (3-replica scenario: both
+    /// non-durable replicas must source the one that has the data).
+    #[test]
+    fn in_flight_repair_target_is_not_a_copy_source() {
+        let map = NodeMap::new(3, 3, 1 << 20);
+        let mut e = engine(3, 1, None)
+            .with_placement(map)
+            .with_resync(4 * 4096);
+        e.submit(io(1, Dir::Write, 0, 0));
+        let out = e.drain_all(0);
+        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        assert_eq!(wrs.len(), 3, "three replica legs");
+        // legs to nodes 0 and 1 fail; only node 2's copy is durable
+        for wr in wrs.iter().filter(|w| w.node != 2) {
+            e.on_wc(&wc_for(wr, WcStatus::Error), 0);
+        }
+        let durable = wrs.iter().find(|w| w.node == 2).expect("leg to node 2");
+        e.on_wc(&wc_for(durable, WcStatus::Success), 0);
+        assert_eq!(e.node_state(0), Some(NodeState::Resyncing));
+        assert_eq!(e.node_state(1), Some(NodeState::Resyncing));
+        // both repair copies were spawned in the same kick; the second
+        // must skip the first's still-in-flight target and also read
+        // from node 2 — the only replica that actually holds the data
+        let out = e.drain_all(0);
+        let reads: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        assert!(!reads.is_empty());
+        assert!(
+            reads.iter().all(|w| w.node == 2),
+            "every source read must hit the durable replica: {reads:?}"
+        );
+        for wr in &reads {
+            e.on_wc(&wc_for(wr, WcStatus::Success), 0);
+        }
+        let _ = complete_all_wrs(&mut e);
+        assert_eq!(e.node_state(0), Some(NodeState::Alive));
+        assert_eq!(e.node_state(1), Some(NodeState::Alive));
+        assert_eq!(e.stats.resyncs_completed, 2);
+    }
+
+    #[test]
+    fn resync_defers_ranges_with_app_writes_in_flight() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None)
+            .with_placement(map)
+            .with_resync(4 * 4096);
+        e.on_node_down(0);
+        e.submit(io(1, Dir::Write, 0, 0));
+        // the write's sub to node 1 is still queued/in flight: a resync
+        // copy now could read pre-write data from the source
+        e.on_node_up(0);
+        assert_eq!(e.node_state(0), Some(NodeState::Resyncing));
+        assert_eq!(
+            e.stats.resync_copies, 0,
+            "copy must wait for the in-flight write"
+        );
+        assert_eq!(e.resync_backlog(0), 1, "range stays in the backlog");
+        // once the write completes, the copy is spawned and repairs
+        let wrs = complete_all_wrs(&mut e);
+        assert!(wrs.len() >= 3, "app write + source read + repair write");
+        assert_eq!(e.node_state(0), Some(NodeState::Alive));
+        assert!(e.stats.resync_copies >= 1);
+    }
+
+    #[test]
+    fn resync_copies_are_chunked_to_the_admission_window() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let window = 4 * 4096u64;
+        let mut e = engine(2, 1, Some(window))
+            .with_placement(map)
+            .with_resync(window);
+        e.on_node_down(0);
+        // a large missed range: 16 pages, window is 4
+        let mut big = io(1, Dir::Write, 0, 0);
+        big.len = 16 * 4096;
+        e.submit(big);
+        complete_all(&mut e);
+        e.on_node_up(0);
+        // drive to quiescence, asserting the window bound throughout
+        loop {
+            let out = e.drain_all(0);
+            assert!(
+                e.regulator().in_flight() <= window,
+                "resync overshot the window"
+            );
+            if out.chains.is_empty() {
+                break;
+            }
+            for chain in out.chains {
+                for wr in chain.wrs {
+                    assert!(wr.len <= window);
+                    e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
+                }
+            }
+        }
+        assert_eq!(e.node_state(0), Some(NodeState::Alive));
+        assert!(
+            e.stats.resync_copies >= 4,
+            "16-page range split into window-sized copies: {}",
+            e.stats.resync_copies
+        );
+    }
+
+    #[test]
+    fn resync_with_no_alive_source_parks_the_node_without_livelock() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None)
+            .with_placement(map)
+            .with_resync(4 * 4096);
+        e.on_node_down(0);
+        e.submit(io(1, Dir::Write, 0, 0));
+        complete_all(&mut e);
+        e.on_node_down(1); // the only copy source dies
+        e.on_node_up(0);
+        assert_eq!(e.node_state(0), Some(NodeState::Resyncing));
+        assert_eq!(e.queued_ios(), 0, "no copy could be spawned");
+        assert!(e.resync_backlog(0) > 0, "backlog preserved");
+        // the source coming back re-arms the protocol
+        e.on_node_up(1);
+        let _ = complete_all_wrs(&mut e);
+        assert_eq!(e.node_state(0), Some(NodeState::Alive));
     }
 
     #[test]

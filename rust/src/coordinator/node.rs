@@ -7,6 +7,26 @@
 
 use crate::fabric::NodeId;
 
+/// Lifecycle of a remote node in the placement map.
+///
+/// `Resyncing` is the epoch-based recovery state: the node is reachable
+/// (its QPs complete verbs) but it missed writes while it was `Dead` (or
+/// while a write replica-copy to it failed), so it is excluded from *both*
+/// read and write routing until the engine's resync protocol has replayed
+/// the missed ranges from an alive peer. Only then does it return to
+/// `Alive`. Without this state a revived replica would serve stale data
+/// for every block written during its downtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Serving reads and receiving replicated writes.
+    Alive,
+    /// Down: routing skips it, in-flight verbs complete in error.
+    Dead,
+    /// Up but behind: receives only resync repair writes until the
+    /// missed-write backlog has been replayed.
+    Resyncing,
+}
+
 /// Routing decision for a read: the first alive replica, or the explicit
 /// disk-fallback signal the paging layer acts on when every replica of the
 /// block has failed (paper §7.1: "disk access occurs only when all
@@ -39,7 +59,7 @@ pub struct NodeMap {
     nodes: usize,
     replicas: usize,
     stripe_bytes: u64,
-    alive: Vec<bool>,
+    states: Vec<NodeState>,
 }
 
 impl NodeMap {
@@ -51,7 +71,7 @@ impl NodeMap {
             nodes,
             replicas,
             stripe_bytes,
-            alive: vec![true; nodes],
+            states: vec![NodeState::Alive; nodes],
         }
     }
 
@@ -63,34 +83,68 @@ impl NodeMap {
         self.replicas
     }
 
+    pub fn stripe_bytes(&self) -> u64 {
+        self.stripe_bytes
+    }
+
     /// Mark a node failed/recovered (failure injection, live failover).
+    /// `alive = true` promotes straight to [`NodeState::Alive`] — callers
+    /// that want the resync protocol go through the engine's
+    /// `on_node_up`, which decides between `Alive` and `Resyncing`.
     ///
     /// # Panics
     /// Panics with a descriptive message if `node` is out of range — a
     /// caller naming a node that does not exist is a configuration bug,
     /// not a runtime condition to paper over.
     pub fn set_alive(&mut self, node: NodeId, alive: bool) {
+        self.set_state(
+            node,
+            if alive {
+                NodeState::Alive
+            } else {
+                NodeState::Dead
+            },
+        );
+    }
+
+    /// Set the full lifecycle state (resync protocol).
+    ///
+    /// # Panics
+    /// Panics with a descriptive message if `node` is out of range.
+    pub fn set_state(&mut self, node: NodeId, state: NodeState) {
         assert!(
             node < self.nodes,
-            "NodeMap::set_alive: node {node} out of range (cluster has {} nodes)",
+            "NodeMap::set_state: node {node} out of range (cluster has {} nodes)",
             self.nodes
         );
-        self.alive[node] = alive;
+        self.states[node] = state;
     }
 
     /// # Panics
     /// Panics with a descriptive message if `node` is out of range.
-    pub fn is_alive(&self, node: NodeId) -> bool {
+    pub fn state(&self, node: NodeId) -> NodeState {
         assert!(
             node < self.nodes,
-            "NodeMap::is_alive: node {node} out of range (cluster has {} nodes)",
+            "NodeMap::state: node {node} out of range (cluster has {} nodes)",
             self.nodes
         );
-        self.alive[node]
+        self.states[node]
+    }
+
+    /// `true` iff the node is fully [`NodeState::Alive`] — a `Resyncing`
+    /// node is *not* alive for routing purposes (it may hold stale data).
+    ///
+    /// # Panics
+    /// Panics with a descriptive message if `node` is out of range.
+    pub fn is_alive(&self, node: NodeId) -> bool {
+        self.state(node) == NodeState::Alive
     }
 
     pub fn alive_count(&self) -> usize {
-        self.alive.iter().filter(|a| **a).count()
+        self.states
+            .iter()
+            .filter(|s| **s == NodeState::Alive)
+            .count()
     }
 
     /// Placement of the block containing `addr`. Replicas are consecutive
@@ -111,16 +165,21 @@ impl NodeMap {
 
     /// Read path: first *alive* replica, else None (→ disk fallback).
     pub fn read_target(&self, addr: u64) -> Option<NodeId> {
-        self.place(addr).replicas.into_iter().find(|&n| self.alive[n])
+        self.place(addr)
+            .replicas
+            .into_iter()
+            .find(|&n| self.is_alive(n))
     }
 
-    /// Write path: all alive replicas (dead ones are skipped; the paging
-    /// layer counts the block as disk-backed if none are alive).
+    /// Write path: all alive replicas. Dead *and* resyncing replicas are
+    /// skipped — a resyncing node receives only repair writes, and every
+    /// skipped replica is recorded by the engine as a missed range so the
+    /// resync protocol replays it before the node serves reads again.
     pub fn write_targets(&self, addr: u64) -> Vec<NodeId> {
         self.place(addr)
             .replicas
             .into_iter()
-            .filter(|&n| self.alive[n])
+            .filter(|&n| self.is_alive(n))
             .collect()
     }
 
@@ -138,7 +197,10 @@ impl NodeMap {
     pub fn route_read_excluding(&self, addr: u64, attempted: u64) -> ReadRoute {
         let tried = |n: NodeId| n < 64 && attempted & (1u64 << n) != 0;
         let replicas = self.place(addr).replicas;
-        match replicas.into_iter().find(|&n| self.alive[n] && !tried(n)) {
+        match replicas
+            .into_iter()
+            .find(|&n| self.is_alive(n) && !tried(n))
+        {
             Some(n) => ReadRoute::Node(n),
             None => ReadRoute::DiskFallback,
         }
@@ -238,6 +300,38 @@ mod tests {
         m.set_alive(1, true);
         assert_eq!(m.route_read_excluding(0, 0b011), ReadRoute::DiskFallback);
         assert_eq!(m.route_read_excluding(0, 0b001), ReadRoute::Node(1));
+    }
+
+    #[test]
+    fn resyncing_is_excluded_from_both_read_and_write_routing() {
+        let mut m = NodeMap::new(3, 2, 4096);
+        // stripe 0 replicas are [0, 1]
+        m.set_state(0, NodeState::Resyncing);
+        assert!(!m.is_alive(0), "resyncing is not alive for routing");
+        assert_eq!(m.state(0), NodeState::Resyncing);
+        assert_eq!(m.route_read(0), ReadRoute::Node(1));
+        assert_eq!(m.write_targets(0), vec![1], "repair writes only");
+        assert_eq!(m.alive_count(), 2);
+        m.set_state(0, NodeState::Alive);
+        assert_eq!(m.route_read(0), ReadRoute::Node(0));
+    }
+
+    #[test]
+    fn set_alive_maps_onto_the_state_machine() {
+        let mut m = NodeMap::new(2, 1, 4096);
+        m.set_alive(0, false);
+        assert_eq!(m.state(0), NodeState::Dead);
+        m.set_alive(0, true);
+        assert_eq!(m.state(0), NodeState::Alive);
+    }
+
+    #[test]
+    fn all_replicas_resyncing_surfaces_disk_fallback() {
+        let mut m = NodeMap::new(2, 2, 4096);
+        m.set_state(0, NodeState::Resyncing);
+        m.set_state(1, NodeState::Resyncing);
+        assert_eq!(m.route_read(0), ReadRoute::DiskFallback);
+        assert!(m.route_write(0).disk_fallback);
     }
 
     #[test]

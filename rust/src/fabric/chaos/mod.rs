@@ -16,25 +16,80 @@
 //! top of it) a regression suite rather than a flake generator. This is
 //! the template every future backend must pass: production policy code
 //! runs unmodified; only the completion schedule is hostile.
+//!
+//! **The fabric carries data.** Each node owns a page store of
+//! [`PageStamp`]s: every write carries a deterministic content
+//! fingerprint (a per-page monotone version plus a version-derived
+//! fingerprint), applied to the serving node's store on delivery; every
+//! read's completion returns the stamps the serving replica actually
+//! holds. A client-side model tracks, per page, the highest version
+//! whose write has *retired* — so a replica serving an older version to
+//! a later read is a **stale read**, counted in
+//! [`ChaosStats::stale_reads`] and failed by the scenario runner. This
+//! is what makes unresynchronized node revival (and silent replica
+//! divergence under partial partitions) assertable instead of
+//! invisible; enable the engine's repair protocol with
+//! [`ChaosFabric::with_resync`].
 
 pub mod plan;
 pub mod scenario;
 
-pub use plan::{FaultPlan, NodeEvent, QpStall};
+pub use plan::{FaultPlan, NodeEvent, Partition, QpStall};
 pub use scenario::{replay_command, run_scenario, Scenario, ScenarioReport};
 
 use std::cmp::{Ordering, Reverse};
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 
 use crate::coordinator::batching::{BatchLimits, BatchMode};
 use crate::coordinator::engine::{EngineCosts, IoEngine, RetiredIo, Submitted, SHARD_REGION_SHIFT};
-use crate::coordinator::node::NodeMap;
-use crate::fabric::{AppIo, Dir, NodeId, QpId, Wc, WcStatus, WorkRequest};
+use crate::coordinator::node::{NodeMap, NodeState};
+use crate::fabric::{AppIo, Dir, NodeId, OpKind, QpId, Wc, WcStatus, WorkRequest};
+use crate::util::fxhash::{FxBuildHasher, FxHashMap};
 use crate::util::rng::Pcg32;
 
 /// Replication stripe size (mirrors the loopback fabric: one 1 MiB shard
 /// region per stripe, so placement and QP sharding line up).
 pub const STRIPE_BYTES: u64 = 1 << SHARD_REGION_SHIFT;
+
+/// Page granularity of the data model.
+pub const PAGE_BYTES: u64 = 4096;
+
+/// Resync copy chunk used by [`ChaosFabric::with_resync`]: equal to the
+/// smallest admission window the scenario generator produces, so repair
+/// traffic can never force the window's oversized-head escape hatch.
+pub const RESYNC_CHUNK_BYTES: u64 = 4 * PAGE_BYTES;
+
+type PageSet = HashSet<u64, FxBuildHasher>;
+
+/// What one page of one replica holds: a monotone per-page version and
+/// the deterministic content fingerprint derived from it (the stand-in
+/// for the actual bytes — two stores agree on a page iff they hold the
+/// same stamp).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageStamp {
+    /// Page index (`addr / PAGE_BYTES`).
+    pub page: u64,
+    /// 0 = never written.
+    pub version: u64,
+    pub fp: u64,
+}
+
+/// Deterministic content fingerprint of (page, version) — what the
+/// "bytes" of that write would hash to.
+pub fn stamp_fp(page: u64, version: u64) -> u64 {
+    let mut x = page
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(version.rotate_left(17) ^ 0xC4A0_5D47_A11C_E5EB);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn pages_of(addr: u64, len: u64) -> std::ops::RangeInclusive<u64> {
+    let first = addr / PAGE_BYTES;
+    let last = (addr + len.max(1) - 1) / PAGE_BYTES;
+    first..=last
+}
 
 /// Base completion latency of a WR in virtual ns.
 const LAT_BASE_NS: u64 = 1_000;
@@ -97,6 +152,8 @@ pub struct ChaosStats {
     pub injected_errors: u64,
     /// Error completions caused by the target node being dead at delivery.
     pub dead_node_errors: u64,
+    /// Error completions caused by a partial-partition window.
+    pub partitioned_wcs: u64,
     pub duplicates_delivered: u64,
     pub reordered_wcs: u64,
     pub stalled_wcs: u64,
@@ -104,6 +161,11 @@ pub struct ChaosStats {
     pub retired: u64,
     pub disk_fallbacks: u64,
     pub failovers: u64,
+    /// Successful reads that returned a page version older than the
+    /// highest version already retired for that page at read-submit time
+    /// — the replica served data it does not hold. The one defect the
+    /// completion-level invariants cannot see; the payload model can.
+    pub stale_reads: u64,
 }
 
 /// The deterministic fault-injecting fabric: drives a placed [`IoEngine`]
@@ -116,6 +178,28 @@ pub struct ChaosFabric {
     now_ns: u64,
     events: BinaryHeap<Reverse<Event>>,
     next_seq: u64,
+    /// Per-node page store: what each replica actually holds.
+    stores: Vec<FxHashMap<u64, PageStamp>>,
+    /// Client-side monotone version counter per page (bumped at submit).
+    versions: FxHashMap<u64, u64>,
+    /// Client-side floor: highest version whose write has retired, per
+    /// page — the staleness oracle.
+    floor: FxHashMap<u64, u64>,
+    /// Pages whose latest retired write took the disk path (all replicas
+    /// down/failed): remote stores are allowed to be behind for these —
+    /// in the paper's design the paging layer's per-block disk bit sends
+    /// such reads to disk, which is outside this fabric.
+    disk_pages: PageSet,
+    /// Write sub-I/O id → stamps it carries (applied on delivery).
+    write_stamps: FxHashMap<u64, Vec<PageStamp>>,
+    /// Application write id → its stamps (floor update at retirement).
+    parent_stamps: FxHashMap<u64, Vec<PageStamp>>,
+    /// Read sub-I/O id → per-page floor snapshot taken at submit.
+    read_floor: FxHashMap<u64, Vec<(u64, u64)>>,
+    /// Read sub-I/O id → stamps served by its last successful delivery.
+    served: FxHashMap<u64, Vec<PageStamp>>,
+    /// Detail of the first stale read (for failure messages).
+    pub first_stale: Option<String>,
     pub stats: ChaosStats,
 }
 
@@ -150,12 +234,30 @@ impl ChaosFabric {
             now_ns: 0,
             events: BinaryHeap::new(),
             next_seq: 0,
+            stores: (0..nodes).map(|_| FxHashMap::default()).collect(),
+            versions: FxHashMap::default(),
+            floor: FxHashMap::default(),
+            disk_pages: PageSet::default(),
+            write_stamps: FxHashMap::default(),
+            parent_stamps: FxHashMap::default(),
+            read_floor: FxHashMap::default(),
+            served: FxHashMap::default(),
+            first_stale: None,
             stats: ChaosStats::default(),
         };
         for ev in node_events {
             fab.schedule_node_event(ev.node, ev.up, ev.at_ns);
         }
         fab
+    }
+
+    /// Enable the engine's epoch-based resync protocol: revived (or
+    /// diverged) replicas re-enter in `Resyncing` state and are repaired
+    /// through the normal merge → batch → admit pipeline before they
+    /// serve reads again. Copies are chunked to [`RESYNC_CHUNK_BYTES`].
+    pub fn with_resync(mut self) -> Self {
+        self.engine.enable_resync(RESYNC_CHUNK_BYTES);
+        self
     }
 
     pub fn now(&self) -> u64 {
@@ -186,6 +288,10 @@ impl ChaosFabric {
     /// Submit one application I/O at the current virtual time and drain
     /// the pipeline. The returned routing outcome surfaces the
     /// disk-fallback signal when every replica of `addr` is already dead.
+    ///
+    /// Writes mint fresh [`PageStamp`]s (monotone version + fingerprint)
+    /// for every page they cover; reads snapshot the per-page floor so
+    /// their eventual completion can be checked for staleness.
     pub fn submit(&mut self, id: u64, dir: Dir, addr: u64, len: u64) -> Submitted {
         let io = AppIo {
             id,
@@ -196,7 +302,54 @@ impl ChaosFabric {
             thread: 0,
             t_submit: self.now_ns,
         };
+        let stamps: Vec<PageStamp> = match dir {
+            Dir::Write => pages_of(addr, len)
+                .map(|page| {
+                    let v = self.versions.entry(page).or_insert(0);
+                    *v += 1;
+                    PageStamp {
+                        page,
+                        version: *v,
+                        fp: stamp_fp(page, *v),
+                    }
+                })
+                .collect(),
+            Dir::Read => Vec::new(),
+        };
         let sub = self.engine.submit(io);
+        match dir {
+            Dir::Write => {
+                if sub.disk_fallback {
+                    // latest data for these pages lives on disk: remote
+                    // stores are allowed to lag until a later remote write
+                    for st in &stamps {
+                        self.disk_pages.insert(st.page);
+                    }
+                } else {
+                    for sid in &sub.sub_ids {
+                        self.write_stamps.insert(*sid, stamps.clone());
+                    }
+                    self.parent_stamps.insert(id, stamps);
+                }
+            }
+            Dir::Read => {
+                if !sub.disk_fallback {
+                    let floors: Vec<(u64, u64)> = pages_of(addr, len)
+                        .map(|page| {
+                            let fv = if self.disk_pages.contains(&page) {
+                                0 // disk-backed: remote may legitimately lag
+                            } else {
+                                self.floor.get(&page).copied().unwrap_or(0)
+                            };
+                            (page, fv)
+                        })
+                        .collect();
+                    for sid in &sub.sub_ids {
+                        self.read_floor.insert(*sid, floors.clone());
+                    }
+                }
+            }
+        }
         self.pump();
         sub
     }
@@ -263,14 +416,21 @@ impl ChaosFabric {
         match ev.kind {
             EventKind::Node { node, up } => {
                 self.stats.node_transitions += 1;
-                self.engine
-                    .node_map_mut()
-                    .expect("chaos engine is placed")
-                    .set_alive(node, up);
+                // the engine owns the lifecycle decision: up means Alive
+                // without resync, Resyncing (with repair copies queued)
+                // when resync is on and the node missed writes
+                if up {
+                    self.engine.on_node_up(node);
+                } else {
+                    self.engine.on_node_down(node);
+                }
             }
             EventKind::Deliver(f) => {
-                let alive = self.engine.node_map().expect("placed").is_alive(f.node);
-                let status = if f.inject_error || !alive {
+                // a Resyncing node is up for the fabric (its QPs answer);
+                // it is the *routing* layers that must avoid it
+                let up = self.engine.node_map().expect("placed").state(f.node) != NodeState::Dead;
+                let partitioned = self.plan.partitioned(f.node, self.now_ns);
+                let status = if f.inject_error || !up || partitioned {
                     WcStatus::Error
                 } else {
                     WcStatus::Success
@@ -279,10 +439,17 @@ impl ChaosFabric {
                     self.stats.duplicates_delivered += 1;
                 } else if f.inject_error {
                     self.stats.injected_errors += 1;
-                } else if !alive {
+                } else if !up {
                     self.stats.dead_node_errors += 1;
+                } else if partitioned {
+                    self.stats.partitioned_wcs += 1;
                 }
                 self.stats.delivered_wcs += 1;
+                if status == WcStatus::Success {
+                    // move the "bytes": writes land their stamps in the
+                    // node's store, reads serve whatever the store holds
+                    self.move_payloads(f.node, &f.wr);
+                }
                 let wc = Wc {
                     wr_id: f.wr.wr_id,
                     qp: f.qp,
@@ -293,11 +460,23 @@ impl ChaosFabric {
                 };
                 let out = self.engine.on_wc(&wc, self.now_ns);
                 self.stats.failovers += u64::from(out.requeued);
+                // repair writes inherit the stamps their source read served
+                for c in &out.resync_copies {
+                    if let Some(stamps) = self.served.remove(&c.read_sub) {
+                        self.write_stamps.insert(c.write_sub, stamps);
+                    }
+                }
                 for r in &out.retired {
                     self.stats.retired += 1;
                     if r.disk_fallback {
                         self.stats.disk_fallbacks += 1;
                     }
+                    self.note_retired(r, &out.completed_subs);
+                }
+                for (sid, _) in out.completed_subs.iter().chain(out.failed_subs.iter()) {
+                    self.write_stamps.remove(sid);
+                    self.served.remove(sid);
+                    self.read_floor.remove(sid);
                 }
                 retired = out.retired;
             }
@@ -305,6 +484,103 @@ impl ChaosFabric {
         // failover requeues and freed window capacity both need a drain
         self.pump();
         Some(retired)
+    }
+
+    /// The data plane of a successful delivery: apply write stamps to the
+    /// serving node's store (newest version wins — an idempotent model of
+    /// page content, so duplicate/reordered deliveries cannot corrupt
+    /// it), and record what the store holds for each read sub-I/O.
+    fn move_payloads(&mut self, node: NodeId, wr: &WorkRequest) {
+        match wr.op {
+            OpKind::Write | OpKind::Send => {
+                for sid in &wr.app_ios {
+                    let Some(stamps) = self.write_stamps.get(sid) else {
+                        continue; // late duplicate: already cleaned up
+                    };
+                    for st in stamps {
+                        let e = self.stores[node].entry(st.page).or_insert(*st);
+                        if st.version > e.version {
+                            *e = *st;
+                        }
+                    }
+                }
+            }
+            OpKind::Read => {
+                for sid in &wr.app_ios {
+                    // sub still live in the engine ⇒ this is its first
+                    // completion; a merged WR is sliced per sub-span
+                    let Some((addr, len, _)) = self.engine.sub_span(*sid) else {
+                        continue;
+                    };
+                    let stamps: Vec<PageStamp> = pages_of(addr, len)
+                        .map(|page| {
+                            self.stores[node].get(&page).copied().unwrap_or_else(|| {
+                                PageStamp {
+                                    page,
+                                    version: 0,
+                                    fp: stamp_fp(page, 0),
+                                }
+                            })
+                        })
+                        .collect();
+                    self.served.insert(*sid, stamps);
+                }
+            }
+        }
+    }
+
+    /// Model bookkeeping when an application I/O retires: writes raise
+    /// the per-page floor (or mark the page disk-backed when every
+    /// replica failed); successful reads are checked against the floor
+    /// snapshot taken at their submit — serving an older version is a
+    /// stale read.
+    fn note_retired(&mut self, r: &RetiredIo, completed_subs: &[(u64, u64)]) {
+        if let Some(stamps) = self.parent_stamps.remove(&r.id) {
+            // a write retired
+            if r.disk_fallback {
+                for st in &stamps {
+                    self.disk_pages.insert(st.page);
+                }
+            } else {
+                for st in &stamps {
+                    let f = self.floor.entry(st.page).or_insert(0);
+                    if st.version > *f {
+                        *f = st.version;
+                    }
+                    self.disk_pages.remove(&st.page);
+                }
+            }
+            return;
+        }
+        // a read retired; disk fallback means no replica served it
+        if r.disk_fallback {
+            return;
+        }
+        let Some(&(sid, _)) = completed_subs.iter().find(|&&(_, parent)| parent == r.id) else {
+            return;
+        };
+        let (Some(served), Some(floors)) = (self.served.get(&sid), self.read_floor.get(&sid))
+        else {
+            return;
+        };
+        for (st, &(page, floor_v)) in served.iter().zip(floors.iter()) {
+            debug_assert_eq!(st.page, page, "served stamps misaligned with floor");
+            debug_assert_eq!(
+                st.fp,
+                stamp_fp(st.page, st.version),
+                "fingerprint does not match its version: store corrupted"
+            );
+            if st.version < floor_v {
+                self.stats.stale_reads += 1;
+                if self.first_stale.is_none() {
+                    self.first_stale = Some(format!(
+                        "io {} page {:#x}: served version {} (fp {:#018x}) \
+                         below retired floor {}",
+                        r.id, st.page, st.version, st.fp, floor_v
+                    ));
+                }
+            }
+        }
     }
 
     /// Run until no events remain, bounded by `max_steps` (livelock
@@ -421,6 +697,97 @@ mod tests {
         assert_eq!(retired.len() as u64, n);
         assert!(fab.stats.stalled_wcs > 0, "the stall actually bit");
         assert!(fab.now() >= 200_000, "nothing completed in the stall");
+    }
+
+    #[test]
+    fn quiet_plan_reads_serve_the_retired_versions() {
+        let mut fab = ChaosFabric::new(23, 2, 1, 2, None, FaultPlan::none());
+        fab.submit(1, Dir::Write, 0, 4096);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.submit(2, Dir::Write, 0, 4096); // second version of page 0
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.submit(3, Dir::Read, 0, 4096);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(fab.stats.stale_reads, 0);
+        assert!(fab.first_stale.is_none());
+    }
+
+    /// The hole the completion-level invariants cannot see: a replica
+    /// dies, misses a write, revives without resync, and serves the old
+    /// version — the payload model catches it.
+    #[test]
+    fn unresynced_revival_serves_stale_and_is_detected() {
+        // 2 nodes, 2 replicas: stripe 0 lives on {0, 1}, primary 0
+        let mut fab = ChaosFabric::new(0xA5, 2, 1, 2, None, FaultPlan::none());
+        fab.submit(1, Dir::Write, 0, 4096);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.schedule_node_event(0, false, fab.now() + 1);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        // version 2 of page 0 retires on the surviving replica only
+        fab.submit(2, Dir::Write, 0, 4096);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.schedule_node_event(0, true, fab.now() + 1);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        // the revived primary serves the read — with version 1
+        fab.submit(3, Dir::Read, 0, 4096);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        assert!(fab.stats.stale_reads > 0, "stale read must be detected");
+        let detail = fab.first_stale.as_deref().expect("stale detail");
+        assert!(detail.contains("below retired floor"), "{detail}");
+    }
+
+    /// Same schedule with resync enabled: the revived node re-enters in
+    /// `Resyncing`, the engine replays the missed write from the peer,
+    /// and no stale data is ever served — even after the peer dies and
+    /// the repaired node is the only replica left.
+    #[test]
+    fn resync_gates_revival_and_repairs_the_replica() {
+        let mut fab = ChaosFabric::new(0xA5, 2, 1, 2, None, FaultPlan::none()).with_resync();
+        fab.submit(1, Dir::Write, 0, 4096);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.schedule_node_event(0, false, fab.now() + 1);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.submit(2, Dir::Write, 0, 4096);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.schedule_node_event(0, true, fab.now() + 1);
+        // run_to_idle drives the resync copies to completion
+        fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(fab.engine().node_state(0), Some(NodeState::Alive));
+        assert!(fab.engine().stats.resyncs_completed >= 1);
+        fab.submit(3, Dir::Read, 0, 4096);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(fab.stats.stale_reads, 0, "resync prevented the stale read");
+        // the repaired replica now carries the data alone
+        fab.schedule_node_event(1, false, fab.now() + 1);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        let sub = fab.submit(4, Dir::Read, 0, 4096);
+        assert!(!sub.disk_fallback, "node 0 is alive and repaired");
+        let retired = fab.run_to_idle(STEPS).expect("quiescent");
+        assert!(retired.iter().all(|r| !r.disk_fallback));
+        assert_eq!(fab.stats.stale_reads, 0);
+    }
+
+    /// A partial partition diverges a replica without killing it: the
+    /// failed replica write demotes the node, resync repairs it, and no
+    /// read ever observes the divergence.
+    #[test]
+    fn partition_divergence_is_demoted_and_repaired() {
+        let plan = FaultPlan::none().partition(0, 0, 50_000);
+        let mut fab = ChaosFabric::new(29, 2, 1, 2, None, plan).with_resync();
+        // writes during the partition: node 0's legs all error
+        for i in 0..8u64 {
+            fab.submit(i, Dir::Write, i * 4096, 4096);
+        }
+        fab.run_to_idle(STEPS).expect("quiescent");
+        assert!(fab.stats.partitioned_wcs > 0, "partition never bit");
+        assert!(fab.engine().stats.resync_demotions >= 1, "diverged replica demoted");
+        // after the window, repair completes and reads are fresh
+        for i in 0..8u64 {
+            fab.submit(100 + i, Dir::Read, i * 4096, 4096);
+        }
+        fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(fab.stats.stale_reads, 0, "demotion + resync hid the divergence");
+        assert_eq!(fab.engine().regulator().in_flight(), 0);
     }
 
     #[test]

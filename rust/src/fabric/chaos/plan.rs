@@ -12,7 +12,9 @@
 //! * **per-QP stalls** — a QP whose context fell out of the NIC cache
 //!   ("cache thrash") delivering nothing for a stretch of time,
 //! * **node death / revival** — a memory donor disappearing mid-run and
-//!   possibly coming back.
+//!   possibly coming back (with whatever data it held when it died),
+//! * **partial partitions** — a window in which every WR to one node
+//!   errors while the node stays up, silently diverging that replica.
 //!
 //! Rates are probabilities evaluated against the fabric's seeded PRNG, so
 //! a `(seed, FaultPlan)` pair names one exact adversarial schedule.
@@ -37,6 +39,19 @@ pub struct NodeEvent {
     pub up: bool,
 }
 
+/// A partial partition: during the window, every WR to `node` completes
+/// in error *without* the node being marked dead — placement keeps
+/// routing to it, exactly like a client that lost its path to one donor
+/// while the donor itself stays up. Replica writes that fail this way
+/// leave the node diverged from its peers, which is what the engine's
+/// demotion + resync path exists to repair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Partition {
+    pub node: NodeId,
+    pub from_ns: u64,
+    pub until_ns: u64,
+}
+
 /// The fault schedule. Build with [`FaultPlan::none`] plus the `with_*` /
 /// `stall` / `node_down` / `node_up` combinators, or draw a random mix
 /// from a seed stream with [`FaultPlan::randomized`].
@@ -57,6 +72,8 @@ pub struct FaultPlan {
     pub stalls: Vec<QpStall>,
     /// Node death / revival schedule.
     pub node_events: Vec<NodeEvent>,
+    /// Partial partitions (per-node error windows without death).
+    pub partitions: Vec<Partition>,
 }
 
 impl FaultPlan {
@@ -105,15 +122,14 @@ impl FaultPlan {
         self
     }
 
-    /// Revive a node at a virtual time. Like the loopback fabric's
-    /// `revive_node`, this is a failure-injection affordance, **not** a
-    /// recovery protocol: the revived node rejoins placement without
-    /// resynchronization, so in a real deployment it may serve stale
-    /// data for blocks written during its downtime. The chaos fabric
-    /// carries no payloads and cannot detect that — completion-level
-    /// invariants (exactly-once, window bound, no lost I/O) still hold
-    /// and are what the harness checks; a resync protocol plus a data
-    /// model to verify it is future work (see ROADMAP).
+    /// Revive a node at a virtual time. What happens next depends on the
+    /// engine: with resync disabled the node rejoins placement
+    /// immediately and — since the fabric now carries a payload model —
+    /// any stale read it serves for blocks written during its downtime
+    /// is *detected and counted* (`stale_reads`). With resync enabled
+    /// the node re-enters in `Resyncing` state, is excluded from routing
+    /// until the engine has replayed its missed writes from an alive
+    /// peer, and only then serves reads again.
     pub fn node_up(mut self, node: NodeId, at_ns: u64) -> Self {
         self.node_events.push(NodeEvent {
             at_ns,
@@ -123,6 +139,25 @@ impl FaultPlan {
         self
     }
 
+    /// A partial partition window: WRs to `node` complete in error while
+    /// the node stays nominally alive (see [`Partition`]).
+    pub fn partition(mut self, node: NodeId, from_ns: u64, until_ns: u64) -> Self {
+        assert!(from_ns < until_ns, "empty partition window");
+        self.partitions.push(Partition {
+            node,
+            from_ns,
+            until_ns,
+        });
+        self
+    }
+
+    /// Is `node` partitioned from the client at virtual time `at_ns`?
+    pub fn partitioned(&self, node: NodeId, at_ns: u64) -> bool {
+        self.partitions
+            .iter()
+            .any(|p| p.node == node && (p.from_ns..p.until_ns).contains(&at_ns))
+    }
+
     /// Does this plan inject anything at all?
     pub fn is_quiet(&self) -> bool {
         self.error_rate == 0.0
@@ -130,13 +165,14 @@ impl FaultPlan {
             && self.duplicate_rate == 0.0
             && self.stalls.is_empty()
             && self.node_events.is_empty()
+            && self.partitions.is_empty()
     }
 
     /// The end of the stall window covering (`qp`, `at_ns`), if any.
     pub fn stall_release(&self, qp: QpId, at_ns: u64) -> Option<u64> {
         self.stalls
             .iter()
-            .filter(|s| s.qp == qp && s.from_ns <= at_ns && at_ns < s.until_ns)
+            .filter(|s| s.qp == qp && (s.from_ns..s.until_ns).contains(&at_ns))
             .map(|s| s.until_ns)
             .max()
     }
@@ -171,10 +207,18 @@ impl FaultPlan {
                 let node = rng.gen_below(nodes as u64) as usize;
                 let at = rng.gen_below(300_000);
                 plan = plan.node_down(node, at);
-                if rng.gen_bool(0.6) {
+                // revive-with-stale-data: with the payload model in the
+                // fabric, a revival after missed writes is only safe if
+                // the resync protocol gates it — sweep it aggressively
+                if rng.gen_bool(0.7) {
                     plan = plan.node_up(node, at + 1 + rng.gen_below(200_000));
                 }
             }
+        }
+        if rng.gen_bool(0.35) {
+            let node = rng.gen_below(nodes as u64) as usize;
+            let from = rng.gen_below(250_000);
+            plan = plan.partition(node, from, from + 1 + rng.gen_below(150_000));
         }
         plan
     }
@@ -222,5 +266,22 @@ mod tests {
     #[should_panic(expected = "empty stall window")]
     fn stall_rejects_empty_window() {
         let _ = FaultPlan::none().stall(0, 50, 50);
+    }
+
+    #[test]
+    fn partition_windows_cover_their_node_only() {
+        let p = FaultPlan::none().partition(1, 100, 200);
+        assert!(!p.is_quiet());
+        assert!(p.partitioned(1, 100));
+        assert!(p.partitioned(1, 199));
+        assert!(!p.partitioned(1, 200), "window end is exclusive");
+        assert!(!p.partitioned(1, 99));
+        assert!(!p.partitioned(0, 150), "other nodes unaffected");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty partition window")]
+    fn partition_rejects_empty_window() {
+        let _ = FaultPlan::none().partition(0, 50, 50);
     }
 }

@@ -12,6 +12,12 @@
 //!    but may not strand them.
 //! 4. **Quiet-plan control** — with no faults injected, no failovers,
 //!    disk fallbacks, or duplicate completions may appear.
+//! 5. **No stale reads** — the fabric's payload model must never observe
+//!    a successful read served below the retired write floor of its
+//!    pages. With the resync protocol enabled (the default here) this
+//!    holds under node revival and partial partitions; disabling it
+//!    ([`Scenario::without_resync`]) turns revival-after-missed-writes
+//!    into a reproducible failure — which is the point.
 //!
 //! A violation returns an error that embeds the one-command reproducer
 //! (seed included), so a CI failure is a replay away from a debugger.
@@ -22,7 +28,7 @@ use crate::fabric::Dir;
 use crate::runtime::Result;
 use crate::util::rng::Pcg32;
 
-use super::{ChaosFabric, FaultPlan};
+use super::{ChaosFabric, FaultPlan, STRIPE_BYTES};
 
 /// Livelock guard for one scenario run.
 const MAX_STEPS: u64 = 4_000_000;
@@ -49,6 +55,8 @@ pub struct Scenario {
     pub window_bytes: Option<u64>,
     pub n_ios: u64,
     pub read_fraction: f64,
+    /// Run with the engine's epoch-based resync protocol (default: on).
+    pub resync: bool,
     pub plan: FaultPlan,
 }
 
@@ -59,7 +67,9 @@ impl Scenario {
         let mut rng = Pcg32::with_stream(seed, 0x5EED5);
         let nodes = 2 + rng.gen_below(3) as usize;
         let qps_per_node = 1 + rng.gen_below(4) as usize;
-        let replicas = 1 + rng.gen_below(2) as usize;
+        // up to 3-way replication (topology permitting): multi-peer
+        // resync source selection only exists with ≥ 3 replicas
+        let replicas = 1 + rng.gen_below(nodes.min(3) as u64) as usize;
         // window floor = MAX_IO_PAGES: see the constant's invariant note
         let window_bytes = if rng.gen_bool(0.75) {
             Some((MAX_IO_PAGES + rng.gen_below(28)) * 4096)
@@ -78,6 +88,7 @@ impl Scenario {
             window_bytes,
             n_ios,
             read_fraction,
+            resync: true,
             plan,
         }
     }
@@ -94,8 +105,17 @@ impl Scenario {
             window_bytes: Some(24 * 4096),
             n_ios: 300,
             read_fraction: 0.4,
+            resync: true,
             plan,
         }
+    }
+
+    /// Disable the resync protocol: revived replicas rejoin routing
+    /// immediately, so a revival after missed writes serves stale data —
+    /// and the payload-model invariant fails the scenario.
+    pub fn without_resync(mut self) -> Self {
+        self.resync = false;
+        self
     }
 }
 
@@ -114,7 +134,14 @@ pub struct ScenarioReport {
     pub injected_errors: u64,
     pub reordered_wcs: u64,
     pub stalled_wcs: u64,
+    pub partitioned_wcs: u64,
     pub node_transitions: u64,
+    /// Always 0 in a passing report (invariant 5).
+    pub stale_reads: u64,
+    pub resync_rounds: u64,
+    pub resync_copies: u64,
+    pub resync_demotions: u64,
+    pub resyncs_completed: u64,
     pub peak_in_flight: u64,
     pub elapsed_virtual_ns: u64,
 }
@@ -162,6 +189,9 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
         sc.window_bytes,
         sc.plan.clone(),
     );
+    if sc.resync {
+        fab = fab.with_resync();
+    }
     // workload stream is independent of the fabric's fault stream
     let mut rng = Pcg32::with_stream(sc.seed, 0x10AD5);
     let mut retired: BTreeSet<u64> = BTreeSet::new();
@@ -195,8 +225,16 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
             } else {
                 Dir::Write
             };
-            let addr = rng.gen_below(ADDR_SPAN / 4096) * 4096;
             let len = 4096 * (1 + rng.gen_below(MAX_IO_PAGES));
+            let mut addr = rng.gen_below(ADDR_SPAN / 4096) * 4096;
+            // keep each I/O inside one replication stripe: placed
+            // routing replicates a request by its *first* stripe, so a
+            // straddling I/O would land tail pages on replicas that
+            // reads of those pages (routed by their own stripe) never
+            // consult — callers split at stripe boundaries, and so do we
+            if addr % STRIPE_BYTES + len > STRIPE_BYTES {
+                addr -= addr % STRIPE_BYTES + len - STRIPE_BYTES;
+            }
             let sub = fab.submit(id, dir, addr, len);
             submitted += 1;
             if sub.disk_fallback {
@@ -260,6 +298,20 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
             fab.stats
         )));
     }
+    if fab.stats.stale_reads > 0 {
+        return Err(fail(format!(
+            "stale read served: {} successful read(s) returned data below \
+             the retired write floor (first: {}){}",
+            fab.stats.stale_reads,
+            fab.first_stale.as_deref().unwrap_or("?"),
+            if sc.resync {
+                ""
+            } else {
+                " — resync is disabled for this scenario, so an \
+                 unresynchronized revival is expected to fail exactly here"
+            },
+        )));
+    }
 
     Ok(ScenarioReport {
         submitted,
@@ -272,7 +324,13 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
         injected_errors: fab.stats.injected_errors,
         reordered_wcs: fab.stats.reordered_wcs,
         stalled_wcs: fab.stats.stalled_wcs,
+        partitioned_wcs: fab.stats.partitioned_wcs,
         node_transitions: fab.stats.node_transitions,
+        stale_reads: fab.stats.stale_reads,
+        resync_rounds: fab.engine().stats.resync_rounds,
+        resync_copies: fab.engine().stats.resync_copies,
+        resync_demotions: fab.engine().stats.resync_demotions,
+        resyncs_completed: fab.engine().stats.resyncs_completed,
         peak_in_flight: fab.engine().regulator().peak_in_flight,
         elapsed_virtual_ns: fab.now(),
     })
@@ -304,6 +362,13 @@ mod tests {
         assert!(cmd.contains("CHAOS_SEED=0xbeef"), "{cmd}");
         let named = Scenario::named("wc_reordering", 5, FaultPlan::none());
         assert!(replay_command(&named).contains("wc_reordering"));
+    }
+
+    #[test]
+    fn without_resync_builder_flips_the_knob() {
+        let sc = Scenario::randomized(7);
+        assert!(sc.resync, "resync defaults to on");
+        assert!(!sc.without_resync().resync);
     }
 
     #[test]

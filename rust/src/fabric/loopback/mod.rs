@@ -15,23 +15,33 @@
 //! With a [`NodeMap`] attached ([`LiveBox::new_placed`]) the engine also
 //! runs the §6 node abstraction live: replicated writes fan out, reads
 //! fail over to the next alive replica on error, and all-replicas-dead
-//! surfaces the disk-fallback signal instead of hanging.
+//! surfaces the disk-fallback signal instead of hanging. With resync on
+//! top ([`LiveBox::new_placed_resync`]) a revived donor re-enters in
+//! `Resyncing` state and the engine replays the writes it missed — as
+//! real memcpys from an alive peer, through the same pipeline — before
+//! it serves reads again, so the bytes a revived node returns are never
+//! stale.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::batching::{BatchLimits, BatchMode};
 use crate::coordinator::engine::{EngineCosts, IoEngine, SHARD_REGION_SHIFT};
-use crate::coordinator::node::NodeMap;
+use crate::coordinator::node::{NodeMap, NodeState};
 use crate::coordinator::polling::{PollStep, PollerFsm, PollingMode};
 use crate::fabric::{AppIo, Dir, NodeId, OpKind, QpId, Wc, WcStatus, WorkRequest};
 use crate::util::fxhash::FxHashMap;
 
 const REGION_BYTES: usize = 1 << SHARD_REGION_SHIFT;
+
+/// Chunk size of resync repair copies (well under every window the
+/// examples/tests configure, so repair traffic cannot monopolize — or
+/// overshoot — the admission window).
+const RESYNC_CHUNK_BYTES: u64 = 64 * 1024;
 
 enum QpReq {
     Work {
@@ -283,7 +293,7 @@ impl LiveBox {
     /// Direct-routing client: callers name the destination node (the
     /// quickstart / paged-store usage).
     pub fn new(fabric: LoopbackFabric, batch: BatchMode, window_bytes: Option<u64>) -> Arc<Self> {
-        Self::build(fabric, batch, window_bytes, None)
+        Self::build(fabric, batch, window_bytes, None, false)
     }
 
     /// Placement-routing client: the engine fans writes out to `replicas`
@@ -296,7 +306,21 @@ impl LiveBox {
         replicas: usize,
     ) -> Arc<Self> {
         let map = NodeMap::new(fabric.nodes(), replicas, REGION_BYTES as u64);
-        Self::build(fabric, batch, window_bytes, Some(map))
+        Self::build(fabric, batch, window_bytes, Some(map), false)
+    }
+
+    /// Placement-routing client with the epoch-based resync protocol: a
+    /// node revived with [`LiveBox::revive_node`] is repaired (missed
+    /// writes replayed from an alive peer as real memcpys) before it
+    /// returns to routing. See [`LiveBox::wait_node_alive`].
+    pub fn new_placed_resync(
+        fabric: LoopbackFabric,
+        batch: BatchMode,
+        window_bytes: Option<u64>,
+        replicas: usize,
+    ) -> Arc<Self> {
+        let map = NodeMap::new(fabric.nodes(), replicas, REGION_BYTES as u64);
+        Self::build(fabric, batch, window_bytes, Some(map), true)
     }
 
     fn build(
@@ -304,6 +328,7 @@ impl LiveBox {
         batch: BatchMode,
         window_bytes: Option<u64>,
         map: Option<NodeMap>,
+        resync: bool,
     ) -> Arc<Self> {
         let cq_rx = fabric.cq_rx.lock().unwrap().take().expect("fresh fabric");
         let mut core = IoEngine::new(
@@ -316,6 +341,9 @@ impl LiveBox {
         );
         if let Some(m) = map {
             core = core.with_placement(m);
+            if resync {
+                core.enable_resync(RESYNC_CHUNK_BYTES);
+            }
         }
         Arc::new(Self {
             fabric,
@@ -350,22 +378,46 @@ impl LiveBox {
     pub fn fail_node(&self, node: NodeId) {
         self.fabric.set_alive(node, false);
         let mut g = self.inner.lock().unwrap();
-        if let Some(m) = g.core.node_map_mut() {
-            m.set_alive(node, false);
-        }
+        g.core.on_node_down(node);
     }
 
-    /// Bring a node back: it rejoins placement **without any
-    /// resynchronization** (failure-injection affordance, not a recovery
-    /// protocol). Blocks written while it was down exist only on the
-    /// surviving replicas, so a revived donor may serve stale data for
-    /// them — callers must treat a revived node as empty or re-populate
-    /// it before reading through it.
+    /// Bring a node back. On a resync-enabled client
+    /// ([`LiveBox::new_placed_resync`]) it re-enters in `Resyncing`
+    /// state — excluded from routing while the engine replays the writes
+    /// it missed from an alive peer — and only then returns to `Alive`
+    /// ([`LiveBox::wait_node_alive`] blocks on that). Without resync it
+    /// rejoins immediately, and may serve stale data for blocks written
+    /// during its downtime.
     pub fn revive_node(&self, node: NodeId) {
         self.fabric.set_alive(node, true);
         let mut g = self.inner.lock().unwrap();
-        if let Some(m) = g.core.node_map_mut() {
-            m.set_alive(node, true);
+        g.core.on_node_up(node);
+        // repair copies (if any) were queued: post them
+        self.pump(&mut g);
+    }
+
+    /// Lifecycle state of a node in the placement map (`None` on a
+    /// direct-routing client).
+    pub fn node_state(&self, node: NodeId) -> Option<NodeState> {
+        self.inner.lock().unwrap().core.node_state(node)
+    }
+
+    /// Drive completions until `node` is fully `Alive` (resync done) or
+    /// the timeout expires. Returns whether the node made it.
+    pub fn wait_node_alive(&self, node: NodeId, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.node_state(node) == Some(NodeState::Alive) {
+                return true;
+            }
+            if Instant::now() > deadline {
+                return false;
+            }
+            if let Ok(rx) = self.cq.try_lock() {
+                self.poll_burst(&rx);
+            } else {
+                std::thread::sleep(Duration::from_micros(200));
+            }
         }
     }
 
@@ -598,24 +650,35 @@ impl LiveBox {
                     _ => g.stats.bytes_written += wc.len,
                 }
                 if let Some(buf) = data {
-                    // scatter the merged read payload back to its sub-I/Os
-                    let base = wc
-                        .app_ios
-                        .iter()
-                        .filter_map(|s| g.read_addr.get(s).map(|&(a, _)| a))
-                        .min()
-                        .unwrap_or(0);
+                    // scatter the merged read payload back to its
+                    // sub-I/Os: app subs are tracked in read_addr,
+                    // engine-internal resync source reads resolve their
+                    // span through the engine itself
+                    let mut spans: Vec<(u64, u64, u64)> = Vec::new();
                     for sid in &wc.app_ios {
                         if let Some(&(addr, len)) = g.read_addr.get(sid) {
-                            let off = (addr - base) as usize;
-                            g.read_data
-                                .insert(*sid, buf[off..off + len as usize].to_vec());
+                            spans.push((*sid, addr, len));
+                        } else if let Some((addr, len, _)) = g.core.sub_span(*sid) {
+                            spans.push((*sid, addr, len));
                         }
+                    }
+                    let base = spans.iter().map(|&(_, a, _)| a).min().unwrap_or(0);
+                    for (sid, addr, len) in spans {
+                        let off = (addr - base) as usize;
+                        g.read_data.insert(sid, buf[off..off + len as usize].to_vec());
                     }
                 }
             }
             let out = g.core.on_wc(&wc, 0);
             g.stats.failovers += out.requeued as u64;
+            // advance resync copies: the bytes the source read returned
+            // become the payload of the repair write to the recovering
+            // node (posted by the pump below)
+            for c in &out.resync_copies {
+                if let Some(bytes) = g.read_data.remove(&c.read_sub) {
+                    g.payloads.insert(c.write_sub, bytes);
+                }
+            }
             // release per-sub state of terminally failed sub-I/Os (e.g. a
             // placed read whose every replica died -> disk fallback)
             for (sid, _) in &out.failed_subs {
@@ -766,6 +829,40 @@ mod tests {
             assert_eq!(b[0], (page + 1) as u8, "page {page}");
         }
         lb.revive_node(0);
+    }
+
+    /// The live analogue of the chaos stale-read scenario: kill a
+    /// replica, overwrite its blocks, revive it. With resync, the
+    /// revived node's real memory is repaired (memcpys from the peer)
+    /// before it serves — so even with the peer gone, every byte it
+    /// returns is the post-death version.
+    #[test]
+    fn revived_node_resyncs_real_bytes_before_serving() {
+        let fab = LoopbackFabric::start(2, 1 << 20);
+        let lb = LiveBox::new_placed_resync(fab, BatchMode::Hybrid, None, 2);
+        let v1: Vec<u8> = (0..4096u32).map(|x| (x % 191) as u8).collect();
+        for page in 0..8u64 {
+            assert!(lb.write_placed(page * 4096, &v1));
+        }
+        lb.fail_node(0);
+        // overwrite while the primary is down: only node 1 holds v2
+        let v2: Vec<u8> = (0..4096u32).map(|x| (x % 113) as u8 + 1).collect();
+        for page in 0..8u64 {
+            assert!(lb.write_placed(page * 4096, &v2));
+        }
+        lb.revive_node(0);
+        assert!(
+            lb.wait_node_alive(0, Duration::from_secs(10)),
+            "resync must complete"
+        );
+        // the repaired primary is the only replica left: its memcpys
+        // must now hold the bytes written during its downtime
+        lb.fail_node(1);
+        for page in 0..8u64 {
+            let b = lb.read_placed(page * 4096, 4096).expect("node 0 alive");
+            assert_eq!(b, v2, "page {page} must not serve stale bytes");
+        }
+        assert_eq!(lb.stats().disk_fallbacks, 0);
     }
 
     #[test]

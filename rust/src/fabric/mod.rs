@@ -11,9 +11,12 @@
 //! * [`chaos`] — a deterministic fault-injecting fabric for correctness
 //!   testing: virtual time, a seeded PRNG schedule, and a
 //!   [`chaos::FaultPlan`] injecting completion errors, WC reordering,
-//!   duplicates, per-QP stalls, and node death/revival. Every engine
-//!   invariant (exactly-once retirement, admission bound, failover) is
-//!   replayable from a single `u64` seed.
+//!   duplicates, per-QP stalls, partial partitions, and node
+//!   death/revival. The fabric carries a payload model (per-page
+//!   versioned fingerprints), so data invariants — no stale read from a
+//!   revived or diverged replica — are checked alongside the
+//!   completion-level ones (exactly-once retirement, admission bound,
+//!   failover), all replayable from a single `u64` seed.
 
 pub mod chaos;
 pub mod loopback;

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Gate a micro_core bench run against the checked-in baseline.
+
+Usage:  check_bench.py BENCH_micro.json ci/bench_baseline.json
+
+Fails (exit 1) when any bench named in the baseline regresses by more
+than the tolerance (default 25%, override with BENCH_TOLERANCE=0.25):
+
+  * throughput:  current ops_per_sec < baseline ops_per_sec * (1 - tol)
+  * tail:        current p99_block_ns > baseline p99_block_ns * (1 + tol)
+
+The shipped baseline holds deliberately conservative floors/ceilings
+(an order of magnitude of headroom) so the gate is portable across CI
+machines and catches only real regressions — an accidental O(n^2), a
+debug-assert left in a hot loop, a pathological allocation. To tighten
+it on pinned hardware, re-pin ci/bench_baseline.json from a recent
+BENCH_micro artifact.
+
+Benches present in the run but absent from the baseline are reported
+informationally and do not gate (so adding a bench never breaks CI).
+"""
+
+import json
+import os
+import sys
+
+
+def load(path):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    current = load(sys.argv[1])
+    baseline = load(sys.argv[2])
+    tol = float(os.environ.get("BENCH_TOLERANCE", "0.25"))
+
+    cur_by_name = {b["name"]: b for b in current.get("benches", [])}
+    failures = []
+    print(f"bench gate: tolerance {tol:.0%}"
+          f"{' (smoke run)' if current.get('smoke') else ''}")
+    for base in baseline.get("benches", []):
+        name = base["name"]
+        cur = cur_by_name.pop(name, None)
+        if cur is None:
+            failures.append(f"{name}: present in baseline but missing from run")
+            continue
+        ops_floor = base["ops_per_sec"] * (1.0 - tol)
+        verdicts = []
+        if cur["ops_per_sec"] < ops_floor:
+            verdicts.append(
+                f"throughput {cur['ops_per_sec']:.0f} ops/s < floor "
+                f"{ops_floor:.0f} (baseline {base['ops_per_sec']:.0f})"
+            )
+        # tail-gate only benches that report a real tail (single-shot
+        # benches like des_end_to_end omit p99_block_ns)
+        if "p99_block_ns" in base and "p99_block_ns" in cur:
+            p99_ceil = base["p99_block_ns"] * (1.0 + tol)
+            if cur["p99_block_ns"] > p99_ceil:
+                verdicts.append(
+                    f"p99 {cur['p99_block_ns']:.0f} ns > ceiling "
+                    f"{p99_ceil:.0f} (baseline {base['p99_block_ns']:.0f})"
+                )
+        status = "FAIL" if verdicts else "ok"
+        p99_str = (f"p99 {cur['p99_block_ns']:>10.1f} ns"
+                   if "p99_block_ns" in cur else "p99          — ")
+        print(f"  {name:28} {cur['ops_per_sec']:>14.0f} ops/s  "
+              f"{p99_str}   {status}")
+        for v in verdicts:
+            failures.append(f"{name}: {v}")
+    for name in cur_by_name:
+        print(f"  {name:28} (no baseline entry — not gated)")
+
+    if failures:
+        print("\nbench gate FAILED (>{:.0%} regression):".format(tol),
+              file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print("bench gate passed")
+
+
+if __name__ == "__main__":
+    main()
