@@ -202,6 +202,62 @@ fn main() {
         });
     }
 
+    // resync repair-copy throughput (the ROADMAP's "resync copy
+    // throughput" trajectory candidate): one iteration = a replica dies,
+    // misses an 8-page write burst, revives, and the epoch-resync
+    // protocol (with donor election enabled) drains its repair copies
+    // through the pipeline back to Alive.
+    {
+        use rdmabox::coordinator::node::NodeMap;
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = IoEngine::new(
+            BatchMode::Hybrid,
+            BatchLimits::default(),
+            2,
+            1,
+            None,
+            EngineCosts::free(),
+        )
+        .with_placement(map)
+        .with_resync(4 * 4096)
+        .with_donor_election();
+        let mut id = 0u64;
+        fn drain_complete(e: &mut IoEngine) {
+            loop {
+                let out = e.drain_all(0);
+                if out.chains.is_empty() {
+                    break;
+                }
+                for chain in out.chains {
+                    for wr in chain.wrs {
+                        let wc = Wc {
+                            wr_id: wr.wr_id,
+                            qp: chain.qp,
+                            op: wr.op,
+                            len: wr.len,
+                            app_ios: wr.app_ios,
+                            status: WcStatus::Success,
+                        };
+                        e.on_wc(&wc, 0);
+                    }
+                }
+            }
+        }
+        bench(&mut results, "resync_repair_8pages", iters(20_000), || {
+            let before = e.stats.resync_copies;
+            e.on_node_down(0);
+            for p in 0..8u64 {
+                e.submit(io(id, p * 4096));
+                id += 1;
+                drain_complete(&mut e);
+            }
+            e.on_node_up(0);
+            drain_complete(&mut e);
+            debug_assert_eq!(e.resync_backlog(0), 0);
+            e.stats.resync_copies - before
+        });
+    }
+
     // poller FSM: one adaptive wake → burst-poll → retry → re-arm cycle
     {
         bench(&mut results, "poller_fsm_adaptive_cycle", iters(500_000), || {

@@ -39,8 +39,8 @@ use crate::config::FabricConfig;
 use crate::coordinator::batching::{plan, BatchLimits, BatchMode};
 use crate::coordinator::channel::ChannelMap;
 use crate::coordinator::merge_queue::{MergeCheck, MergeQueues};
-use crate::coordinator::node::{NodeMap, NodeState, ReadRoute};
-use crate::coordinator::regulator::Regulator;
+use crate::coordinator::node::{EpochMap, NodeMap, NodeState, ReadRoute};
+use crate::coordinator::regulator::{AdmissionPolicy, Regulator, StaticWindow, Unlimited};
 use crate::coordinator::StackConfig;
 use crate::fabric::{AppIo, Dir, NodeId, QpId, Wc, WcStatus, WorkRequest};
 use crate::util::fxhash::FxHashMap;
@@ -95,12 +95,18 @@ enum Routing {
 /// Result of submitting one application I/O.
 #[derive(Debug, Clone)]
 pub struct Submitted {
-    /// The queued fabric-level sub-I/O ids (one per replica for placed
-    /// writes; `[io.id]` in direct mode). Work requests carry these ids.
+    /// The queued fabric-level sub-I/O ids (one per replica per
+    /// stripe-local leg for placed writes; `[io.id]` in direct mode).
+    /// Work requests carry these ids.
     pub sub_ids: Vec<u64>,
-    /// Every replica is dead: nothing was queued, the caller must take the
-    /// disk path.
+    /// Every leg of the request found every replica dead: nothing was
+    /// queued, the caller owns the disk path for the whole span.
     pub disk_fallback: bool,
+    /// Stripe-local legs that took the disk path at submit time (their
+    /// replicas were all dead) while other legs were queued. Empty unless
+    /// the engine-level splitter produced a partial-disk request; the
+    /// caller owns the disk path for exactly these sub-spans.
+    pub disk_legs: Vec<(u64, u64)>,
 }
 
 /// One planned post: a doorbell chain bound to a concrete QP.
@@ -207,6 +213,23 @@ pub struct EngineStats {
     pub resync_copy_failures: u64,
     /// Nodes promoted back to `Alive` after draining their backlog.
     pub resyncs_completed: u64,
+    /// Multi-stripe application I/Os split into stripe-local legs at
+    /// submission (the engine-level request splitter).
+    pub split_requests: u64,
+    /// Stripe-local legs produced by the splitter (counts only legs of
+    /// split requests; a request inside one stripe produces none).
+    pub split_legs: u64,
+    /// Repair copies whose donor was chosen by the epoch-vector election
+    /// (the conservative source rule had no candidate).
+    pub resync_elections: u64,
+    /// Missed ranges dropped because the recovering node's own applied
+    /// epoch already covers the required epoch — a spurious missed record
+    /// from a concurrent-divergence race, healed in place.
+    pub resync_self_heals: u64,
+    /// Missed ranges surrendered to the disk path because no live replica
+    /// holds the required epoch (e.g. every peer of the stripe is dead).
+    /// Surfaced to the backend via [`IoEngine::take_disk_surrenders`].
+    pub resync_disk_surrenders: u64,
 }
 
 /// What a placed sub-I/O is doing in the pipeline.
@@ -235,18 +258,25 @@ struct SubIo {
     /// Node this sub-I/O currently targets.
     node: NodeId,
     kind: SubKind,
+    /// Election epoch riding on this sub: the write's minted epoch for
+    /// app writes, the donor's applied epoch for resync copies (applied
+    /// to the target's vector when the repair write lands). 0 when the
+    /// donor election is disabled.
+    epoch: u64,
 }
 
-/// Coalescing set of byte ranges (the per-node missed-write backlog).
-/// Stored as `start → end` (end exclusive); overlapping and adjacent
-/// inserts merge, so replaying the set touches each byte once.
+/// Coalescing set of byte ranges (the per-node missed-write backlog; also
+/// reused by backends, e.g. the loopback client's disk-backed span
+/// tracker). Stored as `start → end` (end exclusive); overlapping and
+/// adjacent inserts merge, so replaying the set touches each byte once.
 #[derive(Debug, Default, Clone)]
-struct RangeSet {
+pub struct RangeSet {
     ranges: std::collections::BTreeMap<u64, u64>,
 }
 
 impl RangeSet {
-    fn insert(&mut self, addr: u64, len: u64) {
+    /// Add `[addr, addr + len)`, merging overlapping/adjacent ranges.
+    pub fn insert(&mut self, addr: u64, len: u64) {
         if len == 0 {
             return;
         }
@@ -266,16 +296,18 @@ impl RangeSet {
         self.ranges.insert(start, end);
     }
 
-    fn is_empty(&self) -> bool {
+    /// `true` when no byte is covered.
+    pub fn is_empty(&self) -> bool {
         self.ranges.is_empty()
     }
 
-    fn len(&self) -> usize {
+    /// Number of stored (coalesced) ranges.
+    pub fn len(&self) -> usize {
         self.ranges.len()
     }
 
     /// Does any recorded range intersect `[addr, addr + len)`?
-    fn overlaps(&self, addr: u64, len: u64) -> bool {
+    pub fn overlaps(&self, addr: u64, len: u64) -> bool {
         if len == 0 {
             return false;
         }
@@ -286,7 +318,7 @@ impl RangeSet {
     }
 
     /// Erase `[addr, addr + len)`, splitting entries that straddle it.
-    fn remove(&mut self, addr: u64, len: u64) {
+    pub fn remove(&mut self, addr: u64, len: u64) {
         if len == 0 {
             return;
         }
@@ -309,7 +341,7 @@ impl RangeSet {
     }
 
     /// Take every `(addr, len)` range, leaving the set empty.
-    fn drain(&mut self) -> Vec<(u64, u64)> {
+    pub fn drain(&mut self) -> Vec<(u64, u64)> {
         let out = self.ranges.iter().map(|(&s, &e)| (s, e - s)).collect();
         self.ranges.clear();
         out
@@ -320,6 +352,13 @@ impl RangeSet {
 #[derive(Debug)]
 struct ResyncState {
     enabled: bool,
+    /// Epoch-vector donor election (ISSUE 4): when the conservative
+    /// source rule has no candidate, elect the freshest live replica by
+    /// comparing applied epoch vectors against the required floor —
+    /// including among mutually-overlapping resyncing peers — and
+    /// surrender ranges with no live copy at all to the disk path
+    /// instead of parking the node.
+    election: bool,
     /// Copies are chunked to this size so a resync transfer can never
     /// exceed the admission window of a windowed pipeline.
     max_copy_bytes: u64,
@@ -341,20 +380,56 @@ struct ResyncState {
     /// app write sub resolves), so steady write traffic doesn't pay an
     /// O(live subs) scan per event.
     deferred_wait: Vec<bool>,
+    /// Monotone epoch counter: every placed application write mints one
+    /// at submit time (election mode only).
+    next_epoch: u64,
+    /// Per-node **applied** epoch vector: the highest write epoch whose
+    /// data the node's store holds, per range (raised when a write leg —
+    /// app or repair — completes successfully on the node). This is the
+    /// vector each replica "publishes"; it is maintained incrementally
+    /// so it is already current at every demotion/revival transition.
+    applied: Vec<EpochMap>,
+    /// Cluster-wide **required** epoch vector: the highest epoch the
+    /// client has issued per range, raised at submit time. A donor is
+    /// valid for a range iff its applied vector dominates this floor
+    /// over the whole range.
+    required: EpochMap,
+    /// Ranges surrendered to the disk path (no live copy held the
+    /// required epoch), awaiting pickup by the backend.
+    surrendered: Vec<(NodeId, u64, u64)>,
 }
 
 impl ResyncState {
     fn disabled(nodes: usize) -> Self {
         Self {
             enabled: false,
+            election: false,
             max_copy_bytes: 0,
             missed: (0..nodes).map(|_| RangeSet::default()).collect(),
             repairing: (0..nodes).map(|_| RangeSet::default()).collect(),
             outstanding: vec![0; nodes],
             dormant: vec![false; nodes],
             deferred_wait: vec![false; nodes],
+            next_epoch: 0,
+            applied: (0..nodes).map(|_| EpochMap::default()).collect(),
+            required: EpochMap::default(),
+            surrendered: Vec::new(),
         }
     }
+}
+
+/// Engine-internal leg ids live above this bit so they can never collide
+/// with caller-chosen application I/O ids (which must stay below it).
+const LEG_BASE: u64 = 1 << 63;
+
+/// Aggregation state of one split application I/O: the request retires
+/// when every stripe-local leg has retired, with the disk-fallback and
+/// failed-over flags ORed across legs.
+#[derive(Debug)]
+struct LegAgg {
+    remaining: u32,
+    disk_any: bool,
+    failed_over_any: bool,
 }
 
 /// Retirement state of one placed application I/O.
@@ -403,6 +478,11 @@ pub struct IoEngine {
     pending: FxHashMap<u64, Pending>,
     /// wr_id → posted bytes + post time (idempotency ledger + RTT).
     outstanding: FxHashMap<u64, PostedWr>,
+    /// Leg id → application I/O id, for split requests (see [`LegAgg`]).
+    legs: FxHashMap<u64, u64>,
+    /// Application I/O id → aggregation state of its legs.
+    aggs: FxHashMap<u64, LegAgg>,
+    next_leg_id: u64,
     resync: ResyncState,
     pub stats: EngineStats,
 }
@@ -438,6 +518,9 @@ impl IoEngine {
             subs: FxHashMap::default(),
             pending: FxHashMap::default(),
             outstanding: FxHashMap::default(),
+            legs: FxHashMap::default(),
+            aggs: FxHashMap::default(),
+            next_leg_id: 0,
             resync: ResyncState::disabled(nodes),
             stats: EngineStats::default(),
         }
@@ -493,6 +576,74 @@ impl IoEngine {
 
     pub fn resync_enabled(&self) -> bool {
         self.resync.enabled
+    }
+
+    /// Enable the **epoch-vector donor election** on top of the resync
+    /// protocol (ISSUE 4; the ROADMAP's "epoch-vector exchange between
+    /// donors"). Every placed application write mints a monotone epoch;
+    /// the engine tracks, per node, the *applied* epoch vector (what the
+    /// node's store holds) and, cluster-wide, the *required* floor (what
+    /// the client has issued). When the conservative source rule finds no
+    /// donor for a missed range, the election:
+    ///
+    /// * **elects the freshest live replica** whose applied vector
+    ///   dominates the required floor over the range — including a
+    ///   mutually-overlapping resyncing peer, the topology the
+    ///   pre-election protocol parked forever;
+    /// * **heals spurious records in place** when the recovering node's
+    ///   own applied vector already covers the floor (a race between two
+    ///   concurrent diverging writes can record a miss the node has
+    ///   since outrun);
+    /// * **surrenders ranges with no live copy at all** to the disk path
+    ///   (the paper keeps a local-disk replica of every block) instead of
+    ///   parking — surfaced via [`IoEngine::take_disk_surrenders`].
+    ///
+    /// Must be enabled before any traffic so every write carries an
+    /// epoch; epoch vectors are compact (coalesced ranges), but they are
+    /// retained for the engine's lifetime.
+    pub fn with_donor_election(mut self) -> Self {
+        self.enable_donor_election();
+        self
+    }
+
+    /// Non-consuming form of [`IoEngine::with_donor_election`].
+    pub fn enable_donor_election(&mut self) {
+        assert!(
+            self.resync.enabled,
+            "donor election requires resync (call with_resync first)"
+        );
+        assert_eq!(
+            self.stats.submitted, 0,
+            "enable donor election before submitting traffic: every write \
+             must carry an epoch for the vectors to be authoritative"
+        );
+        self.resync.election = true;
+    }
+
+    pub fn election_enabled(&self) -> bool {
+        self.resync.election
+    }
+
+    /// Take the ranges the election surrendered to the disk path since
+    /// the last call: `(recovering node, addr, len)` triples for which no
+    /// live replica held the required epoch. The backend owns routing
+    /// reads of these spans to its disk copy (the paging layer's
+    /// per-block disk bit) until a later write makes the remote side
+    /// authoritative again.
+    pub fn take_disk_surrenders(&mut self) -> Vec<(NodeId, u64, u64)> {
+        std::mem::take(&mut self.resync.surrendered)
+    }
+
+    /// Swap the admission window at runtime (admission-policy churn): the
+    /// in-flight byte accounting survives the swap, so bytes posted under
+    /// the old window release under the new one and a shrink below the
+    /// current in-flight level blocks new admissions without leaking.
+    pub fn set_window(&mut self, window_bytes: Option<u64>) {
+        let policy: Box<dyn AdmissionPolicy> = match window_bytes {
+            Some(w) => Box::new(StaticWindow(w)),
+            None => Box::new(Unlimited),
+        };
+        self.regulator.set_policy(policy);
     }
 
     /// Lifecycle state of a node (placed mode), `None` in direct mode.
@@ -621,25 +772,130 @@ impl IoEngine {
     /// protocol: enqueue; the caller then triggers a drain, which is the
     /// merge-check step).
     ///
-    /// Placed-routing contract: a request is routed — and replicated —
-    /// by the stripe of its *first* byte. Callers own splitting requests
-    /// at stripe boundaries (the paging layer submits 4 KiB pages, the
-    /// chaos workload generator keeps I/Os stripe-local); a request that
-    /// crosses a stripe boundary would land its tail pages on the first
-    /// stripe's replicas while reads of those pages route by their own
-    /// stripe.
+    /// Placed routing splits the request into **stripe-local legs** at
+    /// submission: each leg is placed — and replicated — by its own
+    /// stripe, and the request retires once every leg's replication
+    /// policy is satisfied (disk-fallback / failed-over flags ORed across
+    /// legs). Callers no longer need to keep requests stripe-local; the
+    /// old contract (route by the *first* byte's stripe, tail pages
+    /// landing on the wrong replicas) is gone. Direct routing is
+    /// unchanged: the caller names the node, no splitting.
+    ///
+    /// Application I/O ids must stay below `1 << 63` (the engine mints
+    /// internal leg ids above that bit).
     pub fn submit(&mut self, io: AppIo) -> Submitted {
         self.stats.submitted += 1;
+        debug_assert!(
+            io.id < LEG_BASE,
+            "application I/O ids >= 1<<63 are reserved for engine-internal legs"
+        );
+        let submitted = match &self.routing {
+            Routing::Direct => {
+                let qp = self.shard_of(io.node, io.addr);
+                self.shards[qp].of(io.dir).push(io);
+                Submitted {
+                    sub_ids: vec![io.id],
+                    disk_fallback: false,
+                    disk_legs: Vec::new(),
+                }
+            }
+            Routing::Placed(map) => {
+                // every placed write mints a monotone election epoch and
+                // raises the required floor over its span — even when the
+                // write ends up on the disk path (disk then owns the
+                // span, and no remote replica can satisfy the floor until
+                // a later write lands remotely, which is exactly right)
+                let epoch = if self.resync.election && io.dir == Dir::Write {
+                    self.resync.next_epoch += 1;
+                    self.resync.required.raise(io.addr, io.len, self.resync.next_epoch);
+                    self.resync.next_epoch
+                } else {
+                    0
+                };
+                let legs = map.split_stripe_local(io.addr, io.len);
+                if legs.len() == 1 {
+                    let (sub_ids, disk) = self.submit_leg(io.id, &io, io.addr, io.len, epoch);
+                    let mut disk_legs = Vec::new();
+                    if disk {
+                        disk_legs.push((io.addr, io.len));
+                    }
+                    Submitted {
+                        sub_ids,
+                        disk_fallback: disk,
+                        disk_legs,
+                    }
+                } else {
+                    self.stats.split_requests += 1;
+                    self.stats.split_legs += legs.len() as u64;
+                    let mut sub_ids = Vec::new();
+                    let mut disk_legs = Vec::new();
+                    let mut live_legs = 0u32;
+                    for (addr, len) in legs {
+                        let leg_id = LEG_BASE | self.next_leg_id;
+                        self.next_leg_id += 1;
+                        let (ids, disk) = self.submit_leg(leg_id, &io, addr, len, epoch);
+                        if disk {
+                            disk_legs.push((addr, len));
+                        } else {
+                            self.legs.insert(leg_id, io.id);
+                            live_legs += 1;
+                            sub_ids.extend(ids);
+                        }
+                    }
+                    if live_legs == 0 {
+                        Submitted {
+                            sub_ids,
+                            disk_fallback: true,
+                            disk_legs,
+                        }
+                    } else {
+                        self.aggs.insert(
+                            io.id,
+                            LegAgg {
+                                remaining: live_legs,
+                                disk_any: !disk_legs.is_empty(),
+                                failed_over_any: false,
+                            },
+                        );
+                        Submitted {
+                            sub_ids,
+                            disk_fallback: false,
+                            disk_legs,
+                        }
+                    }
+                }
+            }
+        };
+        // kick only after this I/O's subs are registered: a resync round
+        // spawned here must see them as in-flight and defer overlapping
+        // ranges (copying around a write it cannot see would let a stale
+        // copy win the race and promote a diverged node)
+        self.kick_resync();
+        submitted
+    }
+
+    /// Place, record, and enqueue one stripe-local leg of an application
+    /// I/O. Returns the queued sub-I/O ids and whether the leg took the
+    /// disk path at submit (every replica of its stripe dead).
+    fn submit_leg(
+        &mut self,
+        leg_id: u64,
+        io: &AppIo,
+        addr: u64,
+        len: u64,
+        epoch: u64,
+    ) -> (Vec<u64>, bool) {
         enum Route {
-            Direct,
             Disk,
             Targets(Vec<NodeId>),
         }
+        let Routing::Placed(map) = &self.routing else {
+            unreachable!("submit_leg is placed-mode only");
+        };
         let mut missed_replicas: Vec<NodeId> = Vec::new();
-        let route = match (&self.routing, io.dir) {
-            (Routing::Direct, _) => Route::Direct,
-            (Routing::Placed(map), Dir::Write) => {
-                let w = map.route_write(io.addr);
+        let route = match io.dir {
+            Dir::Write => {
+                let w = map.route_write(addr);
                 // replicas skipped because they are dead or resyncing
                 // miss this write: record the range so resync replays it.
                 // Skipped when resync is off (don't tax the hot submit
@@ -649,11 +905,8 @@ impl IoEngine {
                 // owns those reads), and a backlog no alive peer can
                 // source would only park every replica of the stripe in
                 // `Resyncing` forever.
-                if self.resync.enabled
-                    && !w.disk_fallback
-                    && w.targets.len() < map.replicas()
-                {
-                    for n in map.place(io.addr).replicas {
+                if self.resync.enabled && !w.disk_fallback && w.targets.len() < map.replicas() {
+                    for n in map.place(addr).replicas {
                         if !w.targets.contains(&n) {
                             missed_replicas.push(n);
                         }
@@ -665,33 +918,22 @@ impl IoEngine {
                     Route::Targets(w.targets)
                 }
             }
-            (Routing::Placed(map), Dir::Read) => match map.route_read(io.addr) {
+            Dir::Read => match map.route_read(addr) {
                 ReadRoute::Node(n) => Route::Targets(vec![n]),
                 ReadRoute::DiskFallback => Route::Disk,
             },
         };
         for n in missed_replicas {
-            self.record_missed(n, io.addr, io.len);
+            self.record_missed(n, addr, len);
         }
-        let submitted = match route {
-            Route::Direct => {
-                let qp = self.shard_of(io.node, io.addr);
-                self.shards[qp].of(io.dir).push(io);
-                Submitted {
-                    sub_ids: vec![io.id],
-                    disk_fallback: false,
-                }
-            }
+        match route {
             Route::Disk => {
                 self.stats.disk_fallbacks += 1;
-                Submitted {
-                    sub_ids: Vec::new(),
-                    disk_fallback: true,
-                }
+                (Vec::new(), true)
             }
             Route::Targets(targets) => {
                 self.pending.insert(
-                    io.id,
+                    leg_id,
                     Pending {
                         remaining: targets.len() as u32,
                         any_ok: false,
@@ -703,32 +945,31 @@ impl IoEngine {
                 for node in targets {
                     let sid = self.fresh_sub_id();
                     let sub = SubIo {
-                        parent: io.id,
-                        addr: io.addr,
-                        len: io.len,
+                        parent: leg_id,
+                        addr,
+                        len,
                         dir: io.dir,
                         thread: io.thread,
                         t_submit: io.t_submit,
                         attempted: 1u64 << node,
                         node,
                         kind: SubKind::App,
+                        epoch,
                     };
                     self.subs.insert(sid, sub);
                     self.enqueue(sid, node, &sub);
                     sub_ids.push(sid);
                 }
-                Submitted {
-                    sub_ids,
-                    disk_fallback: false,
-                }
+                (sub_ids, false)
             }
-        };
-        // kick only after this I/O's subs are registered: a resync round
-        // spawned here must see them as in-flight and defer overlapping
-        // ranges (copying around a write it cannot see would let a stale
-        // copy win the race and promote a diverged node)
-        self.kick_resync();
-        submitted
+        }
+    }
+
+    /// The application I/O id a sub-I/O parent resolves to: legs of a
+    /// split request translate to the request's id, everything else is
+    /// its own parent. Backends only ever see application ids.
+    fn app_parent(&self, parent: u64) -> u64 {
+        self.legs.get(&parent).copied().unwrap_or(parent)
     }
 
     /// Drain one direction through every shard, bounded by the admission
@@ -897,8 +1138,15 @@ impl IoEngine {
                 }
             }
         }
+        let app_id = self.app_parent(sub.parent);
         if ok {
-            out.completed_subs.push((sid, sub.parent));
+            if sub.dir == Dir::Write && sub.epoch > 0 {
+                // the node's store now holds this write: publish it in
+                // the node's applied epoch vector (the donor election
+                // reads these)
+                self.resync.applied[sub.node].raise(sub.addr, sub.len, sub.epoch);
+            }
+            out.completed_subs.push((sid, app_id));
         } else if sub.dir == Dir::Read {
             // failover: re-queue onto the next alive, untried replica
             let next = match &self.routing {
@@ -932,7 +1180,7 @@ impl IoEngine {
                 // this replica diverged; judged at retirement (below)
                 p.failed_nodes.push(sub.node);
             }
-            out.failed_subs.push((sid, sub.parent));
+            out.failed_subs.push((sid, app_id));
         }
         p.remaining -= 1;
         if p.remaining == 0 {
@@ -950,12 +1198,30 @@ impl IoEngine {
                     self.record_missed(n, sub.addr, sub.len);
                 }
             }
-            self.stats.retired += 1;
-            out.retired.push(RetiredIo {
-                id: sub.parent,
-                disk_fallback,
-                failed_over: done.failed_over,
-            });
+            // a split request retires once every stripe-local leg has
+            // (flags ORed across legs); an unsplit request retires here
+            if let Some(app) = self.legs.remove(&sub.parent) {
+                let agg = self.aggs.get_mut(&app).expect("leg aggregation");
+                agg.remaining -= 1;
+                agg.disk_any |= disk_fallback;
+                agg.failed_over_any |= done.failed_over;
+                if agg.remaining == 0 {
+                    let agg = self.aggs.remove(&app).expect("agg present");
+                    self.stats.retired += 1;
+                    out.retired.push(RetiredIo {
+                        id: app,
+                        disk_fallback: agg.disk_any,
+                        failed_over: agg.failed_over_any,
+                    });
+                }
+            } else {
+                self.stats.retired += 1;
+                out.retired.push(RetiredIo {
+                    id: sub.parent,
+                    disk_fallback,
+                    failed_over: done.failed_over,
+                });
+            }
         }
     }
 
@@ -989,11 +1255,27 @@ impl IoEngine {
             });
             return;
         }
-        let next = self.resync_source(target, sub.addr, sub.len, sub.attempted);
+        let next = self
+            .resync_source(target, sub.addr, sub.len, sub.attempted)
+            .or_else(|| {
+                // conservative rule exhausted: the election may still
+                // name a valid donor among the untried replicas
+                if self.resync.election {
+                    let e_req = self.resync.required.max_over(sub.addr, sub.len);
+                    self.elect_donor(target, sub.addr, sub.len, e_req, sub.attempted)
+                } else {
+                    None
+                }
+            });
         if let Some(node) = next {
             let mut retry = sub;
             retry.attempted |= 1u64 << node;
             retry.node = node;
+            // the copy's epoch is whatever the new donor holds for the
+            // span (what the repair write will publish on the target)
+            if self.resync.election {
+                retry.epoch = self.resync.applied[node].min_over(sub.addr, sub.len);
+            }
             self.subs.insert(sid, retry);
             self.enqueue(sid, node, &retry);
             out.requeued += 1;
@@ -1024,6 +1306,11 @@ impl IoEngine {
         self.resync.outstanding[target] = self.resync.outstanding[target].saturating_sub(1);
         self.resync.repairing[target].remove(sub.addr, sub.len);
         if ok {
+            if sub.epoch > 0 {
+                // the repair landed: the target now holds the donor's
+                // data at the donor's epoch for this span
+                self.resync.applied[target].raise(sub.addr, sub.len, sub.epoch);
+            }
             out.completed_subs.push((sid, RESYNC_PARENT));
         } else {
             self.stats.resync_copy_failures += 1;
@@ -1087,6 +1374,61 @@ impl IoEngine {
         })
     }
 
+    /// Epoch-vector donor election for `[addr, addr + len)` onto
+    /// `target`: the first replica of the range's stripe — excluding
+    /// `target`, dead nodes, and anything in `attempted` — whose
+    /// **applied** epoch vector covers the whole range at or above
+    /// `e_req` (the required floor). Unlike [`IoEngine::resync_source`],
+    /// this accepts a resyncing peer whose own missed backlog *overlaps*
+    /// the range: the vectors decide freshness, not the backlog — which
+    /// is what lets two mutually-diverged replicas elect the one that
+    /// actually holds the data instead of parking forever. A donor whose
+    /// own repair for the range is still in flight is naturally excluded:
+    /// its applied vector only rises when the repair write lands.
+    fn elect_donor(
+        &self,
+        target: NodeId,
+        addr: u64,
+        len: u64,
+        e_req: u64,
+        attempted: u64,
+    ) -> Option<NodeId> {
+        let Routing::Placed(map) = &self.routing else {
+            return None;
+        };
+        let tried = |n: NodeId| n < 64 && attempted & (1u64 << n) != 0;
+        map.place(addr).replicas.into_iter().find(|&n| {
+            n != target
+                && !tried(n)
+                && map.state(n) != NodeState::Dead
+                && self.resync.applied[n].min_over(addr, len) >= e_req
+        })
+    }
+
+    /// Queue one chunked read-from-donor for a missed range of `node`
+    /// (stage 1 of a repair copy). `src_epoch` is what the donor holds
+    /// for the span — published on the target when the repair lands.
+    fn spawn_copy(&mut self, node: NodeId, src: NodeId, addr: u64, len: u64, src_epoch: u64) {
+        let sid = self.fresh_sub_id();
+        let sub = SubIo {
+            parent: RESYNC_PARENT,
+            addr,
+            len,
+            dir: Dir::Read,
+            thread: 0,
+            t_submit: 0,
+            attempted: 1u64 << src,
+            node: src,
+            kind: SubKind::ResyncRead { target: node },
+            epoch: src_epoch,
+        };
+        self.subs.insert(sid, sub);
+        self.enqueue(sid, src, &sub);
+        self.resync.repairing[node].insert(addr, len);
+        self.resync.outstanding[node] += 1;
+        self.stats.resync_copies += 1;
+    }
+
     /// Does any *application write* still in the pipeline overlap this
     /// range? Resync must not copy a range with writes in flight: the
     /// source may not have applied them yet, and promoting on a stale
@@ -1133,7 +1475,13 @@ impl IoEngine {
                     continue;
                 }
                 let (spawned, deferred) = self.spawn_resync_round(node);
-                if spawned == 0 {
+                if self.resync.missed[node].is_empty() && self.resync.outstanding[node] == 0 {
+                    // the whole backlog resolved without a copy in flight
+                    // (election self-heals and/or disk surrenders): the
+                    // node is current — promote it in this same kick
+                    self.promote(node);
+                    promoted = true;
+                } else if spawned == 0 {
                     if deferred > 0 {
                         // everything waits on in-flight app writes:
                         // re-scan when one completes, not on every event
@@ -1166,8 +1514,12 @@ impl IoEngine {
 
     /// One pass over a node's missed backlog: queue a chunked
     /// read-from-peer for every range that has no application writes in
-    /// flight. Returns `(spawned, deferred)` copy counts; ranges without
-    /// an alive source go back to the backlog.
+    /// flight. Returns `(spawned, deferred)` copy counts. Without the
+    /// election, ranges with no conservative source go back to the
+    /// backlog; with it, every chunk resolves — a donor is elected by
+    /// epoch vector, the range self-heals (the node already holds the
+    /// required epoch), or it is surrendered to the disk path (no live
+    /// copy at all).
     fn spawn_resync_round(&mut self, node: NodeId) -> (u32, u32) {
         let ranges = self.resync.missed[node].drain();
         // coalesced ranges can cross stripe boundaries (adjacent writes
@@ -1192,31 +1544,48 @@ impl IoEngine {
                 let caddr = addr + off;
                 let stripe_left = stripe - (caddr % stripe);
                 let clen = chunk.min(len - off).min(stripe_left);
-                let Some(src) = self.resync_source(node, caddr, clen, 0) else {
+                if let Some(src) = self.resync_source(node, caddr, clen, 0) {
+                    let src_epoch = if self.resync.election {
+                        self.resync.applied[src].min_over(caddr, clen)
+                    } else {
+                        0
+                    };
+                    self.spawn_copy(node, src, caddr, clen, src_epoch);
+                    spawned += 1;
+                    off += clen;
+                    continue;
+                }
+                if !self.resync.election {
                     // no peer can source the rest of this range
                     self.stats.resync_copy_failures += 1;
                     self.resync.missed[node].insert(caddr, len - off);
                     break;
-                };
+                }
+                // epoch-vector election, per uniform required-epoch
+                // segment of the chunk (a chunk can span writes of
+                // different epochs; each segment elects independently so
+                // a donor is never credited beyond what it holds)
                 off += clen;
-                let sid = self.fresh_sub_id();
-                let sub = SubIo {
-                    parent: RESYNC_PARENT,
-                    addr: caddr,
-                    len: clen,
-                    dir: Dir::Read,
-                    thread: 0,
-                    t_submit: 0,
-                    attempted: 1u64 << src,
-                    node: src,
-                    kind: SubKind::ResyncRead { target: node },
-                };
-                self.subs.insert(sid, sub);
-                self.enqueue(sid, src, &sub);
-                self.resync.repairing[node].insert(caddr, clen);
-                self.resync.outstanding[node] += 1;
-                self.stats.resync_copies += 1;
-                spawned += 1;
+                for (sa, sl, e_req) in self.resync.required.segments(caddr, clen) {
+                    if self.resync.applied[node].min_over(sa, sl) >= e_req {
+                        // spurious missed record: the node has since
+                        // received (or been repaired to) the required
+                        // epoch — heal in place, nothing to copy
+                        self.stats.resync_self_heals += 1;
+                    } else if let Some(src) = self.elect_donor(node, sa, sl, e_req, 0) {
+                        let src_epoch = self.resync.applied[src].min_over(sa, sl);
+                        self.spawn_copy(node, src, sa, sl, src_epoch);
+                        self.stats.resync_elections += 1;
+                        spawned += 1;
+                    } else {
+                        // no live replica holds the required epoch: the
+                        // only current copy is the paging layer's local
+                        // disk replica — surrender the span to the disk
+                        // path instead of parking the node forever
+                        self.stats.resync_disk_surrenders += 1;
+                        self.resync.surrendered.push((node, sa, sl));
+                    }
+                }
             }
         }
         if spawned > 0 {
@@ -1956,6 +2325,265 @@ mod tests {
         e.on_node_up(1);
         let _ = complete_all_wrs(&mut e);
         assert_eq!(e.node_state(0), Some(NodeState::Alive));
+    }
+
+    /// Property: RangeSet agrees with a naive per-byte BTreeSet model
+    /// under random insert/remove interleavings — coverage, overlap
+    /// queries, and coalesced drain output.
+    #[test]
+    fn prop_range_set_matches_naive_model() {
+        use std::collections::BTreeSet;
+        crate::util::prop::forall(crate::util::prop::cfg(0x2A6E5), |rng, size| {
+            const SPAN: u64 = 192;
+            let mut rs = RangeSet::default();
+            let mut model: BTreeSet<u64> = BTreeSet::new();
+            for _ in 0..size {
+                let addr = rng.gen_below(SPAN);
+                let len = rng.gen_below(SPAN - addr + 1);
+                if rng.gen_bool(0.6) {
+                    rs.insert(addr, len);
+                    model.extend(addr..addr + len);
+                } else {
+                    rs.remove(addr, len);
+                    for b in addr..addr + len {
+                        model.remove(&b);
+                    }
+                }
+                let qa = rng.gen_below(SPAN);
+                let ql = rng.gen_below(SPAN - qa + 1);
+                let naive = (qa..qa + ql).any(|b| model.contains(&b));
+                if rs.overlaps(qa, ql) != naive {
+                    return Err(format!("overlaps({qa},{ql}) disagrees with model"));
+                }
+                if rs.is_empty() != model.is_empty() {
+                    return Err("is_empty disagrees with model".into());
+                }
+            }
+            // drain must yield exactly the model's bytes, as maximal
+            // coalesced ranges (no empty, touching, or overlapping runs)
+            let ranges = rs.clone().drain();
+            let mut covered: BTreeSet<u64> = BTreeSet::new();
+            for w in ranges.windows(2) {
+                if w[0].0 + w[0].1 >= w[1].0 {
+                    return Err(format!("ranges not coalesced: {ranges:?}"));
+                }
+            }
+            for (a, l) in ranges {
+                if l == 0 {
+                    return Err("empty range in drain".into());
+                }
+                covered.extend(a..a + l);
+            }
+            if covered != model {
+                return Err("drain coverage disagrees with model".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_submission_covers_stripes_and_retires_once() {
+        let map = NodeMap::new(3, 2, 1 << 20);
+        let mut e = engine(3, 2, None).with_placement(map);
+        // a write spanning three stripes (one page + a full stripe + one
+        // page): 3 legs x 2 replicas = 6 subs
+        let mut big = io(7, Dir::Write, 0, (1 << 20) - 4096);
+        big.len = (1 << 20) + 8192;
+        let s = e.submit(big);
+        assert_eq!(s.sub_ids.len(), 6, "per-leg replica fan-out");
+        assert!(!s.disk_fallback && s.disk_legs.is_empty());
+        assert_eq!(e.stats.split_requests, 1);
+        assert_eq!(e.stats.split_legs, 3);
+        // every WR stays inside its own stripe and targets that stripe's
+        // replicas
+        let out = e.drain_all(0);
+        let mut retired = Vec::new();
+        let map = e.node_map().unwrap().clone();
+        for chain in out.chains {
+            for wr in chain.wrs {
+                let stripe_of = |a: u64| a / map.stripe_bytes();
+                assert_eq!(
+                    stripe_of(wr.remote_addr),
+                    stripe_of(wr.remote_addr + wr.len - 1),
+                    "WR crosses a stripe boundary"
+                );
+                assert!(
+                    map.place(wr.remote_addr).replicas.contains(&wr.node),
+                    "leg routed off its stripe's replica set"
+                );
+                retired.extend(e.on_wc(&wc_for(&wr, WcStatus::Success), 0).retired);
+            }
+        }
+        retired.extend(complete_all(&mut e));
+        assert_eq!(retired.len(), 1, "split request retires exactly once");
+        assert_eq!(retired[0].id, 7);
+        assert!(!retired[0].disk_fallback);
+        assert_eq!(e.queued_ios(), 0);
+    }
+
+    #[test]
+    fn split_write_with_one_dead_stripe_flags_partial_disk() {
+        // 2 nodes, 1 replica: stripe 0 -> node 0, stripe 1 -> node 1
+        let map = NodeMap::new(2, 1, 1 << 20);
+        let mut e = engine(2, 1, None).with_placement(map);
+        e.on_node_down(1);
+        let mut big = io(3, Dir::Write, 0, (1 << 20) - 4096);
+        big.len = 2 * 4096;
+        let s = e.submit(big);
+        assert!(!s.disk_fallback, "one leg was queued");
+        assert_eq!(s.disk_legs, vec![(1 << 20, 4096)], "dead stripe's leg");
+        assert_eq!(s.sub_ids.len(), 1);
+        let retired = complete_all(&mut e);
+        assert_eq!(retired.len(), 1);
+        assert!(
+            retired[0].disk_fallback,
+            "partial-disk request surfaces the disk signal at retirement"
+        );
+    }
+
+    /// The formerly-parked topology: two replicas demote each other on
+    /// the *same* range (two concurrent writes, one leg of each fails on
+    /// opposite nodes). Without the election both park in `Resyncing`
+    /// forever; with it, the epoch vectors elect the replica that holds
+    /// the later write as donor and the other self-heals its spurious
+    /// missed record.
+    #[test]
+    fn overlapping_divergence_parks_without_election_and_heals_with_it() {
+        let drive = |election: bool| {
+            let map = NodeMap::new(2, 2, 1 << 20);
+            let mut e = engine(2, 1, None).with_placement(map).with_resync(4 * 4096);
+            if election {
+                e.enable_donor_election();
+            }
+            e.submit(io(1, Dir::Write, 0, 0));
+            let out = e.drain_all(0);
+            let wa: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+            e.submit(io(2, Dir::Write, 0, 0));
+            let out = e.drain_all(0);
+            let wb: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+            assert_eq!((wa.len(), wb.len()), (2, 2));
+            // W1: node 1's leg fails; W2: node 0's leg fails — both
+            // replicas miss an overlapping write of the same range
+            for wr in &wa {
+                let st = if wr.node == 1 {
+                    WcStatus::Error
+                } else {
+                    WcStatus::Success
+                };
+                e.on_wc(&wc_for(wr, st), 0);
+            }
+            for wr in &wb {
+                let st = if wr.node == 0 {
+                    WcStatus::Error
+                } else {
+                    WcStatus::Success
+                };
+                e.on_wc(&wc_for(wr, st), 0);
+            }
+            assert_eq!(e.stats.resync_demotions, 2, "both replicas diverged");
+            let _ = complete_all_wrs(&mut e);
+            e
+        };
+        let parked = drive(false);
+        assert_eq!(
+            parked.node_state(0),
+            Some(NodeState::Resyncing),
+            "without election the overlap parks node 0"
+        );
+        assert_eq!(parked.node_state(1), Some(NodeState::Resyncing));
+        assert!(parked.resync_backlog(0) + parked.resync_backlog(1) > 0);
+
+        let healed = drive(true);
+        assert_eq!(healed.node_state(0), Some(NodeState::Alive), "repaired");
+        assert_eq!(healed.node_state(1), Some(NodeState::Alive), "self-healed");
+        assert!(healed.stats.resync_self_heals >= 1, "{:?}", healed.stats);
+        assert!(healed.stats.resync_elections >= 1, "{:?}", healed.stats);
+        assert_eq!(healed.stats.resync_disk_surrenders, 0);
+        assert_eq!(healed.resync_backlog(0) + healed.resync_backlog(1), 0);
+    }
+
+    /// All peers of a recovering node are dead: the election finds no
+    /// live copy of the missed range and surrenders it to the disk path
+    /// (the paging layer's local-disk replica) instead of parking.
+    #[test]
+    fn all_peers_down_surrenders_missed_ranges_to_disk() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None)
+            .with_placement(map)
+            .with_resync(4 * 4096)
+            .with_donor_election();
+        e.submit(io(1, Dir::Write, 0, 0));
+        complete_all(&mut e);
+        e.on_node_down(0);
+        e.submit(io(2, Dir::Write, 0, 0)); // lands only on node 1
+        complete_all(&mut e);
+        e.on_node_down(1); // the only holder of the new version dies
+        e.on_node_up(0);
+        assert_eq!(
+            e.node_state(0),
+            Some(NodeState::Alive),
+            "no live copy: the node surrenders the range and rejoins"
+        );
+        assert_eq!(e.stats.resync_disk_surrenders, 1, "{:?}", e.stats);
+        let surrendered = e.take_disk_surrenders();
+        assert_eq!(surrendered, vec![(0, 0, 4096)]);
+        assert!(e.take_disk_surrenders().is_empty(), "drained once");
+        assert_eq!(e.resync_backlog(0), 0);
+    }
+
+    /// With the election on, the conservative paths still win when they
+    /// can: a revived node with an alive peer repairs through a normal
+    /// copy, no self-heal, no surrender.
+    #[test]
+    fn election_defers_to_conservative_source_when_available() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None)
+            .with_placement(map)
+            .with_resync(4 * 4096)
+            .with_donor_election();
+        e.on_node_down(0);
+        e.submit(io(1, Dir::Write, 0, 0));
+        complete_all(&mut e);
+        e.on_node_up(0);
+        let _ = complete_all_wrs(&mut e);
+        assert_eq!(e.node_state(0), Some(NodeState::Alive));
+        assert!(e.stats.resync_copies >= 1);
+        assert_eq!(e.stats.resync_elections, 0, "alive peer: no election");
+        assert_eq!(e.stats.resync_disk_surrenders, 0);
+        assert_eq!(e.stats.resync_self_heals, 0);
+    }
+
+    #[test]
+    fn set_window_churn_keeps_accounting_balanced() {
+        let mut e = engine(1, 1, Some(8 * 4096));
+        for i in 0..8u64 {
+            e.submit(io(i, Dir::Write, 0, i * 4096));
+        }
+        let out = e.drain_all(0);
+        let in_flight = e.regulator().in_flight();
+        assert!(in_flight > 0);
+        // shrink the window below the in-flight level mid-run
+        e.set_window(Some(4096));
+        let blocked = e.drain_all(0);
+        assert!(blocked.chains.is_empty(), "shrunk window admits nothing");
+        for chain in out.chains {
+            for wr in chain.wrs {
+                e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
+            }
+        }
+        // old-policy bytes released cleanly; the rest drains under the
+        // new window one page at a time
+        let retired = complete_all(&mut e);
+        assert_eq!(e.stats.retired, 8);
+        assert_eq!(e.regulator().in_flight(), 0, "no leaked capacity");
+        assert!(retired.iter().all(|r| !r.disk_fallback));
+    }
+
+    #[test]
+    #[should_panic(expected = "donor election requires resync")]
+    fn election_without_resync_is_rejected() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let _ = engine(2, 1, None).with_placement(map).with_donor_election();
     }
 
     #[test]

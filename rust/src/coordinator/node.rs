@@ -53,6 +53,146 @@ pub struct Placement {
     pub remote_addr: u64,
 }
 
+/// A compact per-range **epoch vector**: the recovery metadata one replica
+/// publishes about a span of the block space. Stored as disjoint
+/// `start → (end, epoch)` ranges; uncovered bytes have epoch 0 ("never
+/// written since epochs were minted").
+///
+/// Two instances drive the engine's donor election (ISSUE 4 / ROADMAP
+/// "epoch-vector exchange between donors"):
+///
+/// * per node, the **applied** vector — the highest write epoch whose data
+///   the node's store actually holds, per range;
+/// * cluster-wide, the **required** vector — the highest epoch the client
+///   has issued per range (the client-visible write floor).
+///
+/// A replica is a valid repair donor for a range iff its applied vector
+/// dominates the required vector over every byte of the range — which is
+/// decidable even between two *mutually diverged* resyncing peers, the
+/// case the pre-election protocol had to park forever.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct EpochMap {
+    map: std::collections::BTreeMap<u64, (u64, u64)>,
+}
+
+impl EpochMap {
+    /// Raise the epoch of every byte in `[addr, addr + len)` to at least
+    /// `epoch` (entries are split where they straddle the span; existing
+    /// higher epochs are kept — epochs are monotone per byte).
+    pub fn raise(&mut self, addr: u64, len: u64, epoch: u64) {
+        if len == 0 || epoch == 0 {
+            return;
+        }
+        let end = addr + len;
+        // carve out every overlapping entry, keeping the parts outside the
+        // span verbatim and max-merging the parts inside
+        let overlapping: Vec<(u64, u64, u64)> = self
+            .map
+            .range(..end)
+            .filter(|&(_, &(e, _))| e > addr)
+            .map(|(&s, &(e, ep))| (s, e, ep))
+            .collect();
+        let mut pieces: Vec<(u64, u64, u64)> = Vec::new();
+        for (s, e, ep) in overlapping {
+            self.map.remove(&s);
+            if s < addr {
+                pieces.push((s, addr, ep));
+            }
+            pieces.push((s.max(addr), e.min(end), ep.max(epoch)));
+            if e > end {
+                pieces.push((end, e, ep));
+            }
+        }
+        // fill the gaps of the span with the new epoch
+        let mut cursor = addr;
+        let covered: Vec<(u64, u64)> = pieces
+            .iter()
+            .filter(|&&(s, _, _)| s >= addr)
+            .map(|&(s, e, _)| (s, e.min(end)))
+            .collect();
+        for (s, e) in covered {
+            if s > cursor {
+                pieces.push((cursor, s, epoch));
+            }
+            cursor = cursor.max(e);
+        }
+        if cursor < end {
+            pieces.push((cursor, end, epoch));
+        }
+        pieces.sort_unstable();
+        // coalesce equal-epoch neighbors so the vector stays compact
+        for (s, e, ep) in pieces {
+            if let Some((&ps, &(pe, pep))) = self.map.range(..=s).next_back() {
+                if pe == s && pep == ep {
+                    self.map.remove(&ps);
+                    self.map.insert(ps, (e, ep));
+                    continue;
+                }
+            }
+            self.map.insert(s, (e, ep));
+        }
+    }
+
+    /// The lowest epoch held anywhere in `[addr, addr + len)` (gaps count
+    /// as 0). This is what a donor's validity check uses: the donor must
+    /// hold *every* byte of the range at or above the required epoch.
+    pub fn min_over(&self, addr: u64, len: u64) -> u64 {
+        self.segments(addr, len)
+            .into_iter()
+            .map(|(_, _, e)| e)
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// The highest epoch held anywhere in `[addr, addr + len)`.
+    pub fn max_over(&self, addr: u64, len: u64) -> u64 {
+        self.segments(addr, len)
+            .into_iter()
+            .map(|(_, _, e)| e)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Decompose `[addr, addr + len)` into maximal `(addr, len, epoch)`
+    /// segments of uniform epoch, covering the whole span (gaps appear as
+    /// epoch-0 segments). Election walks these so a single repair chunk
+    /// with heterogeneous history elects per uniform sub-range.
+    pub fn segments(&self, addr: u64, len: u64) -> Vec<(u64, u64, u64)> {
+        let mut out = Vec::new();
+        if len == 0 {
+            return out;
+        }
+        let end = addr + len;
+        let mut cursor = addr;
+        for (&s, &(e, ep)) in self.map.range(..end) {
+            if e <= addr {
+                continue;
+            }
+            let s = s.max(addr);
+            if s > cursor {
+                out.push((cursor, s - cursor, 0));
+            }
+            let seg_end = e.min(end);
+            out.push((s, seg_end - s, ep));
+            cursor = seg_end;
+        }
+        if cursor < end {
+            out.push((cursor, end - cursor, 0));
+        }
+        out
+    }
+
+    /// Number of stored ranges (compactness measure).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// `true` when no byte has a non-zero epoch.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
 /// Striped placement of client block space over N remote memory donors.
 #[derive(Debug, Clone)]
 pub struct NodeMap {
@@ -181,6 +321,29 @@ impl NodeMap {
             .into_iter()
             .filter(|&n| self.is_alive(n))
             .collect()
+    }
+
+    /// Split `[addr, addr + len)` into stripe-local `(addr, len)` legs:
+    /// each leg lies entirely within one replication stripe, the legs are
+    /// in address order, and their concatenation is exactly the input
+    /// span. This is what the engine's submission-time request splitter
+    /// uses to lift the old "callers must keep requests stripe-local"
+    /// contract — a request that straddles stripes is placed (and
+    /// replicated) per leg instead of by its first byte.
+    pub fn split_stripe_local(&self, addr: u64, len: u64) -> Vec<(u64, u64)> {
+        if len == 0 {
+            return vec![(addr, 0)];
+        }
+        let mut legs = Vec::new();
+        let mut off = 0u64;
+        while off < len {
+            let a = addr + off;
+            let stripe_left = self.stripe_bytes - (a % self.stripe_bytes);
+            let l = stripe_left.min(len - off);
+            legs.push((a, l));
+            off += l;
+        }
+        legs
     }
 
     /// Read routing with the all-replicas-dead case surfaced explicitly.
@@ -346,6 +509,135 @@ mod tests {
     fn is_alive_rejects_out_of_range_node() {
         let m = NodeMap::new(3, 1, 4096);
         let _ = m.is_alive(7);
+    }
+
+    #[test]
+    fn epoch_map_raise_query_and_segments() {
+        let mut m = EpochMap::default();
+        assert_eq!(m.min_over(0, 100), 0);
+        m.raise(10, 10, 3);
+        m.raise(30, 10, 5);
+        assert_eq!(m.max_over(0, 100), 5);
+        assert_eq!(m.min_over(10, 10), 3);
+        assert_eq!(m.min_over(10, 30), 0, "gap counts as epoch 0");
+        // raising across both splits nothing below the existing epochs
+        m.raise(0, 50, 4);
+        assert_eq!(m.min_over(0, 50), 4);
+        assert_eq!(m.max_over(0, 50), 5, "higher epoch survives the raise");
+        let segs = m.segments(0, 50);
+        assert_eq!(segs.iter().map(|&(_, l, _)| l).sum::<u64>(), 50);
+        assert!(segs.windows(2).all(|w| w[0].0 + w[0].1 == w[1].0));
+        assert_eq!(m.segments(30, 10), vec![(30, 10, 5)]);
+    }
+
+    #[test]
+    fn epoch_map_coalesces_equal_neighbors() {
+        let mut m = EpochMap::default();
+        m.raise(0, 10, 2);
+        m.raise(10, 10, 2);
+        assert_eq!(m.len(), 1, "adjacent equal epochs coalesce");
+        m.raise(5, 10, 2);
+        assert_eq!(m.len(), 1);
+        assert!(!m.is_empty());
+    }
+
+    /// Property: EpochMap agrees with a naive per-byte epoch model under
+    /// random raises — min/max queries and full-span segment coverage.
+    #[test]
+    fn prop_epoch_map_matches_naive_model() {
+        prop::forall(cfg(0xE90C), |rng, size| {
+            const SPAN: u64 = 256;
+            let mut m = EpochMap::default();
+            let mut model = [0u64; SPAN as usize];
+            for _ in 0..size {
+                let addr = rng.gen_below(SPAN);
+                let len = 1 + rng.gen_below(SPAN - addr);
+                let epoch = 1 + rng.gen_below(16);
+                m.raise(addr, len, epoch);
+                for b in addr..addr + len {
+                    model[b as usize] = model[b as usize].max(epoch);
+                }
+                let qa = rng.gen_below(SPAN);
+                let ql = 1 + rng.gen_below(SPAN - qa);
+                let naive_min = (qa..qa + ql).map(|b| model[b as usize]).min().unwrap();
+                let naive_max = (qa..qa + ql).map(|b| model[b as usize]).max().unwrap();
+                if m.min_over(qa, ql) != naive_min {
+                    return Err(format!(
+                        "min_over({qa},{ql}) = {} != naive {naive_min}",
+                        m.min_over(qa, ql)
+                    ));
+                }
+                if m.max_over(qa, ql) != naive_max {
+                    return Err(format!("max_over mismatch at ({qa},{ql})"));
+                }
+                // segments tile the query span and agree with the model
+                let segs = m.segments(qa, ql);
+                let mut cursor = qa;
+                for (s, l, e) in segs {
+                    if s != cursor {
+                        return Err(format!("segment gap at {s} (cursor {cursor})"));
+                    }
+                    for b in s..s + l {
+                        if model[b as usize] != e {
+                            return Err(format!("segment epoch {e} != model at byte {b}"));
+                        }
+                    }
+                    cursor = s + l;
+                }
+                if cursor != qa + ql {
+                    return Err("segments do not cover the span".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_stripe_local_basic() {
+        let m = NodeMap::new(3, 2, 1 << 20);
+        // fully inside one stripe: one leg, verbatim
+        assert_eq!(m.split_stripe_local(4096, 8192), vec![(4096, 8192)]);
+        // straddles one boundary: two legs
+        let legs = m.split_stripe_local((1 << 20) - 4096, 3 * 4096);
+        assert_eq!(legs, vec![((1 << 20) - 4096, 4096), (1 << 20, 2 * 4096)]);
+        // spans three stripes
+        let legs = m.split_stripe_local((1 << 20) - 1, (2 << 20) + 2);
+        assert_eq!(legs.len(), 3);
+    }
+
+    /// Property: the splitter's legs exactly cover the original span in
+    /// order, and no leg crosses a stripe boundary.
+    #[test]
+    fn prop_split_stripe_local_covers_exactly() {
+        prop::forall(cfg(0x5_111_7), |rng, size| {
+            let stripe = 1 << (12 + rng.gen_below(9)); // 4 KiB .. 1 MiB
+            let m = NodeMap::new(4, 2, stripe);
+            for _ in 0..size {
+                let addr = rng.gen_below(1 << 24);
+                let len = 1 + rng.gen_below(4 * stripe);
+                let legs = m.split_stripe_local(addr, len);
+                let mut cursor = addr;
+                for &(a, l) in &legs {
+                    if a != cursor {
+                        return Err(format!("leg at {a} does not continue {cursor}"));
+                    }
+                    if l == 0 {
+                        return Err("empty leg".into());
+                    }
+                    if a / stripe != (a + l - 1) / stripe {
+                        return Err(format!("leg ({a},{l}) crosses a stripe boundary"));
+                    }
+                    cursor = a + l;
+                }
+                if cursor != addr + len {
+                    return Err(format!(
+                        "legs cover [{addr},{cursor}) instead of [{addr},{})",
+                        addr + len
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 
     /// Property: replicas are always distinct, alive-filtered, and the

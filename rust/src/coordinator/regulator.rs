@@ -151,6 +151,16 @@ impl Regulator {
         self.in_flight
     }
 
+    /// Swap the admission policy **without** touching the in-flight
+    /// accounting or the debug byte ledger: WRs posted under the old
+    /// policy still release exactly their reserved bytes. This is what
+    /// makes mid-run admission churn (a live window re-size) safe — a
+    /// shrink below the current in-flight level simply blocks new
+    /// admissions until completions drain it below the new window.
+    pub fn set_policy(&mut self, policy: Box<dyn AdmissionPolicy>) {
+        self.policy = policy;
+    }
+
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
     }
@@ -328,6 +338,24 @@ mod tests {
             w = p.window_bytes(t, &fb);
         }
         assert_eq!(w, 16 << 20);
+    }
+
+    /// Mid-run policy churn keeps the ledger: bytes posted under the old
+    /// window release under the new one, and a shrink below the current
+    /// in-flight level blocks without stranding capacity.
+    #[test]
+    fn set_policy_preserves_inflight_accounting() {
+        let mut r = Regulator::static_window(8 * 4096);
+        r.on_post(1, 6 * 4096);
+        r.set_policy(Box::new(StaticWindow(2 * 4096)));
+        assert_eq!(r.available(0), 0, "shrunk window blocks new admissions");
+        assert_eq!(r.in_flight(), 6 * 4096);
+        r.on_complete(1, 6 * 4096, 1_000);
+        assert_eq!(r.in_flight(), 0, "old-policy bytes release cleanly");
+        assert_eq!(r.available(0), 2 * 4096);
+        r.set_policy(Box::new(Unlimited));
+        assert_eq!(r.policy_name(), "unlimited");
+        assert_eq!(r.available(0), u64::MAX);
     }
 
     /// Property: in-flight accounting never goes negative and equals

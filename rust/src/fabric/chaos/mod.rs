@@ -34,14 +34,16 @@
 pub mod plan;
 pub mod scenario;
 
-pub use plan::{FaultPlan, NodeEvent, Partition, QpStall};
-pub use scenario::{replay_command, run_scenario, Scenario, ScenarioReport};
+pub use plan::{AdmissionChurn, FaultPlan, LatencyStorm, NodeEvent, Partition, QpStall};
+pub use scenario::{replay_command, run_scenario, ChaosProfile, Scenario, ScenarioReport};
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, HashSet};
 
 use crate::coordinator::batching::{BatchLimits, BatchMode};
-use crate::coordinator::engine::{EngineCosts, IoEngine, RetiredIo, Submitted, SHARD_REGION_SHIFT};
+use crate::coordinator::engine::{
+    EngineCosts, IoEngine, RetiredIo, Submitted, RESYNC_PARENT, SHARD_REGION_SHIFT,
+};
 use crate::coordinator::node::{NodeMap, NodeState};
 use crate::fabric::{AppIo, Dir, NodeId, OpKind, QpId, Wc, WcStatus, WorkRequest};
 use crate::util::fxhash::{FxBuildHasher, FxHashMap};
@@ -114,6 +116,8 @@ struct Flight {
 enum EventKind {
     Deliver(Flight),
     Node { node: NodeId, up: bool },
+    /// Mid-run admission-window swap (policy churn).
+    Churn { window: Option<u64> },
 }
 
 /// A scheduled event in virtual time. Total order is `(at, seq)`; `seq`
@@ -157,6 +161,10 @@ pub struct ChaosStats {
     pub duplicates_delivered: u64,
     pub reordered_wcs: u64,
     pub stalled_wcs: u64,
+    /// WCs delayed by a cluster-wide latency storm window.
+    pub stormed_wcs: u64,
+    /// Mid-run admission-window swaps executed (policy churn).
+    pub window_changes: u64,
     pub node_transitions: u64,
     pub retired: u64,
     pub disk_fallbacks: u64,
@@ -185,15 +193,32 @@ pub struct ChaosFabric {
     /// Client-side floor: highest version whose write has retired, per
     /// page — the staleness oracle.
     floor: FxHashMap<u64, u64>,
-    /// Pages whose latest retired write took the disk path (all replicas
-    /// down/failed): remote stores are allowed to be behind for these —
-    /// in the paper's design the paging layer's per-block disk bit sends
-    /// such reads to disk, which is outside this fabric.
-    disk_pages: PageSet,
-    /// Write sub-I/O id → stamps it carries (applied on delivery).
+    /// Highest version per page whose write took the disk path (all
+    /// replicas down/failed, or an election surrender): the page is
+    /// disk-backed while this is at or above the durable floor — in the
+    /// paper's design the paging layer's per-block disk bit sends such
+    /// reads to disk, which is outside this fabric. Tracking the
+    /// *version* (not a bare bit) keeps the ownership ordered: an older
+    /// concurrent write retiring durably cannot cancel a newer write's
+    /// disk ownership.
+    disk_vers: FxHashMap<u64, u64>,
+    /// Write sub-I/O id → stamps it carries (applied on delivery). Leg
+    /// granular: a split write's subs carry only their own leg's stamps.
     write_stamps: FxHashMap<u64, Vec<PageStamp>>,
-    /// Application write id → its stamps (floor update at retirement).
+    /// Application write id → its full-span stamps (floor update at
+    /// retirement).
     parent_stamps: FxHashMap<u64, Vec<PageStamp>>,
+    /// Application write id → stamps of legs that completed on at least
+    /// one replica. At retirement, exactly these pages raise the floor;
+    /// the rest are disk-backed — so a split write with one failed leg
+    /// does not credit (or double-count) pages the fabric never stored.
+    durable: FxHashMap<u64, Vec<PageStamp>>,
+    /// Application read id → its sub-I/O ids (one per stripe-local leg).
+    /// Per-leg floor snapshots and served stamps are retained until the
+    /// read *retires*, then every leg is checked exactly once — a split
+    /// read whose legs complete in different WCs is neither under- nor
+    /// double-counted by the staleness oracle.
+    read_subs: FxHashMap<u64, Vec<u64>>,
     /// Read sub-I/O id → per-page floor snapshot taken at submit.
     read_floor: FxHashMap<u64, Vec<(u64, u64)>>,
     /// Read sub-I/O id → stamps served by its last successful delivery.
@@ -227,6 +252,7 @@ impl ChaosFabric {
         )
         .with_placement(map);
         let node_events: Vec<NodeEvent> = plan.node_events.clone();
+        let churns: Vec<AdmissionChurn> = plan.churns.clone();
         let mut fab = Self {
             engine,
             plan,
@@ -237,9 +263,11 @@ impl ChaosFabric {
             stores: (0..nodes).map(|_| FxHashMap::default()).collect(),
             versions: FxHashMap::default(),
             floor: FxHashMap::default(),
-            disk_pages: PageSet::default(),
+            disk_vers: FxHashMap::default(),
             write_stamps: FxHashMap::default(),
             parent_stamps: FxHashMap::default(),
+            durable: FxHashMap::default(),
+            read_subs: FxHashMap::default(),
             read_floor: FxHashMap::default(),
             served: FxHashMap::default(),
             first_stale: None,
@@ -247,6 +275,10 @@ impl ChaosFabric {
         };
         for ev in node_events {
             fab.schedule_node_event(ev.node, ev.up, ev.at_ns);
+        }
+        for c in churns {
+            let window = c.window_bytes;
+            fab.push(c.at_ns, EventKind::Churn { window });
         }
         fab
     }
@@ -257,6 +289,19 @@ impl ChaosFabric {
     /// serve reads again. Copies are chunked to [`RESYNC_CHUNK_BYTES`].
     pub fn with_resync(mut self) -> Self {
         self.engine.enable_resync(RESYNC_CHUNK_BYTES);
+        self
+    }
+
+    /// Enable resync **plus the epoch-vector donor election**: repair
+    /// donors are elected by comparing applied epoch vectors against the
+    /// client's required floor, so mutually-overlapping resyncing peers
+    /// repair each other and ranges with no live copy at all are
+    /// surrendered to the disk path (the fabric marks those pages
+    /// disk-backed, modeling the paging layer's per-block disk bit over
+    /// its always-written local-disk replica).
+    pub fn with_election(mut self) -> Self {
+        self.engine.enable_resync(RESYNC_CHUNK_BYTES);
+        self.engine.enable_donor_election();
         self
     }
 
@@ -317,41 +362,94 @@ impl ChaosFabric {
             Dir::Read => Vec::new(),
         };
         let sub = self.engine.submit(io);
+        // the submit may have kicked an election round that surrendered
+        // ranges to the disk path — absorb before taking floor snapshots
+        self.absorb_surrenders();
         match dir {
             Dir::Write => {
-                if sub.disk_fallback {
-                    // latest data for these pages lives on disk: remote
-                    // stores are allowed to lag until a later remote write
-                    for st in &stamps {
-                        self.disk_pages.insert(st.page);
+                // legs whose replicas were all dead at submit: the latest
+                // data for those pages lives on disk, remote stores are
+                // allowed to lag until a *newer* remote write retires
+                for &(a, l) in &sub.disk_legs {
+                    for page in pages_of(a, l) {
+                        let v = self.versions.get(&page).copied().unwrap_or(0);
+                        self.mark_disk(page, v);
                     }
-                } else {
+                }
+                if !sub.sub_ids.is_empty() {
+                    // each sub carries exactly its own leg's stamps (the
+                    // splitter routes legs independently)
                     for sid in &sub.sub_ids {
-                        self.write_stamps.insert(*sid, stamps.clone());
+                        let (a, l, _) = self.engine.sub_span(*sid).expect("live sub");
+                        let leg_pages = pages_of(a, l);
+                        let leg_stamps: Vec<PageStamp> = stamps
+                            .iter()
+                            .filter(|st| leg_pages.contains(&st.page))
+                            .copied()
+                            .collect();
+                        self.write_stamps.insert(*sid, leg_stamps);
                     }
                     self.parent_stamps.insert(id, stamps);
                 }
             }
             Dir::Read => {
-                if !sub.disk_fallback {
-                    let floors: Vec<(u64, u64)> = pages_of(addr, len)
-                        .map(|page| {
-                            let fv = if self.disk_pages.contains(&page) {
-                                0 // disk-backed: remote may legitimately lag
-                            } else {
-                                self.floor.get(&page).copied().unwrap_or(0)
-                            };
-                            (page, fv)
-                        })
-                        .collect();
+                if !sub.sub_ids.is_empty() {
                     for sid in &sub.sub_ids {
-                        self.read_floor.insert(*sid, floors.clone());
+                        let (a, l, _) = self.engine.sub_span(*sid).expect("live sub");
+                        let floors: Vec<(u64, u64)> = pages_of(a, l)
+                            .map(|page| {
+                                let fv = if self.disk_backed(page) {
+                                    0 // disk-backed: remote may legitimately lag
+                                } else {
+                                    self.floor.get(&page).copied().unwrap_or(0)
+                                };
+                                (page, fv)
+                            })
+                            .collect();
+                        self.read_floor.insert(*sid, floors);
                     }
+                    self.read_subs.insert(id, sub.sub_ids.clone());
                 }
             }
         }
         self.pump();
         sub
+    }
+
+    /// Fold ranges the engine's election surrendered to the disk path
+    /// into the fabric's disk-backed page set: no live replica holds the
+    /// required version, so — as with all-replicas-failed writes — the
+    /// paging layer's local-disk copy owns reads of these pages until a
+    /// newer remote write retires. Stamped with the page's latest issued
+    /// version (the election deferred around in-flight writes, so that
+    /// is exactly the version no live replica holds).
+    fn absorb_surrenders(&mut self) {
+        for (_, addr, len) in self.engine.take_disk_surrenders() {
+            for page in pages_of(addr, len) {
+                let v = self.versions.get(&page).copied().unwrap_or(0);
+                self.mark_disk(page, v);
+            }
+        }
+    }
+
+    /// Record that version `v` of `page` went to the disk path.
+    fn mark_disk(&mut self, page: u64, v: u64) {
+        let e = self.disk_vers.entry(page).or_insert(0);
+        if v > *e {
+            *e = v;
+        }
+    }
+
+    /// Is `page`'s authoritative copy on disk? True while the newest
+    /// version that went to the disk path is at or above the durable
+    /// remote floor — so only a *newer* durably-retired write flips the
+    /// page back to remote ownership (version-ordered, like the paging
+    /// layer's per-block disk bit).
+    fn disk_backed(&self, page: u64) -> bool {
+        match self.disk_vers.get(&page) {
+            Some(&dv) => dv >= self.floor.get(&page).copied().unwrap_or(0),
+            None => false,
+        }
     }
 
     /// Drain admitted requests and put the planned WRs in flight, drawing
@@ -372,6 +470,13 @@ impl ChaosFabric {
             // hold this WC back so later-posted WRs overtake it in the CQ
             at += 1 + self.rng.gen_below(self.plan.reorder_jitter_ns.max(1));
             self.stats.reordered_wcs += 1;
+        }
+        // cluster-wide latency storm: congestion delay on top of whatever
+        // the WC already picked up
+        let storm = self.plan.storm_extra(at);
+        if storm > 0 {
+            at += storm;
+            self.stats.stormed_wcs += 1;
         }
         if let Some(release) = self.plan.stall_release(qp, at) {
             // the QP's context fell out of the NIC cache: nothing comes
@@ -425,6 +530,12 @@ impl ChaosFabric {
                     self.engine.on_node_down(node);
                 }
             }
+            EventKind::Churn { window } => {
+                // live window swap: in-flight bytes carry over, so a
+                // shrink blocks without leaking and a grow admits backlog
+                self.engine.set_window(window);
+                self.stats.window_changes += 1;
+            }
             EventKind::Deliver(f) => {
                 // a Resyncing node is up for the fabric (its QPs answer);
                 // it is the *routing* layers that must avoid it
@@ -466,21 +577,38 @@ impl ChaosFabric {
                         self.write_stamps.insert(c.write_sub, stamps);
                     }
                 }
+                // a write leg that completed on some replica is durable:
+                // its stamps raise the floor when the parent retires
+                // (split writes credit exactly their landed legs)
+                for (sid, parent) in &out.completed_subs {
+                    if *parent != RESYNC_PARENT {
+                        if let Some(st) = self.write_stamps.get(sid) {
+                            self.durable
+                                .entry(*parent)
+                                .or_default()
+                                .extend(st.iter().copied());
+                        }
+                    }
+                }
                 for r in &out.retired {
                     self.stats.retired += 1;
                     if r.disk_fallback {
                         self.stats.disk_fallbacks += 1;
                     }
-                    self.note_retired(r, &out.completed_subs);
+                    self.note_retired(r);
                 }
+                // write-stamp payloads are per-sub state; read bookkeeping
+                // (floor snapshots, served stamps) is retained until the
+                // *parent* retires so every leg of a split read is
+                // checked exactly once by note_retired
                 for (sid, _) in out.completed_subs.iter().chain(out.failed_subs.iter()) {
                     self.write_stamps.remove(sid);
-                    self.served.remove(sid);
-                    self.read_floor.remove(sid);
                 }
                 retired = out.retired;
             }
         }
+        // the completion (or node event) may have surrendered ranges
+        self.absorb_surrenders();
         // failover requeues and freed window capacity both need a drain
         self.pump();
         Some(retired)
@@ -529,55 +657,68 @@ impl ChaosFabric {
         }
     }
 
-    /// Model bookkeeping when an application I/O retires: writes raise
-    /// the per-page floor (or mark the page disk-backed when every
-    /// replica failed); successful reads are checked against the floor
-    /// snapshot taken at their submit — serving an older version is a
-    /// stale read.
-    fn note_retired(&mut self, r: &RetiredIo, completed_subs: &[(u64, u64)]) {
+    /// Model bookkeeping when an application I/O retires. Writes raise
+    /// the per-page floor for exactly the pages some replica durably
+    /// stored (the `durable` set — all pages for an unsplit write that
+    /// retired remotely) and mark the rest disk-backed. Reads are checked
+    /// **per leg** against the floor snapshots taken at submit — every
+    /// leg of a split read is examined exactly once, here, even when its
+    /// completion arrived in an earlier WC than the one that retired the
+    /// read (serving an older version on any leg is a stale read).
+    fn note_retired(&mut self, r: &RetiredIo) {
         if let Some(stamps) = self.parent_stamps.remove(&r.id) {
             // a write retired
-            if r.disk_fallback {
-                for st in &stamps {
-                    self.disk_pages.insert(st.page);
-                }
-            } else {
-                for st in &stamps {
+            let durable = self.durable.remove(&r.id).unwrap_or_default();
+            let durable_pages: PageSet = durable.iter().map(|st| st.page).collect();
+            for st in &stamps {
+                if durable_pages.contains(&st.page) {
+                    // raising the durable floor past the disk version is
+                    // what flips the page back to remote ownership — an
+                    // older write's floor raise leaves a newer disk mark
+                    // in charge (see disk_backed)
                     let f = self.floor.entry(st.page).or_insert(0);
                     if st.version > *f {
                         *f = st.version;
                     }
-                    self.disk_pages.remove(&st.page);
+                } else {
+                    // no replica stored this page (failed or
+                    // dead-at-submit leg): disk owns it at this version
+                    self.mark_disk(st.page, st.version);
                 }
             }
             return;
         }
-        // a read retired; disk fallback means no replica served it
-        if r.disk_fallback {
-            return;
-        }
-        let Some(&(sid, _)) = completed_subs.iter().find(|&&(_, parent)| parent == r.id) else {
+        // a read retired: walk every leg once, then drop the bookkeeping
+        let Some(sids) = self.read_subs.remove(&r.id) else {
             return;
         };
-        let (Some(served), Some(floors)) = (self.served.get(&sid), self.read_floor.get(&sid))
-        else {
-            return;
-        };
-        for (st, &(page, floor_v)) in served.iter().zip(floors.iter()) {
-            debug_assert_eq!(st.page, page, "served stamps misaligned with floor");
-            debug_assert_eq!(
-                st.fp,
-                stamp_fp(st.page, st.version),
-                "fingerprint does not match its version: store corrupted"
-            );
-            if st.version < floor_v {
-                self.stats.stale_reads += 1;
-                if self.first_stale.is_none() {
-                    self.first_stale = Some(format!(
-                        "io {} page {:#x}: served version {} (fp {:#018x}) \
-                         below retired floor {}",
-                        r.id, st.page, st.version, st.fp, floor_v
-                    ));
+        for sid in sids {
+            let served = self.served.remove(&sid);
+            let floors = self.read_floor.remove(&sid);
+            if r.disk_fallback {
+                // some leg exhausted every replica: the caller redoes the
+                // whole read via the disk path, no freshness to assert
+                continue;
+            }
+            let (Some(served), Some(floors)) = (served, floors) else {
+                continue;
+            };
+            for (st, &(page, floor_v)) in served.iter().zip(floors.iter()) {
+                debug_assert_eq!(st.page, page, "served stamps misaligned with floor");
+                debug_assert_eq!(
+                    st.fp,
+                    stamp_fp(st.page, st.version),
+                    "fingerprint does not match its version: store corrupted"
+                );
+                if st.version < floor_v {
+                    self.stats.stale_reads += 1;
+                    if self.first_stale.is_none() {
+                        self.first_stale = Some(format!(
+                            "io {} page {:#x}: served version {} (fp {:#018x}) \
+                             below retired floor {}",
+                            r.id, st.page, st.version, st.fp, floor_v
+                        ));
+                    }
                 }
             }
         }

@@ -52,6 +52,29 @@ pub struct Partition {
     pub until_ns: u64,
 }
 
+/// A latency storm: a window of virtual time during which every WC
+/// (cluster-wide) picks up `extra_ns` of delivery delay — congestion on
+/// the shared NIC/fabric rather than one stalled QP. Storms stress the
+/// admission window: completions slow down, the window stays full, and
+/// the in-flight bound must hold throughout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LatencyStorm {
+    pub from_ns: u64,
+    pub until_ns: u64,
+    pub extra_ns: u64,
+}
+
+/// Admission-policy churn: at `at_ns`, the engine's admission window is
+/// swapped to `window_bytes` (`None` = unlimited) mid-run, with in-flight
+/// bytes carried over. A shrink below the current in-flight level must
+/// block without stranding capacity; a grow must admit the backlog — the
+/// `admission_churn_no_leak` scenario asserts both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionChurn {
+    pub at_ns: u64,
+    pub window_bytes: Option<u64>,
+}
+
 /// The fault schedule. Build with [`FaultPlan::none`] plus the `with_*` /
 /// `stall` / `node_down` / `node_up` combinators, or draw a random mix
 /// from a seed stream with [`FaultPlan::randomized`].
@@ -74,6 +97,10 @@ pub struct FaultPlan {
     pub node_events: Vec<NodeEvent>,
     /// Partial partitions (per-node error windows without death).
     pub partitions: Vec<Partition>,
+    /// Cluster-wide latency storms (extra WC delay windows).
+    pub storms: Vec<LatencyStorm>,
+    /// Mid-run admission-window swaps.
+    pub churns: Vec<AdmissionChurn>,
 }
 
 impl FaultPlan {
@@ -158,6 +185,39 @@ impl FaultPlan {
             .any(|p| p.node == node && (p.from_ns..p.until_ns).contains(&at_ns))
     }
 
+    /// A cluster-wide latency storm window (see [`LatencyStorm`]).
+    pub fn latency_storm(mut self, from_ns: u64, until_ns: u64, extra_ns: u64) -> Self {
+        assert!(from_ns < until_ns, "empty storm window");
+        assert!(extra_ns > 0, "storm without extra latency");
+        self.storms.push(LatencyStorm {
+            from_ns,
+            until_ns,
+            extra_ns,
+        });
+        self
+    }
+
+    /// Swap the admission window to `window_bytes` at virtual time
+    /// `at_ns` (see [`AdmissionChurn`]).
+    pub fn admission_window(mut self, at_ns: u64, window_bytes: Option<u64>) -> Self {
+        self.churns.push(AdmissionChurn {
+            at_ns,
+            window_bytes,
+        });
+        self
+    }
+
+    /// Extra delivery delay a WC scheduled at `at_ns` picks up from
+    /// storms (the largest covering window wins).
+    pub fn storm_extra(&self, at_ns: u64) -> u64 {
+        self.storms
+            .iter()
+            .filter(|s| (s.from_ns..s.until_ns).contains(&at_ns))
+            .map(|s| s.extra_ns)
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Does this plan inject anything at all?
     pub fn is_quiet(&self) -> bool {
         self.error_rate == 0.0
@@ -166,6 +226,8 @@ impl FaultPlan {
             && self.stalls.is_empty()
             && self.node_events.is_empty()
             && self.partitions.is_empty()
+            && self.storms.is_empty()
+            && self.churns.is_empty()
     }
 
     /// The end of the stall window covering (`qp`, `at_ns`), if any.
@@ -182,6 +244,20 @@ impl FaultPlan {
     /// moderate probability so a sweep over seeds covers single faults,
     /// fault combinations, and the quiet plan.
     pub fn randomized(rng: &mut Pcg32, nodes: usize, qps_per_node: usize) -> Self {
+        Self::randomized_profile(rng, nodes, qps_per_node, false)
+    }
+
+    /// [`FaultPlan::randomized`] with an optional **election-heavy**
+    /// bias: more node churn, *overlapping* partition windows on
+    /// different nodes (the mutual-divergence topology the epoch-vector
+    /// election exists for), and mid-run admission churn + latency
+    /// storms. The nightly `chaos-extended` sweep runs this profile.
+    pub fn randomized_profile(
+        rng: &mut Pcg32,
+        nodes: usize,
+        qps_per_node: usize,
+        heavy: bool,
+    ) -> Self {
         let mut plan = FaultPlan::none();
         if rng.gen_bool(0.55) {
             plan.error_rate = rng.gen_f64() * 0.35;
@@ -202,8 +278,13 @@ impl FaultPlan {
                 plan = plan.stall(qp, from, from + 1 + rng.gen_below(250_000));
             }
         }
-        if rng.gen_bool(0.45) {
-            for _ in 0..=rng.gen_below(2) {
+        if rng.gen_bool(if heavy { 0.7 } else { 0.45 }) {
+            let deaths = if heavy {
+                1 + rng.gen_below(3)
+            } else {
+                rng.gen_below(2)
+            };
+            for _ in 0..=deaths {
                 let node = rng.gen_below(nodes as u64) as usize;
                 let at = rng.gen_below(300_000);
                 plan = plan.node_down(node, at);
@@ -215,10 +296,34 @@ impl FaultPlan {
                 }
             }
         }
-        if rng.gen_bool(0.35) {
+        if rng.gen_bool(if heavy { 0.8 } else { 0.35 }) {
             let node = rng.gen_below(nodes as u64) as usize;
             let from = rng.gen_below(250_000);
-            plan = plan.partition(node, from, from + 1 + rng.gen_below(150_000));
+            let until = from + 1 + rng.gen_below(150_000);
+            plan = plan.partition(node, from, until);
+            // overlapping-divergence mix: a second partition whose window
+            // overlaps the first on a *different* node diverges two
+            // replicas on overlapping write ranges — only the donor
+            // election can drain that topology without parking
+            if rng.gen_bool(if heavy { 0.75 } else { 0.4 }) && nodes > 1 {
+                let other = (node + 1 + rng.gen_below(nodes as u64 - 1) as usize) % nodes;
+                let from2 = from + rng.gen_below((until - from).max(1));
+                plan = plan.partition(other, from2, from2 + 1 + rng.gen_below(150_000));
+            }
+        }
+        if rng.gen_bool(if heavy { 0.5 } else { 0.3 }) {
+            let from = rng.gen_below(300_000);
+            let until = from + 1 + rng.gen_below(200_000);
+            plan = plan.latency_storm(from, until, 1 + rng.gen_below(80_000));
+        }
+        if rng.gen_bool(if heavy { 0.5 } else { 0.25 }) {
+            // churn between bounded windows only (≥ the workload's max
+            // I/O size, so the runner's window invariant stays checkable)
+            for _ in 0..=rng.gen_below(2) {
+                let at = rng.gen_below(400_000);
+                let w = (4 + rng.gen_below(28)) * 4096;
+                plan = plan.admission_window(at, Some(w));
+            }
         }
         plan
     }
@@ -283,5 +388,44 @@ mod tests {
     #[should_panic(expected = "empty partition window")]
     fn partition_rejects_empty_window() {
         let _ = FaultPlan::none().partition(0, 50, 50);
+    }
+
+    #[test]
+    fn storm_extra_covers_window_and_max_wins() {
+        let p = FaultPlan::none()
+            .latency_storm(100, 200, 5_000)
+            .latency_storm(150, 300, 9_000);
+        assert!(!p.is_quiet());
+        assert_eq!(p.storm_extra(99), 0);
+        assert_eq!(p.storm_extra(100), 5_000);
+        assert_eq!(p.storm_extra(160), 9_000, "largest covering storm wins");
+        assert_eq!(p.storm_extra(299), 9_000);
+        assert_eq!(p.storm_extra(300), 0, "window end is exclusive");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty storm window")]
+    fn storm_rejects_empty_window() {
+        let _ = FaultPlan::none().latency_storm(10, 10, 100);
+    }
+
+    #[test]
+    fn admission_churn_composes_and_breaks_quiet() {
+        let p = FaultPlan::none()
+            .admission_window(1_000, Some(8 * 4096))
+            .admission_window(5_000, None);
+        assert_eq!(p.churns.len(), 2);
+        assert_eq!(p.churns[1].window_bytes, None);
+        assert!(!p.is_quiet());
+    }
+
+    #[test]
+    fn heavy_profile_is_deterministic_and_richer() {
+        let a = FaultPlan::randomized_profile(&mut Pcg32::new(77), 4, 2, true);
+        let b = FaultPlan::randomized_profile(&mut Pcg32::new(77), 4, 2, true);
+        assert_eq!(a.partitions, b.partitions);
+        assert_eq!(a.storms, b.storms);
+        assert_eq!(a.churns, b.churns);
+        assert_eq!(a.node_events, b.node_events);
     }
 }

@@ -43,6 +43,20 @@ const ADDR_SPAN: u64 = 1 << 24;
 /// in-flight excess the runner observes is a real violation.
 const MAX_IO_PAGES: u64 = 4;
 
+/// Which randomized fault mix a seed-derived scenario draws.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ChaosProfile {
+    /// The default sweep mix: every fault class at moderate probability.
+    #[default]
+    Standard,
+    /// Election-heavy: more node churn, *overlapping* partition windows
+    /// (mutual divergence on overlapping ranges), latency storms and
+    /// admission churn — the mixes the epoch-vector donor election must
+    /// drain. The nightly `chaos-extended` sweep runs this profile
+    /// (`CHAOS_PROFILE=election`).
+    ElectionHeavy,
+}
+
 /// One chaos scenario: everything the run needs, nameable by seed.
 #[derive(Debug, Clone)]
 pub struct Scenario {
@@ -57,6 +71,11 @@ pub struct Scenario {
     pub read_fraction: f64,
     /// Run with the engine's epoch-based resync protocol (default: on).
     pub resync: bool,
+    /// Run with the epoch-vector donor election on top of resync
+    /// (default: on; ignored when `resync` is off).
+    pub election: bool,
+    /// Which randomized mix this seed drew (replay must match).
+    pub profile: ChaosProfile,
     pub plan: FaultPlan,
 }
 
@@ -64,6 +83,12 @@ impl Scenario {
     /// A scenario fully derived from `seed`: topology, window, workload
     /// shape, and fault mix. This is what the randomized sweep runs.
     pub fn randomized(seed: u64) -> Self {
+        Self::randomized_with_profile(seed, ChaosProfile::Standard)
+    }
+
+    /// [`Scenario::randomized`] drawing the fault mix from a chosen
+    /// [`ChaosProfile`].
+    pub fn randomized_with_profile(seed: u64, profile: ChaosProfile) -> Self {
         let mut rng = Pcg32::with_stream(seed, 0x5EED5);
         let nodes = 2 + rng.gen_below(3) as usize;
         let qps_per_node = 1 + rng.gen_below(4) as usize;
@@ -78,7 +103,8 @@ impl Scenario {
         };
         let n_ios = 150 + rng.gen_below(250);
         let read_fraction = 0.2 + rng.gen_f64() * 0.6;
-        let plan = FaultPlan::randomized(&mut rng, nodes, qps_per_node);
+        let heavy = profile == ChaosProfile::ElectionHeavy;
+        let plan = FaultPlan::randomized_profile(&mut rng, nodes, qps_per_node, heavy);
         Self {
             name: "randomized",
             seed,
@@ -89,6 +115,8 @@ impl Scenario {
             n_ios,
             read_fraction,
             resync: true,
+            election: true,
+            profile,
             plan,
         }
     }
@@ -106,6 +134,8 @@ impl Scenario {
             n_ios: 300,
             read_fraction: 0.4,
             resync: true,
+            election: true,
+            profile: ChaosProfile::Standard,
             plan,
         }
     }
@@ -115,6 +145,16 @@ impl Scenario {
     /// and the payload-model invariant fails the scenario.
     pub fn without_resync(mut self) -> Self {
         self.resync = false;
+        self
+    }
+
+    /// Disable the epoch-vector donor election (resync stays on): the
+    /// conservative donor rule applies, so a topology whose resyncing
+    /// peers miss *overlapping* ranges parks in `Resyncing` — the seed
+    /// branch of the `overlapping_resync_elects_freshest` acceptance
+    /// scenario.
+    pub fn without_election(mut self) -> Self {
+        self.election = false;
         self
     }
 }
@@ -134,13 +174,20 @@ pub struct ScenarioReport {
     pub injected_errors: u64,
     pub reordered_wcs: u64,
     pub stalled_wcs: u64,
+    pub stormed_wcs: u64,
+    pub window_changes: u64,
     pub partitioned_wcs: u64,
     pub node_transitions: u64,
     /// Always 0 in a passing report (invariant 5).
     pub stale_reads: u64,
+    pub split_requests: u64,
+    pub split_legs: u64,
     pub resync_rounds: u64,
     pub resync_copies: u64,
     pub resync_demotions: u64,
+    pub resync_elections: u64,
+    pub resync_self_heals: u64,
+    pub resync_disk_surrenders: u64,
     pub resyncs_completed: u64,
     pub peak_in_flight: u64,
     pub elapsed_virtual_ns: u64,
@@ -149,8 +196,12 @@ pub struct ScenarioReport {
 /// The one-command reproducer for a failing scenario.
 pub fn replay_command(sc: &Scenario) -> String {
     if sc.name == "randomized" {
+        let profile = match sc.profile {
+            ChaosProfile::Standard => "",
+            ChaosProfile::ElectionHeavy => "CHAOS_PROFILE=election ",
+        };
         format!(
-            "CHAOS_SEED={:#x} cargo test --release --test chaos_scenarios \
+            "{profile}CHAOS_SEED={:#x} cargo test --release --test chaos_scenarios \
              replay_env_seed -- --nocapture",
             sc.seed
         )
@@ -181,6 +232,30 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
             "scenario window smaller than the largest generated I/O"
         );
     }
+    for c in &sc.plan.churns {
+        if let Some(w) = c.window_bytes {
+            assert!(
+                w >= MAX_IO_PAGES * 4096,
+                "churned window smaller than the largest generated I/O"
+            );
+        }
+    }
+    // the in-flight bound under admission churn: every admission honors
+    // the window active at its post, so in-flight (and the peak) can
+    // never exceed the largest window that was ever active. Unbounded if
+    // the run starts — or ever churns to — unlimited.
+    let window_cap: Option<u64> = if sc.window_bytes.is_none()
+        || sc.plan.churns.iter().any(|c| c.window_bytes.is_none())
+    {
+        None
+    } else {
+        let churn_max = sc.plan.churns.iter().filter_map(|c| c.window_bytes).max();
+        Some(match (sc.window_bytes, churn_max) {
+            (Some(w), Some(cm)) => w.max(cm),
+            (Some(w), None) => w,
+            (None, _) => unreachable!("handled above"),
+        })
+    };
     let mut fab = ChaosFabric::new(
         sc.seed,
         sc.nodes,
@@ -189,7 +264,9 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
         sc.window_bytes,
         sc.plan.clone(),
     );
-    if sc.resync {
+    if sc.resync && sc.election {
+        fab = fab.with_election();
+    } else if sc.resync {
         fab = fab.with_resync();
     }
     // workload stream is independent of the fabric's fault stream
@@ -227,13 +304,13 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
             };
             let len = 4096 * (1 + rng.gen_below(MAX_IO_PAGES));
             let mut addr = rng.gen_below(ADDR_SPAN / 4096) * 4096;
-            // keep each I/O inside one replication stripe: placed
-            // routing replicates a request by its *first* stripe, so a
-            // straddling I/O would land tail pages on replicas that
-            // reads of those pages (routed by their own stripe) never
-            // consult — callers split at stripe boundaries, and so do we
-            if addr % STRIPE_BYTES + len > STRIPE_BYTES {
-                addr -= addr % STRIPE_BYTES + len - STRIPE_BYTES;
+            // the engine-level splitter lifted the old stripe-local
+            // contract: multi-stripe I/Os are split into stripe-local
+            // legs at submission. Bias a slice of the workload onto
+            // stripe boundaries so every sweep seed exercises the
+            // splitter (and the per-leg staleness accounting behind it).
+            if len > 4096 && rng.gen_bool(0.15) {
+                addr = (addr / STRIPE_BYTES + 1) * STRIPE_BYTES - 4096;
             }
             let sub = fab.submit(id, dir, addr, len);
             submitted += 1;
@@ -250,7 +327,7 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
                 }
             }
         }
-        if let Some(w) = sc.window_bytes {
+        if let Some(w) = window_cap {
             let in_flight = fab.engine().regulator().in_flight();
             if in_flight > w {
                 return Err(fail(format!(
@@ -282,7 +359,7 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
         )));
     }
     let peak = fab.engine().regulator().peak_in_flight;
-    if let Some(w) = sc.window_bytes {
+    if let Some(w) = window_cap {
         if peak > w {
             return Err(fail(format!("peak in-flight {peak} exceeded window {w}")));
         }
@@ -324,12 +401,19 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
         injected_errors: fab.stats.injected_errors,
         reordered_wcs: fab.stats.reordered_wcs,
         stalled_wcs: fab.stats.stalled_wcs,
+        stormed_wcs: fab.stats.stormed_wcs,
+        window_changes: fab.stats.window_changes,
         partitioned_wcs: fab.stats.partitioned_wcs,
         node_transitions: fab.stats.node_transitions,
         stale_reads: fab.stats.stale_reads,
+        split_requests: fab.engine().stats.split_requests,
+        split_legs: fab.engine().stats.split_legs,
         resync_rounds: fab.engine().stats.resync_rounds,
         resync_copies: fab.engine().stats.resync_copies,
         resync_demotions: fab.engine().stats.resync_demotions,
+        resync_elections: fab.engine().stats.resync_elections,
+        resync_self_heals: fab.engine().stats.resync_self_heals,
+        resync_disk_surrenders: fab.engine().stats.resync_disk_surrenders,
         resyncs_completed: fab.engine().stats.resyncs_completed,
         peak_in_flight: fab.engine().regulator().peak_in_flight,
         elapsed_virtual_ns: fab.now(),
@@ -369,6 +453,31 @@ mod tests {
         let sc = Scenario::randomized(7);
         assert!(sc.resync, "resync defaults to on");
         assert!(!sc.without_resync().resync);
+    }
+
+    #[test]
+    fn election_knob_and_heavy_profile_replay() {
+        let sc = Scenario::randomized(9);
+        assert!(sc.election, "election defaults to on");
+        assert!(!sc.clone().without_election().election);
+        let heavy = Scenario::randomized_with_profile(0xFEED, ChaosProfile::ElectionHeavy);
+        assert!(
+            replay_command(&heavy).starts_with("CHAOS_PROFILE=election "),
+            "heavy-profile replay must pin the profile: {}",
+            replay_command(&heavy)
+        );
+        let std = Scenario::randomized(0xFEED);
+        assert!(!replay_command(&std).contains("CHAOS_PROFILE"));
+    }
+
+    #[test]
+    fn heavy_profile_seeds_pass_the_runner() {
+        for seed in 0..3u64 {
+            let sc = Scenario::randomized_with_profile(seed, ChaosProfile::ElectionHeavy);
+            if let Err(e) = run_scenario(&sc) {
+                panic!("{e}");
+            }
+        }
     }
 
     #[test]

@@ -31,7 +31,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batching::{BatchLimits, BatchMode};
 use crate::coordinator::engine::{EngineCosts, IoEngine, SHARD_REGION_SHIFT};
-use crate::coordinator::node::{NodeMap, NodeState};
+use crate::coordinator::node::{EpochMap, NodeMap, NodeState};
 use crate::coordinator::polling::{PollStep, PollerFsm, PollingMode};
 use crate::fabric::{AppIo, Dir, NodeId, OpKind, QpId, Wc, WcStatus, WorkRequest};
 use crate::util::fxhash::FxHashMap;
@@ -255,12 +255,29 @@ struct DoneIo {
 
 struct Inner {
     core: IoEngine,
-    /// write sub-io id -> payload awaiting posting.
+    /// write sub-io id -> payload awaiting posting (leg-granular: a
+    /// split write's subs carry exactly their own leg's bytes).
     payloads: HashMap<u64, Vec<u8>>,
     /// read sub-io id -> (remote addr, len), for scattering merged reads.
     read_addr: HashMap<u64, (u64, u64)>,
     /// read sub-io id -> completed payload (pre-retirement).
     read_data: HashMap<u64, Vec<u8>>,
+    /// app read id -> its sub-io ids (one per stripe-local leg); the
+    /// retired payload is assembled from the legs in address order.
+    read_subs: HashMap<u64, Vec<u64>>,
+    /// app write id -> its span, to stamp the disk-ownership maps at
+    /// retirement.
+    write_spans: HashMap<u64, (u64, u64)>,
+    /// Disk-ownership tracking, ordered by write id (ids are minted in
+    /// submission order, so they double as a write sequence): a byte is
+    /// disk-owned iff the newest write that sent it to the disk path
+    /// (`disk_marked` — all replicas dead at submit *or in flight*, or
+    /// an election surrender) is newer than every write that landed
+    /// remotely over it (`remote_healed`). Stamping both sides with
+    /// write ids makes the tracking race-free: an *older* write
+    /// retiring late can never clear a *newer* write's disk mark.
+    disk_marked: EpochMap,
+    remote_healed: EpochMap,
     /// app io id -> retired outcome, awaiting pickup by the submitter.
     done: HashMap<u64, DoneIo>,
     next_id: u64,
@@ -272,6 +289,16 @@ impl Inner {
         let id = self.next_id;
         self.next_id += 1;
         id
+    }
+
+    /// Does the local disk own any byte of `[addr, addr + len)`? True
+    /// iff some sub-span's newest disk mark is newer than everything
+    /// that landed remotely there (see the field docs on `disk_marked`).
+    fn disk_owned(&self, addr: u64, len: u64) -> bool {
+        self.disk_marked
+            .segments(addr, len)
+            .into_iter()
+            .any(|(sa, sl, m)| m > 0 && self.remote_healed.min_over(sa, sl) < m)
     }
 }
 
@@ -293,7 +320,7 @@ impl LiveBox {
     /// Direct-routing client: callers name the destination node (the
     /// quickstart / paged-store usage).
     pub fn new(fabric: LoopbackFabric, batch: BatchMode, window_bytes: Option<u64>) -> Arc<Self> {
-        Self::build(fabric, batch, window_bytes, None, false)
+        Self::build(fabric, batch, window_bytes, None, false, false)
     }
 
     /// Placement-routing client: the engine fans writes out to `replicas`
@@ -306,7 +333,7 @@ impl LiveBox {
         replicas: usize,
     ) -> Arc<Self> {
         let map = NodeMap::new(fabric.nodes(), replicas, REGION_BYTES as u64);
-        Self::build(fabric, batch, window_bytes, Some(map), false)
+        Self::build(fabric, batch, window_bytes, Some(map), false, false)
     }
 
     /// Placement-routing client with the epoch-based resync protocol: a
@@ -320,7 +347,25 @@ impl LiveBox {
         replicas: usize,
     ) -> Arc<Self> {
         let map = NodeMap::new(fabric.nodes(), replicas, REGION_BYTES as u64);
-        Self::build(fabric, batch, window_bytes, Some(map), true)
+        Self::build(fabric, batch, window_bytes, Some(map), true, false)
+    }
+
+    /// [`LiveBox::new_placed_resync`] plus the **epoch-vector donor
+    /// election**: repair donors are elected by comparing applied epoch
+    /// vectors against the client-issued floor, so mutually-diverged
+    /// replicas repair each other with real memcpys, and ranges with no
+    /// live copy at all are surrendered to the disk path — tracked in a
+    /// client-side disk-span set that [`LiveBox::read_placed`] consults
+    /// (it returns `None`, the caller owns the disk read) until a later
+    /// write lands remotely.
+    pub fn new_placed_elect(
+        fabric: LoopbackFabric,
+        batch: BatchMode,
+        window_bytes: Option<u64>,
+        replicas: usize,
+    ) -> Arc<Self> {
+        let map = NodeMap::new(fabric.nodes(), replicas, REGION_BYTES as u64);
+        Self::build(fabric, batch, window_bytes, Some(map), true, true)
     }
 
     fn build(
@@ -329,6 +374,7 @@ impl LiveBox {
         window_bytes: Option<u64>,
         map: Option<NodeMap>,
         resync: bool,
+        election: bool,
     ) -> Arc<Self> {
         let cq_rx = fabric.cq_rx.lock().unwrap().take().expect("fresh fabric");
         let mut core = IoEngine::new(
@@ -344,6 +390,9 @@ impl LiveBox {
             if resync {
                 core.enable_resync(RESYNC_CHUNK_BYTES);
             }
+            if election {
+                core.enable_donor_election();
+            }
         }
         Arc::new(Self {
             fabric,
@@ -352,6 +401,10 @@ impl LiveBox {
                 payloads: HashMap::new(),
                 read_addr: HashMap::new(),
                 read_data: HashMap::new(),
+                read_subs: HashMap::new(),
+                write_spans: HashMap::new(),
+                disk_marked: EpochMap::default(),
+                remote_healed: EpochMap::default(),
                 done: HashMap::new(),
                 next_id: 1,
                 stats: LiveStats::default(),
@@ -456,10 +509,20 @@ impl LiveBox {
     }
 
     /// Replicated read via the node map (fails over across replicas).
-    /// `None` means every replica is dead — the caller owns the disk path.
+    /// `None` means the caller owns the disk path: every replica of some
+    /// leg is dead, or the span overlaps a range whose authoritative
+    /// copy is the local disk (all-replicas-dead write legs, election
+    /// disk surrenders) — remote bytes there would be stale.
     /// Requires a client built with [`LiveBox::new_placed`].
     pub fn read_placed(&self, addr: u64, len: u64) -> Option<Vec<u8>> {
         self.assert_placed();
+        {
+            let mut g = self.inner.lock().unwrap();
+            if g.disk_owned(addr, len) {
+                g.stats.disk_fallbacks += 1;
+                return None;
+            }
+        }
         let id = self.submit_read(None, addr, len);
         let d = self.wait_done(id);
         if d.disk_fallback {
@@ -481,7 +544,8 @@ impl LiveBox {
     }
 
     fn submit_write(&self, node: Option<NodeId>, addr: u64, data: &[u8]) -> u64 {
-        // the one unavoidable copy happens outside the pipeline lock
+        // the one unavoidable full copy happens outside the pipeline
+        // lock; per-leg slices are cut from it while holding it
         let mut payload = data.to_vec();
         let mut g = self.inner.lock().unwrap();
         let id = g.fresh_id();
@@ -495,6 +559,11 @@ impl LiveBox {
             t_submit: 0,
         };
         let sub = g.core.submit(io);
+        // legs whose replicas were all dead at submit: their bytes live
+        // on disk only — stamp the spans so reads take the disk path
+        for &(a, l) in &sub.disk_legs {
+            g.disk_marked.raise(a, l, id);
+        }
         if sub.disk_fallback {
             g.stats.disk_fallbacks += 1;
             g.done.insert(
@@ -506,16 +575,25 @@ impl LiveBox {
             );
             return id;
         }
+        // each sub carries exactly its own leg's slice of the payload
+        // (the engine splits multi-stripe writes into stripe-local legs;
+        // direct-mode subs have no engine-side span — they are the io).
+        // The last sub takes the buffer when it covers the whole span.
         let n = sub.sub_ids.len();
         for (i, sid) in sub.sub_ids.iter().enumerate() {
-            // clone per extra replica; the last sub takes the buffer
-            let p = if i + 1 == n {
+            let (a, l) = match g.core.sub_span(*sid) {
+                Some((a, l, _)) => (a, l),
+                None => (addr, payload.len() as u64),
+            };
+            let p = if i + 1 == n && a == addr && l == payload.len() as u64 {
                 std::mem::take(&mut payload)
             } else {
-                payload.clone()
+                let off = (a - addr) as usize;
+                payload[off..off + l as usize].to_vec()
             };
             g.payloads.insert(*sid, p);
         }
+        g.write_spans.insert(id, (addr, data.len() as u64));
         self.pump(&mut g);
         id
     }
@@ -545,14 +623,29 @@ impl LiveBox {
             return id;
         }
         for sid in &sub.sub_ids {
-            g.read_addr.insert(*sid, (addr, len));
+            let (a, l) = match g.core.sub_span(*sid) {
+                Some((a, l, _)) => (a, l),
+                None => (addr, len), // direct mode: the sub is the io
+            };
+            g.read_addr.insert(*sid, (a, l));
         }
+        g.read_subs.insert(id, sub.sub_ids.clone());
         self.pump(&mut g);
         id
     }
 
     /// Drain whatever is admitted and hand the chains to the QP workers.
+    /// Also absorbs any ranges the engine's donor election surrendered to
+    /// the disk path since the last pump (every submit / completion /
+    /// revival that can surrender is followed by a pump).
     fn pump(&self, g: &mut Inner) {
+        // surrendered ranges reflect every write issued so far, so stamp
+        // them with the *next* id: only a write submitted after the
+        // surrender can heal them back to remote ownership
+        let surrender_stamp = g.next_id;
+        for (_, a, l) in g.core.take_disk_surrenders() {
+            g.disk_marked.raise(a, l, surrender_stamp);
+        }
         let out = g.core.drain_all(0);
         if out.admission_blocked > 0 {
             g.stats.admission_waits += out.admission_blocked;
@@ -686,13 +779,47 @@ impl LiveBox {
                 g.read_data.remove(sid);
                 g.payloads.remove(sid);
             }
-            let sub_of: HashMap<u64, u64> =
-                out.completed_subs.iter().map(|&(s, p)| (p, s)).collect();
             for r in out.retired {
-                let data = sub_of.get(&r.id).and_then(|sid| {
-                    g.read_addr.remove(sid);
-                    g.read_data.remove(sid)
-                });
+                // a retired read assembles its payload from its legs in
+                // address order (split reads complete leg by leg, each
+                // leg's bytes parked in read_data until the parent
+                // retires); a retired write heals the disk-span tracker
+                let data = if let Some(sids) = g.read_subs.remove(&r.id) {
+                    let mut parts: Vec<(u64, Vec<u8>)> = Vec::new();
+                    let mut complete = !r.disk_fallback;
+                    for sid in &sids {
+                        let span = g.read_addr.remove(sid);
+                        match (span, g.read_data.remove(sid)) {
+                            (Some((a, _)), Some(d)) => parts.push((a, d)),
+                            _ => complete = false,
+                        }
+                    }
+                    if complete {
+                        parts.sort_by_key(|&(a, _)| a);
+                        let mut buf = Vec::new();
+                        for (_, d) in parts {
+                            buf.extend_from_slice(&d);
+                        }
+                        Some(buf)
+                    } else {
+                        None
+                    }
+                } else {
+                    if let Some((a, l)) = g.write_spans.remove(&r.id) {
+                        if r.disk_fallback {
+                            // some leg of this write is durable nowhere
+                            // remote (e.g. every replica died while it
+                            // was in flight): disk owns the span
+                            g.disk_marked.raise(a, l, r.id);
+                        } else {
+                            // the write is durable on every leg's
+                            // replicas: the remote side owns the span
+                            // (unless a *newer* write marked it disk)
+                            g.remote_healed.raise(a, l, r.id);
+                        }
+                    }
+                    None
+                };
                 if r.disk_fallback {
                     g.stats.disk_fallbacks += 1;
                 }
@@ -863,6 +990,66 @@ mod tests {
             assert_eq!(b, v2, "page {page} must not serve stale bytes");
         }
         assert_eq!(lb.stats().disk_fallbacks, 0);
+    }
+
+    /// The splitter end-to-end with real bytes: a request straddling a
+    /// stripe (= 1 MiB region) boundary is split into stripe-local legs,
+    /// each replicated on its own stripe's nodes, and the read payload is
+    /// reassembled from the legs in address order.
+    #[test]
+    fn split_requests_roundtrip_real_bytes_across_stripes() {
+        let fab = LoopbackFabric::start_sharded(3, 4 << 20, 2);
+        let lb = LiveBox::new_placed(fab, BatchMode::Hybrid, None, 2);
+        let addr = (1u64 << SHARD_REGION_SHIFT) - 8192;
+        let data: Vec<u8> = (0..4 * 4096u32).map(|x| (x % 241) as u8 + 1).collect();
+        assert!(lb.write_placed(addr, &data), "split write lands remotely");
+        let back = lb.read_placed(addr, data.len() as u64).expect("replicas alive");
+        assert_eq!(back, data, "legs reassemble in address order");
+        // stripe 0 lives on {0,1}, stripe 1 on {1,2}: killing node 0
+        // only affects the first leg, which fails over to node 1
+        lb.fail_node(0);
+        let back = lb.read_placed(addr, data.len() as u64).expect("failover");
+        assert_eq!(back, data);
+        assert_eq!(lb.stats().disk_fallbacks, 0);
+    }
+
+    /// Full-cluster churn with the donor election: all peers of a
+    /// revived node are dead, so its missed range has no live copy — the
+    /// election surrenders the span to the disk path (reads return the
+    /// disk-fallback signal, not stale bytes) and the node still rejoins
+    /// `Alive`. A later write lands remotely and heals the span.
+    #[test]
+    fn all_peers_down_recovers_via_disk_path_live() {
+        let fab = LoopbackFabric::start(2, 1 << 20);
+        let lb = LiveBox::new_placed_elect(fab, BatchMode::Hybrid, None, 2);
+        let v1: Vec<u8> = vec![0x11; 4096];
+        for page in 0..4u64 {
+            assert!(lb.write_placed(page * 4096, &v1));
+        }
+        lb.fail_node(0);
+        let v2: Vec<u8> = vec![0x22; 4096];
+        for page in 0..4u64 {
+            assert!(lb.write_placed(page * 4096, &v2), "peer still alive");
+        }
+        lb.fail_node(1); // the only holder of v2 dies
+        lb.revive_node(0);
+        assert!(
+            lb.wait_node_alive(0, Duration::from_secs(10)),
+            "no live donor: the node surrenders its backlog and rejoins"
+        );
+        // the surrendered span must NOT serve node 0's stale v1 bytes
+        for page in 0..4u64 {
+            assert!(
+                lb.read_placed(page * 4096, 4096).is_none(),
+                "page {page}: disk owns the span"
+            );
+        }
+        // a fresh write (to the one alive node) heals the span remotely
+        let v3: Vec<u8> = vec![0x33; 4096];
+        assert!(lb.write_placed(0, &v3));
+        assert_eq!(lb.read_placed(0, 4096).expect("healed"), v3);
+        // untouched pages stay disk-backed
+        assert!(lb.read_placed(4096, 4096).is_none());
     }
 
     #[test]

@@ -15,16 +15,19 @@
 //! CHAOS_SEED=0x... cargo test --release --test chaos_scenarios replay_env_seed -- --nocapture
 //! ```
 
+use rdmabox::coordinator::node::NodeState;
 use rdmabox::fabric::chaos::{
-    replay_command, run_scenario, ChaosFabric, FaultPlan, Scenario, ScenarioReport,
+    replay_command, run_scenario, ChaosFabric, ChaosProfile, FaultPlan, Scenario, ScenarioReport,
+    STRIPE_BYTES,
 };
 use rdmabox::fabric::Dir;
 
 /// Default base of the randomized sweep when CI does not pin one.
 const DEFAULT_SWEEP_BASE: u64 = 0x52D3_A201;
-/// Default sweep width (the acceptance floor is 20 seeds; raised once
-/// the payload model + resync scenarios joined the sweep).
-const DEFAULT_SWEEP_N: u64 = 28;
+/// Default sweep width (the acceptance floor is 20 seeds; raised to 36
+/// once the donor election + splitter + overlapping-divergence mixes
+/// joined the sweep — CI runs 64, the nightly extended sweep 200).
+const DEFAULT_SWEEP_N: u64 = 36;
 /// Livelock guard for directly driven fabrics.
 const STEPS: u64 = 4_000_000;
 
@@ -38,6 +41,16 @@ fn env_u64(name: &str) -> Option<u64> {
     match parsed {
         Ok(x) => Some(x),
         Err(_) => panic!("{name} must be a u64 (decimal or 0x-hex), got `{v}`"),
+    }
+}
+
+/// Which randomized mix the sweep draws (`CHAOS_PROFILE=election` is what
+/// the nightly `chaos-extended` workflow sets; replay commands carry it).
+fn env_profile() -> ChaosProfile {
+    match std::env::var("CHAOS_PROFILE").ok().as_deref() {
+        Some("election") => ChaosProfile::ElectionHeavy,
+        Some("") | None => ChaosProfile::Standard,
+        Some(other) => panic!("CHAOS_PROFILE must be `election` or unset, got `{other}`"),
     }
 }
 
@@ -245,6 +258,196 @@ fn runner_reports_stale_reads_when_resync_is_disabled() {
     }
 }
 
+/// A cluster-wide latency storm (congestion, not a single stalled QP):
+/// completions slow down, the pipe stays saturated, and the admission
+/// window bound — checked continuously by the runner — must hold through
+/// the whole storm. No failovers and no disk degradation: slow is not
+/// broken.
+#[test]
+fn latency_storm_keeps_window_bounded() {
+    let plan = FaultPlan::none().latency_storm(5_000, 160_000, 60_000);
+    let r = check(&Scenario::named("latency_storm_keeps_window_bounded", 0x5702_13, plan));
+    assert!(r.stormed_wcs > 0, "the storm never bit: {r:?}");
+    assert_eq!(r.failovers, 0, "a storm is slow, not broken: {r:?}");
+    assert_eq!(r.disk_fallbacks, 0, "{r:?}");
+    assert!(
+        r.elapsed_virtual_ns >= 65_000,
+        "stormed completions must actually be delayed: {r:?}"
+    );
+}
+
+/// Admission-policy churn: the window is shrunk and re-grown mid-run with
+/// traffic in flight. Bytes admitted under the old window must release
+/// under the new one (the runner's quiescence checks fail on any stranded
+/// capacity), and the in-flight level may never exceed the largest window
+/// that was ever active.
+#[test]
+fn admission_churn_no_leak() {
+    let plan = FaultPlan::none()
+        .admission_window(10_000, Some(4 * 4096))
+        .admission_window(70_000, Some(20 * 4096))
+        .admission_window(140_000, Some(5 * 4096));
+    let r = check(&Scenario::named("admission_churn_no_leak", 0xC802_7, plan));
+    assert_eq!(r.window_changes, 3, "every churn executed: {r:?}");
+    assert_eq!(r.retired, r.submitted, "no I/O stranded by the churn: {r:?}");
+    assert_eq!(r.failovers, 0);
+    assert_eq!(r.disk_fallbacks, 0);
+}
+
+/// Tentpole acceptance: two concurrent overlapping writes whose replica
+/// legs fail *crossed* (write A's leg on node 1, write B's leg on node 0)
+/// demote both replicas with overlapping missed ranges — the topology
+/// PR 3 documented as parked forever. The seed is found by a
+/// deterministic search over error-injection schedules, so the crossed
+/// pattern is guaranteed, not hoped for. With the election off, both
+/// nodes park in `Resyncing`; with it on, the epoch vectors elect the
+/// freshest holder per range, the cluster drains to `Alive`, and reads
+/// observe zero staleness.
+#[test]
+fn overlapping_resync_elects_freshest() {
+    let drive = |seed: u64, election: bool| {
+        let plan = FaultPlan::none().with_errors(0.5);
+        let mut fab = ChaosFabric::new(seed, 2, 1, 2, None, plan);
+        fab = if election {
+            fab.with_election()
+        } else {
+            fab.with_resync()
+        };
+        // two overlapping writes in flight concurrently (page 1 shared)
+        fab.submit(1, Dir::Write, 0, 8192);
+        fab.submit(2, Dir::Write, 4096, 8192);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab
+    };
+    // deterministic search: the first seed whose injected errors cross
+    // the two writes' legs (both replicas demoted, neither write
+    // degraded to disk) and whose repair traffic survives the 50% error
+    // rate. The search is pure, so CI and local runs agree on the seed.
+    let seed = (0..400u64)
+        .find(|&s| {
+            let fab = drive(s, true);
+            fab.engine().stats.resync_demotions == 2
+                && fab.stats.disk_fallbacks == 0
+                && fab.engine().node_state(0) == Some(NodeState::Alive)
+                && fab.engine().node_state(1) == Some(NodeState::Alive)
+        })
+        .expect("a crossed-divergence seed below 400");
+
+    // seed branch: election off — the overlap parks both replicas
+    let parked = drive(seed, false);
+    assert_eq!(parked.engine().stats.resync_demotions, 2);
+    assert_eq!(
+        parked.engine().node_state(0),
+        Some(NodeState::Resyncing),
+        "seed branch: conservative rule parks node 0 (seed {seed:#x})"
+    );
+    assert_eq!(parked.engine().node_state(1), Some(NodeState::Resyncing));
+    assert!(parked.engine().resync_backlog(0) + parked.engine().resync_backlog(1) > 0);
+
+    // election branch: drains to Alive with zero stale reads
+    let mut healed = drive(seed, true);
+    assert!(healed.engine().stats.resync_elections + healed.engine().stats.resync_self_heals >= 1);
+    assert_eq!(healed.engine().stats.resync_disk_surrenders, 0, "live copies existed");
+    healed.submit(10, Dir::Read, 0, 4096);
+    healed.submit(11, Dir::Read, 4096, 4096);
+    healed.submit(12, Dir::Read, 8192, 4096);
+    healed.run_to_idle(STEPS).expect("quiescent");
+    assert_eq!(healed.stats.stale_reads, 0, "{:?}", healed.stats);
+    assert_eq!(healed.engine().regulator().in_flight(), 0);
+}
+
+/// Tentpole acceptance: a revived node whose peers are *all* dead has no
+/// live copy of its missed range. Without the election it parks in
+/// `Resyncing` serving nothing; with it, the range is surrendered to the
+/// disk path (the fabric marks it disk-backed, as the paging layer's
+/// per-block disk bit would) and the node rejoins `Alive` — and no read
+/// ever observes stale remote data.
+#[test]
+fn all_peers_down_recovers_via_disk() {
+    let drive = |election: bool| {
+        let mut fab = ChaosFabric::new(0xD15C, 2, 1, 2, None, FaultPlan::none());
+        fab = if election {
+            fab.with_election()
+        } else {
+            fab.with_resync()
+        };
+        fab.submit(1, Dir::Write, 0, 4096);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.schedule_node_event(0, false, fab.now() + 1);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.submit(2, Dir::Write, 0, 4096); // v2 lives only on node 1
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.schedule_node_event(1, false, fab.now() + 1); // v2's holder dies
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.schedule_node_event(0, true, fab.now() + 1);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab
+    };
+    let parked = drive(false);
+    assert_eq!(
+        parked.engine().node_state(0),
+        Some(NodeState::Resyncing),
+        "without election the node parks (no live source)"
+    );
+    let mut healed = drive(true);
+    assert_eq!(
+        healed.engine().node_state(0),
+        Some(NodeState::Alive),
+        "election surrenders the range to disk and promotes"
+    );
+    assert!(healed.engine().stats.resync_disk_surrenders >= 1);
+    // the promoted node serves; the surrendered page is disk-backed, so
+    // the model routes its freshness to the disk copy — no stale read
+    let sub = healed.submit(3, Dir::Read, 0, 4096);
+    assert!(!sub.disk_fallback, "node 0 is alive and serving");
+    healed.run_to_idle(STEPS).expect("quiescent");
+    assert_eq!(healed.stats.stale_reads, 0, "{:?}", healed.stats);
+}
+
+/// Regression (splitter × payload oracle): a split read whose legs
+/// complete in different WCs — one leg from a freshly repaired replica,
+/// one from its peer — must be checked per leg, exactly once. Before the
+/// per-leg accounting, the oracle examined only a sub completing in the
+/// retiring WC, so a straddling read could under- or double-count
+/// staleness depending on completion order. Pinned seed; the unresynced
+/// branch must count exactly one stale page (the revived replica's leg),
+/// the resynced branch exactly zero.
+#[test]
+fn split_read_straddling_repair_accounts_once() {
+    let drive = |resync: bool| {
+        let mut fab = ChaosFabric::new(0x51EC7, 2, 1, 2, None, FaultPlan::none());
+        if resync {
+            fab = fab.with_resync();
+        }
+        let addr = STRIPE_BYTES - 4096; // one page each side of the boundary
+        fab.submit(1, Dir::Write, addr, 8192);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.schedule_node_event(0, false, fab.now() + 1);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.submit(2, Dir::Write, addr, 8192); // v2 lands only on node 1
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.schedule_node_event(0, true, fab.now() + 1);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        // the straddling read: leg 0 (stripe 0) prefers node 0 — the
+        // revived replica — leg 1 (stripe 1) prefers node 1
+        fab.submit(3, Dir::Read, addr, 8192);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab
+    };
+    let unsynced = drive(false);
+    assert!(unsynced.engine().stats.split_requests >= 3, "splitter engaged");
+    assert_eq!(
+        unsynced.stats.stale_reads, 1,
+        "exactly the revived replica's leg is stale — regardless of \
+         which leg's completion retired the read: {:?}",
+        unsynced.stats
+    );
+    let resynced = drive(true);
+    assert_eq!(resynced.stats.stale_reads, 0, "{:?}", resynced.stats);
+    assert!(resynced.engine().stats.resyncs_completed >= 1);
+    assert_eq!(resynced.engine().regulator().in_flight(), 0);
+}
+
 // ---------------- randomized sweep + replay ----------------
 
 /// N seeds per CI run (base pinned per run via CHAOS_SWEEP_BASE); every
@@ -253,33 +456,39 @@ fn runner_reports_stale_reads_when_resync_is_disabled() {
 fn randomized_sweep() {
     let base = env_u64("CHAOS_SWEEP_BASE").unwrap_or(DEFAULT_SWEEP_BASE);
     let n = env_u64("CHAOS_SWEEP_N").unwrap_or(DEFAULT_SWEEP_N);
+    let profile = env_profile();
     assert!(n >= 20, "sweep needs at least 20 seeds, got {n}");
-    println!("chaos sweep: {n} seeds from base {base:#x}");
+    println!("chaos sweep: {n} seeds from base {base:#x} ({profile:?} profile)");
     for i in 0..n {
-        let sc = Scenario::randomized(base.wrapping_add(i));
+        let sc = Scenario::randomized_with_profile(base.wrapping_add(i), profile);
         let r = check(&sc);
         println!(
-            "  seed {:#x}: {} ios, {} wcs, {} failovers, {} dups, {} errors, peak {} B",
+            "  seed {:#x}: {} ios, {} wcs, {} failovers, {} dups, {} errors, \
+             {} legs, {} elections, {} surrenders, peak {} B",
             sc.seed,
             r.retired,
             r.delivered_wcs,
             r.failovers,
             r.duplicate_wcs,
             r.injected_errors,
+            r.split_legs,
+            r.resync_elections,
+            r.resync_disk_surrenders,
             r.peak_in_flight
         );
     }
 }
 
 /// Replay a single sweep seed from the environment — the target of the
-/// reproducer command every failure prints.
+/// reproducer command every failure prints (`CHAOS_PROFILE` selects the
+/// mix the seed was drawn under, exactly as the reproducer pins it).
 #[test]
 fn replay_env_seed() {
     let Some(seed) = env_u64("CHAOS_SEED") else {
         println!("replay_env_seed: set CHAOS_SEED=<seed> to replay; nothing to do");
         return;
     };
-    let sc = Scenario::randomized(seed);
+    let sc = Scenario::randomized_with_profile(seed, env_profile());
     println!("replaying seed {seed:#x} with plan {:?}", sc.plan);
     let r = check(&sc);
     println!("seed {seed:#x} passed: {r:?}");

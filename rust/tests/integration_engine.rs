@@ -137,3 +137,42 @@ fn replica_killed_mid_run_reads_survive() {
     assert_eq!(fab.engine().stats.duplicate_wcs, 0);
     assert_eq!(fab.engine().regulator().in_flight(), 0);
 }
+
+/// Satellite: the engine-level request splitter end-to-end — multi-stripe
+/// requests are split into stripe-local legs at submission (the old
+/// "callers must keep requests stripe-local" contract is gone), retire
+/// exactly once, and survive a replica kill with per-leg failover.
+#[test]
+fn split_requests_survive_replica_kill() {
+    use rdmabox::fabric::chaos::STRIPE_BYTES;
+    // 3 nodes, 2 replicas: stripe 0 -> {0,1}, stripe 1 -> {1,2}
+    let mut fab = ChaosFabric::new(0x517E5, 3, 2, 2, Some(7 << 20), FaultPlan::none());
+    let addr = STRIPE_BYTES - 2 * 4096;
+    let span = 4 * 4096u64; // two pages each side of the boundary
+    for i in 0..8u64 {
+        fab.submit(i, Dir::Write, addr, span);
+    }
+    let written = fab.run_to_idle(1_000_000).expect("writes quiesce");
+    assert_eq!(written.len(), 8, "each split write retired exactly once");
+    assert!(written.iter().all(|r| !r.disk_fallback));
+    assert_eq!(fab.engine().stats.split_requests, 8);
+    assert_eq!(fab.engine().stats.split_legs, 16);
+
+    // node 0 dies: stripe 0 legs fail over to node 1, stripe 1 legs are
+    // untouched — the read still completes whole, exactly once
+    fab.schedule_node_event(0, false, fab.now() + 2_000);
+    let mut retired = Vec::new();
+    for round in 0..3u64 {
+        for i in 0..8u64 {
+            fab.submit(100 + round * 8 + i, Dir::Read, addr, span);
+        }
+        retired.extend(fab.run_to_idle(1_000_000).expect("reads quiesce"));
+    }
+    assert_eq!(retired.len(), 24, "each split read retired exactly once");
+    assert!(
+        retired.iter().all(|r| !r.disk_fallback),
+        "replica 1 serves stripe 0 throughout"
+    );
+    assert_eq!(fab.stats.stale_reads, 0);
+    assert_eq!(fab.engine().regulator().in_flight(), 0);
+}
