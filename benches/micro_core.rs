@@ -15,20 +15,57 @@
 //! `tools/check_bench.py` gates the JSON against `ci/bench_baseline.json`
 //! (>25% regression fails the job).
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use rdmabox::config::FabricConfig;
 use rdmabox::coordinator::batching::{plan, BatchLimits, BatchMode};
-use rdmabox::coordinator::engine::{EngineCosts, IoEngine};
+use rdmabox::coordinator::engine::{DrainOut, EngineCosts, IoEngine, WcOut};
 use rdmabox::coordinator::merge_queue::{MergeCheck, MergeQueue};
+use rdmabox::coordinator::node::NodeMap;
 use rdmabox::coordinator::polling::{PollStep, PollerFsm, PollingMode};
 use rdmabox::coordinator::StackConfig;
 use rdmabox::fabric::sim::{run_pipeline, Driver, Sim};
 use rdmabox::fabric::{AppIo, Dir, Wc, WcStatus};
 use rdmabox::paging::cache::ClockCache;
+use rdmabox::util::fxhash::FxHashMap;
 use rdmabox::util::hist::Hist;
 use rdmabox::util::rng::Pcg32;
+use rdmabox::util::slab::Slab;
 use rdmabox::util::zipf::ScrambledZipfian;
+
+/// Counting allocator: every bench reports **allocations per op** in the
+/// measured (post-warmup) phase, and `tools/check_bench.py` gates the
+/// zero-allocation property of the engine's steady-state hot path
+/// (`engine_pipeline_64ios_steady` must report `allocs_per_op == 0`).
+/// Only allocation *events* are counted (alloc/realloc/alloc_zeroed);
+/// frees are not, since the gated property is "touches the allocator",
+/// not live-byte accounting.
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 /// One measured hot path, as written to `BENCH_JSON`.
 struct BenchResult {
@@ -41,6 +78,9 @@ struct BenchResult {
     /// block samples; the JSON omits the field and the gate skips it.
     p99_block_ns: Option<f64>,
     ops_per_sec: f64,
+    /// Allocator events per iteration in the measured phase (after
+    /// warm-up). `None` for single-shot benches.
+    allocs_per_op: Option<f64>,
 }
 
 /// Blocks per bench for the p99-of-block-means tail estimate.
@@ -59,6 +99,7 @@ fn bench<F: FnMut() -> u64>(
     }
     let per_block = (iters / BLOCKS).max(1);
     let mut samples = Vec::with_capacity(BLOCKS as usize);
+    let allocs_before = ALLOC_EVENTS.load(Ordering::Relaxed);
     let t0 = Instant::now();
     for _ in 0..BLOCKS {
         let b0 = Instant::now();
@@ -68,6 +109,10 @@ fn bench<F: FnMut() -> u64>(
         samples.push(b0.elapsed().as_nanos() as f64 / per_block as f64);
     }
     let done = BLOCKS * per_block;
+    // the measurement loop itself is allocation-free (samples are
+    // preallocated), so this diff is exactly f()'s allocator traffic
+    let allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - allocs_before;
+    let allocs_per_op = allocs as f64 / done as f64;
     let mean = t0.elapsed().as_nanos() as f64 / done as f64;
     samples.sort_by(|a, b| a.partial_cmp(b).expect("finite sample"));
     let idx = ((samples.len() as f64 * 0.99).ceil() as usize).saturating_sub(1);
@@ -75,7 +120,7 @@ fn bench<F: FnMut() -> u64>(
     let ops = 1e9 / mean;
     println!(
         "{name:34} {done:>9} iters  {mean:>9.1} ns/iter  ({ops:>12.0} ops/s)  \
-         p99/blk {p99:>9.1} ns  [sink {sink}]"
+         p99/blk {p99:>9.1} ns  {allocs_per_op:>7.3} allocs/op  [sink {sink}]"
     );
     results.push(BenchResult {
         name,
@@ -83,6 +128,7 @@ fn bench<F: FnMut() -> u64>(
         mean_ns: mean,
         p99_block_ns: Some(p99),
         ops_per_sec: ops,
+        allocs_per_op: Some(allocs_per_op),
     });
 }
 
@@ -112,13 +158,18 @@ fn write_json(path: &str, smoke: bool, results: &[BenchResult]) {
             Some(p) => format!("\"p99_block_ns\": {p:.1}, "),
             None => String::new(),
         };
+        let allocs = match r.allocs_per_op {
+            Some(a) => format!("\"allocs_per_op\": {a:.4}, "),
+            None => String::new(),
+        };
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
-             {}\"ops_per_sec\": {:.0}}}{}\n",
+             {}{}\"ops_per_sec\": {:.0}}}{}\n",
             r.name,
             r.iters,
             r.mean_ns,
             p99,
+            allocs,
             r.ops_per_sec,
             if i + 1 == results.len() { "" } else { "," }
         ));
@@ -185,14 +236,14 @@ fn main() {
             }
             let out = e.drain_all(0);
             let mut retired = 0u64;
-            for chain in out.chains {
-                for wr in chain.wrs {
+            for c in &out.chains {
+                for wr in &out.wrs[c.start..c.end] {
                     let wc = Wc {
                         wr_id: wr.wr_id,
-                        qp: chain.qp,
+                        qp: c.qp,
                         op: wr.op,
                         len: wr.len,
-                        app_ios: wr.app_ios,
+                        app_ios: wr.app_ios.clone(),
                         status: WcStatus::Success,
                     };
                     retired += e.on_wc(&wc, 0).retired.len() as u64;
@@ -202,13 +253,109 @@ fn main() {
         });
     }
 
+    // the allocation-gated steady-state pipeline (the tentpole number of
+    // the zero-allocation hot path): 64 placed writes per iteration
+    // through submit -> merge -> plan -> admit -> retire, with the
+    // engine's slab ledgers, the merge queues' swap-buffer drain, the
+    // planner arena, and caller-owned DrainOut/WcOut scratch. After
+    // warm-up this cycle must not touch the allocator at all —
+    // `allocs_per_op == 0` is enforced by ci/bench_baseline.json.
+    {
+        let map = NodeMap::new(1, 1, 1 << 20);
+        let mut e = IoEngine::new(
+            BatchMode::Hybrid,
+            BatchLimits::default(),
+            1,
+            4,
+            Some(7 << 20),
+            EngineCosts::free(),
+        )
+        .with_placement(map);
+        let mut out = DrainOut::default();
+        let mut wout = WcOut::default();
+        let mut id = 0u64;
+        bench(&mut results, "engine_pipeline_64ios_steady", iters(20_000), || {
+            for _ in 0..64 {
+                e.submit(io(id, (id % 4096) * 4096));
+                id += 1;
+            }
+            e.drain_all_into(0, &mut out);
+            let mut retired = 0u64;
+            // detach the chain list so the WR arena can be borrowed
+            // mutably below (mem::take of a Vec allocates nothing)
+            let chains = std::mem::take(&mut out.chains);
+            for c in &chains {
+                for wr in &mut out.wrs[c.start..c.end] {
+                    let wc = Wc {
+                        wr_id: wr.wr_id,
+                        qp: c.qp,
+                        op: wr.op,
+                        len: wr.len,
+                        // move the inline id list out of the arena
+                        // (leaves an empty inline list behind): the
+                        // whole WC round trip is allocation-free
+                        app_ios: std::mem::take(&mut wr.app_ios),
+                        status: WcStatus::Success,
+                    };
+                    e.on_wc_into(&wc, 0, &mut wout);
+                    retired += wout.retired.len() as u64;
+                }
+            }
+            out.chains = chains;
+            retired
+        });
+    }
+
+    // the ledger ablation (kept in-tree so the slab's win stays
+    // measured, not asserted): one op = retire + re-register one
+    // in-flight record at steady depth 64 — the exact access pattern of
+    // the engine's submit/retire ledgers. `submit_retire_slab` is the
+    // generational-slab path (id encodes the slot: index + generation
+    // check); `submit_retire_hashmap` is the FxHashMap path it replaced
+    // (hash probe per lookup). ci/bench_baseline.json gates the slab at
+    // >= 2x the hashmap's throughput.
+    {
+        const DEPTH: usize = 64;
+        type Rec = [u64; 8]; // SubIo-sized payload
+        let mut slab: Slab<Rec> = Slab::new();
+        let mut ring = [0u64; DEPTH];
+        for (i, slot) in ring.iter_mut().enumerate() {
+            *slot = slab.insert([i as u64; 8]);
+        }
+        let mut pos = 0usize;
+        bench(&mut results, "submit_retire_slab", iters(2_000_000), || {
+            let v = slab.remove(ring[pos]).expect("live key");
+            let k = slab.insert(v);
+            ring[pos] = k;
+            pos = (pos + 1) % DEPTH;
+            k
+        });
+
+        let mut map: FxHashMap<u64, Rec> = FxHashMap::default();
+        let mut ring = [0u64; DEPTH];
+        let mut next_id = 0u64;
+        for slot in ring.iter_mut() {
+            map.insert(next_id, [next_id; 8]);
+            *slot = next_id;
+            next_id += 1;
+        }
+        let mut pos = 0usize;
+        bench(&mut results, "submit_retire_hashmap", iters(2_000_000), || {
+            let v = map.remove(&ring[pos]).expect("live key");
+            next_id += 1;
+            map.insert(next_id, v);
+            ring[pos] = next_id;
+            pos = (pos + 1) % DEPTH;
+            next_id
+        });
+    }
+
     // resync repair-copy throughput (the ROADMAP's "resync copy
     // throughput" trajectory candidate): one iteration = a replica dies,
     // misses an 8-page write burst, revives, and the epoch-resync
     // protocol (with donor election enabled) drains its repair copies
     // through the pipeline back to Alive.
     {
-        use rdmabox::coordinator::node::NodeMap;
         let map = NodeMap::new(2, 2, 1 << 20);
         let mut e = IoEngine::new(
             BatchMode::Hybrid,
@@ -225,17 +372,17 @@ fn main() {
         fn drain_complete(e: &mut IoEngine) {
             loop {
                 let out = e.drain_all(0);
-                if out.chains.is_empty() {
+                if out.wrs.is_empty() {
                     break;
                 }
-                for chain in out.chains {
-                    for wr in chain.wrs {
+                for c in &out.chains {
+                    for wr in &out.wrs[c.start..c.end] {
                         let wc = Wc {
                             wr_id: wr.wr_id,
-                            qp: chain.qp,
+                            qp: c.qp,
                             op: wr.op,
                             len: wr.len,
-                            app_ios: wr.app_ios,
+                            app_ios: wr.app_ios.clone(),
                             status: WcStatus::Success,
                         };
                         e.on_wc(&wc, 0);
@@ -361,6 +508,7 @@ fn main() {
             mean_ns: 1e9 / ios_per_sec,
             p99_block_ns: None, // single shot: no tail estimate
             ops_per_sec: ios_per_sec,
+            allocs_per_op: None,
         });
     }
 

@@ -73,6 +73,27 @@ pub struct PlannedChain {
     pub wrs: Vec<WorkRequest>,
 }
 
+/// One planned post in the flat (arena) representation: the chain's WRs
+/// are `wrs[start..end]` of the output buffer [`plan_into`] appended to.
+/// Flat spans are what let the engine's drain path reuse one contiguous
+/// WR buffer per drain instead of allocating a `Vec` per chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChainSpan {
+    pub node: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Reusable planner scratch: per-node grouping buffers that survive
+/// across drains, so steady-state planning allocates nothing. The groups
+/// keep their high-water capacity; `active` marks how many are in use for
+/// the current call.
+#[derive(Debug, Default)]
+pub struct PlanArena {
+    groups: Vec<(usize, Vec<AppIo>)>,
+    active: usize,
+}
+
 /// Plan statistics, fed into the experiment counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PlanStats {
@@ -90,120 +111,166 @@ pub struct PlanStats {
 /// Plan a drained batch. Input order is the FIFO drain order; output chains
 /// preserve per-node arrival order of the head request so latency-sensitive
 /// requests are not reordered behind later arrivals.
+///
+/// Allocating convenience wrapper around [`plan_into`]; the engine's hot
+/// drain path calls the `_into` form with reused buffers.
 pub fn plan(
     mode: BatchMode,
     lim: &BatchLimits,
-    ios: Vec<AppIo>,
+    mut ios: Vec<AppIo>,
     next_wr_id: &mut u64,
 ) -> (Vec<PlannedChain>, PlanStats) {
+    let mut wrs = Vec::new();
+    let mut spans = Vec::new();
+    let mut arena = PlanArena::default();
+    let stats = plan_into(
+        mode,
+        lim,
+        &mut ios,
+        next_wr_id,
+        &mut wrs,
+        &mut spans,
+        &mut arena,
+    );
+    // spans are contiguous and ascending over `wrs`, so a single pass
+    // carves the flat buffer into per-chain Vecs
+    let mut out = Vec::with_capacity(spans.len());
+    let mut iter = wrs.into_iter();
+    for s in spans {
+        out.push(PlannedChain {
+            node: s.node,
+            wrs: iter.by_ref().take(s.end - s.start).collect(),
+        });
+    }
+    (out, stats)
+}
+
+/// Zero-allocation batch planning: drains `ios` (leaving it empty with its
+/// capacity intact), appends the planned [`WorkRequest`]s to `wrs` and the
+/// chain boundaries to `chains` (as index spans into `wrs`), grouping
+/// through the reusable `arena`. At steady state — buffers warm, WRs
+/// within the inline [`crate::util::idlist::INLINE_IDS`] merge width —
+/// this performs no heap allocation at all.
+pub fn plan_into(
+    mode: BatchMode,
+    lim: &BatchLimits,
+    ios: &mut Vec<AppIo>,
+    next_wr_id: &mut u64,
+    wrs: &mut Vec<WorkRequest>,
+    chains: &mut Vec<ChainSpan>,
+    arena: &mut PlanArena,
+) -> PlanStats {
     let mut stats = PlanStats::default();
     if ios.is_empty() {
-        return (Vec::new(), stats);
+        return stats;
     }
     // fast path: a lone request (the common light-load case — §5.1 "if a
     // request arrives alone, its thread posts a single RDMA I/O
     // immediately") skips grouping, sorting and chaining entirely.
     if ios.len() == 1 {
         let node = ios[0].node;
-        let wr = mk_wr(next_wr_id, &ios);
+        let start = wrs.len();
+        wrs.push(mk_wr(next_wr_id, &ios[..1]));
+        ios.clear();
         stats.wqes = 1;
         stats.posts = 1;
-        return (
-            vec![PlannedChain {
-                node,
-                wrs: vec![wr],
-            }],
-            stats,
-        );
+        chains.push(ChainSpan {
+            node,
+            start,
+            end: start + 1,
+        });
+        return stats;
     }
 
-    // 1) group by destination node, preserving arrival order.
-    let mut by_node: Vec<(usize, Vec<AppIo>)> = Vec::new();
-    for io in ios {
-        match by_node.iter_mut().find(|(n, _)| *n == io.node) {
-            Some((_, v)) => v.push(io),
-            None => by_node.push((io.node, vec![io])),
+    // 1) group by destination node, preserving arrival order. Group
+    // buffers are recycled from previous calls (`active` marks use).
+    arena.active = 0;
+    for io in ios.drain(..) {
+        match arena.groups[..arena.active]
+            .iter()
+            .position(|(n, _)| *n == io.node)
+        {
+            Some(i) => arena.groups[i].1.push(io),
+            None => {
+                if arena.active == arena.groups.len() {
+                    arena.groups.push((io.node, Vec::new()));
+                }
+                let g = &mut arena.groups[arena.active];
+                g.0 = io.node;
+                g.1.clear();
+                g.1.push(io);
+                arena.active += 1;
+            }
         }
     }
 
-    let mut chains = Vec::new();
-    for (node, group) in by_node {
-        // 2) merge adjacent requests (Batching-on-MR) if the mode allows.
-        let wrs = if mode.merges() {
-            merge_adjacent(group, lim, next_wr_id, &mut stats)
+    for gi in 0..arena.active {
+        let node = arena.groups[gi].0;
+        let group_start = wrs.len();
+        // 2) merge adjacent requests (Batching-on-MR) if the mode allows:
+        // sort by remote address within the drained set — this is the
+        // "opportunistically looks for multiple adjacent requests" step;
+        // after the sort every mergeable run is a contiguous slice.
+        if mode.merges() {
+            arena.groups[gi]
+                .1
+                .sort_by_key(|io| (io.dir.op() as u8, io.addr));
+            let g = &arena.groups[gi].1;
+            let mut i = 0;
+            while i < g.len() {
+                let mut end_addr = g[i].addr + g[i].len;
+                let mut bytes = g[i].len;
+                let mut j = i + 1;
+                while j < g.len()
+                    && (j - i) < lim.max_sge
+                    && g[j].dir == g[i].dir
+                    && g[j].addr == end_addr
+                    && bytes + g[j].len <= lim.max_wr_bytes
+                {
+                    end_addr += g[j].len;
+                    bytes += g[j].len;
+                    j += 1;
+                }
+                if j - i > 1 {
+                    stats.merged_ios += (j - i) as u64;
+                }
+                wrs.push(mk_wr(next_wr_id, &g[i..j]));
+                stats.wqes += 1;
+                i = j;
+            }
         } else {
-            group
-                .into_iter()
-                .map(|io| {
-                    let wr = mk_wr(next_wr_id, &[io]);
-                    stats.wqes += 1;
-                    wr
-                })
-                .collect()
-        };
+            for io in &arena.groups[gi].1 {
+                wrs.push(mk_wr(next_wr_id, std::slice::from_ref(io)));
+                stats.wqes += 1;
+            }
+        }
 
         // 3) chain into doorbell posts if the mode allows.
         if mode.chains() {
-            for chunk in wrs.chunks(lim.max_chain) {
+            let mut s = group_start;
+            while s < wrs.len() {
+                let e = (s + lim.max_chain).min(wrs.len());
                 stats.posts += 1;
-                stats.chained_wrs += (chunk.len() - 1) as u64;
-                chains.push(PlannedChain {
+                stats.chained_wrs += (e - s - 1) as u64;
+                chains.push(ChainSpan {
                     node,
-                    wrs: chunk.to_vec(),
+                    start: s,
+                    end: e,
                 });
+                s = e;
             }
         } else {
-            for wr in wrs {
+            for s in group_start..wrs.len() {
                 stats.posts += 1;
-                chains.push(PlannedChain {
+                chains.push(ChainSpan {
                     node,
-                    wrs: vec![wr],
+                    start: s,
+                    end: s + 1,
                 });
             }
         }
     }
-    (chains, stats)
-}
-
-/// Merge adjacent (contiguous remote address, same direction) requests into
-/// multi-SGE WRs. Requests are sorted by remote address *within the drained
-/// set* — this is the "opportunistically looks for multiple adjacent
-/// requests" step; anything non-adjacent stays a separate WR.
-fn merge_adjacent(
-    mut group: Vec<AppIo>,
-    lim: &BatchLimits,
-    next_wr_id: &mut u64,
-    stats: &mut PlanStats,
-) -> Vec<WorkRequest> {
-    group.sort_by_key(|io| (io.dir.op() as u8, io.addr));
-    let mut out = Vec::new();
-    let mut run: Vec<AppIo> = Vec::new();
-    let mut i = 0;
-    while i < group.len() {
-        run.clear();
-        run.push(group[i]);
-        let mut end = group[i].addr + group[i].len;
-        let mut bytes = group[i].len;
-        let mut j = i + 1;
-        while j < group.len()
-            && run.len() < lim.max_sge
-            && group[j].dir == group[i].dir
-            && group[j].addr == end
-            && bytes + group[j].len <= lim.max_wr_bytes
-        {
-            end += group[j].len;
-            bytes += group[j].len;
-            run.push(group[j]);
-            j += 1;
-        }
-        if run.len() > 1 {
-            stats.merged_ios += run.len() as u64;
-        }
-        out.push(mk_wr(next_wr_id, &run));
-        stats.wqes += 1;
-        i = j;
-    }
-    out
+    stats
 }
 
 fn mk_wr(next_wr_id: &mut u64, ios: &[AppIo]) -> WorkRequest {
@@ -501,6 +568,75 @@ mod tests {
                 Ok(())
             });
         }
+    }
+
+    /// The arena planner: flat spans tile the WR buffer exactly, agree
+    /// with the allocating wrapper, and the reused buffers stop growing
+    /// at steady state.
+    #[test]
+    fn plan_into_spans_tile_the_wr_buffer_and_buffers_stabilize() {
+        let lim = BatchLimits::default();
+        let mk_ios = || -> Vec<AppIo> {
+            let mut v: Vec<AppIo> = (0..12u64).map(|i| wio(i, i * 4096)).collect();
+            v.extend((0..4u64).map(|i| io(12 + i, 1, (10 + i * 3) << 20, 4096, Dir::Write)));
+            v
+        };
+        let mut wr_id_a = 0u64;
+        let (chains_a, stats_a) = plan(BatchMode::Hybrid, &lim, mk_ios(), &mut wr_id_a);
+
+        let mut ios = mk_ios();
+        let mut wrs = Vec::new();
+        let mut spans = Vec::new();
+        let mut arena = PlanArena::default();
+        let mut wr_id_b = 0u64;
+        let stats_b = plan_into(
+            BatchMode::Hybrid,
+            &lim,
+            &mut ios,
+            &mut wr_id_b,
+            &mut wrs,
+            &mut spans,
+            &mut arena,
+        );
+        assert!(ios.is_empty(), "inputs drained in place");
+        assert_eq!(stats_a, stats_b);
+        // spans tile [0, wrs.len()) contiguously, in order
+        let mut cursor = 0usize;
+        for s in &spans {
+            assert_eq!(s.start, cursor, "span gap/overlap at {cursor}");
+            assert!(s.end > s.start);
+            cursor = s.end;
+        }
+        assert_eq!(cursor, wrs.len());
+        // chain-by-chain agreement with the allocating wrapper
+        assert_eq!(chains_a.len(), spans.len());
+        for (c, s) in chains_a.iter().zip(spans.iter()) {
+            assert_eq!(c.node, s.node);
+            assert_eq!(c.wrs.len(), s.end - s.start);
+            for (wa, wb) in c.wrs.iter().zip(wrs[s.start..s.end].iter()) {
+                assert_eq!(wa.wr_id, wb.wr_id);
+                assert_eq!(wa.app_ios, wb.app_ios);
+                assert_eq!((wa.len, wa.remote_addr), (wb.len, wb.remote_addr));
+            }
+        }
+        // steady state: reused buffers keep their capacity and stop
+        // growing after the first call warmed them
+        for _ in 0..50 {
+            wrs.clear();
+            spans.clear();
+            let mut ios = mk_ios();
+            let _ = plan_into(
+                BatchMode::Hybrid,
+                &lim,
+                &mut ios,
+                &mut wr_id_b,
+                &mut wrs,
+                &mut spans,
+                &mut arena,
+            );
+        }
+        assert!(wrs.capacity() >= wrs.len());
+        assert_eq!(arena.active, 2, "two destination nodes grouped");
     }
 
     /// Property: planning conserves app I/Os (each exactly once), never

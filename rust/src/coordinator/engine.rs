@@ -36,14 +36,14 @@
 //! [`node`]: crate::coordinator::node
 
 use crate::config::FabricConfig;
-use crate::coordinator::batching::{plan, BatchLimits, BatchMode};
+use crate::coordinator::batching::{plan_into, BatchLimits, BatchMode, ChainSpan, PlanArena};
 use crate::coordinator::channel::ChannelMap;
-use crate::coordinator::merge_queue::{MergeCheck, MergeQueues};
+use crate::coordinator::merge_queue::{MergeOutcome, MergeQueues};
 use crate::coordinator::node::{EpochMap, NodeMap, NodeState, ReadRoute};
 use crate::coordinator::regulator::{AdmissionPolicy, Regulator, StaticWindow, Unlimited};
 use crate::coordinator::StackConfig;
-use crate::fabric::{AppIo, Dir, NodeId, QpId, Wc, WcStatus, WorkRequest};
-use crate::util::fxhash::FxHashMap;
+use crate::fabric::{AppIo, Dir, IdList, NodeId, QpId, Wc, WcStatus, WorkRequest};
+use crate::util::slab::Slab;
 
 /// Shard affinity region size (re-exported from the channel layer, which
 /// owns the routing function). Because merging only happens within one
@@ -97,8 +97,9 @@ enum Routing {
 pub struct Submitted {
     /// The queued fabric-level sub-I/O ids (one per replica per
     /// stripe-local leg for placed writes; `[io.id]` in direct mode).
-    /// Work requests carry these ids.
-    pub sub_ids: Vec<u64>,
+    /// Work requests carry these ids. Inline up to 16 ids, so the common
+    /// submit does not allocate.
+    pub sub_ids: IdList,
     /// Every leg of the request found every replica dead: nothing was
     /// queued, the caller owns the disk path for the whole span.
     pub disk_fallback: bool,
@@ -109,27 +110,69 @@ pub struct Submitted {
     pub disk_legs: Vec<(u64, u64)>,
 }
 
-/// One planned post: a doorbell chain bound to a concrete QP.
-#[derive(Debug)]
+/// One planned post: a doorbell chain bound to a concrete QP. The chain's
+/// work requests are `wrs[start..end]` of the owning [`DrainOut`]'s flat
+/// buffer — a span, not an owned `Vec`, so a reused `DrainOut` keeps one
+/// contiguous WR arena alive across drains instead of allocating a `Vec`
+/// per chain.
+#[derive(Debug, Clone, Copy)]
 pub struct PostChain {
     pub qp: QpId,
     pub node: NodeId,
-    pub wrs: Vec<WorkRequest>,
+    /// Index of the chain's first WR in [`DrainOut::wrs`].
+    pub start: usize,
+    /// One past the chain's last WR in [`DrainOut::wrs`].
+    pub end: usize,
     /// Serialized CPU consumed on the drain path up to (and including)
     /// this chain's post — backends posting with a cost model schedule the
     /// chain at `drain_start + cpu_offset_ns`.
     pub cpu_offset_ns: u64,
 }
 
-/// Result of draining the sharded queues.
+/// Result of draining the sharded queues: a flat arena of posted WRs plus
+/// the chain spans that partition it (in post order). Reuse one instance
+/// across drains via [`IoEngine::drain_all_into`] — `clear` keeps the
+/// buffers' capacity, making the steady-state drain allocation-free.
 #[derive(Debug, Default)]
 pub struct DrainOut {
+    /// Every WR of this drain, flat, in post order.
+    pub wrs: Vec<WorkRequest>,
     pub chains: Vec<PostChain>,
     /// Total serialized CPU of this drain (merge scans + posting).
     pub cpu_ns: u64,
     pub merged_ios: u64,
     /// Times the admission window blocked or truncated a shard drain.
     pub admission_blocked: u64,
+}
+
+impl DrainOut {
+    /// Reset for reuse, keeping the WR/chain buffer capacity.
+    pub fn clear(&mut self) {
+        self.wrs.clear();
+        self.chains.clear();
+        self.cpu_ns = 0;
+        self.merged_ios = 0;
+        self.admission_blocked = 0;
+    }
+
+    /// The work requests of one chain.
+    pub fn chain_wrs(&self, c: &PostChain) -> &[WorkRequest] {
+        &self.wrs[c.start..c.end]
+    }
+
+    /// Consume the drain, yielding every chain with its owned WRs, in
+    /// post order. This is the one place that relies on the invariant
+    /// that the chain spans exactly tile `wrs` in order — backends that
+    /// need owned WRs (to move them into their queues) carve through
+    /// here instead of re-implementing the walk.
+    pub fn into_chains(self) -> impl Iterator<Item = (PostChain, Vec<WorkRequest>)> {
+        let DrainOut { wrs, chains, .. } = self;
+        let mut wrs = wrs.into_iter();
+        chains.into_iter().map(move |c| {
+            let chain_wrs: Vec<WorkRequest> = wrs.by_ref().take(c.end - c.start).collect();
+            (c, chain_wrs)
+        })
+    }
 }
 
 /// An application I/O whose replication policy is satisfied.
@@ -163,7 +206,9 @@ pub struct ResyncCopy {
     pub len: u64,
 }
 
-/// Result of handling one work completion.
+/// Result of handling one work completion. Reuse one instance across
+/// completions via [`IoEngine::on_wc_into`] — `clear` keeps the buffers'
+/// capacity, so steady-state retirement performs no heap allocation.
 #[derive(Debug, Default)]
 pub struct WcOut {
     pub retired: Vec<RetiredIo>,
@@ -180,6 +225,17 @@ pub struct WcOut {
     /// Read sub-I/Os re-queued onto the next alive replica (failover).
     /// The caller should drain again to post them.
     pub requeued: u32,
+}
+
+impl WcOut {
+    /// Reset for reuse, keeping the buffers' capacity.
+    pub fn clear(&mut self) {
+        self.retired.clear();
+        self.completed_subs.clear();
+        self.failed_subs.clear();
+        self.resync_copies.clear();
+        self.requeued = 0;
+    }
 }
 
 /// Cumulative pipeline statistics.
@@ -247,6 +303,9 @@ enum SubKind {
 /// A queued fabric-level sub-I/O (placed mode).
 #[derive(Debug, Clone, Copy)]
 struct SubIo {
+    /// Slab key of the [`Pending`] leg this sub belongs to, or
+    /// [`RESYNC_PARENT`] for engine-internal resync sub-I/Os (slab keys
+    /// never reach `u64::MAX`, so the sentinel cannot collide).
     parent: u64,
     addr: u64,
     len: u64,
@@ -397,6 +456,10 @@ struct ResyncState {
     /// Ranges surrendered to the disk path (no live copy held the
     /// required epoch), awaiting pickup by the backend.
     surrendered: Vec<(NodeId, u64, u64)>,
+    /// Prune the epoch vectors when the required floor grows past this
+    /// many stored ranges; doubled after each prune so the amortized
+    /// cost stays O(1) per write (see `IoEngine::prune_epoch_floor`).
+    prune_watermark: usize,
 }
 
 impl ResyncState {
@@ -414,30 +477,52 @@ impl ResyncState {
             applied: (0..nodes).map(|_| EpochMap::default()).collect(),
             required: EpochMap::default(),
             surrendered: Vec::new(),
+            prune_watermark: PRUNE_FLOOR_RANGES,
         }
     }
 }
 
-/// Engine-internal leg ids live above this bit so they can never collide
-/// with caller-chosen application I/O ids (which must stay below it).
+/// Initial (and minimum) prune watermark: below this many stored ranges
+/// the required floor is not worth scanning.
+const PRUNE_FLOOR_RANGES: usize = 64;
+
+/// Caller-chosen application I/O ids must stay below this bit: everything
+/// above it is reserved id space (historically the engine's leg ids; the
+/// slab keys the engine mints today also stay below it by construction).
 const LEG_BASE: u64 = 1 << 63;
+
+/// Upper bound on replicas per stripe the submit path supports with
+/// inline (allocation-free) target buffers. Enforced by
+/// [`IoEngine::with_placement`]; every shipped topology uses ≤ 4.
+const MAX_REPLICAS: usize = 8;
 
 /// Aggregation state of one split application I/O: the request retires
 /// when every stripe-local leg has retired, with the disk-fallback and
-/// failed-over flags ORed across legs.
+/// failed-over flags ORed across legs. Slab-resident; each leg's
+/// [`Pending`] entry holds the slab key.
 #[derive(Debug)]
 struct LegAgg {
     remaining: u32,
     disk_any: bool,
     failed_over_any: bool,
+    /// The application I/O id to retire when the last leg lands.
+    app_id: u64,
 }
 
-/// Retirement state of one placed application I/O.
+/// Retirement state of one placed leg (slab-resident; sub-I/Os hold the
+/// slab key in their `parent` field).
 #[derive(Debug)]
 struct Pending {
     remaining: u32,
     any_ok: bool,
     failed_over: bool,
+    /// The application I/O id this leg resolves to — what backends see in
+    /// `completed_subs` / `failed_subs`, and what retires for an unsplit
+    /// request.
+    app_id: u64,
+    /// Slab key of the [`LegAgg`] for a split request; `None` when the
+    /// request had a single stripe-local leg and retires directly.
+    agg: Option<u64>,
     /// Write replicas whose leg failed terminally. Recorded as missed
     /// (and demoted) only at retirement, and only when the write
     /// retired `any_ok`: an all-legs-failed write takes the disk path —
@@ -447,10 +532,12 @@ struct Pending {
     failed_nodes: Vec<NodeId>,
 }
 
-/// A WR posted to the fabric and not yet completed. The map keyed by this
-/// is the engine's idempotency ledger: the first completion for a wr_id
-/// removes the entry, any later delivery of the same wr_id is a duplicate
-/// and is dropped before it can touch the window or the retirement state.
+/// A WR posted to the fabric and not yet completed. The slab keyed by
+/// this is the engine's idempotency ledger: the WR's id *is* its slab key
+/// (slot | generation), so the first completion for a wr_id frees the
+/// slot — bumping its generation — and any later delivery of the same
+/// wr_id fails the generation check and is dropped before it can touch
+/// the window or the retirement state.
 #[derive(Debug, Clone, Copy)]
 struct PostedWr {
     bytes: u64,
@@ -458,6 +545,15 @@ struct PostedWr {
 }
 
 /// The unified submit → merge → batch → admit → retire pipeline.
+///
+/// All four in-flight ledgers (`subs`, `pending`, `outstanding`, `aggs`)
+/// are generational [`Slab`]s: the engine mints every id it later looks
+/// up, so the ids encode their own storage slot and completion-time
+/// lookup is an array index, not a hash probe. Together with the drain
+/// scratch buffers (`drain_buf`, `span_buf`, `plan_arena`) and the
+/// caller-owned [`DrainOut`]/[`WcOut`], the steady-state
+/// submit → drain → retire cycle allocates nothing — a property the
+/// `engine_pipeline_64ios_steady` bench gate enforces in CI.
 #[derive(Debug)]
 pub struct IoEngine {
     batch: BatchMode,
@@ -468,21 +564,27 @@ pub struct IoEngine {
     regulator: Regulator,
     routing: Routing,
     costs: EngineCosts,
+    /// Provisional WR ids handed to the planner; every planned WR is
+    /// re-keyed to its `outstanding` slab key before it leaves the drain.
     next_wr_id: u64,
-    next_sub_id: u64,
     /// Rotating start shard for drains: when the admission window closes
     /// mid-drain, the next drain starts one shard later, so low-numbered
     /// QPs cannot starve the rest under a tight window.
     drain_cursor: usize,
-    subs: FxHashMap<u64, SubIo>,
-    pending: FxHashMap<u64, Pending>,
+    /// Live sub-I/Os, keyed by the sub id (slab key) backends carry.
+    subs: Slab<SubIo>,
+    /// Per-leg retirement state, keyed by `SubIo::parent`.
+    pending: Slab<Pending>,
     /// wr_id → posted bytes + post time (idempotency ledger + RTT).
-    outstanding: FxHashMap<u64, PostedWr>,
-    /// Leg id → application I/O id, for split requests (see [`LegAgg`]).
-    legs: FxHashMap<u64, u64>,
-    /// Application I/O id → aggregation state of its legs.
-    aggs: FxHashMap<u64, LegAgg>,
-    next_leg_id: u64,
+    outstanding: Slab<PostedWr>,
+    /// Split-request aggregation, keyed by `Pending::agg`.
+    aggs: Slab<LegAgg>,
+    /// Swap-buffer for shard drains (see `MergeQueue::merge_check_into`).
+    drain_buf: Vec<AppIo>,
+    /// Chain spans of the shard currently being planned.
+    span_buf: Vec<ChainSpan>,
+    /// Reusable per-node grouping buffers for the batch planner.
+    plan_arena: PlanArena,
     resync: ResyncState,
     pub stats: EngineStats,
 }
@@ -513,14 +615,14 @@ impl IoEngine {
             routing: Routing::Direct,
             costs,
             next_wr_id: 1,
-            next_sub_id: 1,
             drain_cursor: 0,
-            subs: FxHashMap::default(),
-            pending: FxHashMap::default(),
-            outstanding: FxHashMap::default(),
-            legs: FxHashMap::default(),
-            aggs: FxHashMap::default(),
-            next_leg_id: 0,
+            subs: Slab::new(),
+            pending: Slab::new(),
+            outstanding: Slab::new(),
+            aggs: Slab::new(),
+            drain_buf: Vec::new(),
+            span_buf: Vec::new(),
+            plan_arena: PlanArena::default(),
             resync: ResyncState::disabled(nodes),
             stats: EngineStats::default(),
         }
@@ -546,6 +648,10 @@ impl IoEngine {
             "NodeMap and channel topology disagree on cluster size"
         );
         assert!(map.nodes() <= 64, "failover bitmask supports up to 64 nodes");
+        assert!(
+            map.replicas() <= MAX_REPLICAS,
+            "inline submit-path target buffers support up to {MAX_REPLICAS} replicas"
+        );
         self.routing = Routing::Placed(map);
         self
     }
@@ -695,7 +801,7 @@ impl IoEngine {
     /// WRs — including engine-internal resync sub-I/Os they never saw at
     /// submit time.
     pub fn sub_span(&self, sub_id: u64) -> Option<(u64, u64, Dir)> {
-        self.subs.get(&sub_id).map(|s| (s.addr, s.len, s.dir))
+        self.subs.get(sub_id).map(|s| (s.addr, s.len, s.dir))
     }
 
     pub fn regulator(&self) -> &Regulator {
@@ -749,12 +855,6 @@ impl IoEngine {
             .sum()
     }
 
-    fn fresh_sub_id(&mut self) -> u64 {
-        let id = self.next_sub_id;
-        self.next_sub_id += 1;
-        id
-    }
-
     fn enqueue(&mut self, id: u64, node: NodeId, sub: &SubIo) {
         let qp = self.shard_of(node, sub.addr);
         self.shards[qp].of(sub.dir).push(AppIo {
@@ -793,8 +893,10 @@ impl IoEngine {
             Routing::Direct => {
                 let qp = self.shard_of(io.node, io.addr);
                 self.shards[qp].of(io.dir).push(io);
+                let mut sub_ids = IdList::new();
+                sub_ids.push(io.id);
                 Submitted {
-                    sub_ids: vec![io.id],
+                    sub_ids,
                     disk_fallback: false,
                     disk_legs: Vec::new(),
                 }
@@ -812,9 +914,10 @@ impl IoEngine {
                 } else {
                     0
                 };
-                let legs = map.split_stripe_local(io.addr, io.len);
-                if legs.len() == 1 {
-                    let (sub_ids, disk) = self.submit_leg(io.id, &io, io.addr, io.len, epoch);
+                let mut sub_ids = IdList::new();
+                if map.stripe_local(io.addr, io.len) {
+                    let disk =
+                        self.submit_leg(io.id, None, &io, io.addr, io.len, epoch, &mut sub_ids);
                     let mut disk_legs = Vec::new();
                     if disk {
                         disk_legs.push((io.addr, io.len));
@@ -825,38 +928,44 @@ impl IoEngine {
                         disk_legs,
                     }
                 } else {
+                    let legs = map.split_stripe_local(io.addr, io.len);
                     self.stats.split_requests += 1;
                     self.stats.split_legs += legs.len() as u64;
-                    let mut sub_ids = Vec::new();
+                    let agg_key = self.aggs.insert(LegAgg {
+                        remaining: 0,
+                        disk_any: false,
+                        failed_over_any: false,
+                        app_id: io.id,
+                    });
                     let mut disk_legs = Vec::new();
                     let mut live_legs = 0u32;
                     for (addr, len) in legs {
-                        let leg_id = LEG_BASE | self.next_leg_id;
-                        self.next_leg_id += 1;
-                        let (ids, disk) = self.submit_leg(leg_id, &io, addr, len, epoch);
+                        let disk = self.submit_leg(
+                            io.id,
+                            Some(agg_key),
+                            &io,
+                            addr,
+                            len,
+                            epoch,
+                            &mut sub_ids,
+                        );
                         if disk {
                             disk_legs.push((addr, len));
                         } else {
-                            self.legs.insert(leg_id, io.id);
                             live_legs += 1;
-                            sub_ids.extend(ids);
                         }
                     }
                     if live_legs == 0 {
+                        self.aggs.remove(agg_key).expect("fresh agg");
                         Submitted {
                             sub_ids,
                             disk_fallback: true,
                             disk_legs,
                         }
                     } else {
-                        self.aggs.insert(
-                            io.id,
-                            LegAgg {
-                                remaining: live_legs,
-                                disk_any: !disk_legs.is_empty(),
-                                failed_over_any: false,
-                            },
-                        );
+                        let agg = self.aggs.get_mut(agg_key).expect("fresh agg");
+                        agg.remaining = live_legs;
+                        agg.disk_any = !disk_legs.is_empty();
                         Submitted {
                             sub_ids,
                             disk_fallback: false,
@@ -875,27 +984,36 @@ impl IoEngine {
     }
 
     /// Place, record, and enqueue one stripe-local leg of an application
-    /// I/O. Returns the queued sub-I/O ids and whether the leg took the
-    /// disk path at submit (every replica of its stripe dead).
+    /// I/O, appending the queued sub-I/O ids to `sub_ids`. Returns
+    /// whether the leg took the disk path at submit (every replica of
+    /// its stripe dead). `agg` is the [`LegAgg`] slab key for a split
+    /// request, `None` for a single-leg one.
+    #[allow(clippy::too_many_arguments)]
     fn submit_leg(
         &mut self,
-        leg_id: u64,
+        app_id: u64,
+        agg: Option<u64>,
         io: &AppIo,
         addr: u64,
         len: u64,
         epoch: u64,
-    ) -> (Vec<u64>, bool) {
+        sub_ids: &mut IdList,
+    ) -> bool {
+        // Replica targets of one leg, held inline (replication is
+        // bounded by MAX_REPLICAS — every shipped topology uses <= 4)
+        // so the hot submit path does not allocate a target list; the
+        // first `usize` entries of the array are valid.
         enum Route {
             Disk,
-            Targets(Vec<NodeId>),
+            Targets([NodeId; MAX_REPLICAS], usize),
         }
         let Routing::Placed(map) = &self.routing else {
             unreachable!("submit_leg is placed-mode only");
         };
-        let mut missed_replicas: Vec<NodeId> = Vec::new();
+        let mut missed_replicas = [0 as NodeId; MAX_REPLICAS];
+        let mut n_missed = 0usize;
         let route = match io.dir {
             Dir::Write => {
-                let w = map.route_write(addr);
                 // replicas skipped because they are dead or resyncing
                 // miss this write: record the range so resync replays it.
                 // Skipped when resync is off (don't tax the hot submit
@@ -905,47 +1023,56 @@ impl IoEngine {
                 // owns those reads), and a backlog no alive peer can
                 // source would only park every replica of the stripe in
                 // `Resyncing` forever.
-                if self.resync.enabled && !w.disk_fallback && w.targets.len() < map.replicas() {
-                    for n in map.place(addr).replicas {
-                        if !w.targets.contains(&n) {
-                            missed_replicas.push(n);
-                        }
+                let mut targets = [0 as NodeId; MAX_REPLICAS];
+                let mut n_targets = 0usize;
+                for n in map.replicas_of(addr) {
+                    if map.is_alive(n) {
+                        targets[n_targets] = n;
+                        n_targets += 1;
+                    } else if self.resync.enabled {
+                        missed_replicas[n_missed] = n;
+                        n_missed += 1;
                     }
                 }
-                if w.disk_fallback {
+                if n_targets == 0 {
+                    n_missed = 0; // disk owns the span: no missed records
                     Route::Disk
                 } else {
-                    Route::Targets(w.targets)
+                    Route::Targets(targets, n_targets)
                 }
             }
-            Dir::Read => match map.route_read(addr) {
-                ReadRoute::Node(n) => Route::Targets(vec![n]),
-                ReadRoute::DiskFallback => Route::Disk,
-            },
+            Dir::Read => {
+                n_missed = 0;
+                match map.route_read(addr) {
+                    ReadRoute::Node(n) => {
+                        let mut targets = [0 as NodeId; MAX_REPLICAS];
+                        targets[0] = n;
+                        Route::Targets(targets, 1)
+                    }
+                    ReadRoute::DiskFallback => Route::Disk,
+                }
+            }
         };
-        for n in missed_replicas {
-            self.record_missed(n, addr, len);
+        for &node in &missed_replicas[..n_missed] {
+            self.record_missed(node, addr, len);
         }
         match route {
             Route::Disk => {
                 self.stats.disk_fallbacks += 1;
-                (Vec::new(), true)
+                true
             }
-            Route::Targets(targets) => {
-                self.pending.insert(
-                    leg_id,
-                    Pending {
-                        remaining: targets.len() as u32,
-                        any_ok: false,
-                        failed_over: false,
-                        failed_nodes: Vec::new(),
-                    },
-                );
-                let mut sub_ids = Vec::with_capacity(targets.len());
-                for node in targets {
-                    let sid = self.fresh_sub_id();
+            Route::Targets(targets, n_targets) => {
+                let parent = self.pending.insert(Pending {
+                    remaining: n_targets as u32,
+                    any_ok: false,
+                    failed_over: false,
+                    app_id,
+                    agg,
+                    failed_nodes: Vec::new(),
+                });
+                for &node in &targets[..n_targets] {
                     let sub = SubIo {
-                        parent: leg_id,
+                        parent,
                         addr,
                         len,
                         dir: io.dir,
@@ -956,27 +1083,39 @@ impl IoEngine {
                         kind: SubKind::App,
                         epoch,
                     };
-                    self.subs.insert(sid, sub);
+                    let sid = self.subs.insert(sub);
                     self.enqueue(sid, node, &sub);
                     sub_ids.push(sid);
                 }
-                (sub_ids, false)
+                false
             }
         }
-    }
-
-    /// The application I/O id a sub-I/O parent resolves to: legs of a
-    /// split request translate to the request's id, everything else is
-    /// its own parent. Backends only ever see application ids.
-    fn app_parent(&self, parent: u64) -> u64 {
-        self.legs.get(&parent).copied().unwrap_or(parent)
     }
 
     /// Drain one direction through every shard, bounded by the admission
     /// window. Registers each posted WR with the regulator; the returned
     /// chains are ready for the backend to move.
+    ///
+    /// Allocating convenience wrapper around
+    /// [`IoEngine::drain_dir_into`]; hot paths reuse one [`DrainOut`].
     pub fn drain_dir(&mut self, dir: Dir, now: u64) -> DrainOut {
         let mut out = DrainOut::default();
+        self.drain_dir_into(dir, now, &mut out);
+        out
+    }
+
+    /// Zero-allocation drain of one direction: appends this pass's WRs
+    /// and chain spans to `out` (callers reuse one buffer across drains;
+    /// [`IoEngine::drain_all_into`] clears it first). Shard drains go
+    /// through the merge queues' swap-buffer path and the planner's
+    /// arena, and every planned WR is re-keyed to its slot in the
+    /// `outstanding` slab — so at steady state the whole
+    /// merge → plan → post cycle touches no allocator.
+    pub fn drain_dir_into(&mut self, dir: Dir, now: u64, out: &mut DrainOut) {
+        let cpu_base = out.cpu_ns;
+        let mut cpu = 0u64;
+        let mut merged = 0u64;
+        let mut blocked = 0u64;
         let n_shards = self.shards.len();
         let start = self.drain_cursor % n_shards;
         self.drain_cursor = self.drain_cursor.wrapping_add(1);
@@ -987,103 +1126,138 @@ impl IoEngine {
             }
             let avail = self.regulator.available(now);
             if avail == 0 {
-                out.admission_blocked += 1;
+                blocked += 1;
                 break;
             }
-            let drained = match self.shards[qp].of(dir).merge_check(avail) {
-                MergeCheck::Drained(v) => v,
-                MergeCheck::Blocked => {
+            match self.shards[qp].of(dir).merge_check_into(avail, &mut self.drain_buf) {
+                MergeOutcome::Drained => {}
+                MergeOutcome::Blocked => {
                     // progress guarantee: a request larger than the window
                     // must not deadlock — once the pipe is fully drained,
                     // admit exactly the head request (a budget of its own
                     // length drains it and nothing behind it)
                     if self.regulator.in_flight() == 0 {
                         let head_len = self.shards[qp].of(dir).peek()[0].len;
-                        match self.shards[qp].of(dir).merge_check(head_len) {
-                            MergeCheck::Drained(v) => v,
+                        match self.shards[qp]
+                            .of(dir)
+                            .merge_check_into(head_len, &mut self.drain_buf)
+                        {
+                            MergeOutcome::Drained => {}
                             _ => continue,
                         }
                     } else {
-                        out.admission_blocked += 1;
+                        blocked += 1;
                         continue;
                     }
                 }
-                MergeCheck::TakenByPeer => continue,
-            };
+                MergeOutcome::TakenByPeer => continue,
+            }
             if !self.shards[qp].of(dir).is_empty() {
                 // window closed mid-drain: the tail stays queued (and keeps
                 // merging with later arrivals — the regulator's side benefit)
-                out.admission_blocked += 1;
+                blocked += 1;
             }
-            out.cpu_ns += self.costs.merge_check_base_ns
-                + self.costs.merge_check_per_io_ns * drained.len() as u64;
+            cpu += self.costs.merge_check_base_ns
+                + self.costs.merge_check_per_io_ns * self.drain_buf.len() as u64;
             let node = self.channels.node_of(qp);
-            let (chains, pstats) = plan(self.batch, &self.limits, drained, &mut self.next_wr_id);
-            out.merged_ios += pstats.merged_ios;
+            self.span_buf.clear();
+            let pstats = plan_into(
+                self.batch,
+                &self.limits,
+                &mut self.drain_buf,
+                &mut self.next_wr_id,
+                &mut out.wrs,
+                &mut self.span_buf,
+                &mut self.plan_arena,
+            );
+            merged += pstats.merged_ios;
             self.stats.wqes += pstats.wqes;
             self.stats.posts += pstats.posts;
-            for chain in chains {
-                debug_assert_eq!(chain.node, node, "shard {qp} planned a foreign node");
-                for wr in &chain.wrs {
-                    self.regulator.on_post(wr.wr_id, wr.len);
-                    self.outstanding.insert(
-                        wr.wr_id,
-                        PostedWr {
-                            bytes: wr.len,
-                            t_post: now + out.cpu_ns,
-                        },
-                    );
-                    out.cpu_ns += self.costs.post_wqe_cpu_ns;
+            for &span in &self.span_buf {
+                debug_assert_eq!(span.node, node, "shard {qp} planned a foreign node");
+                for wr in &mut out.wrs[span.start..span.end] {
+                    // re-key the WR to its outstanding-ledger slot: the
+                    // wr_id the backend sees *is* the slab key, so the
+                    // completion lookup is an index, not a hash probe
+                    let key = self.outstanding.insert(PostedWr {
+                        bytes: wr.len,
+                        t_post: now + cpu,
+                    });
+                    wr.wr_id = key;
+                    self.regulator.on_post(key, wr.len);
+                    cpu += self.costs.post_wqe_cpu_ns;
                 }
-                out.cpu_ns += self.costs.mmio_cpu_ns;
+                cpu += self.costs.mmio_cpu_ns;
                 out.chains.push(PostChain {
                     qp,
                     node,
-                    wrs: chain.wrs,
-                    cpu_offset_ns: out.cpu_ns,
+                    start: span.start,
+                    end: span.end,
+                    cpu_offset_ns: cpu_base + cpu,
                 });
             }
         }
-        self.stats.merged_ios += out.merged_ios;
-        self.stats.admission_blocks += out.admission_blocked;
-        out
+        out.cpu_ns = cpu_base + cpu;
+        out.merged_ios += merged;
+        out.admission_blocked += blocked;
+        self.stats.merged_ios += merged;
+        self.stats.admission_blocks += blocked;
     }
 
     /// Drain both directions (reads first: page-ins are synchronous).
+    ///
+    /// Allocating convenience wrapper around
+    /// [`IoEngine::drain_all_into`]; hot paths reuse one [`DrainOut`].
     pub fn drain_all(&mut self, now: u64) -> DrainOut {
-        let mut out = self.drain_dir(Dir::Read, now);
-        let w = self.drain_dir(Dir::Write, now + out.cpu_ns);
-        for mut c in w.chains {
-            c.cpu_offset_ns += out.cpu_ns;
-            out.chains.push(c);
-        }
-        out.cpu_ns += w.cpu_ns;
-        out.merged_ios += w.merged_ios;
-        out.admission_blocked += w.admission_blocked;
+        let mut out = DrainOut::default();
+        self.drain_all_into(now, &mut out);
         out
+    }
+
+    /// Zero-allocation drain of both directions into a reused buffer
+    /// (cleared first; capacity is retained across calls).
+    pub fn drain_all_into(&mut self, now: u64, out: &mut DrainOut) {
+        out.clear();
+        self.drain_dir_into(Dir::Read, now, out);
+        let read_cpu = out.cpu_ns;
+        self.drain_dir_into(Dir::Write, now + read_cpu, out);
     }
 
     /// Handle one work completion: release the admission window, map the
     /// WR's sub-I/Os back to application I/Os, apply the replication
     /// policy, and fail reads over to the next alive replica on error.
     ///
-    /// Idempotent and order-independent: retirement is keyed by wr_id, so
+    /// Idempotent and order-independent: retirement is keyed by wr_id —
+    /// the WR's slot in the generational `outstanding` slab — so
     /// duplicate, late, and reordered completions (a chaotic CQ delivers
-    /// all three) are tolerated — a WR releases its window bytes and
+    /// all three) are tolerated: freeing the slot bumps its generation,
+    /// and a stale wr_id can never resolve again, even after the slot is
+    /// recycled for a new WR. A WR releases its window bytes and
     /// resolves its sub-I/Os exactly once, whatever the CQ does.
+    ///
+    /// Allocating convenience wrapper around [`IoEngine::on_wc_into`];
+    /// hot paths reuse one [`WcOut`].
     pub fn on_wc(&mut self, wc: &Wc, now: u64) -> WcOut {
-        let Some(posted) = self.outstanding.remove(&wc.wr_id) else {
+        let mut out = WcOut::default();
+        self.on_wc_into(wc, now, &mut out);
+        out
+    }
+
+    /// Zero-allocation completion handling into a reused output buffer
+    /// (cleared first; capacity is retained across calls).
+    pub fn on_wc_into(&mut self, wc: &Wc, now: u64, out: &mut WcOut) {
+        out.clear();
+        let Some(posted) = self.outstanding.remove(wc.wr_id) else {
             // duplicate or unknown wr_id: dropped before it can touch the
             // window accounting or retire anything twice
             self.stats.duplicate_wcs += 1;
-            return WcOut::default();
+            return;
         };
         debug_assert_eq!(posted.bytes, wc.len, "WC length disagrees with its WR");
         let rtt = now.saturating_sub(posted.t_post);
         self.regulator.on_complete(wc.wr_id, wc.len, rtt);
         let ok = wc.status == WcStatus::Success;
 
-        let mut out = WcOut::default();
         if matches!(self.routing, Routing::Direct) {
             // direct mode: sub-I/Os *are* the application I/Os — retire
             // each exactly once, no replication policy to satisfy. An
@@ -1103,28 +1277,33 @@ impl IoEngine {
                 }
             }
             self.stats.retired += wc.app_ios.len() as u64;
-            return out;
+            return;
         }
 
         for &sid in &wc.app_ios {
-            let Some(sub) = self.subs.remove(&sid) else {
-                continue; // duplicate-completion guard
+            // stale (already-resolved) sub ids fail the slab's generation
+            // check — the per-sub duplicate guard
+            let Some(&sub) = self.subs.get(sid) else {
+                continue;
             };
             match sub.kind {
-                SubKind::App => self.on_app_sub(sid, sub, ok, &mut out),
+                SubKind::App => self.on_app_sub(sid, sub, ok, out),
                 SubKind::ResyncRead { target } => {
-                    self.on_resync_read_sub(sid, sub, target, ok, &mut out)
+                    self.on_resync_read_sub(sid, sub, target, ok, out)
                 }
                 SubKind::ResyncWrite { target } => {
-                    self.on_resync_write_sub(sid, sub, target, ok, &mut out)
+                    self.on_resync_write_sub(sid, sub, target, ok, out)
                 }
             }
         }
         self.kick_resync();
-        out
+        self.maybe_prune_epochs();
     }
 
-    /// Resolve one application replica leg (placed mode).
+    /// Resolve one application replica leg (placed mode). The sub stays
+    /// in the ledger (same id, so late duplicates still resolve to it
+    /// harmlessly) only when a failed read is re-queued for failover;
+    /// every other outcome frees its slot.
     fn on_app_sub(&mut self, sid: u64, sub: SubIo, ok: bool, out: &mut WcOut) {
         if self.resync.enabled && sub.dir == Dir::Write {
             // an app write leaving the pipeline may unblock resync
@@ -1138,17 +1317,9 @@ impl IoEngine {
                 }
             }
         }
-        let app_id = self.app_parent(sub.parent);
-        if ok {
-            if sub.dir == Dir::Write && sub.epoch > 0 {
-                // the node's store now holds this write: publish it in
-                // the node's applied epoch vector (the donor election
-                // reads these)
-                self.resync.applied[sub.node].raise(sub.addr, sub.len, sub.epoch);
-            }
-            out.completed_subs.push((sid, app_id));
-        } else if sub.dir == Dir::Read {
-            // failover: re-queue onto the next alive, untried replica
+        if !ok && sub.dir == Dir::Read {
+            // failover: re-queue onto the next alive, untried replica —
+            // in place, under the same sub id
             let next = match &self.routing {
                 Routing::Placed(map) => match map.route_read_excluding(sub.addr, sub.attempted) {
                     ReadRoute::Node(n) => Some(n),
@@ -1160,8 +1331,10 @@ impl IoEngine {
                 let mut retry = sub;
                 retry.attempted |= 1u64 << node;
                 retry.node = node;
-                self.subs.insert(sid, retry);
-                if let Some(p) = self.pending.get_mut(&sub.parent) {
+                if let Some(s) = self.subs.get_mut(sid) {
+                    *s = retry;
+                }
+                if let Some(p) = self.pending.get_mut(sub.parent) {
                     p.failed_over = true;
                 }
                 self.enqueue(sid, node, &retry);
@@ -1170,54 +1343,69 @@ impl IoEngine {
                 return;
             }
         }
-        let Some(p) = self.pending.get_mut(&sub.parent) else {
+        // terminal resolution: the sub leaves the ledger
+        self.subs.remove(sid);
+        let app_id = self.pending.get(sub.parent).map_or(sub.parent, |p| p.app_id);
+        if ok {
+            if sub.dir == Dir::Write && sub.epoch > 0 {
+                // the node's store now holds this write: publish it in
+                // the node's applied epoch vector (the donor election
+                // reads these)
+                self.resync.applied[sub.node].raise(sub.addr, sub.len, sub.epoch);
+            }
+            out.completed_subs.push((sid, app_id));
+        } else {
+            out.failed_subs.push((sid, app_id));
+        }
+        let Some(p) = self.pending.get_mut(sub.parent) else {
             return;
         };
         if ok {
             p.any_ok = true;
-        } else {
-            if sub.dir == Dir::Write {
-                // this replica diverged; judged at retirement (below)
-                p.failed_nodes.push(sub.node);
-            }
-            out.failed_subs.push((sid, app_id));
+        } else if sub.dir == Dir::Write {
+            // this replica diverged; judged at retirement (below)
+            p.failed_nodes.push(sub.node);
         }
         p.remaining -= 1;
-        if p.remaining == 0 {
-            let done = self.pending.remove(&sub.parent).expect("pending parent");
-            let disk_fallback = !done.any_ok;
-            if disk_fallback {
-                self.stats.disk_fallbacks += 1;
-            } else {
-                // the write is durable on at least one replica: every
-                // replica whose leg failed must be repaired before it
-                // serves reads for this range again (recording demotes
-                // it). Within this same completion, so no later submit
-                // can route a read to the diverged node.
-                for &n in &done.failed_nodes {
-                    self.record_missed(n, sub.addr, sub.len);
-                }
+        if p.remaining > 0 {
+            return;
+        }
+        let done = self.pending.remove(sub.parent).expect("pending parent");
+        let disk_fallback = !done.any_ok;
+        if disk_fallback {
+            self.stats.disk_fallbacks += 1;
+        } else {
+            // the write is durable on at least one replica: every
+            // replica whose leg failed must be repaired before it
+            // serves reads for this range again (recording demotes
+            // it). Within this same completion, so no later submit
+            // can route a read to the diverged node.
+            for &n in &done.failed_nodes {
+                self.record_missed(n, sub.addr, sub.len);
             }
-            // a split request retires once every stripe-local leg has
-            // (flags ORed across legs); an unsplit request retires here
-            if let Some(app) = self.legs.remove(&sub.parent) {
-                let agg = self.aggs.get_mut(&app).expect("leg aggregation");
+        }
+        // a split request retires once every stripe-local leg has
+        // (flags ORed across legs); an unsplit request retires here
+        match done.agg {
+            Some(agg_key) => {
+                let agg = self.aggs.get_mut(agg_key).expect("leg aggregation");
                 agg.remaining -= 1;
                 agg.disk_any |= disk_fallback;
                 agg.failed_over_any |= done.failed_over;
                 if agg.remaining == 0 {
-                    let agg = self.aggs.remove(&app).expect("agg present");
+                    let agg = self.aggs.remove(agg_key).expect("agg present");
                     self.stats.retired += 1;
                     out.retired.push(RetiredIo {
-                        id: app,
+                        id: agg.app_id,
                         disk_fallback: agg.disk_any,
                         failed_over: agg.failed_over_any,
                     });
                 }
-            } else {
+            }
+            None => {
                 self.stats.retired += 1;
                 out.retired.push(RetiredIo {
-                    id: sub.parent,
+                    id: done.app_id,
                     disk_fallback,
                     failed_over: done.failed_over,
                 });
@@ -1237,13 +1425,13 @@ impl IoEngine {
         out: &mut WcOut,
     ) {
         if ok {
-            let wsid = self.fresh_sub_id();
+            self.subs.remove(sid);
             let mut wsub = sub;
             wsub.dir = Dir::Write;
             wsub.attempted = 1u64 << target;
             wsub.node = target;
             wsub.kind = SubKind::ResyncWrite { target };
-            self.subs.insert(wsid, wsub);
+            let wsid = self.subs.insert(wsub);
             self.enqueue(wsid, target, &wsub);
             out.completed_subs.push((sid, RESYNC_PARENT));
             out.resync_copies.push(ResyncCopy {
@@ -1276,7 +1464,9 @@ impl IoEngine {
             if self.resync.election {
                 retry.epoch = self.resync.applied[node].min_over(sub.addr, sub.len);
             }
-            self.subs.insert(sid, retry);
+            if let Some(s) = self.subs.get_mut(sid) {
+                *s = retry;
+            }
             self.enqueue(sid, node, &retry);
             out.requeued += 1;
             self.stats.requeued += 1;
@@ -1284,6 +1474,7 @@ impl IoEngine {
             // every eligible source failed: the range stays missed until
             // a new source appears (another node coming up / finishing
             // its own resync clears the dormant latch)
+            self.subs.remove(sid);
             self.stats.resync_copy_failures += 1;
             self.resync.missed[target].insert(sub.addr, sub.len);
             self.resync.repairing[target].remove(sub.addr, sub.len);
@@ -1303,6 +1494,7 @@ impl IoEngine {
         ok: bool,
         out: &mut WcOut,
     ) {
+        self.subs.remove(sid);
         self.resync.outstanding[target] = self.resync.outstanding[target].saturating_sub(1);
         self.resync.repairing[target].remove(sub.addr, sub.len);
         if ok {
@@ -1318,6 +1510,82 @@ impl IoEngine {
             self.resync.dormant[target] = false;
             out.failed_subs.push((sid, RESYNC_PARENT));
         }
+    }
+
+    /// Stored ranges currently held by the cluster-wide required epoch
+    /// floor (the boundedness measure the prune test watches).
+    pub fn epoch_floor_ranges(&self) -> usize {
+        self.resync.required.len()
+    }
+
+    /// Amortized epoch-vector pruning: scan only when the required floor
+    /// has outgrown its watermark, then re-arm the watermark at twice the
+    /// post-prune size. Every placed write stores one floor range (each
+    /// has a distinct epoch, so neighbors never coalesce) — without this,
+    /// a long-running engine's floor grows linearly with writes ever
+    /// issued instead of with *live divergence*.
+    fn maybe_prune_epochs(&mut self) {
+        if !self.resync.election || self.resync.required.len() < self.resync.prune_watermark {
+            return;
+        }
+        self.prune_epoch_floor();
+        self.resync.prune_watermark = PRUNE_FLOOR_RANGES.max(self.resync.required.len() * 2);
+    }
+
+    /// Prune the epoch bookkeeping (ROADMAP PR 4 follow-on): drop every
+    /// required-floor range that *every* replica of its stripe provably
+    /// satisfies — non-dead, not missing or repairing any byte of the
+    /// range, and holding an applied epoch at or above the floor. Such a
+    /// range carries no recovery information: any replica is already a
+    /// valid donor for it, and only a *future* write (which mints a
+    /// fresh epoch and re-raises the floor) can create new divergence
+    /// over it. The matching applied-vector spans are erased with it, so
+    /// both sides of the election metadata stay O(live divergence)
+    /// instead of O(writes ever issued). Returns the ranges pruned.
+    ///
+    /// A dead replica pins every range it might have missed: its applied
+    /// vector is frozen below the floor, so nothing it could need on
+    /// revival is ever forgotten — the stale-promotion hazard of pruning
+    /// by live replicas alone.
+    pub fn prune_epoch_floor(&mut self) -> usize {
+        if !self.resync.election {
+            return 0;
+        }
+        let Routing::Placed(map) = &self.routing else {
+            return 0;
+        };
+        let stripe = map.stripe_bytes();
+        // collect first: erasing mutates the map under iteration
+        let candidates: Vec<(u64, u64, u64)> = self.resync.required.entries().collect();
+        let mut prune: Vec<(u64, u64)> = Vec::new();
+        for (s, e, ep) in candidates {
+            // a stored range can span stripes (writes are split into
+            // stripe-local legs, but adjacent stripes' floors abut);
+            // judge each stripe-local piece against its own replica set
+            let mut a = s;
+            while a < e {
+                let piece_end = ((a / stripe + 1) * stripe).min(e);
+                let l = piece_end - a;
+                let satisfied = map.replicas_of(a).all(|r| {
+                    map.state(r) != NodeState::Dead
+                        && !self.resync.missed[r].overlaps(a, l)
+                        && !self.resync.repairing[r].overlaps(a, l)
+                        && self.resync.applied[r].min_over(a, l) >= ep
+                });
+                if satisfied {
+                    prune.push((a, l));
+                }
+                a = piece_end;
+            }
+        }
+        let pruned = prune.len();
+        for (a, l) in prune {
+            self.resync.required.erase(a, l);
+            for applied in &mut self.resync.applied {
+                applied.erase(a, l);
+            }
+        }
+        pruned
     }
 
     /// Record a write range a replica missed (it was dead/resyncing at
@@ -1409,7 +1677,6 @@ impl IoEngine {
     /// (stage 1 of a repair copy). `src_epoch` is what the donor holds
     /// for the span — published on the target when the repair lands.
     fn spawn_copy(&mut self, node: NodeId, src: NodeId, addr: u64, len: u64, src_epoch: u64) {
-        let sid = self.fresh_sub_id();
         let sub = SubIo {
             parent: RESYNC_PARENT,
             addr,
@@ -1422,7 +1689,7 @@ impl IoEngine {
             kind: SubKind::ResyncRead { target: node },
             epoch: src_epoch,
         };
-        self.subs.insert(sid, sub);
+        let sid = self.subs.insert(sub);
         self.enqueue(sid, src, &sub);
         self.resync.repairing[node].insert(addr, len);
         self.resync.outstanding[node] += 1;
@@ -1640,14 +1907,12 @@ mod tests {
         let mut retired = Vec::new();
         loop {
             let out = e.drain_all(0);
-            if out.chains.is_empty() {
+            if out.wrs.is_empty() {
                 break;
             }
-            for chain in out.chains {
-                for wr in chain.wrs {
-                    let r = e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
-                    retired.extend(r.retired);
-                }
+            for wr in out.wrs {
+                let r = e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
+                retired.extend(r.retired);
             }
         }
         retired
@@ -1677,7 +1942,7 @@ mod tests {
         let out = e.drain_all(0);
         assert_eq!(out.chains.len(), 1, "one shard, one chain");
         assert_eq!(out.merged_ios, 8, "all adjacent pages merged");
-        assert!(out.chains[0].wrs[0].num_sge > 1);
+        assert!(out.wrs[0].num_sge > 1);
     }
 
     #[test]
@@ -1706,21 +1971,14 @@ mod tests {
             e.submit(io(i, Dir::Write, 0, i * 4096));
         }
         let out = e.drain_all(0);
-        let posted: u64 = out
-            .chains
-            .iter()
-            .flat_map(|c| c.wrs.iter())
-            .map(|w| w.len)
-            .sum();
+        let posted: u64 = out.wrs.iter().map(|w| w.len).sum();
         assert!(posted <= 8192, "posted {posted} > window");
         assert_eq!(e.regulator().in_flight(), posted);
         assert!(out.admission_blocked > 0);
         // completing releases the window and the rest drains
         let mut done = 0;
-        for chain in out.chains {
-            for wr in chain.wrs {
-                done += e.on_wc(&wc_for(&wr, WcStatus::Success), 0).retired.len();
-            }
+        for wr in out.wrs {
+            done += e.on_wc(&wc_for(&wr, WcStatus::Success), 0).retired.len();
         }
         done += complete_all(&mut e).len();
         assert_eq!(done, 8);
@@ -1735,19 +1993,12 @@ mod tests {
         // backlog behind the oversized head must NOT ride along with it
         e.submit(io(2, Dir::Write, 0, 1 << 21));
         let first = e.drain_all(0);
-        let posted: u64 = first
-            .chains
-            .iter()
-            .flat_map(|c| c.wrs.iter())
-            .map(|w| w.len)
-            .sum();
+        let posted: u64 = first.wrs.iter().map(|w| w.len).sum();
         assert_eq!(posted, 1 << 20, "exactly the oversized head admitted");
         assert_eq!(e.queued_ios(), 1, "the small request stays queued");
         let mut done = 0;
-        for chain in first.chains {
-            for wr in chain.wrs {
-                done += e.on_wc(&wc_for(&wr, WcStatus::Success), 0).retired.len();
-            }
+        for wr in first.wrs {
+            done += e.on_wc(&wc_for(&wr, WcStatus::Success), 0).retired.len();
         }
         done += complete_all(&mut e).len();
         assert_eq!(done, 2, "both writes complete");
@@ -1760,7 +2011,7 @@ mod tests {
         let s = e.submit(io(42, Dir::Write, 0, 0));
         assert_eq!(s.sub_ids.len(), 2, "two replicas queued");
         let out = e.drain_all(0);
-        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        let wrs: Vec<WorkRequest> = out.wrs;
         assert_eq!(wrs.len(), 2);
         // first replica completing does NOT retire the io
         let r1 = e.on_wc(&wc_for(&wrs[0], WcStatus::Success), 0);
@@ -1777,7 +2028,7 @@ mod tests {
         let mut e = engine(3, 2, None).with_placement(map);
         e.submit(io(7, Dir::Read, 0, 0)); // primary = node 0
         let out = e.drain_all(0);
-        let wr = out.chains.into_iter().flat_map(|c| c.wrs).next().unwrap();
+        let wr = out.wrs.into_iter().next().unwrap();
         assert_eq!(wr.node, 0);
         // primary dies mid-flight: error completion triggers failover
         e.node_map_mut().unwrap().set_alive(0, false);
@@ -1786,7 +2037,7 @@ mod tests {
         assert_eq!(r.requeued, 1);
         // the retry is queued for the secondary replica (node 1)
         let out2 = e.drain_all(0);
-        let wr2 = out2.chains.into_iter().flat_map(|c| c.wrs).next().unwrap();
+        let wr2 = out2.wrs.into_iter().next().unwrap();
         assert_eq!(wr2.node, 1);
         let r2 = e.on_wc(&wc_for(&wr2, WcStatus::Success), 0);
         assert_eq!(r2.retired.len(), 1);
@@ -1800,12 +2051,12 @@ mod tests {
         let mut e = engine(2, 1, None).with_placement(map);
         e.submit(io(9, Dir::Read, 0, 0));
         let out = e.drain_all(0);
-        let wr = out.chains.into_iter().flat_map(|c| c.wrs).next().unwrap();
+        let wr = out.wrs.into_iter().next().unwrap();
         e.node_map_mut().unwrap().set_alive(0, false);
         let r = e.on_wc(&wc_for(&wr, WcStatus::Error), 0);
         assert_eq!(r.requeued, 1, "fails over to node 1 first");
         let out2 = e.drain_all(0);
-        let wr2 = out2.chains.into_iter().flat_map(|c| c.wrs).next().unwrap();
+        let wr2 = out2.wrs.into_iter().next().unwrap();
         e.node_map_mut().unwrap().set_alive(1, false);
         let r2 = e.on_wc(&wc_for(&wr2, WcStatus::Error), 0);
         assert_eq!(r2.retired.len(), 1);
@@ -1832,7 +2083,7 @@ mod tests {
         let mut e = engine(2, 1, None).with_placement(map);
         e.submit(io(5, Dir::Write, 0, 0));
         let out = e.drain_all(0);
-        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        let wrs: Vec<WorkRequest> = out.wrs;
         assert_eq!(wrs.len(), 2);
         let r1 = e.on_wc(&wc_for(&wrs[0], WcStatus::Error), 0);
         assert!(r1.retired.is_empty());
@@ -1846,7 +2097,7 @@ mod tests {
         let mut e = engine(1, 1, Some(16 * 4096));
         e.submit(io(1, Dir::Write, 0, 0));
         let out = e.drain_all(0);
-        let wr = out.chains.into_iter().flat_map(|c| c.wrs).next().unwrap();
+        let wr = out.wrs.into_iter().next().unwrap();
         let wc = wc_for(&wr, WcStatus::Success);
         let r1 = e.on_wc(&wc, 0);
         assert_eq!(r1.retired.len(), 1);
@@ -1867,7 +2118,7 @@ mod tests {
             e.submit(io(i, Dir::Write, 0, i * 4096));
         }
         let out = e.drain_all(0);
-        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        let wrs: Vec<WorkRequest> = out.wrs;
         // deliver in reverse order, each twice
         let mut retired = Vec::new();
         for wr in wrs.iter().rev() {
@@ -1891,11 +2142,9 @@ mod tests {
             e.submit(io(i, Dir::Write, 0, i * 4096));
         }
         let out = e.drain_all(0);
-        for chain in out.chains {
-            for wr in chain.wrs {
-                // every completion errors; window must still drain to zero
-                e.on_wc(&wc_for(&wr, WcStatus::Error), 0);
-            }
+        for wr in out.wrs {
+            // every completion errors; window must still drain to zero
+            e.on_wc(&wc_for(&wr, WcStatus::Error), 0);
         }
         assert_eq!(e.regulator().in_flight(), 0, "error WCs release bytes");
         assert_eq!(e.stats.retired, 4, "failed writes still retire");
@@ -1924,9 +2173,7 @@ mod tests {
                 submitted += 1;
             }
             let out = e.drain_all(0);
-            for c in out.chains {
-                in_flight.extend(c.wrs);
-            }
+            in_flight.extend(out.wrs);
             assert!(
                 e.regulator().in_flight() <= window,
                 "window exceeded: {}",
@@ -1997,14 +2244,12 @@ mod tests {
         let mut all = Vec::new();
         loop {
             let out = e.drain_all(0);
-            if out.chains.is_empty() {
+            if out.wrs.is_empty() {
                 break;
             }
-            for chain in out.chains {
-                for wr in chain.wrs {
-                    e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
-                    all.push(wr);
-                }
+            for wr in out.wrs {
+                e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
+                all.push(wr);
             }
         }
         all
@@ -2047,7 +2292,7 @@ mod tests {
         // reads route around the resyncing replica
         e.submit(io(3, Dir::Read, 0, 0));
         let out = e.drain_all(0);
-        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        let wrs: Vec<WorkRequest> = out.wrs;
         assert!(
             wrs.iter().all(|w| w.node == 1),
             "both the app read and the resync source read go to the peer"
@@ -2062,7 +2307,7 @@ mod tests {
         assert_eq!(copies[0].target, 0);
         // the repair write drains to node 0 through the normal pipeline
         let out = e.drain_all(0);
-        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        let wrs: Vec<WorkRequest> = out.wrs;
         assert_eq!(wrs.len(), 1);
         assert_eq!(wrs[0].node, 0);
         e.on_wc(&wc_for(&wrs[0], WcStatus::Success), 0);
@@ -2083,7 +2328,7 @@ mod tests {
             .with_resync(4 * 4096);
         e.submit(io(1, Dir::Write, 0, 0));
         let out = e.drain_all(0);
-        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        let wrs: Vec<WorkRequest> = out.wrs;
         assert_eq!(wrs.len(), 2, "two replica legs");
         // node 0's leg fails terminally (e.g. a partial partition): the
         // write still retires via node 1, but node 0 has diverged
@@ -2112,7 +2357,7 @@ mod tests {
             .with_resync(4 * 4096);
         e.submit(io(1, Dir::Write, 0, 0));
         let out = e.drain_all(0);
-        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        let wrs: Vec<WorkRequest> = out.wrs;
         assert_eq!(wrs.len(), 2);
         // a fault burst kills both legs: the write is not durable on any
         // replica — it takes the disk path, and neither node may be
@@ -2144,9 +2389,9 @@ mod tests {
             .with_placement(map)
             .with_resync(4 * 4096);
         e.submit(io(1, Dir::Write, 0, 0));
-        let wa: Vec<WorkRequest> = e.drain_all(0).chains.into_iter().flat_map(|c| c.wrs).collect();
+        let wa: Vec<WorkRequest> = e.drain_all(0).wrs;
         e.submit(io(2, Dir::Write, 0, 4096));
-        let wb: Vec<WorkRequest> = e.drain_all(0).chains.into_iter().flat_map(|c| c.wrs).collect();
+        let wb: Vec<WorkRequest> = e.drain_all(0).wrs;
         assert_eq!((wa.len(), wb.len()), (2, 2));
         for wr in &wa {
             let status = if wr.node == 1 {
@@ -2215,7 +2460,7 @@ mod tests {
             .with_resync(4 * 4096);
         e.submit(io(1, Dir::Write, 0, 0));
         let out = e.drain_all(0);
-        let wrs: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        let wrs: Vec<WorkRequest> = out.wrs;
         assert_eq!(wrs.len(), 3, "three replica legs");
         // legs to nodes 0 and 1 fail; only node 2's copy is durable
         for wr in wrs.iter().filter(|w| w.node != 2) {
@@ -2229,7 +2474,7 @@ mod tests {
         // must skip the first's still-in-flight target and also read
         // from node 2 — the only replica that actually holds the data
         let out = e.drain_all(0);
-        let reads: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+        let reads: Vec<WorkRequest> = out.wrs;
         assert!(!reads.is_empty());
         assert!(
             reads.iter().all(|w| w.node == 2),
@@ -2289,14 +2534,12 @@ mod tests {
                 e.regulator().in_flight() <= window,
                 "resync overshot the window"
             );
-            if out.chains.is_empty() {
+            if out.wrs.is_empty() {
                 break;
             }
-            for chain in out.chains {
-                for wr in chain.wrs {
-                    assert!(wr.len <= window);
-                    e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
-                }
+            for wr in out.wrs {
+                assert!(wr.len <= window);
+                e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
             }
         }
         assert_eq!(e.node_state(0), Some(NodeState::Alive));
@@ -2399,20 +2642,18 @@ mod tests {
         let out = e.drain_all(0);
         let mut retired = Vec::new();
         let map = e.node_map().unwrap().clone();
-        for chain in out.chains {
-            for wr in chain.wrs {
-                let stripe_of = |a: u64| a / map.stripe_bytes();
-                assert_eq!(
-                    stripe_of(wr.remote_addr),
-                    stripe_of(wr.remote_addr + wr.len - 1),
-                    "WR crosses a stripe boundary"
-                );
-                assert!(
-                    map.place(wr.remote_addr).replicas.contains(&wr.node),
-                    "leg routed off its stripe's replica set"
-                );
-                retired.extend(e.on_wc(&wc_for(&wr, WcStatus::Success), 0).retired);
-            }
+        for wr in out.wrs {
+            let stripe_of = |a: u64| a / map.stripe_bytes();
+            assert_eq!(
+                stripe_of(wr.remote_addr),
+                stripe_of(wr.remote_addr + wr.len - 1),
+                "WR crosses a stripe boundary"
+            );
+            assert!(
+                map.place(wr.remote_addr).replicas.contains(&wr.node),
+                "leg routed off its stripe's replica set"
+            );
+            retired.extend(e.on_wc(&wc_for(&wr, WcStatus::Success), 0).retired);
         }
         retired.extend(complete_all(&mut e));
         assert_eq!(retired.len(), 1, "split request retires exactly once");
@@ -2457,10 +2698,10 @@ mod tests {
             }
             e.submit(io(1, Dir::Write, 0, 0));
             let out = e.drain_all(0);
-            let wa: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+            let wa: Vec<WorkRequest> = out.wrs;
             e.submit(io(2, Dir::Write, 0, 0));
             let out = e.drain_all(0);
-            let wb: Vec<WorkRequest> = out.chains.into_iter().flat_map(|c| c.wrs).collect();
+            let wb: Vec<WorkRequest> = out.wrs;
             assert_eq!((wa.len(), wb.len()), (2, 2));
             // W1: node 1's leg fails; W2: node 0's leg fails — both
             // replicas miss an overlapping write of the same range
@@ -2565,11 +2806,9 @@ mod tests {
         // shrink the window below the in-flight level mid-run
         e.set_window(Some(4096));
         let blocked = e.drain_all(0);
-        assert!(blocked.chains.is_empty(), "shrunk window admits nothing");
-        for chain in out.chains {
-            for wr in chain.wrs {
-                e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
-            }
+        assert!(blocked.wrs.is_empty(), "shrunk window admits nothing");
+        for wr in out.wrs {
+            e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
         }
         // old-policy bytes released cleanly; the rest drains under the
         // new window one page at a time
@@ -2586,6 +2825,201 @@ mod tests {
         let _ = engine(2, 1, None).with_placement(map).with_donor_election();
     }
 
+    /// Tentpole invariant: slab-minted wr_ids are generational, so a
+    /// stale wr_id from a late/duplicate WC can never resolve after its
+    /// slot was recycled by a newer WR — it dies at the generation
+    /// check, counted as a duplicate, releasing nothing.
+    #[test]
+    fn stale_wr_ids_never_resolve_recycled_slots() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None).with_placement(map);
+        e.submit(io(1, Dir::Write, 0, 0));
+        let out = e.drain_all(0);
+        let stale: Vec<WorkRequest> = out.wrs.clone();
+        for wr in out.wrs {
+            e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
+        }
+        assert_eq!(e.stats.retired, 1);
+        // new traffic recycles the freed ledger slots under a fresh
+        // generation: same slot set, disjoint ids
+        e.submit(io(2, Dir::Write, 0, 0));
+        let out2 = e.drain_all(0);
+        let old_slots: std::collections::BTreeSet<u32> =
+            stale.iter().map(|w| w.wr_id as u32).collect();
+        let new_slots: std::collections::BTreeSet<u32> =
+            out2.wrs.iter().map(|w| w.wr_id as u32).collect();
+        assert_eq!(old_slots, new_slots, "freed slots were recycled");
+        assert!(
+            stale.iter().all(|o| out2.wrs.iter().all(|n| n.wr_id != o.wr_id)),
+            "recycled slots carry new generations"
+        );
+        // replaying the stale WCs against the recycled slots must not
+        // retire, complete, or release anything
+        for wr in &stale {
+            let r = e.on_wc(&wc_for(wr, WcStatus::Success), 0);
+            assert!(r.retired.is_empty() && r.completed_subs.is_empty());
+        }
+        assert_eq!(e.stats.duplicate_wcs, stale.len() as u64);
+        // and the live WRs still retire their io exactly once
+        let mut retired = Vec::new();
+        for wr in out2.wrs {
+            retired.extend(e.on_wc(&wc_for(&wr, WcStatus::Success), 0).retired);
+        }
+        assert_eq!(retired.len(), 1);
+        assert_eq!(retired[0].id, 2);
+        assert_eq!(e.stats.retired, 2);
+        assert_eq!(e.regulator().in_flight(), 0);
+    }
+
+    /// Same property one layer down: sub ids are generational too, so a
+    /// WC carrying sub ids whose slots were freed and recycled resolves
+    /// none of them — the recycled tenants are untouched.
+    #[test]
+    fn stale_sub_ids_are_dropped_by_the_generation_check() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None).with_placement(map);
+        let s1 = e.submit(io(1, Dir::Write, 0, 0));
+        let stale_subs = s1.sub_ids.to_vec();
+        for wr in e.drain_all(0).wrs {
+            e.on_wc(&wc_for(&wr, WcStatus::Success), 0);
+        }
+        let s2 = e.submit(io(2, Dir::Write, 0, 0));
+        assert!(
+            stale_subs.iter().all(|s| !s2.sub_ids.contains(s)),
+            "recycled sub slots carry new generations"
+        );
+        let out = e.drain_all(0);
+        let mut forged = wc_for(&out.wrs[0], WcStatus::Success);
+        forged.app_ios = stale_subs.into();
+        let r = e.on_wc(&forged, 0);
+        assert!(
+            r.retired.is_empty() && r.completed_subs.is_empty() && r.failed_subs.is_empty(),
+            "stale sub ids must resolve nothing"
+        );
+        // the forged WC legitimately consumed its wr_id's window bytes;
+        // only the second replica's WR remains in flight
+        assert_eq!(e.regulator().in_flight(), out.wrs[1].len);
+    }
+
+    /// The `_into` scratch-reuse API is behaviorally identical to the
+    /// allocating wrappers: same WRs, same chains, same retirements,
+    /// driving one engine through each against mixed traffic.
+    #[test]
+    fn scratch_reuse_api_matches_allocating_api() {
+        let mk = || {
+            let map = NodeMap::new(2, 2, 1 << 20);
+            engine(2, 2, Some(8 * 4096)).with_placement(map)
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let mut out = DrainOut::default();
+        let mut wout = WcOut::default();
+        let mut retired_a = Vec::new();
+        let mut retired_b = Vec::new();
+        for i in 0..60u64 {
+            let dir = if i % 3 == 0 { Dir::Read } else { Dir::Write };
+            let addr = (i % 8) * 4096;
+            a.submit(io(i, dir, 0, addr));
+            b.submit(io(i, dir, 0, addr));
+            let oa = a.drain_all(0);
+            b.drain_all_into(0, &mut out);
+            assert_eq!(oa.wrs.len(), out.wrs.len());
+            assert_eq!(oa.chains.len(), out.chains.len());
+            assert_eq!(oa.cpu_ns, out.cpu_ns);
+            for (wa, wb) in oa.wrs.iter().zip(out.wrs.iter()) {
+                assert_eq!(wa.wr_id, wb.wr_id, "deterministic slab keys");
+                assert_eq!(wa.len, wb.len);
+                assert_eq!((wa.remote_addr, wa.num_sge), (wb.remote_addr, wb.num_sge));
+                assert_eq!(wa.app_ios, wb.app_ios);
+            }
+            for wr in oa.wrs {
+                retired_a.extend(a.on_wc(&wc_for(&wr, WcStatus::Success), 0).retired);
+            }
+            for wr in &out.wrs {
+                let wc = wc_for(wr, WcStatus::Success);
+                b.on_wc_into(&wc, 0, &mut wout);
+                retired_b.extend(wout.retired.iter().copied());
+            }
+        }
+        assert_eq!(retired_a.len(), 60);
+        assert_eq!(retired_a, retired_b);
+        assert_eq!(a.regulator().in_flight(), 0);
+        assert_eq!(b.regulator().in_flight(), 0);
+    }
+
+    /// Satellite (ROADMAP PR 4 follow-on): the cluster-wide required
+    /// epoch floor stays O(live divergence) in a long-running engine.
+    /// Every placed write mints a distinct epoch (so floor ranges never
+    /// coalesce); without pruning, ~800 writes to fresh addresses would
+    /// hold ~800 ranges. With the amortized prune, the floor hovers
+    /// around the watermark through repeated kill / miss / revive /
+    /// repair cycles, and a final explicit prune on a fully-synced
+    /// cluster drains it to (near) nothing.
+    #[test]
+    fn epoch_floor_stays_bounded_over_many_write_generations() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None)
+            .with_placement(map)
+            .with_resync(4 * 4096)
+            .with_donor_election();
+        let mut id = 0u64;
+        let mut peak = 0usize;
+        for _round in 0..20 {
+            e.on_node_down(0);
+            for _ in 0..8 {
+                e.submit(io(id, Dir::Write, 0, id * 4096));
+                id += 1;
+                complete_all(&mut e);
+            }
+            e.on_node_up(0);
+            let _ = complete_all_wrs(&mut e); // drains the repair copies
+            assert_eq!(e.node_state(0), Some(NodeState::Alive));
+            for _ in 0..32 {
+                e.submit(io(id, Dir::Write, 0, id * 4096));
+                id += 1;
+                complete_all(&mut e);
+            }
+            peak = peak.max(e.epoch_floor_ranges());
+        }
+        assert_eq!(id, 800, "the run actually issued 800 epochs");
+        assert!(
+            peak <= 256,
+            "required floor grew with writes issued, not divergence: {peak}"
+        );
+        e.prune_epoch_floor();
+        assert!(
+            e.epoch_floor_ranges() <= 8,
+            "healthy cluster retains {} floor ranges",
+            e.epoch_floor_ranges()
+        );
+    }
+
+    /// Pruning must never forget what a *diverged* replica still needs:
+    /// ranges overlapping a missed backlog (or held by a dead node) are
+    /// pinned, and the node still repairs correctly afterwards.
+    #[test]
+    fn epoch_prune_pins_diverged_ranges() {
+        let map = NodeMap::new(2, 2, 1 << 20);
+        let mut e = engine(2, 1, None)
+            .with_placement(map)
+            .with_resync(4 * 4096)
+            .with_donor_election();
+        e.on_node_down(0);
+        e.submit(io(1, Dir::Write, 0, 0));
+        complete_all(&mut e);
+        // node 0 is dead and missed the write: an explicit prune must
+        // keep the range (the dead replica pins it)
+        let before = e.epoch_floor_ranges();
+        assert_eq!(e.prune_epoch_floor(), 0, "nothing prunable while diverged");
+        assert_eq!(e.epoch_floor_ranges(), before);
+        // after revival + repair the range becomes prunable
+        e.on_node_up(0);
+        let _ = complete_all_wrs(&mut e);
+        assert_eq!(e.node_state(0), Some(NodeState::Alive));
+        assert!(e.prune_epoch_floor() > 0, "repaired range now prunable");
+        assert_eq!(e.epoch_floor_ranges(), 0);
+    }
+
     #[test]
     fn reads_and_writes_drain_independently() {
         let mut e = engine(1, 1, None);
@@ -2593,9 +3027,9 @@ mod tests {
         e.submit(io(2, Dir::Write, 0, 4096));
         let r = e.drain_dir(Dir::Read, 0);
         assert_eq!(r.chains.len(), 1);
-        assert_eq!(r.chains[0].wrs[0].op, OpKind::Read);
+        assert_eq!(r.wrs[0].op, OpKind::Read);
         let w = e.drain_dir(Dir::Write, 0);
         assert_eq!(w.chains.len(), 1);
-        assert_eq!(w.chains[0].wrs[0].op, OpKind::Write);
+        assert_eq!(w.wrs[0].op, OpKind::Write);
     }
 }

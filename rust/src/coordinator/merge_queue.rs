@@ -25,6 +25,19 @@ pub enum MergeCheck {
     Blocked,
 }
 
+/// Allocation-free outcome of [`MergeQueue::merge_check_into`]: the
+/// drained requests land in the caller's scratch buffer instead of a
+/// fresh `Vec` (the engine's hot drain path reuses one buffer per drain).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeOutcome {
+    /// The scratch buffer now holds the drained requests.
+    Drained,
+    /// Queue empty — another thread's merge-check took everything.
+    TakenByPeer,
+    /// The admission window is closed; requests stay queued.
+    Blocked,
+}
+
 /// A single-direction merge queue. Deliberately a plain FIFO + counters:
 /// the paper's point is that a *single* queue with opportunistic draining
 /// beats per-CPU queues with enforced cross-CPU merging.
@@ -69,27 +82,53 @@ impl MergeQueue {
     /// `u64::MAX` means no admission limit. Returns what this thread should
     /// post. Drains in FIFO order so a closed window cannot starve old
     /// requests (fairness of the single-queue design, paper §5.1).
+    ///
+    /// Allocating convenience wrapper around
+    /// [`MergeQueue::merge_check_into`]; the engine's hot path uses the
+    /// `_into` form with a reused scratch buffer.
     pub fn merge_check(&mut self, window_bytes: u64) -> MergeCheck {
+        let mut out = Vec::new();
+        match self.merge_check_into(window_bytes, &mut out) {
+            MergeOutcome::Drained => MergeCheck::Drained(out),
+            MergeOutcome::TakenByPeer => MergeCheck::TakenByPeer,
+            MergeOutcome::Blocked => MergeCheck::Blocked,
+        }
+    }
+
+    /// Zero-allocation merge-check: the drained requests are written into
+    /// `out` (cleared first), which the caller reuses across drains — a
+    /// swap-buffer when the whole queue drains (the common case, stealing
+    /// the queue's backing storage and leaving it `out`'s old capacity),
+    /// a memcpy of the admitted prefix when the window truncates.
+    pub fn merge_check_into(&mut self, window_bytes: u64, out: &mut Vec<AppIo>) -> MergeOutcome {
+        out.clear();
         if self.q.is_empty() {
             self.empty_checks += 1;
-            return MergeCheck::TakenByPeer;
+            return MergeOutcome::TakenByPeer;
         }
         if window_bytes == 0 || self.q[0].len > window_bytes {
-            return MergeCheck::Blocked;
+            return MergeOutcome::Blocked;
         }
         let mut budget = window_bytes;
         let mut n = 0;
+        let mut bytes = 0u64;
         for io in &self.q {
             if io.len > budget {
                 break;
             }
             budget -= io.len;
+            bytes += io.len;
             n += 1;
         }
-        let drained: Vec<AppIo> = self.q.drain(..n).collect();
-        self.queued_bytes -= drained.iter().map(|io| io.len).sum::<u64>();
+        if n == self.q.len() {
+            // full drain: swap buffers, no element moves at all
+            std::mem::swap(&mut self.q, out);
+        } else {
+            out.extend(self.q.drain(..n));
+        }
+        self.queued_bytes -= bytes;
         self.drains += 1;
-        MergeCheck::Drained(drained)
+        MergeOutcome::Drained
     }
 
     /// Peek the queued requests (tests, introspection).
@@ -221,6 +260,44 @@ mod tests {
         assert_eq!(qs.read.len(), 1);
         assert_eq!(qs.write.len(), 1);
         assert_eq!(qs.total_queued_bytes(), 8192);
+    }
+
+    /// The zero-allocation drain path: scratch reuse, swap-buffer full
+    /// drains, exact agreement with the allocating wrapper.
+    #[test]
+    fn merge_check_into_reuses_scratch_and_matches_wrapper() {
+        let mut q = MergeQueue::new();
+        let mut scratch = Vec::new();
+        for i in 0..8 {
+            q.push(io(i, i * 4096, 4096));
+        }
+        assert_eq!(q.merge_check_into(u64::MAX, &mut scratch), MergeOutcome::Drained);
+        let ids: Vec<u64> = scratch.iter().map(|x| x.id).collect();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        assert!(q.is_empty());
+        // empty queue: taken by peer, scratch cleared
+        assert_eq!(q.merge_check_into(u64::MAX, &mut scratch), MergeOutcome::TakenByPeer);
+        assert!(scratch.is_empty());
+        // window truncation drains the admitted prefix only
+        for i in 0..4 {
+            q.push(io(100 + i, i * 4096, 4096));
+        }
+        assert_eq!(q.merge_check_into(2 * 4096, &mut scratch), MergeOutcome::Drained);
+        assert_eq!(scratch.len(), 2);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.merge_check_into(0, &mut scratch), MergeOutcome::Blocked);
+        // steady state: capacities circulate between queue and scratch,
+        // so the buffers stop growing
+        let _ = q.merge_check_into(u64::MAX, &mut scratch);
+        let cap = scratch.capacity();
+        for _ in 0..100 {
+            for i in 0..8 {
+                q.push(io(i, i * 4096, 4096));
+            }
+            assert_eq!(q.merge_check_into(u64::MAX, &mut scratch), MergeOutcome::Drained);
+            assert_eq!(scratch.len(), 8);
+        }
+        assert!(scratch.capacity() <= cap.max(8), "scratch kept its capacity");
     }
 
     /// Property: for any sequence of pushes and window-limited drains, no

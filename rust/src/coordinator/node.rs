@@ -191,6 +191,41 @@ impl EpochMap {
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
+
+    /// The stored ranges as `(start, end, epoch)` triples, in address
+    /// order. Each stored range has a uniform epoch; gaps (epoch 0) are
+    /// not yielded. Pruning walks these.
+    pub fn entries(&self) -> impl Iterator<Item = (u64, u64, u64)> + '_ {
+        self.map.iter().map(|(&s, &(e, ep))| (s, e, ep))
+    }
+
+    /// Erase `[addr, addr + len)` — every byte of the span reverts to
+    /// epoch 0 ("no recorded history"), splitting entries that straddle
+    /// the boundary. This is the bounding operation for long-running
+    /// engines: a range every live replica provably holds at (or above)
+    /// the required floor carries no recovery information and can be
+    /// forgotten; any later write re-mints a fresh epoch over it.
+    pub fn erase(&mut self, addr: u64, len: u64) {
+        if len == 0 {
+            return;
+        }
+        let end = addr + len;
+        let overlapping: Vec<(u64, u64, u64)> = self
+            .map
+            .range(..end)
+            .filter(|&(_, &(e, _))| e > addr)
+            .map(|(&s, &(e, ep))| (s, e, ep))
+            .collect();
+        for (s, e, ep) in overlapping {
+            self.map.remove(&s);
+            if s < addr {
+                self.map.insert(s, (addr, ep));
+            }
+            if e > end {
+                self.map.insert(end, (e, ep));
+            }
+        }
+    }
 }
 
 /// Striped placement of client block space over N remote memory donors.
@@ -303,6 +338,15 @@ impl NodeMap {
         }
     }
 
+    /// The ordered replica nodes of the stripe containing `addr`, as an
+    /// iterator — the allocation-free form of [`NodeMap::place`] the
+    /// engine's hot submit path uses.
+    pub fn replicas_of(&self, addr: u64) -> impl Iterator<Item = NodeId> + '_ {
+        let stripe = addr / self.stripe_bytes;
+        let primary = (stripe % self.nodes as u64) as usize;
+        (0..self.replicas).map(move |i| (primary + i) % self.nodes)
+    }
+
     /// Read path: first *alive* replica, else None (→ disk fallback).
     pub fn read_target(&self, addr: u64) -> Option<NodeId> {
         self.place(addr)
@@ -321,6 +365,14 @@ impl NodeMap {
             .into_iter()
             .filter(|&n| self.is_alive(n))
             .collect()
+    }
+
+    /// Does `[addr, addr + len)` lie entirely within one replication
+    /// stripe? The engine's submission path checks this before calling
+    /// [`NodeMap::split_stripe_local`], so the common single-stripe
+    /// request never allocates a leg list.
+    pub fn stripe_local(&self, addr: u64, len: u64) -> bool {
+        len == 0 || addr / self.stripe_bytes == (addr + len - 1) / self.stripe_bytes
     }
 
     /// Split `[addr, addr + len)` into stripe-local `(addr, len)` legs:
@@ -539,6 +591,63 @@ mod tests {
         m.raise(5, 10, 2);
         assert_eq!(m.len(), 1);
         assert!(!m.is_empty());
+    }
+
+    #[test]
+    fn epoch_map_erase_and_entries() {
+        let mut m = EpochMap::default();
+        m.raise(0, 100, 3);
+        m.raise(200, 50, 7);
+        assert_eq!(m.entries().count(), 2);
+        // punch a hole: the straddled entry splits, epochs preserved
+        m.erase(40, 20);
+        let got: Vec<(u64, u64, u64)> = m.entries().collect();
+        assert_eq!(got, vec![(0, 40, 3), (60, 100, 3), (200, 250, 7)]);
+        assert_eq!(m.min_over(0, 100), 0, "erased span reads epoch 0");
+        assert_eq!(m.max_over(0, 40), 3);
+        // exact erase empties an entry; erasing a gap is a no-op
+        m.erase(200, 50);
+        m.erase(120, 30);
+        assert_eq!(m.entries().count(), 2);
+        m.erase(0, 1000);
+        assert!(m.is_empty());
+        m.erase(0, 0);
+        assert!(m.is_empty());
+    }
+
+    /// Property: erase agrees with the naive per-byte model (raising and
+    /// erasing at random), including entry splitting at both boundaries.
+    #[test]
+    fn prop_epoch_map_erase_matches_naive_model() {
+        prop::forall(cfg(0xE8A5E), |rng, size| {
+            const SPAN: u64 = 200;
+            let mut m = EpochMap::default();
+            let mut model = [0u64; SPAN as usize];
+            for _ in 0..size {
+                let addr = rng.gen_below(SPAN);
+                let len = 1 + rng.gen_below(SPAN - addr);
+                if rng.gen_bool(0.65) {
+                    let epoch = 1 + rng.gen_below(12);
+                    m.raise(addr, len, epoch);
+                    for b in addr..addr + len {
+                        model[b as usize] = model[b as usize].max(epoch);
+                    }
+                } else {
+                    m.erase(addr, len);
+                    for b in addr..addr + len {
+                        model[b as usize] = 0;
+                    }
+                }
+                let qa = rng.gen_below(SPAN);
+                let ql = 1 + rng.gen_below(SPAN - qa);
+                let naive_min = (qa..qa + ql).map(|b| model[b as usize]).min().unwrap();
+                let naive_max = (qa..qa + ql).map(|b| model[b as usize]).max().unwrap();
+                if m.min_over(qa, ql) != naive_min || m.max_over(qa, ql) != naive_max {
+                    return Err(format!("min/max disagree at ({qa},{ql})"));
+                }
+            }
+            Ok(())
+        });
     }
 
     /// Property: EpochMap agrees with a naive per-byte epoch model under

@@ -225,6 +225,13 @@ pub struct ChaosFabric {
     served: FxHashMap<u64, Vec<PageStamp>>,
     /// Detail of the first stale read (for failure messages).
     pub first_stale: Option<String>,
+    /// Every `(addr, len)` range the engine's election surrendered to
+    /// the disk path, in order. The fabric's own payload model absorbs
+    /// them into `disk_vers`; this log is the externally visible copy a
+    /// paging layer consumes to set its per-block disk bit (see
+    /// `Pager::surrender`) — the end-to-end test of the
+    /// `take_disk_surrenders` wiring feeds a real `Pager` from it.
+    pub surrendered_log: Vec<(u64, u64)>,
     pub stats: ChaosStats,
 }
 
@@ -271,6 +278,7 @@ impl ChaosFabric {
             read_floor: FxHashMap::default(),
             served: FxHashMap::default(),
             first_stale: None,
+            surrendered_log: Vec::new(),
             stats: ChaosStats::default(),
         };
         for ev in node_events {
@@ -408,7 +416,7 @@ impl ChaosFabric {
                             .collect();
                         self.read_floor.insert(*sid, floors);
                     }
-                    self.read_subs.insert(id, sub.sub_ids.clone());
+                    self.read_subs.insert(id, sub.sub_ids.to_vec());
                 }
             }
         }
@@ -425,6 +433,7 @@ impl ChaosFabric {
     /// is exactly the version no live replica holds).
     fn absorb_surrenders(&mut self) {
         for (_, addr, len) in self.engine.take_disk_surrenders() {
+            self.surrendered_log.push((addr, len));
             for page in pages_of(addr, len) {
                 let v = self.versions.get(&page).copied().unwrap_or(0);
                 self.mark_disk(page, v);
@@ -456,10 +465,9 @@ impl ChaosFabric {
     /// each WR's latency and fault decisions from the seed stream.
     fn pump(&mut self) {
         let out = self.engine.drain_all(self.now_ns);
-        for chain in out.chains {
-            let (qp, node) = (chain.qp, chain.node);
-            for wr in chain.wrs {
-                self.schedule_wr(qp, node, wr);
+        for (chain, wrs) in out.into_chains() {
+            for wr in wrs {
+                self.schedule_wr(chain.qp, chain.node, wr);
             }
         }
     }
@@ -929,6 +937,96 @@ mod tests {
         fab.run_to_idle(STEPS).expect("quiescent");
         assert_eq!(fab.stats.stale_reads, 0, "demotion + resync hid the divergence");
         assert_eq!(fab.engine().regulator().in_flight(), 0);
+    }
+
+    /// ISSUE 5 satellite: the engine's disk-surrender signal drives the
+    /// *paging layer's* per-block disk bit end-to-end. The chaos run
+    /// produces a surrender (all peers of a revived node dead); feeding
+    /// the surrendered ranges into a real `Pager` via
+    /// `Pager::surrender` must flip exactly those swap slots to the
+    /// disk path, so a subsequent fault of a surrendered page routes
+    /// its load to `Target::Disk` — not to a remote replica that no
+    /// longer holds the required version.
+    #[test]
+    fn surrendered_ranges_route_reads_to_disk_via_pager() {
+        use crate::paging::{Pager, Target};
+
+        let mut fab = ChaosFabric::new(0xD15C, 2, 1, 2, None, FaultPlan::none()).with_election();
+        // 8 pages live remotely, then node 0 misses an overwrite and
+        // every peer dies before it revives: the election surrenders
+        for i in 0..8u64 {
+            fab.submit(i, Dir::Write, i * 4096, 4096);
+        }
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.schedule_node_event(0, false, fab.now() + 1);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        for i in 0..4u64 {
+            fab.submit(100 + i, Dir::Write, i * 4096, 4096); // only node 1
+        }
+        fab.run_to_idle(STEPS).expect("quiescent");
+        fab.schedule_node_event(1, false, fab.now() + 1);
+        fab.schedule_node_event(0, true, fab.now() + 2);
+        fab.run_to_idle(STEPS).expect("quiescent");
+        assert!(
+            fab.engine().stats.resync_disk_surrenders > 0,
+            "the scenario must actually surrender"
+        );
+        assert!(!fab.surrendered_log.is_empty());
+
+        // a pager whose swap device mirrors the chaos address space
+        // (page p <-> slot p): pages 0..8 are swapped out remotely
+        let mut pager = Pager::new(1, NodeMap::new(2, 2, 1 << 20), 4096);
+        pager.prepopulate(8);
+        let mut flipped = 0;
+        for &(addr, len) in &fab.surrendered_log {
+            flipped += pager.surrender(addr, len);
+        }
+        assert!(flipped > 0, "surrendered span covered swapped-out pages");
+        // every surrendered page now faults to the local disk replica…
+        for &(addr, len) in &fab.surrendered_log {
+            for page in pages_of(addr, len) {
+                if page >= 8 {
+                    continue;
+                }
+                assert!(pager.disk_backed(page), "page {page} disk bit set");
+                let o = pager.touch(page, false);
+                let load = o.load.expect("non-resident page needs a load");
+                assert_eq!(load.target, Target::Disk, "page {page} reads disk");
+            }
+        }
+        // …and an untouched remote page still reads from a replica
+        let remote_page = (0..8u64)
+            .find(|p| !pager.disk_backed(*p) && !pager.cache().contains(*p))
+            .expect("some page stayed remote");
+        let o = pager.touch(remote_page, false);
+        assert!(matches!(o.load.expect("load").target, Target::Node(_)));
+    }
+
+    /// ISSUE 5 satellite: duplicate/late WCs against the slab ledgers.
+    /// Every WR is delivered twice and errors drive failover re-queues,
+    /// so stale wr_ids and stale sub ids arrive constantly while their
+    /// slots are being recycled — the generation check must drop every
+    /// one (exactly-once retirement, fully released window, and every
+    /// duplicate accounted).
+    #[test]
+    fn duplicates_with_failover_never_resolve_recycled_slots() {
+        let plan = FaultPlan::none()
+            .with_duplicates(1.0, 20_000)
+            .with_errors(0.3)
+            .with_reordering(0.3, 15_000);
+        let mut fab = ChaosFabric::new(0x51AB, 3, 2, 2, Some(32 * 4096), plan);
+        let n = submit_pages(&mut fab, 120, 3);
+        let retired = fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(retired.len() as u64, n, "exactly-once despite dup+failover");
+        assert!(fab.stats.duplicates_delivered > 0);
+        assert!(fab.stats.failovers > 0, "errors actually drove failover");
+        assert_eq!(
+            fab.engine().stats.duplicate_wcs,
+            fab.stats.duplicates_delivered,
+            "every duplicate died at the generation check"
+        );
+        assert_eq!(fab.engine().regulator().in_flight(), 0);
+        assert_eq!(fab.engine().queued_ios(), 0);
     }
 
     #[test]

@@ -31,9 +31,10 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batching::{BatchLimits, BatchMode};
 use crate::coordinator::engine::{EngineCosts, IoEngine, SHARD_REGION_SHIFT};
-use crate::coordinator::node::{EpochMap, NodeMap, NodeState};
+use crate::coordinator::node::{NodeMap, NodeState};
 use crate::coordinator::polling::{PollStep, PollerFsm, PollingMode};
 use crate::fabric::{AppIo, Dir, NodeId, OpKind, QpId, Wc, WcStatus, WorkRequest};
+use crate::paging::DiskSpans;
 use crate::util::fxhash::FxHashMap;
 
 const REGION_BYTES: usize = 1 << SHARD_REGION_SHIFT;
@@ -268,16 +269,12 @@ struct Inner {
     /// app write id -> its span, to stamp the disk-ownership maps at
     /// retirement.
     write_spans: HashMap<u64, (u64, u64)>,
-    /// Disk-ownership tracking, ordered by write id (ids are minted in
-    /// submission order, so they double as a write sequence): a byte is
-    /// disk-owned iff the newest write that sent it to the disk path
-    /// (`disk_marked` — all replicas dead at submit *or in flight*, or
-    /// an election surrender) is newer than every write that landed
-    /// remotely over it (`remote_healed`). Stamping both sides with
-    /// write ids makes the tracking race-free: an *older* write
-    /// retiring late can never clear a *newer* write's disk mark.
-    disk_marked: EpochMap,
-    remote_healed: EpochMap,
+    /// The paging layer's per-block disk bit, ordered by write id (ids
+    /// are minted in submission order, so they double as a write
+    /// sequence); fed from submit-time dead stripes, in-flight write
+    /// failures, and the engine's `take_disk_surrenders` signal. See
+    /// [`DiskSpans`] for the race-freedom argument.
+    disk: DiskSpans,
     /// app io id -> retired outcome, awaiting pickup by the submitter.
     done: HashMap<u64, DoneIo>,
     next_id: u64,
@@ -291,14 +288,9 @@ impl Inner {
         id
     }
 
-    /// Does the local disk own any byte of `[addr, addr + len)`? True
-    /// iff some sub-span's newest disk mark is newer than everything
-    /// that landed remotely there (see the field docs on `disk_marked`).
+    /// Does the local disk own any byte of `[addr, addr + len)`?
     fn disk_owned(&self, addr: u64, len: u64) -> bool {
-        self.disk_marked
-            .segments(addr, len)
-            .into_iter()
-            .any(|(sa, sl, m)| m > 0 && self.remote_healed.min_over(sa, sl) < m)
+        self.disk.disk_owned(addr, len)
     }
 }
 
@@ -403,8 +395,7 @@ impl LiveBox {
                 read_data: HashMap::new(),
                 read_subs: HashMap::new(),
                 write_spans: HashMap::new(),
-                disk_marked: EpochMap::default(),
-                remote_healed: EpochMap::default(),
+                disk: DiskSpans::default(),
                 done: HashMap::new(),
                 next_id: 1,
                 stats: LiveStats::default(),
@@ -562,7 +553,7 @@ impl LiveBox {
         // legs whose replicas were all dead at submit: their bytes live
         // on disk only — stamp the spans so reads take the disk path
         for &(a, l) in &sub.disk_legs {
-            g.disk_marked.raise(a, l, id);
+            g.disk.mark(a, l, id);
         }
         if sub.disk_fallback {
             g.stats.disk_fallbacks += 1;
@@ -629,7 +620,7 @@ impl LiveBox {
             };
             g.read_addr.insert(*sid, (a, l));
         }
-        g.read_subs.insert(id, sub.sub_ids.clone());
+        g.read_subs.insert(id, sub.sub_ids.to_vec());
         self.pump(&mut g);
         id
     }
@@ -644,16 +635,16 @@ impl LiveBox {
         // surrender can heal them back to remote ownership
         let surrender_stamp = g.next_id;
         for (_, a, l) in g.core.take_disk_surrenders() {
-            g.disk_marked.raise(a, l, surrender_stamp);
+            g.disk.mark(a, l, surrender_stamp);
         }
         let out = g.core.drain_all(0);
         if out.admission_blocked > 0 {
             g.stats.admission_waits += out.admission_blocked;
         }
         g.stats.merged_ios += out.merged_ios;
-        for chain in out.chains {
+        for (chain, wrs) in out.into_chains() {
             g.stats.posts += 1;
-            for wr in chain.wrs {
+            for wr in wrs {
                 g.stats.wqes += 1;
                 let payload = match wr.op {
                     OpKind::Write | OpKind::Send => {
@@ -810,12 +801,12 @@ impl LiveBox {
                             // some leg of this write is durable nowhere
                             // remote (e.g. every replica died while it
                             // was in flight): disk owns the span
-                            g.disk_marked.raise(a, l, r.id);
+                            g.disk.mark(a, l, r.id);
                         } else {
                             // the write is durable on every leg's
                             // replicas: the remote side owns the span
                             // (unless a *newer* write marked it disk)
-                            g.remote_healed.raise(a, l, r.id);
+                            g.disk.heal(a, l, r.id);
                         }
                     }
                     None

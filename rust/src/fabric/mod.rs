@@ -22,6 +22,8 @@ pub mod chaos;
 pub mod loopback;
 pub mod sim;
 
+pub use crate::util::idlist::IdList;
+
 /// Identifies a remote peer node (memory donor / server daemon).
 pub type NodeId = usize;
 /// Queue-pair index (client side, global across peers and channels).
@@ -92,8 +94,9 @@ pub struct WorkRequest {
     pub len: u64,
     /// Number of scatter/gather entries (merged fragments).
     pub num_sge: usize,
-    /// Application I/Os completed when this WR completes.
-    pub app_ios: Vec<u64>,
+    /// Application I/Os completed when this WR completes. Inline up to
+    /// the default SGE merge width, so building a WR does not allocate.
+    pub app_ios: IdList,
     pub signaled: bool,
 }
 
@@ -104,7 +107,7 @@ pub struct Wc {
     pub qp: QpId,
     pub op: OpKind,
     pub len: u64,
-    pub app_ios: Vec<u64>,
+    pub app_ios: IdList,
     pub status: WcStatus,
 }
 
@@ -155,7 +158,7 @@ mod tests {
             remote_addr: 0,
             len,
             num_sge: 1,
-            app_ios: ios,
+            app_ios: ios.into(),
             signaled: true,
         };
         let c = Chain {

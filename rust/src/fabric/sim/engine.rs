@@ -107,8 +107,9 @@ impl StackEngine {
         let out = self.core.drain_dir(dir, t);
         sim.trace.merged_ios += out.merged_ios;
         sim.trace.admission_blocks += out.admission_blocked;
-        for chain in out.chains {
-            for wr in &chain.wrs {
+        let cpu_ns = out.cpu_ns;
+        for (chain, chain_wrs) in out.into_chains() {
+            for wr in &chain_wrs {
                 // MR staging (memcpy / registration) was already charged on
                 // the submitting thread (parallel across app threads); the
                 // serialized critical section pays only descriptor work.
@@ -128,9 +129,9 @@ impl StackEngine {
                     }
                 }
             }
-            sim.post_chain(chain.qp, chain.wrs, t + chain.cpu_offset_ns);
+            sim.post_chain(chain.qp, chain_wrs, t + chain.cpu_offset_ns);
         }
-        out.cpu_ns
+        cpu_ns
     }
 
     /// Submit-path CPU for one app I/O: the MR staging cost, paid by the

@@ -11,11 +11,62 @@
 pub mod cache;
 pub mod swap;
 
-use crate::coordinator::node::{NodeMap, ReadRoute};
+use crate::coordinator::node::{EpochMap, NodeMap, ReadRoute};
 use crate::fabric::Dir;
 use cache::{Access, ClockCache};
 use crate::util::fxhash::FxHashMap;
 use swap::SwapAllocator;
+
+/// The paging layer's **per-block disk bit** (paper §7.1: every block has
+/// a local-disk replica; reads go to disk only while no remote copy is
+/// authoritative), ordered by write stamp so concurrent writes cannot
+/// race the ownership flag.
+///
+/// A span is disk-owned iff the newest write that sent it to the disk
+/// path — an all-replicas-dead submit, a write whose every leg failed in
+/// flight, or an election *surrender*
+/// ([`crate::coordinator::engine::IoEngine::take_disk_surrenders`]) — is
+/// newer than every write that landed remotely over it. Stamping both
+/// sides with monotone write ids makes the tracking race-free: an older
+/// write retiring late can never clear a newer write's disk mark.
+///
+/// This is the structure the live client (`fabric::loopback::LiveBox`)
+/// consults before every placed read, and that [`Pager::surrender`] feeds
+/// from the engine's disk-surrender signal — the client-side disk-span
+/// shortcut of earlier revisions now lives here, in the paging layer.
+#[derive(Debug, Default)]
+pub struct DiskSpans {
+    marked: EpochMap,
+    healed: EpochMap,
+}
+
+impl DiskSpans {
+    /// Record that write `stamp` sent `[addr, addr + len)` to the disk
+    /// path: the local disk copy is now the newest data there.
+    pub fn mark(&mut self, addr: u64, len: u64, stamp: u64) {
+        self.marked.raise(addr, len, stamp);
+    }
+
+    /// Record that write `stamp` landed remotely over `[addr, addr+len)`:
+    /// remote replicas own the span again unless a *newer* write marked
+    /// it disk.
+    pub fn heal(&mut self, addr: u64, len: u64, stamp: u64) {
+        self.healed.raise(addr, len, stamp);
+    }
+
+    /// Does the local disk own any byte of `[addr, addr + len)`?
+    pub fn disk_owned(&self, addr: u64, len: u64) -> bool {
+        self.marked
+            .segments(addr, len)
+            .into_iter()
+            .any(|(sa, sl, m)| m > 0 && self.healed.min_over(sa, sl) < m)
+    }
+
+    /// No byte is currently (or was ever) disk-marked.
+    pub fn is_empty(&self) -> bool {
+        self.marked.is_empty()
+    }
+}
 
 /// Where a paging I/O must go.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -245,6 +296,40 @@ impl Pager {
         }
     }
 
+    /// Consume one engine disk-surrender range (the
+    /// `IoEngine::take_disk_surrenders` signal): every page whose swap
+    /// slot falls inside the surrendered device span `[addr, addr+len)`
+    /// loses its remote copy — no live replica holds the required
+    /// version — and flips to the per-block disk bit, so subsequent
+    /// faults route to the local-disk replica instead of reading stale
+    /// remote bytes. Returns how many pages flipped.
+    pub fn surrender(&mut self, addr: u64, len: u64) -> usize {
+        let end = addr + len;
+        // overlap, not containment: surrender ranges arrive at write
+        // (byte) granularity, so a span starting mid-page must still
+        // flip the page whose slot it cuts into
+        let flipped: Vec<(u64, u64)> = self
+            .swapped
+            .iter()
+            .filter(|&(_, &slot)| {
+                let a = slot * self.page_size;
+                a < end && a + self.page_size > addr
+            })
+            .map(|(&page, &slot)| (page, slot))
+            .collect();
+        for &(page, slot) in &flipped {
+            self.swapped.remove(&page);
+            self.on_disk.insert(page, slot);
+        }
+        flipped.len()
+    }
+
+    /// Is `page` currently owned by the disk path (its per-block disk
+    /// bit set)?
+    pub fn disk_backed(&self, page: u64) -> bool {
+        self.on_disk.contains_key(&page)
+    }
+
     /// Number of pages currently swapped out to remote memory.
     pub fn swapped_out(&self) -> usize {
         self.swapped.len()
@@ -359,6 +444,60 @@ mod tests {
         let o2 = p.touch(1, false);
         assert_eq!(o2.load.unwrap().target, Target::Disk);
         assert_eq!(p.disk_reads, 1);
+    }
+
+    /// The per-block disk bit is write-stamp ordered: an older write
+    /// retiring late cannot clear a newer write's disk mark, and only a
+    /// strictly newer remote landing flips ownership back.
+    #[test]
+    fn disk_spans_are_write_stamp_ordered() {
+        let mut d = DiskSpans::default();
+        assert!(d.is_empty());
+        assert!(!d.disk_owned(0, 4096));
+        // write 5 went to disk over [0, 8K)
+        d.mark(0, 8192, 5);
+        assert!(d.disk_owned(0, 4096));
+        assert!(d.disk_owned(4096, 8192), "partial overlap counts");
+        assert!(!d.disk_owned(8192, 4096));
+        // an OLDER write (3) landing remotely must not clear the mark
+        d.heal(0, 8192, 3);
+        assert!(d.disk_owned(0, 8192), "older heal loses to newer mark");
+        // a NEWER write (9) landing remotely flips the span back
+        d.heal(0, 4096, 9);
+        assert!(!d.disk_owned(0, 4096));
+        assert!(d.disk_owned(4096, 4096), "unhealed tail stays disk");
+        // and a yet-newer disk mark wins again
+        d.mark(0, 4096, 11);
+        assert!(d.disk_owned(0, 4096));
+    }
+
+    /// ISSUE 5 satellite: the engine's disk-surrender signal flips the
+    /// surrendered swap slots to the per-block disk bit, so faults of
+    /// those pages route to the local-disk replica.
+    #[test]
+    fn surrender_flips_swapped_pages_to_disk() {
+        let mut p = pager(1, 2, 2);
+        p.prepopulate(8); // pages 0..8 on slots 0..8
+        assert_eq!(p.swapped_out(), 8);
+        // the engine surrendered device span [2*4096, 5*4096)
+        let flipped = p.surrender(2 * 4096, 3 * 4096);
+        assert_eq!(flipped, 3);
+        assert_eq!(p.swapped_out(), 5);
+        for page in 2..5u64 {
+            assert!(p.disk_backed(page));
+            let o = p.touch(page, false);
+            assert_eq!(o.load.expect("load").target, Target::Disk);
+        }
+        // untouched pages still read from a replica
+        let o = p.touch(6, false);
+        assert!(matches!(o.load.expect("load").target, Target::Node(_)));
+        assert!(!p.disk_backed(6));
+        // an empty or non-overlapping surrender flips nothing
+        assert_eq!(p.surrender(100 << 20, 4096), 0);
+        // a surrender cutting into the middle of a page still flips it
+        // (write-granular ranges vs page-granular slots)
+        assert_eq!(p.surrender(5 * 4096 + 2048, 1024), 1);
+        assert!(p.disk_backed(5));
     }
 
     #[test]

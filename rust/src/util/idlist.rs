@@ -1,0 +1,195 @@
+//! [`IdList`] — a small-vector of `u64` ids that stays inline (no heap
+//! allocation) up to [`INLINE_IDS`] entries and spills to a `Vec` beyond.
+//!
+//! This is what lets a [`crate::fabric::WorkRequest`] carry its app-I/O
+//! ids through the merge → plan → post → retire cycle without a per-WR
+//! heap allocation: the default NIC merge width (`BatchLimits::max_sge` =
+//! 16) fits inline, so the steady-state pipeline moves ids by memcpy.
+//! Configurations with a wider SGE limit still work — they pay one spill
+//! allocation per oversized WR, which the allocation-gated bench would
+//! surface if it ever crept onto the default path.
+//!
+//! The storage is contiguous in either representation, so the list derefs
+//! to `&[u64]` and call sites use it exactly like the `Vec<u64>` it
+//! replaced (iteration, indexing, `contains`, comparisons).
+
+/// Ids stored inline before spilling to the heap. Matches the default
+/// `max_sge` merge width so default-config WRs never allocate.
+pub const INLINE_IDS: usize = 16;
+
+/// A `u64` list, inline up to [`INLINE_IDS`] entries.
+#[derive(Debug, Clone)]
+pub enum IdList {
+    /// The common case: ids in a fixed array, `len` of them valid.
+    Inline { buf: [u64; INLINE_IDS], len: u8 },
+    /// Spilled: more ids than the inline buffer holds.
+    Heap(Vec<u64>),
+}
+
+impl Default for IdList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IdList {
+    pub const fn new() -> Self {
+        Self::Inline {
+            buf: [0; INLINE_IDS],
+            len: 0,
+        }
+    }
+
+    pub fn push(&mut self, id: u64) {
+        match self {
+            Self::Inline { buf, len } => {
+                if (*len as usize) < INLINE_IDS {
+                    buf[*len as usize] = id;
+                    *len += 1;
+                } else {
+                    let mut v = Vec::with_capacity(INLINE_IDS * 2);
+                    v.extend_from_slice(&buf[..]);
+                    v.push(id);
+                    *self = Self::Heap(v);
+                }
+            }
+            Self::Heap(v) => v.push(id),
+        }
+    }
+
+    pub fn as_slice(&self) -> &[u64] {
+        match self {
+            Self::Inline { buf, len } => &buf[..*len as usize],
+            Self::Heap(v) => v,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Self::Inline { len, .. } => *len as usize,
+            Self::Heap(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&mut self) {
+        match self {
+            Self::Inline { len, .. } => *len = 0,
+            Self::Heap(v) => v.clear(),
+        }
+    }
+}
+
+impl std::ops::Deref for IdList {
+    type Target = [u64];
+    fn deref(&self) -> &[u64] {
+        self.as_slice()
+    }
+}
+
+impl FromIterator<u64> for IdList {
+    fn from_iter<I: IntoIterator<Item = u64>>(iter: I) -> Self {
+        let mut out = Self::new();
+        for id in iter {
+            out.push(id);
+        }
+        out
+    }
+}
+
+impl From<Vec<u64>> for IdList {
+    fn from(v: Vec<u64>) -> Self {
+        if v.len() <= INLINE_IDS {
+            v.into_iter().collect()
+        } else {
+            Self::Heap(v)
+        }
+    }
+}
+
+impl<'a> IntoIterator for &'a IdList {
+    type Item = &'a u64;
+    type IntoIter = std::slice::Iter<'a, u64>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl PartialEq for IdList {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for IdList {}
+
+impl PartialEq<Vec<u64>> for IdList {
+    fn eq(&self, other: &Vec<u64>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<&[u64]> for IdList {
+    fn eq(&self, other: &&[u64]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl<const N: usize> PartialEq<[u64; N]> for IdList {
+    fn eq(&self, other: &[u64; N]) -> bool {
+        self.as_slice() == &other[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inline_until_the_cap_then_spills() {
+        let mut l = IdList::new();
+        for i in 0..INLINE_IDS as u64 {
+            l.push(i);
+        }
+        assert!(matches!(l, IdList::Inline { .. }));
+        assert_eq!(l.len(), INLINE_IDS);
+        l.push(99);
+        assert!(matches!(l, IdList::Heap(_)), "17th id spills");
+        assert_eq!(l.len(), INLINE_IDS + 1);
+        assert_eq!(l[INLINE_IDS], 99);
+        // order preserved across the spill
+        let want: Vec<u64> = (0..INLINE_IDS as u64).chain([99]).collect();
+        assert_eq!(l, want);
+    }
+
+    #[test]
+    fn behaves_like_a_slice() {
+        let l: IdList = [5u64, 6, 7].into_iter().collect();
+        assert_eq!(l.len(), 3);
+        assert_eq!(l[0], 5);
+        assert!(l.contains(&6));
+        assert_eq!(l.iter().sum::<u64>(), 18);
+        assert_eq!(l, vec![5, 6, 7]);
+        let mut seen = Vec::new();
+        for &id in &l {
+            seen.push(id);
+        }
+        assert_eq!(seen, vec![5, 6, 7]);
+        let cloned = l.clone();
+        assert_eq!(cloned, l);
+    }
+
+    #[test]
+    fn from_vec_and_clear() {
+        let l: IdList = vec![1u64; INLINE_IDS + 4].into();
+        assert!(matches!(l, IdList::Heap(_)));
+        let mut s: IdList = vec![1u64, 2].into();
+        assert!(matches!(s, IdList::Inline { .. }));
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s, Vec::<u64>::new());
+    }
+}

@@ -4,7 +4,9 @@
 pub mod fmt;
 pub mod fxhash;
 pub mod hist;
+pub mod idlist;
 pub mod prop;
 pub mod rng;
+pub mod slab;
 pub mod stats;
 pub mod zipf;

@@ -1,0 +1,293 @@
+//! Generational slab: the engine's zero-allocation in-flight ledgers.
+//!
+//! The `IoEngine` mints every id it later looks up — sub-I/O ids, WR ids,
+//! leg-aggregation handles — so instead of hashing those ids into
+//! `FxHashMap`s on every submit/retire, the slab *encodes the storage
+//! location into the id itself*: a key is `generation << 32 | slot`, and a
+//! lookup is one bounds check, one generation compare, and one array
+//! index. Backends keep treating the ids as opaque `u64`s.
+//!
+//! The **generation** is what makes recycled slots safe under a chaotic
+//! completion queue: when a slot is freed its generation is bumped, so a
+//! stale id held by a late or duplicate work completion can never resolve
+//! to the slot's next occupant — `get`/`remove` with an old-generation key
+//! return `None`, exactly like a missing hash-map entry, and the engine
+//! counts it as a duplicate. Generations are 31 bits (bit 63 of a key is
+//! never set, keeping slab keys clear of the engine's reserved id space
+//! and of the `u64::MAX` resync sentinel), so a single slot must be
+//! reused 2^31 times before a generation repeats — at which point the
+//! colliding WR would also need to have been in flight across the entire
+//! wrap, which the admission window makes impossible.
+//!
+//! Steady state allocates nothing: `insert` pops the free list, `remove`
+//! pushes it back, and both `Vec`s keep their high-water capacity.
+
+/// A generational slab keyed by self-describing `u64` ids.
+#[derive(Debug)]
+pub struct Slab<T> {
+    slots: Vec<Entry<T>>,
+    free: Vec<u32>,
+    len: usize,
+}
+
+#[derive(Debug)]
+struct Entry<T> {
+    /// Bumped on every free; masked to 31 bits so keys stay below `1<<63`.
+    gen: u32,
+    val: Option<T>,
+}
+
+/// Generation mask: 31 bits, keeping bit 63 of the composed key clear.
+const GEN_MASK: u32 = 0x7FFF_FFFF;
+
+const fn key_of(gen: u32, slot: u32) -> u64 {
+    ((gen as u64) << 32) | slot as u64
+}
+
+const fn slot_of(key: u64) -> u32 {
+    key as u32
+}
+
+const fn gen_of(key: u64) -> u32 {
+    (key >> 32) as u32
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Self {
+            slots: Vec::new(),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            slots: Vec::with_capacity(cap),
+            free: Vec::with_capacity(cap),
+            len: 0,
+        }
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Store `val`, returning its key (`generation << 32 | slot`). Never
+    /// allocates while a previously freed slot is available.
+    pub fn insert(&mut self, val: T) -> u64 {
+        self.len += 1;
+        match self.free.pop() {
+            Some(slot) => {
+                let e = &mut self.slots[slot as usize];
+                debug_assert!(e.val.is_none(), "free list pointed at a live slot");
+                e.val = Some(val);
+                key_of(e.gen, slot)
+            }
+            None => {
+                let slot = self.slots.len() as u32;
+                assert!(slot != u32::MAX, "slab exhausted 2^32 slots");
+                self.slots.push(Entry {
+                    gen: 0,
+                    val: Some(val),
+                });
+                key_of(0, slot)
+            }
+        }
+    }
+
+    /// The entry for `key`, unless the key is stale (its slot was freed —
+    /// and possibly recycled under a newer generation) or foreign.
+    pub fn get(&self, key: u64) -> Option<&T> {
+        let e = self.slots.get(slot_of(key) as usize)?;
+        if e.gen != gen_of(key) {
+            return None;
+        }
+        e.val.as_ref()
+    }
+
+    /// Mutable access with the same stale-key semantics as [`Slab::get`].
+    pub fn get_mut(&mut self, key: u64) -> Option<&mut T> {
+        let e = self.slots.get_mut(slot_of(key) as usize)?;
+        if e.gen != gen_of(key) {
+            return None;
+        }
+        e.val.as_mut()
+    }
+
+    /// Free `key`'s slot and return its value; `None` for stale/foreign
+    /// keys (the duplicate-completion guard). The slot's generation is
+    /// bumped immediately, so the freed key is dead from this point on.
+    pub fn remove(&mut self, key: u64) -> Option<T> {
+        let slot = slot_of(key);
+        let e = self.slots.get_mut(slot as usize)?;
+        if e.gen != gen_of(key) {
+            return None;
+        }
+        let val = e.val.take()?;
+        e.gen = (e.gen + 1) & GEN_MASK;
+        self.free.push(slot);
+        self.len -= 1;
+        Some(val)
+    }
+
+    /// Iterate live entries as `(key, &value)`.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &T)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, e)| e.val.as_ref().map(|v| (key_of(e.gen, slot as u32), v)))
+    }
+
+    /// Iterate live values.
+    pub fn values(&self) -> impl Iterator<Item = &T> {
+        self.slots.iter().filter_map(|e| e.val.as_ref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s: Slab<u64> = Slab::new();
+        let a = s.insert(10);
+        let b = s.insert(20);
+        assert_ne!(a, b);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&10));
+        assert_eq!(s.get(b), Some(&20));
+        *s.get_mut(a).unwrap() = 11;
+        assert_eq!(s.remove(a), Some(11));
+        assert_eq!(s.get(a), None, "removed key is dead");
+        assert_eq!(s.remove(a), None, "double remove is a no-op");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.remove(b), Some(20));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn recycled_slot_rejects_stale_key() {
+        let mut s: Slab<&'static str> = Slab::new();
+        let old = s.insert("old");
+        assert_eq!(s.remove(old), Some("old"));
+        let new = s.insert("new");
+        // same slot, new generation: the stale key must not resolve
+        assert_ne!(old, new);
+        assert_eq!(old as u32, new as u32, "slot reused");
+        assert_eq!(s.get(old), None);
+        assert_eq!(s.remove(old), None, "stale key cannot evict the tenant");
+        assert_eq!(s.get(new), Some(&"new"));
+    }
+
+    #[test]
+    fn keys_stay_below_the_reserved_id_space() {
+        let mut s: Slab<u8> = Slab::new();
+        let k = s.insert(1);
+        assert!(k < 1 << 63);
+        assert!(k < u64::MAX, "the resync sentinel is unreachable");
+    }
+
+    #[test]
+    fn steady_state_reuses_capacity() {
+        let mut s: Slab<u64> = Slab::new();
+        let mut keys = Vec::new();
+        for i in 0..64 {
+            keys.push(s.insert(i));
+        }
+        for _ in 0..1000 {
+            for k in keys.drain(..) {
+                assert!(s.remove(k).is_some());
+            }
+            for i in 0..64 {
+                keys.push(s.insert(i));
+            }
+        }
+        assert_eq!(s.len(), 64);
+        assert_eq!(s.slots.len(), 64, "no slot growth at steady state");
+    }
+
+    #[test]
+    fn iteration_sees_exactly_the_live_entries() {
+        let mut s: Slab<u64> = Slab::new();
+        let a = s.insert(1);
+        let b = s.insert(2);
+        let c = s.insert(3);
+        s.remove(b);
+        let mut live: Vec<(u64, u64)> = s.iter().map(|(k, &v)| (k, v)).collect();
+        live.sort_unstable();
+        let mut want = vec![(a, 1), (c, 3)];
+        want.sort_unstable();
+        assert_eq!(live, want);
+        assert_eq!(s.values().sum::<u64>(), 4);
+    }
+
+    /// Satellite property (ISSUE 5): a stale (old-generation) key from a
+    /// late or duplicate completion never resolves to a recycled slot —
+    /// against a model tracking every key ever freed, under random
+    /// insert/remove interleavings with heavy slot reuse.
+    #[test]
+    fn prop_stale_keys_never_resolve_after_recycling() {
+        use crate::util::fxhash::FxHashMap;
+        crate::util::prop::forall(crate::util::prop::cfg(0x51AB), |rng, size| {
+            let mut s: Slab<u64> = Slab::new();
+            let mut live: FxHashMap<u64, u64> = FxHashMap::default();
+            let mut dead: Vec<u64> = Vec::new();
+            let mut next_val = 0u64;
+            for _ in 0..size * 8 {
+                if live.is_empty() || rng.gen_bool(0.5) {
+                    let key = s.insert(next_val);
+                    if live.insert(key, next_val).is_some() {
+                        return Err(format!("key {key:#x} issued twice while live"));
+                    }
+                    if dead.contains(&key) {
+                        return Err(format!("key {key:#x} reissued after death"));
+                    }
+                    next_val += 1;
+                } else {
+                    let i = rng.gen_below(live.len() as u64) as usize;
+                    let key = *live.keys().nth(i).unwrap();
+                    let want = live.remove(&key).unwrap();
+                    match s.remove(key) {
+                        Some(v) if v == want => dead.push(key),
+                        other => return Err(format!("remove({key:#x}) -> {other:?}")),
+                    }
+                }
+                // every dead key must stay dead, whatever now occupies
+                // its slot (this is the duplicate-WC guarantee)
+                for &k in dead.iter().rev().take(8) {
+                    if s.get(k).is_some() {
+                        return Err(format!("stale key {k:#x} resolved"));
+                    }
+                }
+                if s.len() != live.len() {
+                    return Err(format!("len {} != model {}", s.len(), live.len()));
+                }
+            }
+            // full audit at the end
+            for &k in &dead {
+                if s.get(k).is_some() || s.remove(k).is_some() {
+                    return Err(format!("stale key {k:#x} resolved at audit"));
+                }
+            }
+            for (&k, &v) in &live {
+                if s.get(k) != Some(&v) {
+                    return Err(format!("live key {k:#x} lost"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

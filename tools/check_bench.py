@@ -9,6 +9,20 @@ than the tolerance (default 25%, override with BENCH_TOLERANCE=0.25):
   * throughput:  current ops_per_sec < baseline ops_per_sec * (1 - tol)
   * tail:        current p99_block_ns > baseline p99_block_ns * (1 + tol)
 
+Two exact (non-tolerance) gates ride along:
+
+  * allocations: a baseline entry carrying "allocs_per_op" caps the
+    bench's measured allocator events per op. A cap of 0 means the hot
+    path must be allocation-free in steady state (the zero-allocation
+    property of the engine's slab-ledger pipeline) — any nonzero reading
+    is a regression, whatever the tolerance. Runs produced by an older
+    bench binary that does not emit the field are tolerated (reported,
+    not gated), so old artifacts keep checking cleanly.
+  * ratios: a baseline entry carrying "min_ratio_vs": {"other": R}
+    requires current ops_per_sec >= R * current[other].ops_per_sec —
+    used for the in-tree slab-vs-hashmap ledger ablation, where the
+    claim is relative, so both sides come from the same run and machine.
+
 The shipped baseline holds deliberately conservative floors/ceilings
 (an order of magnitude of headroom) so the gate is portable across CI
 machines and catches only real regressions — an accidental O(n^2), a
@@ -43,6 +57,7 @@ def main():
     tol = float(os.environ.get("BENCH_TOLERANCE", "0.25"))
 
     cur_by_name = {b["name"]: b for b in current.get("benches", [])}
+    all_cur = dict(cur_by_name)  # ratio checks may reference gated names
     failures = []
     print(f"bench gate: tolerance {tol:.0%}"
           f"{' (smoke run)' if current.get('smoke') else ''}")
@@ -68,11 +83,33 @@ def main():
                     f"p99 {cur['p99_block_ns']:.0f} ns > ceiling "
                     f"{p99_ceil:.0f} (baseline {base['p99_block_ns']:.0f})"
                 )
+        # allocation gate: exact cap, no tolerance — missing-field
+        # tolerant for artifacts from older bench binaries
+        if "allocs_per_op" in base and "allocs_per_op" in cur:
+            if cur["allocs_per_op"] > base["allocs_per_op"]:
+                verdicts.append(
+                    f"allocs/op {cur['allocs_per_op']:.4f} > cap "
+                    f"{base['allocs_per_op']:.4f} (hot path allocates)"
+                )
+        # relative gate: both sides from the same run, so machine speed
+        # cancels out
+        for other, ratio in base.get("min_ratio_vs", {}).items():
+            peer = all_cur.get(other)
+            if peer is None:
+                verdicts.append(f"ratio peer `{other}` missing from run")
+            elif cur["ops_per_sec"] < ratio * peer["ops_per_sec"]:
+                verdicts.append(
+                    f"only {cur['ops_per_sec'] / max(peer['ops_per_sec'], 1e-9):.2f}x "
+                    f"`{other}` ({cur['ops_per_sec']:.0f} vs "
+                    f"{peer['ops_per_sec']:.0f} ops/s), need {ratio:.1f}x"
+                )
         status = "FAIL" if verdicts else "ok"
         p99_str = (f"p99 {cur['p99_block_ns']:>10.1f} ns"
                    if "p99_block_ns" in cur else "p99          — ")
+        alloc_str = (f"  {cur['allocs_per_op']:>7.3f} allocs/op"
+                     if "allocs_per_op" in cur else "")
         print(f"  {name:28} {cur['ops_per_sec']:>14.0f} ops/s  "
-              f"{p99_str}   {status}")
+              f"{p99_str}{alloc_str}   {status}")
         for v in verdicts:
             failures.append(f"{name}: {v}")
     for name in cur_by_name:
