@@ -20,14 +20,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use rdmabox::config::FabricConfig;
-use rdmabox::coordinator::batching::{plan, BatchLimits, BatchMode};
-use rdmabox::coordinator::engine::{DrainOut, EngineCosts, IoEngine, WcOut};
+use rdmabox::coordinator::batching::{plan_into, BatchLimits, BatchMode, ChainSpan, PlanArena};
+use rdmabox::coordinator::engine::{DrainOut, IoEngine, WcOut};
 use rdmabox::coordinator::merge_queue::{MergeCheck, MergeQueue};
-use rdmabox::coordinator::node::NodeMap;
 use rdmabox::coordinator::polling::{PollStep, PollerFsm, PollingMode};
-use rdmabox::coordinator::StackConfig;
+use rdmabox::coordinator::{EngineSpec, StackConfig};
 use rdmabox::fabric::sim::{run_pipeline, Driver, Sim};
-use rdmabox::fabric::{AppIo, Dir, Wc, WcStatus};
+use rdmabox::fabric::{AppIo, Dir, TenantId, Wc, WcStatus, WorkRequest};
 use rdmabox::paging::cache::ClockCache;
 use rdmabox::util::fxhash::FxHashMap;
 use rdmabox::util::hist::Hist;
@@ -81,6 +80,11 @@ struct BenchResult {
     /// Allocator events per iteration in the measured phase (after
     /// warm-up). `None` for single-shot benches.
     allocs_per_op: Option<f64>,
+    /// QoS fairness benches only: p99 *virtual-time* latency of the
+    /// victim tenant's I/Os (deterministic — the drain loop advances
+    /// virtual time by a fixed step per admission round), so the gate on
+    /// it is machine-independent.
+    victim_p99_ns: Option<f64>,
 }
 
 /// Blocks per bench for the p99-of-block-means tail estimate.
@@ -129,10 +133,87 @@ fn bench<F: FnMut() -> u64>(
         p99_block_ns: Some(p99),
         ops_per_sec: ops,
         allocs_per_op: Some(allocs_per_op),
+        victim_p99_ns: None,
     });
 }
 
+/// Hog-vs-victim fairness probe: one iteration submits a 48-page hog
+/// burst ahead of an 8-page victim burst (disjoint address regions, so
+/// the comparison is pure drain policy), then drains to completion in
+/// admission-window rounds of fixed virtual duration. Each victim I/O
+/// records the virtual time of its retirement round; the caller-visible
+/// `victim_p99_ns` is deterministic (no wall clock involved), so
+/// `tools/check_bench.py` can gate DRR-vs-FIFO victim latency exactly.
+fn qos_fairness(
+    results: &mut Vec<BenchResult>,
+    name: &'static str,
+    iters: u64,
+    spec: &EngineSpec,
+    hog_tenant: TenantId,
+) {
+    const HOG_IOS: u64 = 48;
+    const VICTIM_IOS: u64 = 8;
+    const ROUND_NS: u64 = 1_000;
+    let mut e = IoEngine::build(spec);
+    let mut out = DrainOut::default();
+    let mut wout = WcOut::default();
+    let mut id = 0u64;
+    let mut victim_hist = Hist::new();
+    bench(results, name, iters, || {
+        for i in 0..HOG_IOS {
+            e.submit(io_t(id, (1u64 << 32) + i * 4096, hog_tenant));
+            id += 1;
+        }
+        let victim_base = id;
+        for i in 0..VICTIM_IOS {
+            e.submit(io_t(id, i * 4096, 0));
+            id += 1;
+        }
+        let mut now = 0u64;
+        let mut retired = 0u64;
+        loop {
+            e.drain_all_into(now, &mut out);
+            if out.wrs.is_empty() {
+                break;
+            }
+            let chains = std::mem::take(&mut out.chains);
+            for c in &chains {
+                for wr in &mut out.wrs[c.start..c.end] {
+                    let wc = Wc {
+                        wr_id: wr.wr_id,
+                        qp: c.qp,
+                        op: wr.op,
+                        len: wr.len,
+                        app_ios: std::mem::take(&mut wr.app_ios),
+                        status: WcStatus::Success,
+                        tenant: wr.tenant,
+                    };
+                    e.on_wc_into(&wc, now, &mut wout);
+                    for r in &wout.retired {
+                        retired += 1;
+                        if r.id >= victim_base {
+                            victim_hist.record(now + ROUND_NS);
+                        }
+                    }
+                }
+            }
+            out.chains = chains;
+            now += ROUND_NS;
+        }
+        assert_eq!(retired, HOG_IOS + VICTIM_IOS, "exactly-once retirement");
+        retired
+    });
+    let p99 = victim_hist.p99();
+    let last = results.last_mut().expect("bench just pushed a result");
+    last.victim_p99_ns = Some(p99 as f64);
+    println!("{name:34} victim p99 {p99} ns (virtual rounds)");
+}
+
 fn io(id: u64, addr: u64) -> AppIo {
+    io_t(id, addr, 0)
+}
+
+fn io_t(id: u64, addr: u64, tenant: TenantId) -> AppIo {
     AppIo {
         id,
         dir: Dir::Write,
@@ -141,6 +222,7 @@ fn io(id: u64, addr: u64) -> AppIo {
         len: 4096,
         thread: 0,
         t_submit: 0,
+        tenant,
     }
 }
 
@@ -162,14 +244,19 @@ fn write_json(path: &str, smoke: bool, results: &[BenchResult]) {
             Some(a) => format!("\"allocs_per_op\": {a:.4}, "),
             None => String::new(),
         };
+        let victim = match r.victim_p99_ns {
+            Some(v) => format!("\"victim_p99_ns\": {v:.1}, "),
+            None => String::new(),
+        };
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
-             {}{}\"ops_per_sec\": {:.0}}}{}\n",
+             {}{}{}\"ops_per_sec\": {:.0}}}{}\n",
             r.name,
             r.iters,
             r.mean_ns,
             p99,
             allocs,
+            victim,
             r.ops_per_sec,
             if i + 1 == results.len() { "" } else { "," }
         ));
@@ -205,14 +292,31 @@ fn main() {
         });
     }
 
-    // batch planning: 16 adjacent + 16 scattered
+    // batch planning: 16 adjacent + 16 scattered, through the
+    // zero-allocation `plan_into` path with reused buffers (the form
+    // every production drain calls)
     {
         let lim = BatchLimits::default();
         let mut wr_id = 0u64;
+        let mut ios: Vec<AppIo> = Vec::new();
+        let mut wrs: Vec<WorkRequest> = Vec::new();
+        let mut chains: Vec<ChainSpan> = Vec::new();
+        let mut arena = PlanArena::default();
         bench(&mut results, "plan_hybrid_32ios", iters(100_000), || {
-            let mut ios: Vec<AppIo> = (0..16u64).map(|i| io(i, i * 4096)).collect();
+            ios.clear();
+            ios.extend((0..16u64).map(|i| io(i, i * 4096)));
             ios.extend((0..16u64).map(|i| io(16 + i, (1000 + i * 7) << 20)));
-            let (chains, st) = plan(BatchMode::Hybrid, &lim, ios, &mut wr_id);
+            wrs.clear();
+            chains.clear();
+            let st = plan_into(
+                BatchMode::Hybrid,
+                &lim,
+                &mut ios,
+                &mut wr_id,
+                &mut wrs,
+                &mut chains,
+                &mut arena,
+            );
             chains.len() as u64 + st.wqes
         });
     }
@@ -220,23 +324,18 @@ fn main() {
     // the full engine pipeline: submit → merge → batch → admit → retire.
     // This is the merge/batch/poll hot path the CI perf trajectory gates.
     {
-        let mut e = IoEngine::new(
-            BatchMode::Hybrid,
-            BatchLimits::default(),
-            1,
-            4,
-            Some(7 << 20),
-            EngineCosts::free(),
-        );
+        let mut e = IoEngine::build(&EngineSpec::new(1).qps(4).window(Some(7 << 20)));
+        let mut out = DrainOut::default();
         let mut id = 0u64;
         bench(&mut results, "engine_pipeline_16ios", iters(50_000), || {
             for _ in 0..16 {
                 e.submit(io(id, (id % 4096) * 4096));
                 id += 1;
             }
-            let out = e.drain_all(0);
+            e.drain_all_into(0, &mut out);
             let mut retired = 0u64;
-            for c in &out.chains {
+            let chains = std::mem::take(&mut out.chains);
+            for c in &chains {
                 for wr in &out.wrs[c.start..c.end] {
                     let wc = Wc {
                         wr_id: wr.wr_id,
@@ -245,10 +344,12 @@ fn main() {
                         len: wr.len,
                         app_ios: wr.app_ios.clone(),
                         status: WcStatus::Success,
+                        tenant: wr.tenant,
                     };
                     retired += e.on_wc(&wc, 0).retired.len() as u64;
                 }
             }
+            out.chains = chains;
             retired
         });
     }
@@ -261,16 +362,13 @@ fn main() {
     // warm-up this cycle must not touch the allocator at all —
     // `allocs_per_op == 0` is enforced by ci/bench_baseline.json.
     {
-        let map = NodeMap::new(1, 1, 1 << 20);
-        let mut e = IoEngine::new(
-            BatchMode::Hybrid,
-            BatchLimits::default(),
-            1,
-            4,
-            Some(7 << 20),
-            EngineCosts::free(),
-        )
-        .with_placement(map);
+        let mut e = IoEngine::build(
+            &EngineSpec::new(1)
+                .qps(4)
+                .window(Some(7 << 20))
+                .replicated(1)
+                .stripe(1 << 20),
+        );
         let mut out = DrainOut::default();
         let mut wout = WcOut::default();
         let mut id = 0u64;
@@ -296,6 +394,7 @@ fn main() {
                         // whole WC round trip is allocation-free
                         app_ios: std::mem::take(&mut wr.app_ios),
                         status: WcStatus::Success,
+                        tenant: wr.tenant,
                     };
                     e.on_wc_into(&wc, 0, &mut wout);
                     retired += wout.retired.len() as u64;
@@ -304,6 +403,61 @@ fn main() {
             out.chains = chains;
             retired
         });
+    }
+
+    // the same steady-state cycle with two weighted tenants: the DRR
+    // drain (per-round entitlements + per-lane deficit accounting) and
+    // the per-tenant ledgers must not cost the zero-allocation property.
+    // ci/bench_baseline.json gates allocs_per_op == 0 here exactly like
+    // the single-tenant pipeline above.
+    {
+        let mut e = IoEngine::build(
+            &EngineSpec::new(1)
+                .qps(4)
+                .window(Some(7 << 20))
+                .replicated(1)
+                .stripe(1 << 20)
+                .tenants(&[3, 1]),
+        );
+        let mut out = DrainOut::default();
+        let mut wout = WcOut::default();
+        let mut id = 0u64;
+        bench(
+            &mut results,
+            "engine_pipeline_64ios_2tenants_steady",
+            iters(20_000),
+            || {
+                for _ in 0..64 {
+                    // even ids: tenant 0, low region; odd ids: tenant 1,
+                    // high region (disjoint, so lanes never contend for
+                    // the same mergeable run)
+                    let t = (id % 2) as usize;
+                    let addr = ((t as u64) << 32) + (id % 4096) * 4096;
+                    e.submit(io_t(id, addr, t));
+                    id += 1;
+                }
+                e.drain_all_into(0, &mut out);
+                let mut retired = 0u64;
+                let chains = std::mem::take(&mut out.chains);
+                for c in &chains {
+                    for wr in &mut out.wrs[c.start..c.end] {
+                        let wc = Wc {
+                            wr_id: wr.wr_id,
+                            qp: c.qp,
+                            op: wr.op,
+                            len: wr.len,
+                            app_ios: std::mem::take(&mut wr.app_ios),
+                            status: WcStatus::Success,
+                            tenant: wr.tenant,
+                        };
+                        e.on_wc_into(&wc, 0, &mut wout);
+                        retired += wout.retired.len() as u64;
+                    }
+                }
+                out.chains = chains;
+                retired
+            },
+        );
     }
 
     // the ledger ablation (kept in-tree so the slab's win stays
@@ -356,38 +510,37 @@ fn main() {
     // protocol (with donor election enabled) drains its repair copies
     // through the pipeline back to Alive.
     {
-        let map = NodeMap::new(2, 2, 1 << 20);
-        let mut e = IoEngine::new(
-            BatchMode::Hybrid,
-            BatchLimits::default(),
-            2,
-            1,
-            None,
-            EngineCosts::free(),
-        )
-        .with_placement(map)
-        .with_resync(4 * 4096)
-        .with_donor_election();
+        let mut e = IoEngine::build(
+            &EngineSpec::new(2)
+                .replicated(2)
+                .stripe(1 << 20)
+                .resync(4 * 4096)
+                .election(),
+        );
+        let mut out = DrainOut::default();
         let mut id = 0u64;
-        fn drain_complete(e: &mut IoEngine) {
+        fn drain_complete(e: &mut IoEngine, out: &mut DrainOut) {
             loop {
-                let out = e.drain_all(0);
+                e.drain_all_into(0, out);
                 if out.wrs.is_empty() {
                     break;
                 }
-                for c in &out.chains {
-                    for wr in &out.wrs[c.start..c.end] {
+                let chains = std::mem::take(&mut out.chains);
+                for c in &chains {
+                    for wr in &mut out.wrs[c.start..c.end] {
                         let wc = Wc {
                             wr_id: wr.wr_id,
                             qp: c.qp,
                             op: wr.op,
                             len: wr.len,
-                            app_ios: wr.app_ios.clone(),
+                            app_ios: std::mem::take(&mut wr.app_ios),
                             status: WcStatus::Success,
+                            tenant: wr.tenant,
                         };
                         e.on_wc(&wc, 0);
                     }
                 }
+                out.chains = chains;
             }
         }
         bench(&mut results, "resync_repair_8pages", iters(20_000), || {
@@ -396,13 +549,37 @@ fn main() {
             for p in 0..8u64 {
                 e.submit(io(id, p * 4096));
                 id += 1;
-                drain_complete(&mut e);
+                drain_complete(&mut e, &mut out);
             }
             e.on_node_up(0);
-            drain_complete(&mut e);
+            drain_complete(&mut e, &mut out);
             debug_assert_eq!(e.resync_backlog(0), 0);
             e.stats.resync_copies - before
         });
+    }
+
+    // multi-tenant QoS fairness pair: the same hog-vs-victim workload
+    // drained FIFO (single tenant — the pre-QoS behavior) and DRR
+    // (victim weight 3, hog weight 1) through a tight admission window.
+    // ci/bench_baseline.json gates (a) DRR aggregate throughput at
+    // >= 0.9x FIFO from the same run, and (b) the DRR victim's virtual
+    // p99 at a fraction of FIFO's — the isolation claim, measured.
+    {
+        let w = Some(8 * 4096u64);
+        qos_fairness(
+            &mut results,
+            "qos_fairness_fifo",
+            iters(20_000),
+            &EngineSpec::new(1).window(w),
+            0,
+        );
+        qos_fairness(
+            &mut results,
+            "qos_fairness_drr",
+            iters(20_000),
+            &EngineSpec::new(1).window(w).tenants(&[3, 1]),
+            1,
+        );
     }
 
     // poller FSM: one adaptive wake → burst-poll → retry → re-arm cycle
@@ -509,6 +686,7 @@ fn main() {
             p99_block_ns: None, // single shot: no tail estimate
             ops_per_sec: ios_per_sec,
             allocs_per_op: None,
+            victim_p99_ns: None,
         });
     }
 

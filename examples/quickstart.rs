@@ -8,13 +8,13 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use rdmabox::coordinator::batching::BatchMode;
+use rdmabox::coordinator::EngineSpec;
 use rdmabox::fabric::loopback::{LiveBox, LoopbackFabric};
 
 fn main() {
     // 3 remote memory donors, 4 channels (QP shards) each, 64 MB donated
     let fabric = LoopbackFabric::start_sharded(3, 64 << 20, 4);
-    let rbox = LiveBox::new(fabric, BatchMode::Hybrid, Some(7 << 20));
+    let rbox = LiveBox::build(fabric, &EngineSpec::new(3).qps(4).window(Some(7 << 20)));
     println!(
         "cluster up: {} remote nodes x 4 QP shards per node",
         rbox.nodes()

@@ -15,8 +15,7 @@ use std::time::Instant;
 use rdmabox::baselines;
 use rdmabox::cli::{Args, Table};
 use rdmabox::config::FabricConfig;
-use rdmabox::coordinator::batching::BatchMode;
-use rdmabox::coordinator::StackConfig;
+use rdmabox::coordinator::{EngineSpec, StackConfig};
 use rdmabox::fabric::loopback::{LiveBox, LoopbackFabric};
 use rdmabox::util::fmt;
 use rdmabox::workloads::kv::{run_kv, voltdb, KvConfig, Mix};
@@ -30,7 +29,10 @@ fn live_pageout_burst(
     pages: u64,
 ) -> (f64, rdmabox::fabric::loopback::LiveStats) {
     let fabric = LoopbackFabric::start_sharded(3, 64 << 20, qps_per_node);
-    let rbox = LiveBox::new(fabric, BatchMode::Hybrid, Some(7 << 20));
+    let rbox = LiveBox::build(
+        fabric,
+        &EngineSpec::new(3).qps(qps_per_node).window(Some(7 << 20)),
+    );
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for t in 0..threads {

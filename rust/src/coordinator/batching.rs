@@ -66,7 +66,9 @@ impl Default for BatchLimits {
 
 /// One planned post: a chain of WRs to a single destination node. A chain
 /// of length 1 is a plain single post. QP selection happens later (channel
-/// layer) — planning is per *node*.
+/// layer) — planning is per *node*. Test-only: production paths use the
+/// flat [`ChainSpan`] representation from [`plan_into`].
+#[cfg(test)]
 #[derive(Debug, Clone)]
 pub struct PlannedChain {
     pub node: usize,
@@ -112,8 +114,10 @@ pub struct PlanStats {
 /// preserve per-node arrival order of the head request so latency-sensitive
 /// requests are not reordered behind later arrivals.
 ///
-/// Allocating convenience wrapper around [`plan_into`]; the engine's hot
-/// drain path calls the `_into` form with reused buffers.
+/// Allocating convenience wrapper around [`plan_into`], kept for the unit
+/// suites; every production path calls the `_into` form with reused
+/// buffers.
+#[cfg(test)]
 pub fn plan(
     mode: BatchMode,
     lim: &BatchLimits,
@@ -212,9 +216,12 @@ pub fn plan_into(
         // "opportunistically looks for multiple adjacent requests" step;
         // after the sort every mergeable run is a contiguous slice.
         if mode.merges() {
+            // tenant in the key keeps each tenant's mergeable runs
+            // contiguous; a WR never mixes tenants (it bills to exactly
+            // one per-tenant sub-window)
             arena.groups[gi]
                 .1
-                .sort_by_key(|io| (io.dir.op() as u8, io.addr));
+                .sort_by_key(|io| (io.dir.op() as u8, io.tenant, io.addr));
             let g = &arena.groups[gi].1;
             let mut i = 0;
             while i < g.len() {
@@ -224,6 +231,7 @@ pub fn plan_into(
                 while j < g.len()
                     && (j - i) < lim.max_sge
                     && g[j].dir == g[i].dir
+                    && g[j].tenant == g[i].tenant
                     && g[j].addr == end_addr
                     && bytes + g[j].len <= lim.max_wr_bytes
                 {
@@ -285,6 +293,7 @@ fn mk_wr(next_wr_id: &mut u64, ios: &[AppIo]) -> WorkRequest {
         num_sge: ios.len(),
         app_ios: ios.iter().map(|io| io.id).collect(),
         signaled: true,
+        tenant: ios[0].tenant,
     }
 }
 
@@ -303,6 +312,7 @@ mod tests {
             len,
             thread: 0,
             t_submit: 0,
+            tenant: 0,
         }
     }
 
@@ -401,6 +411,31 @@ mod tests {
         );
         assert_eq!(st.wqes, 2);
         assert_eq!(st.merged_ios, 0);
+    }
+
+    /// QoS invariant: adjacent requests of *different tenants* never
+    /// merge into one WR — the whole WR bills to a single per-tenant
+    /// sub-window — and every planned WR carries its owning tenant.
+    #[test]
+    fn different_tenants_never_merge() {
+        let mut id = 0;
+        let a = AppIo { tenant: 0, ..wio(1, 0) };
+        let b = AppIo { tenant: 1, ..wio(2, 4096) };
+        let c = AppIo { tenant: 1, ..wio(3, 8192) };
+        let (chains, st) = plan(
+            BatchMode::BatchOnMr,
+            &BatchLimits::default(),
+            vec![a, b, c],
+            &mut id,
+        );
+        assert_eq!(st.wqes, 2, "tenant boundary splits the adjacent run");
+        assert_eq!(st.merged_ios, 2, "same-tenant pair still merges");
+        for ch in &chains {
+            for w in &ch.wrs {
+                let want = if w.app_ios.iter().any(|&i| i == 1) { 0 } else { 1 };
+                assert_eq!(w.tenant, want, "WR carries its owning tenant");
+            }
+        }
     }
 
     #[test]

@@ -13,7 +13,8 @@
 //!   finds its merge candidates, while independent regions engage
 //!   independent QPs (and therefore independent NIC processing units).
 //! * **Batch planning** — each shard drain runs through the
-//!   [`batching::plan`] planner (Single / BatchOnMr / Doorbell / Hybrid).
+//!   [`batching::plan_into`] planner (Single / BatchOnMr / Doorbell /
+//!   Hybrid).
 //! * **Admission control** — drains are bounded by the [`Regulator`]
 //!   window; a closed window leaves requests queued where later arrivals
 //!   keep merging with them (paper §5.1).
@@ -41,8 +42,10 @@ use crate::coordinator::channel::ChannelMap;
 use crate::coordinator::merge_queue::{MergeOutcome, MergeQueues};
 use crate::coordinator::node::{EpochMap, NodeMap, NodeState, ReadRoute};
 use crate::coordinator::regulator::{AdmissionPolicy, Regulator, StaticWindow, Unlimited};
+use crate::coordinator::spec::EngineSpec;
 use crate::coordinator::StackConfig;
-use crate::fabric::{AppIo, Dir, IdList, NodeId, QpId, Wc, WcStatus, WorkRequest};
+use crate::fabric::{AppIo, Dir, IdList, NodeId, QpId, TenantId, Wc, WcStatus, WorkRequest};
+use crate::metrics::TenantStats;
 use crate::util::slab::Slab;
 
 /// Shard affinity region size (re-exported from the channel layer, which
@@ -108,6 +111,9 @@ pub struct Submitted {
     /// the engine-level splitter produced a partial-disk request; the
     /// caller owns the disk path for exactly these sub-spans.
     pub disk_legs: Vec<(u64, u64)>,
+    /// Tenant the request was billed to (admission sub-window + drain
+    /// lane) — copied from [`AppIo::tenant`].
+    pub tenant: TenantId,
 }
 
 /// One planned post: a doorbell chain bound to a concrete QP. The chain's
@@ -322,6 +328,10 @@ struct SubIo {
     /// to the target's vector when the repair write lands). 0 when the
     /// donor election is disabled.
     epoch: u64,
+    /// Owning tenant: inherited from the application I/O for app legs,
+    /// [`crate::fabric::DEFAULT_TENANT`] for engine-internal resync
+    /// traffic (repair copies bill to the system lane, not a victim's).
+    tenant: TenantId,
 }
 
 /// Coalescing set of byte ranges (the per-node missed-write backlog; also
@@ -542,6 +552,11 @@ struct Pending {
 struct PostedWr {
     bytes: u64,
     t_post: u64,
+    /// Tenant the WR's bytes were billed to at post time. Authoritative
+    /// for the completion-side release (the fabric's `Wc::tenant` is
+    /// informational only — a forged or corrupted completion cannot
+    /// shift bytes between tenant sub-windows).
+    tenant: TenantId,
 }
 
 /// The unified submit → merge → batch → admit → retire pipeline.
@@ -581,6 +596,10 @@ pub struct IoEngine {
     aggs: Slab<LegAgg>,
     /// Swap-buffer for shard drains (see `MergeQueue::merge_check_into`).
     drain_buf: Vec<AppIo>,
+    /// Reused per-tenant entitlement scratch for multi-tenant drains
+    /// (filled by `Regulator::entitlements_into` before each shard's
+    /// weighted drain — part of the zero-allocation steady state).
+    ent_buf: Vec<u64>,
     /// Chain spans of the shard currently being planned.
     span_buf: Vec<ChainSpan>,
     /// Reusable per-node grouping buffers for the batch planner.
@@ -590,7 +609,11 @@ pub struct IoEngine {
 }
 
 impl IoEngine {
-    pub fn new(
+    /// Internal positional constructor. Everything outside the
+    /// coordinator builds through [`IoEngine::build`] with an
+    /// [`EngineSpec`] — the one construction path shared by the sim,
+    /// loopback, and chaos backends.
+    pub(crate) fn new(
         batch: BatchMode,
         limits: BatchLimits,
         nodes: usize,
@@ -621,6 +644,7 @@ impl IoEngine {
             outstanding: Slab::new(),
             aggs: Slab::new(),
             drain_buf: Vec::new(),
+            ent_buf: Vec::new(),
             span_buf: Vec::new(),
             plan_arena: PlanArena::default(),
             resync: ResyncState::disabled(nodes),
@@ -628,20 +652,59 @@ impl IoEngine {
         }
     }
 
-    /// Build from a full stack design point (how the sim backend does it).
+    /// Build from an [`EngineSpec`] — the single construction path for
+    /// every backend. Placement, resync, the donor election, and the
+    /// multi-tenant QoS tables are all wired here, in dependency order,
+    /// so a spec can never express the invalid chains the old
+    /// constructor zoo allowed (e.g. election without resync).
+    pub fn build(spec: &EngineSpec) -> Self {
+        spec.validate();
+        let mut e = Self::new(
+            spec.batch,
+            spec.limits,
+            spec.nodes,
+            spec.qps_per_node,
+            spec.window_bytes,
+            spec.costs,
+        );
+        if let Some(replicas) = spec.replicas {
+            e = e.with_placement(NodeMap::new(spec.nodes, replicas, spec.stripe_bytes));
+        }
+        if let Some(chunk) = spec.resync_chunk {
+            e.enable_resync(chunk);
+        }
+        if spec.election {
+            e.enable_donor_election();
+        }
+        if spec.tenant_weights.len() > 1 {
+            e.set_tenants(&spec.tenant_weights);
+        }
+        e
+    }
+
+    /// Build from a full stack design point (how the sim backend does it):
+    /// the [`StackConfig`] is lowered onto an [`EngineSpec`] and built
+    /// through the unified path.
     pub fn from_stack(stack: &StackConfig, nodes: usize, costs: EngineCosts) -> Self {
-        Self::new(
-            stack.batch,
-            stack.limits,
-            nodes,
-            stack.qps_per_node,
-            stack.window_bytes,
-            costs,
-        )
+        Self::build(&EngineSpec::from_stack(stack, nodes).costs(costs))
+    }
+
+    /// Install the multi-tenant QoS tables: one admission sub-window and
+    /// one drain lane per tenant, weighted by `weights`. Must run before
+    /// any traffic (ledgers and queues must be empty).
+    pub(crate) fn set_tenants(&mut self, weights: &[u64]) {
+        assert_eq!(
+            self.stats.submitted, 0,
+            "install tenants before submitting traffic"
+        );
+        self.regulator.set_tenants(weights);
+        for shard in &mut self.shards {
+            shard.set_tenants(weights);
+        }
     }
 
     /// Enable placed routing: replica fan-out, read failover, disk signal.
-    pub fn with_placement(mut self, map: NodeMap) -> Self {
+    pub(crate) fn with_placement(mut self, map: NodeMap) -> Self {
         assert_eq!(
             map.nodes(),
             self.channels.nodes(),
@@ -664,13 +727,13 @@ impl IoEngine {
     /// traffic is admission-controlled like everything else. Copies are
     /// chunked to `max_copy_bytes` so a repair transfer can never exceed
     /// a windowed regulator's admission bound.
-    pub fn with_resync(mut self, max_copy_bytes: u64) -> Self {
+    pub(crate) fn with_resync(mut self, max_copy_bytes: u64) -> Self {
         self.enable_resync(max_copy_bytes);
         self
     }
 
     /// Non-consuming form of [`IoEngine::with_resync`].
-    pub fn enable_resync(&mut self, max_copy_bytes: u64) {
+    pub(crate) fn enable_resync(&mut self, max_copy_bytes: u64) {
         assert!(
             matches!(self.routing, Routing::Placed(_)),
             "resync requires placed routing (call with_placement first)"
@@ -707,13 +770,13 @@ impl IoEngine {
     /// Must be enabled before any traffic so every write carries an
     /// epoch; epoch vectors are compact (coalesced ranges), but they are
     /// retained for the engine's lifetime.
-    pub fn with_donor_election(mut self) -> Self {
+    pub(crate) fn with_donor_election(mut self) -> Self {
         self.enable_donor_election();
         self
     }
 
     /// Non-consuming form of [`IoEngine::with_donor_election`].
-    pub fn enable_donor_election(&mut self) {
+    pub(crate) fn enable_donor_election(&mut self) {
         assert!(
             self.resync.enabled,
             "donor election requires resync (call with_resync first)"
@@ -808,6 +871,40 @@ impl IoEngine {
         &self.regulator
     }
 
+    /// Number of registered tenants (1 unless a multi-tenant spec
+    /// installed weights).
+    pub fn tenant_count(&self) -> usize {
+        self.regulator.tenant_count()
+    }
+
+    /// Per-tenant QoS counters: the regulator's admission ledgers joined
+    /// with the merge queues' weighted-drain lane counters, one row per
+    /// tenant. Allocates (reporting surface, not a hot path).
+    pub fn tenant_stats(&self) -> Vec<TenantStats> {
+        (0..self.regulator.tenant_count())
+            .map(|t| {
+                let led = self.regulator.tenant(t);
+                let mut drained = 0u64;
+                let mut deficit = 0u64;
+                for shard in &self.shards {
+                    drained += shard.read.lane_drained(t) + shard.write.lane_drained(t);
+                    deficit += shard.read.lane_deficit(t) + shard.write.lane_deficit(t);
+                }
+                TenantStats {
+                    tenant: t,
+                    weight: led.weight,
+                    posted_bytes: led.posted_bytes,
+                    retired_bytes: led.retired_bytes,
+                    window_occupancy: led.in_flight,
+                    peak_window_occupancy: led.peak_in_flight,
+                    borrow_events: led.borrow_events,
+                    drained_bytes: drained,
+                    drain_deficit: deficit,
+                }
+            })
+            .collect()
+    }
+
     /// Swap in a custom admission policy (the paper's §5.1 hook).
     pub fn set_regulator(&mut self, r: Regulator) {
         self.regulator = r;
@@ -865,6 +962,7 @@ impl IoEngine {
             len: sub.len,
             thread: sub.thread,
             t_submit: sub.t_submit,
+            tenant: sub.tenant,
         });
     }
 
@@ -889,6 +987,12 @@ impl IoEngine {
             io.id < LEG_BASE,
             "application I/O ids >= 1<<63 are reserved for engine-internal legs"
         );
+        debug_assert!(
+            io.tenant < self.regulator.tenant_count(),
+            "tenant {} not registered (engine has {} tenants)",
+            io.tenant,
+            self.regulator.tenant_count()
+        );
         let submitted = match &self.routing {
             Routing::Direct => {
                 let qp = self.shard_of(io.node, io.addr);
@@ -899,6 +1003,7 @@ impl IoEngine {
                     sub_ids,
                     disk_fallback: false,
                     disk_legs: Vec::new(),
+                    tenant: io.tenant,
                 }
             }
             Routing::Placed(map) => {
@@ -926,6 +1031,7 @@ impl IoEngine {
                         sub_ids,
                         disk_fallback: disk,
                         disk_legs,
+                        tenant: io.tenant,
                     }
                 } else {
                     let legs = map.split_stripe_local(io.addr, io.len);
@@ -961,6 +1067,7 @@ impl IoEngine {
                             sub_ids,
                             disk_fallback: true,
                             disk_legs,
+                            tenant: io.tenant,
                         }
                     } else {
                         let agg = self.aggs.get_mut(agg_key).expect("fresh agg");
@@ -970,6 +1077,7 @@ impl IoEngine {
                             sub_ids,
                             disk_fallback: false,
                             disk_legs,
+                            tenant: io.tenant,
                         }
                     }
                 }
@@ -1082,6 +1190,7 @@ impl IoEngine {
                         node,
                         kind: SubKind::App,
                         epoch,
+                        tenant: io.tenant,
                     };
                     let sid = self.subs.insert(sub);
                     self.enqueue(sid, node, &sub);
@@ -1119,6 +1228,7 @@ impl IoEngine {
         let n_shards = self.shards.len();
         let start = self.drain_cursor % n_shards;
         self.drain_cursor = self.drain_cursor.wrapping_add(1);
+        let multi_tenant = self.regulator.tenant_count() > 1;
         for i in 0..n_shards {
             let qp = (start + i) % n_shards;
             if self.shards[qp].of(dir).is_empty() {
@@ -1129,7 +1239,19 @@ impl IoEngine {
                 blocked += 1;
                 break;
             }
-            match self.shards[qp].of(dir).merge_check_into(avail, &mut self.drain_buf) {
+            let outcome = if multi_tenant {
+                // weighted drain: each tenant's lane is capped by its
+                // remaining sub-window entitlement in the entitled pass;
+                // leftover budget is lent out work-conservingly by the
+                // queue's borrow pass
+                self.regulator.entitlements_into(&mut self.ent_buf);
+                self.shards[qp]
+                    .of(dir)
+                    .merge_check_tenants_into(avail, &self.ent_buf, &mut self.drain_buf)
+            } else {
+                self.shards[qp].of(dir).merge_check_into(avail, &mut self.drain_buf)
+            };
+            match outcome {
                 MergeOutcome::Drained => {}
                 MergeOutcome::Blocked => {
                     // progress guarantee: a request larger than the window
@@ -1182,9 +1304,10 @@ impl IoEngine {
                     let key = self.outstanding.insert(PostedWr {
                         bytes: wr.len,
                         t_post: now + cpu,
+                        tenant: wr.tenant,
                     });
                     wr.wr_id = key;
-                    self.regulator.on_post(key, wr.len);
+                    self.regulator.on_post(key, wr.tenant, wr.len);
                     cpu += self.costs.post_wqe_cpu_ns;
                 }
                 cpu += self.costs.mmio_cpu_ns;
@@ -1207,7 +1330,9 @@ impl IoEngine {
     /// Drain both directions (reads first: page-ins are synchronous).
     ///
     /// Allocating convenience wrapper around
-    /// [`IoEngine::drain_all_into`]; hot paths reuse one [`DrainOut`].
+    /// [`IoEngine::drain_all_into`], kept for the unit suites; every
+    /// shipping pump reuses one [`DrainOut`] through the `_into` path.
+    #[cfg(test)]
     pub fn drain_all(&mut self, now: u64) -> DrainOut {
         let mut out = DrainOut::default();
         self.drain_all_into(now, &mut out);
@@ -1255,7 +1380,10 @@ impl IoEngine {
         };
         debug_assert_eq!(posted.bytes, wc.len, "WC length disagrees with its WR");
         let rtt = now.saturating_sub(posted.t_post);
-        self.regulator.on_complete(wc.wr_id, wc.len, rtt);
+        // release against the tenant recorded at post time: the engine's
+        // posted-WR ledger, not the fabric-echoed `wc.tenant`, decides
+        // whose sub-window the bytes come back to
+        self.regulator.on_complete(wc.wr_id, posted.tenant, wc.len, rtt);
         let ok = wc.status == WcStatus::Success;
 
         if matches!(self.routing, Routing::Direct) {
@@ -1688,6 +1816,7 @@ impl IoEngine {
             node: src,
             kind: SubKind::ResyncRead { target: node },
             epoch: src_epoch,
+            tenant: crate::fabric::DEFAULT_TENANT,
         };
         let sid = self.subs.insert(sub);
         self.enqueue(sid, src, &sub);
@@ -1887,6 +2016,7 @@ mod tests {
             addr,
             len: 4096,
             thread: 0,
+            tenant: 0,
             t_submit: 0,
         }
     }
@@ -1898,6 +2028,7 @@ mod tests {
             op: wr.op,
             len: wr.len,
             app_ios: wr.app_ios.clone(),
+            tenant: wr.tenant,
             status,
         }
     }

@@ -1,5 +1,6 @@
 //! The I/O merge queue — the central data structure of Load-aware Batching
-//! (paper §5.1).
+//! (paper §5.1), extended with a weighted-deficit-round-robin (DRR) drain
+//! across tenants for multi-tenant QoS.
 //!
 //! One queue per direction (read / write). Every data-request thread
 //! *enqueues first, then immediately merge-checks*: the earliest-arriving
@@ -10,8 +11,29 @@
 //! batch. Under heavy load (or while the admission-control window is
 //! closed) requests accumulate, and the *wait itself* creates merge
 //! opportunities.
+//!
+//! **Single-tenant queues drain in plain FIFO order, byte-identically to
+//! the pre-QoS behavior.** When more than one tenant is configured
+//! ([`MergeQueue::set_tenants`]), the drain becomes a two-phase DRR over
+//! per-tenant lanes:
+//!
+//! 1. **Entitled phase** — lanes are served round-robin, each visit adding
+//!    `weight × 4 KiB` of deficit, but no lane may exceed the per-tenant
+//!    entitlement the caller passes in (the regulator's sub-window slack).
+//! 2. **Borrow phase** — whatever global budget entitled demand left
+//!    unclaimed is distributed by the same weighted round-robin with the
+//!    entitlement caps lifted (work-conserving borrowing of unused quota).
+//!
+//! Within a lane, FIFO order is preserved; across lanes, a hog tenant's
+//! burst can no longer occupy the whole admission window while another
+//! tenant's requests age behind it.
 
-use crate::fabric::{AppIo, Dir};
+use crate::fabric::{AppIo, Dir, TenantId};
+
+/// DRR deficit added per weight unit each time the round-robin visits a
+/// lane with queued work (one page: fine-grained interleaving even inside
+/// a small admission window).
+const DRR_QUANTUM: u64 = 4096;
 
 /// Outcome of one enqueue + merge-check round for a thread.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -38,14 +60,29 @@ pub enum MergeOutcome {
     Blocked,
 }
 
-/// A single-direction merge queue. Deliberately a plain FIFO + counters:
-/// the paper's point is that a *single* queue with opportunistic draining
-/// beats per-CPU queues with enforced cross-CPU merging.
+/// A single-direction merge queue. A plain FIFO + counters in the
+/// single-tenant case (the paper's point is that a *single* queue with
+/// opportunistic draining beats per-CPU queues with enforced cross-CPU
+/// merging); per-tenant DRR lanes over the same flat FIFO storage when
+/// tenants are configured.
 #[derive(Debug, Default)]
 pub struct MergeQueue {
     q: Vec<AppIo>,
     /// Total bytes currently queued.
     queued_bytes: u64,
+    /// Per-tenant DRR weights; empty = single-tenant FIFO drain.
+    weights: Vec<u64>,
+    /// Per-lane deficit carry-over between drains (bytes).
+    deficits: Vec<u64>,
+    /// Cumulative bytes drained per lane (QoS stats).
+    lane_drained: Vec<u64>,
+    /// Rotating round-robin start lane.
+    cursor: usize,
+    // Reusable drain scratch (no steady-state allocation):
+    lane_idx: Vec<Vec<u32>>,
+    lane_pos: Vec<usize>,
+    ent_rem: Vec<u64>,
+    admit: Vec<bool>,
     /// Statistics.
     pub enqueued: u64,
     pub drains: u64,
@@ -56,6 +93,41 @@ pub struct MergeQueue {
 impl MergeQueue {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Configure per-tenant DRR lanes. One weight per tenant; a single
+    /// weight (or never calling this) keeps the exact FIFO drain. Must be
+    /// called before any traffic is queued.
+    pub fn set_tenants(&mut self, weights: &[u64]) {
+        assert!(!weights.is_empty(), "at least one tenant");
+        assert!(
+            weights.iter().all(|&w| (1..=1 << 20).contains(&w)),
+            "tenant weights must be in 1..=2^20"
+        );
+        assert!(self.q.is_empty(), "set_tenants on a non-empty queue");
+        let n = weights.len();
+        self.weights = weights.to_vec();
+        self.deficits = vec![0; n];
+        self.lane_drained = vec![0; n];
+        self.lane_idx = (0..n).map(|_| Vec::new()).collect();
+        self.lane_pos = vec![0; n];
+        self.ent_rem = Vec::with_capacity(n);
+        self.cursor = 0;
+    }
+
+    /// Configured tenant lanes (1 when unconfigured: single-tenant FIFO).
+    pub fn lanes(&self) -> usize {
+        self.weights.len().max(1)
+    }
+
+    /// Cumulative bytes drained for `tenant` (0 for unconfigured lanes).
+    pub fn lane_drained(&self, tenant: TenantId) -> u64 {
+        self.lane_drained.get(tenant).copied().unwrap_or(0)
+    }
+
+    /// Current DRR deficit carry-over for `tenant`.
+    pub fn lane_deficit(&self, tenant: TenantId) -> u64 {
+        self.deficits.get(tenant).copied().unwrap_or(0)
     }
 
     pub fn len(&self) -> usize {
@@ -80,8 +152,10 @@ impl MergeQueue {
 
     /// Merge-check (step 2): drain up to `window_bytes` worth of requests.
     /// `u64::MAX` means no admission limit. Returns what this thread should
-    /// post. Drains in FIFO order so a closed window cannot starve old
-    /// requests (fairness of the single-queue design, paper §5.1).
+    /// post. Single-tenant queues drain in FIFO order so a closed window
+    /// cannot starve old requests (fairness of the single-queue design,
+    /// paper §5.1); multi-tenant queues drain by weighted DRR with no
+    /// per-tenant entitlement caps.
     ///
     /// Allocating convenience wrapper around
     /// [`MergeQueue::merge_check_into`]; the engine's hot path uses the
@@ -99,8 +173,11 @@ impl MergeQueue {
     /// `out` (cleared first), which the caller reuses across drains — a
     /// swap-buffer when the whole queue drains (the common case, stealing
     /// the queue's backing storage and leaving it `out`'s old capacity),
-    /// a memcpy of the admitted prefix when the window truncates.
+    /// a memcpy of the admitted subset when the window truncates.
     pub fn merge_check_into(&mut self, window_bytes: u64, out: &mut Vec<AppIo>) -> MergeOutcome {
+        if self.weights.len() > 1 {
+            return self.drr_drain(window_bytes, None, out);
+        }
         out.clear();
         if self.q.is_empty() {
             self.empty_checks += 1;
@@ -126,8 +203,157 @@ impl MergeQueue {
         } else {
             out.extend(self.q.drain(..n));
         }
+        if let Some(d) = self.lane_drained.first_mut() {
+            *d += bytes;
+        }
         self.queued_bytes -= bytes;
         self.drains += 1;
+        MergeOutcome::Drained
+    }
+
+    /// Multi-tenant merge-check: drain up to `window_bytes` total, with
+    /// per-tenant entitlements (`ents[t]` = bytes tenant `t` may still
+    /// admit inside its regulator sub-window) honored in the first DRR
+    /// phase and borrowed past in the work-conserving second phase.
+    /// Requires [`MergeQueue::set_tenants`] with `ents.len()` weights.
+    pub fn merge_check_tenants_into(
+        &mut self,
+        window_bytes: u64,
+        ents: &[u64],
+        out: &mut Vec<AppIo>,
+    ) -> MergeOutcome {
+        assert_eq!(ents.len(), self.weights.len(), "one entitlement per tenant");
+        self.drr_drain(window_bytes, Some(ents), out)
+    }
+
+    /// The two-phase weighted-deficit-round-robin drain (see module docs).
+    fn drr_drain(
+        &mut self,
+        window_bytes: u64,
+        ents: Option<&[u64]>,
+        out: &mut Vec<AppIo>,
+    ) -> MergeOutcome {
+        out.clear();
+        if self.q.is_empty() {
+            self.empty_checks += 1;
+            return MergeOutcome::TakenByPeer;
+        }
+        if window_bytes == 0 {
+            return MergeOutcome::Blocked;
+        }
+        let lanes = self.weights.len();
+        // bucket FIFO positions by lane (per-lane order = FIFO order)
+        for v in &mut self.lane_idx {
+            v.clear();
+        }
+        for (i, io) in self.q.iter().enumerate() {
+            debug_assert!(io.tenant < lanes, "tenant {} out of range", io.tenant);
+            self.lane_idx[io.tenant.min(lanes - 1)].push(i as u32);
+        }
+        self.lane_pos.iter_mut().for_each(|p| *p = 0);
+        self.admit.clear();
+        self.admit.resize(self.q.len(), false);
+        self.ent_rem.clear();
+        match ents {
+            Some(e) => self.ent_rem.extend_from_slice(e),
+            None => self.ent_rem.resize(lanes, u64::MAX),
+        }
+
+        let mut budget = window_bytes;
+        let mut admitted = 0usize;
+        // phase 0 honors entitlements; phase 1 is the work-conserving
+        // borrow pass over whatever budget entitled demand left unclaimed
+        for phase in 0..2u32 {
+            loop {
+                let mut any_active = false;
+                for k in 0..lanes {
+                    let t = (self.cursor + k) % lanes;
+                    let Some(&i0) = self.lane_idx[t].get(self.lane_pos[t]) else {
+                        continue;
+                    };
+                    let head_len = self.q[i0 as usize].len;
+                    if head_len > budget {
+                        continue; // lane head cannot be served this drain
+                    }
+                    if phase == 0 && head_len > self.ent_rem[t] {
+                        continue; // beyond the sub-window: wait for phase 1
+                    }
+                    any_active = true;
+                    // each visit to an active lane tops up its deficit
+                    self.deficits[t] += self.weights[t] * DRR_QUANTUM;
+                    while let Some(&i) = self.lane_idx[t].get(self.lane_pos[t]) {
+                        let len = self.q[i as usize].len;
+                        if len > budget || len > self.deficits[t] {
+                            break;
+                        }
+                        if phase == 0 && len > self.ent_rem[t] {
+                            break;
+                        }
+                        self.admit[i as usize] = true;
+                        self.lane_pos[t] += 1;
+                        budget -= len;
+                        self.deficits[t] -= len;
+                        if phase == 0 {
+                            self.ent_rem[t] -= len;
+                        }
+                        self.lane_drained[t] += len;
+                        admitted += 1;
+                    }
+                }
+                // a cycle with active lanes but no admissions still tops
+                // up deficits, so the largest active head eventually fits
+                // and the loop terminates
+                if budget == 0 || !any_active {
+                    break;
+                }
+            }
+            if budget == 0 {
+                break;
+            }
+        }
+        // liveness escape, mirroring the FIFO rule "a head that fits the
+        // window always drains": if deficits alone blocked everything,
+        // admit exactly the oldest queued request
+        if admitted == 0 && self.q[0].len <= budget {
+            let head = self.q[0];
+            let t = head.tenant.min(lanes - 1);
+            self.admit[0] = true;
+            self.lane_pos[t] = self.lane_pos[t].max(1);
+            self.deficits[t] = self.deficits[t].saturating_sub(head.len);
+            self.lane_drained[t] += head.len;
+            admitted = 1;
+        }
+        if admitted == 0 {
+            return MergeOutcome::Blocked;
+        }
+
+        // compact the kept suffixes back in FIFO order; admitted requests
+        // leave in FIFO order too (the planner re-sorts by address)
+        let mut kept = 0usize;
+        let mut bytes = 0u64;
+        for i in 0..self.q.len() {
+            let io = self.q[i];
+            if self.admit[i] {
+                bytes += io.len;
+                out.push(io);
+            } else {
+                self.q[kept] = io;
+                kept += 1;
+            }
+        }
+        self.q.truncate(kept);
+        self.queued_bytes -= bytes;
+        self.drains += 1;
+        for t in 0..lanes {
+            if self.lane_pos[t] >= self.lane_idx[t].len() {
+                // classic DRR: an emptied lane forfeits its carry-over
+                self.deficits[t] = 0;
+            } else {
+                // bounded carry-over keeps a long-starved lane's burst fair
+                self.deficits[t] = self.deficits[t].min(self.weights[t] * DRR_QUANTUM);
+            }
+        }
+        self.cursor = (self.cursor + 1) % lanes;
         MergeOutcome::Drained
     }
 
@@ -148,6 +374,13 @@ pub struct MergeQueues {
 impl MergeQueues {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Configure DRR lanes on both directions (see
+    /// [`MergeQueue::set_tenants`]).
+    pub fn set_tenants(&mut self, weights: &[u64]) {
+        self.read.set_tenants(weights);
+        self.write.set_tenants(weights);
     }
 
     pub fn of(&mut self, dir: Dir) -> &mut MergeQueue {
@@ -177,6 +410,14 @@ mod tests {
             len,
             thread: 0,
             t_submit: 0,
+            tenant: 0,
+        }
+    }
+
+    fn tio(id: u64, len: u64, tenant: usize) -> AppIo {
+        AppIo {
+            tenant,
+            ..io(id, id * 4096, len)
         }
     }
 
@@ -298,6 +539,217 @@ mod tests {
             assert_eq!(scratch.len(), 8);
         }
         assert!(scratch.capacity() <= cap.max(8), "scratch kept its capacity");
+    }
+
+    // ---------------- DRR drain-order suite ----------------
+
+    /// A 2-lane queue carrying only tenant-0 traffic admits exactly the
+    /// same sets as a plain FIFO queue across random push/drain schedules.
+    #[test]
+    fn drr_single_active_lane_matches_fifo() {
+        prop::forall(cfg(0xD2_0001), |rng, size| {
+            let mut fifo = MergeQueue::new();
+            let mut drr = MergeQueue::new();
+            drr.set_tenants(&[1, 1]);
+            let mut next = 0u64;
+            for _ in 0..size * 2 {
+                if rng.gen_bool(0.6) {
+                    let len = (1 + rng.gen_below(8)) * 4096;
+                    fifo.push(io(next, next * 4096, len));
+                    drr.push(io(next, next * 4096, len));
+                    next += 1;
+                } else {
+                    let w = rng.gen_below(1 << 16);
+                    let a = fifo.merge_check(w);
+                    let b = drr.merge_check(w);
+                    let ids = |c: &MergeCheck| match c {
+                        MergeCheck::Drained(v) => Some(v.iter().map(|x| x.id).collect::<Vec<_>>()),
+                        _ => None,
+                    };
+                    match (ids(&a), ids(&b)) {
+                        (Some(x), Some(y)) => {
+                            let mut y = y;
+                            y.sort_unstable();
+                            let mut x = x;
+                            x.sort_unstable();
+                            if x != y {
+                                return Err(format!("admitted sets differ: {x:?} vs {y:?}"));
+                            }
+                        }
+                        (None, None) => {}
+                        (x, y) => return Err(format!("outcomes differ: {x:?} vs {y:?}")),
+                    }
+                    if fifo.queued_bytes() != drr.queued_bytes() {
+                        return Err("queued bytes diverged".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Equal weights split a tight window evenly even when the hog queued
+    /// its whole burst first — the FIFO drain would hand it the entire
+    /// window.
+    #[test]
+    fn drr_splits_a_tight_window_between_tenants() {
+        let mut q = MergeQueue::new();
+        q.set_tenants(&[1, 1]);
+        for i in 0..8 {
+            q.push(tio(i, 4096, 0)); // hog burst, queued first
+        }
+        for i in 8..12 {
+            q.push(tio(i, 4096, 1)); // victim, queued behind it
+        }
+        let mut out = Vec::new();
+        let ents = [u64::MAX, u64::MAX];
+        assert_eq!(
+            q.merge_check_tenants_into(4 * 4096, &ents, &mut out),
+            MergeOutcome::Drained
+        );
+        let victim = out.iter().filter(|x| x.tenant == 1).count();
+        let hog = out.iter().filter(|x| x.tenant == 0).count();
+        assert_eq!((hog, victim), (2, 2), "equal weights, equal service: {out:?}");
+        // per-lane FIFO order held
+        let vids: Vec<u64> = out.iter().filter(|x| x.tenant == 1).map(|x| x.id).collect();
+        assert_eq!(vids, vec![8, 9]);
+    }
+
+    /// A 3:1 weight ratio shows up in the admitted byte split.
+    #[test]
+    fn drr_weights_bias_the_split() {
+        let mut q = MergeQueue::new();
+        q.set_tenants(&[3, 1]);
+        for i in 0..8 {
+            q.push(tio(i, 4096, 0));
+        }
+        for i in 8..16 {
+            q.push(tio(i, 4096, 1));
+        }
+        let mut out = Vec::new();
+        let ents = [u64::MAX, u64::MAX];
+        assert_eq!(
+            q.merge_check_tenants_into(4 * 4096, &ents, &mut out),
+            MergeOutcome::Drained
+        );
+        let hog = out.iter().filter(|x| x.tenant == 0).count();
+        let victim = out.iter().filter(|x| x.tenant == 1).count();
+        assert_eq!((hog, victim), (3, 1), "{out:?}");
+    }
+
+    /// Entitlements bind in phase 0; phase 1 borrows the leftover budget
+    /// (work-conserving: an idle peer's quota is not wasted).
+    #[test]
+    fn drr_entitlement_then_borrow() {
+        let mut q = MergeQueue::new();
+        q.set_tenants(&[1, 1]);
+        for i in 0..4 {
+            q.push(tio(i, 4096, 0));
+        }
+        let mut out = Vec::new();
+        // tenant 0 entitled to one page only, tenant 1 idle: the other
+        // three pages are borrowed, not stranded
+        assert_eq!(
+            q.merge_check_tenants_into(4 * 4096, &[4096, u64::MAX], &mut out),
+            MergeOutcome::Drained
+        );
+        assert_eq!(out.len(), 4, "borrow phase drained the rest: {out:?}");
+        assert!(q.is_empty());
+    }
+
+    /// With competing entitled demand, the entitled tenant is served
+    /// before the hog may borrow.
+    #[test]
+    fn drr_entitled_demand_preempts_borrowing() {
+        let mut q = MergeQueue::new();
+        q.set_tenants(&[1, 1]);
+        for i in 0..4 {
+            q.push(tio(i, 4096, 0)); // hog, almost no entitlement left
+        }
+        for i in 4..8 {
+            q.push(tio(i, 4096, 1)); // victim, fully entitled
+        }
+        let mut out = Vec::new();
+        assert_eq!(
+            q.merge_check_tenants_into(4 * 4096, &[4096, 4 * 4096], &mut out),
+            MergeOutcome::Drained
+        );
+        let hog = out.iter().filter(|x| x.tenant == 0).count();
+        let victim = out.iter().filter(|x| x.tenant == 1).count();
+        assert_eq!((hog, victim), (1, 3), "entitled victim beats the borrower: {out:?}");
+    }
+
+    /// An oversized head (bigger than any one round's deficit) still
+    /// drains once the window fits it — the FIFO liveness rule.
+    #[test]
+    fn drr_oversized_head_still_drains() {
+        let mut q = MergeQueue::new();
+        q.set_tenants(&[1, 1]);
+        q.push(tio(1, 64 * 4096, 0));
+        let mut out = Vec::new();
+        assert_eq!(
+            q.merge_check_tenants_into(64 * 4096, &[u64::MAX, u64::MAX], &mut out),
+            MergeOutcome::Drained
+        );
+        assert_eq!(out.len(), 1);
+        // and blocks when the window cannot fit it
+        q.push(tio(2, 64 * 4096, 0));
+        assert_eq!(
+            q.merge_check_tenants_into(4096, &[u64::MAX, u64::MAX], &mut out),
+            MergeOutcome::Blocked
+        );
+    }
+
+    /// Multi-tenant conservation: nothing lost or duplicated, per-lane
+    /// FIFO order held, byte accounting exact — under random pushes,
+    /// windows, and entitlements.
+    #[test]
+    fn prop_drr_conservation_and_lane_fifo() {
+        prop::forall(cfg(0xD2_0002), |rng, size| {
+            let lanes = 2 + rng.gen_below(3) as usize;
+            let weights: Vec<u64> = (0..lanes).map(|_| 1 + rng.gen_below(4)).collect();
+            let mut q = MergeQueue::new();
+            q.set_tenants(&weights);
+            let mut pushed: Vec<Vec<u64>> = vec![Vec::new(); lanes];
+            let mut drained: Vec<Vec<u64>> = vec![Vec::new(); lanes];
+            let mut out = Vec::new();
+            let mut next = 0u64;
+            for _ in 0..size * 4 {
+                if rng.gen_bool(0.6) {
+                    let t = rng.gen_below(lanes as u64) as usize;
+                    let len = (1 + rng.gen_below(8)) * 512;
+                    q.push(tio(next, len, t));
+                    pushed[t].push(next);
+                    next += 1;
+                } else {
+                    let w = rng.gen_below(1 << 16);
+                    let ents: Vec<u64> =
+                        (0..lanes).map(|_| rng.gen_below(1 << 16)).collect();
+                    if q.merge_check_tenants_into(w, &ents, &mut out) == MergeOutcome::Drained {
+                        for x in &out {
+                            drained[x.tenant].push(x.id);
+                        }
+                    }
+                }
+                let total: u64 = q.peek().iter().map(|x| x.len).sum();
+                if total != q.queued_bytes() {
+                    return Err(format!(
+                        "byte accounting drift: {total} vs {}",
+                        q.queued_bytes()
+                    ));
+                }
+            }
+            let ents: Vec<u64> = vec![u64::MAX; lanes];
+            while q.merge_check_tenants_into(u64::MAX, &ents, &mut out) == MergeOutcome::Drained {
+                for x in &out {
+                    drained[x.tenant].push(x.id);
+                }
+            }
+            if drained != pushed {
+                return Err(format!("lost/reordered per lane: {drained:?} vs {pushed:?}"));
+            }
+            Ok(())
+        });
     }
 
     /// Property: for any sequence of pushes and window-limited drains, no

@@ -17,6 +17,8 @@
 //!   above: sharded merge queues (one per QP) → batch planner → admission
 //!   window → replication-aware retirement. The single submission path
 //!   both fabric backends drive.
+//! * [`spec`] — the [`spec::EngineSpec`] builder, the one construction
+//!   surface every backend builds its pipeline from.
 //!
 //! Everything here is pure, synchronous policy code — the same objects are
 //! driven by the discrete-event fabric (figures) and by the live loopback
@@ -30,6 +32,9 @@ pub mod mr_strategy;
 pub mod node;
 pub mod polling;
 pub mod regulator;
+pub mod spec;
+
+pub use spec::EngineSpec;
 
 use crate::config::FabricConfig;
 use batching::{BatchLimits, BatchMode};

@@ -6,7 +6,19 @@
 //! The policy is pluggable (the paper's software hook for congestion
 //! control); the prototype uses a static window sized to the NIC's
 //! capability (the paper measures ~7 MB in-flight at the knee).
+//!
+//! **Multi-tenant QoS** makes the window hierarchical: the global policy
+//! window splits into weighted per-tenant sub-windows
+//! (`share_t = window × w_t / Σw`). The split is *soft* — the merge
+//! queue's DRR drain serves entitled demand first, then lets any tenant
+//! borrow whatever budget entitled demand left unclaimed (work-conserving:
+//! an idle tenant's quota is never wasted). The regulator tracks each
+//! tenant's in-flight occupancy, posted/retired bytes, and borrow events
+//! (a post that pushes a tenant past its share), and hands the drain path
+//! per-tenant entitlements (`share_t − in_flight_t`). With one tenant the
+//! share *is* the window and everything behaves exactly as before.
 
+use crate::fabric::TenantId;
 use crate::util::stats::Ewma;
 
 /// Pluggable admission policy: returns the current window in bytes.
@@ -103,26 +115,66 @@ impl AdmissionPolicy for AimdWindow {
     }
 }
 
-/// The regulator: tracks in-flight bytes against the policy window.
+/// Per-tenant accounting inside the regulator: the tenant's weight, its
+/// slice of the in-flight window, and cumulative QoS counters. Lives in a
+/// plain `Vec` indexed by the dense [`TenantId`] (sized once at build, so
+/// the hot path never allocates).
+#[derive(Debug, Clone, Default)]
+pub struct TenantLedger {
+    /// DRR / sub-window weight.
+    pub weight: u64,
+    /// Bytes this tenant currently has in flight.
+    pub in_flight: u64,
+    /// High-water mark of `in_flight`.
+    pub peak_in_flight: u64,
+    /// Cumulative bytes posted.
+    pub posted_bytes: u64,
+    /// Cumulative bytes retired (completions, success or error).
+    pub retired_bytes: u64,
+    /// Posts that pushed this tenant past its weighted share — i.e. quota
+    /// borrowed from tenants that were not using theirs.
+    pub borrow_events: u64,
+    /// WRs admitted for this tenant.
+    pub admitted: u64,
+}
+
+/// The regulator: tracks in-flight bytes against the policy window,
+/// globally and per tenant.
 ///
 /// Posting and completion are keyed by `wr_id`: in debug builds the
-/// regulator keeps a per-WR byte ledger and asserts that every completion
-/// releases exactly the bytes its post reserved. An error completion that
-/// released the wrong amount (or a duplicate completion that released
-/// twice) would strand window capacity forever — the leak is invisible in
-/// steady state and fatal under load, so it is a debug assertion, not a
-/// runtime branch.
+/// regulator keeps a per-WR ledger (bytes *and* tenant) and asserts that
+/// every completion releases exactly the bytes its post reserved, against
+/// the same tenant. An error completion that released the wrong amount
+/// (or a duplicate completion that released twice, or a completion billed
+/// to the wrong tenant) would strand window capacity forever — the leak
+/// is invisible in steady state and fatal under load, so it is a debug
+/// assertion, not a runtime branch.
 #[derive(Debug)]
 pub struct Regulator {
     policy: Box<dyn AdmissionPolicy>,
     in_flight: u64,
     feedback: Feedback,
+    /// Per-tenant ledgers, indexed by dense tenant id. Always at least
+    /// one entry (tenant 0), so single-tenant accounting needs no branch.
+    tenants: Vec<TenantLedger>,
+    total_weight: u64,
+    /// Window from the most recent `available()` call — shares and
+    /// entitlements are computed against it without re-querying the
+    /// policy (policies may be stateful in time).
+    cur_window: u64,
     pub admitted: u64,
     pub blocked_checks: u64,
     pub peak_in_flight: u64,
-    /// Debug-only per-WR ledger: wr_id -> bytes reserved at post time.
+    /// Debug-only per-WR ledger: wr_id -> (bytes, tenant) reserved at
+    /// post time.
     #[cfg(debug_assertions)]
-    ledger: crate::util::fxhash::FxHashMap<u64, u64>,
+    ledger: crate::util::fxhash::FxHashMap<u64, (u64, TenantId)>,
+}
+
+impl Default for Regulator {
+    fn default() -> Self {
+        Self::unlimited()
+    }
 }
 
 impl Regulator {
@@ -131,6 +183,12 @@ impl Regulator {
             policy,
             in_flight: 0,
             feedback: Feedback::default(),
+            tenants: vec![TenantLedger {
+                weight: 1,
+                ..TenantLedger::default()
+            }],
+            total_weight: 1,
+            cur_window: u64::MAX,
             admitted: 0,
             blocked_checks: 0,
             peak_in_flight: 0,
@@ -145,6 +203,42 @@ impl Regulator {
 
     pub fn static_window(bytes: u64) -> Self {
         Self::new(Box::new(StaticWindow(bytes)))
+    }
+
+    /// Split the window into weighted per-tenant sub-windows — one weight
+    /// per tenant, tenant ids dense from 0. Consuming builder, meant for
+    /// engine construction time (before any traffic).
+    pub fn with_tenants(mut self, weights: &[u64]) -> Self {
+        self.set_tenants(weights);
+        self
+    }
+
+    /// Non-consuming form of [`Regulator::with_tenants`].
+    pub fn set_tenants(&mut self, weights: &[u64]) {
+        assert!(!weights.is_empty(), "at least one tenant");
+        assert!(
+            weights.iter().all(|&w| (1..=1 << 20).contains(&w)),
+            "tenant weights must be in 1..=2^20"
+        );
+        assert_eq!(self.in_flight, 0, "set_tenants on a live regulator");
+        self.tenants = weights
+            .iter()
+            .map(|&w| TenantLedger {
+                weight: w,
+                ..TenantLedger::default()
+            })
+            .collect();
+        self.total_weight = weights.iter().sum();
+    }
+
+    /// Number of configured tenants (1 unless [`Regulator::with_tenants`]).
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// The ledger for `tenant` (panics on an out-of-range id).
+    pub fn tenant(&self, tenant: TenantId) -> &TenantLedger {
+        &self.tenants[tenant]
     }
 
     pub fn in_flight(&self) -> u64 {
@@ -167,9 +261,11 @@ impl Regulator {
 
     /// Bytes that may still be admitted right now (merge-queue drains pass
     /// this as the window argument so a closed window leaves requests
-    /// queued — where they can still merge).
+    /// queued — where they can still merge). Also refreshes the cached
+    /// window that shares/entitlements are computed against.
     pub fn available(&mut self, now_ns: u64) -> u64 {
         let w = self.policy.window_bytes(now_ns, &self.feedback);
+        self.cur_window = w;
         let avail = w.saturating_sub(self.in_flight);
         if avail == 0 {
             self.blocked_checks += 1;
@@ -177,11 +273,40 @@ impl Regulator {
         avail
     }
 
-    /// Record that WR `wr_id` reserved `bytes` of the window.
-    pub fn on_post(&mut self, wr_id: u64, bytes: u64) {
+    /// Tenant `t`'s weighted share of the current window
+    /// (`window × w_t / Σw`, in bytes). An unlimited window stays
+    /// unlimited for every tenant.
+    pub fn share(&self, tenant: TenantId) -> u64 {
+        if self.cur_window == u64::MAX || self.tenants.len() <= 1 {
+            return self.cur_window;
+        }
+        let w = self.tenants[tenant].weight as u128;
+        ((self.cur_window as u128 * w) / self.total_weight as u128) as u64
+    }
+
+    /// Bytes tenant `t` may still admit inside its own sub-window
+    /// (`share_t − in_flight_t`, floored at 0). The DRR drain honors this
+    /// in its entitled phase; its borrow phase may exceed it when other
+    /// tenants leave budget unclaimed.
+    pub fn entitlement(&self, tenant: TenantId) -> u64 {
+        self.share(tenant)
+            .saturating_sub(self.tenants[tenant].in_flight)
+    }
+
+    /// Fill `out` with every tenant's entitlement (reused scratch — the
+    /// engine's per-drain call allocates nothing in steady state).
+    pub fn entitlements_into(&self, out: &mut Vec<u64>) {
+        out.clear();
+        for t in 0..self.tenants.len() {
+            out.push(self.entitlement(t));
+        }
+    }
+
+    /// Record that WR `wr_id` of `tenant` reserved `bytes` of the window.
+    pub fn on_post(&mut self, wr_id: u64, tenant: TenantId, bytes: u64) {
         #[cfg(debug_assertions)]
         {
-            let prev = self.ledger.insert(wr_id, bytes);
+            let prev = self.ledger.insert(wr_id, (bytes, tenant));
             debug_assert!(
                 prev.is_none(),
                 "wr_id {wr_id} posted twice without completing"
@@ -193,20 +318,38 @@ impl Regulator {
         self.feedback.in_flight_bytes = self.in_flight;
         self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
         self.admitted += 1;
+        let share = self.share(tenant);
+        let led = &mut self.tenants[tenant];
+        led.in_flight += bytes;
+        led.peak_in_flight = led.peak_in_flight.max(led.in_flight);
+        led.posted_bytes += bytes;
+        led.admitted += 1;
+        if led.in_flight > share {
+            // this post runs on quota another tenant is not using
+            led.borrow_events += 1;
+        }
     }
 
     /// Record a completion (success *or* error — either way the WR left
-    /// the NIC): releases window and feeds RTT to the policy. In debug
-    /// builds, asserts `bytes` matches what `wr_id`'s post reserved so a
-    /// mismatched release cannot silently strand window capacity.
-    pub fn on_complete(&mut self, wr_id: u64, bytes: u64, rtt_ns: u64) {
+    /// the NIC): releases window (global and per-tenant) and feeds RTT to
+    /// the policy. In debug builds, asserts `bytes` and `tenant` match
+    /// what `wr_id`'s post reserved so a mismatched release cannot
+    /// silently strand window capacity.
+    pub fn on_complete(&mut self, wr_id: u64, tenant: TenantId, bytes: u64, rtt_ns: u64) {
         #[cfg(debug_assertions)]
         match self.ledger.remove(&wr_id) {
-            Some(posted) => debug_assert_eq!(
-                posted,
-                bytes,
-                "wr_id {wr_id} completed {bytes} bytes but posted {posted}"
-            ),
+            Some((posted, posted_tenant)) => {
+                debug_assert_eq!(
+                    posted,
+                    bytes,
+                    "wr_id {wr_id} completed {bytes} bytes but posted {posted}"
+                );
+                debug_assert_eq!(
+                    posted_tenant,
+                    tenant,
+                    "wr_id {wr_id} completed by tenant {tenant} but posted by tenant {posted_tenant}"
+                );
+            }
             None => panic!("wr_id {wr_id} completed without a matching post"),
         }
         #[cfg(not(debug_assertions))]
@@ -216,6 +359,10 @@ impl Regulator {
         self.feedback.in_flight_bytes = self.in_flight;
         self.feedback.last_completion_ns = rtt_ns;
         self.feedback.rtt_ewma_ns = rtt_ns as f64;
+        let led = &mut self.tenants[tenant];
+        debug_assert!(led.in_flight >= bytes, "tenant window release underflow");
+        led.in_flight = led.in_flight.saturating_sub(bytes);
+        led.retired_bytes += bytes;
     }
 }
 
@@ -227,7 +374,7 @@ mod tests {
     #[test]
     fn unlimited_never_blocks() {
         let mut r = Regulator::unlimited();
-        r.on_post(1, u32::MAX as u64);
+        r.on_post(1, 0, u32::MAX as u64);
         assert_eq!(r.available(0), u64::MAX - u32::MAX as u64);
     }
 
@@ -235,22 +382,22 @@ mod tests {
     fn static_window_enforced() {
         let mut r = Regulator::static_window(7 << 20);
         assert_eq!(r.available(0), 7 << 20);
-        r.on_post(1, 6 << 20);
+        r.on_post(1, 0, 6 << 20);
         assert_eq!(r.available(0), 1 << 20);
-        r.on_post(2, 1 << 20);
+        r.on_post(2, 0, 1 << 20);
         assert_eq!(r.available(0), 0);
         assert_eq!(r.blocked_checks, 1);
-        r.on_complete(2, 1 << 20, 10_000);
+        r.on_complete(2, 0, 1 << 20, 10_000);
         assert_eq!(r.available(0), 1 << 20);
     }
 
     #[test]
     fn peak_tracking() {
         let mut r = Regulator::static_window(10 << 20);
-        r.on_post(1, 4 << 20);
-        r.on_post(2, 2 << 20);
-        r.on_complete(1, 4 << 20, 5_000);
-        r.on_post(3, 1 << 20);
+        r.on_post(1, 0, 4 << 20);
+        r.on_post(2, 0, 2 << 20);
+        r.on_complete(1, 0, 4 << 20, 5_000);
+        r.on_post(3, 0, 1 << 20);
         assert_eq!(r.peak_in_flight, 6 << 20);
         assert_eq!(r.in_flight(), 3 << 20);
     }
@@ -262,12 +409,12 @@ mod tests {
     fn error_completions_release_exactly_posted_bytes() {
         let mut r = Regulator::static_window(1 << 20);
         for wr in 0..32u64 {
-            r.on_post(wr, 4096);
+            r.on_post(wr, 0, 4096);
         }
         assert_eq!(r.in_flight(), 32 * 4096);
         for wr in 0..32u64 {
             // status does not matter to the regulator: the WR left the NIC
-            r.on_complete(wr, 4096, 1_000);
+            r.on_complete(wr, 0, 4096, 1_000);
         }
         assert_eq!(r.in_flight(), 0, "no stranded window capacity");
         assert_eq!(r.available(0), 1 << 20);
@@ -278,8 +425,8 @@ mod tests {
     #[should_panic(expected = "completed 8192 bytes but posted 4096")]
     fn ledger_catches_mismatched_release() {
         let mut r = Regulator::static_window(1 << 20);
-        r.on_post(7, 4096);
-        r.on_complete(7, 8192, 1_000);
+        r.on_post(7, 0, 4096);
+        r.on_complete(7, 0, 8192, 1_000);
     }
 
     #[test]
@@ -287,8 +434,8 @@ mod tests {
     #[should_panic(expected = "completed without a matching post")]
     fn ledger_catches_unposted_completion() {
         let mut r = Regulator::static_window(1 << 20);
-        r.on_post(7, 4096);
-        r.on_complete(8, 4096, 1_000);
+        r.on_post(7, 0, 4096);
+        r.on_complete(8, 0, 4096, 1_000);
     }
 
     #[test]
@@ -296,8 +443,17 @@ mod tests {
     #[should_panic(expected = "posted twice")]
     fn ledger_catches_double_post() {
         let mut r = Regulator::static_window(1 << 20);
-        r.on_post(7, 4096);
-        r.on_post(7, 4096);
+        r.on_post(7, 0, 4096);
+        r.on_post(7, 0, 4096);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "completed by tenant 1 but posted by tenant 0")]
+    fn ledger_catches_wrong_tenant_release() {
+        let mut r = Regulator::static_window(1 << 20).with_tenants(&[1, 1]);
+        r.on_post(7, 0, 4096);
+        r.on_complete(7, 1, 4096, 1_000);
     }
 
     #[test]
@@ -346,11 +502,11 @@ mod tests {
     #[test]
     fn set_policy_preserves_inflight_accounting() {
         let mut r = Regulator::static_window(8 * 4096);
-        r.on_post(1, 6 * 4096);
+        r.on_post(1, 0, 6 * 4096);
         r.set_policy(Box::new(StaticWindow(2 * 4096)));
         assert_eq!(r.available(0), 0, "shrunk window blocks new admissions");
         assert_eq!(r.in_flight(), 6 * 4096);
-        r.on_complete(1, 6 * 4096, 1_000);
+        r.on_complete(1, 0, 6 * 4096, 1_000);
         assert_eq!(r.in_flight(), 0, "old-policy bytes release cleanly");
         assert_eq!(r.available(0), 2 * 4096);
         r.set_policy(Box::new(Unlimited));
@@ -378,14 +534,14 @@ mod tests {
                     if bytes > avail {
                         continue;
                     }
-                    r.on_post(next_wr, bytes);
+                    r.on_post(next_wr, 0, bytes);
                     posted += bytes;
                     outstanding.push((next_wr, bytes));
                     next_wr += 1;
                 } else {
                     let i = rng.gen_below(outstanding.len() as u64) as usize;
                     let (wr, bytes) = outstanding.swap_remove(i);
-                    r.on_complete(wr, bytes, 1000);
+                    r.on_complete(wr, 0, bytes, 1000);
                     completed += bytes;
                 }
                 if r.in_flight() != posted - completed {
@@ -393,6 +549,132 @@ mod tests {
                         "in_flight {} != posted-completed {}",
                         r.in_flight(),
                         posted - completed
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    // ---------------- hierarchical (multi-tenant) suite ----------------
+
+    /// Weighted shares partition the window: each share is proportional
+    /// and the shares never sum past the global window.
+    #[test]
+    fn tenant_shares_partition_the_window() {
+        let mut r = Regulator::static_window(8 << 20).with_tenants(&[3, 1]);
+        assert_eq!(r.available(0), 8 << 20); // caches the window
+        assert_eq!(r.share(0), 6 << 20);
+        assert_eq!(r.share(1), 2 << 20);
+        assert!(r.share(0) + r.share(1) <= 8 << 20);
+        // entitlement shrinks with the tenant's own in-flight only
+        r.on_post(1, 0, 5 << 20);
+        assert_eq!(r.entitlement(0), 1 << 20);
+        assert_eq!(r.entitlement(1), 2 << 20, "peer unaffected");
+        let mut ents = Vec::new();
+        r.entitlements_into(&mut ents);
+        assert_eq!(ents, vec![1 << 20, 2 << 20]);
+    }
+
+    /// An unlimited window stays unlimited for every tenant.
+    #[test]
+    fn unlimited_window_is_unlimited_per_tenant() {
+        let mut r = Regulator::unlimited().with_tenants(&[1, 7]);
+        assert_eq!(r.available(0), u64::MAX);
+        assert_eq!(r.entitlement(0), u64::MAX);
+        assert_eq!(r.entitlement(1), u64::MAX);
+    }
+
+    /// Borrowed quota is returned on completion: a post past the tenant's
+    /// share counts a borrow event, and completing it restores the full
+    /// entitlement (nothing stranded in either the global or the
+    /// per-tenant ledger).
+    #[test]
+    fn borrowed_quota_is_returned_on_completion() {
+        let mut r = Regulator::static_window(4 * 4096).with_tenants(&[1, 1]);
+        assert_eq!(r.available(0), 4 * 4096);
+        assert_eq!(r.share(0), 2 * 4096);
+        // tenant 0 posts past its share (tenant 1 idle -> DRR borrow)
+        r.on_post(1, 0, 3 * 4096);
+        assert_eq!(r.tenant(0).borrow_events, 1);
+        assert_eq!(r.tenant(0).in_flight, 3 * 4096);
+        assert_eq!(r.entitlement(0), 0);
+        assert_eq!(r.available(0), 4096, "global window sees the borrow");
+        r.on_complete(1, 0, 3 * 4096, 1_000);
+        assert_eq!(r.tenant(0).in_flight, 0, "borrowed quota returned");
+        assert_eq!(r.entitlement(0), 2 * 4096);
+        assert_eq!(r.available(0), 4 * 4096);
+        // a post inside the share is not a borrow
+        r.on_post(2, 1, 4096);
+        assert_eq!(r.tenant(1).borrow_events, 0);
+    }
+
+    /// Per-tenant cumulative counters: posted/retired bytes and peaks.
+    #[test]
+    fn tenant_counters_accumulate() {
+        let mut r = Regulator::unlimited().with_tenants(&[1, 2]);
+        let _ = r.available(0);
+        r.on_post(1, 0, 4096);
+        r.on_post(2, 1, 8192);
+        r.on_post(3, 1, 4096);
+        r.on_complete(2, 1, 8192, 1_000);
+        assert_eq!(r.tenant(0).posted_bytes, 4096);
+        assert_eq!(r.tenant(0).retired_bytes, 0);
+        assert_eq!(r.tenant(1).posted_bytes, 12288);
+        assert_eq!(r.tenant(1).retired_bytes, 8192);
+        assert_eq!(r.tenant(1).in_flight, 4096);
+        assert_eq!(r.tenant(1).peak_in_flight, 12288);
+        assert_eq!(r.tenant(1).admitted, 2);
+        assert_eq!(r.admitted, 3);
+    }
+
+    /// Property: for any weights and window, the weighted sub-windows
+    /// never exceed the global window (Σ share_t ≤ window, each
+    /// entitlement ≤ its share), and per-tenant in-flight sums to the
+    /// global in-flight at every step.
+    #[test]
+    fn prop_subwindows_never_exceed_global() {
+        prop::forall(cfg(0xAD0_22), |rng, size| {
+            let lanes = 1 + rng.gen_below(4) as usize;
+            let weights: Vec<u64> = (0..lanes).map(|_| 1 + rng.gen_below(8)).collect();
+            let window = (1 + rng.gen_below(64)) << 16;
+            let mut r = Regulator::static_window(window).with_tenants(&weights);
+            let mut outstanding: Vec<(u64, TenantId, u64)> = Vec::new();
+            let mut next_wr = 0u64;
+            for _ in 0..size * 4 {
+                let avail = r.available(0);
+                if (rng.gen_bool(0.6) || outstanding.is_empty()) && avail > 0 {
+                    let t = rng.gen_below(lanes as u64) as usize;
+                    let bytes = (1 + rng.gen_below(8)) * 4096;
+                    if bytes > avail {
+                        continue;
+                    }
+                    r.on_post(next_wr, t, bytes);
+                    outstanding.push((next_wr, t, bytes));
+                    next_wr += 1;
+                } else if !outstanding.is_empty() {
+                    let i = rng.gen_below(outstanding.len() as u64) as usize;
+                    let (wr, t, bytes) = outstanding.swap_remove(i);
+                    r.on_complete(wr, t, bytes, 1_000);
+                }
+                let share_sum: u64 = (0..lanes).map(|t| r.share(t)).sum();
+                if share_sum > window {
+                    return Err(format!("Σ shares {share_sum} > window {window}"));
+                }
+                for t in 0..lanes {
+                    if r.entitlement(t) > r.share(t) {
+                        return Err(format!(
+                            "tenant {t} entitlement {} > share {}",
+                            r.entitlement(t),
+                            r.share(t)
+                        ));
+                    }
+                }
+                let tin: u64 = (0..lanes).map(|t| r.tenant(t).in_flight).sum();
+                if tin != r.in_flight() {
+                    return Err(format!(
+                        "per-tenant in-flight {tin} != global {}",
+                        r.in_flight()
                     ));
                 }
             }

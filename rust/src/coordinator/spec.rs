@@ -1,0 +1,244 @@
+//! [`EngineSpec`] — the one construction surface of the coordinator.
+//!
+//! Every backend builds its pipeline from the same spec: the discrete-event
+//! fabric, the chaos fabric and the live loopback client all call
+//! [`crate::coordinator::engine::IoEngine::build`] with one of these, so a
+//! design point is described once and runs everywhere. The spec replaces
+//! the old constructor zoo (`IoEngine::new` positional args,
+//! `with_resync`/`with_donor_election` chains, `new_placed_*` fabric
+//! variants): features are named fields with validated dependencies
+//! (election ⇒ resync ⇒ replication), not an ordering of method calls.
+
+use crate::coordinator::batching::{BatchLimits, BatchMode};
+use crate::coordinator::engine::{EngineCosts, SHARD_REGION_SHIFT};
+use crate::coordinator::StackConfig;
+
+/// Default chunk size of resync repair copies — well under every window
+/// the examples/tests configure, so repair traffic cannot monopolize (or
+/// overshoot) the admission window.
+pub const DEFAULT_RESYNC_CHUNK: u64 = 64 * 1024;
+
+/// A complete, validated description of one engine instance: batching,
+/// topology, admission window, placement/replication, recovery features
+/// and the multi-tenant QoS weights. Construct with [`EngineSpec::new`]
+/// (or [`EngineSpec::from_stack`] for a paper design point), refine with
+/// the builder methods, then hand to `IoEngine::build`,
+/// `LiveBox::build` or `ChaosFabric::build`.
+#[derive(Debug, Clone)]
+pub struct EngineSpec {
+    /// Batch planner mode (Single / MR / Doorbell / Hybrid).
+    pub batch: BatchMode,
+    /// NIC / verbs-layer limits on merged WRs and doorbell chains.
+    pub limits: BatchLimits,
+    /// Remote nodes in the cluster.
+    pub nodes: usize,
+    /// QPs (channels) per remote node.
+    pub qps_per_node: usize,
+    /// Admission-control window in bytes; `None` = unlimited.
+    pub window_bytes: Option<u64>,
+    /// CPU cost model (the sim fills this from calibration; live backends
+    /// run [`EngineCosts::free`]).
+    pub costs: EngineCosts,
+    /// `Some(r)` attaches placement routing: writes fan out to `r`
+    /// replicas, reads fail over across them.
+    pub replicas: Option<usize>,
+    /// Stripe width of the placement map (bytes).
+    pub stripe_bytes: u64,
+    /// `Some(chunk)` enables the epoch-based resync protocol with the
+    /// given repair-copy chunk size. Requires replication.
+    pub resync_chunk: Option<u64>,
+    /// Enables epoch-vector donor election on top of resync.
+    pub election: bool,
+    /// QoS weights, one per tenant; a single entry means single-tenant
+    /// operation (the exact pre-QoS FIFO/admission behaviour).
+    pub tenant_weights: Vec<u64>,
+}
+
+impl EngineSpec {
+    /// Spec for a direct-routing engine over `nodes` remote nodes, one
+    /// channel each: hybrid batching, default limits, unlimited window,
+    /// zero cost model, no placement, a single tenant.
+    pub fn new(nodes: usize) -> Self {
+        Self {
+            batch: BatchMode::Hybrid,
+            limits: BatchLimits::default(),
+            nodes,
+            qps_per_node: 1,
+            window_bytes: None,
+            costs: EngineCosts::free(),
+            replicas: None,
+            stripe_bytes: 1 << SHARD_REGION_SHIFT,
+            resync_chunk: None,
+            election: false,
+            tenant_weights: vec![1],
+        }
+    }
+
+    /// Spec carrying a [`StackConfig`] design point's engine-relevant
+    /// knobs (batching, limits, channels, window). MR / polling / copy
+    /// semantics stay with the fabric driving the engine.
+    pub fn from_stack(stack: &StackConfig, nodes: usize) -> Self {
+        Self {
+            batch: stack.batch,
+            limits: stack.limits,
+            qps_per_node: stack.qps_per_node,
+            window_bytes: stack.window_bytes,
+            ..Self::new(nodes)
+        }
+    }
+
+    pub fn batch(mut self, b: BatchMode) -> Self {
+        self.batch = b;
+        self
+    }
+
+    pub fn limits(mut self, l: BatchLimits) -> Self {
+        self.limits = l;
+        self
+    }
+
+    pub fn qps(mut self, k: usize) -> Self {
+        self.qps_per_node = k;
+        self
+    }
+
+    pub fn window(mut self, w: Option<u64>) -> Self {
+        self.window_bytes = w;
+        self
+    }
+
+    pub fn costs(mut self, c: EngineCosts) -> Self {
+        self.costs = c;
+        self
+    }
+
+    /// Attach placement routing: `replicas` copies per stripe.
+    pub fn replicated(mut self, replicas: usize) -> Self {
+        self.replicas = Some(replicas);
+        self
+    }
+
+    pub fn stripe(mut self, bytes: u64) -> Self {
+        self.stripe_bytes = bytes;
+        self
+    }
+
+    /// Enable the epoch-based resync protocol (requires [`replicated`]).
+    ///
+    /// [`replicated`]: EngineSpec::replicated
+    pub fn resync(mut self, chunk: u64) -> Self {
+        self.resync_chunk = Some(chunk);
+        self
+    }
+
+    /// Enable epoch-vector donor election (requires [`resync`]).
+    ///
+    /// [`resync`]: EngineSpec::resync
+    pub fn election(mut self) -> Self {
+        self.election = true;
+        self
+    }
+
+    /// Register the QoS tenants by weight. More than one entry switches
+    /// the engine to hierarchical admission + weighted-fair drain; the
+    /// default single entry keeps the exact single-tenant fast path.
+    pub fn tenants(mut self, weights: &[u64]) -> Self {
+        self.tenant_weights = weights.to_vec();
+        self
+    }
+
+    /// Panics on an inconsistent spec — the same dependency rules the old
+    /// constructor chain enforced by ordering, now checked up front.
+    pub fn validate(&self) {
+        assert!(self.nodes >= 1, "spec: at least one node");
+        assert!(self.qps_per_node >= 1, "spec: at least one QP per node");
+        if let Some(w) = self.window_bytes {
+            assert!(w > 0, "spec: zero-byte admission window admits nothing");
+        }
+        assert!(self.stripe_bytes > 0, "spec: stripe_bytes must be nonzero");
+        if let Some(r) = self.replicas {
+            assert!(
+                r >= 1 && r <= self.nodes,
+                "spec: replicas {} out of range 1..={}",
+                r,
+                self.nodes
+            );
+        }
+        if let Some(chunk) = self.resync_chunk {
+            assert!(chunk > 0, "spec: resync chunk must be nonzero");
+            assert!(
+                self.replicas.is_some(),
+                "spec: resync requires replication (call .replicated(r))"
+            );
+        }
+        if self.election {
+            assert!(
+                self.resync_chunk.is_some(),
+                "spec: donor election requires resync (call .resync(chunk))"
+            );
+        }
+        assert!(!self.tenant_weights.is_empty(), "spec: at least one tenant");
+        for (t, &w) in self.tenant_weights.iter().enumerate() {
+            assert!(
+                w >= 1 && w <= (1 << 20),
+                "spec: tenant {t} weight {w} out of range 1..=2^20"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FabricConfig;
+
+    #[test]
+    fn defaults_validate() {
+        EngineSpec::new(1).validate();
+        EngineSpec::new(3)
+            .qps(4)
+            .window(Some(7 << 20))
+            .replicated(2)
+            .resync(DEFAULT_RESYNC_CHUNK)
+            .election()
+            .tenants(&[3, 1])
+            .validate();
+    }
+
+    #[test]
+    fn from_stack_carries_engine_knobs() {
+        let cfg = FabricConfig::default();
+        let stack = StackConfig::rdmabox(&cfg);
+        let spec = EngineSpec::from_stack(&stack, 4);
+        assert_eq!(spec.batch, stack.batch);
+        assert_eq!(spec.qps_per_node, stack.qps_per_node);
+        assert_eq!(spec.window_bytes, stack.window_bytes);
+        assert_eq!(spec.nodes, 4);
+        assert_eq!(spec.tenant_weights, vec![1]);
+        spec.validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "resync requires replication")]
+    fn resync_without_replication_is_rejected() {
+        EngineSpec::new(2).resync(4096).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "donor election requires resync")]
+    fn election_without_resync_is_rejected() {
+        EngineSpec::new(2).replicated(2).election().validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "weight 0 out of range")]
+    fn zero_weight_is_rejected() {
+        EngineSpec::new(1).tenants(&[1, 0]).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "replicas 3 out of range")]
+    fn more_replicas_than_nodes_is_rejected() {
+        EngineSpec::new(2).replicated(3).validate();
+    }
+}

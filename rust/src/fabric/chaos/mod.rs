@@ -28,8 +28,8 @@
 //! [`ChaosStats::stale_reads`] and failed by the scenario runner. This
 //! is what makes unresynchronized node revival (and silent replica
 //! divergence under partial partitions) assertable instead of
-//! invisible; enable the engine's repair protocol with
-//! [`ChaosFabric::with_resync`].
+//! invisible; enable the engine's repair protocol through the
+//! [`EngineSpec`] (`.resync(chunk)`) handed to [`ChaosFabric::build`].
 
 pub mod plan;
 pub mod scenario;
@@ -40,12 +40,14 @@ pub use scenario::{replay_command, run_scenario, ChaosProfile, Scenario, Scenari
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, HashSet};
 
-use crate::coordinator::batching::{BatchLimits, BatchMode};
 use crate::coordinator::engine::{
-    EngineCosts, IoEngine, RetiredIo, Submitted, RESYNC_PARENT, SHARD_REGION_SHIFT,
+    DrainOut, IoEngine, RetiredIo, Submitted, RESYNC_PARENT, SHARD_REGION_SHIFT,
 };
-use crate::coordinator::node::{NodeMap, NodeState};
-use crate::fabric::{AppIo, Dir, NodeId, OpKind, QpId, Wc, WcStatus, WorkRequest};
+use crate::coordinator::node::NodeState;
+use crate::coordinator::spec::EngineSpec;
+use crate::fabric::{
+    AppIo, Dir, NodeId, OpKind, QpId, TenantId, Wc, WcStatus, WorkRequest, DEFAULT_TENANT,
+};
 use crate::util::fxhash::{FxBuildHasher, FxHashMap};
 use crate::util::rng::Pcg32;
 
@@ -56,9 +58,9 @@ pub const STRIPE_BYTES: u64 = 1 << SHARD_REGION_SHIFT;
 /// Page granularity of the data model.
 pub const PAGE_BYTES: u64 = 4096;
 
-/// Resync copy chunk used by [`ChaosFabric::with_resync`]: equal to the
-/// smallest admission window the scenario generator produces, so repair
-/// traffic can never force the window's oversized-head escape hatch.
+/// Resync copy chunk chaos specs should use: equal to the smallest
+/// admission window the scenario generator produces, so repair traffic
+/// can never force the window's oversized-head escape hatch.
 pub const RESYNC_CHUNK_BYTES: u64 = 4 * PAGE_BYTES;
 
 type PageSet = HashSet<u64, FxBuildHasher>;
@@ -232,14 +234,17 @@ pub struct ChaosFabric {
     /// `Pager::surrender`) — the end-to-end test of the
     /// `take_disk_surrenders` wiring feeds a real `Pager` from it.
     pub surrendered_log: Vec<(u64, u64)>,
+    /// Reused drain buffer: every pump fills this through
+    /// [`IoEngine::drain_all_into`] (allocation-free in steady state).
+    drain: DrainOut,
     pub stats: ChaosStats,
 }
 
 impl ChaosFabric {
-    /// Build a cluster of `nodes` × `qps_per_node` chaos QPs with
-    /// `replicas`-way placement. The plan's node events are pre-loaded
-    /// into the schedule; everything else is drawn from `seed` as WRs
-    /// are posted.
+    /// Convenience shim over [`ChaosFabric::build`]: the common placed
+    /// topology (`nodes` × `qps_per_node` QPs, `replicas`-way placement,
+    /// one tenant) without spelling out a spec. Resync, election and QoS
+    /// tenants need the spec path.
     pub fn new(
         seed: u64,
         nodes: usize,
@@ -248,16 +253,30 @@ impl ChaosFabric {
         window_bytes: Option<u64>,
         plan: FaultPlan,
     ) -> Self {
-        let map = NodeMap::new(nodes, replicas, STRIPE_BYTES);
-        let engine = IoEngine::new(
-            BatchMode::Hybrid,
-            BatchLimits::default(),
-            nodes,
-            qps_per_node,
-            window_bytes,
-            EngineCosts::free(),
+        Self::build(
+            seed,
+            &EngineSpec::new(nodes)
+                .qps(qps_per_node)
+                .window(window_bytes)
+                .replicated(replicas),
+            plan,
         )
-        .with_placement(map);
+    }
+
+    /// Build the chaos cluster from an [`EngineSpec`] — the single
+    /// construction surface shared with the sim and loopback backends.
+    /// The spec must be replicated (the chaos fabric drives a *placed*
+    /// engine); its stripe defaults to [`STRIPE_BYTES`], lining placement
+    /// up with QP sharding. The plan's node events are pre-loaded into
+    /// the schedule; everything else is drawn from `seed` as WRs are
+    /// posted.
+    pub fn build(seed: u64, spec: &EngineSpec, plan: FaultPlan) -> Self {
+        assert!(
+            spec.replicas.is_some(),
+            "the chaos fabric drives a placed engine: spec needs .replicated(r)"
+        );
+        let nodes = spec.nodes;
+        let engine = IoEngine::build(spec);
         let node_events: Vec<NodeEvent> = plan.node_events.clone();
         let churns: Vec<AdmissionChurn> = plan.churns.clone();
         let mut fab = Self {
@@ -279,6 +298,7 @@ impl ChaosFabric {
             served: FxHashMap::default(),
             first_stale: None,
             surrendered_log: Vec::new(),
+            drain: DrainOut::default(),
             stats: ChaosStats::default(),
         };
         for ev in node_events {
@@ -289,28 +309,6 @@ impl ChaosFabric {
             fab.push(c.at_ns, EventKind::Churn { window });
         }
         fab
-    }
-
-    /// Enable the engine's epoch-based resync protocol: revived (or
-    /// diverged) replicas re-enter in `Resyncing` state and are repaired
-    /// through the normal merge → batch → admit pipeline before they
-    /// serve reads again. Copies are chunked to [`RESYNC_CHUNK_BYTES`].
-    pub fn with_resync(mut self) -> Self {
-        self.engine.enable_resync(RESYNC_CHUNK_BYTES);
-        self
-    }
-
-    /// Enable resync **plus the epoch-vector donor election**: repair
-    /// donors are elected by comparing applied epoch vectors against the
-    /// client's required floor, so mutually-overlapping resyncing peers
-    /// repair each other and ranges with no live copy at all are
-    /// surrendered to the disk path (the fabric marks those pages
-    /// disk-backed, modeling the paging layer's per-block disk bit over
-    /// its always-written local-disk replica).
-    pub fn with_election(mut self) -> Self {
-        self.engine.enable_resync(RESYNC_CHUNK_BYTES);
-        self.engine.enable_donor_election();
-        self
     }
 
     pub fn now(&self) -> u64 {
@@ -346,6 +344,20 @@ impl ChaosFabric {
     /// for every page they cover; reads snapshot the per-page floor so
     /// their eventual completion can be checked for staleness.
     pub fn submit(&mut self, id: u64, dir: Dir, addr: u64, len: u64) -> Submitted {
+        self.submit_t(id, dir, addr, len, DEFAULT_TENANT)
+    }
+
+    /// [`ChaosFabric::submit`] on behalf of a QoS tenant: the I/O bills
+    /// to `tenant`'s sub-window and drains through its DRR lane. The
+    /// spec must have registered the tenant (`.tenants(weights)`).
+    pub fn submit_t(
+        &mut self,
+        id: u64,
+        dir: Dir,
+        addr: u64,
+        len: u64,
+        tenant: TenantId,
+    ) -> Submitted {
         let io = AppIo {
             id,
             dir,
@@ -353,6 +365,7 @@ impl ChaosFabric {
             addr,
             len,
             thread: 0,
+            tenant,
             t_submit: self.now_ns,
         };
         let stamps: Vec<PageStamp> = match dir {
@@ -464,12 +477,19 @@ impl ChaosFabric {
     /// Drain admitted requests and put the planned WRs in flight, drawing
     /// each WR's latency and fault decisions from the seed stream.
     fn pump(&mut self) {
-        let out = self.engine.drain_all(self.now_ns);
-        for (chain, wrs) in out.into_chains() {
-            for wr in wrs {
-                self.schedule_wr(chain.qp, chain.node, wr);
+        // take the reused buffer so schedule_wr can borrow self mutably;
+        // putting it back preserves its capacity across pumps
+        let mut drain = std::mem::take(&mut self.drain);
+        self.engine.drain_all_into(self.now_ns, &mut drain);
+        {
+            let mut wrs = drain.wrs.drain(..);
+            for chain in drain.chains.drain(..) {
+                for wr in wrs.by_ref().take(chain.end - chain.start) {
+                    self.schedule_wr(chain.qp, chain.node, wr);
+                }
             }
         }
+        self.drain = drain;
     }
 
     fn schedule_wr(&mut self, qp: QpId, node: NodeId, wr: WorkRequest) {
@@ -575,6 +595,7 @@ impl ChaosFabric {
                     op: f.wr.op,
                     len: f.wr.len,
                     app_ios: f.wr.app_ios,
+                    tenant: f.wr.tenant,
                     status,
                 };
                 let out = self.engine.on_wc(&wc, self.now_ns);
@@ -753,8 +774,20 @@ impl ChaosFabric {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::node::NodeMap;
 
     const STEPS: u64 = 1_000_000;
+
+    /// Replicated 2×1 spec with resync (and optionally election) — the
+    /// recovering-cluster shape most tests here drive.
+    fn resync_spec(election: bool) -> EngineSpec {
+        let s = EngineSpec::new(2).replicated(2).resync(RESYNC_CHUNK_BYTES);
+        if election {
+            s.election()
+        } else {
+            s
+        }
+    }
 
     fn submit_pages(fab: &mut ChaosFabric, n: u64, read_every: u64) -> u64 {
         for i in 0..n {
@@ -891,7 +924,7 @@ mod tests {
     /// the repaired node is the only replica left.
     #[test]
     fn resync_gates_revival_and_repairs_the_replica() {
-        let mut fab = ChaosFabric::new(0xA5, 2, 1, 2, None, FaultPlan::none()).with_resync();
+        let mut fab = ChaosFabric::build(0xA5, &resync_spec(false), FaultPlan::none());
         fab.submit(1, Dir::Write, 0, 4096);
         fab.run_to_idle(STEPS).expect("quiescent");
         fab.schedule_node_event(0, false, fab.now() + 1);
@@ -922,7 +955,7 @@ mod tests {
     #[test]
     fn partition_divergence_is_demoted_and_repaired() {
         let plan = FaultPlan::none().partition(0, 0, 50_000);
-        let mut fab = ChaosFabric::new(29, 2, 1, 2, None, plan).with_resync();
+        let mut fab = ChaosFabric::build(29, &resync_spec(false), plan);
         // writes during the partition: node 0's legs all error
         for i in 0..8u64 {
             fab.submit(i, Dir::Write, i * 4096, 4096);
@@ -951,7 +984,7 @@ mod tests {
     fn surrendered_ranges_route_reads_to_disk_via_pager() {
         use crate::paging::{Pager, Target};
 
-        let mut fab = ChaosFabric::new(0xD15C, 2, 1, 2, None, FaultPlan::none()).with_election();
+        let mut fab = ChaosFabric::build(0xD15C, &resync_spec(true), FaultPlan::none());
         // 8 pages live remotely, then node 0 misses an overwrite and
         // every peer dies before it revives: the election surrenders
         for i in 0..8u64 {
@@ -1044,5 +1077,43 @@ mod tests {
             "replica 1 survived: no disk fallback"
         );
         assert!(fab.stats.failovers > 0, "reads were in flight to node 0");
+    }
+
+    /// Per-tenant accounting stays exactly balanced under injected
+    /// errors, duplicates and failover: every tenant's posted bytes are
+    /// matched by completions, both sub-windows drain to empty, and the
+    /// payload model stays fresh.
+    #[test]
+    fn tenants_account_exactly_under_faults() {
+        let plan = FaultPlan::none()
+            .with_errors(0.2)
+            .with_duplicates(0.5, 10_000);
+        let spec = EngineSpec::new(2)
+            .qps(2)
+            .window(Some(8 * 4096))
+            .replicated(2)
+            .tenants(&[3, 1]);
+        let mut fab = ChaosFabric::build(0x7E4A, &spec, plan);
+        for i in 0..80u64 {
+            let t = (i % 2) as usize;
+            let dir = if i % 5 == 0 { Dir::Read } else { Dir::Write };
+            fab.submit_t(i, dir, (i % 32) * 4096, 4096, t);
+        }
+        let retired = fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(retired.len(), 80, "every io retires exactly once");
+        let ts = fab.engine().tenant_stats();
+        assert_eq!(ts.len(), 2);
+        for t in &ts {
+            assert!(t.posted_bytes > 0, "tenant {} carried traffic", t.tenant);
+            assert_eq!(
+                t.posted_bytes, t.retired_bytes,
+                "tenant {} window balanced",
+                t.tenant
+            );
+            assert_eq!(t.window_occupancy, 0);
+            assert!(t.drained_bytes > 0);
+        }
+        assert_eq!(fab.engine().regulator().in_flight(), 0);
+        assert_eq!(fab.stats.stale_reads, 0);
     }
 }

@@ -24,11 +24,12 @@
 
 use std::collections::BTreeSet;
 
+use crate::coordinator::spec::EngineSpec;
 use crate::fabric::Dir;
 use crate::runtime::Result;
 use crate::util::rng::Pcg32;
 
-use super::{ChaosFabric, FaultPlan, STRIPE_BYTES};
+use super::{ChaosFabric, FaultPlan, RESYNC_CHUNK_BYTES, STRIPE_BYTES};
 
 /// Livelock guard for one scenario run.
 const MAX_STEPS: u64 = 4_000_000;
@@ -55,6 +56,12 @@ pub enum ChaosProfile {
     /// drain. The nightly `chaos-extended` sweep runs this profile
     /// (`CHAOS_PROFILE=election`).
     ElectionHeavy,
+    /// Multi-tenant QoS: two weighted tenants share the pipeline with a
+    /// hog-biased workload, under guaranteed latency storms and
+    /// admission churn on top of the standard mix — the per-tenant
+    /// admission ledgers and DRR lanes must stay exactly balanced
+    /// through it. The nightly sweep runs this as `CHAOS_PROFILE=qos`.
+    Qos,
 }
 
 /// One chaos scenario: everything the run needs, nameable by seed.
@@ -76,6 +83,10 @@ pub struct Scenario {
     pub election: bool,
     /// Which randomized mix this seed drew (replay must match).
     pub profile: ChaosProfile,
+    /// QoS weights, one per tenant (a single entry = single-tenant).
+    /// Multi-tenant scenarios spread the workload hog-vs-victim across
+    /// the tenants and check the per-tenant ledgers at quiescence.
+    pub tenant_weights: Vec<u64>,
     pub plan: FaultPlan,
 }
 
@@ -104,7 +115,23 @@ impl Scenario {
         let n_ios = 150 + rng.gen_below(250);
         let read_fraction = 0.2 + rng.gen_f64() * 0.6;
         let heavy = profile == ChaosProfile::ElectionHeavy;
-        let plan = FaultPlan::randomized_profile(&mut rng, nodes, qps_per_node, heavy);
+        let mut plan = FaultPlan::randomized_profile(&mut rng, nodes, qps_per_node, heavy);
+        let tenant_weights = if profile == ChaosProfile::Qos {
+            // victim first, hog last; the victim gets the larger weight,
+            // and the plan is guaranteed a latency storm + admission
+            // churn so the sub-windows are squeezed while full
+            let victim_w = 2 + rng.gen_below(6);
+            let from = rng.gen_below(200_000);
+            plan = plan
+                .latency_storm(from, from + 1 + rng.gen_below(150_000), 1 + rng.gen_below(60_000))
+                .admission_window(
+                    rng.gen_below(300_000),
+                    Some((MAX_IO_PAGES + rng.gen_below(12)) * 4096),
+                );
+            vec![victim_w, 1]
+        } else {
+            vec![1]
+        };
         Self {
             name: "randomized",
             seed,
@@ -117,6 +144,7 @@ impl Scenario {
             resync: true,
             election: true,
             profile,
+            tenant_weights,
             plan,
         }
     }
@@ -136,8 +164,16 @@ impl Scenario {
             resync: true,
             election: true,
             profile: ChaosProfile::Standard,
+            tenant_weights: vec![1],
             plan,
         }
+    }
+
+    /// Register QoS tenants by weight (the workload is spread across
+    /// them hog-vs-victim, like the `Qos` profile does from its seed).
+    pub fn with_tenants(mut self, weights: &[u64]) -> Self {
+        self.tenant_weights = weights.to_vec();
+        self
     }
 
     /// Disable the resync protocol: revived replicas rejoin routing
@@ -191,6 +227,10 @@ pub struct ScenarioReport {
     pub resyncs_completed: u64,
     pub peak_in_flight: u64,
     pub elapsed_virtual_ns: u64,
+    /// Bytes posted per tenant (one entry per registered tenant).
+    pub tenant_posted_bytes: Vec<u64>,
+    /// Work-conserving borrow events per tenant.
+    pub tenant_borrows: Vec<u64>,
 }
 
 /// The one-command reproducer for a failing scenario.
@@ -199,6 +239,7 @@ pub fn replay_command(sc: &Scenario) -> String {
         let profile = match sc.profile {
             ChaosProfile::Standard => "",
             ChaosProfile::ElectionHeavy => "CHAOS_PROFILE=election ",
+            ChaosProfile::Qos => "CHAOS_PROFILE=qos ",
         };
         format!(
             "{profile}CHAOS_SEED={:#x} cargo test --release --test chaos_scenarios \
@@ -256,19 +297,19 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
             (None, _) => unreachable!("handled above"),
         })
     };
-    let mut fab = ChaosFabric::new(
-        sc.seed,
-        sc.nodes,
-        sc.qps_per_node,
-        sc.replicas,
-        sc.window_bytes,
-        sc.plan.clone(),
-    );
-    if sc.resync && sc.election {
-        fab = fab.with_election();
-    } else if sc.resync {
-        fab = fab.with_resync();
+    let mut spec = EngineSpec::new(sc.nodes)
+        .qps(sc.qps_per_node)
+        .window(sc.window_bytes)
+        .replicated(sc.replicas)
+        .tenants(&sc.tenant_weights);
+    if sc.resync {
+        spec = spec.resync(RESYNC_CHUNK_BYTES);
+        if sc.election {
+            spec = spec.election();
+        }
     }
+    let mut fab = ChaosFabric::build(sc.seed, &spec, sc.plan.clone());
+    let n_tenants = sc.tenant_weights.len();
     // workload stream is independent of the fabric's fault stream
     let mut rng = Pcg32::with_stream(sc.seed, 0x10AD5);
     let mut retired: BTreeSet<u64> = BTreeSet::new();
@@ -312,7 +353,18 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
             if len > 4096 && rng.gen_bool(0.15) {
                 addr = (addr / STRIPE_BYTES + 1) * STRIPE_BYTES - 4096;
             }
-            let sub = fab.submit(id, dir, addr, len);
+            // hog-vs-victim spread: the last tenant is the hog and
+            // carries most of the stream; the rest split the remainder
+            let tenant = if n_tenants > 1 {
+                if rng.gen_bool(0.7) {
+                    n_tenants - 1
+                } else {
+                    rng.gen_below(n_tenants as u64 - 1) as usize
+                }
+            } else {
+                0
+            };
+            let sub = fab.submit_t(id, dir, addr, len, tenant);
             submitted += 1;
             if sub.disk_fallback {
                 disk_at_submit += 1;
@@ -357,6 +409,23 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
             "window not fully released at quiescence: {} bytes stranded",
             fab.engine().regulator().in_flight()
         )));
+    }
+    // per-tenant ledgers: every sub-window fully released, every posted
+    // byte matched by a completion on the tenant that posted it
+    let tenant_stats = fab.engine().tenant_stats();
+    for t in &tenant_stats {
+        if t.window_occupancy != 0 {
+            return Err(fail(format!(
+                "tenant {} sub-window not released: {} bytes stranded",
+                t.tenant, t.window_occupancy
+            )));
+        }
+        if t.posted_bytes != t.retired_bytes {
+            return Err(fail(format!(
+                "tenant {} ledger unbalanced: posted {} != retired {}",
+                t.tenant, t.posted_bytes, t.retired_bytes
+            )));
+        }
     }
     let peak = fab.engine().regulator().peak_in_flight;
     if let Some(w) = window_cap {
@@ -417,6 +486,8 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
         resyncs_completed: fab.engine().stats.resyncs_completed,
         peak_in_flight: fab.engine().regulator().peak_in_flight,
         elapsed_virtual_ns: fab.now(),
+        tenant_posted_bytes: tenant_stats.iter().map(|t| t.posted_bytes).collect(),
+        tenant_borrows: tenant_stats.iter().map(|t| t.borrow_events).collect(),
     })
 }
 
@@ -478,6 +549,32 @@ mod tests {
                 panic!("{e}");
             }
         }
+    }
+
+    #[test]
+    fn qos_profile_seeds_pass_with_balanced_tenants() {
+        for seed in 0..3u64 {
+            let sc = Scenario::randomized_with_profile(seed, ChaosProfile::Qos);
+            assert_eq!(sc.tenant_weights.len(), 2, "victim + hog");
+            assert!(!sc.plan.storms.is_empty(), "qos profile guarantees a storm");
+            assert!(!sc.plan.churns.is_empty(), "qos profile guarantees churn");
+            let r = match run_scenario(&sc) {
+                Ok(r) => r,
+                Err(e) => panic!("{e}"),
+            };
+            assert_eq!(r.tenant_posted_bytes.len(), 2);
+            assert!(
+                r.tenant_posted_bytes.iter().all(|&b| b > 0),
+                "both tenants carried traffic: {:?}",
+                r.tenant_posted_bytes
+            );
+        }
+        let sc = Scenario::randomized_with_profile(0xFEED, ChaosProfile::Qos);
+        assert!(
+            replay_command(&sc).starts_with("CHAOS_PROFILE=qos "),
+            "{}",
+            replay_command(&sc)
+        );
     }
 
     #[test]

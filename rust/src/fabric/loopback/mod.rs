@@ -12,15 +12,16 @@
 //! processing units). "RDMA" verbs are memcpys through those regions;
 //! completions flow back over a shared completion queue.
 //!
-//! With a [`NodeMap`] attached ([`LiveBox::new_placed`]) the engine also
-//! runs the §6 node abstraction live: replicated writes fan out, reads
-//! fail over to the next alive replica on error, and all-replicas-dead
-//! surfaces the disk-fallback signal instead of hanging. With resync on
-//! top ([`LiveBox::new_placed_resync`]) a revived donor re-enters in
-//! `Resyncing` state and the engine replays the writes it missed — as
-//! real memcpys from an alive peer, through the same pipeline — before
-//! it serves reads again, so the bytes a revived node returns are never
-//! stale.
+//! The client is built from an [`EngineSpec`] ([`LiveBox::build`]), the
+//! same construction surface the sim and chaos backends use. With
+//! replication in the spec (`.replicated(r)`) the engine also runs the
+//! §6 node abstraction live: replicated writes fan out, reads fail over
+//! to the next alive replica on error, and all-replicas-dead surfaces
+//! the disk-fallback signal instead of hanging. With resync on top
+//! (`.resync(chunk)`) a revived donor re-enters in `Resyncing` state and
+//! the engine replays the writes it missed — as real memcpys from an
+//! alive peer, through the same pipeline — before it serves reads again,
+//! so the bytes a revived node returns are never stale.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -29,20 +30,17 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batching::{BatchLimits, BatchMode};
-use crate::coordinator::engine::{EngineCosts, IoEngine, SHARD_REGION_SHIFT};
-use crate::coordinator::node::{NodeMap, NodeState};
+use crate::coordinator::engine::{DrainOut, IoEngine, SHARD_REGION_SHIFT};
+use crate::coordinator::node::NodeState;
 use crate::coordinator::polling::{PollStep, PollerFsm, PollingMode};
-use crate::fabric::{AppIo, Dir, NodeId, OpKind, QpId, Wc, WcStatus, WorkRequest};
+use crate::coordinator::spec::EngineSpec;
+use crate::fabric::{
+    AppIo, Dir, NodeId, OpKind, QpId, TenantId, Wc, WcStatus, WorkRequest, DEFAULT_TENANT,
+};
 use crate::paging::DiskSpans;
 use crate::util::fxhash::FxHashMap;
 
 const REGION_BYTES: usize = 1 << SHARD_REGION_SHIFT;
-
-/// Chunk size of resync repair copies (well under every window the
-/// examples/tests configure, so repair traffic cannot monopolize — or
-/// overshoot — the admission window).
-const RESYNC_CHUNK_BYTES: u64 = 64 * 1024;
 
 enum QpReq {
     Work {
@@ -95,6 +93,7 @@ fn qp_worker(
                     op: wr.op,
                     len: wr.len,
                     app_ios: wr.app_ios,
+                    tenant: wr.tenant,
                     status: WcStatus::Error,
                 },
                 data: None,
@@ -121,6 +120,7 @@ fn qp_worker(
                 op: wr.op,
                 len: wr.len,
                 app_ios: wr.app_ios,
+                tenant: wr.tenant,
                 status: WcStatus::Success,
             },
             data,
@@ -277,6 +277,10 @@ struct Inner {
     disk: DiskSpans,
     /// app io id -> retired outcome, awaiting pickup by the submitter.
     done: HashMap<u64, DoneIo>,
+    /// Reused drain buffer: every pump fills this through
+    /// [`IoEngine::drain_all_into`], keeping the post path allocation-free
+    /// in steady state.
+    drain: DrainOut,
     next_id: u64,
     stats: LiveStats,
 }
@@ -309,83 +313,24 @@ pub struct LiveBox {
 }
 
 impl LiveBox {
-    /// Direct-routing client: callers name the destination node (the
-    /// quickstart / paged-store usage).
-    pub fn new(fabric: LoopbackFabric, batch: BatchMode, window_bytes: Option<u64>) -> Arc<Self> {
-        Self::build(fabric, batch, window_bytes, None, false, false)
-    }
-
-    /// Placement-routing client: the engine fans writes out to `replicas`
-    /// alive replicas, fails reads over on error, and surfaces the
-    /// disk-fallback signal when every replica of a block is dead.
-    pub fn new_placed(
-        fabric: LoopbackFabric,
-        batch: BatchMode,
-        window_bytes: Option<u64>,
-        replicas: usize,
-    ) -> Arc<Self> {
-        let map = NodeMap::new(fabric.nodes(), replicas, REGION_BYTES as u64);
-        Self::build(fabric, batch, window_bytes, Some(map), false, false)
-    }
-
-    /// Placement-routing client with the epoch-based resync protocol: a
-    /// node revived with [`LiveBox::revive_node`] is repaired (missed
-    /// writes replayed from an alive peer as real memcpys) before it
-    /// returns to routing. See [`LiveBox::wait_node_alive`].
-    pub fn new_placed_resync(
-        fabric: LoopbackFabric,
-        batch: BatchMode,
-        window_bytes: Option<u64>,
-        replicas: usize,
-    ) -> Arc<Self> {
-        let map = NodeMap::new(fabric.nodes(), replicas, REGION_BYTES as u64);
-        Self::build(fabric, batch, window_bytes, Some(map), true, false)
-    }
-
-    /// [`LiveBox::new_placed_resync`] plus the **epoch-vector donor
-    /// election**: repair donors are elected by comparing applied epoch
-    /// vectors against the client-issued floor, so mutually-diverged
-    /// replicas repair each other with real memcpys, and ranges with no
-    /// live copy at all are surrendered to the disk path — tracked in a
-    /// client-side disk-span set that [`LiveBox::read_placed`] consults
-    /// (it returns `None`, the caller owns the disk read) until a later
-    /// write lands remotely.
-    pub fn new_placed_elect(
-        fabric: LoopbackFabric,
-        batch: BatchMode,
-        window_bytes: Option<u64>,
-        replicas: usize,
-    ) -> Arc<Self> {
-        let map = NodeMap::new(fabric.nodes(), replicas, REGION_BYTES as u64);
-        Self::build(fabric, batch, window_bytes, Some(map), true, true)
-    }
-
-    fn build(
-        fabric: LoopbackFabric,
-        batch: BatchMode,
-        window_bytes: Option<u64>,
-        map: Option<NodeMap>,
-        resync: bool,
-        election: bool,
-    ) -> Arc<Self> {
-        let cq_rx = fabric.cq_rx.lock().unwrap().take().expect("fresh fabric");
-        let mut core = IoEngine::new(
-            batch,
-            BatchLimits::default(),
+    /// Build the live client from an [`EngineSpec`] — the single
+    /// construction surface shared with the sim and chaos backends.
+    /// Replication (`.replicated(r)`), resync (`.resync(chunk)`),
+    /// donor election (`.election()`) and QoS tenants (`.tenants(w)`)
+    /// are all spec fields; the spec's topology must match the fabric's.
+    pub fn build(fabric: LoopbackFabric, spec: &EngineSpec) -> Arc<Self> {
+        assert_eq!(
+            spec.nodes,
             fabric.nodes(),
-            fabric.qps_per_node(),
-            window_bytes,
-            EngineCosts::free(),
+            "spec.nodes must match the loopback fabric topology"
         );
-        if let Some(m) = map {
-            core = core.with_placement(m);
-            if resync {
-                core.enable_resync(RESYNC_CHUNK_BYTES);
-            }
-            if election {
-                core.enable_donor_election();
-            }
-        }
+        assert_eq!(
+            spec.qps_per_node,
+            fabric.qps_per_node(),
+            "spec.qps_per_node must match the loopback fabric topology"
+        );
+        let cq_rx = fabric.cq_rx.lock().unwrap().take().expect("fresh fabric");
+        let core = IoEngine::build(spec);
         Arc::new(Self {
             fabric,
             inner: Mutex::new(Inner {
@@ -397,6 +342,7 @@ impl LiveBox {
                 write_spans: HashMap::new(),
                 disk: DiskSpans::default(),
                 done: HashMap::new(),
+                drain: DrainOut::default(),
                 next_id: 1,
                 stats: LiveStats::default(),
             }),
@@ -413,6 +359,12 @@ impl LiveBox {
         self.inner.lock().unwrap().stats.clone()
     }
 
+    /// Per-tenant QoS counters of the embedded engine (one row per
+    /// registered tenant; a spec without `.tenants(..)` has exactly one).
+    pub fn tenant_stats(&self) -> Vec<crate::metrics::TenantStats> {
+        self.inner.lock().unwrap().core.tenant_stats()
+    }
+
     pub fn nodes(&self) -> usize {
         self.fabric.nodes()
     }
@@ -425,8 +377,8 @@ impl LiveBox {
         g.core.on_node_down(node);
     }
 
-    /// Bring a node back. On a resync-enabled client
-    /// ([`LiveBox::new_placed_resync`]) it re-enters in `Resyncing`
+    /// Bring a node back. On a resync-enabled client (a spec with
+    /// `.resync(chunk)`) it re-enters in `Resyncing`
     /// state — excluded from routing while the engine replays the writes
     /// it missed from an alive peer — and only then returns to `Alive`
     /// ([`LiveBox::wait_node_alive`] blocks on that). Without resync it
@@ -472,7 +424,16 @@ impl LiveBox {
     /// data was stored remotely; `false` if the node had been failed
     /// (direct routing has no failover — the bytes were not written).
     pub fn write(&self, node: NodeId, addr: u64, data: &[u8]) -> bool {
-        let id = self.submit_write(Some(node), addr, data);
+        self.write_t(DEFAULT_TENANT, node, addr, data)
+    }
+
+    /// [`LiveBox::write`] billed to a specific QoS tenant: the bytes
+    /// occupy that tenant's admission sub-window and drain through its
+    /// weighted merge-queue lane. The tenant must have been registered
+    /// via [`EngineSpec::tenants`] on the spec this client was built
+    /// from.
+    pub fn write_t(&self, tenant: TenantId, node: NodeId, addr: u64, data: &[u8]) -> bool {
+        let id = self.submit_write(tenant, Some(node), addr, data);
         !self.wait_done(id).disk_fallback
     }
 
@@ -482,7 +443,13 @@ impl LiveBox {
     /// Panics if `node` has been failed with [`LiveBox::fail_node`] —
     /// direct routing has no failover; use the placed API for that.
     pub fn read(&self, node: NodeId, addr: u64, len: u64) -> Vec<u8> {
-        let id = self.submit_read(Some(node), addr, len);
+        self.read_t(DEFAULT_TENANT, node, addr, len)
+    }
+
+    /// [`LiveBox::read`] billed to a specific QoS tenant (see
+    /// [`LiveBox::write_t`]).
+    pub fn read_t(&self, tenant: TenantId, node: NodeId, addr: u64, len: u64) -> Vec<u8> {
+        let id = self.submit_read(tenant, Some(node), addr, len);
         self.wait_done(id)
             .data
             .expect("direct read failed (node dead?) — placed routing has failover")
@@ -492,10 +459,10 @@ impl LiveBox {
 
     /// Replicated write via the node map. Returns `false` when every
     /// replica was dead and the disk-fallback signal fired instead.
-    /// Requires a client built with [`LiveBox::new_placed`].
+    /// Requires a client built from a replicated [`EngineSpec`].
     pub fn write_placed(&self, addr: u64, data: &[u8]) -> bool {
         self.assert_placed();
-        let id = self.submit_write(None, addr, data);
+        let id = self.submit_write(DEFAULT_TENANT, None, addr, data);
         !self.wait_done(id).disk_fallback
     }
 
@@ -504,7 +471,7 @@ impl LiveBox {
     /// leg is dead, or the span overlaps a range whose authoritative
     /// copy is the local disk (all-replicas-dead write legs, election
     /// disk surrenders) — remote bytes there would be stale.
-    /// Requires a client built with [`LiveBox::new_placed`].
+    /// Requires a client built from a replicated [`EngineSpec`].
     pub fn read_placed(&self, addr: u64, len: u64) -> Option<Vec<u8>> {
         self.assert_placed();
         {
@@ -514,7 +481,7 @@ impl LiveBox {
                 return None;
             }
         }
-        let id = self.submit_read(None, addr, len);
+        let id = self.submit_read(DEFAULT_TENANT, None, addr, len);
         let d = self.wait_done(id);
         if d.disk_fallback {
             None
@@ -530,11 +497,11 @@ impl LiveBox {
     fn assert_placed(&self) {
         assert!(
             self.inner.lock().unwrap().core.node_map().is_some(),
-            "placed API requires a client built with LiveBox::new_placed"
+            "placed API requires a spec with replication (EngineSpec::replicated)"
         );
     }
 
-    fn submit_write(&self, node: Option<NodeId>, addr: u64, data: &[u8]) -> u64 {
+    fn submit_write(&self, tenant: TenantId, node: Option<NodeId>, addr: u64, data: &[u8]) -> u64 {
         // the one unavoidable full copy happens outside the pipeline
         // lock; per-leg slices are cut from it while holding it
         let mut payload = data.to_vec();
@@ -547,6 +514,7 @@ impl LiveBox {
             addr,
             len: data.len() as u64,
             thread: 0,
+            tenant,
             t_submit: 0,
         };
         let sub = g.core.submit(io);
@@ -589,7 +557,7 @@ impl LiveBox {
         id
     }
 
-    fn submit_read(&self, node: Option<NodeId>, addr: u64, len: u64) -> u64 {
+    fn submit_read(&self, tenant: TenantId, node: Option<NodeId>, addr: u64, len: u64) -> u64 {
         let mut g = self.inner.lock().unwrap();
         let id = g.fresh_id();
         let io = AppIo {
@@ -599,6 +567,7 @@ impl LiveBox {
             addr,
             len,
             thread: 0,
+            tenant,
             t_submit: 0,
         };
         let sub = g.core.submit(io);
@@ -637,15 +606,23 @@ impl LiveBox {
         for (_, a, l) in g.core.take_disk_surrenders() {
             g.disk.mark(a, l, surrender_stamp);
         }
-        let out = g.core.drain_all(0);
-        if out.admission_blocked > 0 {
-            g.stats.admission_waits += out.admission_blocked;
+        let Inner {
+            core,
+            drain,
+            payloads,
+            stats,
+            ..
+        } = g;
+        core.drain_all_into(0, drain);
+        if drain.admission_blocked > 0 {
+            stats.admission_waits += drain.admission_blocked;
         }
-        g.stats.merged_ios += out.merged_ios;
-        for (chain, wrs) in out.into_chains() {
-            g.stats.posts += 1;
-            for wr in wrs {
-                g.stats.wqes += 1;
+        stats.merged_ios += drain.merged_ios;
+        let mut wrs = drain.wrs.drain(..);
+        for chain in drain.chains.drain(..) {
+            stats.posts += 1;
+            for wr in wrs.by_ref().take(chain.end - chain.start) {
+                stats.wqes += 1;
                 let payload = match wr.op {
                     OpKind::Write | OpKind::Send => {
                         // merged WRs carry app_ios in remote-address order
@@ -653,7 +630,7 @@ impl LiveBox {
                         // reconstructs the contiguous payload
                         let mut buf = Vec::with_capacity(wr.len as usize);
                         for sid in &wr.app_ios {
-                            buf.extend_from_slice(&g.payloads.remove(sid).expect("payload"));
+                            buf.extend_from_slice(&payloads.remove(sid).expect("payload"));
                         }
                         Some(buf)
                     }
@@ -835,11 +812,13 @@ impl LiveBox {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::batching::BatchMode;
+    use crate::coordinator::spec::DEFAULT_RESYNC_CHUNK;
 
     #[test]
     fn write_read_roundtrip() {
         let fab = LoopbackFabric::start(2, 1 << 20);
-        let lb = LiveBox::new(fab, BatchMode::Hybrid, Some(1 << 20));
+        let lb = LiveBox::build(fab, &EngineSpec::new(2).window(Some(1 << 20)));
         let data: Vec<u8> = (0..4096u32).map(|x| (x % 251) as u8).collect();
         lb.write(1, 8192, &data);
         let back = lb.read(1, 8192, 4096);
@@ -852,7 +831,7 @@ mod tests {
     #[test]
     fn distinct_nodes_are_isolated() {
         let fab = LoopbackFabric::start(2, 1 << 20);
-        let lb = LiveBox::new(fab, BatchMode::Hybrid, None);
+        let lb = LiveBox::build(fab, &EngineSpec::new(2));
         lb.write(0, 0, &[1u8; 64]);
         lb.write(1, 0, &[2u8; 64]);
         assert_eq!(lb.read(0, 0, 64), vec![1u8; 64]);
@@ -862,7 +841,7 @@ mod tests {
     #[test]
     fn concurrent_writers_merge_adjacent_pages() {
         let fab = LoopbackFabric::start(1, 1 << 22);
-        let lb = LiveBox::new(fab, BatchMode::Hybrid, None);
+        let lb = LiveBox::build(fab, &EngineSpec::new(1));
         let lb2 = lb.clone();
         let mut handles = Vec::new();
         for t in 0..8u64 {
@@ -893,7 +872,7 @@ mod tests {
     #[test]
     fn sharded_channels_preserve_contents() {
         let fab = LoopbackFabric::start_sharded(2, 16 << 20, 4);
-        let lb = LiveBox::new(fab, BatchMode::Hybrid, Some(7 << 20));
+        let lb = LiveBox::build(fab, &EngineSpec::new(2).qps(4).window(Some(7 << 20)));
         let mut handles = Vec::new();
         for t in 0..6u64 {
             let lb = lb.clone();
@@ -924,7 +903,10 @@ mod tests {
     #[test]
     fn admission_window_counts_waits_under_pressure() {
         let fab = LoopbackFabric::start(1, 1 << 22);
-        let lb = LiveBox::new(fab, BatchMode::Single, Some(4096));
+        let lb = LiveBox::build(
+            fab,
+            &EngineSpec::new(1).batch(BatchMode::Single).window(Some(4096)),
+        );
         for i in 0..16u64 {
             lb.write(0, i * 4096, &[7u8; 4096]);
         }
@@ -935,7 +917,10 @@ mod tests {
     #[test]
     fn placed_write_replicates_and_read_fails_over() {
         let fab = LoopbackFabric::start_sharded(3, 1 << 22, 2);
-        let lb = LiveBox::new_placed(fab, BatchMode::Hybrid, Some(7 << 20), 2);
+        let lb = LiveBox::build(
+            fab,
+            &EngineSpec::new(3).qps(2).window(Some(7 << 20)).replicated(2),
+        );
         for page in 0..32u64 {
             assert!(lb.write_placed(page * 4096, &vec![(page + 1) as u8; 4096]));
         }
@@ -957,7 +942,10 @@ mod tests {
     #[test]
     fn revived_node_resyncs_real_bytes_before_serving() {
         let fab = LoopbackFabric::start(2, 1 << 20);
-        let lb = LiveBox::new_placed_resync(fab, BatchMode::Hybrid, None, 2);
+        let lb = LiveBox::build(
+            fab,
+            &EngineSpec::new(2).replicated(2).resync(DEFAULT_RESYNC_CHUNK),
+        );
         let v1: Vec<u8> = (0..4096u32).map(|x| (x % 191) as u8).collect();
         for page in 0..8u64 {
             assert!(lb.write_placed(page * 4096, &v1));
@@ -990,7 +978,7 @@ mod tests {
     #[test]
     fn split_requests_roundtrip_real_bytes_across_stripes() {
         let fab = LoopbackFabric::start_sharded(3, 4 << 20, 2);
-        let lb = LiveBox::new_placed(fab, BatchMode::Hybrid, None, 2);
+        let lb = LiveBox::build(fab, &EngineSpec::new(3).qps(2).replicated(2));
         let addr = (1u64 << SHARD_REGION_SHIFT) - 8192;
         let data: Vec<u8> = (0..4 * 4096u32).map(|x| (x % 241) as u8 + 1).collect();
         assert!(lb.write_placed(addr, &data), "split write lands remotely");
@@ -1012,7 +1000,13 @@ mod tests {
     #[test]
     fn all_peers_down_recovers_via_disk_path_live() {
         let fab = LoopbackFabric::start(2, 1 << 20);
-        let lb = LiveBox::new_placed_elect(fab, BatchMode::Hybrid, None, 2);
+        let lb = LiveBox::build(
+            fab,
+            &EngineSpec::new(2)
+                .replicated(2)
+                .resync(DEFAULT_RESYNC_CHUNK)
+                .election(),
+        );
         let v1: Vec<u8> = vec![0x11; 4096];
         for page in 0..4u64 {
             assert!(lb.write_placed(page * 4096, &v1));
@@ -1046,12 +1040,32 @@ mod tests {
     #[test]
     fn placed_all_dead_surfaces_disk_fallback() {
         let fab = LoopbackFabric::start(2, 1 << 20);
-        let lb = LiveBox::new_placed(fab, BatchMode::Hybrid, None, 2);
+        let lb = LiveBox::build(fab, &EngineSpec::new(2).replicated(2));
         assert!(lb.write_placed(0, &[9u8; 4096]));
         lb.fail_node(0);
         lb.fail_node(1);
         assert!(!lb.write_placed(4096, &[9u8; 4096]), "disk fallback signal");
         assert!(lb.read_placed(0, 4096).is_none());
         assert!(lb.stats().disk_fallbacks >= 2);
+    }
+
+    /// A QoS-enabled spec drives the live pipeline unchanged: the client's
+    /// own traffic bills to tenant 0, the idle tenant stays at zero, and
+    /// the exported rows cover every registered tenant.
+    #[test]
+    fn qos_spec_exports_tenant_rows() {
+        let fab = LoopbackFabric::start(1, 1 << 20);
+        let lb = LiveBox::build(fab, &EngineSpec::new(1).tenants(&[3, 1]));
+        lb.write(0, 0, &[5u8; 4096]);
+        assert_eq!(lb.read(0, 0, 4096), vec![5u8; 4096]);
+        let ts = lb.tenant_stats();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].weight, 3);
+        assert_eq!(ts[0].posted_bytes, 2 * 4096);
+        assert_eq!(ts[0].retired_bytes, 2 * 4096);
+        assert_eq!(ts[0].drained_bytes, 2 * 4096);
+        assert_eq!(ts[0].window_occupancy, 0);
+        assert_eq!(ts[1].posted_bytes, 0);
+        assert_eq!(ts[1].drained_bytes, 0);
     }
 }

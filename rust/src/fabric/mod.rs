@@ -32,6 +32,13 @@ pub type QpId = usize;
 pub type CqId = usize;
 /// Memory region key.
 pub type MrKey = u64;
+/// Tenant index for multi-tenant QoS: a dense id into the engine's
+/// per-tenant weight/ledger tables (RDMAvisor-style RDMA-as-a-service —
+/// many workloads multiplexed over shared QPs). Single-tenant setups use
+/// [`DEFAULT_TENANT`] throughout and behave exactly as before.
+pub type TenantId = usize;
+/// The tenant every I/O belongs to unless the submitter says otherwise.
+pub const DEFAULT_TENANT: TenantId = 0;
 
 /// RDMA verb kind. One-sided WRITE/READ move payload without remote CPU;
 /// two-sided SEND requires a posted RECV and remote CPU handling (the
@@ -81,6 +88,8 @@ pub struct AppIo {
     pub thread: usize,
     /// Enqueue timestamp (virtual ns in sim, monotonic ns live).
     pub t_submit: u64,
+    /// Owning tenant (admission sub-window + drain lane).
+    pub tenant: TenantId,
 }
 
 /// A work request as posted to a QP: possibly the merge of several AppIos
@@ -98,6 +107,9 @@ pub struct WorkRequest {
     /// the default SGE merge width, so building a WR does not allocate.
     pub app_ios: IdList,
     pub signaled: bool,
+    /// Owning tenant — a WR never merges I/Os of different tenants, so
+    /// the whole WR bills to one per-tenant sub-window.
+    pub tenant: TenantId,
 }
 
 /// Work completion delivered by a CQ.
@@ -109,6 +121,9 @@ pub struct Wc {
     pub len: u64,
     pub app_ios: IdList,
     pub status: WcStatus,
+    /// Tenant of the completed WR (copied from the WR by the fabric; the
+    /// engine's posted-WR ledger is authoritative for accounting).
+    pub tenant: TenantId,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -160,6 +175,7 @@ mod tests {
             num_sge: 1,
             app_ios: ios.into(),
             signaled: true,
+            tenant: DEFAULT_TENANT,
         };
         let c = Chain {
             qp: 0,

@@ -454,6 +454,7 @@ mod tests {
                 len: 4096,
                 thread: 0,
                 t_submit: 0,
+                tenant: 0,
             });
         }
         let out = core.drain_all(0);

@@ -29,7 +29,7 @@ use crate::config::FabricConfig;
 use crate::coordinator::channel::ChannelMap;
 use crate::coordinator::polling::{PollStep, PollerFsm, PollingMode};
 use crate::coordinator::StackConfig;
-use crate::fabric::{AppIo, CqId, Dir, NodeId, QpId, Wc, WcStatus, WorkRequest};
+use crate::fabric::{AppIo, CqId, Dir, NodeId, QpId, Wc, WcStatus, WorkRequest, DEFAULT_TENANT};
 use crate::util::hist::Hist;
 use lru::LruSet;
 use trace::Trace;
@@ -402,6 +402,7 @@ impl Sim {
             len,
             thread,
             t_submit: at,
+            tenant: DEFAULT_TENANT,
         };
         self.inflight_ios.insert(id, io);
         let mut eng = self.engine.take().expect("engine attached");
@@ -634,6 +635,7 @@ impl Sim {
                 len,
                 app_ios: wqe.wr.app_ios,
                 status: WcStatus::Success,
+                tenant: wqe.wr.tenant,
             };
             let cq = self.channels.cq_of(wqe.qp);
             self.schedule(complete_t, Ev::CqeArrive { cq, wc });

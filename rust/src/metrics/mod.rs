@@ -82,6 +82,53 @@ impl ShapeCheck {
     }
 }
 
+/// Per-tenant QoS counters exported by `IoEngine::stats()`-adjacent
+/// surfaces (`IoEngine::tenant_stats`) and printed by the CLI: one row
+/// per registered tenant, aggregating the regulator's admission ledger
+/// with the merge queues' weighted-drain lane counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Dense tenant index (`crate::fabric::TenantId`).
+    pub tenant: usize,
+    /// Configured drain/admission weight.
+    pub weight: u64,
+    /// Bytes posted to the fabric on this tenant's behalf.
+    pub posted_bytes: u64,
+    /// Bytes whose completion released the tenant's sub-window.
+    pub retired_bytes: u64,
+    /// Bytes currently occupying the tenant's sub-window.
+    pub window_occupancy: u64,
+    /// High-water mark of `window_occupancy`.
+    pub peak_window_occupancy: u64,
+    /// Posts admitted while the tenant was over its proportional share —
+    /// quota borrowed work-conservingly from idle peers.
+    pub borrow_events: u64,
+    /// Bytes drained out of this tenant's merge-queue lanes (read +
+    /// write) by the weighted-deficit-round-robin drain.
+    pub drained_bytes: u64,
+    /// Residual DRR deficit carried by the tenant's lanes (read + write)
+    /// — nonzero when the tenant had queued work a closed window or a
+    /// spent budget left behind.
+    pub drain_deficit: u64,
+}
+
+impl TenantStats {
+    /// Table row for the CLI (`id weight posted retired in-window
+    /// borrows drained deficit`).
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.tenant.to_string(),
+            self.weight.to_string(),
+            self.posted_bytes.to_string(),
+            self.retired_bytes.to_string(),
+            self.window_occupancy.to_string(),
+            self.borrow_events.to_string(),
+            self.drained_bytes.to_string(),
+            self.drain_deficit.to_string(),
+        ]
+    }
+}
+
 /// Summary speedup across checks (geometric mean of measured ratios).
 pub fn summary_speedup(checks: &[ShapeCheck]) -> f64 {
     geomean(

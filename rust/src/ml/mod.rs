@@ -160,13 +160,13 @@ pub fn train_paged_logreg(
     steps: usize,
     lr: f32,
 ) -> Result<TrainReport> {
-    use crate::coordinator::batching::BatchMode;
+    use crate::coordinator::EngineSpec;
     use crate::fabric::loopback::LoopbackFabric;
     let data = LogregData::new(rows, batch, features);
     let total_pages = data.total_pages();
     let per_node = (total_pages as usize / nodes + 2) * PAGE;
     let fabric = LoopbackFabric::start(nodes, per_node);
-    let lb = LiveBox::new(fabric, BatchMode::Hybrid, Some(7 << 20));
+    let lb = LiveBox::build(fabric, &EngineSpec::new(nodes).window(Some(7 << 20)));
     let resident = ((total_pages as f64 * resident_frac) as usize).max(8);
     let mut store = PagedStore::new(lb.clone(), total_pages, resident);
 
@@ -237,13 +237,13 @@ pub fn train_paged_logreg(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::batching::BatchMode;
+    use crate::coordinator::EngineSpec;
     use crate::fabric::loopback::LoopbackFabric;
 
     #[test]
     fn paged_store_roundtrips_through_remote_memory() {
         let fabric = LoopbackFabric::start(2, 1 << 20);
-        let lb = LiveBox::new(fabric, BatchMode::Hybrid, None);
+        let lb = LiveBox::build(fabric, &EngineSpec::new(2));
         let mut st = PagedStore::new(lb, 16, 4);
         for p in 0..16u64 {
             st.populate(p, &vec![(p % 251) as u8; PAGE]);
@@ -262,7 +262,7 @@ mod tests {
     #[test]
     fn hot_page_stays_resident() {
         let fabric = LoopbackFabric::start(1, 1 << 20);
-        let lb = LiveBox::new(fabric, BatchMode::Hybrid, None);
+        let lb = LiveBox::build(fabric, &EngineSpec::new(1));
         let mut st = PagedStore::new(lb, 8, 4);
         for p in 0..8u64 {
             st.populate(p, &[1u8; PAGE]);

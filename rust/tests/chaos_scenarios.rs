@@ -16,11 +16,26 @@
 //! ```
 
 use rdmabox::coordinator::node::NodeState;
+use rdmabox::coordinator::EngineSpec;
 use rdmabox::fabric::chaos::{
     replay_command, run_scenario, ChaosFabric, ChaosProfile, FaultPlan, Scenario, ScenarioReport,
-    STRIPE_BYTES,
+    RESYNC_CHUNK_BYTES, STRIPE_BYTES,
 };
 use rdmabox::fabric::Dir;
+
+/// The 2-node × 1-QP × 2-replica spec the direct-fabric regressions
+/// drive, with the resync pipeline (and optionally the donor election)
+/// enabled on top of the plain replicated baseline.
+fn paired_spec(resync: bool, election: bool) -> EngineSpec {
+    let mut spec = EngineSpec::new(2).replicated(2);
+    if resync || election {
+        spec = spec.resync(RESYNC_CHUNK_BYTES);
+    }
+    if election {
+        spec = spec.election();
+    }
+    spec
+}
 
 /// Default base of the randomized sweep when CI does not pin one.
 const DEFAULT_SWEEP_BASE: u64 = 0x52D3_A201;
@@ -44,13 +59,15 @@ fn env_u64(name: &str) -> Option<u64> {
     }
 }
 
-/// Which randomized mix the sweep draws (`CHAOS_PROFILE=election` is what
-/// the nightly `chaos-extended` workflow sets; replay commands carry it).
+/// Which randomized mix the sweep draws (`CHAOS_PROFILE=election` and
+/// `CHAOS_PROFILE=qos` are what the nightly `chaos-extended` workflow
+/// sets; replay commands carry it).
 fn env_profile() -> ChaosProfile {
     match std::env::var("CHAOS_PROFILE").ok().as_deref() {
         Some("election") => ChaosProfile::ElectionHeavy,
+        Some("qos") => ChaosProfile::Qos,
         Some("") | None => ChaosProfile::Standard,
-        Some(other) => panic!("CHAOS_PROFILE must be `election` or unset, got `{other}`"),
+        Some(other) => panic!("CHAOS_PROFILE must be `election`, `qos`, or unset, got `{other}`"),
     }
 }
 
@@ -192,10 +209,7 @@ fn revival_under_load_resyncs_cleanly() {
 fn kill_write_revive_read_needs_resync() {
     let drive = |resync: bool| {
         // 2 nodes × 2 replicas: stripe 0 lives on both, primary node 0
-        let mut fab = ChaosFabric::new(0xEC0, 2, 1, 2, None, FaultPlan::none());
-        if resync {
-            fab = fab.with_resync();
-        }
+        let mut fab = ChaosFabric::build(0xEC0, &paired_spec(resync, false), FaultPlan::none());
         fab.submit(1, Dir::Write, 0, 4096);
         fab.run_to_idle(STEPS).expect("quiescent");
         fab.schedule_node_event(0, false, fab.now() + 1);
@@ -307,12 +321,7 @@ fn admission_churn_no_leak() {
 fn overlapping_resync_elects_freshest() {
     let drive = |seed: u64, election: bool| {
         let plan = FaultPlan::none().with_errors(0.5);
-        let mut fab = ChaosFabric::new(seed, 2, 1, 2, None, plan);
-        fab = if election {
-            fab.with_election()
-        } else {
-            fab.with_resync()
-        };
+        let mut fab = ChaosFabric::build(seed, &paired_spec(true, election), plan);
         // two overlapping writes in flight concurrently (page 1 shared)
         fab.submit(1, Dir::Write, 0, 8192);
         fab.submit(2, Dir::Write, 4096, 8192);
@@ -365,12 +374,7 @@ fn overlapping_resync_elects_freshest() {
 #[test]
 fn all_peers_down_recovers_via_disk() {
     let drive = |election: bool| {
-        let mut fab = ChaosFabric::new(0xD15C, 2, 1, 2, None, FaultPlan::none());
-        fab = if election {
-            fab.with_election()
-        } else {
-            fab.with_resync()
-        };
+        let mut fab = ChaosFabric::build(0xD15C, &paired_spec(true, election), FaultPlan::none());
         fab.submit(1, Dir::Write, 0, 4096);
         fab.run_to_idle(STEPS).expect("quiescent");
         fab.schedule_node_event(0, false, fab.now() + 1);
@@ -415,10 +419,8 @@ fn all_peers_down_recovers_via_disk() {
 #[test]
 fn split_read_straddling_repair_accounts_once() {
     let drive = |resync: bool| {
-        let mut fab = ChaosFabric::new(0x51EC7, 2, 1, 2, None, FaultPlan::none());
-        if resync {
-            fab = fab.with_resync();
-        }
+        let mut fab =
+            ChaosFabric::build(0x51EC7, &paired_spec(resync, false), FaultPlan::none());
         let addr = STRIPE_BYTES - 4096; // one page each side of the boundary
         fab.submit(1, Dir::Write, addr, 8192);
         fab.run_to_idle(STEPS).expect("quiescent");
@@ -446,6 +448,29 @@ fn split_read_straddling_repair_accounts_once() {
     assert_eq!(resynced.stats.stale_reads, 0, "{:?}", resynced.stats);
     assert!(resynced.engine().stats.resyncs_completed >= 1);
     assert_eq!(resynced.engine().regulator().in_flight(), 0);
+}
+
+/// The QoS sweep mix end-to-end: a hog-vs-victim randomized scenario
+/// (two weighted tenants, a guaranteed latency storm and admission churn
+/// in the plan) passes every runner invariant — including the per-tenant
+/// quiescence checks (each sub-window fully released, each tenant ledger
+/// balanced) — and both tenants actually moved bytes.
+#[test]
+fn qos_mix_isolates_tenants_under_storms() {
+    let sc = Scenario::randomized_with_profile(0xB05_F00D, ChaosProfile::Qos);
+    assert_eq!(sc.tenant_weights.len(), 2, "hog + victim: {sc:?}");
+    assert!(
+        sc.tenant_weights[0] > sc.tenant_weights[1],
+        "the victim outweighs the hog: {:?}",
+        sc.tenant_weights
+    );
+    let r = check(&sc);
+    assert!(r.stormed_wcs > 0, "the guaranteed storm never bit: {r:?}");
+    assert!(r.window_changes > 0, "the guaranteed churn never fired: {r:?}");
+    assert!(
+        r.tenant_posted_bytes.iter().all(|&b| b > 0),
+        "both tenants must move bytes: {r:?}"
+    );
 }
 
 // ---------------- randomized sweep + replay ----------------

@@ -7,8 +7,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use rdmabox::config::FabricConfig;
-use rdmabox::coordinator::batching::BatchMode;
-use rdmabox::coordinator::StackConfig;
+use rdmabox::coordinator::{EngineSpec, StackConfig};
 use rdmabox::fabric::chaos::{ChaosFabric, FaultPlan};
 use rdmabox::fabric::loopback::{LiveBox, LoopbackFabric};
 use rdmabox::fabric::sim::run_pipeline;
@@ -25,7 +24,7 @@ fn sharded_queues_exactly_once_under_concurrency() {
     let threads = 8u64;
     let per_thread = 96u64;
     let fab = LoopbackFabric::start_sharded(3, 16 << 20, 4);
-    let lb = LiveBox::new(fab, BatchMode::Hybrid, Some(7 << 20));
+    let lb = LiveBox::build(fab, &EngineSpec::new(3).qps(4).window(Some(7 << 20)));
     let returns = Arc::new(AtomicU64::new(0));
     let mut handles = Vec::new();
     for t in 0..threads {

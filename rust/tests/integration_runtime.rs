@@ -4,14 +4,14 @@
 //! `make artifacts` has not run) — default CI still covers the loopback
 //! coordinator and dataset pieces.
 
-use rdmabox::coordinator::batching::BatchMode;
+use rdmabox::coordinator::EngineSpec;
 use rdmabox::fabric::loopback::{LiveBox, LoopbackFabric};
 use rdmabox::ml::{LogregData, PagedStore};
 
 #[test]
 fn live_loopback_under_concurrency_preserves_data() {
     let fabric = LoopbackFabric::start(4, 8 << 20);
-    let lb = LiveBox::new(fabric, BatchMode::Hybrid, Some(1 << 20));
+    let lb = LiveBox::build(fabric, &EngineSpec::new(4).window(Some(1 << 20)));
     let mut handles = Vec::new();
     for t in 0..6u64 {
         let lb = lb.clone();
@@ -37,7 +37,7 @@ fn live_loopback_under_concurrency_preserves_data() {
 #[test]
 fn paged_store_thrashes_correctly_under_tiny_cache() {
     let fabric = LoopbackFabric::start(2, 4 << 20);
-    let lb = LiveBox::new(fabric, BatchMode::Hybrid, None);
+    let lb = LiveBox::build(fabric, &EngineSpec::new(2));
     let mut st = PagedStore::new(lb, 64, 2); // 2-frame cache over 64 pages
     for p in 0..64u64 {
         st.populate(p, &vec![(p + 1) as u8; 4096]);

@@ -1,0 +1,131 @@
+//! Tentpole acceptance for multi-tenant QoS: a hog tenant floods the
+//! shared pipeline while a small weighted victim rides along, under a
+//! cluster-wide latency storm and mid-run admission churn. With the QoS
+//! spec (`.tenants([3, 1])`) the victim's traffic is admitted through
+//! its own sub-window and drained through its weighted DRR lane, so its
+//! last I/O retires far earlier in virtual time than under the
+//! single-tenant FIFO baseline — while the aggregate run stays
+//! work-conserving (total completion time within 10% of no-QoS).
+
+use rdmabox::coordinator::EngineSpec;
+use rdmabox::fabric::chaos::{ChaosFabric, FaultPlan};
+use rdmabox::fabric::{Dir, TenantId};
+
+const PAGE: u64 = 4096;
+const HOG_PAGES: u64 = 48;
+const VICTIM_PAGES: u64 = 8;
+/// Livelock guard on the event loop.
+const STEPS: u64 = 4_000_000;
+const SEED: u64 = 0x905_11;
+
+/// The adversarial schedule: a storm long enough to cover the whole run
+/// (every WC delayed equally, so the FIFO/DRR comparison is about drain
+/// *order*, not storm luck) plus two admission-window swaps with the
+/// backlog in flight.
+fn plan() -> FaultPlan {
+    FaultPlan::none()
+        .latency_storm(1, 10_000_000, 20_000)
+        .admission_window(100_000, Some(4 * PAGE))
+        .admission_window(300_000, Some(8 * PAGE))
+}
+
+struct Run {
+    fab: ChaosFabric,
+    /// Virtual time when the victim's last I/O retired.
+    victim_done_ns: u64,
+    /// Virtual time when the last I/O of the whole run retired.
+    all_done_ns: u64,
+}
+
+/// Flood then ride: the hog submits `HOG_PAGES` writes first (they own
+/// the FIFO queue head), the victim submits `VICTIM_PAGES` writes into
+/// the same stripe region behind them. Both runs use the identical
+/// schedule; only the spec (and the tenant billing) differs.
+fn drive(spec: &EngineSpec, hog_tenant: TenantId) -> Run {
+    let mut fab = ChaosFabric::build(SEED, spec, plan());
+    let mut id = 1u64;
+    for i in 0..HOG_PAGES {
+        fab.submit_t(id, Dir::Write, (1 << 20) + i * PAGE, PAGE, hog_tenant);
+        id += 1;
+    }
+    let victim_base = id;
+    for i in 0..VICTIM_PAGES {
+        fab.submit_t(id, Dir::Write, i * PAGE, PAGE, 0);
+        id += 1;
+    }
+    let mut victim_done_ns = 0;
+    let mut all_done_ns = 0;
+    let mut retired = 0u64;
+    let mut guard = 0u64;
+    while let Some(batch) = fab.step() {
+        guard += 1;
+        assert!(guard < STEPS, "chaos run livelocked");
+        for r in &batch {
+            retired += 1;
+            assert!(!r.disk_fallback, "healthy cluster: no disk degradation");
+            if (victim_base..victim_base + VICTIM_PAGES).contains(&r.id) {
+                victim_done_ns = victim_done_ns.max(fab.now());
+            }
+            all_done_ns = all_done_ns.max(fab.now());
+        }
+    }
+    assert_eq!(retired, HOG_PAGES + VICTIM_PAGES, "every I/O retires");
+    assert_eq!(fab.stats.stale_reads, 0, "{:?}", fab.stats);
+    assert!(fab.stats.stormed_wcs > 0, "the storm never bit: {:?}", fab.stats);
+    assert_eq!(fab.stats.window_changes, 2, "both churns executed");
+    Run {
+        fab,
+        victim_done_ns,
+        all_done_ns,
+    }
+}
+
+#[test]
+fn weighted_victim_cuts_through_the_hog() {
+    // baseline: one FIFO lane, everything billed to tenant 0
+    let fifo = drive(&EngineSpec::new(2).replicated(2).window(Some(8 * PAGE)), 0);
+    // QoS: victim = tenant 0 at weight 3, hog = tenant 1 at weight 1
+    let qos = drive(
+        &EngineSpec::new(2)
+            .replicated(2)
+            .window(Some(8 * PAGE))
+            .tenants(&[3, 1]),
+        1,
+    );
+
+    assert!(
+        qos.victim_done_ns < fifo.victim_done_ns,
+        "the weighted victim must finish earlier than behind the FIFO hog: \
+         qos {} ns vs fifo {} ns",
+        qos.victim_done_ns,
+        fifo.victim_done_ns
+    );
+    // work conservation: prioritizing the victim must not cost the
+    // aggregate run more than 10% in virtual completion time
+    assert!(
+        qos.all_done_ns as f64 <= fifo.all_done_ns as f64 * 1.10,
+        "QoS is not work-conserving: qos {} ns vs fifo {} ns",
+        qos.all_done_ns,
+        fifo.all_done_ns
+    );
+
+    // the per-tenant ledger saw exactly the split we billed
+    let stats = qos.fab.engine().tenant_stats();
+    assert_eq!(stats.len(), 2);
+    assert_eq!(stats[0].weight, 3, "victim lane");
+    assert_eq!(stats[1].weight, 1, "hog lane");
+    assert!(
+        stats[1].posted_bytes > stats[0].posted_bytes,
+        "the hog posted ~6x the victim's bytes: {stats:?}"
+    );
+    assert!(stats[0].posted_bytes > 0 && stats[0].retired_bytes > 0);
+    assert_eq!(
+        stats[0].window_occupancy, 0,
+        "quiescent: the victim's sub-window fully released"
+    );
+    assert_eq!(stats[1].window_occupancy, 0, "hog sub-window fully released");
+    // the FIFO baseline bills everything to the single default lane
+    let base_stats = fifo.fab.engine().tenant_stats();
+    assert_eq!(base_stats.len(), 1);
+    assert!(base_stats[0].posted_bytes >= (HOG_PAGES + VICTIM_PAGES) * PAGE);
+}

@@ -1,0 +1,177 @@
+//! Equivalence regression for the unified [`EngineSpec`] construction
+//! path: the old per-feature constructor chains
+//! (`new_placed`/`with_resync`/`with_donor_election`/…) are gone, so
+//! these tests pin that the one remaining surface reproduces their
+//! behavior exactly — on pinned chaos seeds, the shim and the spec
+//! builder (in any chaining order) yield byte-identical fault/engine
+//! statistics and zero stale reads across the plain, resync, and
+//! election configurations.
+
+use rdmabox::coordinator::EngineSpec;
+use rdmabox::fabric::chaos::{ChaosFabric, FaultPlan, RESYNC_CHUNK_BYTES, STRIPE_BYTES};
+use rdmabox::fabric::Dir;
+
+/// Livelock guard for directly driven fabrics.
+const STEPS: u64 = 4_000_000;
+
+/// A deterministic workload exercising every pipeline feature the spec
+/// can enable: replicated writes across a stripe boundary, a death with
+/// writes landing on the surviving peer, a revival (resync and election
+/// react here; a plain config rejoins immediately), then reads over the
+/// whole range.
+fn drive(mut fab: ChaosFabric) -> ChaosFabric {
+    let addr = STRIPE_BYTES - 8192;
+    for i in 0..8u64 {
+        fab.submit(1 + i, Dir::Write, addr + i * 4096, 4096);
+    }
+    fab.run_to_idle(STEPS).expect("quiescent");
+    fab.schedule_node_event(0, false, fab.now() + 1);
+    fab.run_to_idle(STEPS).expect("quiescent");
+    for i in 0..4u64 {
+        fab.submit(100 + i, Dir::Write, addr + i * 4096, 4096);
+    }
+    fab.run_to_idle(STEPS).expect("quiescent");
+    fab.schedule_node_event(0, true, fab.now() + 1);
+    fab.run_to_idle(STEPS).expect("quiescent");
+    for i in 0..8u64 {
+        fab.submit(200 + i, Dir::Read, addr + i * 4096, 4096);
+    }
+    fab.run_to_idle(STEPS).expect("quiescent");
+    fab
+}
+
+/// Fingerprint of everything a construction-path divergence could move:
+/// the full fault-stat struct plus the engine's cumulative stats.
+fn fingerprint(fab: &ChaosFabric) -> (rdmabox::fabric::chaos::ChaosStats, String) {
+    (fab.stats.clone(), format!("{:?}", fab.engine().stats))
+}
+
+const SEED: u64 = 0xE9_01;
+const PLAN_SEED: u64 = 0xE9_02;
+
+fn faulty() -> FaultPlan {
+    FaultPlan::none()
+        .with_errors(0.2)
+        .with_reordering(0.3, 20_000)
+        .with_duplicates(0.2, 10_000)
+}
+
+/// Like [`drive`] but without the death/revival arc: a plain config
+/// (no resync) revived mid-workload would *correctly* serve stale data
+/// — the staleness assertions below are only meaningful on a
+/// fully-alive cluster or a resync-gated revival.
+fn drive_healthy(mut fab: ChaosFabric) -> ChaosFabric {
+    let addr = STRIPE_BYTES - 8192;
+    for i in 0..8u64 {
+        fab.submit(1 + i, Dir::Write, addr + i * 4096, 4096);
+    }
+    fab.run_to_idle(STEPS).expect("quiescent");
+    for i in 0..4u64 {
+        fab.submit(100 + i, Dir::Write, addr + i * 4096, 4096);
+    }
+    fab.run_to_idle(STEPS).expect("quiescent");
+    for i in 0..8u64 {
+        fab.submit(200 + i, Dir::Read, addr + i * 4096, 4096);
+    }
+    fab.run_to_idle(STEPS).expect("quiescent");
+    fab
+}
+
+/// Plain placed config: the [`ChaosFabric::new`] convenience shim must
+/// stay a faithful alias of [`ChaosFabric::build`] with the equivalent
+/// spec — same seed, same plan, identical stats.
+#[test]
+fn shim_matches_spec_build_plain() {
+    for (seed, plan) in [(SEED, FaultPlan::none()), (PLAN_SEED, faulty())] {
+        let via_shim = drive_healthy(ChaosFabric::new(seed, 2, 1, 2, None, plan.clone()));
+        let via_spec = drive_healthy(ChaosFabric::build(
+            seed,
+            &EngineSpec::new(2).qps(1).window(None).replicated(2),
+            plan,
+        ));
+        assert_eq!(
+            fingerprint(&via_shim),
+            fingerprint(&via_spec),
+            "seed {seed:#x}: the shim diverged from the spec path"
+        );
+        assert_eq!(via_shim.stats.stale_reads, 0, "seed {seed:#x}");
+    }
+}
+
+/// Resync config: builder chaining order must not matter — the spec is a
+/// plain value, so `.replicated(2).resync(..)` and `.resync(..)` applied
+/// before the replication are the same engine.
+#[test]
+fn spec_builder_order_is_immaterial_resync() {
+    let a = drive(ChaosFabric::build(
+        SEED,
+        &EngineSpec::new(2).replicated(2).resync(RESYNC_CHUNK_BYTES),
+        faulty(),
+    ));
+    let b = drive(ChaosFabric::build(
+        SEED,
+        &EngineSpec::new(2).resync(RESYNC_CHUNK_BYTES).replicated(2),
+        faulty(),
+    ));
+    assert_eq!(fingerprint(&a), fingerprint(&b), "chaining order leaked");
+    assert_eq!(a.stats.stale_reads, 0, "resync must gate the revival: {:?}", a.stats);
+    assert!(
+        a.engine().stats.resyncs_completed >= 1,
+        "the revival had missed writes: {:?}",
+        a.engine().stats
+    );
+}
+
+/// Election config: same order-independence, and the donor election must
+/// actually be armed (the workload's single death keeps a live donor, so
+/// the cluster heals without disk surrenders — exactly as the old
+/// `with_donor_election` chain behaved on this seed).
+#[test]
+fn spec_builder_order_is_immaterial_election() {
+    let a = drive(ChaosFabric::build(
+        SEED,
+        &EngineSpec::new(2)
+            .replicated(2)
+            .resync(RESYNC_CHUNK_BYTES)
+            .election(),
+        faulty(),
+    ));
+    let b = drive(ChaosFabric::build(
+        SEED,
+        &EngineSpec::new(2)
+            .election()
+            .resync(RESYNC_CHUNK_BYTES)
+            .replicated(2),
+        faulty(),
+    ));
+    assert_eq!(fingerprint(&a), fingerprint(&b), "chaining order leaked");
+    assert_eq!(a.stats.stale_reads, 0, "{:?}", a.stats);
+    assert_eq!(
+        a.engine().stats.resync_disk_surrenders,
+        0,
+        "a live donor existed throughout: {:?}",
+        a.engine().stats
+    );
+}
+
+/// The whole construction matrix is deterministic: rebuilding the same
+/// spec from the same seed replays the identical run, feature by feature
+/// (this is what makes every pinned-seed chaos regression in the suite
+/// meaningful).
+#[test]
+fn same_spec_same_seed_is_bit_identical() {
+    let specs = [
+        EngineSpec::new(2).replicated(2),
+        EngineSpec::new(2).replicated(2).resync(RESYNC_CHUNK_BYTES),
+        EngineSpec::new(2)
+            .replicated(2)
+            .resync(RESYNC_CHUNK_BYTES)
+            .election(),
+    ];
+    for spec in &specs {
+        let a = drive(ChaosFabric::build(PLAN_SEED, spec, faulty()));
+        let b = drive(ChaosFabric::build(PLAN_SEED, spec, faulty()));
+        assert_eq!(fingerprint(&a), fingerprint(&b), "nondeterministic build");
+        assert_eq!(a.stats.retired, 20, "8 + 4 writes + 8 reads all retire");
+    }
+}

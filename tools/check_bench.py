@@ -22,6 +22,13 @@ Two exact (non-tolerance) gates ride along:
     requires current ops_per_sec >= R * current[other].ops_per_sec —
     used for the in-tree slab-vs-hashmap ledger ablation, where the
     claim is relative, so both sides come from the same run and machine.
+  * victim latency: a baseline entry carrying
+    "victim_p99_max_ratio_vs": {"other": R} requires
+    current victim_p99_ns <= R * current[other].victim_p99_ns. The
+    benches emit victim_p99_ns in *virtual* time (deterministic drain
+    rounds, no wall clock), so the ratio is exact — this is the
+    multi-tenant QoS isolation claim (DRR must beat FIFO for the
+    victim tenant), gated with no tolerance.
 
 The shipped baseline holds deliberately conservative floors/ceilings
 (an order of magnitude of headroom) so the gate is portable across CI
@@ -102,6 +109,23 @@ def main():
                     f"only {cur['ops_per_sec'] / max(peer['ops_per_sec'], 1e-9):.2f}x "
                     f"`{other}` ({cur['ops_per_sec']:.0f} vs "
                     f"{peer['ops_per_sec']:.0f} ops/s), need {ratio:.1f}x"
+                )
+        # victim-latency gate: virtual-time metric, deterministic per
+        # binary, so the DRR-vs-FIFO ratio is exact (no tolerance)
+        for other, ratio in base.get("victim_p99_max_ratio_vs", {}).items():
+            peer = all_cur.get(other)
+            if peer is None:
+                verdicts.append(f"victim-p99 peer `{other}` missing from run")
+            elif "victim_p99_ns" not in cur or "victim_p99_ns" not in peer:
+                verdicts.append(
+                    "victim_p99_ns missing from run (bench binary predates "
+                    "the QoS fairness pair?)"
+                )
+            elif cur["victim_p99_ns"] > ratio * peer["victim_p99_ns"]:
+                verdicts.append(
+                    f"victim p99 {cur['victim_p99_ns']:.0f} ns > "
+                    f"{ratio:.2f}x `{other}` ({peer['victim_p99_ns']:.0f} ns) "
+                    f"— the QoS isolation claim regressed"
                 )
         status = "FAIL" if verdicts else "ok"
         p99_str = (f"p99 {cur['p99_block_ns']:>10.1f} ns"
