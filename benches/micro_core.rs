@@ -358,7 +358,9 @@ fn main() {
     // the zero-allocation hot path): 64 placed writes per iteration
     // through submit -> merge -> plan -> admit -> retire, with the
     // engine's slab ledgers, the merge queues' swap-buffer drain, the
-    // planner arena, and caller-owned DrainOut/WcOut scratch. After
+    // planner arena, and caller-owned DrainOut/WcOut scratch. The
+    // pinning-free MR cache is ON (cap = the 16 MiB working set), so its
+    // per-WR span probe and bookkeeping ride the gated cycle too. After
     // warm-up this cycle must not touch the allocator at all —
     // `allocs_per_op == 0` is enforced by ci/bench_baseline.json.
     {
@@ -367,7 +369,8 @@ fn main() {
                 .qps(4)
                 .window(Some(7 << 20))
                 .replicated(1)
-                .stripe(1 << 20),
+                .stripe(1 << 20)
+                .mr_cache(16 << 20),
         );
         let mut out = DrainOut::default();
         let mut wout = WcOut::default();
@@ -417,7 +420,9 @@ fn main() {
                 .window(Some(7 << 20))
                 .replicated(1)
                 .stripe(1 << 20)
-                .tenants(&[3, 1]),
+                .tenants(&[3, 1])
+                // two disjoint 16 MiB tenant regions: cap covers both
+                .mr_cache(32 << 20),
         );
         let mut out = DrainOut::default();
         let mut wout = WcOut::default();
@@ -639,6 +644,39 @@ fn main() {
                 rdmabox::paging::cache::Access::Hit => 1,
                 _ => 0,
             }
+        });
+    }
+
+    // dynamic MR cache (the pinning-free memory path) probe pair: one op
+    // = one span touch. `mr_cache_hit` runs steady-state over a working
+    // set inside the cap (every touch is a resident-span lkey lookup);
+    // `mr_cache_miss` sweeps far past the cap (every touch lazily
+    // registers, clock-evicts a victim, and churns the deferred-dereg
+    // queue through its self-flush). ci/bench_baseline.json gates the
+    // hit path at allocs_per_op == 0 and — same-run — at >= the miss
+    // path's throughput: a cache whose hit is no cheaper than its miss
+    // would be pure overhead.
+    {
+        use rdmabox::coordinator::mr_cache::{MrCache, MR_SPAN_BYTES};
+        let mut hot = MrCache::new(16 << 20);
+        let ws = 8u64 << 20;
+        for addr in (0..ws).step_by(MR_SPAN_BYTES as usize) {
+            hot.touch(addr, 4096);
+        }
+        let mut addr = 0u64;
+        bench(&mut results, "mr_cache_hit", iters(2_000_000), || {
+            let t = hot.touch(addr, 4096);
+            addr = (addr + 4096) % ws;
+            u64::from(t.hit_spans)
+        });
+
+        let mut cold = MrCache::new(16 * MR_SPAN_BYTES);
+        let sweep_spans = 1024u64; // 64 MiB swept span-by-span: never resident
+        let mut i = 0u64;
+        bench(&mut results, "mr_cache_miss", iters(1_000_000), || {
+            let t = cold.touch((i % sweep_spans) * MR_SPAN_BYTES, 4096);
+            i += 1;
+            u64::from(t.miss_spans)
         });
     }
 

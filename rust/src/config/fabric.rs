@@ -85,6 +85,10 @@ pub struct FabricConfig {
     pub user_reg_per_page_ns: u64,
     /// Deregistration cost as a fraction of registration.
     pub dereg_factor: f64,
+    /// MR-cache hit: looking up the lkey of an already-registered span
+    /// (the pinning-free path's fast case — a hash probe plus a
+    /// reference-bit write, no verbs call).
+    pub mr_cache_hit_ns: u64,
 
     // ---- memory / paging ----
     pub page_size: u64,
@@ -129,6 +133,7 @@ impl Default for FabricConfig {
             user_reg_base_ns: 37_000,
             user_reg_per_page_ns: 250,
             dereg_factor: 0.5,
+            mr_cache_hit_ns: 60,
             page_size: 4096,
             disk_bytes_per_ns: 0.12, // 120 MB/s
             disk_seek_ns: 6_000_000,
@@ -258,6 +263,7 @@ impl FabricConfig {
             "user_reg_base_ns" => u64field!(user_reg_base_ns),
             "user_reg_per_page_ns" => u64field!(user_reg_per_page_ns),
             "dereg_factor" => f64field!(dereg_factor),
+            "mr_cache_hit_ns" => u64field!(mr_cache_hit_ns),
             "page_size" => u64field!(page_size),
             "disk_bytes_per_ns" => f64field!(disk_bytes_per_ns),
             "disk_seek_ns" => u64field!(disk_seek_ns),

@@ -40,6 +40,7 @@ use crate::config::FabricConfig;
 use crate::coordinator::batching::{plan_into, BatchLimits, BatchMode, ChainSpan, PlanArena};
 use crate::coordinator::channel::ChannelMap;
 use crate::coordinator::merge_queue::{MergeOutcome, MergeQueues};
+use crate::coordinator::mr_cache::MrCache;
 use crate::coordinator::node::{EpochMap, NodeMap, NodeState, ReadRoute};
 use crate::coordinator::regulator::{AdmissionPolicy, Regulator, StaticWindow, Unlimited};
 use crate::coordinator::spec::EngineSpec;
@@ -67,15 +68,28 @@ pub struct EngineCosts {
     pub merge_check_base_ns: u64,
     /// Per-request merge-scan cost.
     pub merge_check_per_io_ns: u64,
+    /// MR-cache hit: lkey lookup of an already-registered span.
+    pub mr_hit_ns: u64,
+    /// MR-cache miss: lazy registration of one span
+    /// ([`crate::coordinator::mr_cache::MR_SPAN_BYTES`] bytes, kernel
+    /// path — physical addresses, no PTE walk).
+    pub mr_miss_ns: u64,
+    /// Deregistration of one evicted span, charged when a deferred batch
+    /// flushes (off the per-post critical path).
+    pub mr_dereg_ns: u64,
 }
 
 impl EngineCosts {
     pub fn from_fabric(cfg: &FabricConfig) -> Self {
+        use crate::coordinator::mr_cache::MR_SPAN_BYTES;
         Self {
             post_wqe_cpu_ns: cfg.post_wqe_cpu_ns,
             mmio_cpu_ns: cfg.mmio_cpu_ns,
             merge_check_base_ns: 120,
             merge_check_per_io_ns: 25,
+            mr_hit_ns: cfg.mr_cache_hit_ns,
+            mr_miss_ns: cfg.reg_ns(MR_SPAN_BYTES, true),
+            mr_dereg_ns: cfg.dereg_ns(MR_SPAN_BYTES, true),
         }
     }
 
@@ -292,6 +306,15 @@ pub struct EngineStats {
     /// holds the required epoch (e.g. every peer of the stripe is dead).
     /// Surfaced to the backend via [`IoEngine::take_disk_surrenders`].
     pub resync_disk_surrenders: u64,
+    /// MR-cache span hits on the post path (mirrors the cache's own
+    /// counters; zero when the cache is disabled).
+    pub mr_hits: u64,
+    /// MR-cache span misses — lazy registrations charged on the post path.
+    pub mr_misses: u64,
+    /// Spans evicted by the MR cache under pinned-bytes pressure.
+    pub mr_evictions: u64,
+    /// Deferred deregistration batches flushed off the critical path.
+    pub mr_dereg_batches: u64,
 }
 
 /// What a placed sub-I/O is doing in the pipeline.
@@ -605,6 +628,10 @@ pub struct IoEngine {
     /// Reusable per-node grouping buffers for the batch planner.
     plan_arena: PlanArena,
     resync: ResyncState,
+    /// The pinning-free memory path (`EngineSpec::mr_cache`): lazy
+    /// registration + clock eviction over spans, probed per WR on the
+    /// drain path. `None` = every buffer is considered pre-registered.
+    mr_cache: Option<MrCache>,
     pub stats: EngineStats,
 }
 
@@ -648,6 +675,7 @@ impl IoEngine {
             span_buf: Vec::new(),
             plan_arena: PlanArena::default(),
             resync: ResyncState::disabled(nodes),
+            mr_cache: None,
             stats: EngineStats::default(),
         }
     }
@@ -678,6 +706,9 @@ impl IoEngine {
         }
         if spec.tenant_weights.len() > 1 {
             e.set_tenants(&spec.tenant_weights);
+        }
+        if let Some(cap) = spec.mr_cache_bytes {
+            e.mr_cache = Some(MrCache::new(cap));
         }
         e
     }
@@ -903,6 +934,12 @@ impl IoEngine {
                 }
             })
             .collect()
+    }
+
+    /// MR-cache counters plus the current pinned/cap occupancy; `None`
+    /// when the pinning-free path is disabled (`EngineSpec::mr_cache`).
+    pub fn mr_cache_stats(&self) -> Option<crate::metrics::MrCacheStats> {
+        self.mr_cache.as_ref().map(|c| c.snapshot())
     }
 
     /// Swap in a custom admission policy (the paper's §5.1 hook).
@@ -1298,6 +1335,14 @@ impl IoEngine {
             for &span in &self.span_buf {
                 debug_assert_eq!(span.node, node, "shard {qp} planned a foreign node");
                 for wr in &mut out.wrs[span.start..span.end] {
+                    // lazy registration precedes the post: spans already
+                    // in the MR cache cost an lkey lookup, the rest a
+                    // registration (eviction deregs are deferred/batched)
+                    if let Some(cache) = &mut self.mr_cache {
+                        let t = cache.touch(wr.remote_addr, wr.len);
+                        cpu += self.costs.mr_hit_ns * u64::from(t.hit_spans)
+                            + self.costs.mr_miss_ns * u64::from(t.miss_spans);
+                    }
                     // re-key the WR to its outstanding-ledger slot: the
                     // wr_id the backend sees *is* the slab key, so the
                     // completion lookup is an index, not a hash probe
@@ -1319,6 +1364,18 @@ impl IoEngine {
                     cpu_offset_ns: cpu_base + cpu,
                 });
             }
+        }
+        if let Some(cache) = &mut self.mr_cache {
+            // deferred deregistration: flush a full batch *after* every
+            // chain's cpu_offset is fixed, so evictions never delay a
+            // post — only the drain's total serialized CPU grows
+            if cache.pending_deregs() >= cache.dereg_batch() {
+                cpu += self.costs.mr_dereg_ns * cache.flush_deregs() as u64;
+            }
+            self.stats.mr_hits = cache.stats.mr_hits;
+            self.stats.mr_misses = cache.stats.mr_misses;
+            self.stats.mr_evictions = cache.stats.mr_evictions;
+            self.stats.mr_dereg_batches = cache.stats.mr_dereg_batches;
         }
         out.cpu_ns = cpu_base + cpu;
         out.merged_ios += merged;
@@ -3162,5 +3219,72 @@ mod tests {
         let w = e.drain_dir(Dir::Write, 0);
         assert_eq!(w.chains.len(), 1);
         assert_eq!(w.wrs[0].op, OpKind::Write);
+    }
+
+    #[test]
+    fn mr_cache_stats_are_none_when_disabled() {
+        let mut e = engine(1, 1, None);
+        assert!(e.mr_cache_stats().is_none());
+        e.submit(io(1, Dir::Write, 0, 0));
+        complete_all(&mut e);
+        assert!(e.mr_cache_stats().is_none());
+        assert_eq!(e.stats.mr_hits + e.stats.mr_misses, 0);
+    }
+
+    /// Lazy registration lands on the drain path: the first touch of a
+    /// span is charged the miss (registration) cost, a re-touch only the
+    /// lkey-lookup cost — visible in the drain's serialized CPU.
+    #[test]
+    fn mr_miss_then_hit_charges_the_drain_cpu() {
+        use crate::coordinator::mr_cache::MR_SPAN_BYTES;
+        let costs = EngineCosts {
+            mr_hit_ns: 10,
+            mr_miss_ns: 1_000,
+            mr_dereg_ns: 100,
+            ..EngineCosts::free()
+        };
+        let spec = EngineSpec::new(1).mr_cache(MR_SPAN_BYTES).costs(costs);
+        let mut e = IoEngine::build(&spec);
+        e.submit(io(1, Dir::Write, 0, 0));
+        let first = e.drain_all(0);
+        assert_eq!(e.stats.mr_misses, 1, "first touch registers lazily");
+        assert_eq!(e.stats.mr_hits, 0);
+        for wr in first.wrs.iter() {
+            e.on_wc(&wc_for(wr, WcStatus::Success), 0);
+        }
+        e.submit(io(2, Dir::Write, 0, 0));
+        let second = e.drain_all(0);
+        assert_eq!(e.stats.mr_misses, 1, "span is resident: no re-registration");
+        assert_eq!(e.stats.mr_hits, 1);
+        assert!(
+            first.cpu_ns > second.cpu_ns,
+            "miss ({}) must cost more than hit ({})",
+            first.cpu_ns,
+            second.cpu_ns
+        );
+        let s = e.mr_cache_stats().expect("cache enabled");
+        assert_eq!(s.pinned_bytes, MR_SPAN_BYTES);
+    }
+
+    /// A one-span cache under a spanning workload: every drain evicts,
+    /// the deferred dereg queue fills, and the flush is counted (and
+    /// charged) at the end of a drain — never per post.
+    #[test]
+    fn mr_eviction_pressure_flushes_dereg_batches() {
+        use crate::coordinator::mr_cache::{MR_DEREG_BATCH, MR_SPAN_BYTES};
+        let spec = EngineSpec::new(1).qps(2).mr_cache(MR_SPAN_BYTES);
+        let mut e = IoEngine::build(&spec);
+        let n = (MR_DEREG_BATCH as u64) + 8;
+        for i in 0..n {
+            e.submit(io(i, Dir::Write, 0, i * MR_SPAN_BYTES));
+        }
+        let retired = complete_all(&mut e);
+        assert_eq!(retired.len() as u64, n);
+        assert_eq!(e.stats.mr_misses, n, "every span was a first touch");
+        assert_eq!(e.stats.mr_evictions, n - 1, "one frame, n-1 evictions");
+        assert!(e.stats.mr_dereg_batches >= 1, "a deferred batch flushed");
+        let s = e.mr_cache_stats().expect("cache enabled");
+        assert_eq!(s.pinned_bytes, MR_SPAN_BYTES, "cap held throughout");
+        assert_eq!(s.cap_bytes, MR_SPAN_BYTES);
     }
 }

@@ -6,6 +6,9 @@
 //!   Hybrid.
 //! * [`mr_strategy`] — preMR pool vs dynMR registration vs the user-space
 //!   threshold mix (§5.1, Fig 4).
+//! * [`mr_cache`] — the pinning-free path: a clock cache of registration
+//!   spans with lazy registration, batched deregistration and a
+//!   pinned-bytes cap (NP-RDMA-style, beyond the paper's static modes).
 //! * [`regulator`] — window-based RDMA-I/O admission control with a
 //!   pluggable policy hook (§5.1, Fig 8).
 //! * [`polling`] — WC-handling state machines: Busy / Event / EventBatch /
@@ -28,6 +31,7 @@ pub mod batching;
 pub mod channel;
 pub mod engine;
 pub mod merge_queue;
+pub mod mr_cache;
 pub mod mr_strategy;
 pub mod node;
 pub mod polling;

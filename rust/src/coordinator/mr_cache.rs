@@ -1,0 +1,370 @@
+//! Dynamic MR cache — the pinning-free memory path (ROADMAP item 3).
+//!
+//! The paper's MR strategy (§5.1, Fig 4) is a *static* per-request
+//! decision: preMR staging copies vs dynMR register-per-I/O. Both assume
+//! the working set either fits a pre-pinned pool or tolerates a
+//! registration on every request. The regime the paper actually targets —
+//! working sets far larger than pinnable memory — needs what NP-RDMA and
+//! the Psistakis thesis build: registration as a *cache*.
+//!
+//! [`MrCache`] keeps registered spans (fixed-size address ranges, the
+//! granularity one `ibv_reg_mr` call would cover) under a clock
+//! (second-chance) policy with a configurable pinned-bytes cap:
+//!
+//! * **Lazy registration** — the first WR touching a span registers it
+//!   (a miss, charged at the fabric's registration cost); subsequent WRs
+//!   find it resident (a hit, charged at an lkey-lookup cost).
+//! * **Eviction pressure** — when the cap is reached, the clock hand
+//!   sweeps for an unreferenced victim, so hot spans survive and cold
+//!   ones lose their pin.
+//! * **Batched, deferred deregistration** — evicted spans queue for
+//!   deregistration instead of paying `ibv_dereg_mr` on the post path;
+//!   the engine flushes the queue in batches off the critical path
+//!   (after the doorbell chains of a drain cycle are already timed).
+//!
+//! Everything is sized at construction: the frame array, the span map,
+//! and the dereg queue never reallocate in steady state, which is what
+//! keeps `engine_pipeline_64ios_steady` at `allocs_per_op == 0` with the
+//! cache enabled.
+
+use crate::metrics::MrCacheStats;
+use crate::util::fxhash::FxHashMap;
+
+/// Default registration-span granularity: one MR covers this many bytes
+/// of remote address space. 16 pages amortizes per-call overhead without
+/// pinning much beyond the touched range (NP-RDMA uses the same order).
+pub const MR_SPAN_BYTES: u64 = 64 * 1024;
+
+/// Default deferred-deregistration batch: evicted spans accumulate until
+/// this many are pending, then one flush deregisters them all.
+pub const MR_DEREG_BATCH: usize = 32;
+
+/// Outcome of probing one WR's address range against the cache: how many
+/// registration spans were already resident and how many had to be
+/// lazily registered. `Copy` — per-request MR state never allocates.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Touch {
+    pub hit_spans: u32,
+    pub miss_spans: u32,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct SpanFrame {
+    span: u64,
+    referenced: bool,
+}
+
+/// Clock (second-chance) cache of registered MR spans. See the module
+/// docs for the protocol; see [`crate::coordinator::engine::IoEngine`]
+/// for where hits/misses are charged and the dereg queue is flushed.
+#[derive(Debug)]
+pub struct MrCache {
+    span_bytes: u64,
+    cap_spans: usize,
+    frames: Vec<SpanFrame>,
+    map: FxHashMap<u64, usize>,
+    hand: usize,
+    dereg_batch: usize,
+    /// Evicted spans awaiting a batched deregistration. Bounded at twice
+    /// the batch size: reaching the bound forces an internal flush, so
+    /// the queue can never grow (and never reallocates).
+    dereg_queue: Vec<u64>,
+    pub stats: MrCacheStats,
+}
+
+impl MrCache {
+    /// Cache with the default span granularity and dereg batch.
+    pub fn new(cap_bytes: u64) -> Self {
+        Self::with_geometry(cap_bytes, MR_SPAN_BYTES, MR_DEREG_BATCH)
+    }
+
+    /// Fully parameterized constructor (experiments sweep span size and
+    /// batch depth; the engine uses the defaults).
+    pub fn with_geometry(cap_bytes: u64, span_bytes: u64, dereg_batch: usize) -> Self {
+        assert!(span_bytes > 0, "span granularity must be positive");
+        assert!(
+            cap_bytes >= span_bytes,
+            "pinned cap {cap_bytes} below one registration span {span_bytes}"
+        );
+        assert!(dereg_batch > 0);
+        let cap_spans = (cap_bytes / span_bytes) as usize;
+        let prealloc = cap_spans.min(1 << 20);
+        Self {
+            span_bytes,
+            cap_spans,
+            frames: Vec::with_capacity(prealloc),
+            map: FxHashMap::with_capacity_and_hasher(prealloc, Default::default()),
+            hand: 0,
+            dereg_batch,
+            dereg_queue: Vec::with_capacity(dereg_batch * 2),
+            stats: MrCacheStats {
+                cap_bytes,
+                ..Default::default()
+            },
+        }
+    }
+
+    pub fn span_bytes(&self) -> u64 {
+        self.span_bytes
+    }
+
+    pub fn cap_bytes(&self) -> u64 {
+        self.stats.cap_bytes
+    }
+
+    /// Registered spans currently resident (pinned).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn contains_span(&self, span: u64) -> bool {
+        self.map.contains_key(&span)
+    }
+
+    /// Probe the spans covering `[addr, addr+len)`; lazily register every
+    /// non-resident one, evicting under cap pressure. Returns the
+    /// hit/miss split so the caller can charge the fabric cost model.
+    pub fn touch(&mut self, addr: u64, len: u64) -> Touch {
+        debug_assert!(len > 0);
+        let first = addr / self.span_bytes;
+        let last = (addr + len - 1) / self.span_bytes;
+        let mut t = Touch::default();
+        for span in first..=last {
+            if let Some(&i) = self.map.get(&span) {
+                self.frames[i].referenced = true;
+                t.hit_spans += 1;
+            } else {
+                self.register(span);
+                t.miss_spans += 1;
+            }
+        }
+        self.stats.mr_hits += u64::from(t.hit_spans);
+        self.stats.mr_misses += u64::from(t.miss_spans);
+        self.stats.pinned_bytes = self.map.len() as u64 * self.span_bytes;
+        t
+    }
+
+    /// Lazily register `span`, evicting a victim if the cap is reached.
+    fn register(&mut self, span: u64) {
+        if self.frames.len() < self.cap_spans {
+            self.map.insert(span, self.frames.len());
+            self.frames.push(SpanFrame {
+                span,
+                referenced: true,
+            });
+            return;
+        }
+        // clock sweep: clear reference bits until an unreferenced victim
+        // turns up (terminates — a full lap clears every bit)
+        let slot = loop {
+            let f = &mut self.frames[self.hand];
+            if f.referenced {
+                f.referenced = false;
+                self.hand = (self.hand + 1) % self.frames.len();
+            } else {
+                break self.hand;
+            }
+        };
+        let victim = self.frames[slot].span;
+        self.map.remove(&victim);
+        self.stats.mr_evictions += 1;
+        // deregistration is deferred: queue the victim, force a flush
+        // only if the caller never drained (bounded queue, no realloc)
+        if self.dereg_queue.len() == self.dereg_queue.capacity() {
+            self.flush_deregs();
+        }
+        self.dereg_queue.push(victim);
+        self.frames[slot] = SpanFrame {
+            span,
+            referenced: true,
+        };
+        self.map.insert(span, slot);
+        self.hand = (self.hand + 1) % self.frames.len();
+    }
+
+    /// Evicted spans awaiting deregistration.
+    pub fn pending_deregs(&self) -> usize {
+        self.dereg_queue.len()
+    }
+
+    /// Batch threshold at which the engine flushes.
+    pub fn dereg_batch(&self) -> usize {
+        self.dereg_batch
+    }
+
+    /// Deregister every pending span in one batch; returns how many were
+    /// deregistered (0 if the queue was empty — not counted as a batch).
+    pub fn flush_deregs(&mut self) -> usize {
+        let n = self.dereg_queue.len();
+        if n > 0 {
+            self.dereg_queue.clear();
+            self.stats.mr_dereg_batches += 1;
+        }
+        n
+    }
+
+    /// Cumulative counters plus the current pinned/cap occupancy.
+    pub fn snapshot(&self) -> MrCacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, cfg};
+
+    fn spans(c: &MrCache) -> u64 {
+        c.span_bytes()
+    }
+
+    #[test]
+    fn first_touch_registers_then_hits() {
+        let mut c = MrCache::new(4 * MR_SPAN_BYTES);
+        let t = c.touch(0, 4096);
+        assert_eq!(
+            t,
+            Touch {
+                hit_spans: 0,
+                miss_spans: 1
+            }
+        );
+        // any address within the span is now a hit
+        let t = c.touch(MR_SPAN_BYTES - 4096, 4096);
+        assert_eq!(
+            t,
+            Touch {
+                hit_spans: 1,
+                miss_spans: 0
+            }
+        );
+        assert_eq!(c.stats.mr_hits, 1);
+        assert_eq!(c.stats.mr_misses, 1);
+        assert_eq!(c.stats.pinned_bytes, MR_SPAN_BYTES);
+    }
+
+    #[test]
+    fn wr_straddling_spans_counts_each_span() {
+        let mut c = MrCache::new(8 * MR_SPAN_BYTES);
+        // 3 spans: last page of span 0 through first page of span 2
+        let t = c.touch(MR_SPAN_BYTES - 4096, MR_SPAN_BYTES + 8192);
+        assert_eq!(t.miss_spans, 3);
+        assert_eq!(c.len(), 3);
+        let t = c.touch(MR_SPAN_BYTES - 4096, MR_SPAN_BYTES + 8192);
+        assert_eq!(t.hit_spans, 3);
+    }
+
+    #[test]
+    fn eviction_under_cap_pressure_is_counted_and_deferred() {
+        let mut c = MrCache::with_geometry(2 * MR_SPAN_BYTES, MR_SPAN_BYTES, 4);
+        c.touch(0, 4096); // span 0
+        c.touch(spans(&c), 4096); // span 1 — at cap
+        assert_eq!(c.stats.mr_evictions, 0);
+        c.touch(2 * spans(&c), 4096); // span 2 evicts one victim
+        assert_eq!(c.stats.mr_evictions, 1);
+        assert_eq!(c.len(), 2, "pinned spans never exceed the cap");
+        assert!(c.stats.pinned_bytes <= c.cap_bytes());
+        assert_eq!(c.pending_deregs(), 1, "dereg deferred, not immediate");
+        assert_eq!(c.stats.mr_dereg_batches, 0);
+        assert_eq!(c.flush_deregs(), 1);
+        assert_eq!(c.stats.mr_dereg_batches, 1);
+        assert_eq!(c.pending_deregs(), 0);
+        assert_eq!(c.flush_deregs(), 0, "empty flush is not a batch");
+        assert_eq!(c.stats.mr_dereg_batches, 1);
+    }
+
+    #[test]
+    fn second_chance_evicts_the_unreferenced_span() {
+        let s = MR_SPAN_BYTES;
+        let mut c = MrCache::with_geometry(2 * s, s, 4);
+        c.touch(0, 4096); // span 0
+        c.touch(s, 4096); // span 1
+        // both referenced: the sweep clears both bits, wraps, and takes
+        // span 0 (first past the hand)
+        c.touch(2 * s, 4096); // span 2 evicts span 0
+        assert!(!c.contains_span(0) && c.contains_span(1));
+        // span 1 survived with its bit cleared; span 2 is freshly
+        // referenced — the next fault must take 1 and spare 2
+        c.touch(3 * s, 4096); // span 3
+        assert!(c.contains_span(2), "referenced span kept its second chance");
+        assert!(!c.contains_span(1), "unreferenced span was the victim");
+        assert_eq!(c.stats.mr_evictions, 2);
+    }
+
+    #[test]
+    fn overfull_dereg_queue_self_flushes_and_never_grows() {
+        let mut c = MrCache::with_geometry(MR_SPAN_BYTES, MR_SPAN_BYTES, 2);
+        let bound = c.dereg_queue.capacity();
+        assert!(bound >= 4, "queue bound is twice the batch");
+        // single-frame cache: every new span evicts — never flushed by
+        // the caller, the queue must flush itself at its bound
+        for i in 0..64u64 {
+            c.touch(i * spans(&c), 4096);
+        }
+        assert!(c.pending_deregs() <= bound);
+        assert_eq!(c.dereg_queue.capacity(), bound, "no reallocation");
+        assert!(c.stats.mr_dereg_batches >= 1, "forced flushes counted");
+        assert_eq!(c.stats.mr_evictions, 63);
+    }
+
+    #[test]
+    fn snapshot_tracks_occupancy_and_hit_rate() {
+        let mut c = MrCache::new(4 * MR_SPAN_BYTES);
+        c.touch(0, 2 * MR_SPAN_BYTES); // 2 misses
+        c.touch(0, 2 * MR_SPAN_BYTES); // 2 hits
+        let s = c.snapshot();
+        assert_eq!(s.mr_hits, 2);
+        assert_eq!(s.mr_misses, 2);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-9);
+        assert_eq!(s.pinned_bytes, 2 * MR_SPAN_BYTES);
+        assert_eq!(s.cap_bytes, 4 * MR_SPAN_BYTES);
+    }
+
+    /// Property: the map and frame array stay consistent, residency never
+    /// exceeds the cap, a hit is only reported for a resident span, and
+    /// the dereg queue stays within its preallocated bound.
+    #[test]
+    fn prop_mr_cache_invariants() {
+        prop::forall(cfg(0x3ECAC4E), |rng, size| {
+            let cap_spans = 1 + rng.gen_below(8);
+            let batch = 1 + rng.gen_below(6) as usize;
+            let mut c = MrCache::with_geometry(cap_spans * MR_SPAN_BYTES, MR_SPAN_BYTES, batch);
+            let bound = c.dereg_queue.capacity();
+            for _ in 0..size * 8 {
+                let span = rng.gen_below(24);
+                let was_resident = c.contains_span(span);
+                let len = 1 + rng.gen_below(MR_SPAN_BYTES);
+                let t = c.touch(span * MR_SPAN_BYTES, len);
+                if was_resident && t.hit_spans != 1 {
+                    return Err("resident span did not hit".into());
+                }
+                if !was_resident && t.miss_spans != 1 {
+                    return Err("absent span did not miss".into());
+                }
+                if c.len() > cap_spans as usize {
+                    return Err(format!("over cap: {} > {cap_spans}", c.len()));
+                }
+                if c.stats.pinned_bytes != c.len() as u64 * MR_SPAN_BYTES {
+                    return Err("pinned_bytes drifted from residency".into());
+                }
+                if c.pending_deregs() > bound {
+                    return Err("dereg queue exceeded its bound".into());
+                }
+                if rng.gen_bool(0.1) {
+                    c.flush_deregs();
+                }
+                // every mapped span points at a frame holding it
+                for (&s, &i) in c.map.iter() {
+                    if c.frames[i].span != s {
+                        return Err("map/frames disagree".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

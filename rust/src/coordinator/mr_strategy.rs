@@ -15,6 +15,7 @@
 //!   memcpy/registration crossover (~928 KB measured), dynMR above.
 
 use crate::config::FabricConfig;
+use crate::util::idlist::IdList;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AddrSpace {
@@ -116,10 +117,19 @@ pub fn completion_cost_ns(
 /// A pool of pre-registered fixed-size MR slots. Exhaustion stalls the
 /// posting thread (counted) — one more reason large fixed-block designs
 /// (nbdX) lose under memory pressure.
+///
+/// Allocation-free on the hot path: `acquire_into` fills a caller-owned
+/// [`IdList`] (inline up to the SGE merge width, like every other per-WR
+/// id set in the engine), the free list and the in-use bitmap are sized
+/// once at construction, and the double-free check is an O(1) bitmap
+/// lookup instead of an O(n) scan of the free list.
 #[derive(Debug)]
 pub struct PreMrPool {
     slot_bytes: u64,
     free: Vec<u32>,
+    /// O(1) double-free / foreign-slot detection: `in_use[s]` is true
+    /// exactly while slot `s` is checked out.
+    in_use: Vec<bool>,
     total: u32,
     pub exhausted_events: u64,
 }
@@ -129,6 +139,7 @@ impl PreMrPool {
         Self {
             slot_bytes,
             free: (0..slots).rev().collect(),
+            in_use: vec![false; slots as usize],
             total: slots,
             exhausted_events: 0,
         }
@@ -142,21 +153,36 @@ impl PreMrPool {
         self.total - self.free.len() as u32
     }
 
-    /// Acquire enough slots to stage `len` bytes; None if exhausted.
-    pub fn acquire(&mut self, len: u64) -> Option<Vec<u32>> {
+    /// Acquire enough slots to stage `len` bytes into `out` (cleared
+    /// first); false if exhausted. `out` stays inline (no allocation) up
+    /// to [`crate::util::idlist::INLINE_IDS`] slots per WR.
+    pub fn acquire_into(&mut self, len: u64, out: &mut IdList) -> bool {
+        out.clear();
         let need = len.div_ceil(self.slot_bytes) as usize;
         if self.free.len() < need {
             self.exhausted_events += 1;
-            return None;
+            return false;
         }
-        Some((0..need).map(|_| self.free.pop().unwrap()).collect())
+        for _ in 0..need {
+            let s = self.free.pop().unwrap();
+            self.in_use[s as usize] = true;
+            out.push(s as u64);
+        }
+        true
     }
 
-    pub fn release(&mut self, slots: Vec<u32>) {
-        for s in slots {
-            debug_assert!(!self.free.contains(&s), "double free of MR slot {s}");
-            self.free.push(s);
+    /// Return every slot in `slots` to the pool and clear the list so the
+    /// caller can reuse it as scratch.
+    pub fn release(&mut self, slots: &mut IdList) {
+        for &s in slots.iter() {
+            assert!(
+                (s as usize) < self.in_use.len() && self.in_use[s as usize],
+                "double free (or foreign slot) of MR slot {s}"
+            );
+            self.in_use[s as usize] = false;
+            self.free.push(s as u32);
         }
+        slots.clear();
     }
 }
 
@@ -248,17 +274,97 @@ mod tests {
     #[test]
     fn pool_acquire_release_roundtrip() {
         let mut p = PreMrPool::new(4096, 4);
-        let a = p.acquire(4096).unwrap();
+        let mut a = IdList::new();
+        let mut b = IdList::new();
+        assert!(p.acquire_into(4096, &mut a));
         assert_eq!(a.len(), 1);
-        let b = p.acquire(8192).unwrap();
+        assert!(p.acquire_into(8192, &mut b));
         assert_eq!(b.len(), 2);
         assert_eq!(p.in_use(), 3);
-        assert!(p.acquire(8192).is_none()); // only 1 left
+        let mut c = IdList::new();
+        assert!(!p.acquire_into(8192, &mut c)); // only 1 left
+        assert!(c.is_empty(), "failed acquire must not hand out slots");
         assert_eq!(p.exhausted_events, 1);
-        p.release(a);
-        p.release(b);
+        p.release(&mut a);
+        p.release(&mut b);
+        assert!(a.is_empty() && b.is_empty(), "release reclaims the scratch");
         assert_eq!(p.in_use(), 0);
-        assert!(p.acquire(4 * 4096).is_some());
+        assert!(p.acquire_into(4 * 4096, &mut c));
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn pool_release_catches_double_free() {
+        let mut p = PreMrPool::new(4096, 4);
+        let mut a = IdList::new();
+        assert!(p.acquire_into(4096, &mut a));
+        let slot = a[0];
+        p.release(&mut a);
+        let mut again = IdList::new();
+        again.push(slot); // forged second release of the same slot
+        p.release(&mut again);
+    }
+
+    /// Property: random acquire/release interleavings keep the free list
+    /// and the in-use bitmap consistent — no slot is ever handed out
+    /// twice, `in_use()` always equals the number of checked-out slots,
+    /// and every release makes the slots reacquirable.
+    #[test]
+    fn prop_pool_roundtrip_conserves_slots() {
+        use crate::util::prop::{self, cfg};
+        prop::forall(cfg(0x920_07), |rng, size| {
+            let total = 1 + rng.gen_below(12) as u32;
+            let mut p = PreMrPool::new(4096, total);
+            let mut held: Vec<IdList> = Vec::new();
+            let mut checked_out = 0u32;
+            for _ in 0..size * 4 {
+                if rng.gen_bool(0.55) {
+                    let want = 1 + rng.gen_below(4);
+                    let mut ids = IdList::new();
+                    let ok = p.acquire_into(want * 4096, &mut ids);
+                    if ok {
+                        checked_out += ids.len() as u32;
+                        held.push(ids);
+                    } else if !ids.is_empty() {
+                        return Err("exhausted acquire leaked slots".into());
+                    }
+                } else if !held.is_empty() {
+                    let i = rng.gen_below(held.len() as u64) as usize;
+                    let mut ids = held.swap_remove(i);
+                    checked_out -= ids.len() as u32;
+                    p.release(&mut ids);
+                }
+                if p.in_use() != checked_out {
+                    return Err(format!(
+                        "ledger drift: pool says {} in use, test holds {}",
+                        p.in_use(),
+                        checked_out
+                    ));
+                }
+                let mut seen = vec![false; total as usize];
+                for ids in &held {
+                    for &s in ids.iter() {
+                        if seen[s as usize] {
+                            return Err(format!("slot {s} handed out twice"));
+                        }
+                        seen[s as usize] = true;
+                    }
+                }
+            }
+            // drain everything: the pool must come back whole
+            for mut ids in held {
+                p.release(&mut ids);
+            }
+            if p.in_use() != 0 {
+                return Err("slots lost after full release".into());
+            }
+            let mut all = IdList::new();
+            if !p.acquire_into(u64::from(total) * 4096, &mut all) {
+                return Err("full-capacity acquire failed on a drained pool".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -52,6 +52,12 @@ pub struct EngineSpec {
     /// QoS weights, one per tenant; a single entry means single-tenant
     /// operation (the exact pre-QoS FIFO/admission behaviour).
     pub tenant_weights: Vec<u64>,
+    /// `Some(cap)` enables the pinning-free memory path: a clock MR cache
+    /// of registration spans with lazy registration on first touch and
+    /// batched deregistration, holding at most `cap` pinned bytes
+    /// ([`crate::coordinator::mr_cache::MrCache`]). `None` keeps the
+    /// static MR strategies exactly as before.
+    pub mr_cache_bytes: Option<u64>,
 }
 
 impl EngineSpec {
@@ -71,6 +77,7 @@ impl EngineSpec {
             resync_chunk: None,
             election: false,
             tenant_weights: vec![1],
+            mr_cache_bytes: None,
         }
     }
 
@@ -139,6 +146,14 @@ impl EngineSpec {
         self
     }
 
+    /// Enable the dynamic MR cache with a pinned-bytes cap (the
+    /// pinning-free memory path — lazy registration, clock eviction,
+    /// deferred dereg batches).
+    pub fn mr_cache(mut self, cap_bytes: u64) -> Self {
+        self.mr_cache_bytes = Some(cap_bytes);
+        self
+    }
+
     /// Register the QoS tenants by weight. More than one entry switches
     /// the engine to hierarchical admission + weighted-fair drain; the
     /// default single entry keeps the exact single-tenant fast path.
@@ -177,6 +192,21 @@ impl EngineSpec {
                 "spec: donor election requires resync (call .resync(chunk))"
             );
         }
+        if let Some(cap) = self.mr_cache_bytes {
+            assert!(
+                cap >= crate::coordinator::mr_cache::MR_SPAN_BYTES,
+                "spec: MR cache cap {cap} pins less than one registration span ({})",
+                crate::coordinator::mr_cache::MR_SPAN_BYTES
+            );
+            if let Some(w) = self.window_bytes {
+                assert!(
+                    cap >= w,
+                    "spec: MR cache cap {cap} below the admission window {w} — \
+                     in-flight bytes must stay registrable (spans pinned by \
+                     posted WRs cannot all fit)"
+                );
+            }
+        }
         assert!(!self.tenant_weights.is_empty(), "spec: at least one tenant");
         for (t, &w) in self.tenant_weights.iter().enumerate() {
             assert!(
@@ -202,6 +232,22 @@ mod tests {
             .resync(DEFAULT_RESYNC_CHUNK)
             .election()
             .tenants(&[3, 1])
+            .mr_cache(16 << 20)
+            .validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "pins less than one registration span")]
+    fn mr_cache_below_one_span_is_rejected() {
+        EngineSpec::new(1).mr_cache(4096).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "below the admission window")]
+    fn mr_cache_below_window_is_rejected() {
+        EngineSpec::new(1)
+            .window(Some(7 << 20))
+            .mr_cache(1 << 20)
             .validate();
     }
 

@@ -1,8 +1,15 @@
 //! Fig 4 — MR registration vs memcpy, kernel vs user space. Kernel-space
 //! registration (physical addresses, no PTE walk / NIC translation cache)
 //! beats copying at *every* size; user space crosses over near 928 KB.
+//!
+//! Beyond the paper's static table, the figure now also drives the
+//! pinning-free [`MrCache`] over working sets on both sides of its
+//! pinned-bytes cap, so the analytic per-size model sits next to measured
+//! cache behaviour (hit rate, evictions, amortized per-I/O cost).
 
 use crate::cli::Table;
+use crate::config::FabricConfig;
+use crate::coordinator::mr_cache::{MrCache, MR_SPAN_BYTES};
 use crate::util::fmt;
 
 use super::ExpCtx;
@@ -18,6 +25,66 @@ pub const SIZES: [u64; 8] = [
     4 << 20,
 ];
 
+/// First table size where user-space registration beats memcpy, or `None`
+/// if memcpy wins everywhere. This is a *first-win* scan, not a
+/// transition detector: if the winner flips back at a larger size (a
+/// non-monotone cost model), the reported crossover is still the first
+/// size where reg won — use [`user_winner_flips_back`] to surface the
+/// flip-back itself.
+pub fn measured_user_crossover(c: &FabricConfig) -> Option<u64> {
+    SIZES
+        .iter()
+        .copied()
+        .find(|&sz| c.reg_ns(sz, false) < c.memcpy_ns(sz))
+}
+
+/// True when, after the first size where user-space reg wins, some larger
+/// table size flips back to memcpy — a non-monotone winner column that
+/// the old transition-based scan silently mis-reported (it kept the
+/// *last* memcpy→reg transition as "the" crossover).
+pub fn user_winner_flips_back(c: &FabricConfig) -> bool {
+    let mut seen_reg_win = false;
+    for &sz in SIZES.iter() {
+        let reg_wins = c.reg_ns(sz, false) < c.memcpy_ns(sz);
+        if seen_reg_win && !reg_wins {
+            return true;
+        }
+        seen_reg_win |= reg_wins;
+    }
+    false
+}
+
+/// One measured MR-cache data point: drive `cache` with `passes`
+/// sequential sweeps of `io_bytes` requests over a `ws_bytes` working
+/// set, then read the counters back.
+struct CachePoint {
+    ws_bytes: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    touches: u64,
+}
+
+fn drive_cache(cache: &mut MrCache, ws_bytes: u64, io_bytes: u64, passes: usize) -> CachePoint {
+    let mut touches = 0u64;
+    for _ in 0..passes {
+        let mut addr = 0u64;
+        while addr < ws_bytes {
+            cache.touch(addr, io_bytes.min(ws_bytes - addr));
+            touches += 1;
+            addr += io_bytes;
+        }
+    }
+    let s = cache.snapshot();
+    CachePoint {
+        ws_bytes,
+        hits: s.mr_hits,
+        misses: s.mr_misses,
+        evictions: s.mr_evictions,
+        touches,
+    }
+}
+
 pub fn run(ctx: &ExpCtx) -> String {
     let c = &ctx.fabric;
     let mut t = Table::new("Fig 4 — memcpy (preMR) vs MR registration (dynMR) cost").headers(&[
@@ -30,8 +97,6 @@ pub fn run(ctx: &ExpCtx) -> String {
         "user winner",
     ]);
     let mut kernel_reg_always_wins = true;
-    let mut user_cross = None;
-    let mut prev_user_winner = "memcpy";
     for &sz in SIZES.iter() {
         let km = c.memcpy_ns(sz);
         let kr = c.reg_ns(sz, true);
@@ -40,11 +105,6 @@ pub fn run(ctx: &ExpCtx) -> String {
         if kr >= km {
             kernel_reg_always_wins = false;
         }
-        let user_winner = if ur < um { "reg" } else { "memcpy" };
-        if user_winner == "reg" && prev_user_winner == "memcpy" {
-            user_cross = Some(sz);
-        }
-        prev_user_winner = user_winner;
         t.row(&[
             fmt::bytes(sz),
             fmt::dur_ns(km),
@@ -52,20 +112,66 @@ pub fn run(ctx: &ExpCtx) -> String {
             if kr < km { "reg (dynMR)" } else { "memcpy" }.to_string(),
             fmt::dur_ns(um),
             fmt::dur_ns(ur),
-            format!("{user_winner} ({})", if ur < um { "dynMR" } else { "preMR" }),
+            format!(
+                "{} ({})",
+                if ur < um { "reg" } else { "memcpy" },
+                if ur < um { "dynMR" } else { "preMR" }
+            ),
         ]);
     }
     let analytic = c.user_crossover_bytes();
+    let user_cross = measured_user_crossover(c);
     t.note(&format!(
         "paper: kernel dynMR favored at all sizes -> measured: {}",
         if kernel_reg_always_wins { "holds" } else { "VIOLATED" }
     ));
     t.note(&format!(
-        "paper: user-space crossover at 928KB -> measured: analytic {} (first table row where reg wins: {})",
+        "paper: user-space crossover at 928KB -> measured: analytic {} \
+         (first table size where reg wins: {}{})",
         fmt::bytes(analytic),
-        user_cross.map(fmt::bytes).unwrap_or_else(|| "none".into())
+        user_cross.map(fmt::bytes).unwrap_or_else(|| "none".into()),
+        if user_winner_flips_back(c) {
+            ", winner flips back at a larger size"
+        } else {
+            ""
+        }
     ));
-    t.render()
+
+    // Measured counterpart: the pinning-free MR cache over working sets on
+    // both sides of its cap. Steady-state hits amortize registration away;
+    // a working set past the cap degenerates to dynMR-per-span plus
+    // eviction churn.
+    let cap = 16u64 << 20;
+    let io = 16u64 << 10;
+    let title = "Fig 4b — measured MR-cache (cap 16 MiB, 16 KiB I/Os, 4 passes)";
+    let mut m = Table::new(title).headers(&[
+        "working set",
+        "hit rate",
+        "evictions",
+        "amortized/IO",
+        "dynMR/IO",
+        "preMR memcpy/IO",
+    ]);
+    let hit_ns = c.mr_cache_hit_ns;
+    let miss_ns = c.reg_ns(MR_SPAN_BYTES, true);
+    for ws in [cap / 2, 4 * cap] {
+        let mut cache = MrCache::new(cap);
+        let p = drive_cache(&mut cache, ws, io, 4);
+        let amortized = (p.hits * hit_ns + p.misses * miss_ns) / p.touches.max(1);
+        m.row(&[
+            fmt::bytes(p.ws_bytes),
+            format!("{:.1}%", cache.snapshot().hit_rate() * 100.0),
+            p.evictions.to_string(),
+            fmt::dur_ns(amortized),
+            fmt::dur_ns(c.reg_ns(io, true)),
+            fmt::dur_ns(c.memcpy_ns(io)),
+        ]);
+    }
+    m.note(
+        "in-cap working set: lazy registration amortizes to ~the lkey-lookup cost; \
+         over-cap: every span re-registers (dynMR floor) plus clock eviction churn",
+    );
+    format!("{}\n{}", t.render(), m.render())
 }
 
 #[cfg(test)]
@@ -82,5 +188,70 @@ mod tests {
         let x = ctx.fabric.user_crossover_bytes() as f64;
         let paper = (928 * 1024) as f64;
         assert!((x - paper).abs() / paper < 0.15, "crossover {x}");
+        // the default cost model is monotone: no flip-back note
+        assert!(!out.contains("flips back"), "{out}");
+        // measured cache table is present with both working-set rows
+        assert!(out.contains("Fig 4b"), "{out}");
+    }
+
+    #[test]
+    fn crossover_scan_reports_first_reg_win() {
+        // Skew the model so user-space registration wins from the very
+        // first size: the scan must report SIZES[0], not a later
+        // transition.
+        let c = FabricConfig {
+            user_reg_base_ns: 1,
+            user_reg_per_page_ns: 0,
+            ..FabricConfig::default()
+        };
+        assert_eq!(measured_user_crossover(&c), Some(SIZES[0]));
+        assert!(!user_winner_flips_back(&c));
+    }
+
+    #[test]
+    fn crossover_scan_reports_none_when_memcpy_always_wins() {
+        // Skew the other way: registration never pays off inside the
+        // table, so there is no crossover to report ("none"), where the
+        // old transition detector could latch onto a stale value.
+        let c = FabricConfig {
+            user_reg_base_ns: 1 << 40,
+            ..FabricConfig::default()
+        };
+        assert_eq!(measured_user_crossover(&c), None);
+        assert!(!user_winner_flips_back(&c));
+    }
+
+    #[test]
+    fn flip_back_is_detected_and_does_not_move_the_crossover() {
+        // A per-page user reg cost above the memcpy byte rate makes reg
+        // win only while the base-cost gap dominates (small sizes), then
+        // lose again as size grows: first-win must stay at the smallest
+        // winning size and the flip-back must be flagged.
+        let c = FabricConfig {
+            user_reg_base_ns: 1,
+            user_reg_per_page_ns: 600, // > 4096B / 10B-per-ns ≈ 410ns per page
+            ..FabricConfig::default()
+        };
+        let first = measured_user_crossover(&c);
+        assert_eq!(first, Some(SIZES[0]), "reg wins at 4KB on base cost");
+        assert!(user_winner_flips_back(&c), "per-page cost overtakes memcpy");
+    }
+
+    #[test]
+    fn measured_cache_fits_vs_thrash() {
+        let cap = 1u64 << 20;
+        // In-cap: second pass is all hits.
+        let mut fit = MrCache::new(cap);
+        let p = drive_cache(&mut fit, cap / 2, 16 << 10, 4);
+        let spans = (cap / 2) / MR_SPAN_BYTES;
+        assert_eq!(p.misses, spans, "one lazy registration per span");
+        assert!(p.hits > p.misses * 10, "steady state is hit-dominated");
+        assert_eq!(p.evictions, 0);
+        // Over-cap sequential sweep: the clock can never keep a span long
+        // enough for the next pass — every span touch re-registers.
+        let mut thrash = MrCache::new(cap);
+        let q = drive_cache(&mut thrash, 4 * cap, 64 << 10, 4);
+        assert_eq!(q.hits, 0, "sequential over-cap sweep never hits");
+        assert!(q.evictions > 0);
     }
 }

@@ -163,6 +163,10 @@ pub struct ChaosStats {
     pub duplicates_delivered: u64,
     pub reordered_wcs: u64,
     pub stalled_wcs: u64,
+    /// WRs that first-touched an unregistered MR span and paid a
+    /// synchronous lazy-registration stall before posting (the
+    /// pinning-free path's miss cost landing on the critical path).
+    pub reg_stalled_wcs: u64,
     /// WCs delayed by a cluster-wide latency storm window.
     pub stormed_wcs: u64,
     /// Mid-run admission-window swaps executed (policy churn).
@@ -225,6 +229,11 @@ pub struct ChaosFabric {
     read_floor: FxHashMap<u64, Vec<(u64, u64)>>,
     /// Read sub-I/O id → stamps served by its last successful delivery.
     served: FxHashMap<u64, Vec<PageStamp>>,
+    /// MR spans ([`crate::coordinator::mr_cache::MR_SPAN_BYTES`]-sized)
+    /// some WR of this run has already touched: re-touches never pay a
+    /// registration stall, mirroring the MR cache's lazy-registration
+    /// contract (only first touches miss).
+    reg_seen: PageSet,
     /// Detail of the first stale read (for failure messages).
     pub first_stale: Option<String>,
     /// Every `(addr, len)` range the engine's election surrendered to
@@ -296,6 +305,7 @@ impl ChaosFabric {
             read_subs: FxHashMap::default(),
             read_floor: FxHashMap::default(),
             served: FxHashMap::default(),
+            reg_seen: PageSet::default(),
             first_stale: None,
             surrendered_log: Vec::new(),
             drain: DrainOut::default(),
@@ -494,6 +504,23 @@ impl ChaosFabric {
 
     fn schedule_wr(&mut self, qp: QpId, node: NodeId, wr: WorkRequest) {
         let mut at = self.now_ns + LAT_BASE_NS + self.rng.gen_below(LAT_JITTER_NS);
+        if self.plan.reg_stall_rate > 0.0 {
+            // lazy registration: the WR's first touch of an unregistered
+            // span may stall synchronously before it can post; spans the
+            // run already registered never stall again. Guarded so quiet
+            // plans leave the seed stream byte-identical.
+            use crate::coordinator::mr_cache::MR_SPAN_BYTES;
+            let mut first_touch = false;
+            for span in (wr.remote_addr / MR_SPAN_BYTES)
+                ..=((wr.remote_addr + wr.len.max(1) - 1) / MR_SPAN_BYTES)
+            {
+                first_touch |= self.reg_seen.insert(span);
+            }
+            if first_touch && self.rng.gen_bool(self.plan.reg_stall_rate) {
+                at += self.plan.reg_stall_ns;
+                self.stats.reg_stalled_wcs += 1;
+            }
+        }
         if self.plan.reorder_rate > 0.0 && self.rng.gen_bool(self.plan.reorder_rate) {
             // hold this WC back so later-posted WRs overtake it in the CQ
             at += 1 + self.rng.gen_below(self.plan.reorder_jitter_ns.max(1));
@@ -879,6 +906,29 @@ mod tests {
         assert_eq!(retired.len() as u64, n);
         assert!(fab.stats.stalled_wcs > 0, "the stall actually bit");
         assert!(fab.now() >= 200_000, "nothing completed in the stall");
+    }
+
+    /// Registration stalls bite only on the *first* touch of a span:
+    /// a workload confined to one 64 KiB span pays exactly one stall
+    /// however many WRs it posts, and the stall delays — never loses —
+    /// the request (the admission window drains to empty).
+    #[test]
+    fn reg_stalls_hit_first_touch_once_and_leak_nothing() {
+        let plan = FaultPlan::none().with_reg_stalls(1.0, 150_000);
+        let mut fab = ChaosFabric::new(31, 2, 1, 2, Some(8 * 4096), plan);
+        for i in 0..30u64 {
+            fab.submit(i, Dir::Write, (i % 8) * 4096, 4096);
+        }
+        let retired = fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(retired.len(), 30, "stalled requests still retire");
+        assert_eq!(
+            fab.stats.reg_stalled_wcs, 1,
+            "one span, one first touch, one stall"
+        );
+        assert!(fab.now() >= 150_000, "the stall actually delayed delivery");
+        assert_eq!(fab.engine().regulator().in_flight(), 0, "window released");
+        assert_eq!(fab.engine().queued_ios(), 0);
+        assert_eq!(fab.stats.stale_reads, 0);
     }
 
     #[test]

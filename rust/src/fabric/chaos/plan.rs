@@ -101,6 +101,12 @@ pub struct FaultPlan {
     pub storms: Vec<LatencyStorm>,
     /// Mid-run admission-window swaps.
     pub churns: Vec<AdmissionChurn>,
+    /// Probability that a WR whose span has never been touched before
+    /// pays a synchronous registration stall (the pinning-free memory
+    /// path's lazy-registration miss landing on the critical path).
+    pub reg_stall_rate: f64,
+    /// Extra delivery delay of a registration-stalled WR.
+    pub reg_stall_ns: u64,
 }
 
 impl FaultPlan {
@@ -207,6 +213,21 @@ impl FaultPlan {
         self
     }
 
+    /// Registration stalls: a WR that first-touches an unregistered MR
+    /// span pays the lazy-registration latency with probability `rate`
+    /// before it can post — the cost the dynamic MR cache moves off the
+    /// hot path only for *resident* spans. Re-touches of a span the run
+    /// already registered never stall (the fabric tracks first touches),
+    /// which is exactly the cache's contract; the scenario runner's
+    /// admission-window invariant must hold through the stalls.
+    pub fn with_reg_stalls(mut self, rate: f64, stall_ns: u64) -> Self {
+        assert!((0.0..=1.0).contains(&rate));
+        assert!(stall_ns > 0, "registration stall without latency");
+        self.reg_stall_rate = rate;
+        self.reg_stall_ns = stall_ns;
+        self
+    }
+
     /// Extra delivery delay a WC scheduled at `at_ns` picks up from
     /// storms (the largest covering window wins).
     pub fn storm_extra(&self, at_ns: u64) -> u64 {
@@ -228,6 +249,7 @@ impl FaultPlan {
             && self.partitions.is_empty()
             && self.storms.is_empty()
             && self.churns.is_empty()
+            && self.reg_stall_rate == 0.0
     }
 
     /// The end of the stall window covering (`qp`, `at_ns`), if any.
@@ -325,6 +347,11 @@ impl FaultPlan {
                 plan = plan.admission_window(at, Some(w));
             }
         }
+        if rng.gen_bool(if heavy { 0.5 } else { 0.35 }) {
+            // lazy-registration stalls on first-touched spans (drawn
+            // last so older seeds keep their exact earlier fault mix)
+            plan = plan.with_reg_stalls(rng.gen_f64() * 0.6, 1 + rng.gen_below(50_000));
+        }
         plan
     }
 }
@@ -417,6 +444,20 @@ mod tests {
         assert_eq!(p.churns.len(), 2);
         assert_eq!(p.churns[1].window_bytes, None);
         assert!(!p.is_quiet());
+    }
+
+    #[test]
+    fn reg_stalls_compose_and_break_quiet() {
+        let p = FaultPlan::none().with_reg_stalls(0.25, 30_000);
+        assert_eq!(p.reg_stall_rate, 0.25);
+        assert_eq!(p.reg_stall_ns, 30_000);
+        assert!(!p.is_quiet());
+    }
+
+    #[test]
+    #[should_panic(expected = "registration stall without latency")]
+    fn reg_stall_rejects_zero_latency() {
+        let _ = FaultPlan::none().with_reg_stalls(0.5, 0);
     }
 
     #[test]

@@ -87,6 +87,11 @@ pub struct Scenario {
     /// Multi-tenant scenarios spread the workload hog-vs-victim across
     /// the tenants and check the per-tenant ledgers at quiescence.
     pub tenant_weights: Vec<u64>,
+    /// `Some(cap)` runs the engine with the pinning-free MR cache at
+    /// that pinned-bytes cap (always ≥ every window this generator
+    /// draws, so the spec validates). The cache's slab bookkeeping then
+    /// rides every adversarial schedule of the sweep.
+    pub mr_cache_bytes: Option<u64>,
     pub plan: FaultPlan,
 }
 
@@ -132,6 +137,14 @@ impl Scenario {
         } else {
             vec![1]
         };
+        // drawn after the plan so older seeds keep their exact fault mix;
+        // 64..256 pages ≥ every window drawn above (max 31 pages) and ≥
+        // one 16-page registration span, so the spec always validates
+        let mr_cache_bytes = if rng.gen_bool(0.6) {
+            Some((64 + rng.gen_below(192)) * 4096)
+        } else {
+            None
+        };
         Self {
             name: "randomized",
             seed,
@@ -145,6 +158,7 @@ impl Scenario {
             election: true,
             profile,
             tenant_weights,
+            mr_cache_bytes,
             plan,
         }
     }
@@ -165,6 +179,7 @@ impl Scenario {
             election: true,
             profile: ChaosProfile::Standard,
             tenant_weights: vec![1],
+            mr_cache_bytes: Some(64 * 4096),
             plan,
         }
     }
@@ -210,6 +225,9 @@ pub struct ScenarioReport {
     pub injected_errors: u64,
     pub reordered_wcs: u64,
     pub stalled_wcs: u64,
+    /// WRs that paid a synchronous lazy-registration stall (first touch
+    /// of an unregistered span under `FaultPlan::with_reg_stalls`).
+    pub reg_stalled_wcs: u64,
     pub stormed_wcs: u64,
     pub window_changes: u64,
     pub partitioned_wcs: u64,
@@ -225,6 +243,11 @@ pub struct ScenarioReport {
     pub resync_self_heals: u64,
     pub resync_disk_surrenders: u64,
     pub resyncs_completed: u64,
+    /// MR-cache span lookups that found a live registration (0 when the
+    /// scenario runs without a cache).
+    pub mr_hits: u64,
+    /// First-touch span registrations the cache performed lazily.
+    pub mr_misses: u64,
     pub peak_in_flight: u64,
     pub elapsed_virtual_ns: u64,
     /// Bytes posted per tenant (one entry per registered tenant).
@@ -307,6 +330,9 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
         if sc.election {
             spec = spec.election();
         }
+    }
+    if let Some(cap) = sc.mr_cache_bytes {
+        spec = spec.mr_cache(cap);
     }
     let mut fab = ChaosFabric::build(sc.seed, &spec, sc.plan.clone());
     let n_tenants = sc.tenant_weights.len();
@@ -459,6 +485,19 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
         )));
     }
 
+    // MR-cache wiring tripwire: with a cache attached, every drained WR
+    // probes it before posting — a run that delivered completions but
+    // never touched a span means the lazy-registration path fell out of
+    // the pipeline
+    if sc.mr_cache_bytes.is_some()
+        && fab.stats.delivered_wcs > 0
+        && fab.engine().stats.mr_hits + fab.engine().stats.mr_misses == 0
+    {
+        return Err(fail(
+            "MR cache enabled but no span was ever touched on the drain path".into(),
+        ));
+    }
+
     Ok(ScenarioReport {
         submitted,
         retired: retired.len() as u64,
@@ -470,6 +509,7 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
         injected_errors: fab.stats.injected_errors,
         reordered_wcs: fab.stats.reordered_wcs,
         stalled_wcs: fab.stats.stalled_wcs,
+        reg_stalled_wcs: fab.stats.reg_stalled_wcs,
         stormed_wcs: fab.stats.stormed_wcs,
         window_changes: fab.stats.window_changes,
         partitioned_wcs: fab.stats.partitioned_wcs,
@@ -484,6 +524,8 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
         resync_self_heals: fab.engine().stats.resync_self_heals,
         resync_disk_surrenders: fab.engine().stats.resync_disk_surrenders,
         resyncs_completed: fab.engine().stats.resyncs_completed,
+        mr_hits: fab.engine().stats.mr_hits,
+        mr_misses: fab.engine().stats.mr_misses,
         peak_in_flight: fab.engine().regulator().peak_in_flight,
         elapsed_virtual_ns: fab.now(),
         tenant_posted_bytes: tenant_stats.iter().map(|t| t.posted_bytes).collect(),
@@ -508,6 +550,10 @@ mod tests {
         assert_eq!(r.retired, r.submitted);
         assert_eq!(r.failovers, 0);
         assert_eq!(r.disk_fallbacks, 0);
+        // named scenarios run with the MR cache attached: lazy
+        // registration fired at least once per touched span
+        assert!(r.mr_misses > 0, "cache never lazily registered");
+        assert_eq!(r.reg_stalled_wcs, 0, "quiet plan cannot stall");
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::coordinator::engine::{EngineCosts, IoEngine};
 use crate::coordinator::mr_strategy::{completion_cost_ns, post_cost_ns, PreMrPool, ResolvedMr};
 use crate::coordinator::regulator::Regulator;
 use crate::coordinator::StackConfig;
-use crate::fabric::{AppIo, Dir, Wc};
+use crate::fabric::{AppIo, Dir, IdList, Wc};
 
 use super::{Engine, Sim, WcOutcome};
 
@@ -33,8 +33,9 @@ pub struct StackEngine {
     stack: StackConfig,
     core: IoEngine,
     premr_pool: Option<PreMrPool>,
-    /// wr_id -> preMR slots to release at completion.
-    slots: FxHashMap<u64, Vec<u32>>,
+    /// wr_id -> preMR slots to release at completion (inline id lists —
+    /// acquiring staging slots does not allocate).
+    slots: FxHashMap<u64, IdList>,
     /// Fixed-block coalescing: (block_addr, dir) -> representative io id,
     /// and representative -> waiting app io ids.
     block_index: FxHashMap<(u64, u8), u64>,
@@ -118,13 +119,11 @@ impl StackEngine {
                 // many staging copies (the RFS win).
                 if self.stack.mr.resolve(wr.len) == ResolvedMr::PreMr {
                     if let Some(pool) = &mut self.premr_pool {
-                        match pool.acquire(wr.len) {
-                            Some(s) => {
-                                self.slots.insert(wr.wr_id, s);
-                            }
-                            None => {
-                                sim.trace.premr_stalls += 1;
-                            }
+                        let mut ids = IdList::new();
+                        if pool.acquire_into(wr.len, &mut ids) {
+                            self.slots.insert(wr.wr_id, ids);
+                        } else {
+                            sim.trace.premr_stalls += 1;
                         }
                     }
                 }
@@ -196,9 +195,9 @@ impl Engine for StackEngine {
         let cpu = WC_HANDLER_BASE_NS
             + completion_cost_ns(&self.cfg, self.stack.mr, self.stack.space, wc.len, is_write);
 
-        if let Some(slots) = self.slots.remove(&wc.wr_id) {
+        if let Some(mut slots) = self.slots.remove(&wc.wr_id) {
             if let Some(pool) = &mut self.premr_pool {
-                pool.release(slots);
+                pool.release(&mut slots);
             }
         }
 

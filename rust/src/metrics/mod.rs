@@ -129,6 +129,54 @@ impl TenantStats {
     }
 }
 
+/// Dynamic-MR-cache counters exported by `IoEngine::mr_cache_stats()`
+/// when the pinning-free memory path is enabled
+/// (`EngineSpec::mr_cache`): lazy-registration traffic over the clock
+/// cache of registration spans, plus the deferred-deregistration batch
+/// count. One snapshot per engine; all counters are cumulative.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MrCacheStats {
+    /// WR touches that found every span already registered.
+    pub mr_hits: u64,
+    /// Span touches that lazily registered (first touch or re-fault
+    /// after eviction).
+    pub mr_misses: u64,
+    /// Spans evicted under pinned-bytes pressure (queued for deferred
+    /// deregistration).
+    pub mr_evictions: u64,
+    /// Deregistration batches flushed off the critical path.
+    pub mr_dereg_batches: u64,
+    /// Bytes currently pinned (registered spans resident in the cache).
+    pub pinned_bytes: u64,
+    /// Configured pinned-bytes cap.
+    pub cap_bytes: u64,
+}
+
+impl MrCacheStats {
+    /// Fraction of span touches served without a registration.
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.mr_hits + self.mr_misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.mr_hits as f64 / t as f64
+        }
+    }
+
+    /// Table row for the CLI (`hits misses hit% evictions dereg-batches
+    /// pinned/cap`).
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.mr_hits.to_string(),
+            self.mr_misses.to_string(),
+            format!("{:.1}%", self.hit_rate() * 100.0),
+            self.mr_evictions.to_string(),
+            self.mr_dereg_batches.to_string(),
+            format!("{}/{}", self.pinned_bytes, self.cap_bytes),
+        ]
+    }
+}
+
 /// Summary speedup across checks (geometric mean of measured ratios).
 pub fn summary_speedup(checks: &[ShapeCheck]) -> f64 {
     geomean(
@@ -164,6 +212,24 @@ mod tests {
     fn within_check() {
         assert!(ShapeCheck::within("x", 100.0, 90.0, 0.15).pass);
         assert!(!ShapeCheck::within("x", 100.0, 50.0, 0.15).pass);
+    }
+
+    #[test]
+    fn mr_cache_stats_hit_rate_and_row() {
+        // an untouched cache reports 0% rather than dividing by zero
+        assert_eq!(MrCacheStats::default().hit_rate(), 0.0);
+        let s = MrCacheStats {
+            mr_hits: 3,
+            mr_misses: 1,
+            mr_evictions: 1,
+            mr_dereg_batches: 1,
+            pinned_bytes: 65536,
+            cap_bytes: 131072,
+        };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        let row = s.row();
+        assert_eq!(row[2], "75.0%");
+        assert_eq!(row[5], "65536/131072");
     }
 
     #[test]

@@ -155,6 +155,31 @@ fn per_qp_stall() {
     assert_eq!(r.disk_fallbacks, 0);
 }
 
+/// Lazy-registration stalls (the pinning-free MR path's miss cost landing
+/// on the critical path): first touches of unregistered spans delay their
+/// WRs synchronously. Stalled requests are slow, never lost — the
+/// admission window is checked continuously by the runner through every
+/// stall, and the engine's own MR cache (attached on every named
+/// scenario) counts the same first touches as misses.
+#[test]
+fn registration_stalls_never_leak_the_window() {
+    let plan = FaultPlan::none().with_reg_stalls(0.8, 120_000);
+    let r = check(&Scenario::named(
+        "registration_stalls_never_leak_the_window",
+        0x2E957A,
+        plan,
+    ));
+    assert!(r.reg_stalled_wcs > 0, "the reg stall never fired: {r:?}");
+    assert!(r.mr_misses > 0, "the engine cache saw the first touches: {r:?}");
+    assert_eq!(r.failovers, 0, "a stall is slow, not broken: {r:?}");
+    assert_eq!(r.disk_fallbacks, 0, "{r:?}");
+    assert_eq!(r.stale_reads, 0);
+    assert!(
+        r.elapsed_virtual_ns >= 120_000,
+        "stalled WRs must actually be delayed: {r:?}"
+    );
+}
+
 /// Everything at once: errors, reordering, duplicates, a stall, and a
 /// death+revival — the invariants hold under the full fault mix.
 #[test]

@@ -20,8 +20,11 @@ Two exact (non-tolerance) gates ride along:
     not gated), so old artifacts keep checking cleanly.
   * ratios: a baseline entry carrying "min_ratio_vs": {"other": R}
     requires current ops_per_sec >= R * current[other].ops_per_sec —
-    used for the in-tree slab-vs-hashmap ledger ablation, where the
-    claim is relative, so both sides come from the same run and machine.
+    used for the in-tree slab-vs-hashmap ledger ablation and for the
+    dynamic MR cache's hit-vs-miss pair (a resident-span lkey lookup
+    must cost no more than a lazy registration + eviction, or the
+    pinning-free cache is pure overhead), where the claim is relative,
+    so both sides come from the same run and machine.
   * victim latency: a baseline entry carrying
     "victim_p99_max_ratio_vs": {"other": R} requires
     current victim_p99_ns <= R * current[other].victim_p99_ns. The
