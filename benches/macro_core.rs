@@ -1,0 +1,192 @@
+//! Macro-workload benchmarks: the paper's application workloads (KV
+//! store, RFS/IOzone file streaming, ML training traces) run end-to-end
+//! on the simulated RDMAbox stack (harness = false; criterion is
+//! unavailable offline).
+//!
+//! Unlike `micro_core` — which measures wall-clock ns/iter of hot paths
+//! — every number here is **virtual time** from the DES: throughput and
+//! p99 latency are deterministic for a given code version, so the CI
+//! gate catches any change to the modeled pipeline (batching, admission,
+//! paging, striping), not machine noise.
+//!
+//! CI runs this in **smoke mode** on every push and uploads the JSON as
+//! the macro perf trajectory:
+//!
+//! * `BENCH_SMOKE=1` — shrunk workloads (seconds, not minutes);
+//! * `BENCH_JSON=path` — write machine-readable results (name, mean
+//!   ns/op, per-op virtual-time p99, ops/s) to `path`.
+//!
+//! `tools/check_bench.py` gates the JSON against
+//! `ci/bench_macro_baseline.json` (ops/s floors and `p99_ns` ceilings;
+//! >25% regression fails the job).
+
+use rdmabox::config::FabricConfig;
+use rdmabox::coordinator::StackConfig;
+use rdmabox::rfs::run_iozone_with_stats;
+use rdmabox::workloads::kv::{mongodb, run_kv, voltdb, KvConfig, Mix};
+use rdmabox::workloads::mltrace::{logreg, run_ml};
+
+/// One measured workload, as written to `BENCH_JSON`.
+struct BenchResult {
+    name: &'static str,
+    /// Operations the workload completed (KV ops, FUSE requests,
+    /// records streamed, pages moved — per the bench's unit).
+    iters: u64,
+    /// Mean virtual ns per operation (`1e9 / ops_per_sec`).
+    mean_ns: f64,
+    /// p99 of the per-op virtual-time latency histogram. `None` for
+    /// bandwidth-only entries; the JSON omits the field and the gate
+    /// skips it.
+    p99_ns: Option<f64>,
+    /// Operations per virtual second (bytes/s for bandwidth entries).
+    ops_per_sec: f64,
+}
+
+fn push_result(
+    results: &mut Vec<BenchResult>,
+    name: &'static str,
+    iters: u64,
+    ops_per_sec: f64,
+    p99_ns: Option<u64>,
+) {
+    let mean_ns = if ops_per_sec > 0.0 {
+        1e9 / ops_per_sec
+    } else {
+        0.0
+    };
+    let p99 = p99_ns.map(|p| p as f64);
+    match p99 {
+        Some(p) => println!(
+            "{name:26} {iters:>9} ops  {mean_ns:>10.1} ns/op  ({ops_per_sec:>14.0} ops/s)  \
+             p99 {p:>10.0} ns"
+        ),
+        None => println!(
+            "{name:26} {iters:>9} ops  {mean_ns:>10.1} ns/op  ({ops_per_sec:>14.0} ops/s)"
+        ),
+    }
+    results.push(BenchResult {
+        name,
+        iters,
+        mean_ns,
+        p99_ns: p99,
+        ops_per_sec,
+    });
+}
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+fn write_json(path: &str, smoke: bool, results: &[BenchResult]) {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": 1,\n");
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str("  \"benches\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let p99 = match r.p99_ns {
+            Some(p) => format!("\"p99_ns\": {p:.1}, "),
+            None => String::new(),
+        };
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
+             {}\"ops_per_sec\": {:.0}}}{}\n",
+            r.name,
+            r.iters,
+            r.mean_ns,
+            p99,
+            r.ops_per_sec,
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("wrote {path}");
+}
+
+fn main() {
+    let smoke = env_flag("BENCH_SMOKE");
+    println!(
+        "== macro_core: paper workloads end-to-end (virtual time){} ==",
+        if smoke { " (smoke mode)" } else { "" }
+    );
+    let cfg = FabricConfig::default();
+    let stack = StackConfig::rdmabox(&cfg);
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // KV store (Fig 12 shape): Facebook ETC mix on the VoltDB profile
+    // and the write-heavier SYS mix on MongoDB. Throughput is the
+    // post-warmup application ops/s; p99 is per-op latency including
+    // paging and remote I/O.
+    for (name, profile, mix) in [
+        ("kv_voltdb_etc", voltdb(), Mix::Etc),
+        ("kv_mongodb_sys", mongodb(), Mix::Sys),
+    ] {
+        let mut kv = KvConfig::small(profile, mix);
+        if smoke {
+            kv.records = 50_000;
+            kv.ops = 12_000;
+        }
+        let (_, stats) = run_kv(&cfg, &stack, kv);
+        push_result(
+            &mut results,
+            name,
+            stats.ops_done,
+            stats.throughput(),
+            Some(stats.op_lat.p99()),
+        );
+    }
+
+    // RFS (Fig 14 shape): IOzone sequential write then read of one big
+    // file through the FUSE pipeline, 4 nodes, 128 KB records. The two
+    // bandwidth entries gate GB/s as bytes per virtual second; the
+    // request entry gates the FUSE request rate and its p99.
+    {
+        let record_bytes: u64 = 128 << 10;
+        let file_bytes: u64 = if smoke { 16 << 20 } else { 64 << 20 };
+        let (w_gbs, r_gbs, stats) =
+            run_iozone_with_stats(&cfg, &stack, 4, record_bytes, file_bytes);
+        let records = file_bytes / record_bytes;
+        push_result(&mut results, "rfs_iozone_write_bw", records, w_gbs * 1e9, None);
+        push_result(&mut results, "rfs_iozone_read_bw", records, r_gbs * 1e9, None);
+        push_result(
+            &mut results,
+            "rfs_fuse_requests",
+            stats.ops_done,
+            stats.throughput(),
+            Some(stats.op_lat.p99()),
+        );
+    }
+
+    // ML training (Fig 13 shape): logistic regression epochs with 25%
+    // of the working set resident, paging the rest over the fabric.
+    // Throughput is pages moved per virtual second; p99 is the page-in
+    // read latency tail.
+    {
+        let mut profile = logreg();
+        if smoke {
+            profile.dataset_pages = 4_000;
+            profile.state_pages = profile.state_pages.min(128);
+            profile.epochs = 2;
+        }
+        let (t_ns, report) = run_ml(&cfg, &stack, profile, 0.25, 3);
+        let pages = report.completed_reads + report.completed_writes;
+        let pages_per_sec = if t_ns == 0 {
+            0.0
+        } else {
+            pages as f64 * 1e9 / t_ns as f64
+        };
+        push_result(
+            &mut results,
+            "ml_logreg_pages",
+            pages,
+            pages_per_sec,
+            Some(report.read_lat.p99()),
+        );
+    }
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        if !path.is_empty() {
+            write_json(&path, smoke, &results);
+        }
+    }
+}

@@ -34,11 +34,10 @@
 pub mod plan;
 pub mod scenario;
 
-pub use plan::{AdmissionChurn, FaultPlan, LatencyStorm, NodeEvent, Partition, QpStall};
+pub use plan::{rack_members, AdmissionChurn, FaultPlan, LatencyStorm, NodeEvent, Partition, QpStall};
 pub use scenario::{replay_command, run_scenario, ChaosProfile, Scenario, ScenarioReport};
 
-use std::cmp::{Ordering, Reverse};
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::HashSet;
 
 use crate::coordinator::engine::{
     DrainOut, IoEngine, RetiredIo, Submitted, RESYNC_PARENT, SHARD_REGION_SHIFT,
@@ -48,6 +47,7 @@ use crate::coordinator::spec::EngineSpec;
 use crate::fabric::{
     AppIo, Dir, NodeId, OpKind, QpId, TenantId, Wc, WcStatus, WorkRequest, DEFAULT_TENANT,
 };
+use crate::util::eventq::{EventQueue, ReferenceQueue};
 use crate::util::fxhash::{FxBuildHasher, FxHashMap};
 use crate::util::rng::Pcg32;
 
@@ -122,32 +122,56 @@ enum EventKind {
     Churn { window: Option<u64> },
 }
 
-/// A scheduled event in virtual time. Total order is `(at, seq)`; `seq`
-/// is unique per event, so heap pops are fully deterministic.
-#[derive(Debug)]
-struct Event {
-    at: u64,
-    seq: u64,
-    kind: EventKind,
+/// Which scheduler backs the fabric's event queue. Both pop the
+/// globally minimal `(at, seq)` with FIFO tie-breaking, so they produce
+/// identical schedules — an equality `tests/pinned_replay.rs` asserts
+/// over full scenario reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulerKind {
+    /// The shared calendar queue ([`EventQueue`]) — the production
+    /// scheduler, O(1) amortized per event at thousands of nodes.
+    #[default]
+    Calendar,
+    /// The pre-refactor `BinaryHeap` scheduler, kept verbatim in
+    /// [`ReferenceQueue`] as the bit-identity oracle for replay tests.
+    Reference,
 }
 
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+/// The fabric's event queue behind either scheduler. An enum (rather
+/// than a generic parameter) keeps `ChaosFabric` a plain type and keeps
+/// the private [`EventKind`] out of public signatures.
+enum Queue {
+    Calendar(EventQueue<EventKind>),
+    Reference(ReferenceQueue<EventKind>),
+}
+
+impl Queue {
+    fn new(kind: SchedulerKind) -> Self {
+        match kind {
+            SchedulerKind::Calendar => Queue::Calendar(EventQueue::new()),
+            SchedulerKind::Reference => Queue::Reference(ReferenceQueue::new()),
+        }
     }
-}
 
-impl Eq for Event {}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
+    fn push(&mut self, at: u64, kind: EventKind) {
+        match self {
+            Queue::Calendar(q) => q.push(at, kind),
+            Queue::Reference(q) => q.push(at, kind),
+        }
     }
-}
 
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        (self.at, self.seq).cmp(&(other.at, other.seq))
+    fn pop(&mut self) -> Option<(u64, EventKind)> {
+        match self {
+            Queue::Calendar(q) => q.pop(),
+            Queue::Reference(q) => q.pop(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Queue::Calendar(q) => q.len(),
+            Queue::Reference(q) => q.len(),
+        }
     }
 }
 
@@ -183,15 +207,15 @@ pub struct ChaosStats {
 }
 
 /// The deterministic fault-injecting fabric: drives a placed [`IoEngine`]
-/// (replica fan-out, read failover, disk-fallback signal) through an
-/// event heap in virtual time.
+/// (replica fan-out, read failover, disk-fallback signal) through the
+/// shared calendar-queue scheduler ([`crate::util::eventq`]) in virtual
+/// time.
 pub struct ChaosFabric {
     engine: IoEngine,
     plan: FaultPlan,
     rng: Pcg32,
     now_ns: u64,
-    events: BinaryHeap<Reverse<Event>>,
-    next_seq: u64,
+    events: Queue,
     /// Per-node page store: what each replica actually holds.
     stores: Vec<FxHashMap<u64, PageStamp>>,
     /// Client-side monotone version counter per page (bumped at submit).
@@ -280,6 +304,18 @@ impl ChaosFabric {
     /// the schedule; everything else is drawn from `seed` as WRs are
     /// posted.
     pub fn build(seed: u64, spec: &EngineSpec, plan: FaultPlan) -> Self {
+        Self::build_with_scheduler(seed, spec, plan, SchedulerKind::default())
+    }
+
+    /// [`ChaosFabric::build`] with an explicit [`SchedulerKind`]. The
+    /// `Reference` scheduler exists for the pre/post-refactor replay
+    /// equivalence tests; everything else wants the default.
+    pub fn build_with_scheduler(
+        seed: u64,
+        spec: &EngineSpec,
+        plan: FaultPlan,
+        scheduler: SchedulerKind,
+    ) -> Self {
         assert!(
             spec.replicas.is_some(),
             "the chaos fabric drives a placed engine: spec needs .replicated(r)"
@@ -293,8 +329,7 @@ impl ChaosFabric {
             plan,
             rng: Pcg32::with_stream(seed, 0xC4A05),
             now_ns: 0,
-            events: BinaryHeap::new(),
-            next_seq: 0,
+            events: Queue::new(scheduler),
             stores: (0..nodes).map(|_| FxHashMap::default()).collect(),
             versions: FxHashMap::default(),
             floor: FxHashMap::default(),
@@ -341,9 +376,7 @@ impl ChaosFabric {
     }
 
     fn push(&mut self, at: u64, kind: EventKind) {
-        let seq = self.next_seq;
-        self.next_seq += 1;
-        self.events.push(Reverse(Event { at, seq, kind }));
+        self.events.push(at, kind);
     }
 
     /// Submit one application I/O at the current virtual time and drain
@@ -569,11 +602,11 @@ impl ChaosFabric {
     /// Returns the application I/Os that retired, or `None` when the
     /// fabric is quiescent (no events left).
     pub fn step(&mut self) -> Option<Vec<RetiredIo>> {
-        let Reverse(ev) = self.events.pop()?;
-        debug_assert!(ev.at >= self.now_ns, "virtual time ran backwards");
-        self.now_ns = ev.at;
+        let (at, kind) = self.events.pop()?;
+        debug_assert!(at >= self.now_ns, "virtual time ran backwards");
+        self.now_ns = at;
         let mut retired = Vec::new();
-        match ev.kind {
+        match kind {
             EventKind::Node { node, up } => {
                 self.stats.node_transitions += 1;
                 // the engine owns the lifecycle decision: up means Alive
@@ -869,6 +902,39 @@ mod tests {
             (c.1, c.2),
             "a different seed must produce a different schedule"
         );
+    }
+
+    /// The tentpole bit-identity claim at the fabric level: the calendar
+    /// queue and the pre-refactor `BinaryHeap` scheduler produce the
+    /// same retirement order, the same fault schedule, and the same
+    /// virtual clock under a full fault mix.
+    #[test]
+    fn calendar_and_reference_schedulers_agree() {
+        let run = |kind: SchedulerKind| {
+            let plan = FaultPlan::none()
+                .with_errors(0.2)
+                .with_reordering(0.3, 20_000)
+                .with_duplicates(0.2, 5_000)
+                .with_reg_stalls(0.4, 80_000)
+                .latency_storm(10_000, 90_000, 30_000)
+                .node_down(1, 40_000)
+                .node_up(1, 400_000);
+            let spec = EngineSpec::new(3)
+                .qps(2)
+                .window(Some(24 * 4096))
+                .replicated(2)
+                .resync(RESYNC_CHUNK_BYTES);
+            let mut fab = ChaosFabric::build_with_scheduler(0xB17, &spec, plan, kind);
+            submit_pages(&mut fab, 120, 2);
+            let retired = fab.run_to_idle(STEPS).expect("quiescent");
+            let ids: Vec<(u64, bool)> = retired.iter().map(|r| (r.id, r.disk_fallback)).collect();
+            (ids, fab.stats.clone(), fab.now())
+        };
+        let cal = run(SchedulerKind::Calendar);
+        let reference = run(SchedulerKind::Reference);
+        assert_eq!(cal.0, reference.0, "retirement order identical");
+        assert_eq!(cal.1, reference.1, "fault schedule identical");
+        assert_eq!(cal.2, reference.2, "virtual clock identical");
     }
 
     #[test]

@@ -22,6 +22,19 @@
 use crate::fabric::{NodeId, QpId};
 use crate::util::rng::Pcg32;
 
+/// The member nodes of rack `rack` under contiguous placement: rack `r`
+/// holds nodes `r * nodes_per_rack ..` up to the next rack (the last
+/// rack may be short). The rack combinators ([`FaultPlan::rack_down`],
+/// [`FaultPlan::rack_up`], [`FaultPlan::rack_partition`]) take any node
+/// slice, but this is the topology the scale scenarios assume.
+pub fn rack_members(rack: usize, nodes: usize, nodes_per_rack: usize) -> Vec<NodeId> {
+    assert!(nodes_per_rack > 0, "a rack holds at least one node");
+    let first = rack * nodes_per_rack;
+    let end = (first + nodes_per_rack).min(nodes);
+    assert!(first < nodes, "rack {rack} is beyond the cluster");
+    (first..end).collect()
+}
+
 /// A window of virtual time during which one QP delivers no completions;
 /// WCs that would land inside the window slip to its end.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -228,6 +241,46 @@ impl FaultPlan {
         self
     }
 
+    /// Correlated rack loss: every node in `members` dies in a tight
+    /// burst starting at `at_ns` (one virtual ns apart, in node order,
+    /// modeling a ToR switch or PDU failure taking the whole rack down
+    /// at once rather than independent node deaths). Expands into plain
+    /// [`NodeEvent`]s, so replay, quiescence checks, and the scenario
+    /// runner see nothing new — the correlation *is* the schedule.
+    pub fn rack_down(mut self, members: &[NodeId], at_ns: u64) -> Self {
+        assert!(!members.is_empty(), "rack_down with no members");
+        for (i, &node) in members.iter().enumerate() {
+            self = self.node_down(node, at_ns + i as u64);
+        }
+        self
+    }
+
+    /// Correlated rack revival: every node in `members` comes back in a
+    /// tight burst starting at `at_ns` — the power-restored moment that
+    /// triggers a **resync storm** (with resync enabled, every revived
+    /// replica re-enters `Resyncing` and the engine repairs them all
+    /// concurrently through the normal admission window, which must stay
+    /// bounded throughout).
+    pub fn rack_up(mut self, members: &[NodeId], at_ns: u64) -> Self {
+        assert!(!members.is_empty(), "rack_up with no members");
+        for (i, &node) in members.iter().enumerate() {
+            self = self.node_up(node, at_ns + i as u64);
+        }
+        self
+    }
+
+    /// Rack-wide partial partition: one window during which every WR to
+    /// any node in `members` errors while the nodes stay nominally up —
+    /// the client losing its path through one ToR uplink. Expands into
+    /// per-node [`Partition`]s sharing the window.
+    pub fn rack_partition(mut self, members: &[NodeId], from_ns: u64, until_ns: u64) -> Self {
+        assert!(!members.is_empty(), "rack_partition with no members");
+        for &node in members {
+            self = self.partition(node, from_ns, until_ns);
+        }
+        self
+    }
+
     /// Extra delivery delay a WC scheduled at `at_ns` picks up from
     /// storms (the largest covering window wins).
     pub fn storm_extra(&self, at_ns: u64) -> u64 {
@@ -354,6 +407,77 @@ impl FaultPlan {
         }
         plan
     }
+
+    /// Draw a **rack-correlated** fault mix for a multi-hundred-node
+    /// cluster under contiguous `nodes_per_rack` placement: light
+    /// single-WR noise, plus the faults only scale exhibits — a whole
+    /// rack dying in a burst (usually revived later, triggering a
+    /// resync storm), a rack-wide partition, cluster-wide storms and
+    /// admission churn. Its own seed-stream consumer: the existing
+    /// `Standard`/`ElectionHeavy`/`Qos` profiles never draw from it, so
+    /// their pinned seeds are untouched.
+    pub fn randomized_rack_profile(
+        rng: &mut Pcg32,
+        nodes: usize,
+        qps_per_node: usize,
+        nodes_per_rack: usize,
+    ) -> Self {
+        assert!(nodes_per_rack > 0, "a rack holds at least one node");
+        let racks = nodes.div_ceil(nodes_per_rack);
+        let mut plan = FaultPlan::none();
+        // background noise: kept light so rack faults dominate the run
+        if rng.gen_bool(0.5) {
+            plan.error_rate = rng.gen_f64() * 0.15;
+        }
+        if rng.gen_bool(0.5) {
+            plan.reorder_rate = rng.gen_f64() * 0.4;
+            plan.reorder_jitter_ns = 1 + rng.gen_below(40_000);
+        }
+        if rng.gen_bool(0.4) {
+            plan.duplicate_rate = rng.gen_f64() * 0.2;
+            plan.duplicate_lag_ns = 1 + rng.gen_below(20_000);
+        }
+        if rng.gen_bool(0.3) {
+            let total_qps = (nodes * qps_per_node) as u64;
+            let qp = rng.gen_below(total_qps) as usize;
+            let from = rng.gen_below(400_000);
+            plan = plan.stall(qp, from, from + 1 + rng.gen_below(200_000));
+        }
+        // the headline fault: correlated rack loss, usually revived —
+        // the revival burst is the resync storm the runner must bound
+        if rng.gen_bool(0.75) {
+            let rack = rng.gen_below(racks as u64) as usize;
+            let members = rack_members(rack, nodes, nodes_per_rack);
+            let at = rng.gen_below(250_000);
+            plan = plan.rack_down(&members, at);
+            if rng.gen_bool(0.8) {
+                plan = plan.rack_up(&members, at + 1 + rng.gen_below(200_000));
+            }
+        }
+        // ToR uplink loss: a rack-wide partial partition
+        if rng.gen_bool(0.5) {
+            let rack = rng.gen_below(racks as u64) as usize;
+            let members = rack_members(rack, nodes, nodes_per_rack);
+            let from = rng.gen_below(250_000);
+            plan = plan.rack_partition(&members, from, from + 1 + rng.gen_below(150_000));
+        }
+        if rng.gen_bool(0.5) {
+            let from = rng.gen_below(300_000);
+            let until = from + 1 + rng.gen_below(200_000);
+            plan = plan.latency_storm(from, until, 1 + rng.gen_below(60_000));
+        }
+        if rng.gen_bool(0.4) {
+            for _ in 0..=rng.gen_below(2) {
+                let at = rng.gen_below(400_000);
+                let w = (4 + rng.gen_below(60)) * 4096;
+                plan = plan.admission_window(at, Some(w));
+            }
+        }
+        if rng.gen_bool(0.35) {
+            plan = plan.with_reg_stalls(rng.gen_f64() * 0.5, 1 + rng.gen_below(40_000));
+        }
+        plan
+    }
 }
 
 #[cfg(test)]
@@ -458,6 +582,67 @@ mod tests {
     #[should_panic(expected = "registration stall without latency")]
     fn reg_stall_rejects_zero_latency() {
         let _ = FaultPlan::none().with_reg_stalls(0.5, 0);
+    }
+
+    #[test]
+    fn rack_members_cover_the_cluster_without_overlap() {
+        // 10 nodes, 4 per rack: racks are {0..4}, {4..8}, {8..10}
+        assert_eq!(rack_members(0, 10, 4), vec![0, 1, 2, 3]);
+        assert_eq!(rack_members(1, 10, 4), vec![4, 5, 6, 7]);
+        assert_eq!(rack_members(2, 10, 4), vec![8, 9], "short last rack");
+        let mut all: Vec<NodeId> = (0..3).flat_map(|r| rack_members(r, 10, 4)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond the cluster")]
+    fn rack_members_rejects_out_of_range_rack() {
+        let _ = rack_members(3, 10, 4);
+    }
+
+    #[test]
+    fn rack_combinators_expand_into_plain_events() {
+        let members = rack_members(1, 12, 4); // nodes 4..8
+        let p = FaultPlan::none()
+            .rack_down(&members, 10_000)
+            .rack_up(&members, 50_000)
+            .rack_partition(&members, 60_000, 90_000);
+        assert_eq!(p.node_events.len(), 8, "4 deaths + 4 revivals");
+        // deaths burst one ns apart, in node order
+        assert_eq!(
+            p.node_events[..4]
+                .iter()
+                .map(|e| (e.node, e.at_ns, e.up))
+                .collect::<Vec<_>>(),
+            vec![(4, 10_000, false), (5, 10_001, false), (6, 10_002, false), (7, 10_003, false)]
+        );
+        assert!(p.node_events[4..].iter().all(|e| e.up));
+        assert_eq!(p.partitions.len(), 4);
+        assert!(p.partitioned(5, 70_000));
+        assert!(!p.partitioned(3, 70_000), "other racks unaffected");
+        assert!(!p.is_quiet());
+    }
+
+    #[test]
+    fn rack_profile_is_deterministic_and_rack_shaped() {
+        let a = FaultPlan::randomized_rack_profile(&mut Pcg32::new(5), 256, 1, 16);
+        let b = FaultPlan::randomized_rack_profile(&mut Pcg32::new(5), 256, 1, 16);
+        assert_eq!(a.node_events, b.node_events);
+        assert_eq!(a.partitions, b.partitions);
+        assert_eq!(a.storms, b.storms);
+        assert_eq!(a.churns, b.churns);
+        // deaths come in whole-rack bursts: group by at-window and check
+        // each burst is one contiguous rack
+        let deaths: Vec<&NodeEvent> = a.node_events.iter().filter(|e| !e.up).collect();
+        if let Some(first) = deaths.first() {
+            let rack = first.node / 16;
+            assert!(
+                deaths.iter().all(|e| e.node / 16 == rack),
+                "one draw kills exactly one rack: {deaths:?}"
+            );
+            assert_eq!(deaths.len(), 16, "the whole rack dies");
+        }
     }
 
     #[test]

@@ -29,12 +29,14 @@ use crate::fabric::Dir;
 use crate::runtime::Result;
 use crate::util::rng::Pcg32;
 
-use super::{ChaosFabric, FaultPlan, RESYNC_CHUNK_BYTES, STRIPE_BYTES};
+use super::{ChaosFabric, FaultPlan, SchedulerKind, RESYNC_CHUNK_BYTES, STRIPE_BYTES};
 
 /// Livelock guard for one scenario run.
 const MAX_STEPS: u64 = 4_000_000;
-/// Address span of the generated workload (16 MiB: enough stripes to
-/// engage every node and several QP shards).
+/// Default address span of the generated workload (16 MiB: enough
+/// stripes to engage every node of a small cluster and several QP
+/// shards). Scale scenarios widen [`Scenario::addr_span`] to one stripe
+/// per node so hundreds of nodes all carry traffic.
 const ADDR_SPAN: u64 = 1 << 24;
 /// Largest generated I/O, in pages. This bound is load-bearing for the
 /// window invariant: every generated window is at least `MAX_IO_PAGES`
@@ -62,6 +64,14 @@ pub enum ChaosProfile {
     /// admission ledgers and DRR lanes must stay exactly balanced
     /// through it. The nightly sweep runs this as `CHAOS_PROFILE=qos`.
     Qos,
+    /// Cluster scale: 256–512 nodes with rack-correlated faults
+    /// ([`FaultPlan::randomized_rack_profile`]) — whole-rack death and
+    /// revival (resync storms), rack-wide partitions, incast-shaped
+    /// storms — on the calendar-queue scheduler. Its own seed stream:
+    /// the small-cluster profiles draw none of its randomness, so their
+    /// pinned seeds replay unchanged. The nightly sweep runs this as
+    /// `CHAOS_PROFILE=scale`.
+    Scale,
 }
 
 /// One chaos scenario: everything the run needs, nameable by seed.
@@ -92,6 +102,14 @@ pub struct Scenario {
     /// draws, so the spec validates). The cache's slab bookkeeping then
     /// rides every adversarial schedule of the sweep.
     pub mr_cache_bytes: Option<u64>,
+    /// Address span of the generated workload. Small-cluster scenarios
+    /// use the 16 MiB default; scale scenarios widen it to one
+    /// [`STRIPE_BYTES`] stripe per node so every node carries traffic.
+    pub addr_span: u64,
+    /// Which scheduler backs the fabric (default: the calendar queue).
+    /// [`Scenario::with_reference_scheduler`] switches a run onto the
+    /// pre-refactor `BinaryHeap` for bit-identity replay tests.
+    pub scheduler: SchedulerKind,
     pub plan: FaultPlan,
 }
 
@@ -106,6 +124,11 @@ impl Scenario {
     /// [`ChaosProfile`].
     pub fn randomized_with_profile(seed: u64, profile: ChaosProfile) -> Self {
         let mut rng = Pcg32::with_stream(seed, 0x5EED5);
+        if profile == ChaosProfile::Scale {
+            // entirely separate draw sequence — the small-cluster
+            // profiles below keep their exact historical seed streams
+            return Self::randomized_scale(seed, &mut rng);
+        }
         let nodes = 2 + rng.gen_below(3) as usize;
         let qps_per_node = 1 + rng.gen_below(4) as usize;
         // up to 3-way replication (topology permitting): multi-peer
@@ -159,6 +182,48 @@ impl Scenario {
             profile,
             tenant_weights,
             mr_cache_bytes,
+            addr_span: ADDR_SPAN,
+            scheduler: SchedulerKind::default(),
+            plan,
+        }
+    }
+
+    /// The `Scale` profile's draw: a 256–512 node cluster in racks of
+    /// 8/16/32, a rack-correlated fault mix, and an address span of one
+    /// stripe per node so the whole cluster carries traffic. Reached
+    /// only through [`Scenario::randomized_with_profile`].
+    fn randomized_scale(seed: u64, rng: &mut Pcg32) -> Self {
+        let nodes = 256 + rng.gen_below(257) as usize;
+        let qps_per_node = 1 + rng.gen_below(2) as usize;
+        // 3-way replication dominates so a whole-rack loss usually
+        // leaves a live replica (racks are contiguous, like placement)
+        let replicas = 2 + rng.gen_below(2) as usize;
+        let nodes_per_rack = 8usize << rng.gen_below(3);
+        // always windowed: admission collapse under incast is one of
+        // the invariants this profile exists to check
+        let window_bytes = Some((MAX_IO_PAGES + rng.gen_below(60)) * 4096);
+        let n_ios = 400 + rng.gen_below(400);
+        let read_fraction = 0.2 + rng.gen_f64() * 0.6;
+        let plan = FaultPlan::randomized_rack_profile(rng, nodes, qps_per_node, nodes_per_rack);
+        // drawn after the plan (same discipline as the small profiles);
+        // 256..512 pages ≥ every window drawn above (max 63 pages)
+        let mr_cache_bytes = Some((256 + rng.gen_below(256)) * 4096);
+        Self {
+            name: "randomized",
+            seed,
+            nodes,
+            qps_per_node,
+            replicas,
+            window_bytes,
+            n_ios,
+            read_fraction,
+            resync: true,
+            election: true,
+            profile: ChaosProfile::Scale,
+            tenant_weights: vec![1],
+            mr_cache_bytes,
+            addr_span: nodes as u64 * STRIPE_BYTES,
+            scheduler: SchedulerKind::default(),
             plan,
         }
     }
@@ -180,6 +245,34 @@ impl Scenario {
             profile: ChaosProfile::Standard,
             tenant_weights: vec![1],
             mr_cache_bytes: Some(64 * 4096),
+            addr_span: ADDR_SPAN,
+            scheduler: SchedulerKind::default(),
+            plan,
+        }
+    }
+
+    /// A named scenario at cluster scale: `nodes` nodes × 1 QP, 3-way
+    /// replication, a 64-page window, and an address span of one stripe
+    /// per node — the topology the rack-fault regression scenarios and
+    /// the 1000-node acceptance run drive.
+    pub fn named_scale(name: &'static str, seed: u64, nodes: usize, plan: FaultPlan) -> Self {
+        assert!(nodes >= 3, "scale topology needs 3-way replication");
+        Self {
+            name,
+            seed,
+            nodes,
+            qps_per_node: 1,
+            replicas: 3,
+            window_bytes: Some(64 * 4096),
+            n_ios: 1500,
+            read_fraction: 0.4,
+            resync: true,
+            election: true,
+            profile: ChaosProfile::Standard,
+            tenant_weights: vec![1],
+            mr_cache_bytes: Some(512 * 4096),
+            addr_span: nodes as u64 * STRIPE_BYTES,
+            scheduler: SchedulerKind::default(),
             plan,
         }
     }
@@ -206,6 +299,15 @@ impl Scenario {
     /// scenario.
     pub fn without_election(mut self) -> Self {
         self.election = false;
+        self
+    }
+
+    /// Run this scenario on the pre-refactor `BinaryHeap` scheduler
+    /// instead of the calendar queue. The replay-equivalence suite
+    /// (`tests/pinned_replay.rs`) runs every pinned seed both ways and
+    /// asserts the full reports are identical.
+    pub fn with_reference_scheduler(mut self) -> Self {
+        self.scheduler = SchedulerKind::Reference;
         self
     }
 }
@@ -263,6 +365,7 @@ pub fn replay_command(sc: &Scenario) -> String {
             ChaosProfile::Standard => "",
             ChaosProfile::ElectionHeavy => "CHAOS_PROFILE=election ",
             ChaosProfile::Qos => "CHAOS_PROFILE=qos ",
+            ChaosProfile::Scale => "CHAOS_PROFILE=scale ",
         };
         format!(
             "{profile}CHAOS_SEED={:#x} cargo test --release --test chaos_scenarios \
@@ -334,7 +437,7 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
     if let Some(cap) = sc.mr_cache_bytes {
         spec = spec.mr_cache(cap);
     }
-    let mut fab = ChaosFabric::build(sc.seed, &spec, sc.plan.clone());
+    let mut fab = ChaosFabric::build_with_scheduler(sc.seed, &spec, sc.plan.clone(), sc.scheduler);
     let n_tenants = sc.tenant_weights.len();
     // workload stream is independent of the fabric's fault stream
     let mut rng = Pcg32::with_stream(sc.seed, 0x10AD5);
@@ -370,7 +473,7 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
                 Dir::Write
             };
             let len = 4096 * (1 + rng.gen_below(MAX_IO_PAGES));
-            let mut addr = rng.gen_below(ADDR_SPAN / 4096) * 4096;
+            let mut addr = rng.gen_below(sc.addr_span / 4096) * 4096;
             // the engine-level splitter lifted the old stripe-local
             // contract: multi-stripe I/Os are split into stripe-local
             // legs at submission. Bias a slice of the workload onto
@@ -620,6 +723,35 @@ mod tests {
             replay_command(&sc).starts_with("CHAOS_PROFILE=qos "),
             "{}",
             replay_command(&sc)
+        );
+    }
+
+    #[test]
+    fn scale_profile_seeds_pass_the_runner() {
+        for seed in 0..2u64 {
+            let sc = Scenario::randomized_with_profile(seed, ChaosProfile::Scale);
+            assert!(sc.nodes >= 256, "scale means hundreds of nodes");
+            assert!(sc.window_bytes.is_some(), "scale is always windowed");
+            assert_eq!(sc.addr_span, sc.nodes as u64 * STRIPE_BYTES);
+            if let Err(e) = run_scenario(&sc) {
+                panic!("{e}");
+            }
+        }
+        let sc = Scenario::randomized_with_profile(0xFEED, ChaosProfile::Scale);
+        assert!(
+            replay_command(&sc).starts_with("CHAOS_PROFILE=scale "),
+            "{}",
+            replay_command(&sc)
+        );
+    }
+
+    #[test]
+    fn reference_scheduler_builder_flips_the_knob() {
+        let sc = Scenario::randomized(3);
+        assert_eq!(sc.scheduler, SchedulerKind::Calendar, "calendar is the default");
+        assert_eq!(
+            sc.with_reference_scheduler().scheduler,
+            SchedulerKind::Reference
         );
     }
 

@@ -20,9 +20,9 @@ pub mod engine;
 pub mod lru;
 pub mod trace;
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
+use crate::util::eventq::EventQueue;
 use crate::util::fxhash::FxHashMap;
 
 use crate::config::FabricConfig;
@@ -81,29 +81,6 @@ enum Ev {
     /// Deferred merge-queue drain (the "earliest arriving thread" of
     /// Load-aware Batching reaching the merge function).
     EngineKick { dir: Dir },
-}
-
-struct HeapEv {
-    t: u64,
-    seq: u64,
-    ev: Ev,
-}
-
-impl PartialEq for HeapEv {
-    fn eq(&self, o: &Self) -> bool {
-        self.t == o.t && self.seq == o.seq
-    }
-}
-impl Eq for HeapEv {}
-impl PartialOrd for HeapEv {
-    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(o))
-    }
-}
-impl Ord for HeapEv {
-    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
-        (self.t, self.seq).cmp(&(o.t, o.seq))
-    }
 }
 
 /// A WQE queued at a NIC processing unit.
@@ -214,8 +191,9 @@ pub struct Sim {
     pub trace: Trace,
 
     now: u64,
-    seq: u64,
-    heap: BinaryHeap<Reverse<HeapEv>>,
+    /// Shared virtual-time scheduler (same FIFO `(t, seq)` pop order as
+    /// the `BinaryHeap` it replaced — see [`crate::util::eventq`]).
+    events: EventQueue<Ev>,
     stopped: bool,
 
     // NIC + wire resources
@@ -321,8 +299,7 @@ impl Sim {
             stack,
             trace: Trace::default(),
             now: 0,
-            seq: 0,
-            heap: BinaryHeap::new(),
+            events: EventQueue::new(),
             stopped: false,
             nic_queue_depth: 0,
             pcie_free: 0,
@@ -479,13 +456,10 @@ impl Sim {
     // ---------------- internals ----------------
 
     fn schedule(&mut self, t: u64, ev: Ev) {
-        let t = t.max(self.now);
-        self.seq += 1;
-        self.heap.push(Reverse(HeapEv {
-            t,
-            seq: self.seq,
-            ev,
-        }));
+        // the queue clamps t to its own popped clock, which equals
+        // self.now except after a deadline cutoff — clamp here too so
+        // the pre-refactor semantics hold exactly
+        self.events.push(t.max(self.now), ev);
     }
 
     fn update_inflight(&mut self, dops: i64, dbytes: i64) {
@@ -891,15 +865,15 @@ impl Sim {
         self.driver = Some(d);
 
         while !self.stopped {
-            let Some(Reverse(hev)) = self.heap.pop() else {
+            let Some((t, ev)) = self.events.pop() else {
                 break;
             };
-            if hev.t > deadline_ns {
+            if t > deadline_ns {
                 self.now = deadline_ns;
                 break;
             }
-            self.now = hev.t;
-            match hev.ev {
+            self.now = t;
+            match ev {
                 Ev::PuWake { pu } => {
                     self.pus[pu].wake_at = None;
                     self.kick_pu(pu, self.now);

@@ -335,13 +335,14 @@ impl Driver for IozoneDriver {
         self.pump(sim, 0);
     }
 
-    fn on_io_done(&mut self, sim: &mut Sim, io: &AppIo, _lat: u64, done_at: u64) {
+    fn on_io_done(&mut self, sim: &mut Sim, io: &AppIo, lat: u64, done_at: u64) {
         self.inflight = self.inflight.saturating_sub(1);
         self.done_bytes += io.len;
         {
             let mut s = self.stats.borrow_mut();
             s.ops_done += 1;
             s.warm_ops += 1;
+            s.op_lat.record(lat);
         }
         if self.done_bytes >= self.file_bytes && self.inflight == 0 {
             self.phase_finished(sim, done_at);
@@ -362,6 +363,19 @@ pub fn run_iozone(
     record: u64,
     file_bytes: u64,
 ) -> (f64, f64) {
+    let (w, r, _) = run_iozone_with_stats(fabric, stack, nodes, record, file_bytes);
+    (w, r)
+}
+
+/// [`run_iozone`] returning the per-request [`DriverStats`] as well —
+/// the macro bench trajectory gates the FUSE request p99 from it.
+pub fn run_iozone_with_stats(
+    fabric: &crate::config::FabricConfig,
+    stack: &crate::coordinator::StackConfig,
+    nodes: usize,
+    record: u64,
+    file_bytes: u64,
+) -> (f64, f64, DriverStats) {
     let stats = DriverStats::shared();
     // FUSE crossing ≈ 6 µs per request (same client for every system —
     // the paper compares FUSE-based systems against each other only);
@@ -376,7 +390,15 @@ pub fn run_iozone(
     let stage_r =
         crate::coordinator::mr_strategy::post_cost_ns(fabric, stack.mr, stack.space, chunk, false);
     let drv = IozoneDriver::new(
-        nodes, 1 << 20, record, file_bytes, 6_000, stage_w, stage_r, depth, stats,
+        nodes,
+        1 << 20,
+        record,
+        file_bytes,
+        6_000,
+        stage_w,
+        stage_r,
+        depth,
+        stats.clone(),
     );
     let cell = Rc::new(RefCell::new((0u64, 0u64)));
     // wrap to capture phase times
@@ -413,7 +435,8 @@ pub fn run_iozone(
             file_bytes as f64 / ns as f64 // bytes/ns == GB/s
         }
     };
-    (gbs(w_ns), gbs(r_ns))
+    let taken = std::mem::take(&mut *stats.borrow_mut());
+    (gbs(w_ns), gbs(r_ns), taken)
 }
 
 #[cfg(test)]

@@ -1,0 +1,453 @@
+//! Shared virtual-time event scheduler for the discrete-event backends.
+//!
+//! Both DES backends (`fabric::sim` and `fabric::chaos`) used to carry
+//! their own `BinaryHeap<Reverse<(at, seq, ev)>>` loop. [`EventQueue`] is
+//! the one shared replacement: a **calendar queue** (a 1024-bucket timing
+//! wheel over 4096 ns slots with a sorted "near" lane and an unsorted
+//! "far" overflow tier) that stays O(1) amortized per operation at
+//! thousands of nodes, while popping in exactly the order the heaps did —
+//! globally minimal `(at, seq)` with FIFO tie-breaking on the internal
+//! sequence number, so pinned chaos seeds replay bit-identically.
+//!
+//! [`ReferenceQueue`] preserves the pre-refactor `BinaryHeap` scheduler
+//! verbatim. It exists so equivalence is a *test*, not a hope: the chaos
+//! fabric can be built against either scheduler
+//! (`ChaosFabric::build_with_scheduler`) and `tests/pinned_replay.rs`
+//! asserts the full scenario reports match field-for-field.
+//!
+//! # Structure
+//!
+//! Virtual time is split into three tiers by distance from `now`:
+//!
+//! * **near** — a single `Vec` sorted *descending* by `(at, seq)` so the
+//!   minimum pops from the end in O(1). Covers `[now, near_end)`.
+//! * **wheel** — `NBUCKETS` unsorted buckets of `BUCKET_NS` each,
+//!   covering `[near_end, near_end + NBUCKETS * BUCKET_NS)`. A push is
+//!   O(1) (index by `at / BUCKET_NS mod NBUCKETS`); when the near lane
+//!   drains, the first non-empty bucket is swapped in wholesale (the two
+//!   `Vec`s trade capacity, so steady state allocates nothing) and
+//!   sorted once — O(k log k) for k events that each cost O(log n) in a
+//!   heap.
+//! * **far** — an unsorted overflow `Vec` for events beyond the wheel
+//!   horizon. Before every bucket scan the queue flushes far events that
+//!   the advancing horizon has caught up with; when the wheel is empty
+//!   it rebases the window onto the earliest far event.
+//!
+//! The bucket width matches the fabrics' event scale (deliveries land
+//! 1–9 µs out, so a handful share a bucket) and the wheel spans ~4.2 ms
+//! of virtual time, which covers every in-flight completion; only
+//! long-range control events (node revivals, storm ends) ever touch the
+//! far tier.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// Number of buckets in the wheel (one lap spans `NBUCKETS * BUCKET_NS`).
+const NBUCKETS: usize = 1024;
+/// Width of one bucket in virtual nanoseconds.
+const BUCKET_NS: u64 = 4096;
+/// One full lap of the wheel in virtual nanoseconds.
+const WINDOW_NS: u64 = NBUCKETS as u64 * BUCKET_NS;
+
+/// A scheduled event: fire time, insertion sequence, payload.
+struct Entry<T> {
+    at: u64,
+    seq: u64,
+    item: T,
+}
+
+/// Calendar-queue scheduler. Pops `(at, item)` pairs in ascending
+/// `(at, seq)` order, where `seq` is the queue-internal insertion
+/// counter — i.e. FIFO among events scheduled for the same instant.
+pub struct EventQueue<T> {
+    /// Sorted descending by `(at, seq)`; the minimum is at the end.
+    near: Vec<Entry<T>>,
+    /// Exclusive upper bound of the near lane (a `BUCKET_NS` multiple).
+    near_end: u64,
+    /// The wheel: unsorted buckets indexed by `(at / BUCKET_NS) % NBUCKETS`.
+    buckets: Vec<Vec<Entry<T>>>,
+    /// Total entries currently in the wheel.
+    wheel_len: usize,
+    /// Unsorted overflow beyond the wheel horizon.
+    far: Vec<Entry<T>>,
+    /// Virtual time of the last popped event; pushes clamp to it.
+    now: u64,
+    /// Insertion counter (tie-break within an instant).
+    next_seq: u64,
+    /// Total entries across all tiers.
+    len: usize,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    /// An empty queue at virtual time 0.
+    pub fn new() -> Self {
+        EventQueue {
+            near: Vec::new(),
+            near_end: 0,
+            buckets: std::iter::repeat_with(Vec::new).take(NBUCKETS).collect(),
+            wheel_len: 0,
+            far: Vec::new(),
+            now: 0,
+            next_seq: 0,
+            len: 0,
+        }
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Virtual time of the most recently popped event.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Schedule `item` at virtual time `at` (clamped to never precede
+    /// the last popped event, exactly as the old schedulers clamped).
+    pub fn push(&mut self, at: u64, item: T) {
+        let at = at.max(self.now);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.len += 1;
+        let entry = Entry { at, seq, item };
+        if at < self.near_end {
+            // rare: an event lands inside the already-sorted lane
+            let idx = self.near.partition_point(|e| (e.at, e.seq) > (at, seq));
+            self.near.insert(idx, entry);
+        } else if at < self.near_end + WINDOW_NS {
+            let idx = ((at / BUCKET_NS) % NBUCKETS as u64) as usize;
+            self.buckets[idx].push(entry);
+            self.wheel_len += 1;
+        } else {
+            self.far.push(entry);
+        }
+    }
+
+    /// Pop the earliest event as `(at, item)`; ties pop in push order.
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        loop {
+            if let Some(e) = self.near.pop() {
+                self.len -= 1;
+                self.now = e.at;
+                return Some((e.at, e.item));
+            }
+            if self.wheel_len == 0 {
+                if self.far.is_empty() {
+                    return None;
+                }
+                self.rebase_onto_far();
+                continue;
+            }
+            // The horizon may have advanced past far events scheduled
+            // under an older window; pull them into the wheel *before*
+            // scanning, or a later bucket could pop ahead of them.
+            self.flush_far_into_wheel();
+            let first = self.near_end / BUCKET_NS;
+            let mut serviced = false;
+            for off in 0..NBUCKETS as u64 {
+                let slot = first + off;
+                let idx = (slot % NBUCKETS as u64) as usize;
+                if self.buckets[idx].is_empty() {
+                    continue;
+                }
+                // Swap the bucket in wholesale: the drained near lane's
+                // capacity moves into the bucket for reuse, so steady
+                // state allocates nothing.
+                std::mem::swap(&mut self.near, &mut self.buckets[idx]);
+                self.wheel_len -= self.near.len();
+                self.near
+                    .sort_unstable_by(|a, b| (b.at, b.seq).cmp(&(a.at, a.seq)));
+                self.near_end = (slot + 1) * BUCKET_NS;
+                serviced = true;
+                break;
+            }
+            debug_assert!(serviced, "wheel_len > 0 but every bucket was empty");
+            if !serviced {
+                // unreachable by construction; avoid an infinite loop
+                // in release builds if the invariant is ever broken
+                self.wheel_len = 0;
+            }
+        }
+    }
+
+    /// Move far events the advancing horizon has caught up with into
+    /// their wheel buckets. Every moved event has `at >= near_end`
+    /// (far events are at or beyond the horizon that existed when they
+    /// were pushed, and `near_end` never advances past that horizon).
+    fn flush_far_into_wheel(&mut self) {
+        let horizon = self.near_end + WINDOW_NS;
+        let mut i = 0;
+        while i < self.far.len() {
+            if self.far[i].at < horizon {
+                let e = self.far.swap_remove(i);
+                debug_assert!(e.at >= self.near_end);
+                let idx = ((e.at / BUCKET_NS) % NBUCKETS as u64) as usize;
+                self.buckets[idx].push(e);
+                self.wheel_len += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Wheel and near lane are empty but far is not: fast-forward the
+    /// window so it starts at the earliest far event's bucket, then
+    /// flush. Guaranteed to move at least that event into the wheel.
+    fn rebase_onto_far(&mut self) {
+        debug_assert!(self.near.is_empty() && self.wheel_len == 0);
+        let min_at = self.far.iter().map(|e| e.at).min().unwrap_or(0);
+        self.near_end = self.near_end.max((min_at / BUCKET_NS) * BUCKET_NS);
+        self.flush_far_into_wheel();
+        debug_assert!(self.wheel_len > 0);
+    }
+}
+
+/// The pre-refactor scheduler, verbatim: a `BinaryHeap` of
+/// `Reverse<(at, seq, item)>` ordered by `(at, seq)` only. Kept so the
+/// calendar queue's pop order can be asserted against the original
+/// implementation run-for-run (see `tests/pinned_replay.rs`), and as
+/// the model for the property tests below.
+pub struct ReferenceQueue<T> {
+    heap: BinaryHeap<Reverse<RefEntry<T>>>,
+    now: u64,
+    next_seq: u64,
+}
+
+struct RefEntry<T> {
+    at: u64,
+    seq: u64,
+    item: T,
+}
+
+// Order by (at, seq) only — the payload never participates, exactly as
+// the old `Event`/`HeapEv` manual impls had it.
+impl<T> PartialEq for RefEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<T> Eq for RefEntry<T> {}
+impl<T> PartialOrd for RefEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for RefEntry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+impl<T> Default for ReferenceQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> ReferenceQueue<T> {
+    /// An empty queue at virtual time 0.
+    pub fn new() -> Self {
+        ReferenceQueue {
+            heap: BinaryHeap::new(),
+            now: 0,
+            next_seq: 0,
+        }
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Virtual time of the most recently popped event.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Schedule `item` at virtual time `at` (same clamp as
+    /// [`EventQueue::push`]).
+    pub fn push(&mut self, at: u64, item: T) {
+        let at = at.max(self.now);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(RefEntry { at, seq, item }));
+    }
+
+    /// Pop the earliest event as `(at, item)`; ties pop in push order.
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        let Reverse(e) = self.heap.pop()?;
+        self.now = e.at;
+        Some((e.at, e.item))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Drive the calendar queue, the reference queue, and a plain
+    /// `BinaryHeap` model through one interleaved push/pop schedule and
+    /// demand identical pop sequences (times *and* payloads, so FIFO
+    /// tie-breaks are checked, not just timestamps).
+    fn drive(seed: u64, ops: usize, max_gap: u64, tie_bias: bool) {
+        let mut rng = Pcg32::new(seed);
+        let mut cal: EventQueue<u64> = EventQueue::new();
+        let mut reference: ReferenceQueue<u64> = ReferenceQueue::new();
+        let mut model: BinaryHeap<Reverse<(u64, u64, u64)>> = BinaryHeap::new();
+        let mut model_seq = 0u64;
+        let mut model_now = 0u64;
+        let mut payload = 0u64;
+        for _ in 0..ops {
+            let do_push = cal.is_empty() || rng.gen_bool(0.6);
+            if do_push {
+                let mut at = cal.now() + rng.gen_below(max_gap.max(1));
+                if tie_bias && rng.gen_bool(0.5) {
+                    // heavy tie pressure: reuse the current instant
+                    at = cal.now();
+                }
+                payload += 1;
+                cal.push(at, payload);
+                reference.push(at, payload);
+                let clamped = at.max(model_now);
+                model.push(Reverse((clamped, model_seq, payload)));
+                model_seq += 1;
+            } else {
+                let got = cal.pop();
+                let refr = reference.pop();
+                let want = model.pop().map(|Reverse((t, _, p))| (t, p));
+                if let Some((t, _)) = want {
+                    model_now = t;
+                }
+                assert_eq!(got, want, "calendar diverged from the model");
+                assert_eq!(refr, want, "reference diverged from the model");
+            }
+        }
+        // drain: every remaining event in identical order
+        loop {
+            let got = cal.pop();
+            let refr = reference.pop();
+            let want = model.pop().map(|Reverse((t, _, p))| (t, p));
+            assert_eq!(got, want);
+            assert_eq!(refr, want);
+            if want.is_none() {
+                break;
+            }
+        }
+        assert!(cal.is_empty() && reference.is_empty());
+    }
+
+    #[test]
+    fn matches_heap_model_at_fabric_timescales() {
+        // gaps shaped like the chaos fabric's deliveries (1–9 µs)
+        for seed in 0..8 {
+            drive(seed, 4_000, 9_000, false);
+        }
+    }
+
+    #[test]
+    fn matches_heap_model_under_fifo_tie_pressure() {
+        for seed in 0..8 {
+            drive(0x71E ^ seed, 2_000, 64, true);
+        }
+    }
+
+    #[test]
+    fn matches_heap_model_across_the_far_horizon() {
+        // gaps far beyond one wheel lap (4.19 ms) force the far tier
+        // and the rebase/flush paths
+        for seed in 0..8 {
+            drive(0xFA2 ^ seed, 2_000, 40 * WINDOW_NS, false);
+        }
+    }
+
+    #[test]
+    fn fifo_ties_pop_in_push_order() {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..500 {
+            q.push(12_345, i);
+        }
+        for i in 0..500 {
+            assert_eq!(q.pop(), Some((12_345, i)));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn past_pushes_clamp_to_now() {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        q.push(10_000, 1);
+        assert_eq!(q.pop(), Some((10_000, 1)));
+        q.push(5, 2); // in the past: clamps to now
+        q.push(10_000, 3); // same instant as now, later seq
+        assert_eq!(q.pop(), Some((10_000, 2)));
+        assert_eq!(q.pop(), Some((10_000, 3)));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.now(), 10_000);
+    }
+
+    #[test]
+    fn far_events_caught_by_the_advancing_horizon_keep_order() {
+        // One event just beyond the initial horizon, then a stream of
+        // near events that advances the window past it: the far event
+        // must pop in global order, not after the whole wheel drains.
+        let mut q: EventQueue<u64> = EventQueue::new();
+        q.push(WINDOW_NS + 10, 999); // far at push time
+        let mut payload = 0;
+        let mut at = 0;
+        while at < 2 * WINDOW_NS {
+            q.push(at, payload);
+            payload += 1;
+            at += 1_000;
+        }
+        let mut last = (0u64, 0u64);
+        let mut seen_far = false;
+        let mut prev_at = 0u64;
+        while let Some((t, p)) = q.pop() {
+            assert!(t >= prev_at, "time ran backwards: {t} after {prev_at}");
+            prev_at = t;
+            if p == 999 {
+                seen_far = true;
+                assert_eq!(t, WINDOW_NS + 10);
+            } else if !seen_far {
+                last = (t, p);
+            }
+        }
+        assert!(seen_far);
+        // the event popped right before the far one is the last near
+        // event scheduled before WINDOW_NS + 10
+        assert!(last.0 <= WINDOW_NS + 10);
+    }
+
+    #[test]
+    fn len_tracks_all_tiers() {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        q.push(100, 1); // wheel
+        q.push(10 * WINDOW_NS, 2); // far
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((100, 1)));
+        assert_eq!(q.len(), 1);
+        q.push(150, 3); // below near_end now: sorted-lane insert
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((150, 3)));
+        assert_eq!(q.pop(), Some((10 * WINDOW_NS, 2)));
+        assert!(q.is_empty());
+    }
+}

@@ -1,6 +1,8 @@
 //! Shared utilities: deterministic RNGs, Zipfian generators, histograms,
-//! statistics, property-test driver, and human-readable formatting.
+//! statistics, property-test driver, the shared virtual-time event
+//! queue, and human-readable formatting.
 
+pub mod eventq;
 pub mod fmt;
 pub mod fxhash;
 pub mod hist;

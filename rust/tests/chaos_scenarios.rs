@@ -18,8 +18,8 @@
 use rdmabox::coordinator::node::NodeState;
 use rdmabox::coordinator::EngineSpec;
 use rdmabox::fabric::chaos::{
-    replay_command, run_scenario, ChaosFabric, ChaosProfile, FaultPlan, Scenario, ScenarioReport,
-    RESYNC_CHUNK_BYTES, STRIPE_BYTES,
+    rack_members, replay_command, run_scenario, ChaosFabric, ChaosProfile, FaultPlan, Scenario,
+    ScenarioReport, RESYNC_CHUNK_BYTES, STRIPE_BYTES,
 };
 use rdmabox::fabric::Dir;
 
@@ -59,15 +59,18 @@ fn env_u64(name: &str) -> Option<u64> {
     }
 }
 
-/// Which randomized mix the sweep draws (`CHAOS_PROFILE=election` and
-/// `CHAOS_PROFILE=qos` are what the nightly `chaos-extended` workflow
-/// sets; replay commands carry it).
+/// Which randomized mix the sweep draws (`CHAOS_PROFILE=election`,
+/// `CHAOS_PROFILE=qos` and `CHAOS_PROFILE=scale` are what the nightly
+/// `chaos-extended` workflow sets; replay commands carry it).
 fn env_profile() -> ChaosProfile {
     match std::env::var("CHAOS_PROFILE").ok().as_deref() {
         Some("election") => ChaosProfile::ElectionHeavy,
         Some("qos") => ChaosProfile::Qos,
+        Some("scale") => ChaosProfile::Scale,
         Some("") | None => ChaosProfile::Standard,
-        Some(other) => panic!("CHAOS_PROFILE must be `election`, `qos`, or unset, got `{other}`"),
+        Some(other) => {
+            panic!("CHAOS_PROFILE must be `election`, `qos`, `scale`, or unset, got `{other}`")
+        }
     }
 }
 
@@ -496,6 +499,128 @@ fn qos_mix_isolates_tenants_under_storms() {
         r.tenant_posted_bytes.iter().all(|&b| b > 0),
         "both tenants must move bytes: {r:?}"
     );
+}
+
+// ---------------- cluster-scale scenarios ----------------
+
+/// A whole rack (16 of 256 nodes) loses its ToR uplink mid-run: every
+/// write leg into the rack errors while the members stay nominally up.
+/// The engine must demote the diverged replicas, repair them through the
+/// resync pipeline, and never let a read observe the divergence — at a
+/// cluster size where every submit keeps hundreds of deliveries queued.
+#[test]
+fn rack_partition_heals_at_256_nodes() {
+    let rack = rack_members(3, 256, 16);
+    let plan = FaultPlan::none().rack_partition(&rack, 1_000, 400_000);
+    let sc = Scenario::named_scale("rack_partition_heals_at_256_nodes", 0x2AC_0001, 256, plan);
+    let r = check(&sc);
+    assert!(r.partitioned_wcs > 0, "the rack partition never bit: {r:?}");
+    assert!(r.resync_demotions >= 1, "diverged replicas not demoted: {r:?}");
+    assert_eq!(r.stale_reads, 0, "divergence leaked to a read: {r:?}");
+    assert_eq!(r.retired, r.submitted, "no I/O stranded at scale: {r:?}");
+}
+
+/// Incast at scale: 300 nodes fan into a cluster-wide latency storm and
+/// admission must collapse gracefully — the window bound is checked
+/// continuously by the runner through the whole storm, nothing fails
+/// over, and no I/O is stranded once the congestion lifts.
+#[test]
+fn incast_storm_collapses_admission_gracefully_at_300_nodes() {
+    let plan = FaultPlan::none().latency_storm(10_000, 400_000, 50_000);
+    let sc = Scenario::named_scale(
+        "incast_storm_collapses_admission_gracefully_at_300_nodes",
+        0x2AC_0002,
+        300,
+        plan,
+    );
+    let r = check(&sc);
+    assert!(r.stormed_wcs > 0, "the storm never bit: {r:?}");
+    assert_eq!(r.failovers, 0, "a storm is slow, not broken: {r:?}");
+    assert_eq!(r.disk_fallbacks, 0, "{r:?}");
+    assert!(
+        r.elapsed_virtual_ns >= 60_000,
+        "stormed completions must actually be delayed: {r:?}"
+    );
+}
+
+/// The 1000-node acceptance scenario for the calendar-queue scheduler: a
+/// 50-node rack dies in a correlated burst early in the run, writes land
+/// in the dark window, and the rack revives into a resync storm. Every
+/// runner invariant (exactly-once retirement, bounded window, zero stale
+/// reads, full quiescence) must hold with thousands of concurrently
+/// scheduled events — the population the per-op O(log n) heap walk made
+/// painful.
+#[test]
+fn thousand_node_rack_loss_and_revival() {
+    let rack = rack_members(7, 1000, 50);
+    let plan = FaultPlan::none()
+        .rack_down(&rack, 30_000)
+        .rack_up(&rack, 250_000);
+    let sc = Scenario::named_scale("thousand_node_rack_loss_and_revival", 0x2AC_03E8, 1000, plan);
+    let r = check(&sc);
+    assert_eq!(r.node_transitions, 100, "50 deaths + 50 revivals: {r:?}");
+    assert_eq!(r.stale_reads, 0, "revival gated by resync at scale: {r:?}");
+    assert_eq!(r.retired, r.submitted, "no I/O stranded across the rack loss: {r:?}");
+}
+
+/// Deterministic rack-revival resync: contiguous placement (stripe `s`
+/// → nodes `s, s+1, s+2`) lets the schedule *construct* missed writes
+/// instead of hoping a random workload produces them. A 4-node rack
+/// dies in a burst, writes land during the outage (stripes 6 and 7 keep
+/// a live replica outside the rack, stripes 4 and 5 lose all three and
+/// fall to disk), and the simultaneous revival must gate every member
+/// that missed data behind resync — with zero stale reads afterwards.
+#[test]
+fn rack_revival_resync_storm_is_gated() {
+    let nodes = 16;
+    let spec = EngineSpec::new(nodes)
+        .replicated(3)
+        .resync(RESYNC_CHUNK_BYTES)
+        .election();
+    let mut fab = ChaosFabric::build(0x2AC_F, &spec, FaultPlan::none());
+    // version 1 on every stripe whose primary lives in the doomed rack
+    for s in 4..8u64 {
+        fab.submit(s, Dir::Write, s * STRIPE_BYTES, 4096);
+    }
+    fab.run_to_idle(STEPS).expect("quiescent");
+    // the rack (nodes 4..8) dies in a correlated burst, one tick apart
+    let rack = rack_members(1, nodes, 4);
+    assert_eq!(rack, vec![4, 5, 6, 7]);
+    let at = fab.now() + 1;
+    for (i, &n) in rack.iter().enumerate() {
+        fab.schedule_node_event(n, false, at + i as u64);
+    }
+    fab.run_to_idle(STEPS).expect("quiescent");
+    // version 2 lands during the outage
+    for s in 4..8u64 {
+        fab.submit(100 + s, Dir::Write, s * STRIPE_BYTES, 4096);
+    }
+    fab.run_to_idle(STEPS).expect("quiescent");
+    // power restored: all four revive at once — a resync storm
+    let at = fab.now() + 1;
+    for (i, &n) in rack.iter().enumerate() {
+        fab.schedule_node_event(n, true, at + i as u64);
+    }
+    fab.run_to_idle(STEPS).expect("quiescent");
+    assert_eq!(fab.stats.node_transitions, 8);
+    assert!(
+        fab.engine().stats.resyncs_completed >= 2,
+        "nodes 6 and 7 missed live-replica writes and must resync: {:?}",
+        fab.engine().stats
+    );
+    for &n in &rack {
+        assert_eq!(
+            fab.engine().node_state(n),
+            Some(NodeState::Alive),
+            "node {n} must rejoin after the storm"
+        );
+    }
+    // reads across the repaired rack observe only post-outage data
+    for s in 4..8u64 {
+        fab.submit(200 + s, Dir::Read, s * STRIPE_BYTES, 4096);
+    }
+    fab.run_to_idle(STEPS).expect("quiescent");
+    assert_eq!(fab.stats.stale_reads, 0, "{:?}", fab.stats);
 }
 
 // ---------------- randomized sweep + replay ----------------

@@ -1,0 +1,84 @@
+//! Pinned-seed replay: the calendar-queue scheduler must replay every
+//! pinned scenario bit-identically to the pre-refactor `BinaryHeap`
+//! event loop.
+//!
+//! [`rdmabox::util::eventq::ReferenceQueue`] *is* that original loop —
+//! the same `(at, seq)`-ordered heap the chaos fabric carried before the
+//! shared scheduler existed — kept alive behind
+//! [`rdmabox::fabric::chaos::SchedulerKind::Reference`] precisely so
+//! this suite can run one scenario on both backends and compare entire
+//! [`rdmabox::fabric::chaos::ScenarioReport`]s. Any divergence in pop
+//! order — even a FIFO tie-break — shifts virtual time, WC counts,
+//! failovers or peak window occupancy somewhere in this set, so
+//! "existing pinned seeds replay bit-identically" is a test, not a hope.
+
+use rdmabox::fabric::chaos::{run_scenario, ChaosProfile, FaultPlan, Scenario};
+
+/// Run `sc` on both schedulers and require the full reports equal.
+fn assert_bit_identical(sc: Scenario) {
+    let reference = sc.clone().with_reference_scheduler();
+    let calendar = run_scenario(&sc).unwrap_or_else(|e| {
+        panic!(
+            "seed {:#x} ({:?}) must pass on the calendar queue: {e}",
+            sc.seed, sc.profile
+        )
+    });
+    let heap = run_scenario(&reference).unwrap_or_else(|e| {
+        panic!(
+            "seed {:#x} ({:?}) must pass on the reference heap: {e}",
+            sc.seed, sc.profile
+        )
+    });
+    assert_eq!(
+        calendar, heap,
+        "seed {:#x} ({:?}) diverged between schedulers",
+        sc.seed, sc.profile
+    );
+}
+
+/// The sweep's historical pinned seeds across every small-cluster
+/// profile — the exact seed streams that existed before the calendar
+/// queue landed (the profiles draw no scale randomness, so these
+/// scenarios are byte-for-byte what the heap scheduler used to run).
+#[test]
+fn pinned_small_cluster_seeds_replay_bit_identically() {
+    for (seed, profile) in [
+        (0xA11CE, ChaosProfile::Standard),
+        (0xBEEF, ChaosProfile::Standard),
+        (0x52D3_A201, ChaosProfile::Standard),
+        (0x52D3_A202, ChaosProfile::Standard),
+        (0xFEED, ChaosProfile::ElectionHeavy),
+        (0x1, ChaosProfile::ElectionHeavy),
+        (0xB05_F00D, ChaosProfile::Qos),
+        (0x2, ChaosProfile::Qos),
+    ] {
+        assert_bit_identical(Scenario::randomized_with_profile(seed, profile));
+    }
+}
+
+/// The scale profile's own stream: hundreds of nodes with
+/// rack-correlated fault bursts — the event population where the
+/// calendar queue's bucketing (and its FIFO tie-breaking under
+/// same-tick correlated deaths) actually matters.
+#[test]
+fn pinned_scale_seeds_replay_bit_identically() {
+    for seed in [0x5CA1E, 0x5CA1F] {
+        assert_bit_identical(Scenario::randomized_with_profile(seed, ChaosProfile::Scale));
+    }
+}
+
+/// A named scenario with a dense hand-built plan: every event class the
+/// fabric schedules (deliveries, reorders, duplicates, reg stalls,
+/// storms, node churn) in one schedule, replayed on both backends.
+#[test]
+fn named_fault_mix_replays_bit_identically() {
+    let plan = FaultPlan::none()
+        .with_errors(0.2)
+        .with_reordering(0.3, 20_000)
+        .with_duplicates(0.2, 5_000)
+        .with_reg_stalls(0.3, 60_000)
+        .latency_storm(10_000, 90_000, 30_000)
+        .node_down(1, 40_000)
+        .node_up(1, 400_000);
+    assert_bit_identical(Scenario::named("named_fault_mix_replay", 0x51DE0, plan));
+}

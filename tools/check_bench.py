@@ -1,13 +1,17 @@
 #!/usr/bin/env python3
-"""Gate a micro_core bench run against the checked-in baseline.
+"""Gate a bench run (micro_core or macro_core) against its baseline.
 
 Usage:  check_bench.py BENCH_micro.json ci/bench_baseline.json
+        check_bench.py BENCH_macro.json ci/bench_macro_baseline.json
 
 Fails (exit 1) when any bench named in the baseline regresses by more
 than the tolerance (default 25%, override with BENCH_TOLERANCE=0.25):
 
   * throughput:  current ops_per_sec < baseline ops_per_sec * (1 - tol)
   * tail:        current p99_block_ns > baseline p99_block_ns * (1 + tol)
+                 (micro benches: p99 of per-block wall-clock means);
+                 same ceiling for p99_ns (macro benches: per-op
+                 *virtual-time* p99, deterministic per code version)
 
 Two exact (non-tolerance) gates ride along:
 
@@ -42,6 +46,9 @@ BENCH_micro artifact.
 
 Benches present in the run but absent from the baseline are reported
 informationally and do not gate (so adding a bench never breaks CI).
+The reverse is typo-proofed: a baseline entry whose bench is missing
+from the run fails the gate, and duplicate bench names in either file
+fail immediately (a duplicate would silently shadow a gated entry).
 """
 
 import json
@@ -66,6 +73,15 @@ def main():
     baseline = load(sys.argv[2])
     tol = float(os.environ.get("BENCH_TOLERANCE", "0.25"))
 
+    # duplicate names would silently shadow an entry in the dicts below
+    for label, doc in (("run", current), ("baseline", baseline)):
+        names = [b["name"] for b in doc.get("benches", [])]
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        if dupes:
+            print(f"check_bench: duplicate bench names in {label}: "
+                  f"{', '.join(dupes)}", file=sys.stderr)
+            sys.exit(1)
+
     cur_by_name = {b["name"]: b for b in current.get("benches", [])}
     all_cur = dict(cur_by_name)  # ratio checks may reference gated names
     failures = []
@@ -86,13 +102,14 @@ def main():
             )
         # tail-gate only benches that report a real tail (single-shot
         # benches like des_end_to_end omit p99_block_ns)
-        if "p99_block_ns" in base and "p99_block_ns" in cur:
-            p99_ceil = base["p99_block_ns"] * (1.0 + tol)
-            if cur["p99_block_ns"] > p99_ceil:
-                verdicts.append(
-                    f"p99 {cur['p99_block_ns']:.0f} ns > ceiling "
-                    f"{p99_ceil:.0f} (baseline {base['p99_block_ns']:.0f})"
-                )
+        for tail_key in ("p99_block_ns", "p99_ns"):
+            if tail_key in base and tail_key in cur:
+                p99_ceil = base[tail_key] * (1.0 + tol)
+                if cur[tail_key] > p99_ceil:
+                    verdicts.append(
+                        f"{tail_key} {cur[tail_key]:.0f} ns > ceiling "
+                        f"{p99_ceil:.0f} (baseline {base[tail_key]:.0f})"
+                    )
         # allocation gate: exact cap, no tolerance — missing-field
         # tolerant for artifacts from older bench binaries
         if "allocs_per_op" in base and "allocs_per_op" in cur:
@@ -131,8 +148,9 @@ def main():
                     f"— the QoS isolation claim regressed"
                 )
         status = "FAIL" if verdicts else "ok"
-        p99_str = (f"p99 {cur['p99_block_ns']:>10.1f} ns"
-                   if "p99_block_ns" in cur else "p99          — ")
+        cur_tail = cur.get("p99_block_ns", cur.get("p99_ns"))
+        p99_str = (f"p99 {cur_tail:>10.1f} ns"
+                   if cur_tail is not None else "p99          — ")
         alloc_str = (f"  {cur['allocs_per_op']:>7.3f} allocs/op"
                      if "allocs_per_op" in cur else "")
         print(f"  {name:28} {cur['ops_per_sec']:>14.0f} ops/s  "
