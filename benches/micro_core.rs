@@ -22,6 +22,7 @@ use std::time::Instant;
 use rdmabox::config::FabricConfig;
 use rdmabox::coordinator::batching::{plan_into, BatchLimits, BatchMode, ChainSpan, PlanArena};
 use rdmabox::coordinator::engine::{DrainOut, IoEngine, WcOut};
+use rdmabox::coordinator::gossip::GossipDelta;
 use rdmabox::coordinator::merge_queue::{MergeCheck, MergeQueue};
 use rdmabox::coordinator::polling::{PollStep, PollerFsm, PollingMode};
 use rdmabox::coordinator::{EngineSpec, StackConfig};
@@ -359,10 +360,12 @@ fn main() {
     // through submit -> merge -> plan -> admit -> retire, with the
     // engine's slab ledgers, the merge queues' swap-buffer drain, the
     // planner arena, and caller-owned DrainOut/WcOut scratch. The
-    // pinning-free MR cache is ON (cap = the 16 MiB working set), so its
-    // per-WR span probe and bookkeeping ride the gated cycle too. After
-    // warm-up this cycle must not touch the allocator at all —
-    // `allocs_per_op == 0` is enforced by ci/bench_baseline.json.
+    // pinning-free MR cache is ON (cap = the 16 MiB working set), and
+    // the gossip plane is ON (member 0 of 2, exchanging one full
+    // anti-entropy round with a peer engine every iteration through a
+    // reused delta), so both ride the gated cycle. After warm-up this
+    // cycle must not touch the allocator at all — `allocs_per_op == 0`
+    // is enforced by ci/bench_baseline.json.
     {
         let mut e = IoEngine::build(
             &EngineSpec::new(1)
@@ -370,8 +373,11 @@ fn main() {
                 .window(Some(7 << 20))
                 .replicated(1)
                 .stripe(1 << 20)
-                .mr_cache(16 << 20),
+                .mr_cache(16 << 20)
+                .gossip(0, 2),
         );
+        let mut peer = IoEngine::build(&EngineSpec::new(1).replicated(1).gossip(1, 2));
+        let mut delta = GossipDelta::default();
         let mut out = DrainOut::default();
         let mut wout = WcOut::default();
         let mut id = 0u64;
@@ -404,13 +410,20 @@ fn main() {
                 }
             }
             out.chains = chains;
+            // one anti-entropy round each way: the export refills the
+            // reused delta in place, the absorb is pure ledger merging
+            e.export_gossip_into(&mut delta);
+            peer.absorb_gossip(&delta);
+            peer.export_gossip_into(&mut delta);
+            e.absorb_gossip(&delta);
             retired
         });
     }
 
     // the same steady-state cycle with two weighted tenants: the DRR
     // drain (per-round entitlements + per-lane deficit accounting) and
-    // the per-tenant ledgers must not cost the zero-allocation property.
+    // the per-tenant ledgers must not cost the zero-allocation property
+    // — with the gossip plane ON here too, same shape as above.
     // ci/bench_baseline.json gates allocs_per_op == 0 here exactly like
     // the single-tenant pipeline above.
     {
@@ -422,8 +435,11 @@ fn main() {
                 .stripe(1 << 20)
                 .tenants(&[3, 1])
                 // two disjoint 16 MiB tenant regions: cap covers both
-                .mr_cache(32 << 20),
+                .mr_cache(32 << 20)
+                .gossip(0, 2),
         );
+        let mut peer = IoEngine::build(&EngineSpec::new(1).replicated(1).gossip(1, 2));
+        let mut delta = GossipDelta::default();
         let mut out = DrainOut::default();
         let mut wout = WcOut::default();
         let mut id = 0u64;
@@ -460,6 +476,10 @@ fn main() {
                     }
                 }
                 out.chains = chains;
+                e.export_gossip_into(&mut delta);
+                peer.absorb_gossip(&delta);
+                peer.export_gossip_into(&mut delta);
+                e.absorb_gossip(&delta);
                 retired
             },
         );

@@ -47,6 +47,7 @@ use crate::coordinator::spec::EngineSpec;
 use crate::coordinator::StackConfig;
 use crate::fabric::{AppIo, Dir, IdList, NodeId, QpId, TenantId, Wc, WcStatus, WorkRequest};
 use crate::metrics::TenantStats;
+use crate::coordinator::gossip::{state_code, state_from_code, GossipDelta, GossipState};
 use crate::util::slab::Slab;
 
 /// Shard affinity region size (re-exported from the channel layer, which
@@ -438,6 +439,11 @@ impl RangeSet {
         self.ranges.clear();
         out
     }
+
+    /// Visit every `(addr, len)` range without consuming the set.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.ranges.iter().map(|(&s, &e)| (s, e - s))
+    }
 }
 
 /// Per-node resync bookkeeping (the §6 node abstraction's recovery side).
@@ -632,6 +638,10 @@ pub struct IoEngine {
     /// registration + clock eviction over spans, probed per WR on the
     /// drain path. `None` = every buffer is considered pre-registered.
     mr_cache: Option<MrCache>,
+    /// The multi-engine coordination plane (`EngineSpec::gossip`):
+    /// interleaved epoch minting plus the anti-entropy bookkeeping
+    /// exchanged with peer engines. `None` = single-engine cluster.
+    gossip: Option<GossipState>,
     pub stats: EngineStats,
 }
 
@@ -676,6 +686,7 @@ impl IoEngine {
             plan_arena: PlanArena::default(),
             resync: ResyncState::disabled(nodes),
             mr_cache: None,
+            gossip: None,
             stats: EngineStats::default(),
         }
     }
@@ -709,6 +720,9 @@ impl IoEngine {
         }
         if let Some(cap) = spec.mr_cache_bytes {
             e.mr_cache = Some(MrCache::new(cap));
+        }
+        if let Some((id, n)) = spec.gossip {
+            e.gossip = Some(GossipState::new(id, n, spec.nodes));
         }
         e
     }
@@ -834,6 +848,228 @@ impl IoEngine {
         std::mem::take(&mut self.resync.surrendered)
     }
 
+    /// `true` when the multi-engine coordination plane is attached
+    /// (`EngineSpec::gossip`).
+    pub fn gossip_enabled(&self) -> bool {
+        self.gossip.is_some()
+    }
+
+    /// Gossip-plane counters; `None` when gossip is disabled.
+    pub fn gossip_stats(&self) -> Option<crate::metrics::GossipStats> {
+        self.gossip.as_ref().map(|g| g.stats)
+    }
+
+    /// Export this engine's full anti-entropy state into `delta`
+    /// (cleared first; its vectors are reused round over round, so a
+    /// steady-state exchange allocates nothing once they reach their
+    /// working size). The delta carries the required floor, every
+    /// per-node applied vector, versioned node states, the missed-write
+    /// backlog and the cumulative disk-surrender log.
+    pub fn export_gossip_into(&mut self, delta: &mut GossipDelta) {
+        let g = self
+            .gossip
+            .as_mut()
+            .expect("gossip is not enabled on this engine (EngineSpec::gossip)");
+        delta.clear();
+        g.round += 1;
+        g.stats.rounds_sent += 1;
+        delta.from = g.engine_id as u32;
+        delta.round = g.round;
+        delta.epoch_counter = g.counter;
+        for (s, e, ep) in self.resync.required.entries() {
+            delta.required.push((s, e, ep));
+        }
+        for (node, map) in self.resync.applied.iter().enumerate() {
+            for (s, e, ep) in map.entries() {
+                delta.applied.push((node as u32, s, e, ep));
+            }
+        }
+        if let Routing::Placed(m) = &self.routing {
+            for node in 0..m.nodes() {
+                delta
+                    .states
+                    .push((node as u32, g.node_versions[node], state_code(m.state(node))));
+            }
+        }
+        for (node, set) in self.resync.missed.iter().enumerate() {
+            for (a, l) in set.iter() {
+                delta.missed.push((node as u32, a, l));
+            }
+        }
+        for &(node, a, l) in &g.disk_log {
+            delta.surrendered.push((node as u32, a, l));
+        }
+    }
+
+    /// Merge a peer's delta into this engine. Every step is a
+    /// semilattice join — epoch max-merge, missed-range union,
+    /// last-writer-wins node states — so absorbing a delta twice, out
+    /// of order, or after a loss changes nothing beyond the first
+    /// in-order merge. Duplicates and reorders die at the per-peer
+    /// round filter without touching any ledger (the alloc-free path).
+    pub fn absorb_gossip(&mut self, delta: &GossipDelta) {
+        let g = self
+            .gossip
+            .as_mut()
+            .expect("gossip is not enabled on this engine (EngineSpec::gossip)");
+        let from = delta.from as usize;
+        if from == g.engine_id || from >= g.seen_round.len() {
+            return;
+        }
+        if delta.round <= g.seen_round[from] {
+            g.stats.stale_rounds += 1;
+            return;
+        }
+        g.seen_round[from] = delta.round;
+        g.absorb_counter(delta.epoch_counter);
+        g.stats.rounds_absorbed += 1;
+        // dominate every epoch the peer could have minted so the
+        // single-engine ledgers keep their monotone view
+        let counter_bound = g.counter * g.engines as u64;
+        self.resync.next_epoch = self.resync.next_epoch.max(counter_bound);
+
+        let mut raises = 0u64;
+        for &(s, e, ep) in &delta.required {
+            if e <= s || ep == 0 {
+                continue;
+            }
+            if self.resync.required.min_over(s, e - s) < ep {
+                raises += 1;
+            }
+            self.resync.required.raise(s, e - s, ep);
+        }
+        for &(n, s, e, ep) in &delta.applied {
+            let n = n as usize;
+            if n >= self.resync.applied.len() || e <= s || ep == 0 {
+                continue;
+            }
+            if self.resync.applied[n].min_over(s, e - s) < ep {
+                raises += 1;
+            }
+            self.resync.applied[n].raise(s, e - s, ep);
+        }
+
+        let mut adoptions = 0u64;
+        for &(n, ver, code) in &delta.states {
+            let n = n as usize;
+            let Some(state) = state_from_code(code) else {
+                continue;
+            };
+            let local = match &self.routing {
+                Routing::Placed(m) if n < m.nodes() => m.state(n),
+                _ => continue,
+            };
+            let g = self.gossip.as_mut().expect("checked above");
+            if n >= g.node_versions.len() {
+                continue;
+            }
+            let local_ver = g.node_versions[n];
+            // last writer wins; on a version tie the more severe state
+            // does, so both sides of a tie resolve identically
+            if ver < local_ver || (ver == local_ver && state_code(state) <= state_code(local)) {
+                continue;
+            }
+            // divergence guard: never adopt a less-severe state while
+            // this engine still owes the node repairs — our own promote
+            // will version past the peer's claim once the backlog drains
+            let backlog = n < self.resync.missed.len()
+                && (!self.resync.missed[n].is_empty()
+                    || !self.resync.repairing[n].is_empty()
+                    || self.resync.outstanding[n] > 0);
+            if backlog && state_code(state) < state_code(local) {
+                continue;
+            }
+            let g = self.gossip.as_mut().expect("checked above");
+            g.node_versions[n] = ver;
+            if state != local {
+                if let Routing::Placed(m) = &mut self.routing {
+                    m.set_state(n, state);
+                }
+                adoptions += 1;
+            }
+        }
+
+        let mut merged = 0u64;
+        for &(n, a, l) in &delta.missed {
+            let n = n as usize;
+            if n >= self.resync.missed.len() || l == 0 {
+                continue;
+            }
+            // self-heal pre-filter: after the epoch merges above, a
+            // node whose applied vector already dominates the required
+            // floor over the range holds the data — the peer's missed
+            // record is stale and must not echo back into resync
+            let req = self.resync.required.max_over(a, l);
+            if req > 0 && self.resync.applied[n].min_over(a, l) >= req {
+                continue;
+            }
+            let before = self.stats.missed_ranges;
+            self.record_missed(n, a, l);
+            if self.stats.missed_ranges > before {
+                merged += 1;
+            }
+        }
+
+        let start = self.gossip.as_ref().expect("checked above").seen_disk[from];
+        for &(n, a, l) in delta.surrendered.get(start..).unwrap_or(&[]) {
+            self.resync.surrendered.push((n as usize, a, l));
+        }
+        let absorbed = delta.surrendered.len().saturating_sub(start) as u64;
+
+        let g = self.gossip.as_mut().expect("checked above");
+        g.seen_disk[from] = g.seen_disk[from].max(delta.surrendered.len());
+        g.stats.epoch_raises += raises;
+        g.stats.state_adoptions += adoptions;
+        g.stats.missed_merged += merged;
+        g.stats.disk_spans_absorbed += absorbed;
+
+        if self.resync.enabled {
+            // anything learned is new information: wake dormant nodes
+            // and let the resync state machine re-evaluate
+            self.resync.dormant.fill(false);
+            self.resync.deferred_wait.fill(false);
+            self.kick_resync();
+        }
+    }
+
+    /// Order-insensitive digest of the converged gossip state: the
+    /// required floor, per-node applied vectors, versioned node states,
+    /// the missed backlog and the mint counter (an FNV-1a fold). Two
+    /// engines that have exchanged deltas in both directions and
+    /// quiesced hold equal fingerprints; transient divergence (repairs
+    /// in flight, unabsorbed rounds) shows up as inequality. Excludes
+    /// purely local bookkeeping (per-peer cursors, stats, the
+    /// disk-surrender log, in-flight repair state).
+    pub fn gossip_fingerprint(&self) -> u64 {
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn fold(h: u64, v: u64) -> u64 {
+            (h ^ v).wrapping_mul(FNV_PRIME)
+        }
+        let g = self
+            .gossip
+            .as_ref()
+            .expect("gossip is not enabled on this engine (EngineSpec::gossip)");
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        h = fold(h, g.counter);
+        for (s, e, ep) in self.resync.required.entries() {
+            h = fold(fold(fold(h, s), e), ep);
+        }
+        for (node, map) in self.resync.applied.iter().enumerate() {
+            h = fold(h, node as u64);
+            for (s, e, ep) in map.entries() {
+                h = fold(fold(fold(h, s), e), ep);
+            }
+            h = fold(h, g.node_versions[node]);
+            if let Routing::Placed(m) = &self.routing {
+                h = fold(h, state_code(m.state(node)) as u64);
+            }
+            for (a, l) in self.resync.missed[node].iter() {
+                h = fold(fold(h, a), l);
+            }
+        }
+        h
+    }
+
     /// Swap the admission window at runtime (admission-policy churn): the
     /// in-flight byte accounting survives the swap, so bytes posted under
     /// the old window release under the new one and a shrink below the
@@ -856,12 +1092,24 @@ impl IoEngine {
         self.resync.missed[node].len()
     }
 
+    /// Every local node-state transition funnels through here so the
+    /// gossip plane can version it for last-writer-wins exchange; peers
+    /// that absorb the transition adopt the version as-is.
+    fn set_node_state(&mut self, node: NodeId, state: NodeState) {
+        if let Routing::Placed(m) = &mut self.routing {
+            m.set_state(node, state);
+        }
+        if let Some(g) = &mut self.gossip {
+            g.node_versions[node] += 1;
+        }
+    }
+
     /// A node went down: exclude it from routing. In-flight verbs to it
     /// are expected to complete in error (the fabric's job); writes it
     /// misses from here on are recorded for resync.
     pub fn on_node_down(&mut self, node: NodeId) {
-        if let Routing::Placed(m) = &mut self.routing {
-            m.set_state(node, NodeState::Dead);
+        if matches!(self.routing, Routing::Placed(_)) {
+            self.set_node_state(node, NodeState::Dead);
         }
     }
 
@@ -877,8 +1125,8 @@ impl IoEngine {
         } else {
             NodeState::Resyncing
         };
-        if let Routing::Placed(m) = &mut self.routing {
-            m.set_state(node, state);
+        if matches!(self.routing, Routing::Placed(_)) {
+            self.set_node_state(node, state);
         } else {
             return;
         }
@@ -1050,9 +1298,18 @@ impl IoEngine {
                 // span, and no remote replica can satisfy the floor until
                 // a later write lands remotely, which is exactly right)
                 let epoch = if self.resync.election && io.dir == Dir::Write {
-                    self.resync.next_epoch += 1;
-                    self.resync.required.raise(io.addr, io.len, self.resync.next_epoch);
-                    self.resync.next_epoch
+                    // In a multi-engine cluster the epoch comes from the
+                    // gossip plane's interleaved stream, so two engines
+                    // writing the same range under a partition can never
+                    // mint the same epoch; `next_epoch` shadows it so the
+                    // single-engine ledgers keep their monotone view.
+                    let e = match &mut self.gossip {
+                        Some(g) => g.mint_epoch(),
+                        None => self.resync.next_epoch + 1,
+                    };
+                    self.resync.next_epoch = self.resync.next_epoch.max(e);
+                    self.resync.required.raise(io.addr, io.len, e);
+                    e
                 } else {
                     0
                 };
@@ -1790,11 +2047,11 @@ impl IoEngine {
         self.resync.missed[node].insert(addr, len);
         self.resync.dormant[node] = false;
         self.stats.missed_ranges += 1;
-        if let Routing::Placed(m) = &mut self.routing {
-            if m.state(node) == NodeState::Alive {
-                m.set_state(node, NodeState::Resyncing);
-                self.stats.resync_demotions += 1;
-            }
+        let demote =
+            matches!(&self.routing, Routing::Placed(m) if m.state(node) == NodeState::Alive);
+        if demote {
+            self.set_node_state(node, NodeState::Resyncing);
+            self.stats.resync_demotions += 1;
         }
     }
 
@@ -1958,8 +2215,8 @@ impl IoEngine {
             self.resync.repairing[node].is_empty(),
             "promoting node {node} with repairs still in flight"
         );
-        if let Routing::Placed(m) = &mut self.routing {
-            m.set_state(node, NodeState::Alive);
+        if matches!(self.routing, Routing::Placed(_)) {
+            self.set_node_state(node, NodeState::Alive);
         }
         self.stats.resyncs_completed += 1;
         self.resync.dormant.fill(false);
@@ -2037,6 +2294,9 @@ impl IoEngine {
                         // path instead of parking the node forever
                         self.stats.resync_disk_surrenders += 1;
                         self.resync.surrendered.push((node, sa, sl));
+                        if let Some(g) = &mut self.gossip {
+                            g.disk_log.push((node, sa, sl));
+                        }
                     }
                 }
             }
@@ -3286,5 +3546,206 @@ mod tests {
         let s = e.mr_cache_stats().expect("cache enabled");
         assert_eq!(s.pinned_bytes, MR_SPAN_BYTES, "cap held throughout");
         assert_eq!(s.cap_bytes, MR_SPAN_BYTES);
+    }
+
+    /// A member of a two-engine gossip cluster: 2 replica nodes, resync
+    /// with the donor election, interleaved epoch minting.
+    fn gossip_engine(id: usize) -> IoEngine {
+        IoEngine::build(
+            &EngineSpec::new(2)
+                .replicated(2)
+                .resync(4 * 4096)
+                .election()
+                .gossip(id, 2),
+        )
+    }
+
+    #[test]
+    fn gossip_mint_interleaves_epochs_across_engines() {
+        let mut a = gossip_engine(0);
+        let mut b = gossip_engine(1);
+        for i in 0..3u64 {
+            a.submit(io(i, Dir::Write, 0, i * 4096));
+            complete_all(&mut a);
+            b.submit(io(i, Dir::Write, 0, i * 4096));
+            complete_all(&mut b);
+        }
+        // engine 0 mints 1, 3, 5; engine 1 mints 2, 4, 6 — disjoint
+        assert_eq!(a.resync.next_epoch, 5);
+        assert_eq!(b.resync.next_epoch, 6);
+        assert_eq!(a.resync.required.max_over(0, 3 * 4096), 5);
+        assert_eq!(b.resync.required.max_over(0, 3 * 4096), 6);
+    }
+
+    #[test]
+    fn gossip_exchange_converges_fingerprints() {
+        let mut a = gossip_engine(0);
+        let mut b = gossip_engine(1);
+        // A does real work; B is idle — their states diverge
+        for i in 0..4u64 {
+            a.submit(io(i, Dir::Write, 0, i * 4096));
+            complete_all(&mut a);
+        }
+        assert_ne!(a.gossip_fingerprint(), b.gossip_fingerprint());
+        // one exchange in each direction converges them
+        let mut d = GossipDelta::default();
+        a.export_gossip_into(&mut d);
+        b.absorb_gossip(&d);
+        b.export_gossip_into(&mut d);
+        a.absorb_gossip(&d);
+        assert_eq!(a.gossip_fingerprint(), b.gossip_fingerprint());
+        let sa = a.gossip_stats().unwrap();
+        let sb = b.gossip_stats().unwrap();
+        assert_eq!((sa.rounds_sent, sa.rounds_absorbed), (1, 1));
+        assert_eq!((sb.rounds_sent, sb.rounds_absorbed), (1, 1));
+        assert!(sb.epoch_raises > 0, "B learned A's epochs: {sb:?}");
+        // post-merge mints on B dominate everything A minted
+        b.submit(io(9, Dir::Write, 0, 0));
+        assert!(b.resync.required.max_over(0, 4096) > a.resync.next_epoch);
+    }
+
+    #[test]
+    fn gossip_absorb_is_idempotent_under_duplication_and_reorder() {
+        let mut a = gossip_engine(0);
+        let mut b = gossip_engine(1);
+        a.submit(io(1, Dir::Write, 0, 0));
+        complete_all(&mut a);
+        let mut d1 = GossipDelta::default();
+        a.export_gossip_into(&mut d1);
+        a.submit(io(2, Dir::Write, 0, 4096));
+        complete_all(&mut a);
+        let mut d2 = GossipDelta::default();
+        a.export_gossip_into(&mut d2);
+        // in-order merge of both rounds
+        b.absorb_gossip(&d1);
+        b.absorb_gossip(&d2);
+        let fp = b.gossip_fingerprint();
+        // duplicate and reordered redeliveries die at the round filter
+        b.absorb_gossip(&d2);
+        b.absorb_gossip(&d1);
+        assert_eq!(b.gossip_fingerprint(), fp, "stale rounds changed state");
+        let s = b.gossip_stats().unwrap();
+        assert_eq!(s.rounds_absorbed, 2);
+        assert_eq!(s.stale_rounds, 2);
+        // a delta claiming to be from B itself is ignored outright
+        let mut own = d2.clone();
+        own.from = 1;
+        own.round = 99;
+        b.absorb_gossip(&own);
+        assert_eq!(b.gossip_fingerprint(), fp);
+    }
+
+    #[test]
+    fn gossip_state_adoption_is_lww_with_divergence_guard() {
+        let mut b = gossip_engine(1);
+        // a peer's versioned Dead claim for node 1 is adopted (no local
+        // backlog for it)
+        let dead = GossipDelta {
+            from: 0,
+            round: 1,
+            states: vec![(1, 3, state_code(NodeState::Dead))],
+            ..GossipDelta::default()
+        };
+        b.absorb_gossip(&dead);
+        assert_eq!(b.node_state(1), Some(NodeState::Dead));
+        assert_eq!(b.gossip_stats().unwrap().state_adoptions, 1);
+        // diverge node 0 locally: its replica leg fails while node 1 is
+        // revived so the write retires remotely
+        b.on_node_up(1);
+        b.submit(io(1, Dir::Write, 0, 0));
+        let wrs: Vec<WorkRequest> = b.drain_all(0).wrs;
+        for wr in &wrs {
+            let st = if wr.node == 0 {
+                WcStatus::Error
+            } else {
+                WcStatus::Success
+            };
+            b.on_wc(&wc_for(wr, st), 0);
+        }
+        assert_eq!(b.node_state(0), Some(NodeState::Resyncing));
+        let owed = b.resync_backlog(0) > 0
+            || !b.resync.repairing[0].is_empty()
+            || b.resync.outstanding[0] > 0;
+        assert!(owed, "node 0 is owed repairs");
+        // a peer claiming node 0 is Alive at a *higher* version must not
+        // win while this engine still owes node 0 repairs
+        let premature = GossipDelta {
+            from: 0,
+            round: 2,
+            states: vec![(0, 50, state_code(NodeState::Alive))],
+            ..GossipDelta::default()
+        };
+        b.absorb_gossip(&premature);
+        assert_eq!(
+            b.node_state(0),
+            Some(NodeState::Resyncing),
+            "divergence guard: backlog pins the local state"
+        );
+        // draining the backlog promotes locally as usual
+        let _ = complete_all_wrs(&mut b);
+        assert_eq!(b.node_state(0), Some(NodeState::Alive));
+    }
+
+    #[test]
+    fn gossip_missed_merge_feeds_resync_with_self_heal_filter() {
+        let mut b = gossip_engine(1);
+        // the peer says node 0 missed [0, 4096) at epoch 5 — but also
+        // shows node 0's applied vector already at 5: stale record,
+        // filtered out (no demotion, no backlog)
+        let stale = GossipDelta {
+            from: 0,
+            round: 1,
+            required: vec![(0, 4096, 5)],
+            applied: vec![(0, 0, 4096, 5)],
+            missed: vec![(0, 0, 4096)],
+            ..GossipDelta::default()
+        };
+        b.absorb_gossip(&stale);
+        assert_eq!(b.node_state(0), Some(NodeState::Alive));
+        assert_eq!(b.resync_backlog(0), 0);
+        assert_eq!(b.gossip_stats().unwrap().missed_merged, 0);
+        // now the floor moves past node 0's copy and node 1 holds it:
+        // the missed range is real, resync repairs it through the
+        // normal pipeline
+        let real = GossipDelta {
+            from: 0,
+            round: 2,
+            required: vec![(0, 4096, 7)],
+            applied: vec![(1, 0, 4096, 7)],
+            missed: vec![(0, 0, 4096)],
+            ..GossipDelta::default()
+        };
+        b.absorb_gossip(&real);
+        assert_eq!(b.node_state(0), Some(NodeState::Resyncing), "demoted");
+        assert_eq!(b.gossip_stats().unwrap().missed_merged, 1);
+        let wrs = complete_all_wrs(&mut b);
+        assert!(!wrs.is_empty(), "repair traffic flowed");
+        assert!(wrs.iter().any(|w| w.node == 1), "sourced from the holder");
+        assert_eq!(b.node_state(0), Some(NodeState::Alive), "repaired");
+        assert_eq!(b.stats.resync_disk_surrenders, 0);
+    }
+
+    #[test]
+    fn gossip_disk_log_absorbs_exactly_once_per_entry() {
+        let mut b = gossip_engine(1);
+        let d1 = GossipDelta {
+            from: 0,
+            round: 1,
+            surrendered: vec![(0, 0, 4096)],
+            ..GossipDelta::default()
+        };
+        b.absorb_gossip(&d1);
+        assert_eq!(b.take_disk_surrenders(), vec![(0, 0, 4096)]);
+        // the peer's log is cumulative: a later delta repeats old
+        // entries, and only the new tail is consumed
+        let d2 = GossipDelta {
+            from: 0,
+            round: 2,
+            surrendered: vec![(0, 0, 4096), (1, 8192, 4096)],
+            ..GossipDelta::default()
+        };
+        b.absorb_gossip(&d2);
+        assert_eq!(b.take_disk_surrenders(), vec![(1, 8192, 4096)]);
+        assert_eq!(b.gossip_stats().unwrap().disk_spans_absorbed, 2);
     }
 }

@@ -1,0 +1,418 @@
+//! Inter-engine anti-entropy gossip (ROADMAP item 1): the coordination
+//! plane that turns the single-client `IoEngine` into one member of a
+//! multi-engine cluster.
+//!
+//! Each engine periodically exports a [`GossipDelta`] — its epoch
+//! counter, required floor, per-node applied vectors, node-state
+//! transitions and disk-surrender log — and absorbs the deltas of its
+//! peers. Every merge is a semilattice join (epoch max-merge, range
+//! union, last-writer-wins on node states with a deterministic severity
+//! tie-break), so the protocol is idempotent and commutative: message
+//! loss, reordering and duplication can delay convergence but never
+//! corrupt it. Two engines that exchange deltas in both directions and
+//! then quiesce hold identical [`gossip fingerprints`].
+//!
+//! The delta carries *full state* (anti-entropy, not rumor mongering):
+//! cheap at the vector sizes the engine keeps (the required floor is
+//! pruned by `prune_epoch_floor`, missed ranges drain through resync),
+//! and immune to the delivery-order hazards a diff-based protocol would
+//! have to track. The only cursor-style state is the disk-surrender
+//! log, which is append-only per engine and consumed by index.
+//!
+//! Epoch minting is interleaved per engine (engine `i` of `n` mints
+//! `i + 1, i + n + 1, i + 2n + 1, …`), so two engines writing the same
+//! range under a partition can never mint the same epoch — the higher
+//! epoch wins deterministically at every replica, exactly like the
+//! single-engine monotone-epoch rule.
+//!
+//! [`gossip fingerprints`]: crate::coordinator::engine::IoEngine::gossip_fingerprint
+
+use crate::coordinator::node::NodeState;
+use crate::metrics::GossipStats;
+
+/// Wire code for [`NodeState::Alive`] (lowest severity).
+pub const STATE_ALIVE: u8 = 0;
+/// Wire code for [`NodeState::Resyncing`].
+pub const STATE_RESYNCING: u8 = 1;
+/// Wire code for [`NodeState::Dead`] (highest severity).
+pub const STATE_DEAD: u8 = 2;
+
+/// Severity-ordered wire code of a node state. On a version tie the
+/// *more severe* state wins on both sides of an exchange, so a
+/// simultaneous `Alive` vs `Dead` disagreement at the same version
+/// resolves identically everywhere.
+pub fn state_code(s: NodeState) -> u8 {
+    match s {
+        NodeState::Alive => STATE_ALIVE,
+        NodeState::Resyncing => STATE_RESYNCING,
+        NodeState::Dead => STATE_DEAD,
+    }
+}
+
+/// Inverse of [`state_code`]; `None` for an unknown wire code.
+pub fn state_from_code(c: u8) -> Option<NodeState> {
+    match c {
+        STATE_ALIVE => Some(NodeState::Alive),
+        STATE_RESYNCING => Some(NodeState::Resyncing),
+        STATE_DEAD => Some(NodeState::Dead),
+        _ => None,
+    }
+}
+
+/// Per-engine gossip bookkeeping, attached to an `IoEngine` by
+/// `EngineSpec::gossip(engine_id, engines)`. The epoch-vector content
+/// itself stays in the engine's resync ledgers; this tracks what gossip
+/// adds: the interleaved mint counter, per-peer round/log cursors,
+/// node-state versions and the append-only disk-surrender log.
+#[derive(Debug, Clone)]
+pub struct GossipState {
+    /// This engine's slot in the interleaved epoch space.
+    pub engine_id: usize,
+    /// Total peer engines sharing the epoch space (≥ 2).
+    pub engines: usize,
+    /// Rounds this engine has exported (stamped into each delta).
+    pub round: u64,
+    /// Highest round absorbed per peer engine — older or duplicate
+    /// deltas are dropped before any merge work (the alloc-free path).
+    pub seen_round: Vec<u64>,
+    /// LWW version per cluster node: bumped on every local state
+    /// transition, max-adopted from peers.
+    pub node_versions: Vec<u64>,
+    /// Interleaved mint counter: local mints increment it, absorbs
+    /// max-merge it (Lamport-style), so epochs stay globally unique
+    /// *and* roughly ordered across engines.
+    pub counter: u64,
+    /// Append-only log of disk surrenders this engine performed, in
+    /// order. Peers consume it by index ([`GossipState::seen_disk`]),
+    /// so retransmissions are idempotent.
+    pub disk_log: Vec<(usize, u64, u64)>,
+    /// Per peer engine: how many entries of *their* disk log this
+    /// engine has already absorbed.
+    pub seen_disk: Vec<usize>,
+    /// Merge counters, surfaced as [`metrics::GossipStats`].
+    ///
+    /// [`metrics::GossipStats`]: crate::metrics::GossipStats
+    pub stats: GossipStats,
+}
+
+impl GossipState {
+    /// Gossip bookkeeping for engine `engine_id` of `engines`, over a
+    /// cluster of `nodes` remote nodes.
+    pub fn new(engine_id: usize, engines: usize, nodes: usize) -> Self {
+        assert!(engines >= 2, "gossip needs at least two engines");
+        assert!(engine_id < engines, "engine id out of range");
+        Self {
+            engine_id,
+            engines,
+            round: 0,
+            seen_round: vec![0; engines],
+            node_versions: vec![0; nodes],
+            counter: 0,
+            disk_log: Vec::new(),
+            seen_disk: vec![0; engines],
+            stats: GossipStats::default(),
+        }
+    }
+
+    /// Mint the next write epoch from this engine's interleaved stream:
+    /// `counter * engines + engine_id + 1`. Epochs from distinct
+    /// engines never collide (`(e - 1) % engines` recovers the minter),
+    /// and a counter max-merged on every absorb keeps post-partition
+    /// mints above everything this engine has *seen* — the same
+    /// monotonicity the single-engine `next_epoch += 1` rule gives.
+    pub fn mint_epoch(&mut self) -> u64 {
+        let e = self.counter * self.engines as u64 + self.engine_id as u64 + 1;
+        self.counter += 1;
+        e
+    }
+
+    /// Lamport-style counter join on absorb.
+    pub fn absorb_counter(&mut self, remote: u64) {
+        self.counter = self.counter.max(remote);
+    }
+}
+
+/// One full-state anti-entropy exchange unit. All vectors use
+/// half-open `(start, end)` byte ranges, matching
+/// `EpochMap::entries`. Reused across rounds via [`GossipDelta::clear`]
+/// so steady-state export/absorb allocates nothing once the vectors
+/// have grown to their working size.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GossipDelta {
+    /// Sending engine id.
+    pub from: u32,
+    /// Sender's export round (staleness filter per peer).
+    pub round: u64,
+    /// Sender's interleaved mint counter.
+    pub epoch_counter: u64,
+    /// Required floor: `(start, end, epoch)`.
+    pub required: Vec<(u64, u64, u64)>,
+    /// Applied vectors: `(node, start, end, epoch)`.
+    pub applied: Vec<(u32, u64, u64, u64)>,
+    /// Node states: `(node, version, state code)`.
+    pub states: Vec<(u32, u64, u8)>,
+    /// Missed-write ranges still owed to a node: `(node, start, len)`.
+    pub missed: Vec<(u32, u64, u64)>,
+    /// The sender's *cumulative* disk-surrender log, `(node, addr,
+    /// len)` in append order; receivers consume past their cursor.
+    pub surrendered: Vec<(u32, u64, u64)>,
+}
+
+impl GossipDelta {
+    /// Empty the delta for reuse, keeping every vector's capacity.
+    pub fn clear(&mut self) {
+        self.from = 0;
+        self.round = 0;
+        self.epoch_counter = 0;
+        self.required.clear();
+        self.applied.clear();
+        self.states.clear();
+        self.missed.clear();
+        self.surrendered.clear();
+    }
+
+    /// Serialize into `buf` (appended; little-endian throughout). The
+    /// socket backend wraps this body in its length-prefixed frame.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&self.from.to_le_bytes());
+        buf.extend_from_slice(&self.round.to_le_bytes());
+        buf.extend_from_slice(&self.epoch_counter.to_le_bytes());
+        buf.extend_from_slice(&(self.required.len() as u32).to_le_bytes());
+        for &(s, e, ep) in &self.required {
+            buf.extend_from_slice(&s.to_le_bytes());
+            buf.extend_from_slice(&e.to_le_bytes());
+            buf.extend_from_slice(&ep.to_le_bytes());
+        }
+        buf.extend_from_slice(&(self.applied.len() as u32).to_le_bytes());
+        for &(n, s, e, ep) in &self.applied {
+            buf.extend_from_slice(&n.to_le_bytes());
+            buf.extend_from_slice(&s.to_le_bytes());
+            buf.extend_from_slice(&e.to_le_bytes());
+            buf.extend_from_slice(&ep.to_le_bytes());
+        }
+        buf.extend_from_slice(&(self.states.len() as u32).to_le_bytes());
+        for &(n, v, c) in &self.states {
+            buf.extend_from_slice(&n.to_le_bytes());
+            buf.extend_from_slice(&v.to_le_bytes());
+            buf.push(c);
+        }
+        buf.extend_from_slice(&(self.missed.len() as u32).to_le_bytes());
+        for &(n, a, l) in &self.missed {
+            buf.extend_from_slice(&n.to_le_bytes());
+            buf.extend_from_slice(&a.to_le_bytes());
+            buf.extend_from_slice(&l.to_le_bytes());
+        }
+        buf.extend_from_slice(&(self.surrendered.len() as u32).to_le_bytes());
+        for &(n, a, l) in &self.surrendered {
+            buf.extend_from_slice(&n.to_le_bytes());
+            buf.extend_from_slice(&a.to_le_bytes());
+            buf.extend_from_slice(&l.to_le_bytes());
+        }
+    }
+
+    /// Deserialize `bytes` into `self` (clearing first; vector capacity
+    /// is reused). Rejects truncated input, trailing garbage and
+    /// unknown node-state codes.
+    pub fn decode_from(&mut self, bytes: &[u8]) -> Result<(), &'static str> {
+        self.clear();
+        let mut cur = Cursor { bytes, pos: 0 };
+        self.from = cur.u32()?;
+        self.round = cur.u64()?;
+        self.epoch_counter = cur.u64()?;
+        let n = cur.u32()? as usize;
+        self.required.reserve(n);
+        for _ in 0..n {
+            self.required.push((cur.u64()?, cur.u64()?, cur.u64()?));
+        }
+        let n = cur.u32()? as usize;
+        self.applied.reserve(n);
+        for _ in 0..n {
+            self.applied
+                .push((cur.u32()?, cur.u64()?, cur.u64()?, cur.u64()?));
+        }
+        let n = cur.u32()? as usize;
+        self.states.reserve(n);
+        for _ in 0..n {
+            let entry = (cur.u32()?, cur.u64()?, cur.u8()?);
+            if state_from_code(entry.2).is_none() {
+                return Err("gossip delta: unknown node-state code");
+            }
+            self.states.push(entry);
+        }
+        let n = cur.u32()? as usize;
+        self.missed.reserve(n);
+        for _ in 0..n {
+            self.missed.push((cur.u32()?, cur.u64()?, cur.u64()?));
+        }
+        let n = cur.u32()? as usize;
+        self.surrendered.reserve(n);
+        for _ in 0..n {
+            self.surrendered.push((cur.u32()?, cur.u64()?, cur.u64()?));
+        }
+        if cur.pos != bytes.len() {
+            return Err("gossip delta: trailing bytes");
+        }
+        Ok(())
+    }
+
+    /// Convenience for tests and one-shot callers: decode into a fresh
+    /// delta.
+    pub fn decode(bytes: &[u8]) -> Result<Self, &'static str> {
+        let mut d = Self::default();
+        d.decode_from(bytes)?;
+        Ok(d)
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], &'static str> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or("gossip delta: truncated")?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, &'static str> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, &'static str> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, &'static str> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_delta() -> GossipDelta {
+        GossipDelta {
+            from: 1,
+            round: 42,
+            epoch_counter: 7,
+            required: vec![(0, 4096, 3), (8192, 16384, 9)],
+            applied: vec![(0, 0, 4096, 3), (2, 8192, 16384, 9)],
+            states: vec![(0, 5, STATE_ALIVE), (1, 2, STATE_DEAD), (2, 9, STATE_RESYNCING)],
+            missed: vec![(1, 4096, 8192)],
+            surrendered: vec![(1, 1 << 20, 4096)],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let d = sample_delta();
+        let mut buf = Vec::new();
+        d.encode_into(&mut buf);
+        assert_eq!(GossipDelta::decode(&buf).expect("decodes"), d);
+        // empty delta roundtrips too
+        let empty = GossipDelta::default();
+        let mut buf = Vec::new();
+        empty.encode_into(&mut buf);
+        assert_eq!(GossipDelta::decode(&buf).expect("decodes"), empty);
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_trailing_bytes() {
+        let d = sample_delta();
+        let mut buf = Vec::new();
+        d.encode_into(&mut buf);
+        for cut in [0, 1, 4, buf.len() / 2, buf.len() - 1] {
+            assert!(
+                GossipDelta::decode(&buf[..cut]).is_err(),
+                "truncation at {cut} must fail"
+            );
+        }
+        buf.push(0);
+        assert!(GossipDelta::decode(&buf).is_err(), "trailing byte must fail");
+    }
+
+    #[test]
+    fn decode_rejects_unknown_state_code() {
+        let mut d = sample_delta();
+        d.states.push((0, 1, 99));
+        let mut buf = Vec::new();
+        d.encode_into(&mut buf);
+        assert!(GossipDelta::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn clear_keeps_vector_capacity() {
+        let mut d = sample_delta();
+        let caps = (
+            d.required.capacity(),
+            d.applied.capacity(),
+            d.states.capacity(),
+            d.missed.capacity(),
+            d.surrendered.capacity(),
+        );
+        d.clear();
+        assert_eq!(d, GossipDelta::default());
+        assert!(d.required.capacity() >= caps.0);
+        assert!(d.applied.capacity() >= caps.1);
+        assert!(d.states.capacity() >= caps.2);
+        assert!(d.missed.capacity() >= caps.3);
+        assert!(d.surrendered.capacity() >= caps.4);
+    }
+
+    #[test]
+    fn state_codes_roundtrip_and_order_by_severity() {
+        for s in [NodeState::Alive, NodeState::Resyncing, NodeState::Dead] {
+            assert_eq!(state_from_code(state_code(s)), Some(s));
+        }
+        assert!(state_code(NodeState::Alive) < state_code(NodeState::Resyncing));
+        assert!(state_code(NodeState::Resyncing) < state_code(NodeState::Dead));
+        assert_eq!(state_from_code(3), None);
+    }
+
+    #[test]
+    fn interleaved_mints_never_collide_across_engines() {
+        let mut a = GossipState::new(0, 2, 3);
+        let mut b = GossipState::new(1, 2, 3);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..100 {
+            let ea = a.mint_epoch();
+            let eb = b.mint_epoch();
+            assert_eq!((ea - 1) % 2, 0, "engine 0 mints its own stream");
+            assert_eq!((eb - 1) % 2, 1, "engine 1 mints its own stream");
+            assert!(seen.insert(ea) && seen.insert(eb), "epochs are unique");
+        }
+    }
+
+    #[test]
+    fn counter_join_keeps_mints_above_everything_seen() {
+        let mut a = GossipState::new(0, 2, 1);
+        let mut b = GossipState::new(1, 2, 1);
+        for _ in 0..10 {
+            b.mint_epoch();
+        }
+        let high = b.mint_epoch();
+        a.absorb_counter(b.counter);
+        assert!(a.mint_epoch() > high, "post-join mints dominate absorbed history");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two engines")]
+    fn single_engine_gossip_is_rejected() {
+        let _ = GossipState::new(0, 1, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "engine id out of range")]
+    fn out_of_range_engine_id_is_rejected() {
+        let _ = GossipState::new(2, 2, 1);
+    }
+}

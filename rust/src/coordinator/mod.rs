@@ -16,6 +16,10 @@
 //! * [`channel`] — multi-QP channels per remote node (§6.1).
 //! * [`node`] — the node-level abstraction: placement, replication,
 //!   failover order (§6).
+//! * [`gossip`] — the inter-engine anti-entropy plane: epoch vectors,
+//!   required floors, node-state transitions and disk-span ownership
+//!   exchanged between peer engines (ROADMAP item 1 — many client
+//!   hosts sharing one replica set).
 //! * [`engine`] — the [`engine::IoEngine`] pipeline composing all of the
 //!   above: sharded merge queues (one per QP) → batch planner → admission
 //!   window → replication-aware retirement. The single submission path
@@ -30,6 +34,7 @@
 pub mod batching;
 pub mod channel;
 pub mod engine;
+pub mod gossip;
 pub mod merge_queue;
 pub mod mr_cache;
 pub mod mr_strategy;

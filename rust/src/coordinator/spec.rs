@@ -58,6 +58,14 @@ pub struct EngineSpec {
     /// ([`crate::coordinator::mr_cache::MrCache`]). `None` keeps the
     /// static MR strategies exactly as before.
     pub mr_cache_bytes: Option<u64>,
+    /// `Some((engine_id, engines))` makes this engine member
+    /// `engine_id` of an `engines`-strong multi-engine cluster: write
+    /// epochs are minted from the engine's interleaved stream and the
+    /// anti-entropy plane ([`crate::coordinator::gossip`]) exchanges
+    /// epoch vectors, node states and disk-span ownership with peers.
+    /// Requires replication (peer engines coordinate over a shared
+    /// replica set). `None` keeps the exact single-engine behaviour.
+    pub gossip: Option<(usize, usize)>,
 }
 
 impl EngineSpec {
@@ -78,6 +86,7 @@ impl EngineSpec {
             election: false,
             tenant_weights: vec![1],
             mr_cache_bytes: None,
+            gossip: None,
         }
     }
 
@@ -154,6 +163,16 @@ impl EngineSpec {
         self
     }
 
+    /// Join a multi-engine cluster as member `engine_id` of `engines`
+    /// (requires [`replicated`]): enables interleaved epoch minting and
+    /// the inter-engine gossip plane.
+    ///
+    /// [`replicated`]: EngineSpec::replicated
+    pub fn gossip(mut self, engine_id: usize, engines: usize) -> Self {
+        self.gossip = Some((engine_id, engines));
+        self
+    }
+
     /// Register the QoS tenants by weight. More than one entry switches
     /// the engine to hierarchical admission + weighted-fair drain; the
     /// default single entry keeps the exact single-tenant fast path.
@@ -206,6 +225,19 @@ impl EngineSpec {
                      posted WRs cannot all fit)"
                 );
             }
+        }
+        if let Some((id, n)) = self.gossip {
+            assert!(
+                n >= 2,
+                "spec: gossip cluster of {n} engine(s) — a single engine has \
+                 no peers to gossip with"
+            );
+            assert!(id < n, "spec: gossip engine id {id} out of range 0..{n}");
+            assert!(
+                self.replicas.is_some(),
+                "spec: gossip requires replication (call .replicated(r)) — \
+                 peer engines coordinate over a shared replica set"
+            );
         }
         assert!(!self.tenant_weights.is_empty(), "spec: at least one tenant");
         for (t, &w) in self.tenant_weights.iter().enumerate() {
@@ -286,5 +318,80 @@ mod tests {
     #[should_panic(expected = "replicas 3 out of range")]
     fn more_replicas_than_nodes_is_rejected() {
         EngineSpec::new(2).replicated(3).validate();
+    }
+
+    // ISSUE 9 satellite: the rejection paths below had no coverage —
+    // every guard in `validate` gets a test pinning its message.
+
+    #[test]
+    #[should_panic(expected = "at least one node")]
+    fn zero_nodes_is_rejected() {
+        EngineSpec::new(0).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one QP per node")]
+    fn zero_qps_is_rejected() {
+        EngineSpec::new(1).qps(0).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-byte admission window")]
+    fn zero_byte_window_is_rejected() {
+        EngineSpec::new(1).window(Some(0)).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "stripe_bytes must be nonzero")]
+    fn zero_stripe_is_rejected() {
+        EngineSpec::new(1).stripe(0).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "resync chunk must be nonzero")]
+    fn zero_resync_chunk_is_rejected() {
+        EngineSpec::new(2).replicated(2).resync(0).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one tenant")]
+    fn empty_tenant_list_is_rejected() {
+        EngineSpec::new(1).tenants(&[]).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range 1..=2^20")]
+    fn oversized_tenant_weight_is_rejected() {
+        EngineSpec::new(1).tenants(&[(1 << 20) + 1]).validate();
+    }
+
+    #[test]
+    fn gossip_spec_validates_with_replication() {
+        EngineSpec::new(3)
+            .replicated(2)
+            .resync(DEFAULT_RESYNC_CHUNK)
+            .election()
+            .gossip(0, 2)
+            .validate();
+        // election is optional: benches run gossip replicated-only
+        EngineSpec::new(1).replicated(1).gossip(1, 2).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "gossip requires replication")]
+    fn gossip_without_replication_is_rejected() {
+        EngineSpec::new(2).gossip(0, 2).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "no peers to gossip with")]
+    fn single_engine_gossip_cluster_is_rejected() {
+        EngineSpec::new(2).replicated(2).gossip(0, 1).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "engine id 2 out of range")]
+    fn gossip_engine_id_out_of_range_is_rejected() {
+        EngineSpec::new(2).replicated(2).gossip(2, 2).validate();
     }
 }

@@ -30,10 +30,17 @@
 //! divergence under partial partitions) assertable instead of
 //! invisible; enable the engine's repair protocol through the
 //! [`EngineSpec`] (`.resync(chunk)`) handed to [`ChaosFabric::build`].
+//!
+//! The [`multi`] submodule scales this to *two* peer engines sharing one
+//! replica cluster, with the gossip anti-entropy plane carried inside
+//! the same schedule (lost, reordered, blacked-out rounds) — see its
+//! docs for the cross-engine convergence invariants.
 
+pub mod multi;
 pub mod plan;
 pub mod scenario;
 
+pub use multi::{run_multi_scenario, MultiChaos, MultiPlan, MultiStats};
 pub use plan::{rack_members, AdmissionChurn, FaultPlan, LatencyStorm, NodeEvent, Partition, QpStall};
 pub use scenario::{replay_command, run_scenario, ChaosProfile, Scenario, ScenarioReport};
 

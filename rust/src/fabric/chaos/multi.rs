@@ -1,0 +1,1113 @@
+//! Multi-engine chaos: two peer [`IoEngine`]s — two client *hosts*, each
+//! with its own admission window, QPs, and resync ledgers — share one
+//! replicated page-store cluster and keep each other honest through the
+//! gossip anti-entropy plane ([`crate::coordinator::gossip`]).
+//!
+//! The single-engine [`super::ChaosFabric`] proves one pipeline upholds
+//! the invariants under a hostile completion schedule; this harness
+//! proves two pipelines *converge* under one: overlapping writes during
+//! asymmetric link partitions (engine A's legs to a node error while
+//! engine B's land), conflicting resync elections minting epochs
+//! concurrently, gossip rounds lost, reordered, and blacked out — all in
+//! virtual time on the shared calendar queue, a pure function of
+//! `(seed, MultiPlan, workload)`.
+//!
+//! Gossip is carried *inside* the schedule: each engine's tick exports a
+//! [`GossipDelta`] plus a snapshot of the sender's retired-floor and
+//! disk-ownership knowledge, delivered to the peer after loss/jitter
+//! draws. Piggybacking the floor on the delta is what keeps the
+//! staleness oracle causal: a receiver's floor only ever tightens
+//! together with the missed-range and node-state knowledge that makes
+//! the tighter floor safe to enforce. A read is stale when a replica
+//! serves a page below the version the *submitting engine* causally
+//! knew had retired — exactly the invariant the ISSUE's acceptance
+//! demands after healing.
+//!
+//! Quiescence is convergence-gated: gossip ticks re-arm after every
+//! event until both engines have absorbed at least one round and their
+//! [`IoEngine::gossip_fingerprint`]s agree, so an empty queue *implies*
+//! identical epoch vectors (and a livelock shows up as a bounded-step
+//! error naming the divergence, not a hang).
+
+use std::collections::BTreeSet;
+
+use crate::coordinator::engine::{DrainOut, IoEngine, RetiredIo, Submitted, RESYNC_PARENT};
+use crate::coordinator::gossip::GossipDelta;
+use crate::coordinator::spec::EngineSpec;
+use crate::fabric::{AppIo, Dir, NodeId, OpKind, QpId, Wc, WcStatus, WorkRequest, DEFAULT_TENANT};
+use crate::util::eventq::EventQueue;
+use crate::util::fxhash::FxHashMap;
+use crate::util::rng::Pcg32;
+
+use super::scenario::{replay_command, Scenario, ScenarioReport};
+use super::{
+    pages_of, stamp_fp, PageSet, PageStamp, LAT_BASE_NS, LAT_JITTER_NS, PAGE_BYTES,
+    RESYNC_CHUNK_BYTES,
+};
+
+/// Peer engines per cluster (the protocol generalizes; the harness pins
+/// the two-host shape the acceptance scenarios name).
+pub const ENGINES: usize = 2;
+/// Storage nodes of the shared replica cluster.
+pub const NODES: usize = 2;
+/// Livelock guard for one multi-engine run.
+const MAX_STEPS: u64 = 4_000_000;
+
+/// The multi-engine fault mix: everything the single-engine
+/// [`super::FaultPlan`] cannot express because it needs *two* views of
+/// one cluster — asymmetric link cuts, gossip-channel loss/blackout —
+/// plus cluster-wide node churn both engines observe.
+#[derive(Debug, Clone)]
+pub struct MultiPlan {
+    /// Per-delivery completion error probability (either engine).
+    pub error_rate: f64,
+    /// Probability a gossip send is dropped on the floor.
+    pub gossip_loss: f64,
+    /// Gossip tick interval in virtual ns.
+    pub gossip_every_ns: u64,
+    /// Uniform delivery jitter on gossip sends; above the tick interval
+    /// it reorders whole rounds in flight.
+    pub gossip_jitter_ns: u64,
+    /// `(engine, node, from_ns, to_ns)`: that engine's deliveries to
+    /// that node error inside the window — the peer engine's do not.
+    pub links: Vec<(usize, NodeId, u64, u64)>,
+    /// Both directions of the gossip channel are dark in this window.
+    pub gossip_down: Option<(u64, u64)>,
+    /// `(node, up, at_ns)`: cluster-wide death/revival, observed by
+    /// both engines at the same virtual instant.
+    pub node_events: Vec<(NodeId, bool, u64)>,
+}
+
+impl MultiPlan {
+    /// No faults: gossip at the default cadence, nothing cut or lost.
+    pub fn none() -> Self {
+        Self {
+            error_rate: 0.0,
+            gossip_loss: 0.0,
+            gossip_every_ns: 10_000,
+            gossip_jitter_ns: 4_000,
+            links: Vec::new(),
+            gossip_down: None,
+            node_events: Vec::new(),
+        }
+    }
+
+    pub fn with_errors(mut self, rate: f64) -> Self {
+        self.error_rate = rate;
+        self
+    }
+
+    pub fn with_gossip_loss(mut self, rate: f64) -> Self {
+        self.gossip_loss = rate;
+        self
+    }
+
+    pub fn gossip_cadence(mut self, every_ns: u64, jitter_ns: u64) -> Self {
+        self.gossip_every_ns = every_ns.max(1);
+        self.gossip_jitter_ns = jitter_ns;
+        self
+    }
+
+    /// Cut one engine's path to one node for a window (the asymmetric
+    /// divergence driver: the peer keeps writing the same ranges).
+    pub fn link_down(mut self, eng: usize, node: NodeId, from_ns: u64, to_ns: u64) -> Self {
+        self.links.push((eng, node, from_ns, to_ns));
+        self
+    }
+
+    pub fn gossip_blackout(mut self, from_ns: u64, to_ns: u64) -> Self {
+        self.gossip_down = Some((from_ns, to_ns));
+        self
+    }
+
+    pub fn node_down(mut self, node: NodeId, at_ns: u64) -> Self {
+        self.node_events.push((node, false, at_ns));
+        self
+    }
+
+    pub fn node_up(mut self, node: NodeId, at_ns: u64) -> Self {
+        self.node_events.push((node, true, at_ns));
+        self
+    }
+}
+
+/// What the multi-engine fabric did to the schedule.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct MultiStats {
+    pub delivered_wcs: u64,
+    pub injected_errors: u64,
+    /// Error completions caused by a link-partition window.
+    pub link_errors: u64,
+    /// Error completions caused by the target node being dead.
+    pub dead_node_errors: u64,
+    pub node_transitions: u64,
+    /// Gossip rounds put on the wire (after blackout, before loss).
+    pub gossip_sent: u64,
+    /// Gossip rounds dropped by blackout or loss.
+    pub gossip_dropped: u64,
+    /// Gossip rounds absorbed by a receiver.
+    pub gossip_delivered: u64,
+    pub retired: u64,
+    pub failovers: u64,
+    pub disk_fallbacks: u64,
+    /// Successful reads served below the submitting engine's causal
+    /// floor — the cross-engine invariant this harness exists to check.
+    pub stale_reads: u64,
+}
+
+enum MEvent {
+    Deliver {
+        eng: usize,
+        qp: QpId,
+        node: NodeId,
+        wr: WorkRequest,
+        inject_error: bool,
+    },
+    Gossip {
+        to: usize,
+        delta: GossipDelta,
+        /// Sender's per-page retired floor at export time.
+        floor: Vec<(u64, u64)>,
+        /// Sender's per-page disk-ownership versions at export time.
+        disk: Vec<(u64, u64)>,
+    },
+    Tick {
+        eng: usize,
+    },
+    Node {
+        node: NodeId,
+        up: bool,
+    },
+}
+
+/// Two placed [`IoEngine`]s over one shared page-store cluster, with the
+/// gossip plane carried as scheduled events. See the module docs for the
+/// model; the single-engine payload bookkeeping of
+/// [`super::ChaosFabric`] is reproduced here keyed by `(engine, id)`,
+/// with the floor and disk-ownership oracles split per engine.
+pub struct MultiChaos {
+    engines: Vec<IoEngine>,
+    plan: MultiPlan,
+    rng: Pcg32,
+    now_ns: u64,
+    events: EventQueue<MEvent>,
+    /// Ground truth: is the node up (both engines are notified of every
+    /// transition, so views differ only through link partitions).
+    node_live: Vec<bool>,
+    /// Shared per-node page stores — the one replica cluster.
+    stores: Vec<FxHashMap<u64, PageStamp>>,
+    /// Global monotone version counter per page: writes from either
+    /// engine are totally ordered, so the stores merge newest-wins.
+    versions: FxHashMap<u64, u64>,
+    /// Per-engine causal floor: highest version this engine knows has
+    /// retired (own retirements + floors learned through gossip).
+    floor: Vec<FxHashMap<u64, u64>>,
+    /// Per-engine disk-ownership versions (own surrenders + learned).
+    disk_vers: Vec<FxHashMap<u64, u64>>,
+    write_stamps: FxHashMap<(usize, u64), Vec<PageStamp>>,
+    parent_stamps: FxHashMap<(usize, u64), Vec<PageStamp>>,
+    durable: FxHashMap<(usize, u64), Vec<PageStamp>>,
+    read_subs: FxHashMap<(usize, u64), Vec<u64>>,
+    read_floor: FxHashMap<(usize, u64), Vec<(u64, u64)>>,
+    served: FxHashMap<(usize, u64), Vec<PageStamp>>,
+    tick_armed: Vec<bool>,
+    drain: DrainOut,
+    /// Per-engine log of ranges that engine surrendered to the disk
+    /// path (its own elections plus spans learned through gossip).
+    pub surrendered_log: Vec<Vec<(u64, u64)>>,
+    pub first_stale: Option<String>,
+    pub stats: MultiStats,
+}
+
+impl MultiChaos {
+    /// The paired-host spec: `NODES` nodes × 2-way placement with
+    /// resync, the donor election, and the gossip plane for engine
+    /// `eng` of [`ENGINES`].
+    fn engine_spec(eng: usize, window_bytes: Option<u64>) -> EngineSpec {
+        EngineSpec::new(NODES)
+            .qps(1)
+            .window(window_bytes)
+            .replicated(2)
+            .resync(RESYNC_CHUNK_BYTES)
+            .election()
+            .gossip(eng, ENGINES)
+    }
+
+    pub fn new(seed: u64, window_bytes: Option<u64>, plan: MultiPlan) -> Self {
+        let engines = (0..ENGINES)
+            .map(|e| IoEngine::build(&Self::engine_spec(e, window_bytes)))
+            .collect();
+        let node_events = plan.node_events.clone();
+        let mut fab = Self {
+            engines,
+            plan,
+            rng: Pcg32::with_stream(seed, 0xB0551),
+            now_ns: 0,
+            events: EventQueue::new(),
+            node_live: vec![true; NODES],
+            stores: (0..NODES).map(|_| FxHashMap::default()).collect(),
+            versions: FxHashMap::default(),
+            floor: (0..ENGINES).map(|_| FxHashMap::default()).collect(),
+            disk_vers: (0..ENGINES).map(|_| FxHashMap::default()).collect(),
+            write_stamps: FxHashMap::default(),
+            parent_stamps: FxHashMap::default(),
+            durable: FxHashMap::default(),
+            read_subs: FxHashMap::default(),
+            read_floor: FxHashMap::default(),
+            served: FxHashMap::default(),
+            tick_armed: vec![false; ENGINES],
+            drain: DrainOut::default(),
+            surrendered_log: (0..ENGINES).map(|_| Vec::new()).collect(),
+            first_stale: None,
+            stats: MultiStats::default(),
+        };
+        for (node, up, at) in node_events {
+            fab.events.push(at, MEvent::Node { node, up });
+        }
+        fab.arm_ticks();
+        fab
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now_ns
+    }
+
+    pub fn engine(&self, eng: usize) -> &IoEngine {
+        &self.engines[eng]
+    }
+
+    pub fn pending_events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Both engines have absorbed at least one round and their gossip
+    /// fingerprints agree — the protocol's convergence condition, and
+    /// the condition under which ticks stop re-arming.
+    pub fn converged(&self) -> bool {
+        let exchanged = self
+            .engines
+            .iter()
+            .all(|e| e.gossip_stats().is_some_and(|s| s.rounds_absorbed > 0));
+        let fp0 = self.engines[0].gossip_fingerprint();
+        let fp1 = self.engines[1].gossip_fingerprint();
+        exchanged && fp0 == fp1
+    }
+
+    /// Submit one application I/O on `eng` at the current virtual time
+    /// and drain its pipeline. Write stamps mint from the *global*
+    /// version counter; read floors snapshot the *submitting engine's*
+    /// causal floor.
+    pub fn submit(&mut self, eng: usize, id: u64, dir: Dir, addr: u64, len: u64) -> Submitted {
+        let io = AppIo {
+            id,
+            dir,
+            node: 0,
+            addr,
+            len,
+            thread: 0,
+            tenant: DEFAULT_TENANT,
+            t_submit: self.now_ns,
+        };
+        let stamps: Vec<PageStamp> = match dir {
+            Dir::Write => pages_of(addr, len)
+                .map(|page| {
+                    let v = self.versions.entry(page).or_insert(0);
+                    *v += 1;
+                    PageStamp {
+                        page,
+                        version: *v,
+                        fp: stamp_fp(page, *v),
+                    }
+                })
+                .collect(),
+            Dir::Read => Vec::new(),
+        };
+        let sub = self.engines[eng].submit(io);
+        self.absorb_surrenders(eng);
+        match dir {
+            Dir::Write => {
+                for &(a, l) in &sub.disk_legs {
+                    for page in pages_of(a, l) {
+                        let v = self.versions.get(&page).copied().unwrap_or(0);
+                        self.mark_disk(eng, page, v);
+                    }
+                }
+                if !sub.sub_ids.is_empty() {
+                    for sid in &sub.sub_ids {
+                        let (a, l, _) = self.engines[eng].sub_span(*sid).expect("live sub");
+                        let leg_pages = pages_of(a, l);
+                        let leg: Vec<PageStamp> = stamps
+                            .iter()
+                            .filter(|st| leg_pages.contains(&st.page))
+                            .copied()
+                            .collect();
+                        self.write_stamps.insert((eng, *sid), leg);
+                    }
+                    self.parent_stamps.insert((eng, id), stamps);
+                }
+            }
+            Dir::Read => {
+                if !sub.sub_ids.is_empty() {
+                    for sid in &sub.sub_ids {
+                        let (a, l, _) = self.engines[eng].sub_span(*sid).expect("live sub");
+                        let floors: Vec<(u64, u64)> = pages_of(a, l)
+                            .map(|page| {
+                                let fv = if self.disk_backed(eng, page) {
+                                    0
+                                } else {
+                                    self.floor[eng].get(&page).copied().unwrap_or(0)
+                                };
+                                (page, fv)
+                            })
+                            .collect();
+                        self.read_floor.insert((eng, *sid), floors);
+                    }
+                    self.read_subs.insert((eng, id), sub.sub_ids.to_vec());
+                }
+            }
+        }
+        self.pump(eng);
+        sub
+    }
+
+    fn pump(&mut self, eng: usize) {
+        let mut drain = std::mem::take(&mut self.drain);
+        self.engines[eng].drain_all_into(self.now_ns, &mut drain);
+        {
+            let mut wrs = drain.wrs.drain(..);
+            for chain in drain.chains.drain(..) {
+                for wr in wrs.by_ref().take(chain.end - chain.start) {
+                    self.schedule_wr(eng, chain.qp, chain.node, wr);
+                }
+            }
+        }
+        self.drain = drain;
+    }
+
+    fn schedule_wr(&mut self, eng: usize, qp: QpId, node: NodeId, wr: WorkRequest) {
+        let at = self.now_ns + LAT_BASE_NS + self.rng.gen_below(LAT_JITTER_NS);
+        let inject_error = self.plan.error_rate > 0.0 && self.rng.gen_bool(self.plan.error_rate);
+        self.events.push(
+            at,
+            MEvent::Deliver {
+                eng,
+                qp,
+                node,
+                wr,
+                inject_error,
+            },
+        );
+    }
+
+    fn link_down(&self, eng: usize, node: NodeId) -> bool {
+        let now = self.now_ns;
+        self.plan
+            .links
+            .iter()
+            .any(|&(e, n, from, to)| e == eng && n == node && now >= from && now < to)
+    }
+
+    fn mark_disk(&mut self, eng: usize, page: u64, v: u64) {
+        let e = self.disk_vers[eng].entry(page).or_insert(0);
+        if v > *e {
+            *e = v;
+        }
+    }
+
+    fn disk_backed(&self, eng: usize, page: u64) -> bool {
+        match self.disk_vers[eng].get(&page) {
+            Some(&dv) => dv >= self.floor[eng].get(&page).copied().unwrap_or(0),
+            None => false,
+        }
+    }
+
+    fn absorb_surrenders(&mut self, eng: usize) {
+        for (_, addr, len) in self.engines[eng].take_disk_surrenders() {
+            self.surrendered_log[eng].push((addr, len));
+            for page in pages_of(addr, len) {
+                let v = self.versions.get(&page).copied().unwrap_or(0);
+                self.mark_disk(eng, page, v);
+            }
+        }
+    }
+
+    fn arm_tick(&mut self, eng: usize) {
+        if self.tick_armed[eng] {
+            return;
+        }
+        self.tick_armed[eng] = true;
+        // stagger the engines half a period apart so rounds interleave
+        let phase = (eng as u64 + 1) * self.plan.gossip_every_ns / ENGINES as u64;
+        self.events.push(self.now_ns + phase.max(1), MEvent::Tick { eng });
+    }
+
+    fn arm_ticks(&mut self) {
+        for eng in 0..ENGINES {
+            self.arm_tick(eng);
+        }
+    }
+
+    /// Export `eng`'s delta + oracle snapshots and put the round in
+    /// flight to the peer — unless the blackout window or the loss draw
+    /// eats it (the protocol tolerates both; the round counter makes
+    /// stragglers detectable as stale on the receive side).
+    fn send_gossip(&mut self, eng: usize) {
+        if let Some((from, to)) = self.plan.gossip_down {
+            if self.now_ns >= from && self.now_ns < to {
+                self.stats.gossip_dropped += 1;
+                return;
+            }
+        }
+        self.stats.gossip_sent += 1;
+        if self.plan.gossip_loss > 0.0 && self.rng.gen_bool(self.plan.gossip_loss) {
+            self.stats.gossip_dropped += 1;
+            return;
+        }
+        let mut delta = GossipDelta::default();
+        self.engines[eng].export_gossip_into(&mut delta);
+        // causal piggyback: the floor tightens only together with the
+        // repair knowledge that makes enforcing it safe (module docs)
+        let floor: Vec<(u64, u64)> = self.floor[eng].iter().map(|(&p, &v)| (p, v)).collect();
+        let disk: Vec<(u64, u64)> = self.disk_vers[eng].iter().map(|(&p, &v)| (p, v)).collect();
+        let at = self.now_ns + 1 + self.rng.gen_below(self.plan.gossip_jitter_ns.max(1));
+        let to_eng = (eng + 1) % ENGINES;
+        self.events.push(
+            at,
+            MEvent::Gossip {
+                to: to_eng,
+                delta,
+                floor,
+                disk,
+            },
+        );
+    }
+
+    /// Advance to the next event and process it. Returns the
+    /// application I/Os that retired as `(engine, io)`, or `None` at
+    /// quiescence — which, by the tick re-arm rule, implies convergence.
+    pub fn step(&mut self) -> Option<Vec<(usize, RetiredIo)>> {
+        let (at, kind) = self.events.pop()?;
+        debug_assert!(at >= self.now_ns, "virtual time ran backwards");
+        self.now_ns = at;
+        let mut retired = Vec::new();
+        match kind {
+            MEvent::Node { node, up } => {
+                self.stats.node_transitions += 1;
+                self.node_live[node] = up;
+                for eng in 0..ENGINES {
+                    if up {
+                        self.engines[eng].on_node_up(node);
+                    } else {
+                        self.engines[eng].on_node_down(node);
+                    }
+                    self.absorb_surrenders(eng);
+                    self.pump(eng);
+                }
+            }
+            MEvent::Tick { eng } => {
+                self.tick_armed[eng] = false;
+                self.send_gossip(eng);
+            }
+            MEvent::Gossip {
+                to,
+                delta,
+                floor,
+                disk,
+            } => {
+                self.stats.gossip_delivered += 1;
+                self.engines[to].absorb_gossip(&delta);
+                // the absorb may have adopted surrendered disk spans
+                self.absorb_surrenders(to);
+                for (page, v) in floor {
+                    let f = self.floor[to].entry(page).or_insert(0);
+                    if v > *f {
+                        *f = v;
+                    }
+                }
+                for (page, v) in disk {
+                    self.mark_disk(to, page, v);
+                }
+                // the absorb may have kicked repair rounds
+                self.pump(to);
+            }
+            MEvent::Deliver {
+                eng,
+                qp,
+                node,
+                wr,
+                inject_error,
+            } => {
+                let up = self.node_live[node];
+                let cut = self.link_down(eng, node);
+                let status = if inject_error || !up || cut {
+                    WcStatus::Error
+                } else {
+                    WcStatus::Success
+                };
+                if inject_error {
+                    self.stats.injected_errors += 1;
+                } else if !up {
+                    self.stats.dead_node_errors += 1;
+                } else if cut {
+                    self.stats.link_errors += 1;
+                }
+                self.stats.delivered_wcs += 1;
+                if status == WcStatus::Success {
+                    self.move_payloads(eng, node, &wr);
+                }
+                let wc = Wc {
+                    wr_id: wr.wr_id,
+                    qp,
+                    op: wr.op,
+                    len: wr.len,
+                    app_ios: wr.app_ios,
+                    tenant: wr.tenant,
+                    status,
+                };
+                let out = self.engines[eng].on_wc(&wc, self.now_ns);
+                self.stats.failovers += u64::from(out.requeued);
+                for c in &out.resync_copies {
+                    if let Some(stamps) = self.served.remove(&(eng, c.read_sub)) {
+                        self.write_stamps.insert((eng, c.write_sub), stamps);
+                    }
+                }
+                for (sid, parent) in &out.completed_subs {
+                    if *parent != RESYNC_PARENT {
+                        if let Some(st) = self.write_stamps.get(&(eng, *sid)) {
+                            self.durable
+                                .entry((eng, *parent))
+                                .or_default()
+                                .extend(st.iter().copied());
+                        }
+                    }
+                }
+                for r in &out.retired {
+                    self.stats.retired += 1;
+                    if r.disk_fallback {
+                        self.stats.disk_fallbacks += 1;
+                    }
+                    self.note_retired(eng, r);
+                }
+                for (sid, _) in out.completed_subs.iter().chain(out.failed_subs.iter()) {
+                    self.write_stamps.remove(&(eng, *sid));
+                }
+                retired.extend(out.retired.into_iter().map(|r| (eng, r)));
+                self.absorb_surrenders(eng);
+                self.pump(eng);
+            }
+        }
+        // convergence-gated quiescence: while the epoch vectors differ
+        // (or no round has landed yet) the ticks stay armed, so the
+        // queue can only drain once the engines agree
+        if !self.converged() {
+            self.arm_ticks();
+        }
+        Some(retired)
+    }
+
+    fn move_payloads(&mut self, eng: usize, node: NodeId, wr: &WorkRequest) {
+        match wr.op {
+            OpKind::Write | OpKind::Send => {
+                for &sid in &wr.app_ios {
+                    let Some(stamps) = self.write_stamps.get(&(eng, sid)) else {
+                        continue; // late duplicate: already cleaned up
+                    };
+                    for st in stamps {
+                        let e = self.stores[node].entry(st.page).or_insert(*st);
+                        if st.version > e.version {
+                            *e = *st;
+                        }
+                    }
+                }
+            }
+            OpKind::Read => {
+                for &sid in &wr.app_ios {
+                    let Some((addr, len, _)) = self.engines[eng].sub_span(sid) else {
+                        continue;
+                    };
+                    let stamps: Vec<PageStamp> = pages_of(addr, len)
+                        .map(|page| {
+                            self.stores[node].get(&page).copied().unwrap_or_else(|| {
+                                PageStamp {
+                                    page,
+                                    version: 0,
+                                    fp: stamp_fp(page, 0),
+                                }
+                            })
+                        })
+                        .collect();
+                    self.served.insert((eng, sid), stamps);
+                }
+            }
+        }
+    }
+
+    fn note_retired(&mut self, eng: usize, r: &RetiredIo) {
+        if let Some(stamps) = self.parent_stamps.remove(&(eng, r.id)) {
+            let durable = self.durable.remove(&(eng, r.id)).unwrap_or_default();
+            let durable_pages: PageSet = durable.iter().map(|st| st.page).collect();
+            for st in &stamps {
+                if durable_pages.contains(&st.page) {
+                    let f = self.floor[eng].entry(st.page).or_insert(0);
+                    if st.version > *f {
+                        *f = st.version;
+                    }
+                } else {
+                    self.mark_disk(eng, st.page, st.version);
+                }
+            }
+            return;
+        }
+        let Some(sids) = self.read_subs.remove(&(eng, r.id)) else {
+            return;
+        };
+        for sid in sids {
+            let served = self.served.remove(&(eng, sid));
+            let floors = self.read_floor.remove(&(eng, sid));
+            if r.disk_fallback {
+                continue;
+            }
+            let (Some(served), Some(floors)) = (served, floors) else {
+                continue;
+            };
+            for (st, &(page, floor_v)) in served.iter().zip(floors.iter()) {
+                debug_assert_eq!(st.page, page, "served stamps misaligned with floor");
+                if st.version < floor_v {
+                    self.stats.stale_reads += 1;
+                    if self.first_stale.is_none() {
+                        self.first_stale = Some(format!(
+                            "engine {eng} io {} page {:#x}: served version {} below \
+                             its causal floor {}",
+                            r.id, st.page, st.version, floor_v
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run until the queue drains, bounded by `max_steps`. Because ticks
+    /// re-arm while the engines disagree, `Ok` implies convergence; the
+    /// error names the pending-event count and the convergence state.
+    pub fn run_to_converged(
+        &mut self,
+        max_steps: u64,
+    ) -> crate::runtime::Result<Vec<(usize, RetiredIo)>> {
+        let mut all = Vec::new();
+        for _ in 0..max_steps {
+            match self.step() {
+                Some(r) => all.extend(r),
+                None => {
+                    debug_assert!(self.converged(), "quiescent but diverged");
+                    return Ok(all);
+                }
+            }
+        }
+        Err(crate::runtime::err(format!(
+            "multi-engine fabric not quiescent after {max_steps} events \
+             ({} pending, converged: {})",
+            self.events.len(),
+            self.converged()
+        )))
+    }
+}
+
+/// Randomized two-engine run for the sweep (`CHAOS_PROFILE=multi`):
+/// workload and fault mix derive from the scenario's seed on streams of
+/// their own, so no small-profile or scale seed stream moves. Reached
+/// through [`super::run_scenario`], which dispatches
+/// [`super::ChaosProfile::Multi`] scenarios here; the report maps the
+/// multi-engine counters onto the shared [`ScenarioReport`] shape
+/// (engine counters summed, link errors under `partitioned_wcs`).
+pub fn run_multi_scenario(sc: &Scenario) -> crate::runtime::Result<ScenarioReport> {
+    let fail = |msg: String| -> crate::runtime::Error {
+        format!(
+            "chaos scenario `{}` (seed {:#x}) failed: {msg}\n  replay: {}",
+            sc.name,
+            sc.seed,
+            replay_command(sc)
+        )
+        .into()
+    };
+
+    let mut rng = Pcg32::with_stream(sc.seed, 0x3417E);
+    let mut plan = MultiPlan::none();
+    plan.gossip_every_ns = 8_000 + rng.gen_below(24_000);
+    plan.gossip_jitter_ns = 1 + rng.gen_below(plan.gossip_every_ns * 2);
+    plan.gossip_loss = rng.gen_f64() * 0.6;
+    if rng.gen_bool(0.5) {
+        plan.error_rate = rng.gen_f64() * 0.2;
+    }
+    // at least one asymmetric link cut per seed: the divergence driver
+    let cuts = 1 + rng.gen_below(3);
+    for _ in 0..cuts {
+        let eng = rng.gen_below(ENGINES as u64) as usize;
+        let node = rng.gen_below(NODES as u64) as usize;
+        let from = rng.gen_below(150_000);
+        let to = from + 20_000 + rng.gen_below(150_000);
+        plan = plan.link_down(eng, node, from, to);
+    }
+    if rng.gen_bool(0.4) {
+        let from = rng.gen_below(150_000);
+        plan = plan.gossip_blackout(from, from + 20_000 + rng.gen_below(100_000));
+    }
+    if rng.gen_bool(0.3) {
+        let node = rng.gen_below(NODES as u64) as usize;
+        let at = 20_000 + rng.gen_below(100_000);
+        plan = plan
+            .node_down(node, at)
+            .node_up(node, at + 30_000 + rng.gen_below(150_000));
+    }
+    let window_bytes = if rng.gen_bool(0.75) {
+        Some((4 + rng.gen_below(28)) * PAGE_BYTES)
+    } else {
+        None
+    };
+    let per_engine = 120 + rng.gen_below(180);
+    let read_fraction = 0.2 + rng.gen_f64() * 0.6;
+    // a 2 MiB working set: two placement stripes, shared by both
+    // engines, so overlapping writes and split legs are the common case
+    let span_pages = 512u64;
+
+    let mut fab = MultiChaos::new(sc.seed, window_bytes, plan);
+    let mut retired: Vec<BTreeSet<u64>> = (0..ENGINES).map(|_| BTreeSet::new()).collect();
+    let mut submitted = [0u64; ENGINES];
+    let mut disk_at_submit = 0u64;
+    let mut steps = 0u64;
+    let warmup = per_engine.min(16);
+
+    while submitted.iter().any(|&s| s < per_engine) || fab.pending_events() > 0 {
+        steps += 1;
+        if steps > MAX_STEPS {
+            return Err(fail(format!(
+                "livelock: {}+{} of 2×{per_engine} retired after {MAX_STEPS} steps",
+                retired[0].len(),
+                retired[1].len()
+            )));
+        }
+        // alternate submit opportunities between the engines so faults
+        // land on two part-submitted, part-in-flight pipelines
+        let eng = (steps % ENGINES as u64) as usize;
+        let can_submit = submitted[eng] < per_engine;
+        let do_submit = can_submit
+            && (submitted[eng] < warmup || fab.pending_events() == 0 || rng.gen_bool(0.5));
+        if do_submit {
+            let id = submitted[eng];
+            let dir = if rng.gen_bool(read_fraction) {
+                Dir::Read
+            } else {
+                Dir::Write
+            };
+            let len = PAGE_BYTES * (1 + rng.gen_below(4));
+            let addr = rng.gen_below(span_pages) * PAGE_BYTES;
+            let sub = fab.submit(eng, id, dir, addr, len);
+            submitted[eng] += 1;
+            if sub.disk_fallback {
+                disk_at_submit += 1;
+                if !retired[eng].insert(id) {
+                    return Err(fail(format!("engine {eng} io {id} retired twice (submit)")));
+                }
+            }
+        } else if let Some(rs) = fab.step() {
+            for (e, r) in rs {
+                if !retired[e].insert(r.id) {
+                    return Err(fail(format!("engine {e} io {} retired twice", r.id)));
+                }
+            }
+        }
+    }
+
+    // quiescence + convergence invariants, per engine and cross-engine
+    for eng in 0..ENGINES {
+        if retired[eng].len() as u64 != per_engine {
+            return Err(fail(format!(
+                "engine {eng} lost I/O: {} of {per_engine} retired",
+                retired[eng].len()
+            )));
+        }
+        if fab.engine(eng).queued_ios() != 0 {
+            return Err(fail(format!(
+                "engine {eng}: {} requests still queued at quiescence",
+                fab.engine(eng).queued_ios()
+            )));
+        }
+        if fab.engine(eng).regulator().in_flight() != 0 {
+            return Err(fail(format!(
+                "engine {eng} window not released: {} bytes stranded",
+                fab.engine(eng).regulator().in_flight()
+            )));
+        }
+        if let Some(w) = window_bytes {
+            let peak = fab.engine(eng).regulator().peak_in_flight;
+            if peak > w {
+                return Err(fail(format!(
+                    "engine {eng} peak in-flight {peak} exceeded window {w}"
+                )));
+            }
+        }
+    }
+    let fps = [
+        fab.engine(0).gossip_fingerprint(),
+        fab.engine(1).gossip_fingerprint(),
+    ];
+    if fps[0] != fps[1] || !fab.converged() {
+        return Err(fail(format!(
+            "epoch vectors diverged at quiescence: {:#018x} vs {:#018x}",
+            fps[0], fps[1]
+        )));
+    }
+    if fab.stats.gossip_delivered == 0 {
+        return Err(fail("gossip plane never exchanged a round".into()));
+    }
+    if fab.stats.stale_reads > 0 {
+        return Err(fail(format!(
+            "stale read served across engines: {} (first: {})",
+            fab.stats.stale_reads,
+            fab.first_stale.as_deref().unwrap_or("?")
+        )));
+    }
+
+    let sum = |f: fn(&IoEngine) -> u64| -> u64 { (0..ENGINES).map(|e| f(fab.engine(e))).sum() };
+    Ok(ScenarioReport {
+        submitted: submitted.iter().sum(),
+        retired: retired.iter().map(|r| r.len() as u64).sum(),
+        disk_at_submit,
+        failovers: fab.stats.failovers,
+        disk_fallbacks: fab.stats.disk_fallbacks,
+        duplicate_wcs: sum(|e| e.stats.duplicate_wcs),
+        delivered_wcs: fab.stats.delivered_wcs,
+        injected_errors: fab.stats.injected_errors,
+        reordered_wcs: 0,
+        stalled_wcs: 0,
+        reg_stalled_wcs: 0,
+        stormed_wcs: 0,
+        window_changes: 0,
+        partitioned_wcs: fab.stats.link_errors,
+        node_transitions: fab.stats.node_transitions,
+        stale_reads: fab.stats.stale_reads,
+        split_requests: sum(|e| e.stats.split_requests),
+        split_legs: sum(|e| e.stats.split_legs),
+        resync_rounds: sum(|e| e.stats.resync_rounds),
+        resync_copies: sum(|e| e.stats.resync_copies),
+        resync_demotions: sum(|e| e.stats.resync_demotions),
+        resync_elections: sum(|e| e.stats.resync_elections),
+        resync_self_heals: sum(|e| e.stats.resync_self_heals),
+        resync_disk_surrenders: sum(|e| e.stats.resync_disk_surrenders),
+        resyncs_completed: sum(|e| e.stats.resyncs_completed),
+        mr_hits: 0,
+        mr_misses: 0,
+        peak_in_flight: (0..ENGINES)
+            .map(|e| fab.engine(e).regulator().peak_in_flight)
+            .max()
+            .unwrap_or(0),
+        elapsed_virtual_ns: fab.now(),
+        tenant_posted_bytes: (0..ENGINES)
+            .map(|e| fab.engine(e).tenant_stats()[0].posted_bytes)
+            .collect(),
+        tenant_borrows: (0..ENGINES)
+            .map(|e| fab.engine(e).tenant_stats()[0].borrow_events)
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::node::NodeState;
+    use crate::fabric::chaos::ChaosProfile;
+
+    fn assert_all_alive(fab: &MultiChaos) {
+        for eng in 0..ENGINES {
+            for node in 0..NODES {
+                assert_eq!(
+                    fab.engine(eng).node_state(node),
+                    Some(NodeState::Alive),
+                    "engine {eng} view of node {node}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quiet_two_engine_run_converges_without_faults() {
+        let mut fab = MultiChaos::new(7, None, MultiPlan::none());
+        for i in 0..8u64 {
+            fab.submit(0, i, Dir::Write, i * PAGE_BYTES, PAGE_BYTES);
+            fab.submit(1, i, Dir::Write, (8 + i) * PAGE_BYTES, PAGE_BYTES);
+        }
+        let retired = fab.run_to_converged(MAX_STEPS).expect("quiescent");
+        for eng in 0..ENGINES {
+            let mut ids: Vec<u64> = retired
+                .iter()
+                .filter(|(e, _)| *e == eng)
+                .map(|(_, r)| r.id)
+                .collect();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..8).collect::<Vec<_>>(), "engine {eng}");
+        }
+        // cross reads: each engine reads what the *peer* wrote — the
+        // floor knowledge arrived through the gossip piggyback
+        for i in 0..8u64 {
+            fab.submit(0, 100 + i, Dir::Read, (8 + i) * PAGE_BYTES, PAGE_BYTES);
+            fab.submit(1, 100 + i, Dir::Read, i * PAGE_BYTES, PAGE_BYTES);
+        }
+        fab.run_to_converged(MAX_STEPS).expect("quiescent");
+        assert_eq!(fab.stats.stale_reads, 0, "{:?}", fab.first_stale);
+        assert!(fab.stats.gossip_delivered >= 2, "{:?}", fab.stats);
+        assert!(fab.converged());
+        assert_eq!(
+            fab.engine(0).gossip_fingerprint(),
+            fab.engine(1).gossip_fingerprint()
+        );
+        assert_eq!(fab.stats.failovers, 0);
+        assert_eq!(fab.stats.disk_fallbacks, 0);
+    }
+
+    /// The tentpole acceptance shape: engine 0 is partitioned from node
+    /// 0 while both engines write overlapping ranges — engine 0's legs
+    /// on node 0 error (divergence), engine 1's land. After the window
+    /// heals, gossip must drive both engines to identical epoch vectors
+    /// with zero stale reads.
+    #[test]
+    fn overlapping_writes_under_link_partition_converge() {
+        let plan = MultiPlan::none().link_down(0, 0, 0, 60_000);
+        let mut fab = MultiChaos::new(0x3417, None, plan);
+        for i in 0..8u64 {
+            fab.submit(0, i, Dir::Write, i * PAGE_BYTES, 2 * PAGE_BYTES);
+            fab.submit(1, i, Dir::Write, i * PAGE_BYTES, 2 * PAGE_BYTES);
+        }
+        fab.run_to_converged(MAX_STEPS).expect("quiescent");
+        assert!(fab.stats.link_errors > 0, "the cut never bit: {:?}", fab.stats);
+        assert!(
+            fab.engine(0).stats.resync_demotions >= 1,
+            "engine 0 demoted the diverged replica: {:?}",
+            fab.engine(0).stats
+        );
+        // engine 1 learned about the divergence it never saw directly
+        let gs = fab.engine(1).gossip_stats().expect("gossip on");
+        assert!(gs.epoch_raises >= 1, "peer absorbed the epoch floors: {gs:?}");
+        assert_all_alive(&fab);
+        assert_eq!(
+            fab.engine(0).gossip_fingerprint(),
+            fab.engine(1).gossip_fingerprint(),
+            "epoch vectors identical after healing"
+        );
+        // both engines read the whole overlapped range: zero staleness
+        for i in 0..9u64 {
+            fab.submit(0, 100 + i, Dir::Read, i * PAGE_BYTES, PAGE_BYTES);
+            fab.submit(1, 100 + i, Dir::Read, i * PAGE_BYTES, PAGE_BYTES);
+        }
+        fab.run_to_converged(MAX_STEPS).expect("quiescent");
+        assert_eq!(fab.stats.stale_reads, 0, "{:?}", fab.first_stale);
+    }
+
+    /// Crossed cuts: engine 0 loses node 0 while engine 1 loses node 1,
+    /// both writing the same ranges — so both engines run elections and
+    /// mint epochs concurrently. The interleaved minting keeps the
+    /// epochs disjoint and the semilattice joins drive both ledgers to
+    /// the same fixed point.
+    #[test]
+    fn crossed_partitions_drive_conflicting_elections_to_convergence() {
+        let plan = MultiPlan::none()
+            .link_down(0, 0, 0, 80_000)
+            .link_down(1, 1, 0, 80_000);
+        let mut fab = MultiChaos::new(0xC2055, None, plan);
+        for i in 0..8u64 {
+            fab.submit(0, i, Dir::Write, i * PAGE_BYTES, 2 * PAGE_BYTES);
+            fab.submit(1, i, Dir::Write, i * PAGE_BYTES, 2 * PAGE_BYTES);
+        }
+        fab.run_to_converged(MAX_STEPS).expect("quiescent");
+        assert!(
+            fab.engine(0).stats.resync_demotions >= 1
+                && fab.engine(1).stats.resync_demotions >= 1,
+            "both engines diverged a replica: {:?} / {:?}",
+            fab.engine(0).stats,
+            fab.engine(1).stats
+        );
+        assert_all_alive(&fab);
+        assert_eq!(
+            fab.engine(0).gossip_fingerprint(),
+            fab.engine(1).gossip_fingerprint()
+        );
+        for i in 0..9u64 {
+            fab.submit(0, 100 + i, Dir::Read, i * PAGE_BYTES, PAGE_BYTES);
+            fab.submit(1, 100 + i, Dir::Read, i * PAGE_BYTES, PAGE_BYTES);
+        }
+        fab.run_to_converged(MAX_STEPS).expect("quiescent");
+        assert_eq!(fab.stats.stale_reads, 0, "{:?}", fab.first_stale);
+    }
+
+    /// Gossip-channel hostility: a blackout eats every round for 50 µs
+    /// (virtual) while a link cut diverges engine 0, then 50% loss and
+    /// jitter three times the tick interval reorder what remains. The
+    /// round counters absorb the reordering, re-sends absorb the loss,
+    /// and the run still converges.
+    #[test]
+    fn gossip_loss_blackout_and_reorder_still_converge() {
+        let plan = MultiPlan::none()
+            .link_down(0, 0, 0, 40_000)
+            .gossip_blackout(0, 50_000)
+            .with_gossip_loss(0.5)
+            .gossip_cadence(10_000, 30_000);
+        let mut fab = MultiChaos::new(0x6055, None, plan);
+        for i in 0..8u64 {
+            fab.submit(0, i, Dir::Write, i * PAGE_BYTES, PAGE_BYTES);
+            fab.submit(1, i, Dir::Write, i * PAGE_BYTES, PAGE_BYTES);
+        }
+        fab.run_to_converged(MAX_STEPS).expect("quiescent");
+        assert!(
+            fab.stats.gossip_dropped >= 2,
+            "the blackout ate whole rounds: {:?}",
+            fab.stats
+        );
+        assert!(fab.stats.gossip_delivered >= 2, "{:?}", fab.stats);
+        assert_eq!(
+            fab.engine(0).gossip_fingerprint(),
+            fab.engine(1).gossip_fingerprint()
+        );
+        for i in 0..8u64 {
+            fab.submit(0, 100 + i, Dir::Read, i * PAGE_BYTES, PAGE_BYTES);
+            fab.submit(1, 100 + i, Dir::Read, i * PAGE_BYTES, PAGE_BYTES);
+        }
+        fab.run_to_converged(MAX_STEPS).expect("quiescent");
+        assert_eq!(fab.stats.stale_reads, 0, "{:?}", fab.first_stale);
+    }
+
+    /// Cluster-wide node churn: node 1 dies with writes from both
+    /// engines in flight (their legs error), revives, and both engines
+    /// gate it behind resync — independently, then agree via gossip.
+    #[test]
+    fn node_churn_heals_across_engines() {
+        let plan = MultiPlan::none().node_down(1, 2_000).node_up(1, 60_000);
+        let mut fab = MultiChaos::new(0xC402, None, plan);
+        for i in 0..16u64 {
+            fab.submit(0, i, Dir::Write, i * PAGE_BYTES, PAGE_BYTES);
+            fab.submit(1, i, Dir::Write, (i + 4) * PAGE_BYTES, PAGE_BYTES);
+        }
+        fab.run_to_converged(MAX_STEPS).expect("quiescent");
+        assert_eq!(fab.stats.node_transitions, 2);
+        assert!(fab.stats.dead_node_errors > 0, "{:?}", fab.stats);
+        assert_all_alive(&fab);
+        assert_eq!(
+            fab.engine(0).gossip_fingerprint(),
+            fab.engine(1).gossip_fingerprint()
+        );
+        for i in 0..20u64 {
+            fab.submit(0, 100 + i, Dir::Read, i * PAGE_BYTES, PAGE_BYTES);
+            fab.submit(1, 100 + i, Dir::Read, i * PAGE_BYTES, PAGE_BYTES);
+        }
+        fab.run_to_converged(MAX_STEPS).expect("quiescent");
+        assert_eq!(fab.stats.stale_reads, 0, "{:?}", fab.first_stale);
+    }
+
+    #[test]
+    fn multi_scenario_runs_are_seed_deterministic() {
+        let sc = Scenario::randomized_with_profile(0x3417, ChaosProfile::Multi);
+        let a = run_multi_scenario(&sc).expect("passes");
+        let b = run_multi_scenario(&sc).expect("passes");
+        assert_eq!(a, b, "same seed, same report");
+        let other = Scenario::randomized_with_profile(0x3418, ChaosProfile::Multi);
+        let c = run_multi_scenario(&other).expect("passes");
+        assert_ne!(a, c, "a different seed must produce a different run");
+    }
+}

@@ -72,6 +72,14 @@ pub enum ChaosProfile {
     /// pinned seeds replay unchanged. The nightly sweep runs this as
     /// `CHAOS_PROFILE=scale`.
     Scale,
+    /// Multi-engine: two peer [`crate::coordinator::engine::IoEngine`]s
+    /// share one replica cluster
+    /// and keep their epoch vectors convergent through the gossip
+    /// anti-entropy plane, under asymmetric link cuts, gossip
+    /// loss/blackout, and node churn ([`super::multi`]). Its own seed
+    /// streams — no other profile's pinned seeds move. The nightly
+    /// sweep runs this as `CHAOS_PROFILE=multi`.
+    Multi,
 }
 
 /// One chaos scenario: everything the run needs, nameable by seed.
@@ -128,6 +136,31 @@ impl Scenario {
             // entirely separate draw sequence — the small-cluster
             // profiles below keep their exact historical seed streams
             return Self::randomized_scale(seed, &mut rng);
+        }
+        if profile == ChaosProfile::Multi {
+            // the multi-engine runner derives its whole fault mix and
+            // workload from `seed` on streams of its own (see
+            // [`super::multi::run_multi_scenario`]); the scenario is
+            // just the seed's carrier, returned before any draw here so
+            // the historical small-profile streams stay untouched
+            return Self {
+                name: "randomized",
+                seed,
+                nodes: super::multi::NODES,
+                qps_per_node: 1,
+                replicas: 2,
+                window_bytes: None,
+                n_ios: 0,
+                read_fraction: 0.0,
+                resync: true,
+                election: true,
+                profile,
+                tenant_weights: vec![1],
+                mr_cache_bytes: None,
+                addr_span: ADDR_SPAN,
+                scheduler: SchedulerKind::default(),
+                plan: FaultPlan::none(),
+            };
         }
         let nodes = 2 + rng.gen_below(3) as usize;
         let qps_per_node = 1 + rng.gen_below(4) as usize;
@@ -366,6 +399,7 @@ pub fn replay_command(sc: &Scenario) -> String {
             ChaosProfile::ElectionHeavy => "CHAOS_PROFILE=election ",
             ChaosProfile::Qos => "CHAOS_PROFILE=qos ",
             ChaosProfile::Scale => "CHAOS_PROFILE=scale ",
+            ChaosProfile::Multi => "CHAOS_PROFILE=multi ",
         };
         format!(
             "{profile}CHAOS_SEED={:#x} cargo test --release --test chaos_scenarios \
@@ -383,6 +417,11 @@ pub fn replay_command(sc: &Scenario) -> String {
 /// Run one scenario to quiescence, checking every engine invariant along
 /// the way. `Err` carries the violation plus the replay command.
 pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
+    if sc.profile == ChaosProfile::Multi {
+        // two-engine runs live in their own harness: two pipelines, one
+        // shared cluster, the gossip plane inside the schedule
+        return super::multi::run_multi_scenario(sc);
+    }
     let fail = |msg: String| -> crate::runtime::Error {
         format!(
             "chaos scenario `{}` (seed {:#x}) failed: {msg}\n  replay: {}",
@@ -740,6 +779,28 @@ mod tests {
         let sc = Scenario::randomized_with_profile(0xFEED, ChaosProfile::Scale);
         assert!(
             replay_command(&sc).starts_with("CHAOS_PROFILE=scale "),
+            "{}",
+            replay_command(&sc)
+        );
+    }
+
+    #[test]
+    fn multi_profile_seeds_pass_the_runner() {
+        for seed in 0..3u64 {
+            let sc = Scenario::randomized_with_profile(seed, ChaosProfile::Multi);
+            assert_eq!(sc.nodes, crate::fabric::chaos::multi::NODES);
+            match run_scenario(&sc) {
+                Ok(report) => {
+                    assert_eq!(report.retired, report.submitted, "every I/O accounted");
+                    assert_eq!(report.stale_reads, 0);
+                    assert!(report.delivered_wcs > 0);
+                }
+                Err(e) => panic!("{e}"),
+            }
+        }
+        let sc = Scenario::randomized_with_profile(0xFEED, ChaosProfile::Multi);
+        assert!(
+            replay_command(&sc).starts_with("CHAOS_PROFILE=multi "),
             "{}",
             replay_command(&sc)
         );

@@ -1,4 +1,4 @@
-//! RDMA fabric abstraction: shared verb-level types plus three backends.
+//! RDMA fabric abstraction: shared verb-level types plus four backends.
 //!
 //! * [`sim`] — a calibrated discrete-event simulator of the full RDMA path
 //!   (host CPU → MMIO/PCIe → NIC processing units with WQE/QP/MPT caches →
@@ -17,10 +17,16 @@
 //!   revived or diverged replica — are checked alongside the
 //!   completion-level ones (exactly-once retirement, admission bound,
 //!   failover), all replayable from a single `u64` seed.
+//! * [`socket`] — a real-socket peer fabric (TCP or Unix-domain):
+//!   length-prefixed frames carrying the shared verb types plus the
+//!   coordinator's gossip deltas, so two engines in *separate OS
+//!   processes* can run the multi-engine anti-entropy protocol to
+//!   fingerprint convergence over an actual byte stream.
 
 pub mod chaos;
 pub mod loopback;
 pub mod sim;
+pub mod socket;
 
 pub use crate::util::idlist::IdList;
 

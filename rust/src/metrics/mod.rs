@@ -177,6 +177,46 @@ impl MrCacheStats {
     }
 }
 
+/// Gossip-plane counters exported by `IoEngine::gossip_stats()` when the
+/// multi-engine coordination plane is enabled
+/// (`EngineSpec::gossip(engine_id, engines)`): anti-entropy rounds
+/// exported/absorbed plus what each merge actually changed. One snapshot
+/// per engine; all counters are cumulative.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GossipStats {
+    /// Deltas this engine exported.
+    pub rounds_sent: u64,
+    /// Peer deltas merged (past the staleness filter).
+    pub rounds_absorbed: u64,
+    /// Peer deltas dropped as duplicates or reorders (round ≤ the
+    /// highest already absorbed from that peer) — the alloc-free path.
+    pub stale_rounds: u64,
+    /// Epoch-vector entries (required or applied) a merge raised.
+    pub epoch_raises: u64,
+    /// Node-state transitions adopted from peers (LWW wins).
+    pub state_adoptions: u64,
+    /// Missed-write ranges learned from peers and fed to resync.
+    pub missed_merged: u64,
+    /// Disk-surrender log entries consumed from peers.
+    pub disk_spans_absorbed: u64,
+}
+
+impl GossipStats {
+    /// Table row for the CLI (`sent absorbed stale raises adoptions
+    /// missed disk-spans`).
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.rounds_sent.to_string(),
+            self.rounds_absorbed.to_string(),
+            self.stale_rounds.to_string(),
+            self.epoch_raises.to_string(),
+            self.state_adoptions.to_string(),
+            self.missed_merged.to_string(),
+            self.disk_spans_absorbed.to_string(),
+        ]
+    }
+}
+
 /// Summary speedup across checks (geometric mean of measured ratios).
 pub fn summary_speedup(checks: &[ShapeCheck]) -> f64 {
     geomean(
@@ -230,6 +270,21 @@ mod tests {
         let row = s.row();
         assert_eq!(row[2], "75.0%");
         assert_eq!(row[5], "65536/131072");
+    }
+
+    #[test]
+    fn gossip_stats_row_orders_counters() {
+        let s = GossipStats {
+            rounds_sent: 4,
+            rounds_absorbed: 3,
+            stale_rounds: 1,
+            epoch_raises: 12,
+            state_adoptions: 2,
+            missed_merged: 5,
+            disk_spans_absorbed: 1,
+        };
+        assert_eq!(s.row(), vec!["4", "3", "1", "12", "2", "5", "1"]);
+        assert_eq!(GossipStats::default().row(), vec!["0"; 7]);
     }
 
     #[test]

@@ -70,6 +70,12 @@ pub struct EventQueue<T> {
     wheel_len: usize,
     /// Unsorted overflow beyond the wheel horizon.
     far: Vec<Entry<T>>,
+    /// Earliest `at` in the far tier (`u64::MAX` when it is empty):
+    /// flushing can be skipped entirely until the advancing horizon
+    /// reaches this watermark, so a large far population (the `Scale`
+    /// profile's long-range control events) costs nothing per bucket
+    /// swap instead of an O(|far|) rescan.
+    far_min: u64,
     /// Virtual time of the last popped event; pushes clamp to it.
     now: u64,
     /// Insertion counter (tie-break within an instant).
@@ -93,6 +99,7 @@ impl<T> EventQueue<T> {
             buckets: std::iter::repeat_with(Vec::new).take(NBUCKETS).collect(),
             wheel_len: 0,
             far: Vec::new(),
+            far_min: u64::MAX,
             now: 0,
             next_seq: 0,
             len: 0,
@@ -131,6 +138,7 @@ impl<T> EventQueue<T> {
             self.buckets[idx].push(entry);
             self.wheel_len += 1;
         } else {
+            self.far_min = self.far_min.min(at);
             self.far.push(entry);
         }
     }
@@ -188,6 +196,16 @@ impl<T> EventQueue<T> {
     /// were pushed, and `near_end` never advances past that horizon).
     fn flush_far_into_wheel(&mut self) {
         let horizon = self.near_end + WINDOW_NS;
+        // Watermark early-out: `far_min` is the exact minimum `at` in the
+        // far tier, so if the horizon has not reached it, no far event
+        // qualifies — skip the scan entirely. This is the common case:
+        // the horizon advances one bucket at a time while far events sit
+        // milliseconds out.
+        if self.far_min >= horizon {
+            debug_assert!(self.far.iter().all(|e| e.at >= horizon));
+            return;
+        }
+        let mut remaining_min = u64::MAX;
         let mut i = 0;
         while i < self.far.len() {
             if self.far[i].at < horizon {
@@ -197,9 +215,11 @@ impl<T> EventQueue<T> {
                 self.buckets[idx].push(e);
                 self.wheel_len += 1;
             } else {
+                remaining_min = remaining_min.min(self.far[i].at);
                 i += 1;
             }
         }
+        self.far_min = remaining_min;
     }
 
     /// Wheel and near lane are empty but far is not: fast-forward the
@@ -207,7 +227,14 @@ impl<T> EventQueue<T> {
     /// flush. Guaranteed to move at least that event into the wheel.
     fn rebase_onto_far(&mut self) {
         debug_assert!(self.near.is_empty() && self.wheel_len == 0);
-        let min_at = self.far.iter().map(|e| e.at).min().unwrap_or(0);
+        // the watermark *is* the minimum (maintained on push, recomputed
+        // on every flush), so rebasing no longer scans the far tier
+        let min_at = self.far_min;
+        debug_assert_eq!(
+            Some(min_at),
+            self.far.iter().map(|e| e.at).min(),
+            "far watermark out of sync with the far tier"
+        );
         self.near_end = self.near_end.max((min_at / BUCKET_NS) * BUCKET_NS);
         self.flush_far_into_wheel();
         debug_assert!(self.wheel_len > 0);
@@ -434,6 +461,25 @@ mod tests {
         // the event popped right before the far one is the last near
         // event scheduled before WINDOW_NS + 10
         assert!(last.0 <= WINDOW_NS + 10);
+    }
+
+    /// The far watermark must track the true minimum through pushes that
+    /// lower it, partial flushes that raise it, and rebases that consume
+    /// it — any drift either pops out of order (flushed too late) or
+    /// trips the `rebase_onto_far` exactness assert.
+    #[test]
+    fn far_watermark_survives_mixed_pushes_and_partial_flushes() {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        q.push(30 * WINDOW_NS, 1); // far
+        q.push(5 * WINDOW_NS, 2); // far, lowers the watermark
+        q.push(100, 3); // wheel
+        assert_eq!(q.pop(), Some((100, 3)));
+        // rebase consumes the 5-lap event, leaving the 30-lap one far
+        assert_eq!(q.pop(), Some((5 * WINDOW_NS, 2)));
+        q.push(6 * WINDOW_NS, 4); // far again, below the survivor
+        assert_eq!(q.pop(), Some((6 * WINDOW_NS, 4)));
+        assert_eq!(q.pop(), Some((30 * WINDOW_NS, 1)));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -21,7 +21,15 @@ pub struct Zipfian {
 impl Zipfian {
     pub fn new(n: u64, theta: f64) -> Self {
         assert!(n > 0, "zipfian over empty domain");
-        assert!((0.0..1.0).contains(&theta) || theta > 0.0);
+        // theta = 1.0 is the harmonic boundary: alpha = 1/(1-theta) blows
+        // up and the large-n zeta integral divides by a = 1-theta = 0, so
+        // every sample collapses to garbage instead of a Zipf(1) draw.
+        // YCSB's generator has the same open-interval domain.
+        assert!(
+            (0.0..1.0).contains(&theta),
+            "zipfian skew theta must lie in [0, 1): theta = 1 is the \
+             harmonic boundary (alpha and the zeta integral diverge); got {theta}"
+        );
         let zetan = Self::zeta(n, theta);
         let zeta2 = Self::zeta(2, theta);
         let alpha = 1.0 / (1.0 - theta);
@@ -192,6 +200,39 @@ mod tests {
         let mut rng = Pcg32::new(4);
         for _ in 0..1000 {
             assert!(z.sample(&mut rng) < 1_000_000_000);
+        }
+    }
+
+    /// Regression (ISSUE 9): the old guard
+    /// `(0.0..1.0).contains(&theta) || theta > 0.0` was vacuous — any
+    /// positive theta passed, including exactly 1.0, which yields
+    /// `alpha = inf` and a zero divisor in the large-n zeta path.
+    #[test]
+    #[should_panic(expected = "harmonic boundary")]
+    fn theta_one_is_rejected_cleanly() {
+        let _ = Zipfian::new(2_000_000, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "harmonic boundary")]
+    fn theta_above_one_is_rejected_cleanly() {
+        let _ = Zipfian::new(1000, 1.5);
+    }
+
+    /// theta = 0.99 over n > 1_000_000 exercises the integral zeta
+    /// approximation with `a = 1 - theta` close to zero: every derived
+    /// constant and every sample must stay finite and in range.
+    #[test]
+    fn near_boundary_theta_over_large_domain_is_finite() {
+        let n = 2_000_000;
+        let z = Zipfian::new(n, 0.99);
+        assert!(z.zetan.is_finite() && z.zetan > 0.0);
+        assert!(z.alpha.is_finite());
+        assert!(z.eta.is_finite());
+        let mut rng = Pcg32::new(9);
+        for _ in 0..10_000 {
+            let s = z.sample(&mut rng);
+            assert!(s < n, "sample {s} out of range");
         }
     }
 

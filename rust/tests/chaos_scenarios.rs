@@ -18,8 +18,8 @@
 use rdmabox::coordinator::node::NodeState;
 use rdmabox::coordinator::EngineSpec;
 use rdmabox::fabric::chaos::{
-    rack_members, replay_command, run_scenario, ChaosFabric, ChaosProfile, FaultPlan, Scenario,
-    ScenarioReport, RESYNC_CHUNK_BYTES, STRIPE_BYTES,
+    rack_members, replay_command, run_scenario, ChaosFabric, ChaosProfile, FaultPlan, MultiChaos,
+    MultiPlan, Scenario, ScenarioReport, PAGE_BYTES, RESYNC_CHUNK_BYTES, STRIPE_BYTES,
 };
 use rdmabox::fabric::Dir;
 
@@ -60,17 +60,19 @@ fn env_u64(name: &str) -> Option<u64> {
 }
 
 /// Which randomized mix the sweep draws (`CHAOS_PROFILE=election`,
-/// `CHAOS_PROFILE=qos` and `CHAOS_PROFILE=scale` are what the nightly
-/// `chaos-extended` workflow sets; replay commands carry it).
+/// `CHAOS_PROFILE=qos`, `CHAOS_PROFILE=scale` and `CHAOS_PROFILE=multi`
+/// are what the nightly `chaos-extended` workflow sets; replay commands
+/// carry it).
 fn env_profile() -> ChaosProfile {
     match std::env::var("CHAOS_PROFILE").ok().as_deref() {
         Some("election") => ChaosProfile::ElectionHeavy,
         Some("qos") => ChaosProfile::Qos,
         Some("scale") => ChaosProfile::Scale,
+        Some("multi") => ChaosProfile::Multi,
         Some("") | None => ChaosProfile::Standard,
-        Some(other) => {
-            panic!("CHAOS_PROFILE must be `election`, `qos`, `scale`, or unset, got `{other}`")
-        }
+        Some(other) => panic!(
+            "CHAOS_PROFILE must be `election`, `qos`, `scale`, `multi`, or unset, got `{other}`"
+        ),
     }
 }
 
@@ -499,6 +501,58 @@ fn qos_mix_isolates_tenants_under_storms() {
         r.tenant_posted_bytes.iter().all(|&b| b > 0),
         "both tenants must move bytes: {r:?}"
     );
+}
+
+// ---------------- multi-engine scenarios ----------------
+
+/// The multi-engine sweep mix end-to-end: two peer engines over one
+/// replica cluster, with the gossip plane inside the schedule. Every
+/// seed guarantees at least one asymmetric link cut, and the runner
+/// fails unless both engines quiesce with identical epoch-vector
+/// fingerprints and zero stale reads.
+#[test]
+fn multi_profile_two_engines_converge_through_the_runner() {
+    for seed in [0x3417u64, 0xB0B0] {
+        let sc = Scenario::randomized_with_profile(seed, ChaosProfile::Multi);
+        let r = check(&sc);
+        assert_eq!(r.retired, r.submitted, "no I/O lost across engines: {r:?}");
+        assert_eq!(r.stale_reads, 0, "{r:?}");
+        assert!(r.delivered_wcs > 0, "{r:?}");
+        assert!(
+            replay_command(&sc).starts_with("CHAOS_PROFILE=multi "),
+            "{}",
+            replay_command(&sc)
+        );
+    }
+}
+
+/// Tentpole acceptance, driven directly: engine 0 is partitioned from
+/// node 0 while both engines write the same ranges (engine 0's legs
+/// error, engine 1's land — silent divergence only gossip can surface
+/// to the peer). After healing, both engines must hold identical epoch
+/// vectors and serve the overlapped range with zero stale reads.
+#[test]
+fn two_engines_overlapping_writes_partition_heals_convergent() {
+    let plan = MultiPlan::none().link_down(0, 0, 0, 60_000);
+    let mut fab = MultiChaos::new(0x3417, None, plan);
+    for i in 0..8u64 {
+        fab.submit(0, i, Dir::Write, i * PAGE_BYTES, 2 * PAGE_BYTES);
+        fab.submit(1, i, Dir::Write, i * PAGE_BYTES, 2 * PAGE_BYTES);
+    }
+    fab.run_to_converged(STEPS).expect("quiescent");
+    assert!(fab.stats.link_errors > 0, "the cut never bit: {:?}", fab.stats);
+    assert!(fab.stats.gossip_delivered >= 2, "{:?}", fab.stats);
+    assert_eq!(
+        fab.engine(0).gossip_fingerprint(),
+        fab.engine(1).gossip_fingerprint(),
+        "epoch vectors identical after healing"
+    );
+    for i in 0..9u64 {
+        fab.submit(0, 100 + i, Dir::Read, i * PAGE_BYTES, PAGE_BYTES);
+        fab.submit(1, 100 + i, Dir::Read, i * PAGE_BYTES, PAGE_BYTES);
+    }
+    fab.run_to_converged(STEPS).expect("quiescent");
+    assert_eq!(fab.stats.stale_reads, 0, "{:?}", fab.first_stale);
 }
 
 // ---------------- cluster-scale scenarios ----------------
