@@ -214,6 +214,13 @@ fn io(id: u64, addr: u64) -> AppIo {
     io_t(id, addr, 0)
 }
 
+fn io_r(id: u64, addr: u64) -> AppIo {
+    AppIo {
+        dir: Dir::Read,
+        ..io(id, addr)
+    }
+}
+
 fn io_t(id: u64, addr: u64, tenant: TenantId) -> AppIo {
     AppIo {
         id,
@@ -363,9 +370,12 @@ fn main() {
     // pinning-free MR cache is ON (cap = the 16 MiB working set), and
     // the gossip plane is ON (member 0 of 2, exchanging one full
     // anti-entropy round with a peer engine every iteration through a
-    // reused delta), so both ride the gated cycle. After warm-up this
-    // cycle must not touch the allocator at all — `allocs_per_op == 0`
-    // is enforced by ci/bench_baseline.json.
+    // reused delta), so both ride the gated cycle. Completion deadlines
+    // are armed too (the per-WR enrollment/unlink on the intrusive
+    // deadline list is part of every production cycle; at virtual time 0
+    // they never expire). After warm-up this cycle must not touch the
+    // allocator at all — `allocs_per_op == 0` is enforced by
+    // ci/bench_baseline.json.
     {
         let mut e = IoEngine::build(
             &EngineSpec::new(1)
@@ -374,6 +384,7 @@ fn main() {
                 .replicated(1)
                 .stripe(1 << 20)
                 .mr_cache(16 << 20)
+                .deadlines(1_000_000, 2)
                 .gossip(0, 2),
         );
         let mut peer = IoEngine::build(&EngineSpec::new(1).replicated(1).gossip(1, 2));
@@ -483,6 +494,74 @@ fn main() {
                 retired
             },
         );
+    }
+
+    // the deadline-expiry hot path (the recovery layer's steady-state
+    // number): one iteration submits 8 adjacent page reads — merged by
+    // the planner into a single WR (max_sge 16) — whose completion is
+    // never delivered. The deadline lapses, `service_timers` synthesizes
+    // the timeout-WC through the same idempotent retirement path (window
+    // released, all 8 subs failed over in place to the peer replica),
+    // and the failover WR retires successfully. Stripe parity alternates
+    // the primary node each iteration, so the timed-out QP always takes
+    // a success before a third consecutive timeout could trip it into
+    // `Error`, and `max_retries = 0` means no backoff-release timers are
+    // ever armed: the whole expire → failover → retire cycle lives on
+    // the intrusive deadline list and the slab ledgers.
+    // ci/bench_baseline.json gates allocs_per_op == 0 here too.
+    {
+        const TIMEOUT: u64 = 10_000;
+        const STRIPE: u64 = 1 << 20;
+        let mut e = IoEngine::build(
+            &EngineSpec::new(2)
+                .window(Some(7 << 20))
+                .replicated(2)
+                .stripe(STRIPE)
+                .deadlines(TIMEOUT, 0),
+        );
+        let mut out = DrainOut::default();
+        let mut wout = WcOut::default();
+        let mut id = 0u64;
+        let mut it = 0u64;
+        let mut now = 0u64;
+        bench(&mut results, "recovery_timeout_retire", iters(20_000), || {
+            let base = (it % 2) * STRIPE;
+            it += 1;
+            for i in 0..8u64 {
+                e.submit(io_r(id, base + i * 4096));
+                id += 1;
+            }
+            now += 1;
+            e.drain_all_into(now, &mut out);
+            // the primary leg is never delivered: lapse its deadline
+            now += TIMEOUT + 1;
+            e.service_timers(now, &mut wout);
+            // the expiry re-queued every sub onto the peer replica;
+            // drain the failover WR and deliver it successfully
+            e.drain_all_into(now, &mut out);
+            let mut retired = 0u64;
+            let chains = std::mem::take(&mut out.chains);
+            for c in &chains {
+                for wr in &mut out.wrs[c.start..c.end] {
+                    let wc = Wc {
+                        wr_id: wr.wr_id,
+                        qp: c.qp,
+                        op: wr.op,
+                        len: wr.len,
+                        app_ios: std::mem::take(&mut wr.app_ios),
+                        status: WcStatus::Success,
+                        tenant: wr.tenant,
+                    };
+                    e.on_wc_into(&wc, now, &mut wout);
+                    retired += wout.retired.len() as u64;
+                }
+            }
+            out.chains = chains;
+            assert_eq!(retired, 8, "every timed-out read failed over and retired");
+            assert_eq!(e.qps_not_ok(), 0, "alternating parity keeps every QP Ok");
+            retired
+        });
+        assert_eq!(e.stats.window_leaks, 0, "expiry path leaked admission bytes");
     }
 
     // the ledger ablation (kept in-tree so the slab's win stays

@@ -45,9 +45,10 @@ use crate::coordinator::node::{EpochMap, NodeMap, NodeState, ReadRoute};
 use crate::coordinator::regulator::{AdmissionPolicy, Regulator, StaticWindow, Unlimited};
 use crate::coordinator::spec::EngineSpec;
 use crate::coordinator::StackConfig;
-use crate::fabric::{AppIo, Dir, IdList, NodeId, QpId, TenantId, Wc, WcStatus, WorkRequest};
-use crate::metrics::TenantStats;
+use crate::fabric::{AppIo, Dir, IdList, NodeId, OpKind, QpId, TenantId, Wc, WcStatus, WorkRequest};
+use crate::metrics::{RecoveryStats, TenantStats};
 use crate::coordinator::gossip::{state_code, state_from_code, GossipDelta, GossipState};
+use crate::util::eventq::EventQueue;
 use crate::util::slab::Slab;
 
 /// Shard affinity region size (re-exported from the channel layer, which
@@ -316,6 +317,12 @@ pub struct EngineStats {
     pub mr_evictions: u64,
     /// Deferred deregistration batches flushed off the critical path.
     pub mr_dereg_batches: u64,
+    /// Admission-ledger violations the regulator observed (double post,
+    /// mismatched release, unmatched release) — mirrored from
+    /// [`Regulator::window_leaks`] so the chaos quiescence gates can
+    /// hold it at zero in release builds too (debug builds panic at the
+    /// violation site instead).
+    pub window_leaks: u64,
 }
 
 /// What a placed sub-I/O is doing in the pipeline.
@@ -356,6 +363,15 @@ struct SubIo {
     /// [`crate::fabric::DEFAULT_TENANT`] for engine-internal resync
     /// traffic (repair copies bill to the system lane, not a victim's).
     tenant: TenantId,
+    /// Next sub in its posted WR's intrusive chain (`u64::MAX` ends the
+    /// chain). Rebuilt at every post; walked only to rebuild the sub
+    /// list of a synthesized timeout-WC, so the deadline path needs no
+    /// side allocation.
+    next_in_wr: u64,
+    /// Deadline expiries this sub has been re-queued through. Capped by
+    /// the spec's `max_retries`; the next expiry resolves terminally
+    /// like any other completion error.
+    timeouts: u32,
 }
 
 /// Coalescing set of byte ranges (the per-node missed-write backlog; also
@@ -586,6 +602,98 @@ struct PostedWr {
     /// informational only — a forged or corrupted completion cannot
     /// shift bytes between tenant sub-windows).
     tenant: TenantId,
+    /// QP the WR was posted on — drives the per-QP error/reset state
+    /// machine when its deadline expires.
+    qp: QpId,
+    op: OpKind,
+    /// Head of the WR's sub chain through the `subs` slab (linked via
+    /// [`SubIo::next_in_wr`]); `u64::MAX` when deadlines are off. A
+    /// synthesized timeout-WC rebuilds its `app_ios` by walking this
+    /// chain, so the deadline ledger lives entirely in the slabs.
+    first_sub: u64,
+    /// Absolute engine-time deadline (`u64::MAX` = no deadline).
+    deadline_at: u64,
+    /// Intrusive deadline-list links (slab keys of the neighboring
+    /// outstanding WRs, `u64::MAX` at the ends). Posts append at the
+    /// tail (deadlines are minted monotonically), completions unlink in
+    /// O(1), and expiry pops from the head — no allocation, no timer
+    /// wheel entry per WR to cancel.
+    dl_prev: u64,
+    dl_next: u64,
+}
+
+/// Entries of the engine's recovery timer lane (an [`EventQueue`] in
+/// engine time): everything that must fire later than the event that
+/// scheduled it. WR deadlines are NOT in here — they live in the
+/// intrusive list through the `outstanding` slab, which supports the
+/// O(1) cancel-on-completion an event queue cannot.
+#[derive(Debug, Clone, Copy)]
+enum TimerEntry {
+    /// Re-route a timed-out read sub once its jittered backoff elapses.
+    BackoffRelease(u64),
+    /// Advance a tripped QP one step along `Error → Resetting → Ok`.
+    QpProbe(QpId),
+}
+
+/// Verbs-mirroring QP lifecycle: a QP in `Error` has flushed its
+/// outstanding WRs and admits no new posts until probation re-admits it
+/// through `Resetting` back to `Ok`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum QpState {
+    Ok,
+    Error,
+    Resetting,
+}
+
+/// Per-QP health tracked by the deadline recovery layer.
+#[derive(Debug, Clone, Copy)]
+struct QpHealth {
+    state: QpState,
+    /// Deadline expiries since the last successful completion; reaching
+    /// [`QP_ERROR_TIMEOUTS`] flips the QP to `Error`.
+    consecutive_timeouts: u32,
+}
+
+impl QpHealth {
+    fn fresh() -> Self {
+        Self {
+            state: QpState::Ok,
+            consecutive_timeouts: 0,
+        }
+    }
+}
+
+/// Consecutive deadline expiries that flip a QP from `Ok` to `Error`
+/// (mirroring a verbs QP entering the error state after transport
+/// retries are exhausted).
+const QP_ERROR_TIMEOUTS: u32 = 3;
+
+/// Probation an `Error` QP serves before its first recovery probe, in
+/// deadline-timeout units; the `Resetting → Ok` step takes one more.
+const QP_PROBATION_TIMEOUTS: u64 = 4;
+
+/// Timed-out reads back off exponentially per expiry, capped at
+/// `timeout_ns << BACKOFF_CAP_SHIFT`.
+const BACKOFF_CAP_SHIFT: u32 = 3;
+
+/// Deterministic per-(sub, attempt) jitter: a splitmix64 finalizer over
+/// the pair, so replays are bit-identical while concurrent retries still
+/// decorrelate instead of stampeding in lockstep.
+fn backoff_jitter(sid: u64, attempt: u32) -> u64 {
+    let mut z = sid ^ ((attempt as u64) << 56) ^ 0x9E37_79B9_7F4A_7C15;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Backoff delay for a read sub's `attempt`-th expiry: doubles from
+/// `timeout_ns`, capped, then jittered into `[delay/2, delay]` so the
+/// schedule stays deterministic but unsynchronized.
+fn backoff_delay(timeout_ns: u64, attempt: u32, sid: u64) -> u64 {
+    let shift = attempt.min(BACKOFF_CAP_SHIFT);
+    let delay = timeout_ns.saturating_mul(1u64 << shift);
+    let half = delay / 2;
+    half + backoff_jitter(sid, attempt) % (delay - half + 1)
 }
 
 /// The unified submit → merge → batch → admit → retire pipeline.
@@ -642,6 +750,30 @@ pub struct IoEngine {
     /// interleaved epoch minting plus the anti-entropy bookkeeping
     /// exchanged with peer engines. `None` = single-engine cluster.
     gossip: Option<GossipState>,
+    /// Completion-deadline recovery (`EngineSpec::deadlines`):
+    /// `(timeout_ns, max_retries)`. `None` keeps the pre-deadline
+    /// behaviour — a completion that never arrives hangs its request.
+    deadlines: Option<(u64, u32)>,
+    /// Head/tail of the intrusive deadline list through `outstanding`
+    /// (`u64::MAX` = empty). Earliest deadline at the head.
+    dl_head: u64,
+    dl_tail: u64,
+    /// Recovery timer lane: read-retry backoffs and QP probes, in
+    /// engine time. Sim/chaos backends drive it off
+    /// [`IoEngine::next_timer_at`]; live backends poll it with coarse
+    /// monotonic ticks.
+    timers: EventQueue<TimerEntry>,
+    /// Per-QP error/reset state machine (global QP id indexing); all-Ok
+    /// and untouched unless deadlines are enabled.
+    qp_health: Vec<QpHealth>,
+    /// Nodes this engine itself declared down because every QP wedged —
+    /// the first QP recovering re-admits them via `on_node_up`.
+    auto_downed: Vec<bool>,
+    /// Reused scratch for QP-error flushes (wr_ids collected off the
+    /// deadline list before synthesizing their timeout-WCs).
+    flush_buf: Vec<u64>,
+    /// Deadline-recovery counters ([`IoEngine::recovery_stats`]).
+    recovery: RecoveryStats,
     pub stats: EngineStats,
 }
 
@@ -659,9 +791,8 @@ impl IoEngine {
         costs: EngineCosts,
     ) -> Self {
         let channels = ChannelMap::new(nodes, qps_per_node);
-        let shards = (0..channels.total_qps())
-            .map(|_| MergeQueues::new())
-            .collect();
+        let total_qps = channels.total_qps();
+        let shards = (0..total_qps).map(|_| MergeQueues::new()).collect();
         let regulator = match window_bytes {
             Some(w) => Regulator::static_window(w),
             None => Regulator::unlimited(),
@@ -687,6 +818,14 @@ impl IoEngine {
             resync: ResyncState::disabled(nodes),
             mr_cache: None,
             gossip: None,
+            deadlines: None,
+            dl_head: u64::MAX,
+            dl_tail: u64::MAX,
+            timers: EventQueue::new(),
+            qp_health: vec![QpHealth::fresh(); total_qps],
+            auto_downed: vec![false; nodes],
+            flush_buf: Vec::new(),
+            recovery: RecoveryStats::default(),
             stats: EngineStats::default(),
         }
     }
@@ -724,6 +863,7 @@ impl IoEngine {
         if let Some((id, n)) = spec.gossip {
             e.gossip = Some(GossipState::new(id, n, spec.nodes));
         }
+        e.deadlines = spec.deadlines;
         e
     }
 
@@ -1190,6 +1330,29 @@ impl IoEngine {
         self.mr_cache.as_ref().map(|c| c.snapshot())
     }
 
+    /// `true` when completion-deadline recovery is armed
+    /// (`EngineSpec::deadlines`).
+    pub fn deadlines_enabled(&self) -> bool {
+        self.deadlines.is_some()
+    }
+
+    /// Deadline-recovery counters: local timeout retirements, QP-error
+    /// flushes, completed QP resets. (`reconnects` is owned by the
+    /// socket fabric; the engine's copy stays zero.)
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        self.recovery
+    }
+
+    /// QPs currently *not* in the `Ok` state (in `Error` or probation).
+    /// Zero whenever deadlines are disabled; the chaos quiescence gate
+    /// holds it at zero after every recovery scenario drains.
+    pub fn qps_not_ok(&self) -> usize {
+        self.qp_health
+            .iter()
+            .filter(|h| h.state != QpState::Ok)
+            .count()
+    }
+
     /// Swap in a custom admission policy (the paper's §5.1 hook).
     pub fn set_regulator(&mut self, r: Regulator) {
         self.regulator = r;
@@ -1485,6 +1648,8 @@ impl IoEngine {
                         kind: SubKind::App,
                         epoch,
                         tenant: io.tenant,
+                        next_in_wr: u64::MAX,
+                        timeouts: 0,
                     };
                     let sid = self.subs.insert(sub);
                     self.enqueue(sid, node, &sub);
@@ -1526,6 +1691,13 @@ impl IoEngine {
         for i in 0..n_shards {
             let qp = (start + i) % n_shards;
             if self.shards[qp].of(dir).is_empty() {
+                continue;
+            }
+            if self.deadlines.is_some() && self.qp_health[qp].state != QpState::Ok {
+                // a tripped QP admits no posts until probation walks it
+                // back to `Ok`; its queued requests wait (and keep
+                // merging with later arrivals) instead of feeding a
+                // wedged pipe
                 continue;
             }
             let avail = self.regulator.available(now);
@@ -1600,6 +1772,23 @@ impl IoEngine {
                         cpu += self.costs.mr_hit_ns * u64::from(t.hit_spans)
                             + self.costs.mr_miss_ns * u64::from(t.miss_spans);
                     }
+                    // with deadlines on, thread the WR's subs into an
+                    // intrusive chain through the sub ledger so an
+                    // expiry can rebuild its app_ios without keeping a
+                    // side allocation per WR
+                    let (first_sub, deadline_at) = match self.deadlines {
+                        Some((timeout_ns, _)) => {
+                            let mut head = u64::MAX;
+                            for &sid in &wr.app_ios {
+                                if let Some(s) = self.subs.get_mut(sid) {
+                                    s.next_in_wr = head;
+                                    head = sid;
+                                }
+                            }
+                            (head, now.saturating_add(timeout_ns))
+                        }
+                        None => (u64::MAX, u64::MAX),
+                    };
                     // re-key the WR to its outstanding-ledger slot: the
                     // wr_id the backend sees *is* the slab key, so the
                     // completion lookup is an index, not a hash probe
@@ -1607,7 +1796,16 @@ impl IoEngine {
                         bytes: wr.len,
                         t_post: now + cpu,
                         tenant: wr.tenant,
+                        qp,
+                        op: wr.op,
+                        first_sub,
+                        deadline_at,
+                        dl_prev: u64::MAX,
+                        dl_next: u64::MAX,
                     });
+                    if self.deadlines.is_some() {
+                        self.dl_push_back(key);
+                    }
                     wr.wr_id = key;
                     self.regulator.on_post(key, wr.tenant, wr.len);
                     cpu += self.costs.post_wqe_cpu_ns;
@@ -1639,6 +1837,7 @@ impl IoEngine {
         out.admission_blocked += blocked;
         self.stats.merged_ios += merged;
         self.stats.admission_blocks += blocked;
+        self.stats.window_leaks = self.regulator.window_leaks;
     }
 
     /// Drain both directions (reads first: page-ins are synchronous).
@@ -1686,12 +1885,25 @@ impl IoEngine {
     /// (cleared first; capacity is retained across calls).
     pub fn on_wc_into(&mut self, wc: &Wc, now: u64, out: &mut WcOut) {
         out.clear();
+        self.on_wc_inner(wc, now, false, out);
+        self.kick_resync();
+        self.maybe_prune_epochs();
+        self.stats.window_leaks = self.regulator.window_leaks;
+    }
+
+    /// Completion handling shared by real WCs and synthesized
+    /// timeout-WCs. Appends to `out` without clearing it so the timer
+    /// service can fold many expiries into one output batch; callers
+    /// run the resync kick and epoch prune once per batch.
+    fn on_wc_inner(&mut self, wc: &Wc, now: u64, timeout: bool, out: &mut WcOut) {
         let Some(posted) = self.outstanding.remove(wc.wr_id) else {
             // duplicate or unknown wr_id: dropped before it can touch the
-            // window accounting or retire anything twice
+            // window accounting or retire anything twice — this is also
+            // where a late real WC lands after its WR timed out locally
             self.stats.duplicate_wcs += 1;
             return;
         };
+        self.dl_unlink(&posted, wc.wr_id);
         debug_assert_eq!(posted.bytes, wc.len, "WC length disagrees with its WR");
         let rtt = now.saturating_sub(posted.t_post);
         // release against the tenant recorded at post time: the engine's
@@ -1722,6 +1934,7 @@ impl IoEngine {
             return;
         }
 
+        let max_retries = self.deadlines.map_or(0, |(_, r)| r);
         for &sid in &wc.app_ios {
             // stale (already-resolved) sub ids fail the slab's generation
             // check — the per-sub duplicate guard
@@ -1729,6 +1942,13 @@ impl IoEngine {
                 continue;
             };
             match sub.kind {
+                // a timed-out read with retries left parks for backoff
+                // instead of failing over immediately: the timeout may
+                // be congestion, not death, and hammering the next
+                // replica right away spreads it
+                SubKind::App if timeout && sub.dir == Dir::Read && sub.timeouts < max_retries => {
+                    self.hold_for_backoff(sid, sub, now)
+                }
                 SubKind::App => self.on_app_sub(sid, sub, ok, out),
                 SubKind::ResyncRead { target } => {
                     self.on_resync_read_sub(sid, sub, target, ok, out)
@@ -1738,8 +1958,256 @@ impl IoEngine {
                 }
             }
         }
+        if timeout {
+            self.note_qp_timeout(posted.qp, now, out);
+        } else if ok {
+            self.qp_health[posted.qp].consecutive_timeouts = 0;
+        }
+    }
+
+    /// Append a freshly posted WR at the tail of the deadline list.
+    /// Deadlines are minted from the drain's `now`, which callers move
+    /// monotonically, so tail-append keeps the list earliest-first and
+    /// both ends of it O(1) — no heap, no allocation, just two links
+    /// threaded through the outstanding slab.
+    fn dl_push_back(&mut self, key: u64) {
+        let tail = self.dl_tail;
+        if let Some(p) = self.outstanding.get_mut(key) {
+            p.dl_prev = tail;
+            p.dl_next = u64::MAX;
+        }
+        // `u64::MAX` fails the slab's generation check, so an empty
+        // tail falls through to the head update
+        match self.outstanding.get_mut(tail) {
+            Some(t) => t.dl_next = key,
+            None => self.dl_head = key,
+        }
+        self.dl_tail = key;
+    }
+
+    /// Unlink a retired WR from the deadline list in O(1) — the
+    /// completion-path "cancel" of its timeout. No-op when deadlines
+    /// are off (the links are never threaded).
+    fn dl_unlink(&mut self, posted: &PostedWr, key: u64) {
+        if self.deadlines.is_none() {
+            return;
+        }
+        match self.outstanding.get_mut(posted.dl_prev) {
+            Some(p) => p.dl_next = posted.dl_next,
+            None => {
+                if self.dl_head == key {
+                    self.dl_head = posted.dl_next;
+                }
+            }
+        }
+        match self.outstanding.get_mut(posted.dl_next) {
+            Some(n) => n.dl_prev = posted.dl_prev,
+            None => {
+                if self.dl_tail == key {
+                    self.dl_tail = posted.dl_prev;
+                }
+            }
+        }
+    }
+
+    /// Synthesize the local timeout-WC for an expired (or flushed) WR
+    /// and run it through the ordinary completion path: the admission
+    /// window releases exactly once, subs re-route through
+    /// backoff/failover, and the late real WC — if the fabric ever
+    /// delivers it — dies at the generation check as a counted
+    /// duplicate.
+    fn expire_wr(&mut self, wr_id: u64, now: u64, out: &mut WcOut) {
+        let Some(posted) = self.outstanding.get(wr_id).copied() else {
+            return;
+        };
+        let mut ids = IdList::new();
+        let mut sid = posted.first_sub;
+        while sid != u64::MAX {
+            ids.push(sid);
+            sid = self.subs.get(sid).map_or(u64::MAX, |s| s.next_in_wr);
+        }
+        let wc = Wc {
+            wr_id,
+            qp: posted.qp,
+            op: posted.op,
+            len: posted.bytes,
+            status: WcStatus::Error,
+            app_ios: ids,
+            tenant: posted.tenant,
+        };
+        self.on_wc_inner(&wc, now, true, out);
+    }
+
+    /// Park a timed-out read sub for a capped, jittered backoff instead
+    /// of re-queueing it immediately. The window bytes were already
+    /// released by the timeout-WC, so the parked sub costs nothing; the
+    /// release timer funnels it back through the ordinary
+    /// failover-or-terminal path with the timed-out node excluded.
+    fn hold_for_backoff(&mut self, sid: u64, sub: SubIo, now: u64) {
+        let (timeout_ns, _) = self.deadlines.expect("timeout path requires deadlines");
+        if let Some(s) = self.subs.get_mut(sid) {
+            s.timeouts = sub.timeouts + 1;
+            // the node that timed out is as failed as one that errored
+            s.attempted |= 1 << sub.node;
+            s.next_in_wr = u64::MAX;
+        }
+        let delay = backoff_delay(timeout_ns, sub.timeouts, sid);
+        self.timers
+            .push(now.saturating_add(delay), TimerEntry::BackoffRelease(sid));
+    }
+
+    /// Fire a backoff release: the parked sub re-enters the routing
+    /// machinery as a failed read — next alive, untried replica or
+    /// terminal disk fallback. The parked sub is exclusively owned by
+    /// its timer (a late real WC died at the generation check; a QP
+    /// flush only walks WR-attached subs), so a dead generation here
+    /// means the id was already resolved and the release is a no-op.
+    fn release_backoff(&mut self, sid: u64, out: &mut WcOut) {
+        let Some(&sub) = self.subs.get(sid) else {
+            return;
+        };
+        self.on_app_sub(sid, sub, false, out);
+    }
+
+    /// Count a deadline expiry against its QP. [`QP_ERROR_TIMEOUTS`]
+    /// consecutive expiries (any success resets the streak) flip the QP
+    /// to `Error`, which — like a verbs QP entering the error state —
+    /// flushes every WR it still carries as an immediate timeout-WC and
+    /// schedules the probation probe that will walk it back to `Ok`.
+    /// When that wedges the node's last healthy QP, the node itself is
+    /// reported down so placement routes around it.
+    fn note_qp_timeout(&mut self, qp: QpId, now: u64, out: &mut WcOut) {
+        self.recovery.timeouts += 1;
+        let Some((timeout_ns, _)) = self.deadlines else {
+            return;
+        };
+        let h = &mut self.qp_health[qp];
+        if h.state != QpState::Ok {
+            // flushes land here: their nested timeout-WCs must not
+            // re-trip the QP that is already in `Error`
+            return;
+        }
+        h.consecutive_timeouts += 1;
+        if h.consecutive_timeouts < QP_ERROR_TIMEOUTS {
+            return;
+        }
+        h.state = QpState::Error;
+        h.consecutive_timeouts = 0;
+        self.timers.push(
+            now.saturating_add(QP_PROBATION_TIMEOUTS.saturating_mul(timeout_ns)),
+            TimerEntry::QpProbe(qp),
+        );
+        // flush: walk the deadline list once, collecting this QP's
+        // outstanding WRs, then expire each — reusing a persistent
+        // buffer so the wedge path allocates only on its first trip
+        let mut flush = std::mem::take(&mut self.flush_buf);
+        flush.clear();
+        let mut cur = self.dl_head;
+        while cur != u64::MAX {
+            let p = self
+                .outstanding
+                .get(cur)
+                .expect("deadline list holds only live WRs");
+            if p.qp == qp {
+                flush.push(cur);
+            }
+            cur = p.dl_next;
+        }
+        for &wr_id in &flush {
+            self.recovery.flushes += 1;
+            self.expire_wr(wr_id, now, out);
+        }
+        flush.clear();
+        self.flush_buf = flush;
+        let node = self.channels.node_of(qp);
+        let all_out = (0..self.channels.total_qps())
+            .filter(|&q| self.channels.node_of(q) == node)
+            .all(|q| self.qp_health[q].state != QpState::Ok);
+        if all_out && !self.auto_downed[node] && matches!(self.routing, Routing::Placed(_)) {
+            self.auto_downed[node] = true;
+            self.on_node_down(node);
+        }
+    }
+
+    /// One probation step of a tripped QP: `Error → Resetting` (one
+    /// more probe scheduled a timeout later), then `Resetting → Ok` —
+    /// re-admitting the QP for drains and, if the wedge had taken the
+    /// whole node down, re-admitting the node through the ordinary
+    /// rejoin path (which resyncs any writes it missed).
+    fn probe_qp(&mut self, qp: QpId, now: u64) {
+        let Some((timeout_ns, _)) = self.deadlines else {
+            return;
+        };
+        match self.qp_health[qp].state {
+            QpState::Error => {
+                self.qp_health[qp].state = QpState::Resetting;
+                self.timers
+                    .push(now.saturating_add(timeout_ns), TimerEntry::QpProbe(qp));
+            }
+            QpState::Resetting => {
+                self.qp_health[qp].state = QpState::Ok;
+                self.qp_health[qp].consecutive_timeouts = 0;
+                self.recovery.resets += 1;
+                let node = self.channels.node_of(qp);
+                if self.auto_downed[node] {
+                    self.auto_downed[node] = false;
+                    self.on_node_up(node);
+                }
+            }
+            QpState::Ok => {}
+        }
+    }
+
+    /// Earliest pending recovery event — WR deadline, backoff release,
+    /// or QP probe — in engine time; `None` when nothing is armed.
+    /// Backends schedule their next [`IoEngine::service_timers`] call
+    /// here instead of polling.
+    pub fn next_timer_at(&mut self) -> Option<u64> {
+        let dl = self.outstanding.get(self.dl_head).map(|p| p.deadline_at);
+        match (dl, self.timers.peek_at()) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Fire every recovery event due at or before `now`, earliest
+    /// first, appending the synthesized retirements to `out` (cleared
+    /// first) exactly as a real completion batch would. No-op when
+    /// deadlines are off or nothing is due. After a call the caller
+    /// should drain again: expiries re-queue work and probes re-admit
+    /// QPs.
+    pub fn service_timers(&mut self, now: u64, out: &mut WcOut) {
+        out.clear();
+        if self.deadlines.is_none() {
+            return;
+        }
+        loop {
+            let dl = self.outstanding.get(self.dl_head).map(|p| p.deadline_at);
+            let dl_due = dl.map_or(false, |t| t <= now);
+            let tq = self.timers.peek_at();
+            let tq_due = tq.map_or(false, |t| t <= now);
+            if dl_due && (!tq_due || dl <= tq) {
+                let head = self.dl_head;
+                self.expire_wr(head, now, out);
+                if self.dl_head == head {
+                    debug_assert!(false, "expiry failed to pop the deadline head");
+                    break;
+                }
+            } else if tq_due {
+                let Some((_, entry)) = self.timers.pop() else {
+                    break;
+                };
+                match entry {
+                    TimerEntry::BackoffRelease(sid) => self.release_backoff(sid, out),
+                    TimerEntry::QpProbe(qp) => self.probe_qp(qp, now),
+                }
+            } else {
+                break;
+            }
+        }
         self.kick_resync();
         self.maybe_prune_epochs();
+        self.stats.window_leaks = self.regulator.window_leaks;
     }
 
     /// Resolve one application replica leg (placed mode). The sub stays
@@ -2131,6 +2599,8 @@ impl IoEngine {
             kind: SubKind::ResyncRead { target: node },
             epoch: src_epoch,
             tenant: crate::fabric::DEFAULT_TENANT,
+            next_in_wr: u64::MAX,
+            timeouts: 0,
         };
         let sid = self.subs.insert(sub);
         self.enqueue(sid, src, &sub);
@@ -2654,6 +3124,7 @@ mod tests {
                 mmio_cpu_ns: 10,
                 merge_check_base_ns: 5,
                 merge_check_per_io_ns: 1,
+                ..EngineCosts::free()
             },
         );
         for i in 0..3u64 {
@@ -3747,5 +4218,152 @@ mod tests {
         b.absorb_gossip(&d2);
         assert_eq!(b.take_disk_surrenders(), vec![(1, 8192, 4096)]);
         assert_eq!(b.gossip_stats().unwrap().disk_spans_absorbed, 2);
+    }
+
+    #[test]
+    fn timeout_wc_retires_once_and_late_real_wc_is_duplicate() {
+        let mut e = IoEngine::build(&EngineSpec::new(2).replicated(2).deadlines(1_000, 0));
+        e.submit(io(7, Dir::Write, 0, 0));
+        let out = e.drain_all(0);
+        assert_eq!(out.wrs.len(), 2, "one leg per replica");
+        assert!(e.regulator().in_flight() > 0);
+        assert_eq!(e.next_timer_at(), Some(1_000));
+
+        // nothing is delivered: both legs expire at the deadline and the
+        // request retires terminally (writes do not back off)
+        let mut wout = WcOut::default();
+        e.service_timers(1_000, &mut wout);
+        assert_eq!(wout.retired.len(), 1);
+        assert!(wout.retired[0].disk_fallback, "no replica confirmed it");
+        assert_eq!(e.recovery_stats().timeouts, 2);
+        assert_eq!(e.regulator().in_flight(), 0);
+        assert_eq!(e.next_timer_at(), None, "retirement cancelled the deadlines");
+
+        // the fabric finally delivers the real completions: both die at
+        // the generation check — no double retire, no double release
+        for wr in &out.wrs {
+            let r = e.on_wc(&wc_for(wr, WcStatus::Success), 2_000);
+            assert!(r.retired.is_empty());
+            assert_eq!(r.requeued, 0);
+        }
+        assert_eq!(e.stats.duplicate_wcs, 2);
+        assert_eq!(e.regulator().in_flight(), 0);
+        assert_eq!(e.stats.window_leaks, 0);
+    }
+
+    #[test]
+    fn read_timeout_backs_off_then_fails_over() {
+        let mut e = IoEngine::build(&EngineSpec::new(2).replicated(2).deadlines(1_000, 2));
+        e.submit(io(1, Dir::Read, 0, 0));
+        let out = e.drain_all(0);
+        assert_eq!(out.wrs.len(), 1, "a read has one leg");
+        let first = out.wrs[0].clone();
+
+        // expiry parks the read for its jittered backoff: window
+        // released, nothing retired, nothing requeued yet
+        let mut wout = WcOut::default();
+        e.service_timers(1_000, &mut wout);
+        assert!(wout.retired.is_empty());
+        assert_eq!(wout.requeued, 0);
+        assert_eq!(e.recovery_stats().timeouts, 1);
+        assert_eq!(e.regulator().in_flight(), 0);
+
+        // the release fires within (timeout/2, timeout] of the expiry
+        let release = e.next_timer_at().expect("backoff release armed");
+        assert!(release > 1_000 && release <= 2_000, "got {release}");
+        e.service_timers(release, &mut wout);
+        assert_eq!(wout.requeued, 1, "backoff release re-queued the read");
+
+        // the retry routes to the untried replica and completes
+        let out2 = e.drain_all(release);
+        assert_eq!(out2.wrs.len(), 1);
+        assert_ne!(out2.wrs[0].node, first.node, "failed over to the peer");
+        let r = e.on_wc(&wc_for(&out2.wrs[0], WcStatus::Success), release + 10);
+        assert_eq!(r.retired.len(), 1);
+        assert!(r.retired[0].failed_over);
+        assert!(!r.retired[0].disk_fallback);
+        assert_eq!(e.regulator().in_flight(), 0);
+        assert_eq!(e.stats.window_leaks, 0);
+
+        // the original leg's real completion is a counted duplicate
+        let dup = e.on_wc(&wc_for(&first, WcStatus::Success), release + 20);
+        assert!(dup.retired.is_empty());
+        assert_eq!(e.stats.duplicate_wcs, 1);
+    }
+
+    #[test]
+    fn wedged_qp_flushes_and_recovers() {
+        let mut e = IoEngine::build(&EngineSpec::new(2).replicated(2).deadlines(1_000, 0));
+        // five writes, drained one at a time so each leg gets its own
+        // WR; node 1's legs complete, node 0's are never delivered
+        let mut held = Vec::new();
+        for i in 0..5u64 {
+            e.submit(io(i, Dir::Write, 0, i * 8192));
+            let out = e.drain_all(i * 100);
+            for wr in out.wrs {
+                if wr.node == 1 {
+                    e.on_wc(&wc_for(&wr, WcStatus::Success), i * 100);
+                } else {
+                    held.push(wr);
+                }
+            }
+        }
+        assert_eq!(held.len(), 5);
+
+        // deadlines land at 1000..=1400; the third consecutive expiry
+        // trips qp 0 into `Error`, flushing the two WRs it still holds
+        let mut wout = WcOut::default();
+        e.service_timers(1_200, &mut wout);
+        let rec = e.recovery_stats();
+        assert_eq!(rec.timeouts, 5, "3 expiries + 2 flushed");
+        assert_eq!(rec.flushes, 2);
+        assert_eq!(e.qps_not_ok(), 1);
+        // qp 0 was node 0's only QP: the node auto-downed with it
+        assert_eq!(e.node_state(0), Some(NodeState::Dead));
+        // every write still retired durably via its node-1 leg
+        assert_eq!(wout.retired.len(), 5);
+        assert!(wout.retired.iter().all(|r| !r.disk_fallback));
+        assert_eq!(e.regulator().in_flight(), 0);
+        assert_eq!(e.stats.window_leaks, 0);
+
+        // probation: Error -> Resetting after 4 timeouts, -> Ok one later
+        let probe1 = e.next_timer_at().expect("probe armed");
+        assert_eq!(probe1, 1_200 + 4_000);
+        e.service_timers(probe1, &mut wout);
+        assert_eq!(e.qps_not_ok(), 1, "still resetting");
+        let probe2 = e.next_timer_at().expect("second probe armed");
+        assert_eq!(probe2, probe1 + 1_000);
+        e.service_timers(probe2, &mut wout);
+        assert_eq!(e.qps_not_ok(), 0);
+        assert_eq!(e.recovery_stats().resets, 1);
+        assert_eq!(e.node_state(0), Some(NodeState::Alive), "auto-revived");
+
+        // the recovered QP serves traffic again
+        e.submit(io(100, Dir::Write, 0, 0));
+        let retired = complete_all(&mut e);
+        assert_eq!(retired.len(), 1);
+        assert_eq!(e.regulator().in_flight(), 0);
+        assert_eq!(e.next_timer_at(), None);
+    }
+
+    #[test]
+    fn deadlines_off_is_zero_cost_and_timerless() {
+        let mut e = engine(2, 2, None);
+        for i in 0..4 {
+            e.submit(io(i, Dir::Write, (i % 2) as usize, i * 4096));
+        }
+        complete_all(&mut e);
+        assert_eq!(e.next_timer_at(), None);
+        let mut wout = WcOut::default();
+        wout.retired.push(RetiredIo {
+            id: 9,
+            disk_fallback: false,
+            failed_over: false,
+        });
+        // service_timers still clears the reused buffer, then no-ops
+        e.service_timers(u64::MAX, &mut wout);
+        assert!(wout.retired.is_empty());
+        assert_eq!(e.recovery_stats(), RecoveryStats::default());
+        assert_eq!(e.stats.window_leaks, 0);
     }
 }

@@ -217,6 +217,20 @@ impl PollerFsm {
     }
 }
 
+/// When a re-armed (sleeping) poller may wake at the latest: the
+/// interrupt horizon `now + max_sleep_ns`, clamped to the engine's
+/// next armed WR deadline so a lost completion is still detected on
+/// time ([`IoEngine::next_timer_at`] supplies `next_deadline_ns`,
+/// `u64::MAX` when deadlines are off or nothing is outstanding).
+/// Returns an absolute wake time that is never in the past — an
+/// already-overdue deadline wakes the poller immediately.
+///
+/// [`IoEngine::next_timer_at`]: crate::coordinator::engine::IoEngine::next_timer_at
+pub fn clamp_wake_ns(now_ns: u64, next_deadline_ns: u64, max_sleep_ns: u64) -> u64 {
+    let horizon = now_ns.saturating_add(max_sleep_ns);
+    horizon.min(next_deadline_ns.max(now_ns))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -415,6 +429,47 @@ mod tests {
                         step = f.on_wake(t);
                     }
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wake_clamp_never_sleeps_past_an_armed_deadline() {
+        // no deadline armed: the full interrupt horizon
+        assert_eq!(clamp_wake_ns(1_000, u64::MAX, 500), 1_500);
+        // a deadline inside the horizon clamps the sleep
+        assert_eq!(clamp_wake_ns(1_000, 1_200, 500), 1_200);
+        // a deadline past the horizon leaves it alone
+        assert_eq!(clamp_wake_ns(1_000, 9_000, 500), 1_500);
+        // an overdue deadline wakes immediately, never in the past
+        assert_eq!(clamp_wake_ns(1_000, 400, 500), 1_000);
+        // saturates instead of wrapping near the clock's end
+        assert_eq!(clamp_wake_ns(u64::MAX - 10, u64::MAX, 500), u64::MAX);
+    }
+
+    /// Satellite property: the clamped wake time is always within
+    /// `[now, now + max_sleep]` and never past a future armed deadline.
+    #[test]
+    fn prop_wake_clamp_bounds() {
+        use crate::util::prop::{self, cfg};
+        prop::forall(cfg(0xC1A4), |rng, _size| {
+            let now = rng.gen_below(1 << 40);
+            let dl = if rng.gen_bool(0.2) {
+                u64::MAX
+            } else {
+                rng.gen_below(1 << 41)
+            };
+            let max_sleep = rng.gen_below(1 << 20);
+            let wake = clamp_wake_ns(now, dl, max_sleep);
+            if wake < now {
+                return Err(format!("woke in the past: {wake} < {now}"));
+            }
+            if wake > now.saturating_add(max_sleep) {
+                return Err(format!("slept past the horizon: {wake}"));
+            }
+            if dl != u64::MAX && dl >= now && wake > dl {
+                return Err(format!("slept past the armed deadline: {wake} > {dl}"));
             }
             Ok(())
         });

@@ -141,14 +141,17 @@ pub struct TenantLedger {
 /// The regulator: tracks in-flight bytes against the policy window,
 /// globally and per tenant.
 ///
-/// Posting and completion are keyed by `wr_id`: in debug builds the
-/// regulator keeps a per-WR ledger (bytes *and* tenant) and asserts that
-/// every completion releases exactly the bytes its post reserved, against
-/// the same tenant. An error completion that released the wrong amount
-/// (or a duplicate completion that released twice, or a completion billed
-/// to the wrong tenant) would strand window capacity forever — the leak
-/// is invisible in steady state and fatal under load, so it is a debug
-/// assertion, not a runtime branch.
+/// Posting and completion are keyed by `wr_id`: the regulator keeps a
+/// per-WR ledger (bytes *and* tenant) and checks that every completion
+/// releases exactly the bytes its post reserved, against the same
+/// tenant. An error completion that released the wrong amount (or a
+/// duplicate completion that released twice, or a completion billed to
+/// the wrong tenant) would strand window capacity forever — the leak is
+/// invisible in steady state and fatal under load. Debug builds panic at
+/// the offending call; release builds count the violation in
+/// [`Regulator::window_leaks`], which the chaos quiescence invariants
+/// gate at zero (so a leak fails the sweep in release too, with the
+/// seed to replay it).
 #[derive(Debug)]
 pub struct Regulator {
     policy: Box<dyn AdmissionPolicy>,
@@ -165,9 +168,12 @@ pub struct Regulator {
     pub admitted: u64,
     pub blocked_checks: u64,
     pub peak_in_flight: u64,
-    /// Debug-only per-WR ledger: wr_id -> (bytes, tenant) reserved at
-    /// post time.
-    #[cfg(debug_assertions)]
+    /// Ledger violations observed (double post, unmatched or mismatched
+    /// release). Always 0 on a healthy engine; the hash map it is
+    /// checked against reaches steady capacity during warm-up, so the
+    /// always-on bookkeeping costs the hot path no allocations.
+    pub window_leaks: u64,
+    /// Per-WR ledger: wr_id -> (bytes, tenant) reserved at post time.
     ledger: crate::util::fxhash::FxHashMap<u64, (u64, TenantId)>,
 }
 
@@ -192,7 +198,7 @@ impl Regulator {
             admitted: 0,
             blocked_checks: 0,
             peak_in_flight: 0,
-            #[cfg(debug_assertions)]
+            window_leaks: 0,
             ledger: crate::util::fxhash::FxHashMap::default(),
         }
     }
@@ -304,16 +310,11 @@ impl Regulator {
 
     /// Record that WR `wr_id` of `tenant` reserved `bytes` of the window.
     pub fn on_post(&mut self, wr_id: u64, tenant: TenantId, bytes: u64) {
-        #[cfg(debug_assertions)]
-        {
-            let prev = self.ledger.insert(wr_id, (bytes, tenant));
-            debug_assert!(
-                prev.is_none(),
-                "wr_id {wr_id} posted twice without completing"
-            );
+        let prev = self.ledger.insert(wr_id, (bytes, tenant));
+        if prev.is_some() {
+            self.window_leaks += 1;
+            debug_assert!(false, "wr_id {wr_id} posted twice without completing");
         }
-        #[cfg(not(debug_assertions))]
-        let _ = wr_id;
         self.in_flight += bytes;
         self.feedback.in_flight_bytes = self.in_flight;
         self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
@@ -332,28 +333,36 @@ impl Regulator {
 
     /// Record a completion (success *or* error — either way the WR left
     /// the NIC): releases window (global and per-tenant) and feeds RTT to
-    /// the policy. In debug builds, asserts `bytes` and `tenant` match
-    /// what `wr_id`'s post reserved so a mismatched release cannot
-    /// silently strand window capacity.
+    /// the policy. Checks `bytes` and `tenant` against what `wr_id`'s
+    /// post reserved so a mismatched release cannot silently strand
+    /// window capacity — debug builds panic, release builds count a
+    /// [`Regulator::window_leaks`] violation.
     pub fn on_complete(&mut self, wr_id: u64, tenant: TenantId, bytes: u64, rtt_ns: u64) {
-        #[cfg(debug_assertions)]
         match self.ledger.remove(&wr_id) {
             Some((posted, posted_tenant)) => {
-                debug_assert_eq!(
-                    posted,
-                    bytes,
-                    "wr_id {wr_id} completed {bytes} bytes but posted {posted}"
-                );
-                debug_assert_eq!(
-                    posted_tenant,
-                    tenant,
-                    "wr_id {wr_id} completed by tenant {tenant} but posted by tenant {posted_tenant}"
-                );
+                if posted != bytes {
+                    self.window_leaks += 1;
+                    debug_assert_eq!(
+                        posted,
+                        bytes,
+                        "wr_id {wr_id} completed {bytes} bytes but posted {posted}"
+                    );
+                }
+                if posted_tenant != tenant {
+                    self.window_leaks += 1;
+                    debug_assert_eq!(
+                        posted_tenant,
+                        tenant,
+                        "wr_id {wr_id} completed by tenant {tenant} but posted by tenant {posted_tenant}"
+                    );
+                }
             }
-            None => panic!("wr_id {wr_id} completed without a matching post"),
+            None => {
+                self.window_leaks += 1;
+                #[cfg(debug_assertions)]
+                panic!("wr_id {wr_id} completed without a matching post");
+            }
         }
-        #[cfg(not(debug_assertions))]
-        let _ = wr_id;
         debug_assert!(self.in_flight >= bytes, "window release underflow");
         self.in_flight = self.in_flight.saturating_sub(bytes);
         self.feedback.in_flight_bytes = self.in_flight;
@@ -418,6 +427,36 @@ mod tests {
         }
         assert_eq!(r.in_flight(), 0, "no stranded window capacity");
         assert_eq!(r.available(0), 1 << 20);
+    }
+
+    /// The always-on ledger stat: a healthy post/complete history keeps
+    /// `window_leaks` at exactly zero (this is the counter the chaos
+    /// quiescence invariants gate in release builds, where the ledger
+    /// counts instead of panicking).
+    #[test]
+    fn healthy_history_counts_zero_window_leaks() {
+        let mut r = Regulator::static_window(1 << 20).with_tenants(&[2, 1]);
+        for wr in 0..64u64 {
+            r.on_post(wr, (wr % 2) as usize, 4096);
+        }
+        for wr in (0..64u64).rev() {
+            r.on_complete(wr, (wr % 2) as usize, 4096, 1_000);
+        }
+        assert_eq!(r.window_leaks, 0);
+        assert_eq!(r.in_flight(), 0);
+    }
+
+    /// Release builds must *count* ledger violations instead of
+    /// panicking — the same three classes the debug assertions catch.
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn release_builds_count_ledger_violations() {
+        let mut r = Regulator::static_window(1 << 20);
+        r.on_post(7, 0, 4096);
+        r.on_post(7, 0, 4096); // double post
+        r.on_complete(7, 0, 8192, 1_000); // mismatched bytes
+        r.on_complete(9, 0, 4096, 1_000); // unmatched release
+        assert_eq!(r.window_leaks, 3);
     }
 
     #[test]

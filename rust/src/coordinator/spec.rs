@@ -66,6 +66,17 @@ pub struct EngineSpec {
     /// Requires replication (peer engines coordinate over a shared
     /// replica set). `None` keeps the exact single-engine behaviour.
     pub gossip: Option<(usize, usize)>,
+    /// `Some((timeout_ns, max_retries))` enables completion-deadline
+    /// recovery: every posted WR is armed with a deadline `timeout_ns`
+    /// after its post; on expiry the engine synthesizes a local
+    /// timeout-WC (releasing the admission window and rerouting through
+    /// the ordinary failover paths), retrying a timed-out read up to
+    /// `max_retries` times under capped jittered backoff before it
+    /// falls back like any terminal error. Repeated timeouts trip the
+    /// per-QP `Ok → Error → Resetting → Ok` state machine. `None` keeps
+    /// the pre-deadline behaviour: a completion that never arrives
+    /// hangs its request forever.
+    pub deadlines: Option<(u64, u32)>,
 }
 
 impl EngineSpec {
@@ -87,6 +98,7 @@ impl EngineSpec {
             tenant_weights: vec![1],
             mr_cache_bytes: None,
             gossip: None,
+            deadlines: None,
         }
     }
 
@@ -173,6 +185,16 @@ impl EngineSpec {
         self
     }
 
+    /// Arm completion deadlines: a posted WR that has not completed
+    /// `timeout_ns` after its post is retired locally as a timeout
+    /// (window released, request rerouted / retried up to `max_retries`
+    /// times with capped jittered backoff). Also enables the per-QP
+    /// error/reset state machine driven by consecutive timeouts.
+    pub fn deadlines(mut self, timeout_ns: u64, max_retries: u32) -> Self {
+        self.deadlines = Some((timeout_ns, max_retries));
+        self
+    }
+
     /// Register the QoS tenants by weight. More than one entry switches
     /// the engine to hierarchical admission + weighted-fair drain; the
     /// default single entry keeps the exact single-tenant fast path.
@@ -237,6 +259,22 @@ impl EngineSpec {
                 self.replicas.is_some(),
                 "spec: gossip requires replication (call .replicated(r)) — \
                  peer engines coordinate over a shared replica set"
+            );
+        }
+        if let Some((timeout_ns, max_retries)) = self.deadlines {
+            assert!(
+                timeout_ns > 0,
+                "spec: zero-ns completion deadline times out every WR at its \
+                 own post"
+            );
+            assert!(
+                max_retries <= 64,
+                "spec: deadline max_retries {max_retries} out of range 0..=64"
+            );
+            assert!(
+                self.replicas.is_some(),
+                "spec: deadlines require placed routing (call .replicated(r)) — \
+                 a timeout-WC is rebuilt from the engine's sub ledger"
             );
         }
         assert!(!self.tenant_weights.is_empty(), "spec: at least one tenant");
@@ -393,5 +431,33 @@ mod tests {
     #[should_panic(expected = "engine id 2 out of range")]
     fn gossip_engine_id_out_of_range_is_rejected() {
         EngineSpec::new(2).replicated(2).gossip(2, 2).validate();
+    }
+
+    #[test]
+    fn deadline_spec_validates() {
+        EngineSpec::new(1).replicated(1).deadlines(500_000, 3).validate();
+        // zero retries is legal: timeouts go straight to failover
+        EngineSpec::new(2)
+            .replicated(2)
+            .deadlines(1_000_000, 0)
+            .validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlines require placed routing")]
+    fn deadlines_without_placement_are_rejected() {
+        EngineSpec::new(1).deadlines(500_000, 3).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-ns completion deadline")]
+    fn zero_deadline_timeout_is_rejected() {
+        EngineSpec::new(1).deadlines(0, 3).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "max_retries 65 out of range")]
+    fn oversized_deadline_retries_is_rejected() {
+        EngineSpec::new(1).deadlines(500_000, 65).validate();
     }
 }

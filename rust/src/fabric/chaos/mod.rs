@@ -41,13 +41,16 @@ pub mod plan;
 pub mod scenario;
 
 pub use multi::{run_multi_scenario, MultiChaos, MultiPlan, MultiStats};
-pub use plan::{rack_members, AdmissionChurn, FaultPlan, LatencyStorm, NodeEvent, Partition, QpStall};
+pub use plan::{
+    rack_members, AdmissionChurn, ConnDrop, FaultPlan, LatencyStorm, NodeEvent, Partition, QpStall,
+    QpWedge,
+};
 pub use scenario::{replay_command, run_scenario, ChaosProfile, Scenario, ScenarioReport};
 
 use std::collections::HashSet;
 
 use crate::coordinator::engine::{
-    DrainOut, IoEngine, RetiredIo, Submitted, RESYNC_PARENT, SHARD_REGION_SHIFT,
+    DrainOut, IoEngine, RetiredIo, Submitted, WcOut, RESYNC_PARENT, SHARD_REGION_SHIFT,
 };
 use crate::coordinator::node::NodeState;
 use crate::coordinator::spec::EngineSpec;
@@ -127,6 +130,10 @@ enum EventKind {
     Node { node: NodeId, up: bool },
     /// Mid-run admission-window swap (policy churn).
     Churn { window: Option<u64> },
+    /// Service the engine's recovery timers (WR deadlines, backoff
+    /// releases, QP probes) at this virtual time. Idempotent: a stale
+    /// tick whose deadline already retired is a no-op.
+    Tick,
 }
 
 /// Which scheduler backs the fabric's event queue. Both pop the
@@ -203,6 +210,14 @@ pub struct ChaosStats {
     /// Mid-run admission-window swaps executed (policy churn).
     pub window_changes: u64,
     pub node_transitions: u64,
+    /// WCs swallowed outright by the plan's `lost_rate` — only the
+    /// engine's completion deadlines can retire those WRs.
+    pub lost_wcs: u64,
+    /// WCs dropped by a wedge window (a QP that stopped completing).
+    pub wedged_wcs: u64,
+    /// Recovery-timer service events executed (deadline expiries,
+    /// backoff releases and QP probes ride these).
+    pub timer_ticks: u64,
     pub retired: u64,
     pub disk_fallbacks: u64,
     pub failovers: u64,
@@ -277,6 +292,10 @@ pub struct ChaosFabric {
     /// Reused drain buffer: every pump fills this through
     /// [`IoEngine::drain_all_into`] (allocation-free in steady state).
     drain: DrainOut,
+    /// Earliest recovery-timer tick currently in the schedule
+    /// (`u64::MAX` = none). Arming only when a new timer is strictly
+    /// earlier bounds the tick events a run can accumulate.
+    tick_at: u64,
     pub stats: ChaosStats,
 }
 
@@ -351,6 +370,7 @@ impl ChaosFabric {
             first_stale: None,
             surrendered_log: Vec::new(),
             drain: DrainOut::default(),
+            tick_at: u64::MAX,
             stats: ChaosStats::default(),
         };
         for ev in node_events {
@@ -540,6 +560,22 @@ impl ChaosFabric {
             }
         }
         self.drain = drain;
+        self.arm_timer_tick();
+    }
+
+    /// Keep the schedule holding a tick at the engine's earliest pending
+    /// recovery timer. Armed only when strictly earlier than what is
+    /// already scheduled; a tick that fires with nothing due is a no-op,
+    /// so over-arming is safe and under-arming impossible — every
+    /// deadline, backoff release and QP probe gets its event.
+    fn arm_timer_tick(&mut self) {
+        if let Some(t) = self.engine.next_timer_at() {
+            let at = t.max(self.now_ns);
+            if at < self.tick_at {
+                self.tick_at = at;
+                self.push(at, EventKind::Tick);
+            }
+        }
     }
 
     fn schedule_wr(&mut self, qp: QpId, node: NodeId, wr: WorkRequest) {
@@ -580,29 +616,49 @@ impl ChaosFabric {
             self.stats.stalled_wcs += 1;
         }
         let inject_error = self.plan.error_rate > 0.0 && self.rng.gen_bool(self.plan.error_rate);
-        if self.plan.duplicate_rate > 0.0 && self.rng.gen_bool(self.plan.duplicate_rate) {
-            let lag = 1 + self.rng.gen_below(self.plan.duplicate_lag_ns.max(1));
+        let dup_lag = if self.plan.duplicate_rate > 0.0 && self.rng.gen_bool(self.plan.duplicate_rate)
+        {
+            Some(1 + self.rng.gen_below(self.plan.duplicate_lag_ns.max(1)))
+        } else {
+            None
+        };
+        // recovery faults — drawn after every older fault class so
+        // pinned seeds keep their exact pre-recovery schedules
+        let lost = self.plan.lost_rate > 0.0 && self.rng.gen_bool(self.plan.lost_rate);
+        if let Some(lag) = dup_lag {
+            if self.plan.wedged(qp, at + lag) {
+                self.stats.wedged_wcs += 1;
+            } else {
+                self.push(
+                    at + lag,
+                    EventKind::Deliver(Flight {
+                        qp,
+                        node,
+                        wr: wr.clone(),
+                        inject_error,
+                        duplicate: true,
+                    }),
+                );
+            }
+        }
+        if lost {
+            // the WC is gone: nothing scheduled, the WR's deadline is
+            // the only thing that can ever release its window bytes
+            self.stats.lost_wcs += 1;
+        } else if self.plan.wedged(qp, at) {
+            self.stats.wedged_wcs += 1;
+        } else {
             self.push(
-                at + lag,
+                at,
                 EventKind::Deliver(Flight {
                     qp,
                     node,
-                    wr: wr.clone(),
+                    wr,
                     inject_error,
-                    duplicate: true,
+                    duplicate: false,
                 }),
             );
         }
-        self.push(
-            at,
-            EventKind::Deliver(Flight {
-                qp,
-                node,
-                wr,
-                inject_error,
-                duplicate: false,
-            }),
-        );
     }
 
     /// Advance virtual time to the next scheduled event and process it.
@@ -666,41 +722,17 @@ impl ChaosFabric {
                     status,
                 };
                 let out = self.engine.on_wc(&wc, self.now_ns);
-                self.stats.failovers += u64::from(out.requeued);
-                // repair writes inherit the stamps their source read served
-                for c in &out.resync_copies {
-                    if let Some(stamps) = self.served.remove(&c.read_sub) {
-                        self.write_stamps.insert(c.write_sub, stamps);
-                    }
-                }
-                // a write leg that completed on some replica is durable:
-                // its stamps raise the floor when the parent retires
-                // (split writes credit exactly their landed legs)
-                for (sid, parent) in &out.completed_subs {
-                    if *parent != RESYNC_PARENT {
-                        if let Some(st) = self.write_stamps.get(sid) {
-                            self.durable
-                                .entry(*parent)
-                                .or_default()
-                                .extend(st.iter().copied());
-                        }
-                    }
-                }
-                for r in &out.retired {
-                    self.stats.retired += 1;
-                    if r.disk_fallback {
-                        self.stats.disk_fallbacks += 1;
-                    }
-                    self.note_retired(r);
-                }
-                // write-stamp payloads are per-sub state; read bookkeeping
-                // (floor snapshots, served stamps) is retained until the
-                // *parent* retires so every leg of a split read is
-                // checked exactly once by note_retired
-                for (sid, _) in out.completed_subs.iter().chain(out.failed_subs.iter()) {
-                    self.write_stamps.remove(sid);
-                }
-                retired = out.retired;
+                retired = self.absorb_wc_out(out);
+            }
+            EventKind::Tick => {
+                // recovery timers: expire overdue WRs (synthesizing
+                // timeout-WCs through the same completion path a real
+                // WC takes), release backoffs, step QP probes
+                self.tick_at = u64::MAX;
+                self.stats.timer_ticks += 1;
+                let mut out = WcOut::default();
+                self.engine.service_timers(self.now_ns, &mut out);
+                retired = self.absorb_wc_out(out);
             }
         }
         // the completion (or node event) may have surrendered ranges
@@ -708,6 +740,48 @@ impl ChaosFabric {
         // failover requeues and freed window capacity both need a drain
         self.pump();
         Some(retired)
+    }
+
+    /// Engine-output bookkeeping shared by real deliveries and synthetic
+    /// timeout completions: count failovers, hand resync copies the
+    /// stamps their source read served, credit durable write legs, and
+    /// account retirements. Returns the retired I/Os for the caller.
+    fn absorb_wc_out(&mut self, out: WcOut) -> Vec<RetiredIo> {
+        self.stats.failovers += u64::from(out.requeued);
+        // repair writes inherit the stamps their source read served
+        for c in &out.resync_copies {
+            if let Some(stamps) = self.served.remove(&c.read_sub) {
+                self.write_stamps.insert(c.write_sub, stamps);
+            }
+        }
+        // a write leg that completed on some replica is durable:
+        // its stamps raise the floor when the parent retires
+        // (split writes credit exactly their landed legs)
+        for (sid, parent) in &out.completed_subs {
+            if *parent != RESYNC_PARENT {
+                if let Some(st) = self.write_stamps.get(sid) {
+                    self.durable
+                        .entry(*parent)
+                        .or_default()
+                        .extend(st.iter().copied());
+                }
+            }
+        }
+        for r in &out.retired {
+            self.stats.retired += 1;
+            if r.disk_fallback {
+                self.stats.disk_fallbacks += 1;
+            }
+            self.note_retired(r);
+        }
+        // write-stamp payloads are per-sub state; read bookkeeping
+        // (floor snapshots, served stamps) is retained until the
+        // *parent* retires so every leg of a split read is
+        // checked exactly once by note_retired
+        for (sid, _) in out.completed_subs.iter().chain(out.failed_subs.iter()) {
+            self.write_stamps.remove(sid);
+        }
+        out.retired
     }
 
     /// The data plane of a successful delivery: apply write stamps to the
@@ -1238,5 +1312,121 @@ mod tests {
         }
         assert_eq!(fab.engine().regulator().in_flight(), 0);
         assert_eq!(fab.stats.stale_reads, 0);
+    }
+
+    /// ISSUE 10 tentpole: WCs swallowed outright (`lost_rate`) can only
+    /// be recovered by the engine's completion deadlines. Every I/O must
+    /// still retire exactly once, the admission window must drain to
+    /// empty with zero counted leaks, and the payload model must stay
+    /// fresh — a lost completion delays work, it never strands it.
+    #[test]
+    fn lost_wcs_never_hang_the_window() {
+        let plan = FaultPlan::none().with_lost_wcs(0.2);
+        let spec = resync_spec(false)
+            .window(Some(16 * 4096))
+            .deadlines(100_000, 2);
+        let mut fab = ChaosFabric::build(0x10C7, &spec, plan);
+        let n = submit_pages(&mut fab, 100, 3);
+        let retired = fab.run_to_idle(STEPS).expect("quiescent");
+        let mut ids: Vec<u64> = retired.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(
+            ids,
+            (0..n).collect::<Vec<_>>(),
+            "exactly-once despite lost completions"
+        );
+        assert!(fab.stats.lost_wcs > 0, "losses actually bit");
+        assert!(fab.stats.timer_ticks > 0, "deadlines were serviced");
+        let rec = fab.engine().recovery_stats();
+        assert!(
+            rec.timeouts >= fab.stats.lost_wcs,
+            "every lost WC was retired by a deadline ({} timeouts, {} lost)",
+            rec.timeouts,
+            fab.stats.lost_wcs
+        );
+        assert_eq!(fab.engine().stats.window_leaks, 0);
+        assert_eq!(fab.engine().regulator().in_flight(), 0);
+        assert_eq!(fab.engine().queued_ios(), 0);
+        assert_eq!(fab.engine().qps_not_ok(), 0, "probation walked QPs back");
+        assert_eq!(fab.stats.stale_reads, 0, "{:?}", fab.first_stale);
+    }
+
+    /// ISSUE 10 tentpole: a wedged QP (completions silently dropped)
+    /// trips the per-QP error machine — outstanding WRs flush as
+    /// timeout-WCs, the node goes down while every one of its QPs is
+    /// bad, and probation walks the QP back to `Ok`, after which it
+    /// serves traffic again.
+    #[test]
+    fn wedged_qp_flushes_recovers_and_serves_again() {
+        let plan = FaultPlan::none().wedge(0, 0, 60_000);
+        let spec = EngineSpec::new(2)
+            .window(None)
+            .replicated(2)
+            .deadlines(20_000, 0);
+        let mut fab = ChaosFabric::build(0x3ED6E, &spec, plan);
+        for i in 0..6u64 {
+            fab.submit(i, Dir::Write, i * 4096, 4096);
+        }
+        let retired = fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(retired.len(), 6, "every write retires despite the wedge");
+        assert!(
+            retired.iter().all(|r| !r.disk_fallback),
+            "replica 1 kept every write durable"
+        );
+        assert_eq!(fab.stats.wedged_wcs, 6, "all node-0 deliveries dropped");
+        let rec = fab.engine().recovery_stats();
+        assert_eq!(rec.timeouts, 6);
+        assert!(rec.flushes > 0, "the Error transition flushed the rest");
+        assert_eq!(rec.resets, 1, "probation completed exactly one reset");
+        assert_eq!(fab.engine().qps_not_ok(), 0);
+        assert_eq!(
+            fab.engine().node_map().expect("placed").state(0),
+            NodeState::Alive,
+            "the auto-downed node was revived with its QP"
+        );
+        assert_eq!(fab.engine().stats.window_leaks, 0);
+        assert_eq!(fab.engine().regulator().in_flight(), 0);
+        // the recovered QP serves traffic again (wedge window is over)
+        assert!(fab.now() > 60_000);
+        for i in 0..6u64 {
+            fab.submit(100 + i, Dir::Write, i * 4096, 4096);
+        }
+        let retired = fab.run_to_idle(STEPS).expect("quiescent");
+        assert_eq!(retired.len(), 6);
+        assert_eq!(
+            fab.engine().recovery_stats().timeouts,
+            rec.timeouts,
+            "no new timeouts once the QP recovered"
+        );
+        assert_eq!(fab.stats.stale_reads, 0);
+    }
+
+    /// The new fault classes stay inside the determinism contract:
+    /// identical seeds replay identical schedules, retirements and
+    /// recovery counters.
+    #[test]
+    fn recovery_faults_are_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let plan = FaultPlan::none()
+                .with_lost_wcs(0.15)
+                .wedge(1, 10_000, 90_000)
+                .with_errors(0.1);
+            let spec = resync_spec(false)
+                .window(Some(24 * 4096))
+                .deadlines(60_000, 1);
+            let mut fab = ChaosFabric::build(seed, &spec, plan);
+            submit_pages(&mut fab, 80, 4);
+            let mut retired = fab.run_to_idle(STEPS).expect("quiescent");
+            retired.sort_by_key(|r| r.id);
+            (retired, fab.stats.clone(), fab.now())
+        };
+        let a = run(0xA11CE);
+        let b = run(0xA11CE);
+        assert_eq!(a, b, "recovery faults are a pure function of the seed");
+        assert!(
+            a.1.lost_wcs + a.1.wedged_wcs > 0,
+            "the new faults actually fired"
+        );
+        assert_eq!(a.1.stale_reads, 0);
     }
 }

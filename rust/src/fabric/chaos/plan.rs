@@ -65,6 +65,28 @@ pub struct Partition {
     pub until_ns: u64,
 }
 
+/// A wedged QP: during the window, every WC the QP would deliver is
+/// silently dropped — not delayed like a [`QpStall`], *gone*, the way a
+/// QP whose send queue wedged after a transport error never completes
+/// its posted WRs. Only the engine's completion deadlines can recover
+/// the window bytes and requests such a QP swallows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QpWedge {
+    pub qp: QpId,
+    pub from_ns: u64,
+    pub until_ns: u64,
+}
+
+/// A connection blackout on the coordination plane: during the window,
+/// inter-engine gossip exchanges are dropped (the socket between peers
+/// died and is reconnecting). Engines keep serving I/O; convergence must
+/// resume once the window closes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConnDrop {
+    pub from_ns: u64,
+    pub until_ns: u64,
+}
+
 /// A latency storm: a window of virtual time during which every WC
 /// (cluster-wide) picks up `extra_ns` of delivery delay — congestion on
 /// the shared NIC/fabric rather than one stalled QP. Storms stress the
@@ -120,6 +142,14 @@ pub struct FaultPlan {
     pub reg_stall_rate: f64,
     /// Extra delivery delay of a registration-stalled WR.
     pub reg_stall_ns: u64,
+    /// Probability a WR's completion is *never* delivered (lost WC).
+    /// Plans with lost WCs require an engine with completion deadlines —
+    /// nothing else can ever retire the swallowed request.
+    pub lost_rate: f64,
+    /// Per-QP wedge windows (every WC in the window is dropped).
+    pub wedges: Vec<QpWedge>,
+    /// Coordination-plane connection blackouts (gossip exchanges dropped).
+    pub conn_drops: Vec<ConnDrop>,
 }
 
 impl FaultPlan {
@@ -292,6 +322,56 @@ impl FaultPlan {
             .unwrap_or(0)
     }
 
+    /// Lost completions: a posted WR whose WC is swallowed with
+    /// probability `rate` — never errored, never delayed, just gone.
+    /// The engine's WR deadlines are the only recovery path, so
+    /// [`FaultPlan::needs_deadlines`] turns true.
+    pub fn with_lost_wcs(mut self, rate: f64) -> Self {
+        assert!((0.0..=1.0).contains(&rate));
+        self.lost_rate = rate;
+        self
+    }
+
+    /// A wedge window: `qp` drops (rather than delays) every WC it
+    /// would deliver in `[from_ns, until_ns)` — see [`QpWedge`].
+    pub fn wedge(mut self, qp: QpId, from_ns: u64, until_ns: u64) -> Self {
+        assert!(from_ns < until_ns, "empty wedge window");
+        self.wedges.push(QpWedge {
+            qp,
+            from_ns,
+            until_ns,
+        });
+        self
+    }
+
+    /// Is (`qp`, `at_ns`) inside a wedge window?
+    pub fn wedged(&self, qp: QpId, at_ns: u64) -> bool {
+        self.wedges
+            .iter()
+            .any(|w| w.qp == qp && (w.from_ns..w.until_ns).contains(&at_ns))
+    }
+
+    /// A coordination-plane blackout window: gossip exchanges scheduled
+    /// inside it are dropped — see [`ConnDrop`].
+    pub fn conn_drop(mut self, from_ns: u64, until_ns: u64) -> Self {
+        assert!(from_ns < until_ns, "empty connection-drop window");
+        self.conn_drops.push(ConnDrop { from_ns, until_ns });
+        self
+    }
+
+    /// Is the coordination plane blacked out at virtual time `at_ns`?
+    pub fn conn_dropped(&self, at_ns: u64) -> bool {
+        self.conn_drops
+            .iter()
+            .any(|d| (d.from_ns..d.until_ns).contains(&at_ns))
+    }
+
+    /// Does this plan swallow completions? If so, the engine under test
+    /// must run with completion deadlines or the run can never quiesce.
+    pub fn needs_deadlines(&self) -> bool {
+        self.lost_rate > 0.0 || !self.wedges.is_empty()
+    }
+
     /// Does this plan inject anything at all?
     pub fn is_quiet(&self) -> bool {
         self.error_rate == 0.0
@@ -303,6 +383,9 @@ impl FaultPlan {
             && self.storms.is_empty()
             && self.churns.is_empty()
             && self.reg_stall_rate == 0.0
+            && self.lost_rate == 0.0
+            && self.wedges.is_empty()
+            && self.conn_drops.is_empty()
     }
 
     /// The end of the stall window covering (`qp`, `at_ns`), if any.
@@ -404,6 +487,21 @@ impl FaultPlan {
             // lazy-registration stalls on first-touched spans (drawn
             // last so older seeds keep their exact earlier fault mix)
             plan = plan.with_reg_stalls(rng.gen_f64() * 0.6, 1 + rng.gen_below(50_000));
+        }
+        // recovery faults — appended after every older draw so pinned
+        // seeds keep their exact pre-recovery fault mix
+        if rng.gen_bool(if heavy { 0.45 } else { 0.3 }) {
+            plan.lost_rate = 0.01 + rng.gen_f64() * 0.04;
+        }
+        if rng.gen_bool(if heavy { 0.4 } else { 0.25 }) {
+            let total_qps = (nodes * qps_per_node) as u64;
+            let qp = rng.gen_below(total_qps) as usize;
+            let from = rng.gen_below(300_000);
+            plan = plan.wedge(qp, from, from + 1 + rng.gen_below(200_000));
+        }
+        if rng.gen_bool(0.2) {
+            let from = rng.gen_below(300_000);
+            plan = plan.conn_drop(from, from + 1 + rng.gen_below(150_000));
         }
         plan
     }
@@ -643,6 +741,31 @@ mod tests {
             );
             assert_eq!(deaths.len(), 16, "the whole rack dies");
         }
+    }
+
+    #[test]
+    fn recovery_faults_compose_and_break_quiet() {
+        let p = FaultPlan::none()
+            .with_lost_wcs(0.05)
+            .wedge(1, 100, 200)
+            .conn_drop(50, 150);
+        assert_eq!(p.lost_rate, 0.05);
+        assert!(p.wedged(1, 100));
+        assert!(p.wedged(1, 199));
+        assert!(!p.wedged(1, 200), "window end is exclusive");
+        assert!(!p.wedged(0, 150), "other QPs unaffected");
+        assert!(p.conn_dropped(50));
+        assert!(!p.conn_dropped(150), "window end is exclusive");
+        assert!(p.needs_deadlines());
+        assert!(!p.is_quiet());
+        assert!(!FaultPlan::none().conn_drop(1, 2).needs_deadlines());
+        assert!(!FaultPlan::none().conn_drop(1, 2).is_quiet());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty wedge window")]
+    fn wedge_rejects_empty_window() {
+        let _ = FaultPlan::none().wedge(0, 50, 50);
     }
 
     #[test]

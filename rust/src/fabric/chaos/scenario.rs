@@ -80,6 +80,13 @@ pub enum ChaosProfile {
     /// streams — no other profile's pinned seeds move. The nightly
     /// sweep runs this as `CHAOS_PROFILE=multi`.
     Multi,
+    /// Completion-recovery heavy: the standard mix plus a *guaranteed*
+    /// lost-WC rate and a wedged QP, with WR deadlines armed — the
+    /// engine's timeout retirement, backoff requeue and QP error/reset
+    /// machine must absorb every stranded completion. Extra draws land
+    /// after every other profile's, so no older pinned seed moves. The
+    /// nightly sweep runs this as `CHAOS_PROFILE=recovery`.
+    Recovery,
 }
 
 /// One chaos scenario: everything the run needs, nameable by seed.
@@ -118,6 +125,12 @@ pub struct Scenario {
     /// [`Scenario::with_reference_scheduler`] switches a run onto the
     /// pre-refactor `BinaryHeap` for bit-identity replay tests.
     pub scheduler: SchedulerKind,
+    /// `Some((timeout_ns, max_retries))` arms the engine's completion
+    /// deadlines ([`EngineSpec::deadlines`]). Seed-derived scenarios set
+    /// this whenever their plan drew a recovery fault; the runner also
+    /// arms a default for any explicit plan that needs one, since lost
+    /// completions strand WRs forever without deadlines.
+    pub deadlines: Option<(u64, u32)>,
     pub plan: FaultPlan,
 }
 
@@ -159,6 +172,7 @@ impl Scenario {
                 mr_cache_bytes: None,
                 addr_span: ADDR_SPAN,
                 scheduler: SchedulerKind::default(),
+                deadlines: None,
                 plan: FaultPlan::none(),
             };
         }
@@ -201,6 +215,25 @@ impl Scenario {
         } else {
             None
         };
+        // Recovery profile: guarantee the new fault classes on top of
+        // the standard mix (drawn after everything above, so no other
+        // profile's pinned seeds move)
+        if profile == ChaosProfile::Recovery {
+            plan = plan.with_lost_wcs(0.05 + rng.gen_f64() * 0.1);
+            let qp = rng.gen_below((nodes * qps_per_node) as u64) as usize;
+            let from = rng.gen_below(200_000);
+            plan = plan.wedge(qp, from, from + 1 + rng.gen_below(150_000));
+        }
+        // deadline parameters, drawn last — and only for plans that drew
+        // a recovery fault: a lost WC or a wedged QP strands its WR
+        // forever unless a completion deadline retires it. The timeout
+        // sits far above the fabric's delivery latency so deadlines fire
+        // for stranded completions, not slow ones.
+        let deadlines = if plan.needs_deadlines() {
+            Some((150_000 + rng.gen_below(150_000), 1 + rng.gen_below(2) as u32))
+        } else {
+            None
+        };
         Self {
             name: "randomized",
             seed,
@@ -217,6 +250,7 @@ impl Scenario {
             mr_cache_bytes,
             addr_span: ADDR_SPAN,
             scheduler: SchedulerKind::default(),
+            deadlines,
             plan,
         }
     }
@@ -257,6 +291,7 @@ impl Scenario {
             mr_cache_bytes,
             addr_span: nodes as u64 * STRIPE_BYTES,
             scheduler: SchedulerKind::default(),
+            deadlines: None,
             plan,
         }
     }
@@ -280,6 +315,7 @@ impl Scenario {
             mr_cache_bytes: Some(64 * 4096),
             addr_span: ADDR_SPAN,
             scheduler: SchedulerKind::default(),
+            deadlines: None,
             plan,
         }
     }
@@ -306,6 +342,7 @@ impl Scenario {
             mr_cache_bytes: Some(512 * 4096),
             addr_span: nodes as u64 * STRIPE_BYTES,
             scheduler: SchedulerKind::default(),
+            deadlines: None,
             plan,
         }
     }
@@ -332,6 +369,16 @@ impl Scenario {
     /// scenario.
     pub fn without_election(mut self) -> Self {
         self.election = false;
+        self
+    }
+
+    /// Arm the engine's completion deadlines: every posted WR must
+    /// resolve within `timeout_ns` of virtual time or a synthesized
+    /// timeout-WC retires it (reads get `max_retries` backed-off
+    /// requeues first). Named recovery scenarios set this explicitly;
+    /// seed-derived ones draw it with their plan.
+    pub fn with_deadlines(mut self, timeout_ns: u64, max_retries: u32) -> Self {
+        self.deadlines = Some((timeout_ns, max_retries));
         self
     }
 
@@ -367,6 +414,21 @@ pub struct ScenarioReport {
     pub window_changes: u64,
     pub partitioned_wcs: u64,
     pub node_transitions: u64,
+    /// WCs the plan swallowed outright (recoverable only by deadline).
+    pub lost_wcs: u64,
+    /// WCs dropped by a wedged-QP window.
+    pub wedged_wcs: u64,
+    /// Recovery-timer service events the fabric executed.
+    pub timer_ticks: u64,
+    /// WRs the engine retired by deadline expiry.
+    pub recovery_timeouts: u64,
+    /// WRs flushed as timeout-WCs by a QP entering `Error`.
+    pub recovery_flushes: u64,
+    /// QP `Error → Resetting → Ok` recoveries completed.
+    pub recovery_resets: u64,
+    /// Always 0 in a passing report: admission-window byte-ledger leaks
+    /// counted by the regulator (release larger than the charge).
+    pub window_leaks: u64,
     /// Always 0 in a passing report (invariant 5).
     pub stale_reads: u64,
     pub split_requests: u64,
@@ -400,6 +462,7 @@ pub fn replay_command(sc: &Scenario) -> String {
             ChaosProfile::Qos => "CHAOS_PROFILE=qos ",
             ChaosProfile::Scale => "CHAOS_PROFILE=scale ",
             ChaosProfile::Multi => "CHAOS_PROFILE=multi ",
+            ChaosProfile::Recovery => "CHAOS_PROFILE=recovery ",
         };
         format!(
             "{profile}CHAOS_SEED={:#x} cargo test --release --test chaos_scenarios \
@@ -475,6 +538,14 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
     }
     if let Some(cap) = sc.mr_cache_bytes {
         spec = spec.mr_cache(cap);
+    }
+    // a plan that swallows completions needs deadlines to quiesce; arm
+    // a conservative default for explicit plans that forgot to set them
+    let deadlines = sc
+        .deadlines
+        .or_else(|| sc.plan.needs_deadlines().then_some((200_000, 2)));
+    if let Some((timeout_ns, max_retries)) = deadlines {
+        spec = spec.deadlines(timeout_ns, max_retries);
     }
     let mut fab = ChaosFabric::build_with_scheduler(sc.seed, &spec, sc.plan.clone(), sc.scheduler);
     let n_tenants = sc.tenant_weights.len();
@@ -578,6 +649,23 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
             fab.engine().regulator().in_flight()
         )));
     }
+    // the regulator counts (instead of panicking on) over-releases of
+    // the byte ledger; any count is a double-release bug
+    if fab.engine().stats.window_leaks != 0 {
+        return Err(fail(format!(
+            "admission window over-released {} time(s)",
+            fab.engine().stats.window_leaks
+        )));
+    }
+    // every QP the error machine tripped must have walked back to `Ok`
+    // through probation by quiescence (probes are timer events, so a
+    // parked QP would also show up as a non-empty schedule)
+    if fab.engine().qps_not_ok() != 0 {
+        return Err(fail(format!(
+            "{} QP(s) still in Error/Resetting at quiescence",
+            fab.engine().qps_not_ok()
+        )));
+    }
     // per-tenant ledgers: every sub-window fully released, every posted
     // byte matched by a completion on the tenant that posted it
     let tenant_stats = fab.engine().tenant_stats();
@@ -656,6 +744,13 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport> {
         window_changes: fab.stats.window_changes,
         partitioned_wcs: fab.stats.partitioned_wcs,
         node_transitions: fab.stats.node_transitions,
+        lost_wcs: fab.stats.lost_wcs,
+        wedged_wcs: fab.stats.wedged_wcs,
+        timer_ticks: fab.stats.timer_ticks,
+        recovery_timeouts: fab.engine().recovery_stats().timeouts,
+        recovery_flushes: fab.engine().recovery_stats().flushes,
+        recovery_resets: fab.engine().recovery_stats().resets,
+        window_leaks: fab.engine().stats.window_leaks,
         stale_reads: fab.stats.stale_reads,
         split_requests: fab.engine().stats.split_requests,
         split_legs: fab.engine().stats.split_legs,
@@ -804,6 +899,53 @@ mod tests {
             "{}",
             replay_command(&sc)
         );
+    }
+
+    #[test]
+    fn recovery_profile_seeds_pass_with_deadlines() {
+        for seed in 0..3u64 {
+            let sc = Scenario::randomized_with_profile(seed, ChaosProfile::Recovery);
+            assert!(
+                sc.deadlines.is_some(),
+                "recovery profile always arms deadlines"
+            );
+            assert!(sc.plan.lost_rate > 0.0, "lost WCs guaranteed");
+            assert!(!sc.plan.wedges.is_empty(), "a wedged QP guaranteed");
+            let r = match run_scenario(&sc) {
+                Ok(r) => r,
+                Err(e) => panic!("{e}"),
+            };
+            assert!(
+                r.lost_wcs + r.wedged_wcs > 0,
+                "the recovery faults actually fired"
+            );
+            assert!(r.recovery_timeouts > 0, "deadlines retired stranded WRs");
+            assert!(r.timer_ticks > 0, "the fabric serviced recovery timers");
+            assert_eq!(r.window_leaks, 0);
+            assert_eq!(r.stale_reads, 0);
+        }
+        let sc = Scenario::randomized_with_profile(0xFEED, ChaosProfile::Recovery);
+        assert!(
+            replay_command(&sc).starts_with("CHAOS_PROFILE=recovery "),
+            "{}",
+            replay_command(&sc)
+        );
+    }
+
+    #[test]
+    fn explicit_lossy_plan_gets_default_deadlines() {
+        // a named scenario whose plan swallows WCs but forgot
+        // .with_deadlines(..): the runner arms the conservative default
+        // rather than livelocking on stranded WRs
+        let sc = Scenario::named("lossy_default", 0x105E, FaultPlan::none().with_lost_wcs(0.1));
+        assert!(sc.deadlines.is_none());
+        let r = match run_scenario(&sc) {
+            Ok(r) => r,
+            Err(e) => panic!("{e}"),
+        };
+        assert!(r.lost_wcs > 0, "losses fired");
+        assert!(r.recovery_timeouts >= r.lost_wcs);
+        assert_eq!(r.window_leaks, 0);
     }
 
     #[test]

@@ -12,20 +12,30 @@
 //! Wire format (everything little-endian):
 //!
 //! ```text
-//! [u32 frame_len] [u8 kind] [body; frame_len - 1 bytes]
+//! [u32 frame_len] [u8 kind] [body; frame_len - 5 bytes] [u32 crc]
 //! ```
 //!
-//! `frame_len` counts the kind byte plus the body. Kinds: `1` Hello
-//! (peer handshake, `u32` engine id), `2` WorkRequest, `3` Wc, `4`
-//! gossip delta ([`GossipDelta::encode_into`] body), `5` fingerprint
-//! (`u64`). Unknown kinds, truncated bodies, trailing bytes and frames
-//! over [`MAX_FRAME_BYTES`] are rejected as `InvalidData` — a corrupt
-//! peer can fail the session but never corrupt engine state.
+//! `frame_len` counts the kind byte, the body, and the 4-byte CRC
+//! trailer, so the smallest legal frame is 5 bytes. The CRC is CRC32
+//! (IEEE) over kind + body; a mismatch rejects the frame before any
+//! decoding. Kinds: `1` Hello (peer handshake, `u32` engine id), `2`
+//! WorkRequest, `3` Wc, `4` gossip delta ([`GossipDelta::encode_into`]
+//! body), `5` fingerprint (`u64`), `6` heartbeat (`u64` echo nonce).
+//! Unknown kinds, CRC mismatches, truncated bodies, trailing bytes and
+//! frames over [`MAX_FRAME_BYTES`] are rejected as `InvalidData` — a
+//! corrupt peer can fail the session but never corrupt engine state.
+//! The receive path also never trusts the length prefix for
+//! allocation: the frame buffer grows in bounded chunks only as bytes
+//! actually arrive, so a hostile prefix cannot balloon memory.
 //!
 //! The sync loop ([`gossip_sync`]) is deliberately lockstep — send
 //! delta, receive delta, exchange fingerprints — so it needs no timers
 //! or polling; the frames involved are far below any OS socket buffer,
 //! which makes the symmetric send-then-receive order deadlock-free.
+//! [`ReconnectPeer`] wraps the TCP flavor with the recovery layer's
+//! capped jittered [`Backoff`]: a dead connection is torn down and
+//! re-dialed (re-running the Hello handshake), and the caller restarts
+//! its protocol round on the fresh transport.
 //!
 //! [`gossip fingerprints`]: crate::coordinator::engine::IoEngine::gossip_fingerprint
 
@@ -33,6 +43,7 @@ use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::engine::IoEngine;
 use crate::coordinator::gossip::GossipDelta;
@@ -41,11 +52,47 @@ use crate::fabric::{IdList, OpKind, Wc, WcStatus, WorkRequest};
 /// Frames larger than this are rejected before allocating.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
+/// The receive buffer grows at most this much per read while a frame
+/// streams in — a hostile length prefix never drives allocation ahead
+/// of the bytes that actually arrive.
+const RECV_CHUNK_BYTES: usize = 64 << 10;
+
 const KIND_HELLO: u8 = 1;
 const KIND_WR: u8 = 2;
 const KIND_WC: u8 = 3;
 const KIND_GOSSIP: u8 = 4;
 const KIND_FINGERPRINT: u8 = 5;
+const KIND_HEARTBEAT: u8 = 6;
+
+/// CRC32 (IEEE 802.3) lookup table, built at compile time.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC32 (IEEE) over `bytes` — the per-frame integrity trailer.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
 
 /// One framed message between peer engines.
 #[derive(Debug, Clone)]
@@ -60,6 +107,8 @@ pub enum SocketMsg {
     Gossip(GossipDelta),
     /// The sender's current gossip fingerprint (convergence check).
     Fingerprint(u64),
+    /// Liveness probe: the receiver echoes the nonce back unchanged.
+    Heartbeat(u64),
 }
 
 fn op_code(op: OpKind) -> u8 {
@@ -137,6 +186,11 @@ impl Cursor<'_> {
 
     fn ids(&mut self) -> io::Result<IdList> {
         let n = self.u32()? as usize;
+        // a hostile count is rejected up front, before the push loop
+        // starts reserving anything on its behalf
+        if n > (self.bytes.len() - self.pos) / 8 {
+            return Err(bad("socket frame: id count exceeds body"));
+        }
         let mut ids = IdList::new();
         for _ in 0..n {
             ids.push(self.u64()?);
@@ -161,6 +215,7 @@ impl SocketMsg {
             SocketMsg::Wc(_) => KIND_WC,
             SocketMsg::Gossip(_) => KIND_GOSSIP,
             SocketMsg::Fingerprint(_) => KIND_FINGERPRINT,
+            SocketMsg::Heartbeat(_) => KIND_HEARTBEAT,
         }
     }
 
@@ -192,6 +247,9 @@ impl SocketMsg {
             SocketMsg::Gossip(d) => d.encode_into(buf),
             SocketMsg::Fingerprint(fp) => {
                 buf.extend_from_slice(&fp.to_le_bytes());
+            }
+            SocketMsg::Heartbeat(nonce) => {
+                buf.extend_from_slice(&nonce.to_le_bytes());
             }
         }
     }
@@ -250,6 +308,7 @@ impl SocketMsg {
                 SocketMsg::Gossip(d)
             }
             KIND_FINGERPRINT => SocketMsg::Fingerprint(cur.u64()?),
+            KIND_HEARTBEAT => SocketMsg::Heartbeat(cur.u64()?),
             _ => return Err(bad("socket frame: unknown kind")),
         };
         cur.done()?;
@@ -274,30 +333,46 @@ impl<S: Read + Write> SocketPeer<S> {
         }
     }
 
-    /// Write one framed message and flush it.
+    /// Write one framed message (with its CRC trailer) and flush it.
     pub fn send(&mut self, msg: &SocketMsg) -> io::Result<()> {
         self.buf.clear();
         self.buf.extend_from_slice(&[0; 4]); // frame length backpatch
         self.buf.push(msg.kind());
         msg.encode_body(&mut self.buf);
+        let crc = crc32(&self.buf[4..]);
+        self.buf.extend_from_slice(&crc.to_le_bytes());
         let frame_len = (self.buf.len() - 4) as u32;
         self.buf[..4].copy_from_slice(&frame_len.to_le_bytes());
         self.stream.write_all(&self.buf)?;
         self.stream.flush()
     }
 
-    /// Read one framed message (blocking until a full frame arrives).
+    /// Read one framed message (blocking until a full frame arrives),
+    /// verifying the CRC trailer before any decoding.
     pub fn recv(&mut self) -> io::Result<SocketMsg> {
         let mut len = [0u8; 4];
         self.stream.read_exact(&mut len)?;
         let frame_len = u32::from_le_bytes(len) as usize;
-        if frame_len == 0 || frame_len > MAX_FRAME_BYTES {
+        // kind byte + 4-byte CRC trailer is the smallest legal frame
+        if frame_len < 5 || frame_len > MAX_FRAME_BYTES {
             return Err(bad("socket frame: bad length"));
         }
+        // grow the buffer only as bytes actually arrive: a hostile
+        // length prefix with nothing behind it stalls at the stream
+        // instead of ballooning allocation to the declared size
         self.buf.clear();
-        self.buf.resize(frame_len, 0);
-        self.stream.read_exact(&mut self.buf)?;
-        SocketMsg::decode_body(self.buf[0], &self.buf[1..])
+        while self.buf.len() < frame_len {
+            let start = self.buf.len();
+            let chunk = (frame_len - start).min(RECV_CHUNK_BYTES);
+            self.buf.resize(start + chunk, 0);
+            self.stream.read_exact(&mut self.buf[start..])?;
+        }
+        let (payload, trailer) = self.buf.split_at(frame_len - 4);
+        let got = u32::from_le_bytes(trailer.try_into().unwrap());
+        if got != crc32(payload) {
+            return Err(bad("socket frame: CRC mismatch"));
+        }
+        SocketMsg::decode_body(payload[0], &payload[1..])
     }
 
     /// Symmetric handshake: announce our engine id, return the peer's.
@@ -312,28 +387,50 @@ impl<S: Read + Write> SocketPeer<S> {
     }
 }
 
+/// Anything that exchanges framed [`SocketMsg`]s: a raw [`SocketPeer`]
+/// over any byte stream, or the self-repairing [`ReconnectPeer`].
+/// Protocol loops like [`gossip_sync`] run over the trait so the same
+/// lockstep code serves both transports.
+pub trait FramedPeer {
+    fn send_msg(&mut self, msg: &SocketMsg) -> io::Result<()>;
+    fn recv_msg(&mut self) -> io::Result<SocketMsg>;
+}
+
+impl<S: Read + Write> FramedPeer for SocketPeer<S> {
+    fn send_msg(&mut self, msg: &SocketMsg) -> io::Result<()> {
+        self.send(msg)
+    }
+
+    fn recv_msg(&mut self) -> io::Result<SocketMsg> {
+        self.recv()
+    }
+}
+
 /// Drive one engine's side of the lockstep anti-entropy exchange until
 /// the two peers' fingerprints agree: each round exports this engine's
 /// delta, absorbs the peer's, then swaps fingerprints. Convergence
 /// requires at least two rounds (the first round's exports predate the
 /// first absorbs). Returns the converged fingerprint, or `TimedOut`
-/// after `max_rounds` rounds without agreement.
-pub fn gossip_sync<S: Read + Write>(
-    peer: &mut SocketPeer<S>,
+/// after `max_rounds` rounds without agreement. Absorbing is
+/// idempotent and deltas carry full state, so a caller riding a
+/// [`ReconnectPeer`] can simply restart the sync from round zero after
+/// a transport failure.
+pub fn gossip_sync<P: FramedPeer>(
+    peer: &mut P,
     engine: &mut IoEngine,
     max_rounds: usize,
 ) -> io::Result<u64> {
     let mut delta = GossipDelta::default();
     for round in 0..max_rounds {
         engine.export_gossip_into(&mut delta);
-        peer.send(&SocketMsg::Gossip(delta.clone()))?;
-        match peer.recv()? {
+        peer.send_msg(&SocketMsg::Gossip(delta.clone()))?;
+        match peer.recv_msg()? {
             SocketMsg::Gossip(d) => engine.absorb_gossip(&d),
             _ => return Err(bad("gossip sync: expected a delta")),
         }
         let fp = engine.gossip_fingerprint();
-        peer.send(&SocketMsg::Fingerprint(fp))?;
-        let remote = match peer.recv()? {
+        peer.send_msg(&SocketMsg::Fingerprint(fp))?;
+        let remote = match peer.recv_msg()? {
             SocketMsg::Fingerprint(fp) => fp,
             _ => return Err(bad("gossip sync: expected a fingerprint")),
         };
@@ -377,18 +474,218 @@ pub fn connect_uds(path: &str) -> io::Result<SocketPeer<UnixStream>> {
     Ok(SocketPeer::new(retry_connect(|| UnixStream::connect(path))?))
 }
 
-/// Retry a connect for ~5 s; peers launched "listener &; connector"
-/// style shouldn't need sub-second start-up choreography.
-fn retry_connect<T>(mut connect: impl FnMut() -> io::Result<T>) -> io::Result<T> {
-    let mut last = None;
-    for _ in 0..500 {
-        match connect() {
-            Ok(s) => return Ok(s),
-            Err(e) => last = Some(e),
+/// Capped, jittered exponential backoff shared by the initial connect
+/// retry and established-connection repair ([`ReconnectPeer`]): the
+/// delay doubles from `base_ms` up to `cap_ms`, and each wait is
+/// jittered into `[d/2, d]` (deterministically from the instance seed)
+/// so restarted peers don't stampede the listener in lockstep.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    next_ms: u64,
+    base_ms: u64,
+    cap_ms: u64,
+    state: u64,
+    /// Delays handed out since the last [`Backoff::reset`].
+    pub attempts: u32,
+}
+
+impl Backoff {
+    pub fn new(base_ms: u64, cap_ms: u64, seed: u64) -> Self {
+        assert!(
+            base_ms > 0 && cap_ms >= base_ms,
+            "backoff needs 0 < base <= cap"
+        );
+        Self {
+            next_ms: base_ms,
+            base_ms,
+            cap_ms,
+            state: seed,
+            attempts: 0,
         }
-        std::thread::sleep(std::time::Duration::from_millis(10));
     }
-    Err(last.unwrap_or_else(|| io::Error::new(io::ErrorKind::TimedOut, "connect retry")))
+
+    /// The connect-retry default: 5 ms doubling up to 320 ms.
+    pub fn for_connect() -> Self {
+        Self::new(5, 320, 0x5EED_C0DE)
+    }
+
+    /// The next delay: the current exponential step, jittered into
+    /// `[d/2, d]`.
+    pub fn next_delay(&mut self) -> Duration {
+        let d = self.next_ms;
+        self.next_ms = self.next_ms.saturating_mul(2).min(self.cap_ms);
+        self.attempts += 1;
+        // one splitmix64 step feeds the jitter draw
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        Duration::from_millis(d - z % (d / 2 + 1))
+    }
+
+    /// Back to the base step (call after a successful connect).
+    pub fn reset(&mut self) {
+        self.next_ms = self.base_ms;
+        self.attempts = 0;
+    }
+}
+
+/// Run `op` until it succeeds or `budget` elapses, sleeping one
+/// backoff delay between attempts (clamped to the remaining budget).
+/// Returns the last error on exhaustion.
+pub fn retry_with_backoff<T>(
+    backoff: &mut Backoff,
+    budget: Duration,
+    mut op: impl FnMut() -> io::Result<T>,
+) -> io::Result<T> {
+    let deadline = Instant::now() + budget;
+    loop {
+        let last = match op() {
+            Ok(t) => return Ok(t),
+            Err(e) => e,
+        };
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(last);
+        }
+        std::thread::sleep(backoff.next_delay().min(deadline - now));
+    }
+}
+
+/// Retry a connect for ~5 s with the shared capped jittered backoff;
+/// peers launched "listener &; connector" style shouldn't need
+/// sub-second start-up choreography.
+fn retry_connect<T>(connect: impl FnMut() -> io::Result<T>) -> io::Result<T> {
+    retry_with_backoff(&mut Backoff::for_connect(), Duration::from_secs(5), connect)
+}
+
+/// A TCP peer that survives its transport: any framed operation that
+/// hits an I/O error (including a CRC-desynced stream) tears the
+/// connection down; the next operation re-dials `addr` under the
+/// shared [`Backoff`] and re-runs the Hello handshake on the fresh
+/// stream. Errors still propagate to the caller — repair happens at
+/// *connection* granularity, and the caller restarts its protocol
+/// round (lockstep exchanges like [`gossip_sync`] cannot resume
+/// mid-round against a restarted peer). `reconnects` counts completed
+/// repairs; the smoke driver folds it into the recovery layer's
+/// [`RecoveryStats::reconnects`].
+///
+/// [`RecoveryStats::reconnects`]: crate::metrics::RecoveryStats
+pub struct ReconnectPeer {
+    addr: String,
+    engine_id: u32,
+    peer: Option<SocketPeer<TcpStream>>,
+    backoff: Backoff,
+    /// Budget for one repair (dial + handshake retries).
+    redial_budget: Duration,
+    ever_connected: bool,
+    /// Established connections beyond the first.
+    pub reconnects: u64,
+    /// The peer's engine id from the most recent Hello handshake.
+    pub peer_id: u32,
+}
+
+impl ReconnectPeer {
+    /// Dial `addr` (retrying while the listener starts) and run the
+    /// Hello handshake as engine `engine_id`.
+    pub fn connect(addr: &str, engine_id: u32) -> io::Result<Self> {
+        let mut peer = Self {
+            addr: addr.to_string(),
+            engine_id,
+            peer: None,
+            backoff: Backoff::for_connect(),
+            redial_budget: Duration::from_secs(5),
+            ever_connected: false,
+            reconnects: 0,
+            peer_id: 0,
+        };
+        peer.ensure()?;
+        Ok(peer)
+    }
+
+    /// The live connection, dialing + handshaking a fresh one if the
+    /// last died.
+    fn ensure(&mut self) -> io::Result<&mut SocketPeer<TcpStream>> {
+        if self.peer.is_none() {
+            let addr = self.addr.clone();
+            let engine_id = self.engine_id;
+            let (peer, peer_id) =
+                retry_with_backoff(&mut self.backoff, self.redial_budget, || {
+                    let stream = TcpStream::connect(&addr)?;
+                    stream.set_nodelay(true)?;
+                    let mut peer = SocketPeer::new(stream);
+                    let peer_id = peer.hello(engine_id)?;
+                    Ok((peer, peer_id))
+                })?;
+            self.backoff.reset();
+            if self.ever_connected {
+                self.reconnects += 1;
+            }
+            self.ever_connected = true;
+            self.peer_id = peer_id;
+            self.peer = Some(peer);
+        }
+        Ok(self.peer.as_mut().expect("just connected"))
+    }
+
+    /// Send one frame on the current connection (dialing one if
+    /// needed). On error the connection is torn down and the error
+    /// propagates — the next operation dials fresh.
+    pub fn send(&mut self, msg: &SocketMsg) -> io::Result<()> {
+        let r = self.ensure()?.send(msg);
+        if r.is_err() {
+            self.peer = None;
+        }
+        r
+    }
+
+    /// Receive one frame, with the same teardown-on-error contract as
+    /// [`ReconnectPeer::send`].
+    pub fn recv(&mut self) -> io::Result<SocketMsg> {
+        let r = self.ensure()?.recv();
+        if r.is_err() {
+            self.peer = None;
+        }
+        r
+    }
+
+    /// Liveness probe: send a heartbeat nonce and wait for its echo.
+    /// Unlike send/recv this *is* retried across repairs — the
+    /// heartbeat is a self-contained transaction, so one that died
+    /// with the old connection is simply re-sent on the fresh one.
+    pub fn ping(&mut self, nonce: u64) -> io::Result<u64> {
+        let mut last = None;
+        for _ in 0..3 {
+            match self.try_ping(nonce) {
+                Ok(echo) => return Ok(echo),
+                Err(e) => {
+                    self.peer = None;
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.expect("three attempts made"))
+    }
+
+    fn try_ping(&mut self, nonce: u64) -> io::Result<u64> {
+        let peer = self.ensure()?;
+        peer.send(&SocketMsg::Heartbeat(nonce))?;
+        match peer.recv()? {
+            SocketMsg::Heartbeat(echo) => Ok(echo),
+            _ => Err(bad("heartbeat: expected an echo")),
+        }
+    }
+}
+
+impl FramedPeer for ReconnectPeer {
+    fn send_msg(&mut self, msg: &SocketMsg) -> io::Result<()> {
+        self.send(msg)
+    }
+
+    fn recv_msg(&mut self) -> io::Result<SocketMsg> {
+        self.recv()
+    }
 }
 
 #[cfg(all(test, unix))]
@@ -440,6 +737,7 @@ mod tests {
         a.send(&SocketMsg::Wc(wc.clone())).unwrap();
         a.send(&SocketMsg::Gossip(gossip.clone())).unwrap();
         a.send(&SocketMsg::Fingerprint(0xDEAD_BEEF)).unwrap();
+        a.send(&SocketMsg::Heartbeat(99)).unwrap();
         match b.recv().unwrap() {
             SocketMsg::Hello { engine_id } => assert_eq!(engine_id, 0),
             m => panic!("expected Hello, got {m:?}"),
@@ -478,14 +776,37 @@ mod tests {
             SocketMsg::Fingerprint(fp) => assert_eq!(fp, 0xDEAD_BEEF),
             m => panic!("expected Fingerprint, got {m:?}"),
         }
+        match b.recv().unwrap() {
+            SocketMsg::Heartbeat(nonce) => assert_eq!(nonce, 99),
+            m => panic!("expected Heartbeat, got {m:?}"),
+        }
+    }
+
+    #[test]
+    fn crc32_matches_the_reference_vector() {
+        // the IEEE 802.3 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    /// A raw wire frame around `payload` (kind + body) with an
+    /// arbitrary — possibly wrong — CRC trailer.
+    fn raw_frame(payload: &[u8], crc: u32) -> Vec<u8> {
+        let mut frame = ((payload.len() + 4) as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(payload);
+        frame.extend_from_slice(&crc.to_le_bytes());
+        frame
     }
 
     #[test]
     fn corrupt_frames_are_rejected_not_trusted() {
-        // unknown kind
+        // unknown kind (CRC itself is valid)
         let (mut a, mut b) = pair();
-        let frame = [2u8, 0, 0, 0, 99, 0];
-        a.stream.write_all(&frame).unwrap();
+        a.stream.write_all(&raw_frame(&[99], crc32(&[99]))).unwrap();
+        assert!(b.recv().is_err());
+        // length prefix below the kind + CRC minimum
+        let (mut a, mut b) = pair();
+        a.stream.write_all(&[4u8, 0, 0, 0, KIND_HELLO, 1, 2, 3]).unwrap();
         assert!(b.recv().is_err());
         // oversized length prefix
         let (mut a, mut b) = pair();
@@ -493,15 +814,41 @@ mod tests {
         a.stream.write_all(&huge).unwrap();
         a.stream.write_all(&[KIND_HELLO]).unwrap();
         assert!(b.recv().is_err());
-        // truncated body
+        // valid body, wrong CRC
         let (mut a, mut b) = pair();
-        let frame = [3u8, 0, 0, 0, KIND_HELLO, 1, 2]; // Hello needs 4 bytes
-        a.stream.write_all(&frame).unwrap();
+        let payload = [KIND_HELLO, 1, 2, 3, 4];
+        a.stream
+            .write_all(&raw_frame(&payload, crc32(&payload) ^ 0xDEAD))
+            .unwrap();
         assert!(b.recv().is_err());
-        // trailing garbage after a valid body
+        // truncated body (CRC valid, so the decoder catches it)
         let (mut a, mut b) = pair();
-        let frame = [6u8, 0, 0, 0, KIND_HELLO, 1, 2, 3, 4, 9];
-        a.stream.write_all(&frame).unwrap();
+        let payload = [KIND_HELLO, 1, 2]; // Hello needs 4 body bytes
+        a.stream
+            .write_all(&raw_frame(&payload, crc32(&payload)))
+            .unwrap();
+        assert!(b.recv().is_err());
+        // trailing garbage after a valid body (CRC valid)
+        let (mut a, mut b) = pair();
+        let payload = [KIND_HELLO, 1, 2, 3, 4, 9];
+        a.stream
+            .write_all(&raw_frame(&payload, crc32(&payload)))
+            .unwrap();
+        assert!(b.recv().is_err());
+        // hostile id count inside a Wc body: claims 2^32 - 1 ids with
+        // four bytes behind it
+        let (mut a, mut b) = pair();
+        let mut payload = vec![KIND_WC];
+        payload.extend_from_slice(&7u64.to_le_bytes()); // wr_id
+        payload.extend_from_slice(&0u64.to_le_bytes()); // qp
+        payload.push(0); // op
+        payload.extend_from_slice(&4096u64.to_le_bytes()); // len
+        payload.push(0); // status
+        payload.extend_from_slice(&0u64.to_le_bytes()); // tenant
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // id count
+        payload.extend_from_slice(&[1, 2, 3, 4]);
+        let crc = crc32(&payload);
+        a.stream.write_all(&raw_frame(&payload, crc)).unwrap();
         assert!(b.recv().is_err());
     }
 
@@ -546,6 +893,249 @@ mod tests {
         let sa = ea.gossip_stats().unwrap();
         assert!(sa.rounds_sent >= 2 && sa.rounds_absorbed >= 2);
         assert!(sa.epoch_raises > 0, "A learned B's epochs: {sa:?}");
+    }
+
+    #[test]
+    fn backoff_doubles_to_the_cap_with_bounded_jitter() {
+        let mut b = Backoff::new(10, 80, 7);
+        let mut raw = 10u64;
+        for _ in 0..6 {
+            let d = b.next_delay().as_millis() as u64;
+            assert!(
+                d >= raw / 2 && d <= raw,
+                "jitter left [d/2, d]: {d} vs step {raw}"
+            );
+            raw = (raw * 2).min(80);
+        }
+        assert_eq!(b.attempts, 6);
+        b.reset();
+        assert_eq!(b.attempts, 0);
+        let d = b.next_delay().as_millis() as u64;
+        assert!(d >= 5 && d <= 10, "reset returns to the base step: {d}");
+    }
+
+    #[test]
+    fn retry_with_backoff_retries_then_surfaces_the_last_error() {
+        let mut b = Backoff::new(1, 2, 1);
+        let mut calls = 0;
+        let r: io::Result<u32> = retry_with_backoff(&mut b, Duration::from_secs(5), || {
+            calls += 1;
+            if calls < 3 {
+                Err(io::Error::new(io::ErrorKind::ConnectionRefused, "not yet"))
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(r.unwrap(), 42);
+        assert_eq!(calls, 3);
+        assert!(b.attempts >= 2, "waits actually happened");
+        // a spent budget gets one attempt and the error back
+        let mut b = Backoff::new(1, 2, 1);
+        let r: io::Result<u32> = retry_with_backoff(&mut b, Duration::from_millis(0), || {
+            Err(io::Error::new(io::ErrorKind::ConnectionRefused, "down"))
+        });
+        assert_eq!(r.unwrap_err().kind(), io::ErrorKind::ConnectionRefused);
+    }
+
+    /// An in-memory byte stream: writes append, reads consume from the
+    /// front — enough Read + Write to frame and unframe without a
+    /// socket.
+    #[derive(Default)]
+    struct Mem {
+        buf: Vec<u8>,
+        pos: usize,
+    }
+
+    impl Read for Mem {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            let n = out.len().min(self.buf.len() - self.pos);
+            out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    impl Write for Mem {
+        fn write(&mut self, bytes: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(bytes);
+            Ok(bytes.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// kind + encoded body: a canonical byte form for message equality.
+    fn frame_bytes(msg: &SocketMsg) -> Vec<u8> {
+        let mut bytes = vec![msg.kind()];
+        msg.encode_body(&mut bytes);
+        bytes
+    }
+
+    fn gen_msg(rng: &mut crate::util::rng::Pcg32, size: usize) -> SocketMsg {
+        let ids: IdList = (0..rng.gen_below(1 + size as u64 / 8))
+            .map(|_| rng.gen_below(1 << 40))
+            .collect::<Vec<_>>()
+            .into();
+        match rng.gen_below(6) {
+            0 => SocketMsg::Hello {
+                engine_id: rng.gen_below(1 << 32) as u32,
+            },
+            1 => SocketMsg::Wr(WorkRequest {
+                wr_id: rng.gen_below(1 << 48),
+                op: op_from_code(rng.gen_below(3) as u8).unwrap(),
+                node: rng.gen_below(64) as usize,
+                remote_addr: rng.gen_below(1 << 40),
+                len: rng.gen_below(1 << 20),
+                num_sge: rng.gen_below(16) as usize,
+                app_ios: ids,
+                signaled: rng.gen_bool(0.5),
+                tenant: rng.gen_below(4) as usize,
+            }),
+            2 => SocketMsg::Wc(Wc {
+                wr_id: rng.gen_below(1 << 48),
+                qp: rng.gen_below(64) as usize,
+                op: op_from_code(rng.gen_below(3) as u8).unwrap(),
+                len: rng.gen_below(1 << 20),
+                app_ios: ids,
+                status: status_from_code(rng.gen_below(2) as u8).unwrap(),
+                tenant: rng.gen_below(4) as usize,
+            }),
+            3 => {
+                let mut d = GossipDelta {
+                    from: rng.gen_below(4) as u32,
+                    round: rng.gen_below(1 << 20),
+                    epoch_counter: rng.gen_below(1 << 20),
+                    ..GossipDelta::default()
+                };
+                for _ in 0..rng.gen_below(1 + size as u64 / 8) {
+                    d.required
+                        .push((rng.gen_below(1 << 30), rng.gen_below(1 << 30), rng.gen_below(100)));
+                    d.applied.push((
+                        rng.gen_below(4) as u32,
+                        rng.gen_below(1 << 30),
+                        rng.gen_below(1 << 30),
+                        rng.gen_below(100),
+                    ));
+                    d.states.push((
+                        rng.gen_below(4) as u32,
+                        rng.gen_below(100),
+                        rng.gen_below(3) as u8,
+                    ));
+                    d.missed.push((
+                        rng.gen_below(4) as u32,
+                        rng.gen_below(1 << 30),
+                        rng.gen_below(1 << 20),
+                    ));
+                    d.surrendered.push((
+                        rng.gen_below(4) as u32,
+                        rng.gen_below(1 << 30),
+                        rng.gen_below(1 << 20),
+                    ));
+                }
+                SocketMsg::Gossip(d)
+            }
+            4 => SocketMsg::Fingerprint(rng.gen_below(u64::MAX)),
+            _ => SocketMsg::Heartbeat(rng.gen_below(u64::MAX)),
+        }
+    }
+
+    /// The codec property the recovery layer leans on: every message
+    /// kind roundtrips bit-exact, and flipping any single bit anywhere
+    /// in the frame — length prefix, kind, body, or CRC trailer — is
+    /// rejected rather than decoded into something else.
+    #[test]
+    fn codec_property_roundtrips_and_rejects_single_byte_corruption() {
+        use crate::util::prop::{self, cfg};
+        prop::forall(cfg(0xC0DEC), |rng, size| {
+            let msg = gen_msg(rng, size);
+            // clean roundtrip
+            let mut p = SocketPeer::new(Mem::default());
+            p.send(&msg).map_err(|e| format!("send failed: {e}"))?;
+            let got = p
+                .recv()
+                .map_err(|e| format!("clean frame rejected: {e}"))?;
+            if frame_bytes(&got) != frame_bytes(&msg) {
+                return Err(format!("roundtrip changed the message: {msg:?} -> {got:?}"));
+            }
+            // a single flipped bit anywhere in the frame is rejected
+            let mut p = SocketPeer::new(Mem::default());
+            p.send(&msg).map_err(|e| format!("send failed: {e}"))?;
+            let at = rng.gen_below(p.stream.buf.len() as u64) as usize;
+            p.stream.buf[at] ^= 1 << rng.gen_below(8);
+            if p.recv().is_ok() {
+                return Err(format!("corruption at byte {at} was accepted"));
+            }
+            Ok(())
+        });
+    }
+
+    /// The survivability acceptance: the listener dies mid-session and
+    /// a fresh incarnation takes over on the same port; the client's
+    /// [`ReconnectPeer`] rides the restart — heartbeat first, then a
+    /// gossip sync that converges with the second incarnation.
+    #[test]
+    fn peer_restart_reconverges_gossip() {
+        let spec = |id: usize| {
+            EngineSpec::new(2)
+                .replicated(2)
+                .resync(4 * 4096)
+                .election()
+                .gossip(id, 2)
+        };
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let server = std::thread::spawn(move || {
+            // incarnation 1: handshake, echo one heartbeat, die
+            {
+                let (stream, _) = listener.accept().expect("accept #1");
+                let mut p = SocketPeer::new(stream);
+                p.hello(1).expect("hello #1");
+                match p.recv().expect("first heartbeat") {
+                    SocketMsg::Heartbeat(n) => {
+                        p.send(&SocketMsg::Heartbeat(n)).expect("echo")
+                    }
+                    m => panic!("expected Heartbeat, got {m:?}"),
+                }
+                // dropping the stream kills the established connection
+            }
+            // incarnation 2: a fresh engine accepts the client's
+            // reconnect and runs the sync to convergence
+            let (stream, _) = listener.accept().expect("accept #2");
+            let mut p = SocketPeer::new(stream);
+            p.hello(1).expect("hello #2");
+            let mut engine = IoEngine::build(&spec(1));
+            for i in 0..4u64 {
+                drive_write(&mut engine, 100 + i, (1 << 21) + i * 4096);
+            }
+            gossip_sync(&mut p, &mut engine, 16).expect("server side converges")
+        });
+        let mut client = ReconnectPeer::connect(&addr, 0).expect("connect");
+        assert_eq!(client.peer_id, 1);
+        assert_eq!(client.ping(7).expect("echo"), 7);
+        let mut engine = IoEngine::build(&spec(0));
+        for i in 0..4u64 {
+            drive_write(&mut engine, i, i * 4096);
+        }
+        // the first sync attempt dies with incarnation 1; the retry
+        // dials incarnation 2 and restarts the round from scratch
+        let mut fp = None;
+        for _ in 0..4 {
+            match gossip_sync(&mut client, &mut engine, 16) {
+                Ok(converged) => {
+                    fp = Some(converged);
+                    break;
+                }
+                Err(_) => continue,
+            }
+        }
+        let fp = fp.expect("client converged across the restart");
+        assert_eq!(fp, server.join().expect("server thread"));
+        assert!(
+            client.reconnects >= 1,
+            "the transport repair actually happened"
+        );
     }
 
     /// Submit one write and complete every leg successfully (the

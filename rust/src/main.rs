@@ -192,7 +192,8 @@ fn run_qos_demo(nodes: usize, pages: u64) -> Result<(), String> {
 /// over the real byte stream until both fingerprints agree — the
 /// ISSUE's two-OS-process convergence acceptance, runnable by hand.
 fn run_gossip_smoke(args: &Args, ios: u64) -> Result<(), String> {
-    use rdmabox::fabric::socket::{connect_tcp, listen_tcp};
+    use rdmabox::fabric::socket::{listen_tcp, ReconnectPeer};
+    use rdmabox::metrics::RecoveryStats;
 
     let (addr, listen) = match (args.get("listen"), args.get("connect")) {
         (Some(a), None) => (a, true),
@@ -202,8 +203,30 @@ fn run_gossip_smoke(args: &Args, ios: u64) -> Result<(), String> {
     // the listener is engine 0 of the cluster, the connector engine 1
     let engine_id = usize::from(!listen);
     if addr.contains(':') {
-        let peer = if listen { listen_tcp(addr) } else { connect_tcp(addr) };
-        gossip_smoke(peer.map_err(|e| format!("{addr}: {e}"))?, engine_id, ios)
+        if listen {
+            let mut peer = listen_tcp(addr).map_err(|e| format!("{addr}: {e}"))?;
+            let peer_id = peer
+                .hello(engine_id as u32)
+                .map_err(|e| format!("handshake: {e}"))?;
+            gossip_smoke(&mut peer, engine_id, peer_id, ios, 1)
+        } else {
+            // the TCP connector rides a ReconnectPeer: if the listener
+            // dies and comes back, the sync restarts over a fresh dial
+            // and the repair count lands in the recovery stats
+            let mut peer = ReconnectPeer::connect(addr, engine_id as u32)
+                .map_err(|e| format!("{addr}: {e}"))?;
+            let peer_id = peer.peer_id;
+            gossip_smoke(&mut peer, engine_id, peer_id, ios, 8)?;
+            let rec = RecoveryStats {
+                reconnects: peer.reconnects,
+                ..RecoveryStats::default()
+            };
+            println!(
+                "GOSSIP-SMOKE transport: survived {} reconnect(s)",
+                rec.reconnects
+            );
+            Ok(())
+        }
     } else {
         gossip_smoke_uds(addr, listen, engine_id, ios)
     }
@@ -213,7 +236,11 @@ fn run_gossip_smoke(args: &Args, ios: u64) -> Result<(), String> {
 fn gossip_smoke_uds(addr: &str, listen: bool, engine_id: usize, ios: u64) -> Result<(), String> {
     use rdmabox::fabric::socket::{connect_uds, listen_uds};
     let peer = if listen { listen_uds(addr) } else { connect_uds(addr) };
-    gossip_smoke(peer.map_err(|e| format!("{addr}: {e}"))?, engine_id, ios)
+    let mut peer = peer.map_err(|e| format!("{addr}: {e}"))?;
+    let peer_id = peer
+        .hello(engine_id as u32)
+        .map_err(|e| format!("handshake: {e}"))?;
+    gossip_smoke(&mut peer, engine_id, peer_id, ios, 1)
 }
 
 #[cfg(not(unix))]
@@ -226,10 +253,12 @@ fn gossip_smoke_uds(
     Err("unix-domain sockets are unavailable on this platform; use a host:port address".into())
 }
 
-fn gossip_smoke<S: std::io::Read + std::io::Write>(
-    mut peer: rdmabox::fabric::socket::SocketPeer<S>,
+fn gossip_smoke<P: rdmabox::fabric::socket::FramedPeer>(
+    peer: &mut P,
     engine_id: usize,
+    peer_id: u32,
     ios: u64,
+    sync_attempts: u32,
 ) -> Result<(), String> {
     use rdmabox::coordinator::engine::{DrainOut, IoEngine};
     use rdmabox::coordinator::EngineSpec;
@@ -269,9 +298,6 @@ fn gossip_smoke<S: std::io::Read + std::io::Write>(
         }
     }
 
-    let peer_id = peer
-        .hello(engine_id as u32)
-        .map_err(|e| format!("handshake: {e}"))?;
     if peer_id as usize == engine_id {
         return Err(format!("both peers claim engine id {engine_id}"));
     }
@@ -290,7 +316,26 @@ fn gossip_smoke<S: std::io::Read + std::io::Write>(
         drive_write(&mut engine, &mut out, i, base + i * 4096);
     }
     let before = engine.gossip_fingerprint();
-    let fp = gossip_sync(&mut peer, &mut engine, 32).map_err(|e| format!("gossip sync: {e}"))?;
+    // gossip deltas carry full state and absorbing is idempotent, so a
+    // sync that dies with its transport is restarted from round zero (a
+    // ReconnectPeer dials a fresh connection underneath)
+    let mut converged = None;
+    let mut last = String::from("gossip sync: no attempts made");
+    for attempt in 0..sync_attempts.max(1) {
+        match gossip_sync(peer, &mut engine, 32) {
+            Ok(fp) => {
+                converged = Some(fp);
+                break;
+            }
+            Err(e) => {
+                last = format!("gossip sync: {e}");
+                if attempt + 1 < sync_attempts {
+                    eprintln!("{last}; restarting the sync");
+                }
+            }
+        }
+    }
+    let fp = converged.ok_or(last)?;
     let s = engine.gossip_stats().expect("gossip is enabled");
     println!(
         "GOSSIP-SMOKE OK engine {engine_id}: converged fingerprint {fp:#018x} \

@@ -217,6 +217,37 @@ impl GossipStats {
     }
 }
 
+/// Completion-recovery counters exported by `IoEngine::recovery_stats()`
+/// when deadlines are enabled (`EngineSpec::deadlines(timeout_ns,
+/// max_retries)`): local timeout retirements, per-QP error/reset
+/// transitions, and (on the socket fabric) connection repairs. One
+/// snapshot per engine; all counters are cumulative.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// WRs retired locally by deadline expiry (a synthesized timeout-WC
+    /// released the window and rerouted the request).
+    pub timeouts: u64,
+    /// Outstanding WRs flushed as timeout-WCs by a QP entering `Error`.
+    pub flushes: u64,
+    /// QP `Error → Resetting → Ok` recoveries completed after probation.
+    pub resets: u64,
+    /// Socket-fabric connections re-established after a peer death
+    /// (counted by the reconnect path, folded in by the smoke driver).
+    pub reconnects: u64,
+}
+
+impl RecoveryStats {
+    /// Table row for the CLI (`timeouts flushes resets reconnects`).
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.timeouts.to_string(),
+            self.flushes.to_string(),
+            self.resets.to_string(),
+            self.reconnects.to_string(),
+        ]
+    }
+}
+
 /// Summary speedup across checks (geometric mean of measured ratios).
 pub fn summary_speedup(checks: &[ShapeCheck]) -> f64 {
     geomean(
@@ -285,6 +316,18 @@ mod tests {
         };
         assert_eq!(s.row(), vec!["4", "3", "1", "12", "2", "5", "1"]);
         assert_eq!(GossipStats::default().row(), vec!["0"; 7]);
+    }
+
+    #[test]
+    fn recovery_stats_row_orders_counters() {
+        let s = RecoveryStats {
+            timeouts: 7,
+            flushes: 4,
+            resets: 2,
+            reconnects: 1,
+        };
+        assert_eq!(s.row(), vec!["7", "4", "2", "1"]);
+        assert_eq!(RecoveryStats::default().row(), vec!["0"; 4]);
     }
 
     #[test]

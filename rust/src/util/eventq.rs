@@ -145,15 +145,37 @@ impl<T> EventQueue<T> {
 
     /// Pop the earliest event as `(at, item)`; ties pop in push order.
     pub fn pop(&mut self) -> Option<(u64, T)> {
+        if !self.service_to_near() {
+            return None;
+        }
+        let e = self.near.pop().expect("service_to_near filled the lane");
+        self.len -= 1;
+        self.now = e.at;
+        Some((e.at, e.item))
+    }
+
+    /// Fire time of the earliest pending event, without popping it (and
+    /// without advancing `now`). `&mut` because locating the minimum may
+    /// swap a wheel bucket into the near lane — a reshuffle of internal
+    /// tiers that never changes the pop order. Lets the engine's deadline
+    /// timer ask "when is the next expiry?" cheaply between drains.
+    pub fn peek_at(&mut self) -> Option<u64> {
+        if !self.service_to_near() {
+            return None;
+        }
+        self.near.last().map(|e| e.at)
+    }
+
+    /// Advance tiers until the near lane holds the global minimum at its
+    /// end; `false` iff the queue is empty.
+    fn service_to_near(&mut self) -> bool {
         loop {
-            if let Some(e) = self.near.pop() {
-                self.len -= 1;
-                self.now = e.at;
-                return Some((e.at, e.item));
+            if !self.near.is_empty() {
+                return true;
             }
             if self.wheel_len == 0 {
                 if self.far.is_empty() {
-                    return None;
+                    return false;
                 }
                 self.rebase_onto_far();
                 continue;
@@ -323,6 +345,12 @@ impl<T> ReferenceQueue<T> {
         self.now = e.at;
         Some((e.at, e.item))
     }
+
+    /// Fire time of the earliest pending event, without popping it
+    /// (API parity with [`EventQueue::peek_at`]).
+    pub fn peek_at(&mut self) -> Option<u64> {
+        self.heap.peek().map(|Reverse(e)| e.at)
+    }
 }
 
 #[cfg(test)]
@@ -480,6 +508,41 @@ mod tests {
         assert_eq!(q.pop(), Some((6 * WINDOW_NS, 4)));
         assert_eq!(q.pop(), Some((30 * WINDOW_NS, 1)));
         assert_eq!(q.pop(), None);
+    }
+
+    /// `peek_at` must agree with the next `pop` across every tier
+    /// transition (near, wheel swap, far rebase) and must not perturb
+    /// the pop order it previews.
+    #[test]
+    fn peek_matches_next_pop_across_tiers() {
+        let mut rng = Pcg32::new(0x9EEB);
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut reference: ReferenceQueue<u64> = ReferenceQueue::new();
+        for i in 0..3_000u64 {
+            // mix of near, wheel and far gaps, with ties
+            let gap = match rng.gen_below(4) {
+                0 => 0,
+                1 => rng.gen_below(BUCKET_NS),
+                2 => rng.gen_below(WINDOW_NS),
+                _ => WINDOW_NS + rng.gen_below(8 * WINDOW_NS),
+            };
+            q.push(q.now() + gap, i);
+            reference.push(reference.now() + gap, i);
+            if rng.gen_bool(0.5) {
+                assert_eq!(q.peek_at(), reference.peek_at());
+                let want_at = q.peek_at();
+                let got = q.pop();
+                assert_eq!(got.map(|(t, _)| t), want_at);
+                assert_eq!(got, reference.pop());
+            }
+        }
+        while let Some(at) = q.peek_at() {
+            assert_eq!(q.pop().map(|(t, _)| t), Some(at));
+            reference.pop();
+        }
+        assert_eq!(q.peek_at(), None);
+        assert_eq!(reference.peek_at(), None);
+        assert!(reference.is_empty());
     }
 
     #[test]

@@ -60,18 +60,20 @@ fn env_u64(name: &str) -> Option<u64> {
 }
 
 /// Which randomized mix the sweep draws (`CHAOS_PROFILE=election`,
-/// `CHAOS_PROFILE=qos`, `CHAOS_PROFILE=scale` and `CHAOS_PROFILE=multi`
-/// are what the nightly `chaos-extended` workflow sets; replay commands
-/// carry it).
+/// `CHAOS_PROFILE=qos`, `CHAOS_PROFILE=scale`, `CHAOS_PROFILE=multi`
+/// and `CHAOS_PROFILE=recovery` are what the nightly `chaos-extended`
+/// workflow sets; replay commands carry it).
 fn env_profile() -> ChaosProfile {
     match std::env::var("CHAOS_PROFILE").ok().as_deref() {
         Some("election") => ChaosProfile::ElectionHeavy,
         Some("qos") => ChaosProfile::Qos,
         Some("scale") => ChaosProfile::Scale,
         Some("multi") => ChaosProfile::Multi,
+        Some("recovery") => ChaosProfile::Recovery,
         Some("") | None => ChaosProfile::Standard,
         Some(other) => panic!(
-            "CHAOS_PROFILE must be `election`, `qos`, `scale`, `multi`, or unset, got `{other}`"
+            "CHAOS_PROFILE must be `election`, `qos`, `scale`, `multi`, `recovery`, \
+             or unset, got `{other}`"
         ),
     }
 }
@@ -478,6 +480,66 @@ fn split_read_straddling_repair_accounts_once() {
     assert_eq!(resynced.stats.stale_reads, 0, "{:?}", resynced.stats);
     assert!(resynced.engine().stats.resyncs_completed >= 1);
     assert_eq!(resynced.engine().regulator().in_flight(), 0);
+}
+
+/// Recovery tentpole: a CQ that silently loses completions must never
+/// hang the engine or strand the admission window — WR deadlines
+/// synthesize timeout completions through the normal retirement path,
+/// the regulator releases, and retries finish the work. Any lossy plan
+/// auto-arms default deadlines in the runner, so this also pins that
+/// arming path.
+#[test]
+fn lost_wc_never_hangs_the_window() {
+    let plan = FaultPlan::none().with_lost_wcs(0.25);
+    let r = check(&Scenario::named("lost_wc_never_hangs_the_window", 0x105C, plan));
+    assert!(r.lost_wcs > 0, "loss never fired: {r:?}");
+    assert!(
+        r.recovery_timeouts >= r.lost_wcs,
+        "every lost WC must expire into a timeout: {r:?}"
+    );
+    assert!(r.timer_ticks > 0, "deadline ticks must drive the recovery: {r:?}");
+    assert_eq!(r.window_leaks, 0, "{r:?}");
+    assert_eq!(r.retired, r.submitted, "no I/O may hang: {r:?}");
+    assert_eq!(r.stale_reads, 0, "{r:?}");
+}
+
+/// Recovery tentpole: a wedged QP (silently dropping everything posted
+/// to it) must flip to Error through consecutive timeouts, flush its
+/// outstanding WRs as timeout completions, recover through the
+/// Error → Resetting → Ok probation, and leave nothing broken at
+/// quiescence — the runner fails any run ending with a QP not Ok.
+#[test]
+fn wedged_qp_flushes_and_recovers() {
+    let plan = FaultPlan::none().wedge(0, 5_000, 300_000);
+    let r = check(&Scenario::named("wedged_qp_flushes_and_recovers", 0x3ED6, plan));
+    assert!(r.wedged_wcs > 0, "the wedge never bit: {r:?}");
+    assert!(r.recovery_timeouts > 0, "{r:?}");
+    assert!(r.recovery_resets >= 1, "the QP must complete its reset: {r:?}");
+    assert_eq!(r.window_leaks, 0, "{r:?}");
+    assert_eq!(r.retired, r.submitted, "no I/O stranded by the wedge: {r:?}");
+    assert_eq!(r.stale_reads, 0, "{r:?}");
+}
+
+/// The recovery sweep mix end-to-end: guaranteed lost completions plus
+/// a wedged QP, deadlines armed by the profile, and the runner's
+/// recovery quiescence gates (no window leak, no QP left in
+/// Error/Resetting) all active.
+#[test]
+fn recovery_profile_rides_lost_wcs_and_wedges_through_the_runner() {
+    for seed in [0x2EC_1u64, 0x2EC_2] {
+        let sc = Scenario::randomized_with_profile(seed, ChaosProfile::Recovery);
+        assert!(sc.deadlines.is_some(), "the profile arms deadlines: {sc:?}");
+        let r = check(&sc);
+        assert!(r.lost_wcs + r.wedged_wcs > 0, "no recovery fault fired: {r:?}");
+        assert!(r.recovery_timeouts > 0, "{r:?}");
+        assert_eq!(r.window_leaks, 0, "{r:?}");
+        assert_eq!(r.retired, r.submitted, "{r:?}");
+        assert!(
+            replay_command(&sc).starts_with("CHAOS_PROFILE=recovery "),
+            "{}",
+            replay_command(&sc)
+        );
+    }
 }
 
 /// The QoS sweep mix end-to-end: a hog-vs-victim randomized scenario

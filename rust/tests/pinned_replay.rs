@@ -67,6 +67,35 @@ fn pinned_scale_seeds_replay_bit_identically() {
     }
 }
 
+/// The recovery profile's stream: lost completions, a wedged QP, and
+/// the deadline timer ticks they arm — the first event class the
+/// fabric schedules from the engine's own timer queue. Both backends
+/// must expire deadlines, flush the wedged QP and re-admit it at
+/// exactly the same virtual times, or the full-report comparison
+/// (timeouts, flushes, resets, window peaks, elapsed time) diverges.
+#[test]
+fn pinned_recovery_seeds_replay_bit_identically() {
+    for seed in [0x2EC0_1u64, 0x2EC0_2] {
+        assert_bit_identical(Scenario::randomized_with_profile(
+            seed,
+            ChaosProfile::Recovery,
+        ));
+    }
+}
+
+/// A named lossy + wedged plan with explicit deadline parameters — the
+/// hand-built recovery schedule, replayed on both backends.
+#[test]
+fn named_recovery_plan_replays_bit_identically() {
+    let plan = FaultPlan::none()
+        .with_lost_wcs(0.2)
+        .wedge(1, 10_000, 120_000)
+        .with_errors(0.1);
+    assert_bit_identical(
+        Scenario::named("named_recovery_replay", 0x2EC0_3, plan).with_deadlines(80_000, 1),
+    );
+}
+
 /// A named scenario with a dense hand-built plan: every event class the
 /// fabric schedules (deliveries, reorders, duplicates, reg stalls,
 /// storms, node churn) in one schedule, replayed on both backends.
